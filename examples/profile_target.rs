@@ -1,0 +1,8 @@
+fn main() {
+    use spgemm_aia::gen::{rmat, RmatParams};
+    use spgemm_aia::util::Pcg32;
+    let a = rmat(30_000, 300_000, RmatParams::web(), &mut Pcg32::seeded(2));
+    let t0 = std::time::Instant::now();
+    let c = spgemm_aia::spgemm::hash::multiply(&a, &a);
+    println!("nnz={} in {:?}", c.nnz(), t0.elapsed());
+}

@@ -1,0 +1,30 @@
+//! Regenerate every table and figure of the paper's evaluation section
+//! (DESIGN.md §4 experiment index). Equivalent to `spgemm-aia repro all`.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example repro          # full
+//! REPRO_QUICK=1 cargo run --release --example repro              # subset
+//! ```
+
+use spgemm_aia::repro;
+use spgemm_aia::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    repro::table2();
+    repro::table3();
+    repro::fig5();
+    repro::fig6();
+    repro::fig7_fig8();
+    repro::fig9();
+    match Runtime::new(&Runtime::artifacts_dir()) {
+        Ok(mut rt) => {
+            repro::fig10_fig11(&mut rt)?;
+        }
+        Err(e) => {
+            eprintln!("skipping Fig 10/11 (artifacts not built?): {e}");
+        }
+    }
+    println!("\nall experiments regenerated in {:.1}s — JSON in target/repro/", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,123 @@
+"""AOT lowering: every (op, tier) pair of the L2 model to HLO *text*
+artifacts the Rust runtime loads through PJRT.
+
+HLO text — NOT `.serialize()` — is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids, which the `xla`
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--tiers 8192,...]
+
+Python runs ONCE at build time (`make artifacts`); the Rust binary is
+self-contained afterwards.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Node-count tiers: every Table-III dataset analogue is generated at one
+# of these sizes (rust/src/gen/registry.rs must stay in sync).
+TIERS = [8192, 16384, 32768, 65536]
+FDIM = 64  # feature/hidden width
+CDIM = 16  # classes
+TOPK = 8  # pruning k
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def ops_for_tier(n):
+    """(name, fn, example_args) for every artifact at tier `n`."""
+    k = TOPK
+    return [
+        ("topk_mask", functools.partial(model.topk_sparsify, k=k), (f32(n, FDIM),)),
+        ("layer_fwd", model.layer_fwd, (f32(n, FDIM), f32(FDIM, FDIM))),
+        (
+            "layer_bwd",
+            model.layer_bwd,
+            (f32(n, FDIM), f32(n, FDIM), f32(n, FDIM), f32(FDIM, FDIM)),
+        ),
+        ("out_fwd", model.out_fwd, (f32(n, FDIM), f32(FDIM, CDIM))),
+        ("out_bwd", model.out_bwd, (f32(n, FDIM), f32(n, CDIM), f32(FDIM, CDIM))),
+        ("loss_grad", model.loss_grad, (f32(n, CDIM), f32(n, CDIM))),
+        (
+            "sage_fwd",
+            model.sage_fwd,
+            (f32(n, FDIM), f32(n, FDIM), f32(FDIM, FDIM), f32(FDIM, FDIM)),
+        ),
+        (
+            "sage_bwd",
+            model.sage_bwd,
+            (
+                f32(n, FDIM),
+                f32(n, FDIM),
+                f32(n, FDIM),
+                f32(n, FDIM),
+                f32(FDIM, FDIM),
+                f32(FDIM, FDIM),
+            ),
+        ),
+    ]
+
+
+def lower_one(fn, args):
+    # Wrap so every artifact returns a tuple (rust side uses to_tuple()).
+    def tupled(*xs):
+        out = fn(*xs)
+        return out if isinstance(out, tuple) else (out,)
+
+    return to_hlo_text(jax.jit(tupled).lower(*args))
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--tiers", default=",".join(str(t) for t in TIERS))
+    args = p.parse_args()
+    tiers = [int(t) for t in args.tiers.split(",") if t]
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"fdim": FDIM, "cdim": CDIM, "topk": TOPK, "tiers": tiers, "artifacts": []}
+    for n in tiers:
+        for name, fn, ex in ops_for_tier(n):
+            fname = f"{name}_n{n}.hlo.txt"
+            path = os.path.join(args.out_dir, fname)
+            text = lower_one(fn, ex)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["artifacts"].append(
+                {
+                    "op": name,
+                    "tier": n,
+                    "file": fname,
+                    "arg_shapes": [list(a.shape) for a in ex],
+                }
+            )
+            print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""L1: Pallas kernels for the paper's compute hot-spots (top-k pruning,
+MXU matmul, gather-SpMM), with pure-jnp oracles in `ref`."""
+
+from . import matmul, ref, spmm, topk  # noqa: F401

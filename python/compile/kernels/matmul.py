@@ -1,0 +1,54 @@
+"""Pallas kernel: MXU-tiled dense matmul for the GNN feature transform.
+
+GPU→TPU adaptation: the paper's dense feature transform would use
+tensor-core WMMA tiles staged through shared memory; here each grid step
+owns a [BLOCK_M × K] × [K × N] product sized for the 128×128 MXU
+systolic array, with the whole K dimension resident in VMEM (K = 64 for
+every GNN layer in the reproduction, so no K-loop/accumulator pipeline
+is needed — one MXU pass per tile).
+
+interpret=True for CPU-PJRT executability; see topk.py's note.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-shaped row tile. VMEM per step: 128·K·4 + K·N·4 + 128·N·4 bytes —
+# 96 KiB at K=N=64.
+BLOCK_M = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+@jax.jit
+def matmul(x, w):
+    """`x @ w` with f32 accumulation. x: [n, k], w: [k, m]."""
+    n, k = x.shape
+    k2, m = w.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    block = min(BLOCK_M, n)
+    assert n % block == 0, f"n={n} must tile by {block}"
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, m), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, m), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def matmul_relu_gate(x, w):
+    """Fused `relu(x @ w)` plus the relu gate (for backprop) — the form
+    the GNN layer artifacts use so XLA keeps everything in one pass."""
+    z = matmul(x, w)
+    return jnp.maximum(z, 0.0), (z > 0.0).astype(x.dtype)

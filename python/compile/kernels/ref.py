@@ -1,0 +1,45 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has its semantics pinned here; pytest
+(`python/tests/test_kernels.py`) sweeps shapes/dtypes with hypothesis and
+asserts allclose between the Pallas (interpret-mode) kernel and these
+references.
+"""
+
+import jax.numpy as jnp
+
+
+def topk_mask_ref(x, k):
+    """Per-row top-k mask (paper Eq. 2): keep entries >= the k-th largest
+    value of their row, zero the rest.
+
+    Ties at the threshold keep every tied entry (both implementations use
+    the same `>= threshold` rule, so they agree exactly).
+    """
+    if k >= x.shape[-1]:
+        return x
+    sorted_desc = jnp.sort(x, axis=-1)[..., ::-1]
+    thresh = sorted_desc[..., k - 1]
+    mask = x >= thresh[..., None]
+    return jnp.where(mask, x, jnp.zeros_like(x))
+
+
+def matmul_ref(x, w):
+    """Plain dense matmul with f32 accumulation."""
+    return jnp.matmul(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def spmm_gather_ref(idx, w, x):
+    """Padded-ELL gather-aggregate: out[i] = sum_j w[i, j] * x[idx[i, j]].
+
+    `idx`: [n, m] int32 source-row indices (padding entries point at any
+    valid row and carry weight 0). `w`: [n, m] weights. `x`: [nsrc, d].
+    This is the ranged-indirect (AIA-style) access pattern as a TPU
+    gather.
+    """
+    gathered = x[idx]  # [n, m, d]
+    return jnp.einsum("nm,nmd->nd", w, gathered)
+
+
+def relu_ref(x):
+    return jnp.maximum(x, 0.0)

@@ -1,0 +1,55 @@
+"""Pallas kernel: gather-SpMM over a padded-ELL neighbour list — the
+TPU expression of the paper's AIA ranged-indirect access.
+
+GPU→TPU adaptation (DESIGN.md §Hardware-Adaptation): the paper's AIA
+engine turns `x[a[b[i]] .. a[b[i]]+R-1]` into one bulk descriptor that a
+near-HBM engine resolves into a sequential stream. The TPU analogue is a
+*data-dependent block schedule*: the neighbour indices live in a dense
+[n × m] ELL tile, and the kernel's index map walks row blocks while the
+feature table is gathered per block — the BlockSpec plays the role of
+the AIA descriptor (what to fetch, at what granularity) and the compiler
+pipelines HBM→VMEM copies the way AIA pipelines stack-local gathers.
+
+interpret=True; correctness vs `ref.spmm_gather_ref`, and the runtime
+aggregation path in Rust is the hash-SpGEMM engine (this kernel is the
+kernel-level demonstrator + the L2 building block for dense tiers).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 128
+
+
+def _spmm_kernel(idx_ref, w_ref, x_ref, o_ref):
+    idx = idx_ref[...]  # [b, m] int32
+    w = w_ref[...]  # [b, m]
+    x = x_ref[...]  # [nsrc, d] (full table resident; see module docstring)
+    gathered = jnp.take(x, idx, axis=0)  # [b, m, d]
+    o_ref[...] = jnp.einsum("nm,nmd->nd", w, gathered).astype(o_ref.dtype)
+
+
+@jax.jit
+def spmm_gather(idx, w, x):
+    """out[i] = Σ_j w[i,j] · x[idx[i,j]].
+
+    idx: [n, m] int32 (padding rows allowed, weight 0), w: [n, m] f32,
+    x: [nsrc, d] f32.
+    """
+    n, m = idx.shape
+    nsrc, d = x.shape
+    block = min(BLOCK_ROWS, n)
+    assert n % block == 0, f"n={n} must tile by {block}"
+    return pl.pallas_call(
+        _spmm_kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block, m), lambda i: (i, 0)),
+            pl.BlockSpec((block, m), lambda i: (i, 0)),
+            pl.BlockSpec((nsrc, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=True,
+    )(idx, w, x)

@@ -1,0 +1,91 @@
+"""L2: the GNN dense compute graph in JAX, built on the L1 Pallas
+kernels (topk / matmul). These functions are AOT-lowered per node-count
+tier by `aot.py`; the Rust coordinator chains them with its own SpGEMM
+aggregation (the paper's hybrid: sparse aggregation on the AIA-equipped
+engine, dense transform on the matrix units).
+
+Forward per layer (paper Eq. 1):  X_l = Â · TopK(X_{l-1}, k) · W_l
+Backward        (paper Eq. 3):    ∂X_{l-1} = M_k ⊙ (Âᵀ · ∂Z_l · W_lᵀ)
+
+The Â products happen in Rust; everything else is here.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.matmul import matmul
+from .kernels.topk import topk_mask
+
+
+# ---------------------------------------------------------------- layers
+def layer_fwd(h, w):
+    """Hidden layer: act = relu(h @ w); also emits the relu gate for the
+    backward pass. h: [n, d], w: [d, d']."""
+    z = matmul(h, w)
+    return jnp.maximum(z, 0.0), (z > 0.0).astype(h.dtype)
+
+
+def layer_bwd(h, d_out, gate, w):
+    """Backward of `layer_fwd` given upstream grad `d_out` (w.r.t. the
+    activation): returns (dW, dH)."""
+    dz = d_out * gate
+    dw = jnp.dot(h.T, dz, preferred_element_type=jnp.float32)
+    dh = matmul(dz, w.T)
+    return dw, dh
+
+
+def out_fwd(h, w):
+    """Output layer (no activation): logits = h @ w. w: [d, c]."""
+    return matmul(h, w)
+
+
+def out_bwd(h, dlogits, w):
+    dw = jnp.dot(h.T, dlogits, preferred_element_type=jnp.float32)
+    dh = matmul(dlogits, w.T)
+    return dw, dh
+
+
+def sage_fwd(h_self, h_neigh, w_self, w_neigh):
+    """GraphSAGE layer: act = relu(h_self·W_s + h_neigh·W_n) + gate."""
+    z = matmul(h_self, w_self) + matmul(h_neigh, w_neigh)
+    return jnp.maximum(z, 0.0), (z > 0.0).astype(h_self.dtype)
+
+
+def sage_bwd(h_self, h_neigh, d_out, gate, w_self, w_neigh):
+    dz = d_out * gate
+    dws = jnp.dot(h_self.T, dz, preferred_element_type=jnp.float32)
+    dwn = jnp.dot(h_neigh.T, dz, preferred_element_type=jnp.float32)
+    dh_self = matmul(dz, w_self.T)
+    dh_neigh = matmul(dz, w_neigh.T)
+    return dws, dwn, dh_self, dh_neigh
+
+
+# ------------------------------------------------------------------ loss
+def loss_grad(logits, y_onehot):
+    """Mean softmax cross-entropy and its gradient w.r.t. logits."""
+    logits = logits - jax.scipy.special.logsumexp(logits, axis=-1, keepdims=True)
+    n = logits.shape[0]
+    loss = -jnp.sum(y_onehot * logits) / n
+    dlogits = (jnp.exp(logits) - y_onehot) / n
+    return loss, dlogits
+
+
+# --------------------------------------------------------------- pruning
+def topk_sparsify(x, k):
+    """The pruning layer (Eq. 2) as used on the forward path: the Rust
+    side converts the masked output to CSR for the SpGEMM aggregation."""
+    return topk_mask(x, k)
+
+
+# ------------------------------------------------- full-jax training ref
+def gcn_forward_ref(a_dense, x, ws, k):
+    """Pure-JAX reference of the full GCN forward (dense Â) used by
+    pytest to validate the artifact decomposition end-to-end."""
+    h = x
+    for w in ws[:-1]:
+        hp = topk_mask(h, k)
+        agg = a_dense @ hp
+        h, _gate = layer_fwd(agg, w)
+    hp = topk_mask(h, k)
+    agg = a_dense @ hp
+    return out_fwd(agg, ws[-1])

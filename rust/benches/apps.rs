@@ -1,0 +1,44 @@
+//! Bench: graph applications (paper Figs. 7–8 workloads) — wall time of
+//! the functional pipelines plus the simulated three-variant pricing on
+//! one representative dataset.
+
+use spgemm_aia::apps::{contract, mcl, random_labels, MclParams};
+use spgemm_aia::coordinator::executor::{SpgemmExecutor, Variant};
+use spgemm_aia::gen;
+use spgemm_aia::util::bench::{bb, Bencher};
+use spgemm_aia::util::Pcg32;
+
+fn main() {
+    let mut b = Bencher::new();
+    let ds = gen::table2_by_name("Economics").unwrap();
+    let g = (ds.gen)(1);
+    let mut rng = Pcg32::seeded(9);
+    let labels = random_labels(g.n_rows, g.n_rows / 4, &mut rng);
+    let params = MclParams { max_iters: 2, tol: 1e-3, top_k: 8, ..Default::default() };
+
+    b.group("contraction/Economics");
+    b.bench("functional(wall)", || {
+        let mut ex = SpgemmExecutor::fast(Variant::Hash);
+        bb(contract(&g, &labels, &mut ex).contracted.nnz())
+    });
+    for v in Variant::all() {
+        b.bench(&format!("simulated/{}", v.name()), || {
+            let mut ex = SpgemmExecutor::simulated_scaled(v, ds.scale);
+            bb(contract(&g, &labels, &mut ex).sim_ms)
+        });
+    }
+
+    b.group("mcl/Economics (2 iterations)");
+    b.bench("functional(wall)", || {
+        let mut ex = SpgemmExecutor::fast(Variant::Hash);
+        bb(mcl(&g, &params, &mut ex).n_clusters)
+    });
+    for v in [Variant::HashAia, Variant::Cusparse] {
+        b.bench(&format!("simulated/{}", v.name()), || {
+            let mut ex = SpgemmExecutor::simulated_scaled(v, ds.scale);
+            bb(mcl(&g, &params, &mut ex).sim_ms)
+        });
+    }
+
+    b.finish("apps");
+}

@@ -1,0 +1,54 @@
+//! Bench: the Algorithm-4 hash table and the phase row processors —
+//! the L3 hot path (supports the §Perf iteration log and the Table I
+//! sizing ablation).
+
+use spgemm_aia::gen::{rmat, RmatParams};
+use spgemm_aia::sim::probe::NullProbe;
+use spgemm_aia::spgemm::hash::table::{HashTable, TableLoc};
+use spgemm_aia::spgemm::hash::{self, Grouping};
+use spgemm_aia::spgemm::ip;
+use spgemm_aia::util::bench::{bb, Bencher};
+use spgemm_aia::util::Pcg32;
+
+fn main() {
+    let mut b = Bencher::new();
+
+    // --- raw table ops ---
+    b.group("hash_table/insert");
+    let mut rng = Pcg32::seeded(1);
+    let keys: Vec<u32> = (0..4096).map(|_| rng.next_u32() % 100_000).collect();
+    for &size in &[1024usize, 8192, 65_536] {
+        b.bench(&format!("numeric_size{size}"), || {
+            let mut t = HashTable::new(size, TableLoc::Shared);
+            for &k in &keys[..(size / 2).min(keys.len())] {
+                t.insert_numeric(k % (size as u32), 1.0, &mut NullProbe);
+            }
+            bb(t.unique)
+        });
+    }
+
+    // --- load-factor ablation (DESIGN.md: Table I sizing trade-off) ---
+    b.group("hash_table/load_factor");
+    for &fill_pct in &[25usize, 50, 75, 90] {
+        let size = 8192usize;
+        let n = size * fill_pct / 100;
+        let ks: Vec<u32> = (0..n as u32).map(|i| i.wrapping_mul(2654435761) % 60_000).collect();
+        b.bench(&format!("fill{fill_pct}%"), || {
+            let mut t = HashTable::new(size, TableLoc::Shared);
+            for &k in &ks {
+                t.insert_symbolic(k, &mut NullProbe);
+            }
+            bb(t.unique)
+        });
+    }
+
+    // --- grouping + full engine on a skewed matrix ---
+    b.group("engine");
+    let a = rmat(30_000, 300_000, RmatParams::web(), &mut Pcg32::seeded(2));
+    let ips = ip::intermediate_products(&a, &a);
+    b.bench("ip_count", || bb(ip::intermediate_products(&a, &a).len()));
+    b.bench("grouping", || bb(Grouping::build(&ips).map.len()));
+    b.bench("hash_multiply_full", || bb(hash::multiply(&a, &a).nnz()));
+
+    b.finish("hash_table");
+}

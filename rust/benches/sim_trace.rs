@@ -1,0 +1,49 @@
+//! Bench: the simulator itself (probe event throughput, cache model,
+//! stats-path sampling) — the §Perf target is ≥50 M events/s through
+//! the machine model, and the Fig. 5/9 regeneration cost.
+
+use spgemm_aia::gen::{rmat, RmatParams};
+use spgemm_aia::sim::probe::{Kind, Phase, Probe, Region};
+use spgemm_aia::sim::{simulate_stats, AiaMode, DeviceConfig, Machine, SimConfig};
+use spgemm_aia::spgemm::Algo;
+use spgemm_aia::util::bench::{bb, Bencher};
+use spgemm_aia::util::Pcg32;
+
+fn main() {
+    let mut b = Bencher::new();
+
+    // --- raw event throughput through the machine model ---
+    b.group("machine/event_throughput");
+    let n_events = 1_000_000usize;
+    let mut rng = Pcg32::seeded(3);
+    let addrs: Vec<usize> = (0..n_events).map(|_| rng.below_usize(50_000_000)).collect();
+    let s = b.bench("random_reads_1M", || {
+        let mut m = Machine::new(DeviceConfig::h200_scaled(), AiaMode::Off, 1);
+        m.begin_block(0, Phase::Allocation);
+        for &a in &addrs {
+            m.access(Region::ColB, a, 4, Kind::Read);
+        }
+        bb(m.finish().total_ms)
+    });
+    println!("  -> {:.1} M events/s", n_events as f64 / s.median / 1e6);
+
+    let s = b.bench("indirect_ranges_aia_200k", || {
+        let mut m = Machine::new(DeviceConfig::h200_scaled(), AiaMode::On, 1);
+        m.begin_block(0, Phase::Allocation);
+        for &a in &addrs[..200_000] {
+            m.indirect_range(Region::RptB, a % 1_000_000, &[Region::ColB], a, a + 6);
+        }
+        bb(m.finish().total_ms)
+    });
+    println!("  -> {:.1} M gathered elems/s", 200_000.0 * 6.0 / s.median / 1e6);
+
+    // --- end-to-end stats simulation with auto-sampling ---
+    b.group("simulate_stats (rmat 40k/400k)");
+    let a = rmat(40_000, 400_000, RmatParams::web(), &mut Pcg32::seeded(4));
+    for (label, aia) in [("aia", AiaMode::On), ("noaia", AiaMode::Off)] {
+        b.bench(label, || bb(simulate_stats(Algo::Hash, &a, &a, &SimConfig::new(aia)).total_ms));
+    }
+    b.bench("esc", || bb(simulate_stats(Algo::Esc, &a, &a, &SimConfig::new(AiaMode::Off)).total_ms));
+
+    b.finish("sim_trace");
+}

@@ -1,0 +1,40 @@
+//! Bench: matrix self-product (paper Fig. 6 / Table II workload).
+//!
+//! Measures the *real wall time* of the Rust engines (hash parallel,
+//! ESC, reference) on Table-II analogues, plus the simulated-H200
+//! pricing of each variant — the bench-side regeneration of Fig. 6.
+//! `BENCH_QUICK=1` for a fast pass.
+
+use spgemm_aia::coordinator::executor::Variant;
+use spgemm_aia::gen;
+use spgemm_aia::sim::{simulate_stats, AiaMode, SimConfig};
+use spgemm_aia::spgemm::{esc, hash, ip, Algo};
+use spgemm_aia::util::bench::{bb, Bencher};
+
+fn main() {
+    let mut b = Bencher::new();
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let names: &[&str] =
+        if quick { &["Economics", "scircuit"] } else { &["Economics", "scircuit", "p2p-Gnutella04", "amazon0601", "RoadTX", "cage15"] };
+
+    for name in names {
+        let ds = gen::table2_by_name(name).unwrap();
+        let a = (ds.gen)(1);
+        let total_ip = ip::total_ip(&a, &a);
+        b.group(&format!("selfproduct/{name} (IP={total_ip})"));
+        b.bench("hash-parallel(wall)", || bb(hash::multiply(&a, &a).nnz()));
+        if quick || a.nnz() < 2_000_000 {
+            b.bench("esc(wall)", || bb(esc::multiply(&a, &a).nnz()));
+        }
+        b.bench("sim/hash+aia", || {
+            bb(simulate_stats(Algo::Hash, &a, &a, &SimConfig::for_scale(AiaMode::On, ds.scale)).total_ms)
+        });
+        b.bench("sim/hash", || {
+            bb(simulate_stats(Algo::Hash, &a, &a, &SimConfig::for_scale(AiaMode::Off, ds.scale)).total_ms)
+        });
+        b.bench("sim/esc-cusparse", || {
+            bb(simulate_stats(Algo::Esc, &a, &a, &SimConfig::for_scale(AiaMode::Off, ds.scale)).total_ms)
+        });
+    }
+    b.finish("spgemm_selfproduct");
+}

@@ -1,0 +1,9 @@
+//! The paper's §V applications, each driving the SpGEMM engines through
+//! a `SpgemmExecutor` so the three system variants (AIA / software-only
+//! / cuSPARSE baseline) are directly comparable.
+
+pub mod contraction;
+pub mod mcl;
+
+pub use contraction::{contract, random_labels, selector_matrix, ContractionResult};
+pub use mcl::{mcl, MclParams, MclResult};

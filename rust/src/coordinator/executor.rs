@@ -1,0 +1,152 @@
+//! `SpgemmExecutor` — the bridge applications use to issue SpGEMM jobs.
+//!
+//! An executor pairs an engine choice with an optional machine
+//! simulation and accumulates per-job simulated time, so iterative
+//! applications (MCL, GNN training) can report end-to-end SpGEMM time
+//! per variant exactly the way the paper's figures do (AIA / no-AIA /
+//! cuSPARSE).
+
+use crate::sim::{simulate_spgemm, AiaMode, SimConfig, SimReport};
+use crate::spgemm::{ip, spgemm, Algo};
+use crate::sparse::Csr;
+
+/// The three system variants every experiment compares.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Variant {
+    /// Hash engine + AIA near-HBM acceleration.
+    HashAia,
+    /// Hash engine, software only.
+    Hash,
+    /// ESC baseline ("cuSPARSE"), software only.
+    Cusparse,
+}
+
+impl Variant {
+    pub fn all() -> [Variant; 3] {
+        [Variant::HashAia, Variant::Hash, Variant::Cusparse]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Variant::HashAia => "hash+aia",
+            Variant::Hash => "hash",
+            Variant::Cusparse => "cusparse(esc)",
+        }
+    }
+
+    pub fn algo(&self) -> Algo {
+        match self {
+            Variant::HashAia | Variant::Hash => Algo::Hash,
+            Variant::Cusparse => Algo::Esc,
+        }
+    }
+
+    pub fn aia(&self) -> AiaMode {
+        match self {
+            Variant::HashAia => AiaMode::On,
+            _ => AiaMode::Off,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Variant> {
+        match s.to_ascii_lowercase().as_str() {
+            "hash+aia" | "aia" => Some(Variant::HashAia),
+            "hash" | "noaia" | "no-aia" => Some(Variant::Hash),
+            "cusparse" | "esc" | "cusparse(esc)" => Some(Variant::Cusparse),
+            _ => None,
+        }
+    }
+}
+
+/// Executes SpGEMM jobs for one variant, accumulating simulated time.
+pub struct SpgemmExecutor {
+    pub variant: Variant,
+    /// `None` = functional only (no timing model).
+    pub sim: Option<SimConfig>,
+    /// Accumulated simulated GPU time across jobs, ms.
+    pub sim_ms: f64,
+    /// Accumulated intermediate products across jobs.
+    pub total_ip: u64,
+    pub jobs: usize,
+    /// Reports per job (kept only when simulating).
+    pub reports: Vec<SimReport>,
+}
+
+impl SpgemmExecutor {
+    /// Functional-only executor (fast parallel path).
+    pub fn fast(variant: Variant) -> SpgemmExecutor {
+        SpgemmExecutor { variant, sim: None, sim_ms: 0.0, total_ip: 0, jobs: 0, reports: Vec::new() }
+    }
+
+    /// Executor with the machine simulation attached.
+    pub fn simulated(variant: Variant) -> SpgemmExecutor {
+        let cfg = SimConfig::new(variant.aia());
+        SpgemmExecutor { variant, sim: Some(cfg), sim_ms: 0.0, total_ip: 0, jobs: 0, reports: Vec::new() }
+    }
+
+    /// Simulated executor whose device caches are scaled by the
+    /// dataset's down-scaling factor (DESIGN.md §Hardware substitution).
+    pub fn simulated_scaled(variant: Variant, scale: usize) -> SpgemmExecutor {
+        let cfg = SimConfig::for_scale(variant.aia(), scale);
+        SpgemmExecutor { variant, sim: Some(cfg), sim_ms: 0.0, total_ip: 0, jobs: 0, reports: Vec::new() }
+    }
+
+    /// Run one SpGEMM job.
+    pub fn multiply(&mut self, a: &Csr, b: &Csr) -> Csr {
+        self.jobs += 1;
+        match &self.sim {
+            None => spgemm(self.variant.algo(), a, b),
+            Some(cfg) => {
+                self.total_ip += ip::total_ip(a, b);
+                let (c, report) = simulate_spgemm(self.variant.algo(), a, b, cfg);
+                self.sim_ms += report.total_ms;
+                self.reports.push(report);
+                c
+            }
+        }
+    }
+
+    /// Aggregate GFLOPS over all jobs so far (paper's metric).
+    pub fn gflops(&self) -> f64 {
+        crate::sim::gflops(self.total_ip, self.sim_ms)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn variant_table() {
+        assert_eq!(Variant::HashAia.algo(), Algo::Hash);
+        assert_eq!(Variant::HashAia.aia(), AiaMode::On);
+        assert_eq!(Variant::Cusparse.algo(), Algo::Esc);
+        assert_eq!(Variant::parse("AIA"), Some(Variant::HashAia));
+        assert_eq!(Variant::parse("esc"), Some(Variant::Cusparse));
+        assert_eq!(Variant::parse("x"), None);
+    }
+
+    #[test]
+    fn fast_executor_runs_without_sim() {
+        let a = crate::gen::rmat(256, 2000, crate::gen::RmatParams::uniform(), &mut Pcg32::seeded(1));
+        let mut ex = SpgemmExecutor::fast(Variant::Hash);
+        let c = ex.multiply(&a, &a);
+        assert_eq!(ex.jobs, 1);
+        assert_eq!(ex.sim_ms, 0.0);
+        assert!(c.nnz() > 0);
+    }
+
+    #[test]
+    fn simulated_executor_accumulates_time() {
+        let a = crate::gen::rmat(512, 4000, crate::gen::RmatParams::uniform(), &mut Pcg32::seeded(2));
+        let mut ex = SpgemmExecutor::simulated(Variant::HashAia);
+        ex.multiply(&a, &a);
+        ex.multiply(&a, &a);
+        assert_eq!(ex.jobs, 2);
+        assert_eq!(ex.reports.len(), 2);
+        assert!(ex.sim_ms > 0.0);
+        assert!(ex.total_ip > 0);
+        assert!(ex.gflops() > 0.0);
+    }
+}

@@ -1,0 +1,97 @@
+//! Metrics registry: named counters and timers, dumped as JSON.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// A process-wide-ish registry (owned by the coordinator, passed where
+/// needed — no global state).
+#[derive(Default)]
+pub struct Metrics {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    timers: BTreeMap<String, (f64, u64)>, // (total_secs, count)
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    /// Time a closure under `name`.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        let dt = t0.elapsed().as_secs_f64();
+        let e = self.timers.entry(name.to_string()).or_insert((0.0, 0));
+        e.0 += dt;
+        e.1 += 1;
+        out
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn timer_total(&self, name: &str) -> f64 {
+        self.timers.get(name).map(|e| e.0).unwrap_or(0.0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        let mut c = Json::obj();
+        for (k, v) in &self.counters {
+            c.set(k, (*v as i64).into());
+        }
+        let mut g = Json::obj();
+        for (k, v) in &self.gauges {
+            g.set(k, (*v).into());
+        }
+        let mut t = Json::obj();
+        for (k, (total, count)) in &self.timers {
+            let mut e = Json::obj();
+            e.set("total_s", (*total).into());
+            e.set("count", (*count as i64).into());
+            t.set(k, e);
+        }
+        o.set("counters", c);
+        o.set("gauges", g);
+        o.set("timers", t);
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_timers() {
+        let mut m = Metrics::new();
+        m.inc("jobs", 2);
+        m.inc("jobs", 3);
+        assert_eq!(m.counter("jobs"), 5);
+        let out = m.time("work", || 42);
+        assert_eq!(out, 42);
+        assert!(m.timer_total("work") >= 0.0);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn json_shape() {
+        let mut m = Metrics::new();
+        m.inc("a", 1);
+        m.gauge("g", 0.5);
+        let s = m.to_json().render();
+        assert!(s.contains("\"a\":1"));
+        assert!(s.contains("\"g\":0.5"));
+    }
+}

@@ -1,0 +1,9 @@
+//! L3 coordination layer: the SpGEMM job executor (variant selection +
+//! simulated-time accounting), the group/stream scheduler, and the
+//! metrics registry.
+
+pub mod executor;
+pub mod metrics;
+pub mod scheduler;
+
+pub use executor::{SpgemmExecutor, Variant};

@@ -1,0 +1,12 @@
+//! Synthetic matrix and graph generators — stand-ins for the paper's
+//! SuiteSparse (Table II) and OGB/GraphSAINT (Table III) datasets, which
+//! are not available offline. Each generator targets the degree
+//! distribution and locality class of its real counterpart; the registry
+//! records the paper-side stats next to the substitution.
+
+pub mod registry;
+pub mod rmat;
+pub mod structured;
+
+pub use registry::{table2_by_name, table2_datasets, table3_by_name, table3_datasets, Dataset, GnnDataset};
+pub use rmat::{rmat, RmatParams};

@@ -1,0 +1,12 @@
+//! The GNN training stack (paper §V-C): synthetic Table-III datasets,
+//! dense⇄sparse bridges, and the hybrid trainer that pairs the Rust
+//! SpGEMM engine (simulated on the AIA machine) with PJRT dense
+//! artifacts. The Eq. 1 forward and Eq. 3 masked backward both run their
+//! aggregations as true SpGEMM.
+
+pub mod data;
+pub mod sparsify;
+pub mod train;
+
+pub use data::{GnnData, CDIM, FDIM, TOPK};
+pub use train::{Arch, EpochStats, Trainer, HIDDEN_LAYERS};

@@ -1,0 +1,120 @@
+//! Dense ⇄ sparse bridges for the hybrid training loop: the topk-masked
+//! dense feature matrix (from the L1 kernel artifact) becomes the CSR
+//! right-operand of the SpGEMM aggregation, and the sparse product comes
+//! back to dense for the PJRT layer artifacts.
+
+use crate::runtime::Tensor;
+use crate::sparse::Csr;
+
+/// Convert a (mostly-zero) dense tensor to CSR, dropping exact zeros —
+/// the inverse of the topk mask.
+pub fn csr_from_masked(t: &Tensor) -> Csr {
+    let (n, d) = (t.rows(), t.cols());
+    let mut rpt = Vec::with_capacity(n + 1);
+    rpt.push(0usize);
+    let mut col = Vec::new();
+    let mut val = Vec::new();
+    for i in 0..n {
+        for j in 0..d {
+            let v = t.data[i * d + j];
+            if v != 0.0 {
+                col.push(j as u32);
+                val.push(v as f64);
+            }
+        }
+        rpt.push(col.len());
+    }
+    Csr::new_unchecked(n, d, rpt, col, val)
+}
+
+/// Convert a sparse matrix to a dense row-major tensor.
+pub fn dense_from_csr(m: &Csr) -> Tensor {
+    let mut data = vec![0f32; m.n_rows * m.n_cols];
+    for i in 0..m.n_rows {
+        let (cs, vs) = m.row(i);
+        for (&c, &v) in cs.iter().zip(vs) {
+            data[i * m.n_cols + c as usize] = v as f32;
+        }
+    }
+    Tensor::matrix(m.n_rows, m.n_cols, data)
+}
+
+/// Rust-native per-row top-k by |value| → CSR. Used for gradient pruning
+/// on the backward path (paper Eq. 3's winner-take-all gradient routing;
+/// magnitude-based, unlike the forward's value-based top-k on
+/// post-relu activations where the two coincide).
+pub fn topk_abs_csr(t: &Tensor, k: usize) -> Csr {
+    let (n, d) = (t.rows(), t.cols());
+    let mut rpt = Vec::with_capacity(n + 1);
+    rpt.push(0usize);
+    let mut col = Vec::new();
+    let mut val = Vec::new();
+    let mut idx: Vec<usize> = Vec::with_capacity(d);
+    for i in 0..n {
+        let row = &t.data[i * d..(i + 1) * d];
+        idx.clear();
+        idx.extend(0..d);
+        if k < d {
+            idx.select_nth_unstable_by(k - 1, |&a, &b| row[b].abs().total_cmp(&row[a].abs()));
+            idx.truncate(k);
+            idx.sort_unstable();
+        }
+        for &j in idx.iter() {
+            if row[j] != 0.0 {
+                col.push(j as u32);
+                val.push(row[j] as f64);
+            }
+        }
+        rpt.push(col.len());
+    }
+    Csr::new_unchecked(n, d, rpt, col, val)
+}
+
+/// The binary mask (pattern) of a masked tensor, applied elementwise:
+/// `out = mask(pattern_src) ⊙ x`.
+pub fn apply_mask(x: &Tensor, pattern_src: &Tensor) -> Tensor {
+    debug_assert_eq!(x.dims, pattern_src.dims);
+    let data = x
+        .data
+        .iter()
+        .zip(&pattern_src.data)
+        .map(|(&v, &p)| if p != 0.0 { v } else { 0.0 })
+        .collect();
+    Tensor::new(x.dims.clone(), data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csr_roundtrip() {
+        let t = Tensor::matrix(2, 4, vec![0.0, 1.5, 0.0, 2.0, 0.0, 0.0, -3.0, 0.0]);
+        let m = csr_from_masked(&t);
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(dense_from_csr(&m), t);
+    }
+
+    #[test]
+    fn topk_abs_keeps_largest_magnitudes() {
+        let t = Tensor::matrix(1, 5, vec![0.1, -5.0, 2.0, -0.5, 3.0]);
+        let m = topk_abs_csr(&t, 2);
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.row(0).0, &[1, 4]); // -5.0 and 3.0
+        assert_eq!(m.row(0).1, &[-5.0, 3.0]);
+    }
+
+    #[test]
+    fn topk_abs_k_ge_d_keeps_all_nonzeros() {
+        let t = Tensor::matrix(1, 3, vec![1.0, 0.0, -2.0]);
+        let m = topk_abs_csr(&t, 5);
+        assert_eq!(m.nnz(), 2);
+    }
+
+    #[test]
+    fn apply_mask_zeroes_outside_pattern() {
+        let x = Tensor::matrix(1, 4, vec![1.0, 2.0, 3.0, 4.0]);
+        let p = Tensor::matrix(1, 4, vec![0.0, 9.0, 0.0, -1.0]);
+        assert_eq!(apply_mask(&x, &p).data, vec![0.0, 2.0, 0.0, 4.0]);
+    }
+}

@@ -1,0 +1,31 @@
+//! # spgemm-aia
+//!
+//! Reproduction of *"Accelerating Sparse Matrix-Matrix Multiplication on
+//! GPUs with Processing Near HBMs"* (SK hynix SOLAB, CS.DC 2025) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)** — the paper's hash-based multi-phase SpGEMM
+//!   engine, a cycle-approximate GPU + HBM + AIA memory-system simulator,
+//!   the evaluated applications (graph contraction, Markov clustering,
+//!   GNN training), and the coordinator/CLI.
+//! - **L2 (`python/compile/model.py`)** — GNN dense compute (layer
+//!   fwd/bwd, loss) in JAX, AOT-lowered to HLO text artifacts.
+//! - **L1 (`python/compile/kernels/`)** — Pallas kernels (top-k pruning,
+//!   MXU-tiled matmul, gather-SpMM) called from L2.
+//!
+//! Python never runs at request time: the Rust binary loads
+//! `artifacts/*.hlo.txt` through PJRT (`runtime`) and is self-contained.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment
+//! index mapping every paper table/figure to a module and bench target.
+
+pub mod util;
+pub mod sparse;
+pub mod gen;
+pub mod sim;
+pub mod coordinator;
+pub mod apps;
+pub mod runtime;
+pub mod gnn;
+pub mod repro;
+pub mod spgemm;

@@ -1,0 +1,259 @@
+//! `spgemm-aia` CLI — the L3 leader entrypoint.
+//!
+//! Subcommands (std-only arg parsing; the offline build has no clap):
+//!
+//! ```text
+//! spgemm-aia repro [all|table1|table2|table3|fig5|fig6|fig7|fig8|fig9|fig10|fig11]
+//! spgemm-aia spgemm --dataset <name> [--variant aia|hash|cusparse] [--seed N]
+//! spgemm-aia mcl --dataset <name> [--variant ...]
+//! spgemm-aia contract --dataset <name> [--variant ...]
+//! spgemm-aia gnn --dataset <name> --arch gcn|gin|sage [--epochs N]
+//! spgemm-aia info
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+use spgemm_aia::apps::{contract, mcl, random_labels, MclParams};
+use spgemm_aia::coordinator::executor::{SpgemmExecutor, Variant};
+use spgemm_aia::gnn::{Arch, GnnData, Trainer};
+use spgemm_aia::repro;
+use spgemm_aia::runtime::Runtime;
+use spgemm_aia::sim::gflops;
+use spgemm_aia::spgemm::ip;
+use spgemm_aia::util::Pcg32;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Fetch `--key value` style options.
+fn opt<'a>(args: &'a [String], key: &str) -> Option<&'a str> {
+    args.iter().position(|a| a == key).and_then(|i| args.get(i + 1)).map(|s| s.as_str())
+}
+
+fn seed(args: &[String]) -> u64 {
+    opt(args, "--seed").and_then(|s| s.parse().ok()).unwrap_or(repro::SEED)
+}
+
+fn variant(args: &[String]) -> Result<Variant> {
+    let name = opt(args, "--variant").unwrap_or("aia");
+    Variant::parse(name).ok_or_else(|| anyhow!("unknown variant {name} (aia|hash|cusparse)"))
+}
+
+fn run(args: &[String]) -> Result<()> {
+    match args.first().map(|s| s.as_str()) {
+        Some("repro") => cmd_repro(args),
+        Some("spgemm") => cmd_spgemm(args),
+        Some("mcl") => cmd_mcl(args),
+        Some("contract") => cmd_contract(args),
+        Some("gnn") => cmd_gnn(args),
+        Some("info") => cmd_info(),
+        Some("help") | None => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand {other} (try `help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "spgemm-aia — hash-based multi-phase SpGEMM with near-HBM AIA (paper reproduction)\n\n\
+         USAGE:\n  spgemm-aia repro [all|table1|table2|table3|fig5|fig6|fig7|fig8|fig9|fig10|fig11]\n  \
+         spgemm-aia spgemm --dataset scircuit [--variant aia|hash|cusparse] [--seed N]\n  \
+         spgemm-aia mcl --dataset Economics [--variant aia]\n  \
+         spgemm-aia contract --dataset RoadTX [--variant aia]\n  \
+         spgemm-aia gnn --dataset Flickr --arch gcn [--epochs 5]\n  \
+         spgemm-aia info\n\nENV:\n  REPRO_QUICK=1 small subsets; SPGEMM_AIA_ARTIFACTS=dir; SPGEMM_AIA_THREADS=n"
+    );
+}
+
+fn cmd_info() -> Result<()> {
+    println!("spgemm-aia {}", env!("CARGO_PKG_VERSION"));
+    println!(
+        "datasets (Table II): {}",
+        spgemm_aia::gen::table2_datasets().iter().map(|d| d.paper.name).collect::<Vec<_>>().join(", ")
+    );
+    println!(
+        "datasets (Table III): {}",
+        spgemm_aia::gen::table3_datasets().iter().map(|d| d.paper.name).collect::<Vec<_>>().join(", ")
+    );
+    println!("threads: {}", spgemm_aia::util::num_threads());
+    match Runtime::new(&Runtime::artifacts_dir()) {
+        Ok(_) => println!("PJRT CPU client: ok (artifacts dir: {})", Runtime::artifacts_dir().display()),
+        Err(e) => println!("PJRT CPU client: unavailable ({e})"),
+    }
+    Ok(())
+}
+
+fn cmd_repro(args: &[String]) -> Result<()> {
+    let what = args.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let t0 = std::time::Instant::now();
+    match what {
+        "table1" => {
+            println!("=== Table I: GPU resource allocation ===");
+            for spec in spgemm_aia::spgemm::hash::GROUP_SPECS.iter() {
+                println!(
+                    "group {} | IP {:>5}..{:<10} | {:?} | block {:>4} | table {}",
+                    spec.id,
+                    spec.ip_lo,
+                    if spec.ip_hi == u64::MAX { "inf".to_string() } else { spec.ip_hi.to_string() },
+                    spec.strategy,
+                    spec.block_size,
+                    spec.table_size.map(|t| t.to_string()).unwrap_or_else(|| "global".into())
+                );
+            }
+        }
+        "table2" => {
+            repro::table2();
+        }
+        "table3" => {
+            repro::table3();
+        }
+        "fig5" => {
+            repro::fig5();
+        }
+        "fig6" => {
+            repro::fig6();
+        }
+        "fig7" | "fig8" => {
+            repro::fig7_fig8();
+        }
+        "fig9" => {
+            repro::fig9();
+        }
+        "fig10" | "fig11" => {
+            let mut rt = Runtime::new(&Runtime::artifacts_dir())?;
+            repro::fig10_fig11(&mut rt)?;
+        }
+        "all" => {
+            repro::table2();
+            repro::table3();
+            repro::fig5();
+            repro::fig6();
+            repro::fig7_fig8();
+            repro::fig9();
+            let mut rt = Runtime::new(&Runtime::artifacts_dir())?;
+            repro::fig10_fig11(&mut rt)?;
+        }
+        other => bail!("unknown experiment {other}"),
+    }
+    println!("\n[repro {what} done in {:.1}s]", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn dataset_matrix(args: &[String]) -> Result<spgemm_aia::sparse::Csr> {
+    let name = opt(args, "--dataset").ok_or_else(|| anyhow!("--dataset required"))?;
+    if let Some(ds) = spgemm_aia::gen::table2_by_name(name) {
+        return Ok((ds.gen)(seed(args)));
+    }
+    if let Some(ds) = spgemm_aia::gen::table3_by_name(name) {
+        return Ok((ds.gen)(seed(args)));
+    }
+    // Also accept a MatrixMarket path.
+    let p = std::path::Path::new(name);
+    if p.exists() {
+        return spgemm_aia::sparse::io::read_matrix_market(p);
+    }
+    bail!("unknown dataset {name} (see `info`)")
+}
+
+fn cmd_spgemm(args: &[String]) -> Result<()> {
+    let a = dataset_matrix(args)?;
+    let v = variant(args)?;
+    let total_ip = ip::total_ip(&a, &a);
+    let mut ex = SpgemmExecutor::simulated(v);
+    let t0 = std::time::Instant::now();
+    let c = ex.multiply(&a, &a);
+    let wall = t0.elapsed().as_secs_f64();
+    println!("A: {}x{} nnz={} | A^2 nnz={} IP={}", a.n_rows, a.n_cols, a.nnz(), c.nnz(), total_ip);
+    println!(
+        "variant {} | simulated {:.3} ms | {:.1} GFLOPS | engine wall {:.3} s",
+        v.name(),
+        ex.sim_ms,
+        gflops(total_ip, ex.sim_ms),
+        wall
+    );
+    for p in &ex.reports[0].phases {
+        println!(
+            "  {:?}: {:.3} ms, L1 hit {:.1}%, HBM {:.1} MB{}",
+            p.phase,
+            p.time_ms,
+            100.0 * p.l1_hit_ratio,
+            p.hbm_bytes as f64 / 1e6,
+            if p.aia_bound { " [AIA-bound]" } else { "" }
+        );
+    }
+    Ok(())
+}
+
+fn cmd_mcl(args: &[String]) -> Result<()> {
+    let g = dataset_matrix(args)?;
+    let v = variant(args)?;
+    let mut ex = SpgemmExecutor::simulated(v);
+    let r = mcl(&g, &MclParams::default(), &mut ex);
+    println!(
+        "MCL on {} nodes: {} clusters in {} iterations (converged: {}) | simulated SpGEMM {:.2} ms ({})",
+        g.n_rows,
+        r.n_clusters,
+        r.iterations,
+        r.converged,
+        r.sim_ms,
+        v.name()
+    );
+    Ok(())
+}
+
+fn cmd_contract(args: &[String]) -> Result<()> {
+    let g = dataset_matrix(args)?;
+    let v = variant(args)?;
+    let mut rng = Pcg32::new(seed(args), 5);
+    let labels = random_labels(g.n_rows, (g.n_rows / 4).max(1), &mut rng);
+    let mut ex = SpgemmExecutor::simulated(v);
+    let r = contract(&g, &labels, &mut ex);
+    println!(
+        "contracted {} -> {} nodes ({} -> {} nnz) | simulated SpGEMM {:.2} ms ({})",
+        g.n_rows,
+        r.contracted.n_rows,
+        g.nnz(),
+        r.contracted.nnz(),
+        r.sim_ms,
+        v.name()
+    );
+    Ok(())
+}
+
+fn cmd_gnn(args: &[String]) -> Result<()> {
+    let name = opt(args, "--dataset").unwrap_or("Flickr");
+    let ds = spgemm_aia::gen::table3_by_name(name).ok_or_else(|| anyhow!("unknown GNN dataset {name}"))?;
+    let arch = Arch::parse(opt(args, "--arch").unwrap_or("gcn")).ok_or_else(|| anyhow!("bad --arch"))?;
+    let epochs: usize = opt(args, "--epochs").and_then(|s| s.parse().ok()).unwrap_or(5);
+    let data = GnnData::build(&ds, seed(args));
+    let mut rt = Runtime::new(&Runtime::artifacts_dir())?;
+    let mut trainer = Trainer::new(&mut rt, &data, arch, seed(args));
+    if let Some(lr) = opt(args, "--lr").and_then(|s| s.parse::<f32>().ok()) {
+        trainer.lr = lr;
+    }
+    println!(
+        "training {} on {} ({} nodes, {} edges), {} epochs",
+        arch.name(),
+        name,
+        data.n,
+        data.adj.nnz(),
+        epochs
+    );
+    for e in 0..epochs {
+        let s = trainer.epoch()?;
+        println!(
+            "epoch {e:>3}: loss {:.4} acc {:.3} dense {:.2}s spgemm_jobs {}",
+            s.loss, s.accuracy, s.dense_secs, s.spgemm_jobs
+        );
+    }
+    for v in Variant::all() {
+        println!("  simulated SpGEMM/epoch {} = {:.2} ms", v.name(), trainer.simulate_epoch_ms(v));
+    }
+    Ok(())
+}

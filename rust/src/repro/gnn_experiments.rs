@@ -1,0 +1,235 @@
+//! GNN experiments: Table III (dataset characteristics), Fig. 9 (SpGEMM
+//! AIA reduction vs graph size + Pearson r), Figs. 10–11 (training-time
+//! reduction with AIA vs software-only and vs cuSPARSE).
+
+use super::{pearson, quick, reduction_pct, save_json, Table, SEED};
+use crate::coordinator::executor::{SpgemmExecutor, Variant};
+use crate::gen::table3_datasets;
+use crate::gnn::{sparsify, Arch, GnnData, Trainer, TOPK};
+use crate::runtime::Runtime;
+use crate::util::json::Json;
+use anyhow::Result;
+
+/// Shared cache-scaling factor for every GNN simulation (the datasets
+/// are all scaled into the same node-count tier band, so they see one
+/// device; Fig. 9's size-scaling then emerges from working-set growth).
+pub const GNN_SIM_SCALE: usize = 16;
+
+fn active() -> Vec<crate::gen::GnnDataset> {
+    let all = table3_datasets();
+    if quick() {
+        all.into_iter().filter(|d| ["Flickr", "ogbn-arxiv"].contains(&d.paper.name)).collect()
+    } else {
+        all
+    }
+}
+
+/// Table III: GNN dataset analogues vs paper characteristics.
+pub fn table3() -> Json {
+    println!("\n=== Table III: GNN dataset characteristics ===");
+    let t = Table::new(&[15, 9, 11, 10, 11, 12, 12]);
+    t.header(&["dataset", "nodes", "edges", "avg deg", "density %", "paper nodes", "paper deg"]);
+    let mut out = Json::Arr(vec![]);
+    for ds in active() {
+        let a = (ds.gen)(SEED);
+        let s = crate::sparse::MatrixStats::of(&a);
+        t.row(&[
+            ds.paper.name.to_string(),
+            s.rows.to_string(),
+            s.nnz.to_string(),
+            format!("{:.1}", s.avg_nnz_row),
+            format!("{:.4}", s.density_pct),
+            ds.paper.nodes.to_string(),
+            format!("{:.1}", ds.paper.avg_degree),
+        ]);
+        let mut o = Json::obj();
+        o.set("name", ds.paper.name.into());
+        o.set("nodes", s.rows.into());
+        o.set("edges", s.nnz.into());
+        o.set("avg_degree", s.avg_nnz_row.into());
+        o.set("density_pct", s.density_pct.into());
+        o.set("paper_nodes", ds.paper.nodes.into());
+        o.set("paper_avg_degree", ds.paper.avg_degree.into());
+        out.push(o);
+    }
+    save_json("table3", &out);
+    out
+}
+
+/// Fig. 9: AIA time reduction on the GNN SpGEMM op (Â · TopK(X)) vs
+/// graph size; the paper reports r = 0.94 and 15.3%→89.2% scaling.
+pub fn fig9() -> Json {
+    println!("\n=== Fig 9: SpGEMM AIA time reduction vs graph size ===");
+    let t = Table::new(&[15, 9, 11, 12, 12, 12]);
+    t.header(&["dataset", "nodes", "edges", "noAIA ms", "AIA ms", "reduction"]);
+    let mut out = Json::Arr(vec![]);
+    let mut sizes = Vec::new();
+    let mut reductions = Vec::new();
+    for ds in active() {
+        let data = GnnData::build(&ds, SEED);
+        // The GNN hot-spot op: Â · TopK(X) with the feature top-k mask.
+        let rhs = sparsify::topk_abs_csr(&data.features, TOPK);
+        // All GNN tiers share one device config (GNN_SIM_SCALE): the
+        // Fig. 9 mechanism is working-set growth against *fixed* caches.
+        let mut on = SpgemmExecutor::simulated_scaled(Variant::HashAia, GNN_SIM_SCALE);
+        let mut off = SpgemmExecutor::simulated_scaled(Variant::Hash, GNN_SIM_SCALE);
+        on.multiply(&data.adj_gcn, &rhs);
+        off.multiply(&data.adj_gcn, &rhs);
+        let red = reduction_pct(off.sim_ms, on.sim_ms);
+        sizes.push(data.n as f64);
+        reductions.push(red);
+        t.row(&[
+            ds.paper.name.to_string(),
+            data.n.to_string(),
+            data.adj.nnz().to_string(),
+            format!("{:.2}", off.sim_ms),
+            format!("{:.2}", on.sim_ms),
+            format!("{red:.1}%"),
+        ]);
+        let mut o = Json::obj();
+        o.set("name", ds.paper.name.into());
+        o.set("nodes", data.n.into());
+        o.set("edges", data.adj.nnz().into());
+        o.set("noaia_ms", off.sim_ms.into());
+        o.set("aia_ms", on.sim_ms.into());
+        o.set("reduction_pct", red.into());
+        out.push(o);
+    }
+    let r = pearson(&sizes, &reductions);
+    println!("\nPearson r (size vs reduction): {r:.3} (paper: 0.94)");
+    let mut wrapper = Json::obj();
+    wrapper.set("rows", out);
+    wrapper.set("pearson_r", r.into());
+    save_json("fig9", &wrapper);
+    wrapper
+}
+
+/// One (dataset × arch) training measurement for Figs. 10–11.
+pub struct TrainMeasurement {
+    pub dataset: String,
+    pub arch: Arch,
+    pub epochs: usize,
+    pub final_loss: f32,
+    pub final_acc: f64,
+    /// Host wall time of the PJRT dense path (reported, not compared —
+    /// the CPU PJRT backend is not the H200).
+    pub dense_secs_per_epoch: f64,
+    /// *Estimated H200 time* of the dense path (memory-bound model, see
+    /// `dense_gpu_ms`) — the component that is identical across variants.
+    pub dense_gpu_ms: f64,
+    /// Simulated SpGEMM ms/epoch per variant [AIA, noAIA, ESC].
+    pub spgemm_ms: [f64; 3],
+}
+
+impl TrainMeasurement {
+    /// Per-epoch training time for a variant, ms (simulated dense +
+    /// simulated sparse; only the SpGEMM engine changes across variants,
+    /// exactly the paper's setting).
+    pub fn epoch_ms(&self, v: Variant) -> f64 {
+        let idx = match v {
+            Variant::HashAia => 0,
+            Variant::Hash => 1,
+            Variant::Cusparse => 2,
+        };
+        self.dense_gpu_ms + self.spgemm_ms[idx]
+    }
+}
+
+/// H200-estimated dense-path time per epoch. The d=64 layer matmuls are
+/// memory-bound on an H200 (arithmetic intensity ≈ 32 FLOP/B ≪ machine
+/// balance), so time ≈ bytes-moved / effective HBM bandwidth. Per epoch
+/// the forward+backward touch each n×64 f32 tensor a small constant
+/// number of times per op.
+pub fn dense_gpu_ms(n: usize, arch: Arch) -> f64 {
+    let tensor_bytes = (n * 64 * 4) as f64;
+    // ops/epoch (fwd topk+layers+loss, bwd layers; GIN has 2 extra MLP
+    // matmul pairs): ~3 tensor reads/writes per op.
+    let ops = match arch {
+        Arch::Gcn => 14.0,
+        Arch::Gin => 22.0,
+        Arch::Sage => 18.0,
+    };
+    let eff_bw_bytes_per_ms = 3.3e12 / 1e3; // ~70% of 4.8 TB/s
+    ops * 3.0 * tensor_bytes / eff_bw_bytes_per_ms
+}
+
+/// Figs. 10 & 11: full-batch training-time reduction per dataset × arch.
+pub fn fig10_fig11(rt: &mut Runtime) -> Result<Json> {
+    println!("\n=== Fig 10/11: GNN training time reduction (3-layer, top-k pruning) ===");
+    let t = Table::new(&[15, 6, 8, 8, 10, 10, 12, 12]);
+    t.header(&["dataset", "arch", "loss", "acc", "dense ms", "spgemm ms", "vs noAIA", "vs cuSPARSE"]);
+    let epochs = if quick() { 2 } else { 3 };
+    let mut out = Json::Arr(vec![]);
+    let mut vs_sw = Vec::new();
+    let mut vs_esc = Vec::new();
+    for ds in active() {
+        let data = GnnData::build(&ds, SEED);
+        for arch in Arch::all() {
+            let m = train_one(rt, &data, arch, epochs)?;
+            let aia = m.epoch_ms(Variant::HashAia);
+            let sw = m.epoch_ms(Variant::Hash);
+            let esc = m.epoch_ms(Variant::Cusparse);
+            let r_sw = reduction_pct(sw, aia);
+            let r_esc = reduction_pct(esc, aia);
+            vs_sw.push(r_sw);
+            vs_esc.push(r_esc);
+            t.row(&[
+                ds.paper.name.to_string(),
+                arch.name().to_string(),
+                format!("{:.3}", m.final_loss),
+                format!("{:.3}", m.final_acc),
+                format!("{:.2}", m.dense_gpu_ms),
+                format!("{:.1}", m.spgemm_ms[0]),
+                format!("{r_sw:.1}%"),
+                format!("{r_esc:.1}%"),
+            ]);
+            let mut o = Json::obj();
+            o.set("dataset", ds.paper.name.into());
+            o.set("arch", arch.name().into());
+            o.set("final_loss", (m.final_loss as f64).into());
+            o.set("final_acc", m.final_acc.into());
+            o.set("dense_s_per_epoch_cpu_wall", m.dense_secs_per_epoch.into());
+            o.set("dense_gpu_ms", m.dense_gpu_ms.into());
+            o.set(
+                "spgemm_ms",
+                Json::Arr(vec![m.spgemm_ms[0].into(), m.spgemm_ms[1].into(), m.spgemm_ms[2].into()]),
+            );
+            o.set("reduction_vs_noaia_pct", r_sw.into());
+            o.set("reduction_vs_cusparse_pct", r_esc.into());
+            out.push(o);
+        }
+    }
+    let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+    println!(
+        "\naverages: AIA vs software-only {:.1}% (paper: 30.3%), AIA vs cuSPARSE {:.1}% (paper: 48.6%)",
+        avg(&vs_sw),
+        avg(&vs_esc)
+    );
+    save_json("fig10_fig11", &out);
+    Ok(out)
+}
+
+/// Train one configuration and price its SpGEMM jobs under all variants.
+pub fn train_one(rt: &mut Runtime, data: &GnnData, arch: Arch, epochs: usize) -> Result<TrainMeasurement> {
+    let mut trainer = Trainer::new(rt, data, arch, SEED ^ 0xA1A);
+    let mut last = None;
+    for _ in 0..epochs {
+        last = Some(trainer.epoch()?);
+    }
+    let stats = last.unwrap();
+    let spgemm_ms = [
+        trainer.simulate_epoch_ms(Variant::HashAia),
+        trainer.simulate_epoch_ms(Variant::Hash),
+        trainer.simulate_epoch_ms(Variant::Cusparse),
+    ];
+    Ok(TrainMeasurement {
+        dataset: data.name.clone(),
+        arch,
+        epochs,
+        final_loss: stats.loss,
+        final_acc: stats.accuracy,
+        dense_secs_per_epoch: stats.dense_secs,
+        dense_gpu_ms: dense_gpu_ms(data.n, arch),
+        spgemm_ms,
+    })
+}

@@ -1,0 +1,98 @@
+//! Graph-application experiments (Fig. 7: AIA vs software-only, Fig. 8:
+//! AIA vs cuSPARSE) — Graph Contraction and Markov Clustering over the
+//! six datasets the paper evaluates.
+
+use super::{quick, reduction_pct, save_json, Table, SEED};
+use crate::apps::{contract, mcl, random_labels, MclParams};
+use crate::coordinator::executor::{SpgemmExecutor, Variant};
+use crate::util::json::Json;
+use crate::util::Pcg32;
+
+/// The six datasets of Figs. 7–8, in paper order.
+pub const GRAPH_APP_DATASETS: [&str; 6] =
+    ["RoadTX", "web-Google", "Protein", "Economics", "amazon0601", "WindTunnel"];
+
+fn app_times(name: &str) -> (f64, f64, f64, f64, f64, f64) {
+    let ds = crate::gen::table2_by_name(name).unwrap();
+    let g = (ds.gen)(SEED);
+    let mut rng = Pcg32::new(SEED, 400);
+    let labels = random_labels(g.n_rows, (g.n_rows / 4).max(1), &mut rng);
+    let mcl_params = MclParams { max_iters: if quick() { 2 } else { 4 }, tol: 1e-4, top_k: 16, ..Default::default() };
+
+    let run = |variant: Variant| -> (f64, f64) {
+        let mut ex = SpgemmExecutor::simulated_scaled(variant, ds.scale);
+        let c = contract(&g, &labels, &mut ex).sim_ms;
+        let mut ex2 = SpgemmExecutor::simulated_scaled(variant, ds.scale);
+        let m = mcl(&g, &mcl_params, &mut ex2).sim_ms;
+        (c, m)
+    };
+    let (c_aia, m_aia) = run(Variant::HashAia);
+    let (c_sw, m_sw) = run(Variant::Hash);
+    let (c_esc, m_esc) = run(Variant::Cusparse);
+    (c_aia, c_sw, c_esc, m_aia, m_sw, m_esc)
+}
+
+/// Figs. 7 and 8 share the same runs; emit both tables at once.
+pub fn fig7_fig8() -> Json {
+    println!("\n=== Fig 7/8: Graph Contraction & MCL time reduction ===");
+    let t = Table::new(&[13, 12, 12, 12, 12, 10, 10]);
+    t.header(&[
+        "dataset",
+        "GC vs SW",
+        "GC vs ESC",
+        "MCL vs SW",
+        "MCL vs ESC",
+        "GC ms",
+        "MCL ms",
+    ]);
+    let datasets: Vec<&str> = if quick() { vec!["Economics", "RoadTX"] } else { GRAPH_APP_DATASETS.to_vec() };
+    let mut out = Json::Arr(vec![]);
+    let mut gc_sw = Vec::new();
+    let mut gc_esc = Vec::new();
+    let mut mcl_sw = Vec::new();
+    let mut mcl_esc = Vec::new();
+    for name in datasets {
+        let (c_aia, c_sw, c_esc, m_aia, m_sw, m_esc) = app_times(name);
+        let r = [
+            reduction_pct(c_sw, c_aia),
+            reduction_pct(c_esc, c_aia),
+            reduction_pct(m_sw, m_aia),
+            reduction_pct(m_esc, m_aia),
+        ];
+        gc_sw.push(r[0]);
+        gc_esc.push(r[1]);
+        mcl_sw.push(r[2]);
+        mcl_esc.push(r[3]);
+        t.row(&[
+            name.to_string(),
+            format!("{:.1}%", r[0]),
+            format!("{:.1}%", r[1]),
+            format!("{:.1}%", r[2]),
+            format!("{:.1}%", r[3]),
+            format!("{c_aia:.1}"),
+            format!("{m_aia:.1}"),
+        ]);
+        let mut o = Json::obj();
+        o.set("name", name.into());
+        o.set("contraction_ms", Json::Arr(vec![c_aia.into(), c_sw.into(), c_esc.into()]));
+        o.set("mcl_ms", Json::Arr(vec![m_aia.into(), m_sw.into(), m_esc.into()]));
+        o.set("gc_vs_sw_pct", r[0].into());
+        o.set("gc_vs_esc_pct", r[1].into());
+        o.set("mcl_vs_sw_pct", r[2].into());
+        o.set("mcl_vs_esc_pct", r[3].into());
+        out.push(o);
+    }
+    let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    println!(
+        "\nFig 7 averages (vs software-only): contraction {:.1}% (paper: 4.1-17.3%), MCL {:.1}% (paper: 5.0-13.8%)",
+        avg(&gc_sw),
+        avg(&mcl_sw)
+    );
+    println!(
+        "Fig 8 averages (vs cuSPARSE): contraction {:.1}% (paper avg: 76.5%), MCL {:.1}% (paper avg: 58.4%)",
+        avg(&gc_esc),
+        avg(&mcl_esc)
+    );
+    save_json("fig7_fig8", &out);
+    out
+}

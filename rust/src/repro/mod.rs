@@ -1,0 +1,101 @@
+//! Experiment harness: one function per paper table/figure (DESIGN.md
+//! §4 experiment index). Each prints the paper-style series and returns
+//! JSON rows for `EXPERIMENTS.md` and the bench artifacts.
+
+pub mod gnn_experiments;
+pub mod graph_apps;
+pub mod selfproduct;
+
+use crate::util::json::Json;
+
+pub use gnn_experiments::{fig10_fig11, fig9, table3};
+pub use graph_apps::{fig7_fig8, GRAPH_APP_DATASETS};
+pub use selfproduct::{fig5, fig6, table2};
+
+/// Default seed for every experiment (reproducible end to end).
+pub const SEED: u64 = 20250710;
+
+/// Quick mode (env `REPRO_QUICK=1`): fewer datasets / epochs, for CI.
+pub fn quick() -> bool {
+    std::env::var("REPRO_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Pearson correlation coefficient (Fig. 9's r).
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    if n < 2.0 {
+        return 0.0;
+    }
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let cov: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let vx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    let vy: f64 = ys.iter().map(|y| (y - my) * (y - my)).sum();
+    if vx == 0.0 || vy == 0.0 {
+        return 0.0;
+    }
+    cov / (vx.sqrt() * vy.sqrt())
+}
+
+/// Percentage reduction from `base` to `new` (paper's "time reduction").
+pub fn reduction_pct(base: f64, new: f64) -> f64 {
+    if base <= 0.0 {
+        return 0.0;
+    }
+    100.0 * (base - new) / base
+}
+
+/// Write an experiment's JSON to `target/repro/<name>.json`.
+pub fn save_json(name: &str, json: &Json) {
+    let dir = std::path::Path::new("target/repro");
+    let _ = std::fs::create_dir_all(dir);
+    let path = dir.join(format!("{name}.json"));
+    if std::fs::write(&path, json.render_pretty()).is_ok() {
+        println!("[saved {}]", path.display());
+    }
+}
+
+/// Simple fixed-width table printer.
+pub struct Table {
+    pub widths: Vec<usize>,
+}
+
+impl Table {
+    pub fn new(widths: &[usize]) -> Table {
+        Table { widths: widths.to_vec() }
+    }
+    pub fn row(&self, cells: &[String]) {
+        let line: Vec<String> = cells
+            .iter()
+            .zip(&self.widths)
+            .map(|(c, &w)| format!("{c:>w$}"))
+            .collect();
+        println!("{}", line.join("  "));
+    }
+    pub fn header(&self, cells: &[&str]) {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+        let total: usize = self.widths.iter().sum::<usize>() + 2 * (self.widths.len() - 1);
+        println!("{}", "-".repeat(total));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pearson_basics() {
+        assert!((pearson(&[1.0, 2.0, 3.0], &[2.0, 4.0, 6.0]) - 1.0).abs() < 1e-12);
+        assert!((pearson(&[1.0, 2.0, 3.0], &[6.0, 4.0, 2.0]) + 1.0).abs() < 1e-12);
+        assert_eq!(pearson(&[1.0], &[1.0]), 0.0);
+        assert_eq!(pearson(&[1.0, 1.0], &[2.0, 3.0]), 0.0);
+    }
+
+    #[test]
+    fn reduction_pct_basics() {
+        assert!((reduction_pct(10.0, 5.0) - 50.0).abs() < 1e-12);
+        assert!((reduction_pct(10.0, 12.0) + 20.0).abs() < 1e-12);
+        assert_eq!(reduction_pct(0.0, 5.0), 0.0);
+    }
+}

@@ -1,0 +1,93 @@
+//! The PJRT client wrapper: HLO-text artifact loading, executable
+//! caching keyed by `(op, tier)`, and typed execution.
+//!
+//! Follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`. HLO
+//! *text* is the interchange format (see `python/compile/aot.py`).
+
+use super::tensor::Tensor;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Loads and runs AOT artifacts. One compiled executable per (op, tier),
+/// compiled lazily on first use and cached for the process lifetime.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    exes: HashMap<(String, usize), xla::PjRtLoadedExecutable>,
+    /// Wall time spent executing (the dense-path cost the GNN trainer
+    /// reports), seconds.
+    pub exec_secs: f64,
+    pub calls: u64,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at an artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        Ok(Runtime { client, dir: artifacts_dir.to_path_buf(), exes: HashMap::new(), exec_secs: 0.0, calls: 0 })
+    }
+
+    /// Default artifacts directory (`$SPGEMM_AIA_ARTIFACTS` or `artifacts/`).
+    pub fn artifacts_dir() -> PathBuf {
+        std::env::var("SPGEMM_AIA_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    fn ensure_compiled(&mut self, op: &str, tier: usize) -> Result<()> {
+        let key = (op.to_string(), tier);
+        if self.exes.contains_key(&key) {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("{op}_n{tier}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .map_err(|e| anyhow!("load {}: {e:?}", path.display()))
+            .with_context(|| "run `make artifacts` first")?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile {op}_n{tier}: {e:?}"))?;
+        self.exes.insert(key, exe);
+        Ok(())
+    }
+
+    /// Execute `op` at `tier` on `inputs`; returns the artifact's output
+    /// tuple as host tensors.
+    pub fn call(&mut self, op: &str, tier: usize, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.ensure_compiled(op, tier)?;
+        let exe = self.exes.get(&(op.to_string(), tier)).unwrap();
+        let lits: Vec<xla::Literal> = inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let t0 = std::time::Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute {op}_n{tier}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("sync {op}_n{tier}: {e:?}"))?;
+        self.exec_secs += t0.elapsed().as_secs_f64();
+        self.calls += 1;
+        // Artifacts always return tuples (aot.py wraps single outputs).
+        let parts = result.to_tuple().map_err(|e| anyhow!("untuple {op}_n{tier}: {e:?}"))?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+
+    /// Number of compiled executables resident.
+    pub fn compiled_count(&self) -> usize {
+        self.exes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! These tests need `make artifacts` to have run; they are the
+    //! integration seam between L2 (JAX) and L3 (Rust) and are kept in
+    //! `rust/tests/runtime_integration.rs` so `cargo test --lib` stays
+    //! artifact-free. Only the pure helpers are tested here.
+
+    use super::*;
+
+    #[test]
+    fn artifacts_dir_env_override() {
+        std::env::set_var("SPGEMM_AIA_ARTIFACTS", "/tmp/xyz");
+        assert_eq!(Runtime::artifacts_dir(), PathBuf::from("/tmp/xyz"));
+        std::env::remove_var("SPGEMM_AIA_ARTIFACTS");
+        assert_eq!(Runtime::artifacts_dir(), PathBuf::from("artifacts"));
+    }
+}

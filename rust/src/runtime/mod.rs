@@ -1,0 +1,9 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) once,
+//! compiles them on the CPU PJRT client, and executes them from the L3
+//! hot path. Python never runs here.
+
+pub mod client;
+pub mod tensor;
+
+pub use client::Runtime;
+pub use tensor::Tensor;

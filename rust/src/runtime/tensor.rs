@@ -1,0 +1,91 @@
+//! Host-side f32 tensors marshalled to/from `xla::Literal`.
+
+use anyhow::{ensure, Result};
+
+/// A dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<i64>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(dims: Vec<i64>, data: Vec<f32>) -> Tensor {
+        debug_assert_eq!(dims.iter().product::<i64>() as usize, data.len());
+        Tensor { dims, data }
+    }
+
+    pub fn zeros(dims: Vec<i64>) -> Tensor {
+        let len = dims.iter().product::<i64>() as usize;
+        Tensor { dims, data: vec![0.0; len] }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { dims: vec![], data: vec![v] }
+    }
+
+    pub fn matrix(rows: usize, cols: usize, data: Vec<f32>) -> Tensor {
+        assert_eq!(rows * cols, data.len());
+        Tensor { dims: vec![rows as i64, cols as i64], data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.dims.first().map(|&d| d as usize).unwrap_or(1)
+    }
+
+    pub fn cols(&self) -> usize {
+        self.dims.get(1).map(|&d| d as usize).unwrap_or(1)
+    }
+
+    /// Convert to an XLA literal.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        if self.dims.is_empty() {
+            // scalar: reshape to rank-0
+            Ok(lit.reshape(&[])?)
+        } else {
+            Ok(lit.reshape(&self.dims)?)
+        }
+    }
+
+    /// Convert back from an XLA literal (must be f32).
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<i64> = shape.dims().to_vec();
+        let data = lit.to_vec::<f32>()?;
+        ensure!(dims.iter().product::<i64>() as usize == data.len(), "literal shape/data mismatch");
+        Ok(Tensor { dims, data })
+    }
+
+    /// Elementwise AXPY: `self += alpha * other` (SGD step helper).
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        debug_assert_eq!(self.dims, other.dims);
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_and_accessors() {
+        let t = Tensor::matrix(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.cols(), 3);
+        let z = Tensor::zeros(vec![4, 4]);
+        assert_eq!(z.data.len(), 16);
+        assert_eq!(Tensor::scalar(2.5).data, vec![2.5]);
+    }
+
+    #[test]
+    fn axpy() {
+        let mut a = Tensor::matrix(1, 3, vec![1., 2., 3.]);
+        let b = Tensor::matrix(1, 3, vec![10., 10., 10.]);
+        a.axpy(-0.1, &b);
+        assert!((a.data[0] - 0.0).abs() < 1e-6);
+        assert!((a.data[2] - 2.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,164 @@
+//! Device configuration for the simulated GPU (H200-class) and its AIA
+//! extension.
+//!
+//! Constants are calibrated once against public H200 specs and the
+//! paper's architectural description (Fig. 1: 6 HBM stacks, AIA engine
+//! in each stack controller), then shared by **all** experiments — no
+//! per-experiment tuning (DESIGN.md §5). Cache capacities are scaled by
+//! `cache_scale` to match the dataset down-scaling documented in the
+//! registry, preserving capacity-miss behaviour.
+
+/// Whether the AIA near-HBM engine services the two-level indirection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AiaMode {
+    Off,
+    On,
+}
+
+/// Simulated device parameters.
+#[derive(Clone, Debug)]
+pub struct DeviceConfig {
+    /// Streaming multiprocessors (H200: 132).
+    pub sms: usize,
+    /// SM clock in GHz.
+    pub clock_ghz: f64,
+    /// Useful ALU ops per SM per cycle the kernels sustain (scalar-ish
+    /// integer/hash work, not peak FMA).
+    pub ipc_per_sm: f64,
+    /// Memory-level parallelism: outstanding misses an SM's warps overlap.
+    pub mlp: f64,
+    /// Effective MLP for *dependent* pointer-chase loads (the rpt_B
+    /// lookup that must return before its range loads can issue — the
+    /// 2N-round-trip serialization of Fig. 2). Far lower than `mlp`.
+    pub mlp_dep: f64,
+
+    /// L1 data cache per SM, bytes (H200: 256 KiB; scaled).
+    pub l1_bytes: usize,
+    pub l1_ways: usize,
+    /// Cache line bytes (sector granularity on NVIDIA; 128 B line).
+    pub line_bytes: usize,
+    /// L2 total bytes (H200: 60 MiB; scaled).
+    pub l2_bytes: usize,
+    pub l2_ways: usize,
+
+    /// Latencies in SM cycles.
+    pub l1_lat: f64,
+    pub l2_lat: f64,
+    pub hbm_lat: f64,
+
+    /// HBM stacks (H200: 6) and aggregate bandwidth GB/s (H200: 4800).
+    pub hbm_stacks: usize,
+    pub hbm_bw_gbps: f64,
+
+    /// Extra serialization cycles per global atomic (CAS/Add) beyond a
+    /// normal access, amortized over the SM's warps.
+    pub atomic_cost: f64,
+    /// Expected shared-memory bank-conflict slowdown factor for random
+    /// hash probing (1.0 = conflict-free).
+    pub bank_conflict_factor: f64,
+    /// Shared-memory words served per SM per cycle (32 banks).
+    pub shared_words_per_cycle: f64,
+
+    /// AIA engine: fixed overhead per ranged-indirect request (engine
+    /// cycles) and elements gathered per engine cycle per stack.
+    pub aia_req_overhead: f64,
+    pub aia_elems_per_cycle: f64,
+    /// AIA engine clock, GHz (stack base-die logic is slower than SMs).
+    pub aia_clock_ghz: f64,
+
+    /// Concurrent thread blocks resident per SM. The trace is replayed
+    /// block-sequentially, so each block's reuse distance is dilated by
+    /// this factor on real hardware — the cache model divides effective
+    /// L1/L2 capacity by these to compensate (standard trick in
+    /// trace-driven GPU cache modelling).
+    pub l1_occupancy_div: usize,
+    pub l2_occupancy_div: usize,
+}
+
+impl DeviceConfig {
+    /// H200-class device with caches scaled for ~1/16-scale datasets.
+    pub fn h200_scaled() -> DeviceConfig {
+        DeviceConfig {
+            sms: 132,
+            clock_ghz: 1.98,
+            ipc_per_sm: 256.0,
+            mlp: 48.0,
+            mlp_dep: 8.0,
+            l1_bytes: 32 << 10, // 256 KiB / 8
+            l1_ways: 8,
+            // NVIDIA L1/L2 transact in 32 B sectors; hit-ratio counters
+            // (what Fig. 5 reports via nsight) are sector-granular.
+            line_bytes: 32,
+            l2_bytes: 4 << 20, // 60 MiB / 15
+            l2_ways: 16,
+            l1_lat: 32.0,
+            l2_lat: 200.0,
+            hbm_lat: 650.0,
+            hbm_stacks: 6,
+            hbm_bw_gbps: 4800.0,
+            atomic_cost: 24.0,
+            bank_conflict_factor: 1.35,
+            shared_words_per_cycle: 32.0,
+            // AIA requests are *batched*: one (dst, N, R, a, b) descriptor
+            // covers N lookups (Fig. 2), so per-lookup overhead is small;
+            // per-stack gather throughput tracks HBM3e internal bandwidth
+            // (~800 GB/s per stack ≈ 64 elements/engine-cycle).
+            aia_req_overhead: 2.0,
+            aia_elems_per_cycle: 64.0,
+            aia_clock_ghz: 1.2,
+            l1_occupancy_div: 16,
+            l2_occupancy_div: 8,
+        }
+    }
+
+    /// Full-size H200 caches (for experiments on full-scale inputs).
+    pub fn h200_full() -> DeviceConfig {
+        DeviceConfig { l1_bytes: 256 << 10, l2_bytes: 60 << 20, ..Self::h200_scaled() }
+    }
+
+    /// H200 with caches scaled by a dataset's down-scaling factor, so the
+    /// working-set : cache ratio matches what the full-size dataset sees
+    /// on real hardware (DESIGN.md §Hardware substitution). Capacities
+    /// are clamped to keep valid geometry and rounded to powers of two.
+    pub fn h200_for_scale(scale: usize) -> DeviceConfig {
+        let scale = scale.max(1);
+        let clamp_pow2 = |bytes: usize, min: usize| -> usize {
+            let b = (bytes / scale).max(min);
+            // round down to a power of two for clean set geometry
+            1usize << (usize::BITS - 1 - b.leading_zeros())
+        };
+        DeviceConfig {
+            l1_bytes: clamp_pow2(256 << 10, 8 << 10),
+            l2_bytes: clamp_pow2(60 << 20, 512 << 10),
+            ..Self::h200_scaled()
+        }
+    }
+
+    /// Bytes/cycle of aggregate HBM bandwidth, in SM-clock cycles.
+    pub fn hbm_bytes_per_cycle(&self) -> f64 {
+        self.hbm_bw_gbps * 1e9 / (self.clock_ghz * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn h200_parameters_sane() {
+        let d = DeviceConfig::h200_scaled();
+        assert_eq!(d.sms, 132);
+        assert_eq!(d.hbm_stacks, 6);
+        assert!(d.l1_bytes.is_power_of_two());
+        assert!((d.l1_bytes / d.line_bytes) % d.l1_ways == 0);
+        assert!(d.hbm_bytes_per_cycle() > 1000.0); // ~2424 B/cycle
+    }
+
+    #[test]
+    fn full_config_scales_caches_only() {
+        let s = DeviceConfig::h200_scaled();
+        let f = DeviceConfig::h200_full();
+        assert_eq!(f.l1_bytes, 8 * s.l1_bytes);
+        assert_eq!(f.sms, s.sms);
+    }
+}

@@ -1,0 +1,20 @@
+//! GPU + HBM + AIA memory-system simulator (paper §IV).
+//!
+//! - `probe` — the instrumentation interface the SpGEMM engines emit
+//!   events through (with `NullProbe` for the functional fast path and
+//!   `SamplingProbe` for statistical decimation of huge traces);
+//! - `cache` — set-associative LRU model (per-SM L1s, shared L2);
+//! - `gpu` — the H200-class `DeviceConfig` and `AiaMode`;
+//! - `machine` — the recording probe: cache hierarchy + HBM bandwidth +
+//!   per-stack AIA engines + the analytic SM timing model;
+//! - `run` — one-call `simulate_spgemm` producing a `SimReport`.
+
+pub mod cache;
+pub mod gpu;
+pub mod machine;
+pub mod probe;
+pub mod run;
+
+pub use gpu::{AiaMode, DeviceConfig};
+pub use machine::{Machine, PhaseReport, SimReport};
+pub use run::{auto_sample, gflops, simulate_spgemm, simulate_spgemm_full, simulate_stats, SimConfig};

@@ -1,0 +1,184 @@
+//! Instrumentation interface between the SpGEMM engines and the memory
+//! simulator.
+//!
+//! Every engine phase is written against [`Probe`]: the fast functional
+//! path passes [`NullProbe`] (all callbacks inline to nothing and the
+//! optimizer erases them); the simulator passes a recording probe that
+//! feeds the cache/HBM/AIA models (see `sim::machine`).
+//!
+//! The abstraction level is deliberately the one the paper's argument
+//! lives at: **line-granular global-memory traffic in program order per
+//! thread block**, shared-memory accesses as bank events, and the
+//! two-level indirection pattern (`rpt_B[col]` → `col_B/val_B[lo..hi]`)
+//! surfaced as a single semantic callback so the AIA model can rewrite it.
+
+/// Logical arrays of the kernel working set. The simulator assigns each a
+/// disjoint base address; `(region, index)` becomes a byte address.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Region {
+    RptA,
+    ColA,
+    ValA,
+    RptB,
+    ColB,
+    ValB,
+    RptC,
+    ColC,
+    ValC,
+    /// Global-memory hash table keys (group 3 fallback).
+    HashKeys,
+    /// Global-memory hash table values (group 3 fallback).
+    HashVals,
+    /// Row id map (grouping phase output).
+    Map,
+    /// Intermediate-product counts.
+    IpCount,
+    /// Group counters updated with atomics in the grouping phase.
+    GroupCtr,
+    /// AIA stream buffer the engine deposits gathered data into
+    /// (GPU-side reads of this are sequential).
+    AiaStream,
+    /// ESC baseline: expanded triple buffer.
+    EscExpand,
+}
+
+/// Kernel phases, for per-phase accounting (Fig. 5 reports per-phase L1
+/// hit ratios).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Phase {
+    Grouping,
+    Allocation,
+    Accumulation,
+    /// ESC baseline phases share one bucket each.
+    EscExpand,
+    EscSort,
+    EscCompress,
+    Other,
+}
+
+/// Access kinds (atomics cost extra and serialize under contention).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Read,
+    Write,
+    /// atomicCAS / atomicAdd on global memory.
+    Atomic,
+}
+
+/// Instrumentation callbacks. All methods have empty defaults so the
+/// functional path compiles to nothing.
+pub trait Probe {
+    /// Simulated thread block `block` (used for SM assignment) starts
+    /// executing `phase`.
+    #[inline(always)]
+    fn begin_block(&mut self, _block: usize, _phase: Phase) {}
+
+    /// Global-memory access to `region[idx]` of `bytes` bytes.
+    #[inline(always)]
+    fn access(&mut self, _region: Region, _idx: usize, _bytes: u32, _kind: Kind) {}
+
+    /// Shared-memory access to `word` (bank = word % 32). Hash-table
+    /// probes in groups 0–2 land here, not in the cache hierarchy.
+    #[inline(always)]
+    fn shared(&mut self, _word: usize, _kind: Kind) {}
+
+    /// `ops` ALU operations (hash computation, comparisons, FMA).
+    #[inline(always)]
+    fn compute(&mut self, _ops: u64) {}
+
+    /// The SpGEMM two-level indirection: read `rpt[ptr_idx]` and
+    /// `rpt[ptr_idx+1]`, then stream elements `lo..hi` of each region in
+    /// `data` (col_B and usually val_B). The AIA engine model intercepts
+    /// exactly this callback; the no-AIA model expands it to raw accesses.
+    #[inline(always)]
+    fn indirect_range(&mut self, _ptr: Region, _ptr_idx: usize, _data: &[Region], _lo: usize, _hi: usize) {}
+}
+
+/// Zero-cost probe for the functional fast path.
+#[derive(Default, Clone, Copy)]
+pub struct NullProbe;
+impl Probe for NullProbe {}
+
+/// Block-sampling wrapper: forwards events only for blocks where
+/// `block % every == 0`, so huge workloads can be simulated from a
+/// statistical sample (the machine model scales its counters back up by
+/// `every`). `every = 1` forwards everything.
+pub struct SamplingProbe<'a, P: Probe> {
+    pub inner: &'a mut P,
+    pub every: usize,
+    active: bool,
+}
+
+impl<'a, P: Probe> SamplingProbe<'a, P> {
+    pub fn new(inner: &'a mut P, every: usize) -> Self {
+        SamplingProbe { inner, every: every.max(1), active: true }
+    }
+}
+
+impl<P: Probe> Probe for SamplingProbe<'_, P> {
+    #[inline]
+    fn begin_block(&mut self, block: usize, phase: Phase) {
+        self.active = block % self.every == 0;
+        if self.active {
+            self.inner.begin_block(block, phase);
+        }
+    }
+    #[inline]
+    fn access(&mut self, region: Region, idx: usize, bytes: u32, kind: Kind) {
+        if self.active {
+            self.inner.access(region, idx, bytes, kind);
+        }
+    }
+    #[inline]
+    fn shared(&mut self, word: usize, kind: Kind) {
+        if self.active {
+            self.inner.shared(word, kind);
+        }
+    }
+    #[inline]
+    fn compute(&mut self, ops: u64) {
+        if self.active {
+            self.inner.compute(ops);
+        }
+    }
+    #[inline]
+    fn indirect_range(&mut self, ptr: Region, ptr_idx: usize, data: &[Region], lo: usize, hi: usize) {
+        if self.active {
+            self.inner.indirect_range(ptr, ptr_idx, data, lo, hi);
+        }
+    }
+}
+
+/// Counting probe for unit tests: tallies events without simulating.
+#[derive(Default, Debug)]
+pub struct CountingProbe {
+    pub blocks: usize,
+    pub accesses: u64,
+    pub atomic: u64,
+    pub shared: u64,
+    pub compute_ops: u64,
+    pub indirect_ranges: u64,
+    pub indirect_elems: u64,
+}
+
+impl Probe for CountingProbe {
+    fn begin_block(&mut self, _block: usize, _phase: Phase) {
+        self.blocks += 1;
+    }
+    fn access(&mut self, _r: Region, _i: usize, _b: u32, kind: Kind) {
+        self.accesses += 1;
+        if kind == Kind::Atomic {
+            self.atomic += 1;
+        }
+    }
+    fn shared(&mut self, _w: usize, _k: Kind) {
+        self.shared += 1;
+    }
+    fn compute(&mut self, ops: u64) {
+        self.compute_ops += ops;
+    }
+    fn indirect_range(&mut self, _p: Region, _pi: usize, _d: &[Region], lo: usize, hi: usize) {
+        self.indirect_ranges += 1;
+        self.indirect_elems += (hi - lo) as u64;
+    }
+}

@@ -1,0 +1,165 @@
+//! High-level simulation entry points: run an SpGEMM through the traced
+//! engine + machine model and get back the product and a [`SimReport`].
+
+use super::gpu::{AiaMode, DeviceConfig};
+use super::machine::{Machine, SimReport};
+use super::probe::SamplingProbe;
+use crate::spgemm::{ip, spgemm_traced, Algo};
+use crate::sparse::Csr;
+
+/// Target sampled intermediate products — keeps a simulation run at a
+/// few hundred ms regardless of workload size.
+const TARGET_SAMPLED_IP: u64 = 3_000_000;
+
+/// Pick a block-sampling factor for a workload of `total_ip`
+/// intermediate products.
+pub fn auto_sample(total_ip: u64) -> usize {
+    (total_ip / TARGET_SAMPLED_IP).clamp(1, 4096) as usize
+}
+
+/// Simulation request.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub device: DeviceConfig,
+    pub aia: AiaMode,
+    /// Block-sampling factor; `None` = choose from workload size.
+    pub sample: Option<usize>,
+}
+
+impl SimConfig {
+    pub fn new(aia: AiaMode) -> SimConfig {
+        SimConfig { device: DeviceConfig::h200_scaled(), aia, sample: None }
+    }
+
+    /// Config whose caches are scaled by the dataset's down-scaling
+    /// factor (see `DeviceConfig::h200_for_scale`).
+    pub fn for_scale(aia: AiaMode, scale: usize) -> SimConfig {
+        SimConfig { device: DeviceConfig::h200_for_scale(scale), aia, sample: None }
+    }
+}
+
+/// Run `C = A · B` on the simulated machine. Returns the (complete,
+/// exact) product — computed on the fast parallel path — and the
+/// simulation report from a block-sampled stats-only trace. The paper's
+/// cuSPARSE baseline (`Algo::Esc`) never uses AIA — enforced here so
+/// callers cannot misconfigure the comparison.
+pub fn simulate_spgemm(algo: Algo, a: &Csr, b: &Csr, cfg: &SimConfig) -> (Csr, SimReport) {
+    let c = crate::spgemm::spgemm(algo, a, b);
+    (c, simulate_stats(algo, a, b, cfg))
+}
+
+/// Stats-only simulation (no product).
+pub fn simulate_stats(algo: Algo, a: &Csr, b: &Csr, cfg: &SimConfig) -> SimReport {
+    let aia = if algo == Algo::Esc { AiaMode::Off } else { cfg.aia };
+    let total_ip = ip::total_ip(a, b);
+    let sample = cfg.sample.unwrap_or_else(|| auto_sample(total_ip));
+    let mut machine = Machine::new(cfg.device.clone(), aia, sample);
+    match algo {
+        Algo::Hash | Algo::Reference => {
+            crate::spgemm::hash::engine::multiply_traced_stats(a, b, &mut machine, sample)
+        }
+        Algo::Esc => crate::spgemm::esc::multiply_traced_stats(a, b, &mut machine, sample),
+    }
+    machine.finish()
+}
+
+/// Full traced simulation (every block, functional output) — kept for
+/// equivalence tests between the traced and stats paths.
+pub fn simulate_spgemm_full(algo: Algo, a: &Csr, b: &Csr, cfg: &SimConfig) -> (Csr, SimReport) {
+    let aia = if algo == Algo::Esc { AiaMode::Off } else { cfg.aia };
+    let mut machine = Machine::new(cfg.device.clone(), aia, 1);
+    let c = {
+        let mut probe = SamplingProbe::new(&mut machine, 1);
+        spgemm_traced(algo, a, b, &mut probe)
+    };
+    (c, machine.finish())
+}
+
+/// GFLOPS as the paper computes it: `2 · IP / time`.
+pub fn gflops(total_ip: u64, time_ms: f64) -> f64 {
+    if time_ms <= 0.0 {
+        return 0.0;
+    }
+    2.0 * total_ip as f64 / (time_ms * 1e-3) / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+    use crate::util::Pcg32;
+
+    fn random_csr(rng: &mut Pcg32, n: usize, nnz: usize) -> Csr {
+        let mut coo = Coo::new(n, n);
+        for _ in 0..nnz {
+            coo.push(rng.below_usize(n), rng.below_usize(n), rng.f64_range(0.1, 1.0));
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn auto_sample_monotonic() {
+        assert_eq!(auto_sample(1000), 1);
+        assert!(auto_sample(3_000_000_000) > auto_sample(30_000_000));
+        assert!(auto_sample(u64::MAX / 2) <= 4096);
+    }
+
+    #[test]
+    fn simulated_product_is_exact() {
+        let mut rng = Pcg32::seeded(42);
+        let a = random_csr(&mut rng, 500, 5000);
+        let cfg = SimConfig::new(AiaMode::On);
+        let (c, report) = simulate_spgemm(Algo::Hash, &a, &a, &cfg);
+        let r = crate::spgemm::reference::spgemm_reference(&a, &a);
+        assert!(c.approx_eq(&r, 1e-10));
+        assert!(report.total_ms > 0.0);
+        assert!(report.phase(crate::sim::probe::Phase::Allocation).is_some());
+    }
+
+    #[test]
+    fn esc_never_gets_aia() {
+        let mut rng = Pcg32::seeded(43);
+        let a = random_csr(&mut rng, 300, 3000);
+        let cfg = SimConfig::new(AiaMode::On);
+        let (_, report) = simulate_spgemm(Algo::Esc, &a, &a, &cfg);
+        assert_eq!(report.aia, AiaMode::Off);
+        assert!(report.phases.iter().all(|p| p.aia_requests == 0));
+    }
+
+    #[test]
+    fn hash_with_aia_beats_without_on_irregular() {
+        // Power-law matrix whose B-side working set exceeds the L2:
+        // the AIA sweet spot. (On cache-resident toy matrices AIA is
+        // correctly *not* a win — streaming bypasses cache reuse.)
+        let mut rng = Pcg32::seeded(44);
+        let a = crate::gen::rmat(40_000, 400_000, crate::gen::RmatParams::web(), &mut rng);
+        let (_, off) = simulate_spgemm(Algo::Hash, &a, &a, &SimConfig::new(AiaMode::Off));
+        let (_, on) = simulate_spgemm(Algo::Hash, &a, &a, &SimConfig::new(AiaMode::On));
+        assert!(
+            on.total_ms < off.total_ms,
+            "AIA should help irregular workloads: on={} off={}",
+            on.total_ms,
+            off.total_ms
+        );
+    }
+
+    #[test]
+    fn hash_beats_esc_baseline() {
+        let mut rng = Pcg32::seeded(45);
+        let a = crate::gen::rmat(4096, 40_000, crate::gen::RmatParams::web(), &mut rng);
+        let (_, hash) = simulate_spgemm(Algo::Hash, &a, &a, &SimConfig::new(AiaMode::Off));
+        let (_, esc) = simulate_spgemm(Algo::Esc, &a, &a, &SimConfig::new(AiaMode::Off));
+        assert!(
+            hash.total_ms < esc.total_ms,
+            "hash engine should beat ESC: hash={} esc={}",
+            hash.total_ms,
+            esc.total_ms
+        );
+    }
+
+    #[test]
+    fn gflops_formula() {
+        assert!((gflops(1_000_000, 2.0) - 1.0).abs() < 1e-9);
+        assert_eq!(gflops(100, 0.0), 0.0);
+    }
+}

@@ -1,0 +1,142 @@
+//! COO (triplet) builder — the entry format for generators and
+//! MatrixMarket IO. Duplicates are combined by summation on conversion
+//! to CSR, matching the usual sparse-library semantics.
+
+use super::csr::Csr;
+
+/// Coordinate-format builder.
+#[derive(Clone, Debug, Default)]
+pub struct Coo {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub entries: Vec<(u32, u32, f64)>,
+}
+
+impl Coo {
+    pub fn new(n_rows: usize, n_cols: usize) -> Coo {
+        Coo { n_rows, n_cols, entries: Vec::new() }
+    }
+
+    pub fn with_capacity(n_rows: usize, n_cols: usize, cap: usize) -> Coo {
+        Coo { n_rows, n_cols, entries: Vec::with_capacity(cap) }
+    }
+
+    #[inline]
+    pub fn push(&mut self, r: usize, c: usize, v: f64) {
+        debug_assert!(r < self.n_rows && c < self.n_cols, "({r},{c}) out of {}x{}", self.n_rows, self.n_cols);
+        self.entries.push((r as u32, c as u32, v));
+    }
+
+    pub fn nnz_raw(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Convert to CSR, summing duplicate coordinates and dropping entries
+    /// that cancel to exactly zero.
+    pub fn to_csr(&self) -> Csr {
+        let mut entries = self.entries.clone();
+        entries.sort_unstable_by_key(|&(r, c, _)| ((r as u64) << 32) | c as u64);
+        let mut rpt = vec![0usize; self.n_rows + 1];
+        let mut col: Vec<u32> = Vec::with_capacity(entries.len());
+        let mut val: Vec<f64> = Vec::with_capacity(entries.len());
+        let mut it = entries.into_iter().peekable();
+        while let Some((r, c, mut v)) = it.next() {
+            while let Some(&(r2, c2, v2)) = it.peek() {
+                if r2 == r && c2 == c {
+                    v += v2;
+                    it.next();
+                } else {
+                    break;
+                }
+            }
+            if v != 0.0 {
+                col.push(c);
+                val.push(v);
+                rpt[r as usize + 1] += 1;
+            }
+        }
+        for i in 0..self.n_rows {
+            rpt[i + 1] += rpt[i];
+        }
+        Csr::new_unchecked(self.n_rows, self.n_cols, rpt, col, val)
+    }
+
+    /// Symmetrize: for every (r, c, v) also add (c, r, v). Requires square.
+    pub fn symmetrize(&mut self) {
+        assert_eq!(self.n_rows, self.n_cols, "symmetrize requires a square matrix");
+        let orig = self.entries.clone();
+        for (r, c, v) in orig {
+            if r != c {
+                self.entries.push((c, r, v));
+            }
+        }
+    }
+}
+
+impl From<&Csr> for Coo {
+    fn from(m: &Csr) -> Coo {
+        let mut coo = Coo::with_capacity(m.n_rows, m.n_cols, m.nnz());
+        for i in 0..m.n_rows {
+            let (cs, vs) = m.row(i);
+            for (&c, &v) in cs.iter().zip(vs) {
+                coo.push(i, c as usize, v);
+            }
+        }
+        coo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn duplicates_sum() {
+        let mut coo = Coo::new(2, 2);
+        coo.push(0, 1, 1.0);
+        coo.push(0, 1, 2.5);
+        coo.push(1, 0, -1.0);
+        let m = coo.to_csr();
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.to_dense(), vec![vec![0.0, 3.5], vec![-1.0, 0.0]]);
+    }
+
+    #[test]
+    fn cancellation_drops_entry() {
+        let mut coo = Coo::new(1, 1);
+        coo.push(0, 0, 2.0);
+        coo.push(0, 0, -2.0);
+        assert_eq!(coo.to_csr().nnz(), 0);
+    }
+
+    #[test]
+    fn unsorted_input_sorts() {
+        let mut coo = Coo::new(3, 3);
+        coo.push(2, 2, 1.0);
+        coo.push(0, 1, 1.0);
+        coo.push(2, 0, 1.0);
+        coo.push(0, 0, 1.0);
+        let m = coo.to_csr();
+        assert!(m.validate().is_ok());
+        assert_eq!(m.row(0).0, &[0, 1]);
+        assert_eq!(m.row(2).0, &[0, 2]);
+    }
+
+    #[test]
+    fn symmetrize_mirrors_offdiagonal() {
+        let mut coo = Coo::new(3, 3);
+        coo.push(0, 1, 1.0);
+        coo.push(1, 1, 5.0);
+        coo.symmetrize();
+        let m = coo.to_csr();
+        assert_eq!(m.to_dense()[1][0], 1.0);
+        assert_eq!(m.to_dense()[0][1], 1.0);
+        assert_eq!(m.to_dense()[1][1], 5.0);
+    }
+
+    #[test]
+    fn csr_coo_roundtrip() {
+        let m = Csr::new(2, 3, vec![0, 2, 3], vec![0, 2, 1], vec![1.0, 2.0, 3.0]).unwrap();
+        assert_eq!(Coo::from(&m).to_csr(), m);
+    }
+}

@@ -1,0 +1,290 @@
+//! Compressed Sparse Row matrices — the substrate every layer of the
+//! reproduction builds on.
+//!
+//! Representation follows the paper's kernels exactly: `rpt` (row
+//! pointers, `len = n_rows + 1`), `col` (column indices, sorted within a
+//! row), `val` (values). Column indices are `u32` (all evaluated
+//! matrices have < 2^32 columns); row pointers are `usize`.
+
+use anyhow::{bail, ensure, Result};
+
+/// A CSR sparse matrix with f64 values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    /// Row pointers; `rpt[i]..rpt[i+1]` indexes row i's entries.
+    pub rpt: Vec<usize>,
+    /// Column indices, strictly increasing within each row.
+    pub col: Vec<u32>,
+    /// Non-zero values, parallel to `col`.
+    pub val: Vec<f64>,
+}
+
+impl Csr {
+    /// Construct with full structural validation.
+    pub fn new(n_rows: usize, n_cols: usize, rpt: Vec<usize>, col: Vec<u32>, val: Vec<f64>) -> Result<Csr> {
+        ensure!(rpt.len() == n_rows + 1, "rpt len {} != n_rows+1 {}", rpt.len(), n_rows + 1);
+        ensure!(rpt[0] == 0, "rpt[0] must be 0");
+        ensure!(*rpt.last().unwrap() == col.len(), "rpt[last] {} != nnz {}", rpt.last().unwrap(), col.len());
+        ensure!(col.len() == val.len(), "col/val length mismatch");
+        for i in 0..n_rows {
+            ensure!(rpt[i] <= rpt[i + 1], "rpt not monotonic at row {i}");
+            let row = &col[rpt[i]..rpt[i + 1]];
+            for w in row.windows(2) {
+                if w[0] >= w[1] {
+                    bail!("row {i} columns not strictly increasing: {} !< {}", w[0], w[1]);
+                }
+            }
+            if let Some(&last) = row.last() {
+                ensure!((last as usize) < n_cols, "row {i} col {last} out of bounds {n_cols}");
+            }
+        }
+        Ok(Csr { n_rows, n_cols, rpt, col, val })
+    }
+
+    /// Construct without validation (hot paths that build valid output by
+    /// construction). Debug builds still validate.
+    pub fn new_unchecked(n_rows: usize, n_cols: usize, rpt: Vec<usize>, col: Vec<u32>, val: Vec<f64>) -> Csr {
+        #[cfg(debug_assertions)]
+        {
+            Csr::new(n_rows, n_cols, rpt, col, val).expect("invalid CSR in new_unchecked")
+        }
+        #[cfg(not(debug_assertions))]
+        {
+            Csr { n_rows, n_cols, rpt, col, val }
+        }
+    }
+
+    /// The empty matrix of a given shape.
+    pub fn zeros(n_rows: usize, n_cols: usize) -> Csr {
+        Csr { n_rows, n_cols, rpt: vec![0; n_rows + 1], col: vec![], val: vec![] }
+    }
+
+    /// Identity matrix.
+    pub fn identity(n: usize) -> Csr {
+        Csr {
+            n_rows: n,
+            n_cols: n,
+            rpt: (0..=n).collect(),
+            col: (0..n as u32).collect(),
+            val: vec![1.0; n],
+        }
+    }
+
+    /// Diagonal matrix from a vector.
+    pub fn from_diag(d: &[f64]) -> Csr {
+        let n = d.len();
+        Csr { n_rows: n, n_cols: n, rpt: (0..=n).collect(), col: (0..n as u32).collect(), val: d.to_vec() }
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.col.len()
+    }
+
+    #[inline]
+    pub fn row_range(&self, i: usize) -> std::ops::Range<usize> {
+        self.rpt[i]..self.rpt[i + 1]
+    }
+
+    /// (columns, values) of row i.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let r = self.row_range(i);
+        (&self.col[r.clone()], &self.val[r])
+    }
+
+    #[inline]
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.rpt[i + 1] - self.rpt[i]
+    }
+
+    /// Transpose via counting sort over columns — O(nnz + n_cols).
+    pub fn transpose(&self) -> Csr {
+        let mut cnt = vec![0usize; self.n_cols + 1];
+        for &c in &self.col {
+            cnt[c as usize + 1] += 1;
+        }
+        for i in 0..self.n_cols {
+            cnt[i + 1] += cnt[i];
+        }
+        let rpt_t = cnt.clone();
+        let mut col_t = vec![0u32; self.nnz()];
+        let mut val_t = vec![0f64; self.nnz()];
+        let mut next = cnt;
+        for i in 0..self.n_rows {
+            let (cols, vals) = self.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                let p = next[c as usize];
+                next[c as usize] += 1;
+                col_t[p] = i as u32;
+                val_t[p] = v;
+            }
+        }
+        // Row-major traversal in increasing i keeps each output row sorted.
+        Csr::new_unchecked(self.n_cols, self.n_rows, rpt_t, col_t, val_t)
+    }
+
+    /// Dense form for small-matrix tests.
+    pub fn to_dense(&self) -> Vec<Vec<f64>> {
+        let mut d = vec![vec![0.0; self.n_cols]; self.n_rows];
+        for i in 0..self.n_rows {
+            let (cols, vals) = self.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                d[i][c as usize] = v;
+            }
+        }
+        d
+    }
+
+    /// Build from a dense matrix, dropping exact zeros.
+    pub fn from_dense(d: &[Vec<f64>]) -> Csr {
+        let n_rows = d.len();
+        let n_cols = d.first().map(|r| r.len()).unwrap_or(0);
+        let mut rpt = Vec::with_capacity(n_rows + 1);
+        rpt.push(0);
+        let mut col = Vec::new();
+        let mut val = Vec::new();
+        for row in d {
+            for (j, &v) in row.iter().enumerate() {
+                if v != 0.0 {
+                    col.push(j as u32);
+                    val.push(v);
+                }
+            }
+            rpt.push(col.len());
+        }
+        Csr::new_unchecked(n_rows, n_cols, rpt, col, val)
+    }
+
+    /// Structural + numeric equality within `tol` (relative on large values).
+    pub fn approx_eq(&self, other: &Csr, tol: f64) -> bool {
+        if self.n_rows != other.n_rows || self.n_cols != other.n_cols || self.rpt != other.rpt || self.col != other.col {
+            return false;
+        }
+        self.val
+            .iter()
+            .zip(&other.val)
+            .all(|(&a, &b)| (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())))
+    }
+
+    /// Map values in place.
+    pub fn map_values(&mut self, f: impl Fn(f64) -> f64) {
+        for v in &mut self.val {
+            *v = f(*v);
+        }
+    }
+
+    /// Drop entries whose value is exactly 0 (after pruning ops).
+    pub fn drop_zeros(&self) -> Csr {
+        let mut rpt = Vec::with_capacity(self.n_rows + 1);
+        rpt.push(0);
+        let mut col = Vec::with_capacity(self.nnz());
+        let mut val = Vec::with_capacity(self.nnz());
+        for i in 0..self.n_rows {
+            let (cs, vs) = self.row(i);
+            for (&c, &v) in cs.iter().zip(vs) {
+                if v != 0.0 {
+                    col.push(c);
+                    val.push(v);
+                }
+            }
+            rpt.push(col.len());
+        }
+        Csr::new_unchecked(self.n_rows, self.n_cols, rpt, col, val)
+    }
+
+    /// Validate invariants (used by property tests on outputs of the
+    /// SpGEMM engines).
+    pub fn validate(&self) -> Result<()> {
+        Csr::new(self.n_rows, self.n_cols, self.rpt.clone(), self.col.clone(), self.val.clone()).map(|_| ())
+    }
+
+    /// Total bytes of the three arrays (for memory accounting in the sim).
+    pub fn bytes(&self) -> usize {
+        self.rpt.len() * 8 + self.col.len() * 4 + self.val.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Csr {
+        // [1 0 2]
+        // [0 0 0]
+        // [3 4 0]
+        Csr::new(3, 3, vec![0, 2, 2, 4], vec![0, 2, 0, 1], vec![1.0, 2.0, 3.0, 4.0]).unwrap()
+    }
+
+    #[test]
+    fn construction_validates() {
+        assert!(Csr::new(2, 2, vec![0, 1], vec![0], vec![1.0]).is_err()); // bad rpt len
+        assert!(Csr::new(1, 2, vec![0, 2], vec![1, 0], vec![1.0, 1.0]).is_err()); // unsorted
+        assert!(Csr::new(1, 2, vec![0, 2], vec![0, 0], vec![1.0, 1.0]).is_err()); // duplicate col
+        assert!(Csr::new(1, 2, vec![0, 1], vec![5], vec![1.0]).is_err()); // col OOB
+        assert!(small().validate().is_ok());
+    }
+
+    #[test]
+    fn identity_and_diag() {
+        let i3 = Csr::identity(3);
+        assert_eq!(i3.to_dense(), vec![vec![1.0, 0.0, 0.0], vec![0.0, 1.0, 0.0], vec![0.0, 0.0, 1.0]]);
+        let d = Csr::from_diag(&[2.0, 3.0]);
+        assert_eq!(d.to_dense(), vec![vec![2.0, 0.0], vec![0.0, 3.0]]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = small();
+        let t = a.transpose();
+        assert_eq!(t.n_rows, 3);
+        assert_eq!(t.to_dense(), vec![vec![1.0, 0.0, 3.0], vec![0.0, 0.0, 4.0], vec![2.0, 0.0, 0.0]]);
+        assert_eq!(a.transpose().transpose(), a);
+        assert!(t.validate().is_ok());
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let a = small();
+        assert_eq!(Csr::from_dense(&a.to_dense()), a);
+    }
+
+    #[test]
+    fn rectangular_transpose() {
+        let a = Csr::new(2, 4, vec![0, 2, 3], vec![1, 3, 0], vec![5.0, 6.0, 7.0]).unwrap();
+        let t = a.transpose();
+        assert_eq!(t.n_rows, 4);
+        assert_eq!(t.n_cols, 2);
+        assert_eq!(t.transpose(), a);
+    }
+
+    #[test]
+    fn drop_zeros_removes_explicit_zeros() {
+        let mut a = small();
+        a.val[1] = 0.0;
+        let b = a.drop_zeros();
+        assert_eq!(b.nnz(), 3);
+        assert!(b.validate().is_ok());
+        assert_eq!(b.to_dense()[0], vec![1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn approx_eq_tolerance() {
+        let a = small();
+        let mut b = a.clone();
+        b.val[0] += 1e-12;
+        assert!(a.approx_eq(&b, 1e-10));
+        b.val[0] += 1.0;
+        assert!(!a.approx_eq(&b, 1e-10));
+    }
+
+    #[test]
+    fn row_accessors() {
+        let a = small();
+        assert_eq!(a.row(0), (&[0u32, 2][..], &[1.0, 2.0][..]));
+        assert_eq!(a.row_nnz(1), 0);
+        assert_eq!(a.nnz(), 4);
+    }
+}

@@ -1,0 +1,143 @@
+//! MatrixMarket coordinate-format IO.
+//!
+//! Supports the `%%MatrixMarket matrix coordinate (real|pattern|integer)
+//! (general|symmetric)` subset, which covers every matrix in the paper's
+//! Table II (SuiteSparse exports). Pattern matrices get value 1.0;
+//! symmetric matrices are expanded.
+
+use super::coo::Coo;
+use super::csr::Csr;
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+/// Read a MatrixMarket file into CSR.
+pub fn read_matrix_market(path: &Path) -> Result<Csr> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    read_matrix_market_from(std::io::BufReader::new(f))
+}
+
+/// Read MatrixMarket from any reader (exposed for tests).
+pub fn read_matrix_market_from<R: BufRead>(mut r: R) -> Result<Csr> {
+    let mut header = String::new();
+    r.read_line(&mut header)?;
+    let h: Vec<&str> = header.split_whitespace().collect();
+    ensure!(h.len() >= 5 && h[0] == "%%MatrixMarket" && h[1] == "matrix", "bad MatrixMarket header: {header:?}");
+    ensure!(h[2] == "coordinate", "only coordinate format supported, got {}", h[2]);
+    let field = h[3].to_ascii_lowercase();
+    let symmetry = h[4].to_ascii_lowercase();
+    let pattern = match field.as_str() {
+        "real" | "integer" => false,
+        "pattern" => true,
+        other => bail!("unsupported field type {other}"),
+    };
+    let symmetric = match symmetry.as_str() {
+        "general" => false,
+        "symmetric" => true,
+        other => bail!("unsupported symmetry {other}"),
+    };
+
+    // Skip comments, read the size line.
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if r.read_line(&mut line)? == 0 {
+            bail!("EOF before size line");
+        }
+        let t = line.trim();
+        if !t.is_empty() && !t.starts_with('%') {
+            break;
+        }
+    }
+    let dims: Vec<usize> = line.split_whitespace().map(|t| t.parse::<usize>()).collect::<Result<_, _>>()?;
+    ensure!(dims.len() == 3, "size line must have 3 fields: {line:?}");
+    let (n_rows, n_cols, nnz) = (dims[0], dims[1], dims[2]);
+
+    let mut coo = Coo::with_capacity(n_rows, n_cols, if symmetric { nnz * 2 } else { nnz });
+    let mut count = 0usize;
+    loop {
+        line.clear();
+        if r.read_line(&mut line)? == 0 {
+            break;
+        }
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let i: usize = it.next().context("missing row")?.parse()?;
+        let j: usize = it.next().context("missing col")?.parse()?;
+        let v: f64 = if pattern { 1.0 } else { it.next().context("missing value")?.parse()? };
+        ensure!(i >= 1 && i <= n_rows && j >= 1 && j <= n_cols, "entry ({i},{j}) out of bounds");
+        coo.push(i - 1, j - 1, v);
+        if symmetric && i != j {
+            coo.push(j - 1, i - 1, v);
+        }
+        count += 1;
+    }
+    ensure!(count == nnz, "declared nnz {nnz} != parsed entries {count}");
+    Ok(coo.to_csr())
+}
+
+/// Write CSR as MatrixMarket `coordinate real general`.
+pub fn write_matrix_market(m: &Csr, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(w, "% written by spgemm-aia")?;
+    writeln!(w, "{} {} {}", m.n_rows, m.n_cols, m.nnz())?;
+    for i in 0..m.n_rows {
+        let (cs, vs) = m.row(i);
+        for (&c, &v) in cs.iter().zip(vs) {
+            writeln!(w, "{} {} {:.17e}", i + 1, c as usize + 1, v)?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_general_real() {
+        let text = "%%MatrixMarket matrix coordinate real general\n% comment\n3 3 3\n1 1 2.0\n2 3 -1.5\n3 1 4\n";
+        let m = read_matrix_market_from(Cursor::new(text)).unwrap();
+        assert_eq!(m.n_rows, 3);
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.to_dense()[1][2], -1.5);
+    }
+
+    #[test]
+    fn parses_pattern_symmetric() {
+        let text = "%%MatrixMarket matrix coordinate pattern symmetric\n2 2 2\n1 1\n2 1\n";
+        let m = read_matrix_market_from(Cursor::new(text)).unwrap();
+        // symmetric expansion: (0,0), (1,0), (0,1)
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.to_dense(), vec![vec![1.0, 1.0], vec![1.0, 0.0]]);
+    }
+
+    #[test]
+    fn rejects_bad_header() {
+        assert!(read_matrix_market_from(Cursor::new("garbage\n1 1 0\n")).is_err());
+        assert!(read_matrix_market_from(Cursor::new("%%MatrixMarket matrix array real general\n")).is_err());
+    }
+
+    #[test]
+    fn rejects_nnz_mismatch() {
+        let text = "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n";
+        assert!(read_matrix_market_from(Cursor::new(text)).is_err());
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let m = Csr::new(2, 3, vec![0, 2, 3], vec![0, 2, 1], vec![1.5, 2.0, -3.0]).unwrap();
+        let dir = std::env::temp_dir().join("spgemm_aia_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.mtx");
+        write_matrix_market(&m, &p).unwrap();
+        let m2 = read_matrix_market(&p).unwrap();
+        assert!(m.approx_eq(&m2, 1e-15));
+    }
+}

@@ -1,0 +1,15 @@
+//! Sparse-matrix substrate: CSR/COO containers, MatrixMarket IO,
+//! element-wise / normalization operations, and summary statistics.
+//!
+//! Everything above this layer (SpGEMM engines, the AIA simulator, the
+//! applications, the GNN stack) consumes these types.
+
+pub mod coo;
+pub mod csr;
+pub mod io;
+pub mod ops;
+pub mod stats;
+
+pub use coo::Coo;
+pub use csr::Csr;
+pub use stats::MatrixStats;

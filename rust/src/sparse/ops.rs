@@ -1,0 +1,355 @@
+//! Sparse matrix operations used by the applications (MCL, graph
+//! contraction, GNN) — everything except SpGEMM itself, which lives in
+//! `crate::spgemm`.
+
+use super::csr::Csr;
+use crate::util::par_chunks;
+
+/// Add missing self-loops with weight `w` (MCL step 1 — Algorithm 6).
+pub fn add_self_loops(m: &Csr, w: f64) -> Csr {
+    assert_eq!(m.n_rows, m.n_cols);
+    let mut rpt = Vec::with_capacity(m.n_rows + 1);
+    rpt.push(0usize);
+    let mut col = Vec::with_capacity(m.nnz() + m.n_rows);
+    let mut val = Vec::with_capacity(m.nnz() + m.n_rows);
+    for i in 0..m.n_rows {
+        let (cs, vs) = m.row(i);
+        let mut inserted = false;
+        for (&c, &v) in cs.iter().zip(vs) {
+            if !inserted && (c as usize) > i {
+                col.push(i as u32);
+                val.push(w);
+                inserted = true;
+            }
+            if c as usize == i {
+                inserted = true;
+            }
+            col.push(c);
+            val.push(v);
+        }
+        if !inserted {
+            col.push(i as u32);
+            val.push(w);
+        }
+        rpt.push(col.len());
+    }
+    Csr::new_unchecked(m.n_rows, m.n_cols, rpt, col, val)
+}
+
+/// Column sums of a CSR matrix.
+pub fn column_sums(m: &Csr) -> Vec<f64> {
+    let mut sums = vec![0.0; m.n_cols];
+    for (&c, &v) in m.col.iter().zip(&m.val) {
+        sums[c as usize] += v;
+    }
+    sums
+}
+
+/// Normalize columns to sum 1 (column-stochastic; MCL). Columns with zero
+/// sum are left zero.
+pub fn column_normalize(m: &Csr) -> Csr {
+    let sums = column_sums(m);
+    let mut out = m.clone();
+    for (c, v) in out.col.iter().zip(out.val.iter_mut()) {
+        let s = sums[*c as usize];
+        if s != 0.0 {
+            *v /= s;
+        }
+    }
+    out
+}
+
+/// Hadamard power: each entry raised to `r` (MCL inflation).
+pub fn hadamard_power(m: &Csr, r: f64) -> Csr {
+    let mut out = m.clone();
+    out.map_values(|v| v.powf(r));
+    out
+}
+
+/// MCL pruning (Algorithm 6, lines 6–10): per **column**, remove entries
+/// below `theta` and keep only the top-`k` largest by value.
+pub fn prune_columns(m: &Csr, theta: f64, k: usize) -> Csr {
+    // Work on the transpose so columns become rows, prune rows, transpose
+    // back. Cost: two counting-sort transposes — O(nnz).
+    let t = m.transpose();
+    let pruned = prune_rows(&t, theta, k);
+    pruned.transpose()
+}
+
+/// Per-row pruning: drop entries `< theta`, keep top-`k` by value.
+pub fn prune_rows(m: &Csr, theta: f64, k: usize) -> Csr {
+    let mut rpt = Vec::with_capacity(m.n_rows + 1);
+    rpt.push(0usize);
+    let mut col = Vec::new();
+    let mut val = Vec::new();
+    let mut scratch: Vec<(u32, f64)> = Vec::new();
+    for i in 0..m.n_rows {
+        let (cs, vs) = m.row(i);
+        scratch.clear();
+        for (&c, &v) in cs.iter().zip(vs) {
+            if v >= theta {
+                scratch.push((c, v));
+            }
+        }
+        if scratch.len() > k {
+            // Select the k largest by value, then restore column order.
+            scratch.sort_unstable_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+            scratch.truncate(k);
+            scratch.sort_unstable_by_key(|e| e.0);
+        }
+        for &(c, v) in &scratch {
+            col.push(c);
+            val.push(v);
+        }
+        rpt.push(col.len());
+    }
+    Csr::new_unchecked(m.n_rows, m.n_cols, rpt, col, val)
+}
+
+/// Frobenius norm of the difference (MCL convergence check), computed on
+/// the union pattern.
+pub fn frobenius_diff(a: &Csr, b: &Csr) -> f64 {
+    assert_eq!((a.n_rows, a.n_cols), (b.n_rows, b.n_cols));
+    let mut acc = 0.0;
+    for i in 0..a.n_rows {
+        let (ca, va) = a.row(i);
+        let (cb, vb) = b.row(i);
+        let (mut p, mut q) = (0, 0);
+        while p < ca.len() || q < cb.len() {
+            let d = match (ca.get(p), cb.get(q)) {
+                (Some(&x), Some(&y)) if x == y => {
+                    let d = va[p] - vb[q];
+                    p += 1;
+                    q += 1;
+                    d
+                }
+                (Some(&x), Some(&y)) if x < y => {
+                    p += 1;
+                    va[p - 1]
+                }
+                (Some(_), Some(_)) => {
+                    q += 1;
+                    -vb[q - 1]
+                }
+                (Some(_), None) => {
+                    p += 1;
+                    va[p - 1]
+                }
+                (None, Some(_)) => {
+                    q += 1;
+                    -vb[q - 1]
+                }
+                (None, None) => unreachable!(),
+            };
+            acc += d * d;
+        }
+    }
+    acc.sqrt()
+}
+
+/// Symmetric GCN normalization: `D^{-1/2} (A + I) D^{-1/2}`.
+pub fn gcn_normalize(adj: &Csr) -> Csr {
+    let a_hat = add_self_loops(adj, 1.0);
+    let mut deg = vec![0.0; a_hat.n_rows];
+    for i in 0..a_hat.n_rows {
+        deg[i] = a_hat.row(i).1.iter().sum();
+    }
+    let dinv: Vec<f64> = deg.iter().map(|&d| if d > 0.0 { 1.0 / d.sqrt() } else { 0.0 }).collect();
+    let mut out = a_hat;
+    for i in 0..out.n_rows {
+        let r = out.row_range(i);
+        let di = dinv[i];
+        for idx in r {
+            out.val[idx] *= di * dinv[out.col[idx] as usize];
+        }
+    }
+    out
+}
+
+/// Row-mean normalization: each row divided by its degree (GraphSAGE mean
+/// aggregator).
+pub fn row_mean_normalize(adj: &Csr) -> Csr {
+    let mut out = adj.clone();
+    for i in 0..out.n_rows {
+        let n = out.row_nnz(i);
+        if n > 0 {
+            let inv = 1.0 / n as f64;
+            for idx in out.row_range(i) {
+                out.val[idx] *= inv;
+            }
+        }
+    }
+    out
+}
+
+/// SpMM: sparse CSR × dense row-major `[n_cols × d]` → dense `[n_rows × d]`.
+/// Parallel over row blocks. Used by the GNN aggregation fallback and to
+/// cross-check the hybrid path.
+pub fn spmm_dense(a: &Csr, x: &[f64], d: usize) -> Vec<f64> {
+    assert_eq!(x.len(), a.n_cols * d, "dense operand shape mismatch");
+    let mut y = vec![0.0; a.n_rows * d];
+    {
+        let y_rows: &mut [f64] = &mut y;
+        // Split the output by row chunks; each chunk is written by one worker.
+        let yptr = y_rows.as_mut_ptr() as usize;
+        par_chunks(a.n_rows, |start, end| {
+            let yp = yptr as *mut f64;
+            for i in start..end {
+                let (cs, vs) = a.row(i);
+                // SAFETY: rows [start,end) are disjoint between workers.
+                let out = unsafe { std::slice::from_raw_parts_mut(yp.add(i * d), d) };
+                for (&c, &v) in cs.iter().zip(vs) {
+                    let xrow = &x[c as usize * d..c as usize * d + d];
+                    for (o, &xv) in out.iter_mut().zip(xrow) {
+                        *o += v * xv;
+                    }
+                }
+            }
+        });
+    }
+    y
+}
+
+/// Connected components on the union pattern of a square matrix
+/// (interpreting nonzeros as undirected edges) — used to extract MCL
+/// clusters. Returns a label per node.
+pub fn connected_components(m: &Csr) -> Vec<usize> {
+    assert_eq!(m.n_rows, m.n_cols);
+    let n = m.n_rows;
+    let mut label = vec![usize::MAX; n];
+    let mut next_label = 0;
+    let t = m.transpose();
+    let mut stack = Vec::new();
+    for s in 0..n {
+        if label[s] != usize::MAX {
+            continue;
+        }
+        label[s] = next_label;
+        stack.push(s);
+        while let Some(u) = stack.pop() {
+            for &v in m.row(u).0.iter().chain(t.row(u).0) {
+                let v = v as usize;
+                if label[v] == usize::MAX {
+                    label[v] = next_label;
+                    stack.push(v);
+                }
+            }
+        }
+        next_label += 1;
+    }
+    label
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain3() -> Csr {
+        // 0-1, 1-2 undirected chain
+        Csr::from_dense(&[
+            vec![0.0, 1.0, 0.0],
+            vec![1.0, 0.0, 1.0],
+            vec![0.0, 1.0, 0.0],
+        ])
+    }
+
+    #[test]
+    fn self_loops_inserted_in_order() {
+        let m = chain3();
+        let s = add_self_loops(&m, 2.0);
+        assert!(s.validate().is_ok());
+        let d = s.to_dense();
+        assert_eq!(d[0][0], 2.0);
+        assert_eq!(d[1][1], 2.0);
+        assert_eq!(d[2][2], 2.0);
+        // existing self-loop not duplicated
+        let s2 = add_self_loops(&s, 3.0);
+        assert_eq!(s2.to_dense()[0][0], 2.0);
+        assert_eq!(s2.nnz(), s.nnz());
+    }
+
+    #[test]
+    fn column_normalize_makes_stochastic() {
+        let m = add_self_loops(&chain3(), 1.0);
+        let cn = column_normalize(&m);
+        for s in column_sums(&cn) {
+            assert!((s - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn hadamard_power_squares() {
+        let m = Csr::from_dense(&[vec![2.0, 0.0], vec![0.0, 3.0]]);
+        let p = hadamard_power(&m, 2.0);
+        assert_eq!(p.to_dense(), vec![vec![4.0, 0.0], vec![0.0, 9.0]]);
+    }
+
+    #[test]
+    fn prune_rows_threshold_and_topk() {
+        let m = Csr::from_dense(&[vec![0.5, 0.1, 0.9, 0.3]]);
+        let p = prune_rows(&m, 0.2, 2);
+        // 0.1 below theta; top-2 of {0.5, 0.9, 0.3} = {0.9, 0.5}
+        assert_eq!(p.to_dense(), vec![vec![0.5, 0.0, 0.9, 0.0]]);
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn prune_columns_is_per_column() {
+        let m = Csr::from_dense(&[vec![0.9, 0.2], vec![0.5, 0.8], vec![0.6, 0.1]]);
+        let p = prune_columns(&m, 0.0, 2);
+        // column 0 keeps 0.9, 0.6; column 1 keeps 0.2 and 0.8? top-2 of {0.2,0.8,0.1} = {0.8,0.2}
+        assert_eq!(p.to_dense(), vec![vec![0.9, 0.2], vec![0.0, 0.8], vec![0.6, 0.0]]);
+    }
+
+    #[test]
+    fn frobenius_diff_handles_pattern_mismatch() {
+        let a = Csr::from_dense(&[vec![1.0, 2.0], vec![0.0, 0.0]]);
+        let b = Csr::from_dense(&[vec![1.0, 0.0], vec![3.0, 0.0]]);
+        let d = frobenius_diff(&a, &b);
+        assert!((d - (4.0f64 + 9.0).sqrt()).abs() < 1e-12);
+        assert_eq!(frobenius_diff(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn gcn_normalize_rows_and_symmetry() {
+        let m = chain3();
+        let g = gcn_normalize(&m);
+        // symmetric input → symmetric normalized output
+        let gt = g.transpose();
+        assert!(g.approx_eq(&gt, 1e-12));
+        // middle node: degree 3 with self-loop
+        assert!((g.to_dense()[1][1] - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn row_mean_normalize_sums_to_one() {
+        let m = chain3();
+        let r = row_mean_normalize(&m);
+        for i in 0..3 {
+            let s: f64 = r.row(i).1.iter().sum();
+            assert!((s - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn spmm_dense_matches_manual() {
+        let a = Csr::from_dense(&[vec![1.0, 2.0], vec![0.0, 3.0]]);
+        let x = vec![1.0, 10.0, 2.0, 20.0]; // 2x2 dense row-major
+        let y = spmm_dense(&a, &x, 2);
+        assert_eq!(y, vec![5.0, 50.0, 6.0, 60.0]);
+    }
+
+    #[test]
+    fn connected_components_of_two_blocks() {
+        let m = Csr::from_dense(&[
+            vec![0.0, 1.0, 0.0, 0.0],
+            vec![1.0, 0.0, 0.0, 0.0],
+            vec![0.0, 0.0, 0.0, 1.0],
+            vec![0.0, 0.0, 1.0, 0.0],
+        ]);
+        let l = connected_components(&m);
+        assert_eq!(l[0], l[1]);
+        assert_eq!(l[2], l[3]);
+        assert_ne!(l[0], l[2]);
+    }
+}

@@ -1,0 +1,93 @@
+//! Per-matrix statistics — the columns of the paper's Table II and
+//! Table III.
+
+use super::csr::Csr;
+
+/// Summary statistics for a sparse matrix / graph adjacency.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatrixStats {
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: usize,
+    pub avg_nnz_row: f64,
+    pub max_nnz_row: usize,
+    /// Fraction of entries that are non-zero, in percent (Table III).
+    pub density_pct: f64,
+}
+
+impl MatrixStats {
+    pub fn of(m: &Csr) -> MatrixStats {
+        let max_nnz_row = (0..m.n_rows).map(|i| m.row_nnz(i)).max().unwrap_or(0);
+        let nnz = m.nnz();
+        MatrixStats {
+            rows: m.n_rows,
+            cols: m.n_cols,
+            nnz,
+            avg_nnz_row: if m.n_rows == 0 { 0.0 } else { nnz as f64 / m.n_rows as f64 },
+            max_nnz_row,
+            density_pct: if m.n_rows == 0 || m.n_cols == 0 {
+                0.0
+            } else {
+                100.0 * nnz as f64 / (m.n_rows as f64 * m.n_cols as f64)
+            },
+        }
+    }
+}
+
+/// Histogram of per-row nnz in logarithmic bins (diagnostics for the
+/// row-grouping phase; bin k covers [2^k, 2^(k+1))).
+pub fn row_nnz_log_histogram(m: &Csr) -> Vec<usize> {
+    let mut bins = vec![0usize; 33];
+    for i in 0..m.n_rows {
+        let nnz = m.row_nnz(i);
+        let bin = if nnz == 0 { 0 } else { (usize::BITS - nnz.leading_zeros()) as usize };
+        bins[bin] += 1;
+    }
+    while bins.len() > 1 && *bins.last().unwrap() == 0 {
+        bins.pop();
+    }
+    bins
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_of_small() {
+        let m = Csr::new(3, 4, vec![0, 2, 2, 5], vec![0, 2, 0, 1, 3], vec![1.0; 5]).unwrap();
+        let s = MatrixStats::of(&m);
+        assert_eq!(s.rows, 3);
+        assert_eq!(s.cols, 4);
+        assert_eq!(s.nnz, 5);
+        assert_eq!(s.max_nnz_row, 3);
+        assert!((s.avg_nnz_row - 5.0 / 3.0).abs() < 1e-12);
+        assert!((s.density_pct - 100.0 * 5.0 / 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_matrix_stats() {
+        let s = MatrixStats::of(&Csr::zeros(0, 0));
+        assert_eq!(s.nnz, 0);
+        assert_eq!(s.avg_nnz_row, 0.0);
+        assert_eq!(s.density_pct, 0.0);
+    }
+
+    #[test]
+    fn log_histogram_bins() {
+        // rows with nnz 0,1,2,3,8
+        let m = Csr::new(
+            5,
+            16,
+            vec![0, 0, 1, 3, 6, 14],
+            vec![0, 0, 1, 0, 1, 2, 0, 1, 2, 3, 4, 5, 6, 7],
+            vec![1.0; 14],
+        )
+        .unwrap();
+        let h = row_nnz_log_histogram(&m);
+        assert_eq!(h[0], 1); // nnz=0
+        assert_eq!(h[1], 1); // nnz=1
+        assert_eq!(h[2], 2); // nnz in [2,4)
+        assert_eq!(h[4], 1); // nnz in [8,16)
+    }
+}

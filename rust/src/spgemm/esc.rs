@@ -1,0 +1,283 @@
+//! ESC (expand–sort–compress) SpGEMM — the "classic baseline" standing
+//! in for cuSPARSE's csrgemm (DESIGN.md §Hardware substitution).
+//!
+//! The defining property vs. the hash engine is *memory traffic*: every
+//! intermediate product is materialized to global memory (expand), the
+//! whole buffer is sorted (multiple full passes), then compressed. That
+//! traffic profile — not constant factors — is why cuSPARSE loses on
+//! skewed workloads, and the simulator charges it faithfully.
+//!
+//! The functional path processes row *tiles* so host memory stays
+//! bounded on huge products; the traced path charges the full global
+//! expand buffer the GPU algorithm would allocate.
+
+use crate::sim::probe::{Kind, NullProbe, Phase, Probe, Region};
+use crate::sparse::Csr;
+use crate::util::{par_chunks, par_map};
+
+/// Rows per functional tile (bounds the live expand buffer).
+const TILE_ROWS: usize = 4096;
+
+/// Simulated thread-block extent in the expand kernel (for block ids).
+const EXPAND_BLOCK_ROWS: usize = 128;
+
+/// Fast parallel ESC SpGEMM.
+pub fn multiply(a: &Csr, b: &Csr) -> Csr {
+    multiply_impl(a, b, &mut NullProbe, false)
+}
+
+/// Instrumented sequential ESC SpGEMM (same output).
+pub fn multiply_traced<P: Probe>(a: &Csr, b: &Csr, probe: &mut P) -> Csr {
+    multiply_impl(a, b, probe, true)
+}
+
+fn multiply_impl<P: Probe>(a: &Csr, b: &Csr, probe: &mut P, traced: bool) -> Csr {
+    assert_eq!(a.n_cols, b.n_rows, "dimension mismatch");
+    let n = a.n_rows;
+    let mut rpt = vec![0usize; n + 1];
+    let mut col: Vec<u32> = Vec::new();
+    let mut val: Vec<f64> = Vec::new();
+    let mut next_block = 0usize;
+
+    let mut tile_entries: Vec<(u32, u32, f64)> = Vec::new();
+    for tile_start in (0..n).step_by(TILE_ROWS) {
+        let tile_end = (tile_start + TILE_ROWS).min(n);
+        tile_entries.clear();
+
+        // ---- expand ----
+        if traced {
+            for (bi, blk_start) in (tile_start..tile_end).step_by(EXPAND_BLOCK_ROWS).enumerate() {
+                let _ = bi;
+                probe.begin_block(next_block, Phase::EscExpand);
+                next_block += 1;
+                let blk_end = (blk_start + EXPAND_BLOCK_ROWS).min(tile_end);
+                for i in blk_start..blk_end {
+                    expand_row_traced(a, b, i, &mut tile_entries, probe);
+                }
+            }
+        } else {
+            // Parallel expand: per-row offsets from IP counts.
+            let ips: Vec<usize> = par_map(tile_end - tile_start, |o| {
+                let i = tile_start + o;
+                a.row(i).0.iter().map(|&c| b.row_nnz(c as usize)).sum()
+            });
+            let mut offsets = vec![0usize; ips.len() + 1];
+            for (i, &c) in ips.iter().enumerate() {
+                offsets[i + 1] = offsets[i] + c;
+            }
+            tile_entries.resize(offsets[ips.len()], (0, 0, 0.0));
+            let ptr = tile_entries.as_mut_ptr() as usize;
+            par_chunks(tile_end - tile_start, |s, e| {
+                let p = ptr as *mut (u32, u32, f64);
+                for o in s..e {
+                    let i = tile_start + o;
+                    let mut w = offsets[o];
+                    let (ac, av) = a.row(i);
+                    for (&k, &x) in ac.iter().zip(av) {
+                        let (bc, bv) = b.row(k as usize);
+                        for (&c, &y) in bc.iter().zip(bv) {
+                            // SAFETY: per-row output ranges are disjoint.
+                            unsafe { *p.add(w) = (i as u32, c, x * y) };
+                            w += 1;
+                        }
+                    }
+                }
+            });
+        }
+
+        // ---- sort ----
+        if traced {
+            // Radix/merge sort on the GPU: ~log passes over the buffer,
+            // each reading and writing every 16-byte entry. Charge 4
+            // passes (typical for 64-bit keys with 16-bit digits).
+            probe.begin_block(next_block, Phase::EscSort);
+            next_block += 1;
+            let len = tile_entries.len();
+            for pass in 0..4 {
+                for e in 0..len {
+                    probe.access(Region::EscExpand, (pass * len + e) % len.max(1), 16, Kind::Read);
+                    probe.access(Region::EscExpand, (pass * len + e) % len.max(1), 16, Kind::Write);
+                    probe.compute(2);
+                }
+            }
+        }
+        tile_entries.sort_unstable_by_key(|&(r, c, _)| ((r as u64) << 32) | c as u64);
+
+        // ---- compress ----
+        if traced {
+            probe.begin_block(next_block, Phase::EscCompress);
+            next_block += 1;
+        }
+        let mut idx = 0usize;
+        while idx < tile_entries.len() {
+            let (r, c, mut v) = tile_entries[idx];
+            if traced {
+                probe.access(Region::EscExpand, idx, 16, Kind::Read);
+            }
+            let mut j = idx + 1;
+            while j < tile_entries.len() && tile_entries[j].0 == r && tile_entries[j].1 == c {
+                if traced {
+                    probe.access(Region::EscExpand, j, 16, Kind::Read);
+                }
+                v += tile_entries[j].2;
+                probe.compute(1);
+                j += 1;
+            }
+            col.push(c);
+            val.push(v);
+            if traced {
+                probe.access(Region::ColC, col.len() - 1, 4, Kind::Write);
+                probe.access(Region::ValC, val.len() - 1, 8, Kind::Write);
+            }
+            rpt[r as usize + 1] += 1;
+            idx = j;
+        }
+    }
+    for i in 0..n {
+        rpt[i + 1] += rpt[i];
+    }
+    Csr::new_unchecked(a.n_rows, b.n_cols, rpt, col, val)
+}
+
+/// Statistics-only traced ESC run: traces every `every`-th expand block
+/// and scales the sort/compress phases to the sampled entry count
+/// (the machine model scales counters back up). No product is built —
+/// use [`multiply`] for the functional result.
+pub fn multiply_traced_stats<P: Probe>(a: &Csr, b: &Csr, probe: &mut P, every: usize) {
+    assert_eq!(a.n_cols, b.n_rows, "dimension mismatch");
+    let every = every.max(1);
+    let mut next_block = 0usize;
+    let mut sampled_entries = 0usize;
+    let mut scratch: Vec<(u32, u32, f64)> = Vec::new();
+    // ---- expand (sampled blocks) ----
+    for blk_start in (0..a.n_rows).step_by(EXPAND_BLOCK_ROWS) {
+        let sampled = next_block % every == 0;
+        if sampled {
+            probe.begin_block(next_block, Phase::EscExpand);
+        }
+        next_block += 1;
+        if !sampled {
+            continue;
+        }
+        let blk_end = (blk_start + EXPAND_BLOCK_ROWS).min(a.n_rows);
+        for i in blk_start..blk_end {
+            expand_row_traced(a, b, i, &mut scratch, probe);
+        }
+        sampled_entries += scratch.len();
+        scratch.clear();
+    }
+    // ---- sort: 4 radix passes, blocked so work spreads across SMs ----
+    const SORT_BLOCK: usize = 8192;
+    for pass in 0..4usize {
+        for blk_start in (0..sampled_entries).step_by(SORT_BLOCK) {
+            probe.begin_block(next_block, Phase::EscSort);
+            next_block += 1;
+            let blk_end = (blk_start + SORT_BLOCK).min(sampled_entries);
+            for e in blk_start..blk_end {
+                // radix scatter: read sequential, write to a
+                // digit-dependent (effectively random) position.
+                probe.access(Region::EscExpand, e, 16, Kind::Read);
+                probe.access(Region::EscExpand, (e.wrapping_mul(2654435761)) % sampled_entries.max(1), 16, Kind::Write);
+                probe.compute(2 + (pass & 1) as u64);
+            }
+        }
+    }
+    // ---- compress: one blocked pass ----
+    for blk_start in (0..sampled_entries).step_by(SORT_BLOCK) {
+        probe.begin_block(next_block, Phase::EscCompress);
+        next_block += 1;
+        let blk_end = (blk_start + SORT_BLOCK).min(sampled_entries);
+        for e in blk_start..blk_end {
+            probe.access(Region::EscExpand, e, 16, Kind::Read);
+            probe.compute(1);
+            // charging every entry an output write is the upper bound the
+            // GPU baseline pays with atomically-bumped output cursors.
+            probe.access(Region::ColC, e, 4, Kind::Write);
+            probe.access(Region::ValC, e, 8, Kind::Write);
+        }
+    }
+}
+
+/// Traced expand of one row: reads A row, performs the same two-level
+/// indirection into B (which the baseline does *without* AIA — it is the
+/// paper's comparison point), and writes every intermediate product to
+/// the global expand buffer.
+fn expand_row_traced<P: Probe>(a: &Csr, b: &Csr, i: usize, out: &mut Vec<(u32, u32, f64)>, probe: &mut P) {
+    probe.access(Region::RptA, i, 4, Kind::Read);
+    probe.access(Region::RptA, i + 1, 4, Kind::Read);
+    let (ac, av) = a.row(i);
+    for (jo, (&k, &x)) in ac.iter().zip(av).enumerate() {
+        probe.access(Region::ColA, a.rpt[i] + jo, 4, Kind::Read);
+        probe.access(Region::ValA, a.rpt[i] + jo, 8, Kind::Read);
+        let (lo, hi) = (b.rpt[k as usize], b.rpt[k as usize + 1]);
+        probe.indirect_range(Region::RptB, k as usize, &[Region::ColB, Region::ValB], lo, hi);
+        let (bc, bv) = b.row(k as usize);
+        for (&c, &y) in bc.iter().zip(bv) {
+            out.push((i as u32, c, x * y));
+            probe.access(Region::EscExpand, out.len() - 1, 16, Kind::Write);
+            probe.compute(1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::probe::CountingProbe;
+    use crate::spgemm::reference::spgemm_reference;
+    use crate::util::{qc, Pcg32};
+
+    fn random_csr(rng: &mut Pcg32, rows: usize, cols: usize, density: f64) -> Csr {
+        let mut coo = crate::sparse::Coo::new(rows, cols);
+        let target = ((rows * cols) as f64 * density) as usize;
+        for _ in 0..target {
+            coo.push(rng.below_usize(rows), rng.below_usize(cols), rng.f64_range(-2.0, 2.0));
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn matches_reference_small() {
+        let a = Csr::from_dense(&[vec![1.0, 2.0], vec![3.0, 0.0]]);
+        let b = Csr::from_dense(&[vec![0.0, 1.0], vec![1.0, 1.0]]);
+        assert!(multiply(&a, &b).approx_eq(&spgemm_reference(&a, &b), 1e-12));
+    }
+
+    #[test]
+    fn traced_equals_fast() {
+        let mut rng = Pcg32::seeded(3);
+        let a = random_csr(&mut rng, 120, 90, 0.05);
+        let b = random_csr(&mut rng, 90, 110, 0.05);
+        let mut probe = CountingProbe::default();
+        assert_eq!(multiply(&a, &b), multiply_traced(&a, &b, &mut probe));
+        // Baseline also goes through the indirection callback (the machine
+        // model decides that baseline runs never get AIA).
+        assert!(probe.indirect_ranges > 0);
+        assert!(probe.accesses > 0);
+    }
+
+    #[test]
+    fn matches_reference_randomized() {
+        qc::check(20, 4096, |g| {
+            let rows = g.dim();
+            let inner = g.dim();
+            let cols = g.dim();
+            let mut rng = Pcg32::seeded(g.rng.next_u64());
+            let a = random_csr(&mut rng, rows, inner, 0.15);
+            let b = random_csr(&mut rng, inner, cols, 0.15);
+            let c = multiply(&a, &b);
+            assert!(c.validate().is_ok());
+            assert!(c.approx_eq(&spgemm_reference(&a, &b), 1e-10));
+        });
+    }
+
+    #[test]
+    fn tiling_boundary_is_seamless() {
+        // More rows than one tile to cross the TILE_ROWS boundary.
+        let mut rng = Pcg32::seeded(8);
+        let n = TILE_ROWS + 500;
+        let a = random_csr(&mut rng, n, 300, 0.004);
+        let b = random_csr(&mut rng, 300, 200, 0.02);
+        assert!(multiply(&a, &b).approx_eq(&spgemm_reference(&a, &b), 1e-10));
+    }
+}

@@ -1,0 +1,523 @@
+//! The hash-based multi-phase SpGEMM engine (paper §III): row-grouping →
+//! allocation (symbolic, Algorithms 2–3) → accumulation (numeric,
+//! Algorithm 5), with PWPR / TBPR thread-assignment per Table I.
+//!
+//! Two entry points share the same row processors:
+//! - [`multiply`] — the fast functional path, parallel across rows with
+//!   [`NullProbe`] (instrumentation compiles away);
+//! - [`multiply_traced`] — deterministic sequential path that emits the
+//!   full memory trace through a [`Probe`], in thread-block program
+//!   order, for the AIA simulator.
+
+use super::grouping::{global_table_size, GroupSpec, Grouping, Strategy, GROUP_SPECS};
+use super::sort::bitonic_sort_by_key;
+use super::table::{HashTable, TableLoc};
+use crate::sim::probe::{Kind, NullProbe, Phase, Probe, Region};
+use crate::spgemm::ip::{intermediate_products, intermediate_products_traced, IP_BLOCK_ROWS};
+use crate::sparse::Csr;
+use crate::util::{par_chunks, parallel::par_dynamic_with};
+
+/// Fast parallel hash SpGEMM.
+pub fn multiply(a: &Csr, b: &Csr) -> Csr {
+    assert_eq!(a.n_cols, b.n_rows, "dimension mismatch");
+    let ip = intermediate_products(a, b);
+    let grouping = Grouping::build(&ip);
+
+    // ---- allocation phase: per-row unique counts -> rpt_C ----
+    let mut row_nnz = vec![0u32; a.n_rows];
+    {
+        let nnz_ptr = row_nnz.as_mut_ptr() as usize;
+        for g in 0..4 {
+            let spec = &GROUP_SPECS[g];
+            let rows = grouping.group_rows(g);
+            match spec.strategy {
+                Strategy::Pwpr => {
+                    // many small rows: static chunks, one table per chunk
+                    par_chunks(rows.len(), |start, end| {
+                        let p = nnz_ptr as *mut u32;
+                        let mut table = HashTable::new(spec.table_size.unwrap(), TableLoc::Shared);
+                        for &row in &rows[start..end] {
+                            table.clear();
+                            let u = alloc_row(a, b, row as usize, &mut table, &mut NullProbe);
+                            unsafe { *p.add(row as usize) = u };
+                        }
+                    });
+                }
+                Strategy::Tbpr => {
+                    // fewer, fatter rows: dynamic scheduling with one
+                    // growable table per worker (no per-row allocation)
+                    let loc = if spec.table_size.is_some() { TableLoc::Shared } else { TableLoc::Global };
+                    let base = spec.table_size.unwrap_or(1024);
+                    par_dynamic_with(
+                        rows.len(),
+                        4,
+                        || HashTable::new(base, loc),
+                        |table, ri| {
+                            let p = nnz_ptr as *mut u32;
+                            let row = rows[ri] as usize;
+                            let size = spec.table_size.unwrap_or_else(|| global_table_size(ip[row]));
+                            table.reset_with_capacity(size);
+                            let u = alloc_row(a, b, row, table, &mut NullProbe);
+                            unsafe { *p.add(row) = u };
+                        },
+                    );
+                }
+            }
+        }
+    }
+    let mut rpt = vec![0usize; a.n_rows + 1];
+    for i in 0..a.n_rows {
+        rpt[i + 1] = rpt[i] + row_nnz[i] as usize;
+    }
+    let nnz_c = rpt[a.n_rows];
+
+    // ---- accumulation phase: values into disjoint output slices ----
+    let mut col = vec![0u32; nnz_c];
+    let mut val = vec![0f64; nnz_c];
+    {
+        let col_ptr = col.as_mut_ptr() as usize;
+        let val_ptr = val.as_mut_ptr() as usize;
+        for g in 0..4 {
+            let spec = &GROUP_SPECS[g];
+            let rows = grouping.group_rows(g);
+            let run_row = |row: usize, table: &mut HashTable, scratch: &mut Vec<(u32, f64)>| {
+                accum_row_fast(a, b, row, table, scratch);
+                // fast path: std sort (identical result to bitonic — keys unique)
+                scratch.sort_unstable_by_key(|e| e.0);
+                let start = rpt[row];
+                let cp = col_ptr as *mut u32;
+                let vp = val_ptr as *mut f64;
+                for (o, &(c, v)) in scratch.iter().enumerate() {
+                    // SAFETY: rows write disjoint [rpt[i], rpt[i+1]) slices.
+                    unsafe {
+                        *cp.add(start + o) = c;
+                        *vp.add(start + o) = v;
+                    }
+                }
+            };
+            match spec.strategy {
+                Strategy::Pwpr => {
+                    par_chunks(rows.len(), |start, end| {
+                        let mut table = HashTable::new(spec.table_size.unwrap(), TableLoc::Shared);
+                        let mut scratch = Vec::new();
+                        for &row in &rows[start..end] {
+                            table.clear();
+                            run_row(row as usize, &mut table, &mut scratch);
+                        }
+                    });
+                }
+                Strategy::Tbpr => {
+                    let loc = if spec.table_size.is_some() { TableLoc::Shared } else { TableLoc::Global };
+                    let base = spec.table_size.unwrap_or(1024);
+                    par_dynamic_with(
+                        rows.len(),
+                        4,
+                        || (HashTable::new(base, loc), Vec::new()),
+                        |(table, scratch), ri| {
+                            let row = rows[ri] as usize;
+                            let size = spec.table_size.unwrap_or_else(|| global_table_size(ip[row]));
+                            table.reset_with_capacity(size);
+                            run_row(row, table, scratch);
+                        },
+                    );
+                }
+            }
+        }
+    }
+    Csr::new_unchecked(a.n_rows, b.n_cols, rpt, col, val)
+}
+
+/// Instrumented sequential hash SpGEMM: identical output to [`multiply`],
+/// plus a full program-order memory trace through `probe`. Blocks are
+/// numbered globally across phases so the machine model's round-robin
+/// SM assignment interleaves groups the way concurrent streams would.
+pub fn multiply_traced<P: Probe>(a: &Csr, b: &Csr, probe: &mut P) -> Csr {
+    assert_eq!(a.n_cols, b.n_rows, "dimension mismatch");
+    // ---- grouping phase ----
+    let ip = intermediate_products_traced(a, b, probe);
+    let grouping = Grouping::build(&ip);
+    let mut next_block = a.n_rows.div_ceil(IP_BLOCK_ROWS);
+
+    // ---- allocation phase ----
+    let mut row_nnz = vec![0u32; a.n_rows];
+    for g in 0..4 {
+        let spec = &GROUP_SPECS[g];
+        let rows = grouping.group_rows(g);
+        let mut table_holder: Option<HashTable> = spec.table_size.map(|s| HashTable::new(s, TableLoc::Shared));
+        for chunk in rows.chunks(spec.rows_per_block()) {
+            probe.begin_block(next_block, Phase::Allocation);
+            next_block += 1;
+            for &row in chunk {
+                let row = row as usize;
+                probe.access(Region::Map, row, 4, Kind::Read);
+                let table = match &mut table_holder {
+                    Some(t) => {
+                        t.clear();
+                        t
+                    }
+                    None => {
+                        table_holder = Some(HashTable::new(global_table_size(ip[row]), TableLoc::Global));
+                        table_holder.as_mut().unwrap()
+                    }
+                };
+                row_nnz[row] = alloc_row(a, b, row, table, probe);
+                if spec.table_size.is_none() {
+                    table_holder = None; // fresh global table per huge row
+                }
+                probe.access(Region::RptC, row + 1, 4, Kind::Write);
+            }
+        }
+    }
+    let mut rpt = vec![0usize; a.n_rows + 1];
+    for i in 0..a.n_rows {
+        rpt[i + 1] = rpt[i] + row_nnz[i] as usize;
+    }
+    let nnz_c = rpt[a.n_rows];
+
+    // ---- accumulation phase ----
+    let mut col = vec![0u32; nnz_c];
+    let mut val = vec![0f64; nnz_c];
+    let mut scratch: Vec<(u32, f64)> = Vec::new();
+    for g in 0..4 {
+        let spec = &GROUP_SPECS[g];
+        let rows = grouping.group_rows(g);
+        let mut table_holder: Option<HashTable> = spec.table_size.map(|s| HashTable::new(s, TableLoc::Shared));
+        for chunk in rows.chunks(spec.rows_per_block()) {
+            probe.begin_block(next_block, Phase::Accumulation);
+            next_block += 1;
+            for &row in chunk {
+                let row = row as usize;
+                probe.access(Region::Map, row, 4, Kind::Read);
+                let table = match &mut table_holder {
+                    Some(t) => {
+                        t.clear();
+                        t
+                    }
+                    None => {
+                        table_holder = Some(HashTable::new(global_table_size(ip[row]), TableLoc::Global));
+                        table_holder.as_mut().unwrap()
+                    }
+                };
+                accum_row(a, b, row, table, &mut scratch, probe);
+                // Column-index sorting: the paper's in-block bitonic network.
+                bitonic_sort_by_key(&mut scratch, probe);
+                probe.access(Region::RptC, row, 4, Kind::Read);
+                let start = rpt[row];
+                for (o, &(c, v)) in scratch.iter().enumerate() {
+                    probe.access(Region::ColC, start + o, 4, Kind::Write);
+                    probe.access(Region::ValC, start + o, 8, Kind::Write);
+                    col[start + o] = c;
+                    val[start + o] = v;
+                }
+                if spec.table_size.is_none() {
+                    table_holder = None;
+                }
+            }
+        }
+    }
+    Csr::new_unchecked(a.n_rows, b.n_cols, rpt, col, val)
+}
+
+/// Statistics-only traced run: emits the memory trace of every
+/// `every`-th thread block and **skips the functional work of the
+/// rest** (their output-row sizes are approximated by their IP upper
+/// bound, which only shifts unsampled output addresses). Use when only
+/// the [`crate::sim::SimReport`] is needed — the fast parallel
+/// [`multiply`] provides the actual product. `every = 1` traces every
+/// block (identical trace to [`multiply_traced`]).
+pub fn multiply_traced_stats<P: Probe>(a: &Csr, b: &Csr, probe: &mut P, every: usize) {
+    assert_eq!(a.n_cols, b.n_rows, "dimension mismatch");
+    let every = every.max(1);
+    // IP for *all* rows (cheap, parallel) — grouping must be exact.
+    let ip = intermediate_products(a, b);
+    // Grouping-phase trace for sampled blocks only.
+    let n_ip_blocks = a.n_rows.div_ceil(IP_BLOCK_ROWS);
+    for blk in 0..n_ip_blocks {
+        if blk % every != 0 {
+            continue;
+        }
+        probe.begin_block(blk, Phase::Grouping);
+        let lo = blk * IP_BLOCK_ROWS;
+        let hi = ((blk + 1) * IP_BLOCK_ROWS).min(a.n_rows);
+        for i in lo..hi {
+            probe.access(Region::RptA, i, 4, Kind::Read);
+            probe.access(Region::RptA, i + 1, 4, Kind::Read);
+            for (jo, &c) in a.row(i).0.iter().enumerate() {
+                probe.access(Region::ColA, a.rpt[i] + jo, 4, Kind::Read);
+                probe.indirect_range(Region::RptB, c as usize, &[], 0, 0);
+                probe.compute(2);
+            }
+            probe.access(Region::IpCount, i, 8, Kind::Write);
+            probe.access(Region::GroupCtr, crate::spgemm::ip::group_index_for_ip(ip[i]), 4, Kind::Atomic);
+            probe.compute(4);
+        }
+    }
+    let grouping = Grouping::build(&ip);
+    let mut next_block = n_ip_blocks;
+
+    // Allocation phase: real hash work on sampled blocks, IP bound for
+    // the rest (address generation only).
+    let mut row_nnz = vec![0u32; a.n_rows];
+    for g in 0..4 {
+        let spec = &GROUP_SPECS[g];
+        let rows = grouping.group_rows(g);
+        let mut table_holder: Option<HashTable> = spec.table_size.map(|s| HashTable::new(s, TableLoc::Shared));
+        for chunk in rows.chunks(spec.rows_per_block()) {
+            let sampled = next_block % every == 0;
+            if sampled {
+                probe.begin_block(next_block, Phase::Allocation);
+            }
+            next_block += 1;
+            for &row in chunk {
+                let row = row as usize;
+                if !sampled {
+                    row_nnz[row] = ip[row].min(b.n_cols as u64) as u32;
+                    continue;
+                }
+                probe.access(Region::Map, row, 4, Kind::Read);
+                let table = match &mut table_holder {
+                    Some(t) => {
+                        t.clear();
+                        t
+                    }
+                    None => {
+                        table_holder = Some(HashTable::new(global_table_size(ip[row]), TableLoc::Global));
+                        table_holder.as_mut().unwrap()
+                    }
+                };
+                row_nnz[row] = alloc_row(a, b, row, table, probe);
+                if spec.table_size.is_none() {
+                    table_holder = None;
+                }
+                probe.access(Region::RptC, row + 1, 4, Kind::Write);
+            }
+        }
+    }
+    let mut rpt = vec![0usize; a.n_rows + 1];
+    for i in 0..a.n_rows {
+        rpt[i + 1] = rpt[i] + row_nnz[i] as usize;
+    }
+
+    // Accumulation phase: sampled blocks only.
+    let mut scratch: Vec<(u32, f64)> = Vec::new();
+    for g in 0..4 {
+        let spec = &GROUP_SPECS[g];
+        let rows = grouping.group_rows(g);
+        let mut table_holder: Option<HashTable> = spec.table_size.map(|s| HashTable::new(s, TableLoc::Shared));
+        for chunk in rows.chunks(spec.rows_per_block()) {
+            let sampled = next_block % every == 0;
+            if sampled {
+                probe.begin_block(next_block, Phase::Accumulation);
+            }
+            next_block += 1;
+            if !sampled {
+                continue;
+            }
+            for &row in chunk {
+                let row = row as usize;
+                probe.access(Region::Map, row, 4, Kind::Read);
+                let table = match &mut table_holder {
+                    Some(t) => {
+                        t.clear();
+                        t
+                    }
+                    None => {
+                        table_holder = Some(HashTable::new(global_table_size(ip[row]), TableLoc::Global));
+                        table_holder.as_mut().unwrap()
+                    }
+                };
+                accum_row(a, b, row, table, &mut scratch, probe);
+                bitonic_sort_by_key(&mut scratch, probe);
+                probe.access(Region::RptC, row, 4, Kind::Read);
+                let start = rpt[row];
+                for (o, &(_c, _v)) in scratch.iter().enumerate() {
+                    probe.access(Region::ColC, start + o, 4, Kind::Write);
+                    probe.access(Region::ValC, start + o, 8, Kind::Write);
+                }
+                if spec.table_size.is_none() {
+                    table_holder = None;
+                }
+            }
+        }
+    }
+}
+
+/// Allocation-phase row processor (Algorithms 2–3 minus the thread
+/// bookkeeping): symbolic hash inserts of every B-column reachable from
+/// row `i` of A. Returns the unique count (= nnz of output row).
+fn alloc_row<P: Probe>(a: &Csr, b: &Csr, i: usize, table: &mut HashTable, probe: &mut P) -> u32 {
+    probe.access(Region::RptA, i, 4, Kind::Read);
+    probe.access(Region::RptA, i + 1, 4, Kind::Read);
+    for j in a.row_range(i) {
+        probe.access(Region::ColA, j, 4, Kind::Read);
+        let colk = a.col[j] as usize;
+        let (lo, hi) = (b.rpt[colk], b.rpt[colk + 1]);
+        // Two-level indirection on B, allocation needs col_B only.
+        probe.indirect_range(Region::RptB, colk, &[Region::ColB], lo, hi);
+        for k in lo..hi {
+            table.insert_symbolic(b.col[k], probe);
+        }
+    }
+    table.unique as u32
+}
+
+/// Accumulation-phase row processor (Algorithm 5): numeric hash inserts
+/// of every intermediate product, then whole-table gather into `scratch`
+/// (unsorted — the caller sorts).
+fn accum_row<P: Probe>(a: &Csr, b: &Csr, i: usize, table: &mut HashTable, scratch: &mut Vec<(u32, f64)>, probe: &mut P) {
+    probe.access(Region::RptA, i, 4, Kind::Read);
+    probe.access(Region::RptA, i + 1, 4, Kind::Read);
+    for j in a.row_range(i) {
+        probe.access(Region::ColA, j, 4, Kind::Read);
+        probe.access(Region::ValA, j, 8, Kind::Read);
+        let colk = a.col[j] as usize;
+        let av = a.val[j];
+        let (lo, hi) = (b.rpt[colk], b.rpt[colk + 1]);
+        // Accumulation streams both col_B and val_B.
+        probe.indirect_range(Region::RptB, colk, &[Region::ColB, Region::ValB], lo, hi);
+        for k in lo..hi {
+            table.insert_numeric(b.col[k], av * b.val[k], probe);
+            probe.compute(1); // the multiply
+        }
+    }
+    table.gather(scratch, probe);
+}
+
+/// Fast-path accumulation row processor: same inserts as [`accum_row`]
+/// but gathers in O(unique) via the occupied list (no probe events).
+fn accum_row_fast(a: &Csr, b: &Csr, i: usize, table: &mut HashTable, scratch: &mut Vec<(u32, f64)>) {
+    for j in a.row_range(i) {
+        let colk = a.col[j] as usize;
+        let av = a.val[j];
+        for k in b.rpt[colk]..b.rpt[colk + 1] {
+            table.insert_numeric(b.col[k], av * b.val[k], &mut NullProbe);
+        }
+    }
+    table.gather_list(scratch);
+}
+
+/// Strategy assigned to a row with the given IP (for tests/diagnostics).
+pub fn strategy_for_ip(ip: u64) -> Strategy {
+    GROUP_SPECS[crate::spgemm::ip::group_index_for_ip(ip)].strategy
+}
+
+/// Expose the spec list for the coordinator's stream scheduler.
+pub fn group_specs() -> &'static [GroupSpec; 4] {
+    &GROUP_SPECS
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::probe::CountingProbe;
+    use crate::spgemm::reference::spgemm_reference;
+    use crate::util::{qc, Pcg32};
+
+    fn random_csr(rng: &mut Pcg32, rows: usize, cols: usize, density: f64) -> Csr {
+        let mut coo = crate::sparse::Coo::new(rows, cols);
+        let target = ((rows * cols) as f64 * density) as usize;
+        for _ in 0..target {
+            coo.push(rng.below_usize(rows), rng.below_usize(cols), rng.f64_range(-2.0, 2.0));
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn matches_reference_small() {
+        let a = Csr::from_dense(&[vec![1.0, 2.0, 0.0], vec![0.0, 0.0, 3.0], vec![1.0, 0.0, 1.0]]);
+        let b = Csr::from_dense(&[vec![0.0, 1.0], vec![1.0, 0.0], vec![2.0, 2.0]]);
+        let c = multiply(&a, &b);
+        let r = spgemm_reference(&a, &b);
+        assert!(c.approx_eq(&r, 1e-12), "{:?} vs {:?}", c.to_dense(), r.to_dense());
+    }
+
+    #[test]
+    fn traced_equals_fast_path() {
+        let mut rng = Pcg32::seeded(77);
+        let a = random_csr(&mut rng, 200, 150, 0.02);
+        let b = random_csr(&mut rng, 150, 180, 0.03);
+        let fast = multiply(&a, &b);
+        let mut probe = CountingProbe::default();
+        let traced = multiply_traced(&a, &b, &mut probe);
+        assert_eq!(fast, traced);
+        assert!(probe.indirect_ranges > 0);
+        assert!(probe.shared > 0);
+    }
+
+    #[test]
+    fn matches_reference_randomized() {
+        qc::check(24, 2024, |g| {
+            let rows = g.dim();
+            let inner = g.dim();
+            let cols = g.dim();
+            let density = 0.02 + g.rng.f64() * 0.2;
+            let a = {
+                let mut rng = Pcg32::seeded(g.rng.next_u64());
+                random_csr(&mut rng, rows, inner, density)
+            };
+            let b = {
+                let mut rng = Pcg32::seeded(g.rng.next_u64());
+                random_csr(&mut rng, inner, cols, density)
+            };
+            let c = multiply(&a, &b);
+            let r = spgemm_reference(&a, &b);
+            assert!(c.validate().is_ok(), "invalid CSR output");
+            assert!(c.approx_eq(&r, 1e-10), "hash engine disagrees with reference");
+        });
+    }
+
+    #[test]
+    fn exercises_all_four_groups() {
+        // Build a matrix whose rows produce IPs in every group: B dense-ish
+        // rows amplify.
+        let mut rng = Pcg32::seeded(5);
+        let n = 600;
+        let mut coo = crate::sparse::Coo::new(n, n);
+        // row 0: 1 nnz (group 0); row 1: 40 nnz (g1); row 2: 300 nnz (g2 via
+        // IP multiplication); rows 3..: heavy hub rows for group 3.
+        for j in 0..1 {
+            coo.push(0, j * 7 % n, 1.0);
+        }
+        for j in 0..40 {
+            coo.push(1, (j * 13) % n, 1.0);
+        }
+        for j in 0..300 {
+            coo.push(2, (j * 2 + 1) % n, 1.0);
+        }
+        for r in 3..40 {
+            for j in 0..r * 20 % n {
+                coo.push(r, (j * 3 + r) % n, 1.0);
+            }
+        }
+        for r in 40..n {
+            for _ in 0..6 {
+                coo.push(r, rng.below_usize(n), 1.0);
+            }
+        }
+        let a = coo.to_csr();
+        let ip = intermediate_products(&a, &a);
+        let grouping = Grouping::build(&ip);
+        let non_empty = (0..4).filter(|&g| !grouping.group_rows(g).is_empty()).count();
+        assert!(non_empty >= 3, "expected ≥3 groups populated, got {non_empty}");
+        let c = multiply(&a, &a);
+        let r = spgemm_reference(&a, &a);
+        assert!(c.approx_eq(&r, 1e-10));
+    }
+
+    #[test]
+    fn empty_and_identity_edge_cases() {
+        let z = Csr::zeros(5, 5);
+        assert_eq!(multiply(&z, &z).nnz(), 0);
+        let i = Csr::identity(64);
+        let mut rng = Pcg32::seeded(9);
+        let m = random_csr(&mut rng, 64, 64, 0.1);
+        assert!(multiply(&i, &m).approx_eq(&m, 1e-12));
+        assert!(multiply(&m, &i).approx_eq(&m, 1e-12));
+    }
+
+    #[test]
+    fn strategy_assignment() {
+        assert_eq!(strategy_for_ip(10), Strategy::Pwpr);
+        assert_eq!(strategy_for_ip(100), Strategy::Tbpr);
+    }
+}

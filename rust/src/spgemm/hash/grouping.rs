@@ -1,0 +1,171 @@
+//! Row-grouping phase (paper §III-B): logarithmic binning of rows by
+//! intermediate-product count into four groups, each with its own thread
+//! assignment strategy, block size, and hash-table size (Table I).
+//!
+//! The matrix is *not* reordered; `Map` holds row ids sorted by group
+//! (stable within a group), exactly the paper's `Map[i]` indirection.
+
+use super::super::ip::group_index_for_ip;
+
+/// Thread-assignment strategy (paper §III-C).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// Partial warp per row: 4 threads per row (group 0).
+    Pwpr,
+    /// Thread block per row (groups 1–3).
+    Tbpr,
+}
+
+/// Per-group GPU resource allocation — Table I of the paper.
+#[derive(Clone, Copy, Debug)]
+pub struct GroupSpec {
+    pub id: usize,
+    pub ip_lo: u64,
+    /// Inclusive upper bound (`u64::MAX` for group 3).
+    pub ip_hi: u64,
+    pub strategy: Strategy,
+    pub block_size: usize,
+    /// Shared-memory hash-table size; `None` = global-memory fallback
+    /// (group 3), sized per row at runtime.
+    pub table_size: Option<usize>,
+}
+
+impl GroupSpec {
+    /// Rows processed by one thread block under this spec.
+    pub fn rows_per_block(&self) -> usize {
+        match self.strategy {
+            Strategy::Pwpr => self.block_size / 4, // 4 threads per row
+            Strategy::Tbpr => 1,
+        }
+    }
+}
+
+/// Table I, verbatim.
+pub const GROUP_SPECS: [GroupSpec; 4] = [
+    GroupSpec { id: 0, ip_lo: 0, ip_hi: 31, strategy: Strategy::Pwpr, block_size: 512, table_size: Some(64) },
+    GroupSpec { id: 1, ip_lo: 32, ip_hi: 511, strategy: Strategy::Tbpr, block_size: 256, table_size: Some(1024) },
+    GroupSpec { id: 2, ip_lo: 512, ip_hi: 8191, strategy: Strategy::Tbpr, block_size: 1024, table_size: Some(8192) },
+    GroupSpec { id: 3, ip_lo: 8192, ip_hi: u64::MAX, strategy: Strategy::Tbpr, block_size: 1024, table_size: None },
+];
+
+/// Output of the row-grouping phase.
+#[derive(Clone, Debug)]
+pub struct Grouping {
+    /// Row ids sorted by group (stable): `map[sorted_idx] = original row`.
+    pub map: Vec<u32>,
+    /// `group_of[row] = group id`.
+    pub group_of: Vec<u8>,
+    /// `ranges[g]` = the slice of `map` belonging to group g.
+    pub ranges: [std::ops::Range<usize>; 4],
+}
+
+impl Grouping {
+    /// Classify rows by IP count (counting sort by group, stable).
+    pub fn build(ip: &[u64]) -> Grouping {
+        let n = ip.len();
+        let mut group_of = vec![0u8; n];
+        let mut counts = [0usize; 4];
+        for (i, &v) in ip.iter().enumerate() {
+            let g = group_index_for_ip(v);
+            group_of[i] = g as u8;
+            counts[g] += 1;
+        }
+        let mut starts = [0usize; 4];
+        for g in 1..4 {
+            starts[g] = starts[g - 1] + counts[g - 1];
+        }
+        let ranges = [
+            starts[0]..starts[0] + counts[0],
+            starts[1]..starts[1] + counts[1],
+            starts[2]..starts[2] + counts[2],
+            starts[3]..starts[3] + counts[3],
+        ];
+        let mut map = vec![0u32; n];
+        let mut next = starts;
+        for (i, &g) in group_of.iter().enumerate() {
+            map[next[g as usize]] = i as u32;
+            next[g as usize] += 1;
+        }
+        Grouping { map, group_of, ranges }
+    }
+
+    pub fn group_rows(&self, g: usize) -> &[u32] {
+        &self.map[self.ranges[g].clone()]
+    }
+
+    /// Number of thread blocks group `g` launches.
+    pub fn blocks_in_group(&self, g: usize) -> usize {
+        let rows = self.ranges[g].len();
+        let per_block = GROUP_SPECS[g].rows_per_block();
+        rows.div_ceil(per_block)
+    }
+}
+
+/// Global-memory table size for a group-3 row: next power of two ≥ 2·IP
+/// (load factor ≤ 0.5 keeps probe chains short on huge rows).
+pub fn global_table_size(ip: u64) -> usize {
+    ((ip.max(1) as usize) * 2).next_power_of_two()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_specs_match_paper() {
+        assert_eq!(GROUP_SPECS[0].block_size, 512);
+        assert_eq!(GROUP_SPECS[0].table_size, Some(64));
+        assert_eq!(GROUP_SPECS[0].strategy, Strategy::Pwpr);
+        assert_eq!(GROUP_SPECS[1].block_size, 256);
+        assert_eq!(GROUP_SPECS[1].table_size, Some(1024));
+        assert_eq!(GROUP_SPECS[2].block_size, 1024);
+        assert_eq!(GROUP_SPECS[2].table_size, Some(8192));
+        assert_eq!(GROUP_SPECS[3].table_size, None);
+        assert!(GROUP_SPECS.iter().skip(1).all(|g| g.strategy == Strategy::Tbpr));
+    }
+
+    #[test]
+    fn table_sizes_cover_group_ip_bounds() {
+        // A shared table must hold every possible unique count in its
+        // group: unique ≤ IP ≤ ip_hi < table_size.
+        for spec in &GROUP_SPECS[..3] {
+            let size = spec.table_size.unwrap() as u64;
+            assert!(spec.ip_hi < size, "group {}: ip_hi {} ≥ table {}", spec.id, spec.ip_hi, size);
+        }
+    }
+
+    #[test]
+    fn grouping_is_stable_partition() {
+        let ip = vec![10, 5000, 40, 0, 9000, 33, 600];
+        let g = Grouping::build(&ip);
+        assert_eq!(g.group_rows(0), &[0, 3]);
+        assert_eq!(g.group_rows(1), &[2, 5]);
+        assert_eq!(g.group_rows(2), &[1, 6]);
+        assert_eq!(g.group_rows(3), &[4]);
+        // map is a permutation
+        let mut sorted = g.map.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..7).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn rows_per_block() {
+        assert_eq!(GROUP_SPECS[0].rows_per_block(), 128); // 512 threads / 4
+        assert_eq!(GROUP_SPECS[1].rows_per_block(), 1);
+    }
+
+    #[test]
+    fn blocks_in_group_rounds_up() {
+        let ip = vec![1u64; 300]; // all group 0, 128 rows per block
+        let g = Grouping::build(&ip);
+        assert_eq!(g.blocks_in_group(0), 3);
+        assert_eq!(g.blocks_in_group(1), 0);
+    }
+
+    #[test]
+    fn global_table_size_is_pow2_and_roomy() {
+        assert_eq!(global_table_size(8192), 16384);
+        assert!(global_table_size(10_000) >= 20_000);
+        assert!(global_table_size(0).is_power_of_two());
+    }
+}

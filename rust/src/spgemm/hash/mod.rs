@@ -1,0 +1,11 @@
+//! Hash-based multi-phase SpGEMM (paper §III): row grouping (Table I),
+//! PWPR/TBPR thread assignment, the Algorithm-4 linear-probing hash
+//! table, and the allocation/accumulation phases.
+
+pub mod engine;
+pub mod grouping;
+pub mod sort;
+pub mod table;
+
+pub use engine::{multiply, multiply_traced};
+pub use grouping::{Grouping, Strategy, GROUP_SPECS};

@@ -1,0 +1,98 @@
+//! Column-index sorting for the accumulation phase's final step.
+//!
+//! The paper uses an in-block bitonic sort over the gathered (col, val)
+//! pairs. We implement the same network so the traced path counts its
+//! real compare/exchange work; the functional fast path uses
+//! `sort_unstable_by_key`, which produces an identical result because
+//! column keys within a row are unique.
+
+use crate::sim::probe::Probe;
+
+/// Bitonic sort by ascending key. Pads physically to a power of two with
+/// +∞ sentinel keys (keys are column indices, always < u32::MAX). Emits
+/// one compute op per compare/exchange through the probe.
+pub fn bitonic_sort_by_key<P: Probe>(data: &mut [(u32, f64)], probe: &mut P) {
+    let n = data.len();
+    if n <= 1 {
+        return;
+    }
+    let m = n.next_power_of_two();
+    let mut buf: Vec<(u32, f64)> = Vec::with_capacity(m);
+    buf.extend_from_slice(data);
+    buf.resize(m, (u32::MAX, 0.0));
+    let mut k = 2;
+    while k <= m {
+        let mut j = k / 2;
+        while j > 0 {
+            for i in 0..m {
+                let l = i ^ j;
+                if l > i {
+                    probe.compute(1);
+                    let ascending = (i & k) == 0;
+                    let out_of_order = if ascending { buf[i].0 > buf[l].0 } else { buf[i].0 < buf[l].0 };
+                    if out_of_order {
+                        buf.swap(i, l);
+                    }
+                }
+            }
+            j /= 2;
+        }
+        k *= 2;
+    }
+    data.copy_from_slice(&buf[..n]);
+    debug_assert!(data.windows(2).all(|w| w[0].0 <= w[1].0));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::probe::{CountingProbe, NullProbe};
+    use crate::util::Pcg32;
+
+    #[test]
+    fn sorts_exact_power_of_two() {
+        let mut d = vec![(3u32, 0.3), (1, 0.1), (4, 0.4), (2, 0.2)];
+        bitonic_sort_by_key(&mut d, &mut NullProbe);
+        assert_eq!(d.iter().map(|e| e.0).collect::<Vec<_>>(), vec![1, 2, 3, 4]);
+        // values travel with their keys
+        assert!((d[0].1 - 0.1).abs() < 1e-15);
+    }
+
+    #[test]
+    fn sorts_non_power_of_two() {
+        for n in [1usize, 2, 3, 5, 7, 13, 100] {
+            let mut rng = Pcg32::seeded(n as u64);
+            let mut keys: Vec<u32> = (0..n as u32).collect();
+            rng.shuffle(&mut keys);
+            let mut d: Vec<(u32, f64)> = keys.iter().map(|&k| (k, k as f64)).collect();
+            bitonic_sort_by_key(&mut d, &mut NullProbe);
+            assert!(d.windows(2).all(|w| w[0].0 < w[1].0), "n={n}: {d:?}");
+            assert!(d.iter().all(|&(k, v)| v == k as f64));
+        }
+    }
+
+    #[test]
+    fn matches_std_sort() {
+        let mut rng = Pcg32::seeded(99);
+        for _ in 0..20 {
+            let n = 1 + rng.below_usize(64);
+            let mut keys: Vec<u32> = (0..(n * 3) as u32).collect();
+            rng.shuffle(&mut keys);
+            keys.truncate(n);
+            let mut a: Vec<(u32, f64)> = keys.iter().map(|&k| (k, (k * 7) as f64)).collect();
+            let mut b = a.clone();
+            bitonic_sort_by_key(&mut a, &mut NullProbe);
+            b.sort_unstable_by_key(|e| e.0);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn counts_compare_ops() {
+        let mut d = vec![(3u32, 0.0), (1, 0.0), (2, 0.0), (0, 0.0)];
+        let mut p = CountingProbe::default();
+        bitonic_sort_by_key(&mut d, &mut p);
+        // n=4 bitonic: 3 stages of 2 compares = 6 (well-defined network size)
+        assert_eq!(p.compute_ops, 6);
+    }
+}

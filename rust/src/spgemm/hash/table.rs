@@ -1,0 +1,302 @@
+//! Algorithm 4 — the linear-probing hash table with multiplicative
+//! hashing used by both the allocation (symbolic) and accumulation
+//! (numeric) phases.
+//!
+//! On the GPU the table lives in shared memory for groups 0–2 and in
+//! global memory for group 3; insertion uses atomicCAS / atomicAdd. Here
+//! each simulated thread block owns its table, so insertion is plain
+//! (the simulator charges atomic latencies through the probe events,
+//! which mirror the access pattern 1:1 — same hash position sequence,
+//! same probe chain length, same gather scan).
+
+use crate::sim::probe::{Kind, Probe, Region};
+
+/// Knuth's multiplicative constant (the paper's "multiplier").
+pub const HASH_MULTIPLIER: u32 = 2_654_435_761;
+
+/// Where the table lives — decides which probe events insertions emit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TableLoc {
+    /// Shared memory (groups 0–2): probe events are bank accesses.
+    Shared,
+    /// Global memory (group 3 fallback): probe events hit the cache
+    /// hierarchy on the HashKeys/HashVals regions.
+    Global,
+}
+
+/// EMPTY sentinel (the paper initializes the table to -1).
+const EMPTY: u32 = u32::MAX;
+
+/// A fixed-capacity linear-probing table for one output row.
+///
+/// Slot emptiness is tracked by a per-slot stamp against the table's
+/// current generation, so `clear()` is O(1) — on a GPU the table memory
+/// is re-initialized per block, but charging an O(capacity) clear per
+/// *row* on the host made the fast path ~2× slower on group-2 rows
+/// (see EXPERIMENTS.md §Perf).
+pub struct HashTable {
+    keys: Vec<u32>,
+    vals: Vec<f64>,
+    stamps: Vec<u32>,
+    stamp: u32,
+    mask: usize,
+    pub unique: usize,
+    loc: TableLoc,
+    /// Slots occupied this generation — lets the *functional* fast path
+    /// gather in O(unique) (`gather_list`). The traced path still uses
+    /// the GPU-faithful full-capacity scan (`gather`).
+    occupied: Vec<u32>,
+}
+
+impl HashTable {
+    /// `size` must be a power of two (Table I sizes are).
+    pub fn new(size: usize, loc: TableLoc) -> HashTable {
+        assert!(size.is_power_of_two(), "table size {size} not a power of two");
+        HashTable {
+            keys: vec![EMPTY; size],
+            vals: vec![0.0; size],
+            stamps: vec![0; size],
+            stamp: 1,
+            mask: size - 1,
+            unique: 0,
+            loc,
+            occupied: Vec::new(),
+        }
+    }
+
+    /// Ensure capacity ≥ `size` (rounded up to a power of two), clearing
+    /// in either case. Reusing one growable table across group-3 rows
+    /// avoids an O(size) allocation + zero-init per row (§Perf).
+    pub fn reset_with_capacity(&mut self, size: usize) {
+        let size = size.next_power_of_two();
+        if size > self.capacity() {
+            self.keys = vec![EMPTY; size];
+            self.vals = vec![0.0; size];
+            self.stamps = vec![0; size];
+            self.stamp = 0;
+            self.mask = size - 1;
+        }
+        self.clear();
+    }
+
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.mask + 1
+    }
+
+    /// Reset for the next row: O(1) generation bump (keeps the
+    /// allocation; full re-init only on stamp wraparound).
+    pub fn clear(&mut self) {
+        self.unique = 0;
+        self.occupied.clear();
+        if self.stamp == u32::MAX {
+            self.stamps.fill(0);
+            self.stamp = 1;
+        } else {
+            self.stamp += 1;
+        }
+    }
+
+    #[inline]
+    fn live(&self, pos: usize) -> bool {
+        self.stamps[pos] == self.stamp
+    }
+
+    #[inline]
+    fn occupy(&mut self, pos: usize, key: u32) {
+        self.stamps[pos] = self.stamp;
+        self.keys[pos] = key;
+        self.vals[pos] = 0.0;
+        self.occupied.push(pos as u32);
+    }
+
+    #[inline]
+    fn hash(&self, key: u32) -> usize {
+        (key.wrapping_mul(HASH_MULTIPLIER) as usize) & self.mask
+    }
+
+    #[inline]
+    fn emit<P: Probe>(&self, probe: &mut P, pos: usize, numeric: bool, kind: Kind) {
+        match self.loc {
+            TableLoc::Shared => probe.shared(pos, kind),
+            TableLoc::Global => {
+                probe.access(Region::HashKeys, pos, 4, kind);
+                if numeric {
+                    probe.access(Region::HashVals, pos, 8, kind);
+                }
+            }
+        }
+    }
+
+    /// Symbolic insert (allocation phase): record the key, return `true`
+    /// if it was new. Panics if the table is full (cannot happen when
+    /// capacity ≥ the group's IP upper bound — see Table I).
+    pub fn insert_symbolic<P: Probe>(&mut self, key: u32, probe: &mut P) -> bool {
+        debug_assert_ne!(key, EMPTY);
+        let mut pos = self.hash(key);
+        probe.compute(2); // multiply + mask
+        loop {
+            self.emit(probe, pos, false, Kind::Read);
+            if self.live(pos) && self.keys[pos] == key {
+                return false;
+            }
+            if !self.live(pos) {
+                // atomicCAS on the GPU.
+                self.emit(probe, pos, false, Kind::Atomic);
+                self.occupy(pos, key);
+                self.unique += 1;
+                return true;
+            }
+            pos = (pos + 1) & self.mask;
+            probe.compute(1);
+            assert_ne!(pos, self.hash(key), "hash table overflow (size {})", self.capacity());
+        }
+    }
+
+    /// Numeric insert (accumulation phase): `Table[pos] += v` under the
+    /// key, creating the slot if needed (AddInTable in Algorithm 4).
+    pub fn insert_numeric<P: Probe>(&mut self, key: u32, v: f64, probe: &mut P) {
+        debug_assert_ne!(key, EMPTY);
+        let mut pos = self.hash(key);
+        probe.compute(2);
+        loop {
+            self.emit(probe, pos, false, Kind::Read);
+            if self.live(pos) && self.keys[pos] == key {
+                // atomicAdd on Tableval.
+                self.emit(probe, pos, true, Kind::Atomic);
+                self.vals[pos] += v;
+                probe.compute(2); // fma
+                return;
+            }
+            if !self.live(pos) {
+                self.emit(probe, pos, false, Kind::Atomic);
+                self.occupy(pos, key);
+                self.unique += 1;
+                self.emit(probe, pos, true, Kind::Atomic);
+                self.vals[pos] += v;
+                probe.compute(2);
+                return;
+            }
+            pos = (pos + 1) & self.mask;
+            probe.compute(1);
+            assert_ne!(pos, self.hash(key), "hash table overflow (size {})", self.capacity());
+        }
+    }
+
+    /// Gather non-empty `(key, val)` slots by scanning the whole table
+    /// (the element-gathering step of the accumulation phase). Emits one
+    /// read per scanned slot.
+    pub fn gather<P: Probe>(&self, out: &mut Vec<(u32, f64)>, probe: &mut P) {
+        out.clear();
+        for pos in 0..=self.mask {
+            self.emit(probe, pos, false, Kind::Read);
+            if self.live(pos) {
+                out.push((self.keys[pos], self.vals[pos]));
+            }
+        }
+        debug_assert_eq!(out.len(), self.unique);
+    }
+
+    /// O(unique) gather for the functional fast path (no probe events —
+    /// the traced path uses [`HashTable::gather`]'s full scan, which is
+    /// what the GPU kernel does).
+    pub fn gather_list(&self, out: &mut Vec<(u32, f64)>) {
+        out.clear();
+        out.extend(self.occupied.iter().map(|&p| (self.keys[p as usize], self.vals[p as usize])));
+        debug_assert_eq!(out.len(), self.unique);
+    }
+
+    /// Gather keys only (allocation phase does not need them in the
+    /// paper, but tests use this to check symbolic/numeric agreement).
+    pub fn keys(&self) -> Vec<u32> {
+        let mut ks: Vec<u32> =
+            (0..=self.mask).filter(|&p| self.live(p)).map(|p| self.keys[p]).collect();
+        ks.sort_unstable();
+        ks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::probe::{CountingProbe, NullProbe};
+
+    #[test]
+    fn symbolic_counts_unique() {
+        let mut t = HashTable::new(64, TableLoc::Shared);
+        let mut p = NullProbe;
+        assert!(t.insert_symbolic(5, &mut p));
+        assert!(!t.insert_symbolic(5, &mut p));
+        assert!(t.insert_symbolic(9, &mut p));
+        assert_eq!(t.unique, 2);
+        assert_eq!(t.keys(), vec![5, 9]);
+    }
+
+    #[test]
+    fn numeric_accumulates() {
+        let mut t = HashTable::new(16, TableLoc::Shared);
+        let mut p = NullProbe;
+        t.insert_numeric(3, 1.5, &mut p);
+        t.insert_numeric(3, 2.5, &mut p);
+        t.insert_numeric(7, -1.0, &mut p);
+        let mut out = Vec::new();
+        t.gather(&mut out, &mut p);
+        out.sort_unstable_by_key(|e| e.0);
+        assert_eq!(out, vec![(3, 4.0), (7, -1.0)]);
+    }
+
+    #[test]
+    fn collisions_resolved_by_linear_probing() {
+        // size 4: many keys collide; all must still be stored
+        let mut t = HashTable::new(4, TableLoc::Shared);
+        let mut p = NullProbe;
+        for k in [0u32, 1, 2, 3] {
+            t.insert_symbolic(k, &mut p);
+        }
+        assert_eq!(t.unique, 4);
+        assert_eq!(t.keys(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "hash table overflow")]
+    fn overflow_panics() {
+        let mut t = HashTable::new(4, TableLoc::Shared);
+        let mut p = NullProbe;
+        for k in 0..5u32 {
+            t.insert_symbolic(k, &mut p);
+        }
+    }
+
+    #[test]
+    fn shared_vs_global_probe_events() {
+        let mut shared = HashTable::new(8, TableLoc::Shared);
+        let mut global = HashTable::new(8, TableLoc::Global);
+        let mut ps = CountingProbe::default();
+        let mut pg = CountingProbe::default();
+        shared.insert_numeric(1, 1.0, &mut ps);
+        global.insert_numeric(1, 1.0, &mut pg);
+        assert!(ps.shared > 0 && ps.accesses == 0);
+        assert!(pg.accesses > 0 && pg.shared == 0);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut t = HashTable::new(8, TableLoc::Shared);
+        let mut p = NullProbe;
+        t.insert_numeric(1, 1.0, &mut p);
+        t.clear();
+        assert_eq!(t.unique, 0);
+        assert!(t.keys().is_empty());
+    }
+
+    #[test]
+    fn gather_scans_full_capacity() {
+        let mut t = HashTable::new(32, TableLoc::Global);
+        let mut p = NullProbe;
+        t.insert_numeric(1, 1.0, &mut p);
+        let mut c = CountingProbe::default();
+        let mut out = Vec::new();
+        t.gather(&mut out, &mut c);
+        assert_eq!(c.accesses, 32); // whole-table scan
+    }
+}

@@ -1,0 +1,134 @@
+//! Algorithm 1 — intermediate-product counting.
+//!
+//! `IP[i] = Σ_{j ∈ row i of A} nnz(B[col_A[j], :])` is the workload
+//! metric the row-grouping phase bins on, and `2·ΣIP` is the FLOP count
+//! the paper's GFLOPS figures use.
+
+use crate::sim::probe::{Kind, Phase, Probe, Region};
+use crate::sparse::Csr;
+use crate::util::par_chunks;
+
+/// Rows per simulated thread block in the grouping/IP kernel.
+pub const IP_BLOCK_ROWS: usize = 256;
+
+/// Fast parallel IP count (no instrumentation).
+pub fn intermediate_products(a: &Csr, b: &Csr) -> Vec<u64> {
+    assert_eq!(a.n_cols, b.n_rows);
+    let mut ip = vec![0u64; a.n_rows];
+    {
+        let ptr = ip.as_mut_ptr() as usize;
+        par_chunks(a.n_rows, |start, end| {
+            let p = ptr as *mut u64;
+            for i in start..end {
+                let (cols, _) = a.row(i);
+                let mut count = 0u64;
+                for &c in cols {
+                    count += b.row_nnz(c as usize) as u64;
+                }
+                // SAFETY: disjoint chunks.
+                unsafe { *p.add(i) = count };
+            }
+        });
+    }
+    ip
+}
+
+/// Instrumented IP count: emits the grouping-phase memory trace
+/// (sequential reads of rpt_A/col_A, the *indirect* rpt_B lookups that
+/// AIA's range-2 gather accelerates, and the atomic group-counter and
+/// IpCount writes).
+pub fn intermediate_products_traced<P: Probe>(a: &Csr, b: &Csr, probe: &mut P) -> Vec<u64> {
+    assert_eq!(a.n_cols, b.n_rows);
+    let mut ip = vec![0u64; a.n_rows];
+    let n_blocks = a.n_rows.div_ceil(IP_BLOCK_ROWS);
+    for blk in 0..n_blocks {
+        probe.begin_block(blk, Phase::Grouping);
+        let lo = blk * IP_BLOCK_ROWS;
+        let hi = ((blk + 1) * IP_BLOCK_ROWS).min(a.n_rows);
+        for i in lo..hi {
+            probe.access(Region::RptA, i, 4, Kind::Read);
+            probe.access(Region::RptA, i + 1, 4, Kind::Read);
+            let (cols, _) = a.row(i);
+            let mut count = 0u64;
+            for (jo, &c) in cols.iter().enumerate() {
+                probe.access(Region::ColA, a.rpt[i] + jo, 4, Kind::Read);
+                // rpt_B[c], rpt_B[c+1]: the two-level indirection, bounds
+                // only (AIA ranged index with R = 2 over rpt_B).
+                probe.indirect_range(Region::RptB, c as usize, &[], 0, 0);
+                count += b.row_nnz(c as usize) as u64;
+                probe.compute(2);
+            }
+            ip[i] = count;
+            probe.access(Region::IpCount, i, 8, Kind::Write);
+            // Group classification uses an atomic counter per group
+            // (the paper reports >10 % of time here due to atomics).
+            probe.access(Region::GroupCtr, group_index_for_ip(count), 4, Kind::Atomic);
+            probe.compute(4);
+        }
+    }
+    ip
+}
+
+/// Logarithmic binning of an IP value into the paper's four groups
+/// (Table I ranges).
+#[inline]
+pub fn group_index_for_ip(ip: u64) -> usize {
+    match ip {
+        0..=31 => 0,
+        32..=511 => 1,
+        512..=8191 => 2,
+        _ => 3,
+    }
+}
+
+/// Total intermediate products (the paper's FLOP basis: FLOPs = 2·total).
+pub fn total_ip(a: &Csr, b: &Csr) -> u64 {
+    intermediate_products(a, b).iter().sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::probe::CountingProbe;
+    use crate::sparse::Csr;
+
+    fn small() -> (Csr, Csr) {
+        let a = Csr::from_dense(&[vec![1.0, 1.0, 0.0], vec![0.0, 0.0, 1.0], vec![0.0, 0.0, 0.0]]);
+        let b = Csr::from_dense(&[vec![1.0, 1.0, 1.0], vec![1.0, 0.0, 0.0], vec![0.0, 1.0, 1.0]]);
+        (a, b)
+    }
+
+    #[test]
+    fn counts_match_definition() {
+        let (a, b) = small();
+        // row 0 of A hits B rows 0 (3 nnz) and 1 (1 nnz) → 4
+        // row 1 hits B row 2 (2 nnz) → 2 ; row 2 empty → 0
+        assert_eq!(intermediate_products(&a, &b), vec![4, 2, 0]);
+        assert_eq!(total_ip(&a, &b), 6);
+    }
+
+    #[test]
+    fn traced_matches_fast_path() {
+        let (a, b) = small();
+        let mut probe = CountingProbe::default();
+        let traced = intermediate_products_traced(&a, &b, &mut probe);
+        assert_eq!(traced, intermediate_products(&a, &b));
+        // one indirect range per nnz(A)
+        assert_eq!(probe.indirect_ranges, a.nnz() as u64);
+        // one atomic per row
+        assert_eq!(probe.atomic, a.n_rows as u64);
+        assert!(probe.blocks >= 1);
+    }
+
+    #[test]
+    fn group_bins_match_table1() {
+        assert_eq!(group_index_for_ip(0), 0);
+        assert_eq!(group_index_for_ip(31), 0);
+        assert_eq!(group_index_for_ip(32), 1);
+        assert_eq!(group_index_for_ip(511), 1);
+        assert_eq!(group_index_for_ip(512), 2);
+        assert_eq!(group_index_for_ip(8191), 2);
+        assert_eq!(group_index_for_ip(8192), 3);
+        assert_eq!(group_index_for_ip(u64::MAX), 3);
+    }
+}

@@ -1,0 +1,93 @@
+//! Reference SpGEMM: sequential Gustavson row-wise product with a dense
+//! accumulator (SPA). Slow but obviously correct — the oracle every
+//! other engine is tested against.
+
+use crate::sparse::Csr;
+
+/// `C = A · B` with a dense sparse-accumulator per row.
+pub fn spgemm_reference(a: &Csr, b: &Csr) -> Csr {
+    assert_eq!(a.n_cols, b.n_rows, "dimension mismatch: {}x{} · {}x{}", a.n_rows, a.n_cols, b.n_rows, b.n_cols);
+    let n_cols = b.n_cols;
+    let mut acc: Vec<f64> = vec![0.0; n_cols];
+    let mut touched: Vec<u32> = Vec::new();
+
+    let mut rpt = Vec::with_capacity(a.n_rows + 1);
+    rpt.push(0usize);
+    let mut col: Vec<u32> = Vec::new();
+    let mut val: Vec<f64> = Vec::new();
+
+    for i in 0..a.n_rows {
+        touched.clear();
+        let (a_cols, a_vals) = a.row(i);
+        for (&k, &av) in a_cols.iter().zip(a_vals) {
+            let (b_cols, b_vals) = b.row(k as usize);
+            for (&c, &bv) in b_cols.iter().zip(b_vals) {
+                if acc[c as usize] == 0.0 && !touched.contains(&c) {
+                    touched.push(c);
+                }
+                acc[c as usize] += av * bv;
+            }
+        }
+        touched.sort_unstable();
+        for &c in &touched {
+            // Keep numeric zeros that arose from cancellation out of the
+            // pattern? The paper's hash kernels keep every structurally
+            // produced column, so we keep them too (standard SpGEMM
+            // semantics: structural, not numeric, sparsity).
+            col.push(c);
+            val.push(acc[c as usize]);
+            acc[c as usize] = 0.0;
+        }
+        rpt.push(col.len());
+    }
+    Csr::new_unchecked(a.n_rows, b.n_cols, rpt, col, val)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Csr;
+
+    #[test]
+    fn matches_dense_multiply() {
+        let a = Csr::from_dense(&[vec![1.0, 2.0, 0.0], vec![0.0, 0.0, 3.0]]);
+        let b = Csr::from_dense(&[vec![1.0, 0.0], vec![0.0, 1.0], vec![2.0, 2.0]]);
+        let c = spgemm_reference(&a, &b);
+        assert_eq!(c.to_dense(), vec![vec![1.0, 2.0], vec![6.0, 6.0]]);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let a = Csr::from_dense(&[vec![1.5, 0.0], vec![0.0, -2.0]]);
+        let i = Csr::identity(2);
+        assert!(spgemm_reference(&a, &i).approx_eq(&a, 1e-15));
+        assert!(spgemm_reference(&i, &a).approx_eq(&a, 1e-15));
+    }
+
+    #[test]
+    fn keeps_structural_zeros_from_cancellation() {
+        // a row producing +1 and -1 on the same output column
+        let a = Csr::from_dense(&[vec![1.0, 1.0]]);
+        let b = Csr::from_dense(&[vec![1.0], vec![-1.0]]);
+        let c = spgemm_reference(&a, &b);
+        assert_eq!(c.nnz(), 1);
+        assert_eq!(c.val[0], 0.0);
+    }
+
+    #[test]
+    fn empty_rows_and_cols() {
+        let a = Csr::zeros(3, 4);
+        let b = Csr::zeros(4, 2);
+        let c = spgemm_reference(&a, &b);
+        assert_eq!(c.nnz(), 0);
+        assert_eq!((c.n_rows, c.n_cols), (3, 2));
+    }
+
+    #[test]
+    #[should_panic(expected = "dimension mismatch")]
+    fn rejects_dimension_mismatch() {
+        let a = Csr::zeros(2, 3);
+        let b = Csr::zeros(4, 2);
+        spgemm_reference(&a, &b);
+    }
+}

@@ -1,0 +1,211 @@
+//! In-tree micro-benchmark harness (offline build has no `criterion`).
+//!
+//! `cargo bench` targets are `harness = false` binaries that call into
+//! this module. It follows criterion's basic discipline — warmup,
+//! fixed-duration sampling, mean/stddev/median over per-iteration times —
+//! and prints one line per benchmark plus an optional machine-readable
+//! JSON dump under `target/bench-results/`.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// Re-export so bench binaries can write `bench::bb(...)`.
+pub fn bb<T>(x: T) -> T {
+    black_box(x)
+}
+
+/// One benchmark's collected statistics (all times in seconds).
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub mean: f64,
+    pub stddev: f64,
+    pub median: f64,
+    pub min: f64,
+    pub max: f64,
+    pub iters: u64,
+}
+
+impl Stats {
+    pub fn throughput_line(&self, items: f64, unit: &str) -> String {
+        format!(
+            "{:<44} {:>12} mean {:>10}/iter  ({:.2} {}/s)",
+            self.name,
+            fmt_time(self.mean),
+            fmt_time(self.median),
+            items / self.mean,
+            unit
+        )
+    }
+}
+
+pub fn fmt_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Benchmark runner with a fixed measurement budget per benchmark.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub max_iters: u64,
+    results: Vec<Stats>,
+    group: String,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            max_iters: 10_000,
+            results: Vec::new(),
+            group: String::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        // Quick mode for CI / smoke runs.
+        if std::env::var("BENCH_QUICK").is_ok() {
+            Bencher {
+                warmup: Duration::from_millis(50),
+                measure: Duration::from_millis(300),
+                max_iters: 200,
+                ..Default::default()
+            }
+        } else {
+            Default::default()
+        }
+    }
+
+    pub fn group(&mut self, name: &str) {
+        self.group = name.to_string();
+        println!("\n== {name} ==");
+    }
+
+    /// Run `f` repeatedly, timing each call.
+    pub fn bench<F, R>(&mut self, name: &str, mut f: F) -> Stats
+    where
+        F: FnMut() -> R,
+    {
+        let full = if self.group.is_empty() {
+            name.to_string()
+        } else {
+            format!("{}/{}", self.group, name)
+        };
+        // Warmup.
+        let start = Instant::now();
+        let mut warm_iters = 0u64;
+        while start.elapsed() < self.warmup && warm_iters < self.max_iters {
+            black_box(f());
+            warm_iters += 1;
+        }
+        // Measure.
+        let mut times: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.measure && (times.len() as u64) < self.max_iters {
+            let t0 = Instant::now();
+            black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        if times.is_empty() {
+            let t0 = Instant::now();
+            black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        let stats = summarize(&full, &times);
+        println!(
+            "{:<44} mean {:>10}  median {:>10}  ±{:>9}  ({} iters)",
+            stats.name,
+            fmt_time(stats.mean),
+            fmt_time(stats.median),
+            fmt_time(stats.stddev),
+            stats.iters
+        );
+        self.results.push(stats.clone());
+        stats
+    }
+
+    /// Write results JSON to `target/bench-results/<file>.json`.
+    pub fn finish(&self, file: &str) {
+        use crate::util::json::Json;
+        let mut arr = Json::Arr(vec![]);
+        for s in &self.results {
+            let mut o = Json::obj();
+            o.set("name", s.name.as_str().into());
+            o.set("mean_s", s.mean.into());
+            o.set("median_s", s.median.into());
+            o.set("stddev_s", s.stddev.into());
+            o.set("min_s", s.min.into());
+            o.set("max_s", s.max.into());
+            o.set("iters", (s.iters as i64).into());
+            arr.push(o);
+        }
+        let dir = std::path::Path::new("target/bench-results");
+        let _ = std::fs::create_dir_all(dir);
+        let path = dir.join(format!("{file}.json"));
+        if std::fs::write(&path, arr.render_pretty()).is_ok() {
+            println!("\nwrote {}", path.display());
+        }
+    }
+}
+
+fn summarize(name: &str, times: &[f64]) -> Stats {
+    let n = times.len() as f64;
+    let mean = times.iter().sum::<f64>() / n;
+    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / n;
+    let mut sorted = times.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    Stats {
+        name: name.to_string(),
+        mean,
+        stddev: var.sqrt(),
+        median: sorted[sorted.len() / 2],
+        min: sorted[0],
+        max: *sorted.last().unwrap(),
+        iters: times.len() as u64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summarize_basic() {
+        let s = summarize("t", &[1.0, 2.0, 3.0]);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.iters, 3);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert_eq!(fmt_time(2.5), "2.500 s");
+        assert_eq!(fmt_time(2.5e-3), "2.500 ms");
+        assert_eq!(fmt_time(2.5e-6), "2.500 µs");
+        assert_eq!(fmt_time(2.5e-9), "2.5 ns");
+    }
+
+    #[test]
+    fn bench_runs_and_records() {
+        std::env::set_var("BENCH_QUICK", "1");
+        let mut b = Bencher::new();
+        b.measure = Duration::from_millis(20);
+        b.warmup = Duration::from_millis(5);
+        let s = b.bench("noop", || 1 + 1);
+        assert!(s.iters >= 1);
+        assert_eq!(b.results.len(), 1);
+    }
+}

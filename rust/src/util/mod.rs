@@ -1,0 +1,14 @@
+//! Cross-cutting utilities: deterministic RNG, std-only data parallelism,
+//! JSON emission, micro-bench harness, and property-testing support.
+//!
+//! These exist in-tree because the build environment is offline and only
+//! the `xla` crate closure is vendored (see Cargo.toml).
+
+pub mod bench;
+pub mod json;
+pub mod parallel;
+pub mod qc;
+pub mod rng;
+
+pub use parallel::{num_threads, par_chunks, par_dynamic, par_map};
+pub use rng::Pcg32;

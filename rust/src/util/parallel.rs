@@ -1,0 +1,193 @@
+//! Minimal data-parallel helpers on `std::thread::scope`.
+//!
+//! The offline build has no `rayon`; the hot functional paths (hash
+//! SpGEMM, generators, GNN aggregation) use these chunked scoped-thread
+//! helpers instead. Work is split into contiguous index chunks, one per
+//! worker, which matches the row-partitioned structure of every parallel
+//! loop in this crate.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use: `SPGEMM_AIA_THREADS` env override,
+/// otherwise available parallelism, clamped to [1, 64].
+pub fn num_threads() -> usize {
+    if let Ok(s) = std::env::var("SPGEMM_AIA_THREADS") {
+        if let Ok(n) = s.parse::<usize>() {
+            return n.clamp(1, 64);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).clamp(1, 64)
+}
+
+/// Run `f(start, end)` over disjoint contiguous chunks of `[0, n)` in
+/// parallel. `f` must be `Sync` (it is shared by reference across workers).
+pub fn par_chunks<F>(n: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let workers = num_threads().min(n.max(1));
+    if workers <= 1 || n < 1024 {
+        f(0, n);
+        return;
+    }
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|s| {
+        for w in 0..workers {
+            let f = &f;
+            let start = w * chunk;
+            let end = ((w + 1) * chunk).min(n);
+            if start >= end {
+                continue;
+            }
+            s.spawn(move || f(start, end));
+        }
+    });
+}
+
+/// Parallel map over `[0, n)` producing a `Vec<T>`; each worker fills a
+/// disjoint slice. Order is preserved.
+pub fn par_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    {
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        let out_ref = &out_ptr;
+        par_chunks(n, move |start, end| {
+            let p = *out_ref; // copy the Send wrapper out of the shared ref
+            for i in start..end {
+                // SAFETY: chunks are disjoint, so each index is written by
+                // exactly one worker, and `out` outlives the scope.
+                unsafe { *p.0.add(i) = f(i) };
+            }
+        });
+    }
+    out
+}
+
+/// Work-stealing-ish dynamic scheduling for irregular per-item cost:
+/// workers grab batches of `batch` indices from a shared atomic counter.
+pub fn par_dynamic<F>(n: usize, batch: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let workers = num_threads().min(n.max(1));
+    if workers <= 1 || n < 256 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            let f = &f;
+            let next = &next;
+            s.spawn(move || loop {
+                let start = next.fetch_add(batch, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + batch).min(n);
+                for i in start..end {
+                    f(i);
+                }
+            });
+        }
+    });
+}
+
+/// Like [`par_dynamic`], but each worker owns a state value created by
+/// `init` — used for reusable scratch (e.g. growable hash tables) that
+/// would otherwise be reallocated per item.
+pub fn par_dynamic_with<S, I, F>(n: usize, batch: usize, init: I, f: F)
+where
+    S: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) + Sync,
+{
+    let workers = num_threads().min(n.max(1));
+    if workers <= 1 || n < 64 {
+        let mut s = init();
+        for i in 0..n {
+            f(&mut s, i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let f = &f;
+            let init = &init;
+            let next = &next;
+            scope.spawn(move || {
+                let mut state = init();
+                loop {
+                    let start = next.fetch_add(batch, Ordering::Relaxed);
+                    if start >= n {
+                        break;
+                    }
+                    let end = (start + batch).min(n);
+                    for i in start..end {
+                        f(&mut state, i);
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// `*mut T` wrapper that is `Send`+`Copy` so workers can write disjoint
+/// regions of one buffer.
+struct SendPtr<T>(*mut T);
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn par_chunks_covers_all_indices_once() {
+        let n = 10_000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        par_chunks(n, |s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let v = par_map(5000, |i| i * 3);
+        assert!(v.iter().enumerate().all(|(i, &x)| x == i * 3));
+    }
+
+    #[test]
+    fn par_dynamic_covers_all() {
+        let n = 5000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        par_dynamic(n, 64, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn small_n_runs_inline() {
+        // Exercise the sequential fallback path.
+        let v = par_map(10, |i| i + 1);
+        assert_eq!(v, (1..=10).collect::<Vec<_>>());
+    }
+}

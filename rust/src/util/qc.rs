@@ -1,0 +1,102 @@
+//! Minimal property-testing support (offline build has no `proptest`).
+//!
+//! `check(cases, f)` runs `f` against `cases` independently seeded
+//! generator states; on failure it retries with smaller size parameters
+//! (a crude shrink) and reports the failing seed so the case is
+//! reproducible with `QC_SEED=<seed>`.
+
+use super::rng::Pcg32;
+
+/// Configuration threaded into each property case.
+pub struct Gen {
+    pub rng: Pcg32,
+    /// Size hint: generators should scale structure size with this.
+    pub size: usize,
+}
+
+impl Gen {
+    /// Random dimension in `[1, size]`.
+    pub fn dim(&mut self) -> usize {
+        1 + self.rng.below_usize(self.size)
+    }
+}
+
+/// Run `prop` for `cases` randomized cases. The property panics (via
+/// `assert!`) on violation. A failing seed is re-run at smaller sizes to
+/// find a smaller counterexample before the final panic.
+pub fn check<F>(cases: usize, base_seed: u64, prop: F)
+where
+    F: Fn(&mut Gen) + std::panic::RefUnwindSafe,
+{
+    // Env override to replay one exact case.
+    if let Ok(s) = std::env::var("QC_SEED") {
+        let seed: u64 = s.parse().expect("QC_SEED must be u64");
+        let mut g = Gen { rng: Pcg32::seeded(seed), size: 64 };
+        prop(&mut g);
+        return;
+    }
+    for case in 0..cases {
+        let seed = base_seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(case as u64);
+        let size = 8 + (case * 8) % 120; // ramp sizes like proptest does
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen { rng: Pcg32::seeded(seed), size };
+            prop(&mut g);
+        });
+        if let Err(err) = result {
+            // Shrink: retry the same seed at smaller sizes; report smallest
+            // size that still fails.
+            let mut smallest = size;
+            for s in (1..size).rev() {
+                let r = std::panic::catch_unwind(|| {
+                    let mut g = Gen { rng: Pcg32::seeded(seed), size: s };
+                    prop(&mut g);
+                });
+                if r.is_err() {
+                    smallest = s;
+                } else {
+                    break;
+                }
+            }
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property failed (case {case}, seed {seed}, size {size}, min failing size {smallest}).\n\
+                 Replay with QC_SEED={seed}.\nOriginal failure: {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check(16, 1, |g| {
+            let n = g.dim();
+            assert!(n >= 1);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_seed() {
+        // Silence the expected panic's backtrace noise.
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let r = std::panic::catch_unwind(|| {
+            check(8, 2, |g| {
+                let n = g.dim();
+                assert!(n < 3, "dim too big: {n}");
+            });
+        });
+        std::panic::set_hook(prev);
+        if let Err(e) = r {
+            std::panic::resume_unwind(e);
+        }
+    }
+}

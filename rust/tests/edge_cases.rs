@@ -1,0 +1,129 @@
+//! Edge-case and failure-injection tests across the public API.
+
+use spgemm_aia::sparse::{io, Coo, Csr};
+use spgemm_aia::spgemm::{esc, hash, ip, reference::spgemm_reference};
+use std::io::Cursor;
+
+#[test]
+fn zero_dimension_products() {
+    // 0xK · KxN and Mx0 · 0xN
+    let a = Csr::zeros(0, 5);
+    let b = Csr::zeros(5, 3);
+    assert_eq!(hash::multiply(&a, &b).n_rows, 0);
+    let a = Csr::zeros(4, 0);
+    let b = Csr::zeros(0, 3);
+    let c = hash::multiply(&a, &b);
+    assert_eq!((c.n_rows, c.n_cols, c.nnz()), (4, 3, 0));
+    assert_eq!(esc::multiply(&a, &b).nnz(), 0);
+}
+
+#[test]
+fn single_element_matrices() {
+    let a = Csr::from_dense(&[vec![2.0]]);
+    let c = hash::multiply(&a, &a);
+    assert_eq!(c.to_dense(), vec![vec![4.0]]);
+    assert_eq!(ip::total_ip(&a, &a), 1);
+}
+
+#[test]
+fn dense_row_times_dense_column_pattern() {
+    // one full row × matrix with one full column — max collision pressure
+    let n = 500;
+    let mut coo_a = Coo::new(n, n);
+    for j in 0..n {
+        coo_a.push(0, j, 1.0);
+    }
+    let mut coo_b = Coo::new(n, n);
+    for i in 0..n {
+        coo_b.push(i, 0, 1.0);
+        coo_b.push(i, (i * 7 + 1) % n, 0.5);
+    }
+    let a = coo_a.to_csr();
+    let b = coo_b.to_csr();
+    let c = hash::multiply(&a, &b);
+    assert!(c.approx_eq(&spgemm_reference(&a, &b), 1e-10));
+    // row 0 of C sums B's full column 0 (plus one aliased 0.5 extra)
+    assert!(c.to_dense()[0][0] >= n as f64 - 1e-9);
+}
+
+#[test]
+fn extreme_skew_one_hub_row() {
+    // hub row with IP >> 8192 forces the group-3 global-table path
+    let n = 3000;
+    let mut coo = Coo::new(n, n);
+    for j in 0..n {
+        coo.push(0, j, 1.0); // hub row: IP = nnz(B) > 8192
+        coo.push(j, (j + 1) % n, 1.0);
+        coo.push(j, (j * 13 + 5) % n, 1.0);
+    }
+    let a = coo.to_csr();
+    let ips = ip::intermediate_products(&a, &a);
+    assert!(ips[0] >= 8192, "hub IP {} must land in group 3", ips[0]);
+    let c = hash::multiply(&a, &a);
+    assert!(c.approx_eq(&spgemm_reference(&a, &a), 1e-10));
+}
+
+#[test]
+fn matrix_market_failure_injection() {
+    // entry out of declared bounds
+    let bad = "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n";
+    assert!(io::read_matrix_market_from(Cursor::new(bad)).is_err());
+    // non-numeric value
+    let bad = "%%MatrixMarket matrix coordinate real general\n1 1 1\n1 1 xyz\n";
+    assert!(io::read_matrix_market_from(Cursor::new(bad)).is_err());
+    // truncated size line
+    let bad = "%%MatrixMarket matrix coordinate real general\n2 2\n";
+    assert!(io::read_matrix_market_from(Cursor::new(bad)).is_err());
+    // empty file
+    assert!(io::read_matrix_market_from(Cursor::new("")).is_err());
+}
+
+#[test]
+fn runtime_missing_artifact_is_actionable() {
+    let dir = std::env::temp_dir().join("spgemm_aia_missing_artifacts");
+    let _ = std::fs::create_dir_all(&dir);
+    let mut rt = spgemm_aia::runtime::Runtime::new(&dir).expect("client");
+    let err = rt
+        .call("layer_fwd", 8192, &[spgemm_aia::runtime::Tensor::zeros(vec![1])])
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "error should point at the fix: {msg}");
+}
+
+#[test]
+fn mcl_trivial_graphs() {
+    use spgemm_aia::apps::{mcl, MclParams};
+    use spgemm_aia::coordinator::executor::{SpgemmExecutor, Variant};
+    // single node
+    let g = Csr::from_dense(&[vec![0.0]]);
+    let mut ex = SpgemmExecutor::fast(Variant::Hash);
+    let r = mcl(&g, &MclParams::default(), &mut ex);
+    assert_eq!(r.n_clusters, 1);
+    // two isolated nodes
+    let g = Csr::zeros(2, 2);
+    let mut ex = SpgemmExecutor::fast(Variant::Hash);
+    let r = mcl(&g, &MclParams::default(), &mut ex);
+    assert_eq!(r.n_clusters, 2);
+}
+
+#[test]
+fn contraction_to_single_supernode() {
+    use spgemm_aia::apps::contract;
+    use spgemm_aia::coordinator::executor::{SpgemmExecutor, Variant};
+    let g = Csr::from_dense(&[vec![0.0, 1.0], vec![1.0, 0.0]]);
+    let mut ex = SpgemmExecutor::fast(Variant::Hash);
+    let r = contract(&g, &[0, 0], &mut ex);
+    assert_eq!(r.contracted.n_rows, 1);
+    assert_eq!(r.contracted.to_dense(), vec![vec![2.0]]);
+}
+
+#[test]
+fn cancellation_is_structural_in_all_engines() {
+    // +1 and -1 products on the same output cell stay as explicit zeros
+    let a = Csr::from_dense(&[vec![1.0, 1.0]]);
+    let b = Csr::from_dense(&[vec![1.0], vec![-1.0]]);
+    for c in [hash::multiply(&a, &b), esc::multiply(&a, &b), spgemm_reference(&a, &b)] {
+        assert_eq!(c.nnz(), 1, "structural semantics");
+        assert_eq!(c.val[0], 0.0);
+    }
+}

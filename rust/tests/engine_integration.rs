@@ -1,0 +1,144 @@
+//! Integration tests across the sparse substrate, SpGEMM engines, the
+//! simulator, and the applications — on registry-scale inputs.
+
+use spgemm_aia::apps::{contract, mcl, random_labels, MclParams};
+use spgemm_aia::coordinator::executor::{SpgemmExecutor, Variant};
+use spgemm_aia::gen::{self, rmat, RmatParams};
+use spgemm_aia::sim::{simulate_spgemm, simulate_spgemm_full, AiaMode, SimConfig};
+use spgemm_aia::spgemm::{esc, hash, ip, reference::spgemm_reference, Algo};
+use spgemm_aia::util::{qc, Pcg32};
+
+#[test]
+fn engines_agree_on_registry_dataset() {
+    // p2p-Gnutella04 analogue is full-scale and quick.
+    let ds = gen::table2_by_name("p2p-Gnutella04").unwrap();
+    let a = (ds.gen)(1);
+    let h = hash::multiply(&a, &a);
+    let e = esc::multiply(&a, &a);
+    assert_eq!(h.rpt, e.rpt);
+    assert_eq!(h.col, e.col);
+    assert!(h.approx_eq(&e, 1e-9));
+    assert!(h.validate().is_ok());
+}
+
+#[test]
+fn every_table2_generator_is_deterministic_and_valid() {
+    for ds in gen::table2_datasets() {
+        let a = (ds.gen)(7);
+        let b = (ds.gen)(7);
+        assert_eq!(a, b, "{} not deterministic", ds.paper.name);
+        assert!(a.validate().is_ok(), "{} invalid", ds.paper.name);
+        assert!(a.nnz() > 0);
+    }
+}
+
+#[test]
+fn stats_trace_matches_full_trace_counters() {
+    // The stats-only path at every=1 must count the same accesses as the
+    // full traced path.
+    let mut rng = Pcg32::seeded(5);
+    let a = rmat(800, 8000, RmatParams::web(), &mut rng);
+    let cfg = SimConfig { sample: Some(1), ..SimConfig::new(AiaMode::Off) };
+    let (_, full) = simulate_spgemm_full(Algo::Hash, &a, &a, &cfg);
+    let stats = spgemm_aia::sim::simulate_stats(Algo::Hash, &a, &a, &cfg);
+    for (pf, ps) in full.phases.iter().zip(&stats.phases) {
+        assert_eq!(pf.phase, ps.phase);
+        assert_eq!(pf.accesses, ps.accesses, "access count mismatch in {:?}", pf.phase);
+        assert!((pf.l1_hit_ratio - ps.l1_hit_ratio).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn simulated_executor_product_is_exact_across_variants() {
+    let mut rng = Pcg32::seeded(6);
+    let a = rmat(1500, 15_000, RmatParams::citation(), &mut rng);
+    let oracle = spgemm_reference(&a, &a);
+    for v in Variant::all() {
+        let mut ex = SpgemmExecutor::simulated(v);
+        let c = ex.multiply(&a, &a);
+        assert!(c.approx_eq(&oracle, 1e-9), "variant {} wrong", v.name());
+        assert!(ex.sim_ms > 0.0);
+    }
+}
+
+#[test]
+fn mcl_pipeline_on_registry_graph() {
+    let ds = gen::table2_by_name("Economics").unwrap();
+    let g = (ds.gen)(3);
+    let mut ex = SpgemmExecutor::fast(Variant::Hash);
+    let r = mcl(&g, &MclParams { max_iters: 3, tol: 1e-3, top_k: 8, ..Default::default() }, &mut ex);
+    assert!(r.n_clusters > 0);
+    assert_eq!(r.clusters.len(), g.n_rows);
+    assert!(ex.jobs >= 1);
+}
+
+#[test]
+fn contraction_shrinks_and_preserves_weight() {
+    let ds = gen::table2_by_name("RoadTX").unwrap();
+    let g = (ds.gen)(3);
+    let mut rng = Pcg32::seeded(4);
+    let labels = random_labels(g.n_rows, g.n_rows / 8, &mut rng);
+    let mut ex = SpgemmExecutor::fast(Variant::Hash);
+    let r = contract(&g, &labels, &mut ex);
+    assert!(r.contracted.n_rows <= g.n_rows / 4);
+    let w0: f64 = g.val.iter().sum();
+    let w1: f64 = r.contracted.val.iter().sum();
+    assert!((w0 - w1).abs() < 1e-6 * w0.abs().max(1.0));
+}
+
+#[test]
+fn aia_improves_l1_hit_ratio_on_scattered_workload() {
+    let ds = gen::table2_by_name("scircuit").unwrap();
+    let a = (ds.gen)(20250710);
+    let (_, off) = simulate_spgemm(Algo::Hash, &a, &a, &SimConfig::for_scale(AiaMode::Off, ds.scale));
+    let (_, on) = simulate_spgemm(Algo::Hash, &a, &a, &SimConfig::for_scale(AiaMode::On, ds.scale));
+    use spgemm_aia::sim::probe::Phase;
+    let off_alloc = off.phase(Phase::Allocation).unwrap().l1_hit_ratio;
+    let on_alloc = on.phase(Phase::Allocation).unwrap().l1_hit_ratio;
+    assert!(on_alloc > off_alloc + 0.05, "alloc hit ratio: {off_alloc} -> {on_alloc}");
+    // paper: allocation improves more than accumulation
+    let off_acc = off.phase(Phase::Accumulation).unwrap().l1_hit_ratio;
+    let on_acc = on.phase(Phase::Accumulation).unwrap().l1_hit_ratio;
+    assert!((on_alloc - off_alloc) > (on_acc - off_acc) - 0.02);
+}
+
+#[test]
+fn property_engines_agree_on_random_rectangular_products() {
+    qc::check(12, 777, |g| {
+        let m = 1 + g.dim() * 3;
+        let k = 1 + g.dim() * 2;
+        let n = 1 + g.dim() * 3;
+        let mut rng = Pcg32::seeded(g.rng.next_u64());
+        let mut coo_a = spgemm_aia::sparse::Coo::new(m, k);
+        let mut coo_b = spgemm_aia::sparse::Coo::new(k, n);
+        for _ in 0..(m * k / 6).max(1) {
+            coo_a.push(rng.below_usize(m), rng.below_usize(k), rng.f64_range(-1.0, 1.0));
+        }
+        for _ in 0..(k * n / 6).max(1) {
+            coo_b.push(rng.below_usize(k), rng.below_usize(n), rng.f64_range(-1.0, 1.0));
+        }
+        let a = coo_a.to_csr();
+        let b = coo_b.to_csr();
+        let r = spgemm_reference(&a, &b);
+        assert!(hash::multiply(&a, &b).approx_eq(&r, 1e-10));
+        assert!(esc::multiply(&a, &b).approx_eq(&r, 1e-10));
+    });
+}
+
+#[test]
+fn property_spgemm_distributes_over_identity_padding() {
+    // (A·I)·B == A·(I·B) == A·B on random inputs.
+    qc::check(8, 999, |g| {
+        let n = 2 + g.dim();
+        let mut rng = Pcg32::seeded(g.rng.next_u64());
+        let mut coo = spgemm_aia::sparse::Coo::new(n, n);
+        for _ in 0..(n * n / 4).max(1) {
+            coo.push(rng.below_usize(n), rng.below_usize(n), rng.f64_range(-1.0, 1.0));
+        }
+        let a = coo.to_csr();
+        let i = spgemm_aia::sparse::Csr::identity(n);
+        let ab = hash::multiply(&a, &a);
+        let a_ib = hash::multiply(&hash::multiply(&a, &i), &a);
+        assert!(ab.approx_eq(&a_ib, 1e-10));
+    });
+}

@@ -1,0 +1,117 @@
+//! L2⇄L3 integration: PJRT loading and execution of the AOT artifacts,
+//! and the hybrid GNN trainer end to end. Skipped gracefully when
+//! `make artifacts` has not run (CI without Python).
+
+use spgemm_aia::coordinator::executor::Variant;
+use spgemm_aia::gnn::{Arch, GnnData, Trainer, CDIM, FDIM};
+use spgemm_aia::runtime::{Runtime, Tensor};
+use spgemm_aia::util::Pcg32;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = Runtime::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("[skip] artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::new(&dir).expect("PJRT client"))
+}
+
+#[test]
+fn topk_artifact_masks_to_k_nonzeros() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let n = 8192;
+    let mut rng = Pcg32::seeded(1);
+    let x = Tensor::matrix(n, FDIM, (0..n * FDIM).map(|_| rng.normal() as f32).collect());
+    let out = rt.call("topk_mask", n, &[x]).unwrap().remove(0);
+    assert_eq!(out.rows(), n);
+    // generic floats: exactly k=8 survivors per row
+    for i in 0..64 {
+        let nnz = out.data[i * FDIM..(i + 1) * FDIM].iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(nnz, 8, "row {i}");
+    }
+}
+
+#[test]
+fn layer_fwd_matches_host_matmul() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let n = 8192;
+    let mut rng = Pcg32::seeded(2);
+    let h = Tensor::matrix(n, FDIM, (0..n * FDIM).map(|_| rng.normal() as f32 * 0.1).collect());
+    let w = Tensor::matrix(FDIM, FDIM, (0..FDIM * FDIM).map(|_| rng.normal() as f32 * 0.1).collect());
+    let out = rt.call("layer_fwd", n, &[h.clone(), w.clone()]).unwrap();
+    let (act, gate) = (&out[0], &out[1]);
+    // spot-check a few rows against a host matmul
+    for i in [0usize, 100, 8191] {
+        for j in [0usize, 31, 63] {
+            let mut z = 0f32;
+            for k in 0..FDIM {
+                z += h.data[i * FDIM + k] * w.data[k * FDIM + j];
+            }
+            let a = act.data[i * FDIM + j];
+            assert!((a - z.max(0.0)).abs() < 1e-3, "({i},{j}): {a} vs {z}");
+            assert_eq!(gate.data[i * FDIM + j] != 0.0, z > 0.0);
+        }
+    }
+}
+
+#[test]
+fn loss_grad_artifact_is_softmax_xent() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let n = 8192;
+    // uniform logits -> loss = ln(16), dlogits rows sum to 0
+    let logits = Tensor::zeros(vec![n as i64, CDIM as i64]);
+    let mut y = vec![0f32; n * CDIM];
+    for i in 0..n {
+        y[i * CDIM + i % CDIM] = 1.0;
+    }
+    let out = rt.call("loss_grad", n, &[logits, Tensor::matrix(n, CDIM, y)]).unwrap();
+    let loss = out[0].data[0];
+    assert!((loss - (16f32).ln()).abs() < 1e-4, "loss={loss}");
+    let row = &out[1].data[0..CDIM];
+    let s: f32 = row.iter().sum();
+    assert!(s.abs() < 1e-6);
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let n = 8192;
+    let x = Tensor::zeros(vec![n as i64, FDIM as i64]);
+    rt.call("topk_mask", n, &[x.clone()]).unwrap();
+    let compiled_after_first = rt.compiled_count();
+    rt.call("topk_mask", n, &[x]).unwrap();
+    assert_eq!(rt.compiled_count(), compiled_after_first);
+    assert_eq!(rt.calls, 2);
+}
+
+#[test]
+fn gnn_training_learns_on_all_architectures() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    // small synthetic graph at the lowest artifact tier
+    let adj = spgemm_aia::gen::structured::community_powerlaw(8192, 10, 16, &mut Pcg32::seeded(3));
+    let data = GnnData::from_adj("it-test", adj, 11);
+    for arch in Arch::all() {
+        let mut trainer = Trainer::new(&mut rt, &data, arch, 5);
+        trainer.lr = 2.0;
+        let first = trainer.epoch().unwrap();
+        let mut last = first.clone();
+        for _ in 0..4 {
+            last = trainer.epoch().unwrap();
+        }
+        assert!(
+            last.loss < first.loss,
+            "{}: loss did not decrease ({} -> {})",
+            arch.name(),
+            first.loss,
+            last.loss
+        );
+        assert!(last.loss.is_finite());
+        // SpGEMM jobs per epoch: fwd HIDDEN+1 plus bwd HIDDEN+1
+        assert_eq!(last.spgemm_jobs, 6, "{}", arch.name());
+        // variant pricing must order AIA <= noAIA for this workload class
+        let aia = trainer.simulate_epoch_ms(Variant::HashAia);
+        let sw = trainer.simulate_epoch_ms(Variant::Hash);
+        let esc = trainer.simulate_epoch_ms(Variant::Cusparse);
+        assert!(aia > 0.0 && sw > 0.0 && esc > sw * 0.5, "{}: {aia} {sw} {esc}", arch.name());
+    }
+}
