@@ -17,7 +17,7 @@ use spgemm_aia::coordinator::executor::Variant;
 use spgemm_aia::gnn::{Arch, GnnData, Trainer};
 use spgemm_aia::runtime::Runtime;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> spgemm_aia::util::error::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let dataset = args.first().map(|s| s.as_str()).unwrap_or("Flickr");
     let arch = Arch::parse(args.get(1).map(|s| s.as_str()).unwrap_or("gcn")).expect("arch: gcn|gin|sage");

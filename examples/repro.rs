@@ -9,7 +9,7 @@
 use spgemm_aia::repro;
 use spgemm_aia::runtime::Runtime;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> spgemm_aia::util::error::Result<()> {
     let t0 = std::time::Instant::now();
     repro::table2();
     repro::table3();
@@ -17,13 +17,17 @@ fn main() -> anyhow::Result<()> {
     repro::fig6();
     repro::fig7_fig8();
     repro::fig9();
-    match Runtime::new(&Runtime::artifacts_dir()) {
-        Ok(mut rt) => {
-            repro::fig10_fig11(&mut rt)?;
+    if cfg!(feature = "pjrt") {
+        match Runtime::new(&Runtime::artifacts_dir()) {
+            Ok(mut rt) => {
+                repro::fig10_fig11(&mut rt)?;
+            }
+            Err(e) => {
+                eprintln!("skipping Fig 10/11 (PJRT client unavailable): {e}");
+            }
         }
-        Err(e) => {
-            eprintln!("skipping Fig 10/11 (artifacts not built?): {e}");
-        }
+    } else {
+        eprintln!("skipping Fig 10/11: built without the `pjrt` feature");
     }
     println!("\nall experiments regenerated in {:.1}s — JSON in target/repro/", t0.elapsed().as_secs_f64());
     Ok(())

@@ -1,0 +1,8 @@
+"""Put `python/` on sys.path so the tests import `compile.*` the same
+way `aot.py` does when invoked as a script (`python -m pytest
+python/tests -q` from the repo root, as CI runs it)."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))

@@ -5,7 +5,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis", reason="hypothesis not installed (offline image)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from compile.kernels import ref
 from compile.kernels.matmul import matmul, matmul_relu_gate

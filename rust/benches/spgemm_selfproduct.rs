@@ -1,15 +1,18 @@
 //! Bench: matrix self-product (paper Fig. 6 / Table II workload).
 //!
-//! Measures the *real wall time* of the Rust engines (hash parallel,
-//! ESC, reference) on Table-II analogues, plus the simulated-H200
-//! pricing of each variant — the bench-side regeneration of Fig. 6.
-//! `BENCH_QUICK=1` for a fast pass.
+//! Measures the *real wall time* of the Rust engines — the two-phase
+//! hash pipeline against the seed's single-pass engine it replaced, the
+//! ESC baseline — plus the simulated-H200 pricing of each variant (the
+//! bench-side regeneration of Fig. 6). Per-dataset symbolic/numeric
+//! phase times and the speedup over the seed engine land in the JSON
+//! meta, so `BENCH_spgemm.json` is the machine-readable perf trajectory
+//! CI archives on every PR. `BENCH_QUICK=1` for a fast pass.
 
-use spgemm_aia::coordinator::executor::Variant;
 use spgemm_aia::gen;
 use spgemm_aia::sim::{simulate_stats, AiaMode, SimConfig};
 use spgemm_aia::spgemm::{esc, hash, ip, Algo};
 use spgemm_aia::util::bench::{bb, Bencher};
+use spgemm_aia::util::json::Json;
 
 fn main() {
     let mut b = Bencher::new();
@@ -22,7 +25,13 @@ fn main() {
         let a = (ds.gen)(1);
         let total_ip = ip::total_ip(&a, &a);
         b.group(&format!("selfproduct/{name} (IP={total_ip})"));
-        b.bench("hash-parallel(wall)", || bb(hash::multiply(&a, &a).nnz()));
+        let two = b.bench("hash-twophase(wall)", || bb(hash::multiply(&a, &a).nnz()));
+        let single = b.bench("hash-singlepass-seed(wall)", || bb(hash::multiply_single_pass(&a, &a).nnz()));
+        println!("  -> two-phase speedup over seed single-pass: {:.2}x", single.median / two.median);
+        b.meta(&format!("speedup_vs_singlepass/{name}"), Json::Num(single.median / two.median));
+        // Distinct per-phase wall times for the perf trajectory.
+        let (_, phases) = hash::multiply_timed(&a, &a);
+        b.meta(&format!("phases/{name}"), phases.to_json());
         if quick || a.nnz() < 2_000_000 {
             b.bench("esc(wall)", || bb(esc::multiply(&a, &a).nnz()));
         }
@@ -36,5 +45,5 @@ fn main() {
             bb(simulate_stats(Algo::Esc, &a, &a, &SimConfig::for_scale(AiaMode::Off, ds.scale)).total_ms)
         });
     }
-    b.finish("spgemm_selfproduct");
+    b.finish("spgemm");
 }

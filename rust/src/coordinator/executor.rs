@@ -6,8 +6,10 @@
 //! per variant exactly the way the paper's figures do (AIA / no-AIA /
 //! cuSPARSE).
 
+use super::metrics::Metrics;
+use crate::sim::probe::PhaseTimes;
 use crate::sim::{simulate_spgemm, AiaMode, SimConfig, SimReport};
-use crate::spgemm::{ip, spgemm, Algo};
+use crate::spgemm::{hash, ip, spgemm, Algo};
 use crate::sparse::Csr;
 
 /// The three system variants every experiment compares.
@@ -70,32 +72,53 @@ pub struct SpgemmExecutor {
     pub jobs: usize,
     /// Reports per job (kept only when simulating).
     pub reports: Vec<SimReport>,
+    /// Accumulated wall time per engine phase across functional Hash
+    /// jobs (grouping/symbolic/numeric — zero for simulated executors
+    /// and non-hash engines).
+    pub phase_times: PhaseTimes,
 }
 
 impl SpgemmExecutor {
     /// Functional-only executor (fast parallel path).
     pub fn fast(variant: Variant) -> SpgemmExecutor {
-        SpgemmExecutor { variant, sim: None, sim_ms: 0.0, total_ip: 0, jobs: 0, reports: Vec::new() }
+        SpgemmExecutor::with_sim(variant, None)
     }
 
     /// Executor with the machine simulation attached.
     pub fn simulated(variant: Variant) -> SpgemmExecutor {
-        let cfg = SimConfig::new(variant.aia());
-        SpgemmExecutor { variant, sim: Some(cfg), sim_ms: 0.0, total_ip: 0, jobs: 0, reports: Vec::new() }
+        SpgemmExecutor::with_sim(variant, Some(SimConfig::new(variant.aia())))
     }
 
     /// Simulated executor whose device caches are scaled by the
     /// dataset's down-scaling factor (DESIGN.md §Hardware substitution).
     pub fn simulated_scaled(variant: Variant, scale: usize) -> SpgemmExecutor {
-        let cfg = SimConfig::for_scale(variant.aia(), scale);
-        SpgemmExecutor { variant, sim: Some(cfg), sim_ms: 0.0, total_ip: 0, jobs: 0, reports: Vec::new() }
+        SpgemmExecutor::with_sim(variant, Some(SimConfig::for_scale(variant.aia(), scale)))
+    }
+
+    fn with_sim(variant: Variant, sim: Option<SimConfig>) -> SpgemmExecutor {
+        SpgemmExecutor {
+            variant,
+            sim,
+            sim_ms: 0.0,
+            total_ip: 0,
+            jobs: 0,
+            reports: Vec::new(),
+            phase_times: PhaseTimes::default(),
+        }
     }
 
     /// Run one SpGEMM job.
     pub fn multiply(&mut self, a: &Csr, b: &Csr) -> Csr {
         self.jobs += 1;
         match &self.sim {
-            None => spgemm(self.variant.algo(), a, b),
+            None => match self.variant.algo() {
+                Algo::Hash => {
+                    let (c, pt) = hash::engine::multiply_timed(a, b);
+                    self.phase_times.accumulate(&pt);
+                    c
+                }
+                other => spgemm(other, a, b),
+            },
             Some(cfg) => {
                 self.total_ip += ip::total_ip(a, b);
                 let (c, report) = simulate_spgemm(self.variant.algo(), a, b, cfg);
@@ -109,6 +132,15 @@ impl SpgemmExecutor {
     /// Aggregate GFLOPS over all jobs so far (paper's metric).
     pub fn gflops(&self) -> f64 {
         crate::sim::gflops(self.total_ip, self.sim_ms)
+    }
+
+    /// Export accumulated counters into a [`Metrics`] registry under
+    /// `spgemm.<variant>.*` (jobs, simulated ms, per-phase wall times).
+    pub fn export_metrics(&self, m: &mut Metrics) {
+        let prefix = format!("spgemm.{}", self.variant.name());
+        m.inc(&format!("{prefix}.jobs"), self.jobs as u64);
+        m.gauge(&format!("{prefix}.sim_ms"), self.sim_ms);
+        m.observe_phase_times(&prefix, &self.phase_times);
     }
 }
 
@@ -135,6 +167,13 @@ mod tests {
         assert_eq!(ex.jobs, 1);
         assert_eq!(ex.sim_ms, 0.0);
         assert!(c.nnz() > 0);
+        // the fast hash path reports distinct per-phase wall times...
+        assert!(ex.phase_times.total_s() > 0.0);
+        // ...and they export into the metrics registry
+        let mut m = Metrics::new();
+        ex.export_metrics(&mut m);
+        assert_eq!(m.counter("spgemm.hash.jobs"), 1);
+        assert!(m.timer_total("spgemm.hash.numeric") >= 0.0);
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Metrics registry: named counters and timers, dumped as JSON.
 
+use crate::sim::probe::PhaseTimes;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -30,11 +31,23 @@ impl Metrics {
     pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
         let t0 = Instant::now();
         let out = f();
-        let dt = t0.elapsed().as_secs_f64();
-        let e = self.timers.entry(name.to_string()).or_insert((0.0, 0));
-        e.0 += dt;
-        e.1 += 1;
+        self.add_time(name, t0.elapsed().as_secs_f64());
         out
+    }
+
+    /// Record an externally measured duration under `name`.
+    pub fn add_time(&mut self, name: &str, secs: f64) {
+        let e = self.timers.entry(name.to_string()).or_insert((0.0, 0));
+        e.0 += secs;
+        e.1 += 1;
+    }
+
+    /// Record the engine's per-phase wall times under
+    /// `<prefix>.{grouping,symbolic,numeric}` (one observation each).
+    pub fn observe_phase_times(&mut self, prefix: &str, pt: &PhaseTimes) {
+        self.add_time(&format!("{prefix}.grouping"), pt.grouping_s);
+        self.add_time(&format!("{prefix}.symbolic"), pt.symbolic_s);
+        self.add_time(&format!("{prefix}.numeric"), pt.numeric_s);
     }
 
     pub fn counter(&self, name: &str) -> u64 {
@@ -83,6 +96,17 @@ mod tests {
         assert_eq!(out, 42);
         assert!(m.timer_total("work") >= 0.0);
         assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn phase_times_land_in_timers() {
+        let mut m = Metrics::new();
+        let pt = PhaseTimes { grouping_s: 0.5, symbolic_s: 1.0, numeric_s: 2.0 };
+        m.observe_phase_times("spgemm", &pt);
+        m.observe_phase_times("spgemm", &pt);
+        assert!((m.timer_total("spgemm.symbolic") - 2.0).abs() < 1e-12);
+        assert!((m.timer_total("spgemm.numeric") - 4.0).abs() < 1e-12);
+        assert_eq!(m.timer_total("spgemm.missing"), 0.0);
     }
 
     #[test]

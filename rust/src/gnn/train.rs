@@ -18,7 +18,7 @@ use crate::coordinator::executor::{SpgemmExecutor, Variant};
 use crate::runtime::{Runtime, Tensor};
 use crate::sparse::Csr;
 use crate::util::Pcg32;
-use anyhow::Result;
+use crate::util::error::Result;
 
 /// The three evaluated architectures (paper Table III experiments).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -264,8 +264,11 @@ impl<'a> Trainer<'a> {
                     (dwn, Some(dws), dh_neigh, Some(dh_self))
                 }
             };
-            // propagate to the previous layer's activations
-            if l > 0 || true {
+            // Propagate to the previous layer's activations. Run at
+            // l == 0 too (dh is unused afterwards there): the aggregate
+            // keeps the epoch's SpGEMM job count and variant pricing
+            // identical across layers, matching the paper's workload.
+            {
                 let g = topk_abs_csr(&dagg_l, self.k);
                 let mut dhp = self.aggregate(kind, true, g);
                 if let Some(ds) = d_self {

@@ -14,10 +14,18 @@
 //!   MXU-tiled matmul, gather-SpMM) called from L2.
 //!
 //! Python never runs at request time: the Rust binary loads
-//! `artifacts/*.hlo.txt` through PJRT (`runtime`) and is self-contained.
+//! `artifacts/*.hlo.txt` through PJRT (`runtime`, behind the `pjrt`
+//! cargo feature — the default build ships a std-only stub) and is
+//! self-contained.
 //!
-//! See `DESIGN.md` for the full system inventory and the experiment
-//! index mapping every paper table/figure to a module and bench target.
+//! See `DESIGN.md` (repo root) for the full system inventory, the
+//! two-phase hash-engine split, and the experiment index mapping every
+//! paper table/figure to a module and bench target.
+
+// The engine mirrors the paper's GPU kernels: index-coupled loops over
+// CSR arrays and pointer-based disjoint writes are the idiom, not an
+// accident — keep clippy focused on real defects.
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments, clippy::type_complexity)]
 
 pub mod util;
 pub mod sparse;

@@ -8,7 +8,7 @@ use crate::gen::table3_datasets;
 use crate::gnn::{sparsify, Arch, GnnData, Trainer, TOPK};
 use crate::runtime::Runtime;
 use crate::util::json::Json;
-use anyhow::Result;
+use crate::util::error::Result;
 
 /// Shared cache-scaling factor for every GNN simulation (the datasets
 /// are all scaled into the same node-count tier band, so they see one

@@ -4,82 +4,153 @@
 //! Follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file` →
 //! `XlaComputation::from_proto` → `client.compile` → `execute`. HLO
 //! *text* is the interchange format (see `python/compile/aot.py`).
+//!
+//! The `xla` crate closure is only available in vendored build
+//! environments, so the real client is gated behind the `pjrt` cargo
+//! feature. The default build ships a std-only stub with the same API
+//! surface: `new` succeeds (so `info` and the trainers construct), and
+//! `call` reports exactly what is missing — the artifact, or the
+//! feature — so every error stays actionable.
 
 use super::tensor::Tensor;
-use anyhow::{anyhow, Context, Result};
-use std::collections::HashMap;
+use crate::util::error::Result;
 use std::path::{Path, PathBuf};
 
-/// Loads and runs AOT artifacts. One compiled executable per (op, tier),
-/// compiled lazily on first use and cached for the process lifetime.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    exes: HashMap<(String, usize), xla::PjRtLoadedExecutable>,
-    /// Wall time spent executing (the dense-path cost the GNN trainer
-    /// reports), seconds.
-    pub exec_secs: f64,
-    pub calls: u64,
+/// Default artifacts directory (`$SPGEMM_AIA_ARTIFACTS` or `artifacts/`).
+fn artifacts_dir_impl() -> PathBuf {
+    std::env::var("SPGEMM_AIA_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
 }
 
-impl Runtime {
-    /// Create a CPU PJRT client rooted at an artifacts directory.
-    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
-        Ok(Runtime { client, dir: artifacts_dir.to_path_buf(), exes: HashMap::new(), exec_secs: 0.0, calls: 0 })
+#[cfg(feature = "pjrt")]
+mod imp {
+    use super::*;
+    use crate::util::error::{anyhow, Context};
+    use std::collections::HashMap;
+
+    /// Loads and runs AOT artifacts. One compiled executable per
+    /// (op, tier), compiled lazily on first use and cached for the
+    /// process lifetime.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        exes: HashMap<(String, usize), xla::PjRtLoadedExecutable>,
+        /// Wall time spent executing (the dense-path cost the GNN trainer
+        /// reports), seconds.
+        pub exec_secs: f64,
+        pub calls: u64,
     }
 
-    /// Default artifacts directory (`$SPGEMM_AIA_ARTIFACTS` or `artifacts/`).
-    pub fn artifacts_dir() -> PathBuf {
-        std::env::var("SPGEMM_AIA_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
-    }
-
-    fn ensure_compiled(&mut self, op: &str, tier: usize) -> Result<()> {
-        let key = (op.to_string(), tier);
-        if self.exes.contains_key(&key) {
-            return Ok(());
+    impl Runtime {
+        /// Create a CPU PJRT client rooted at an artifacts directory.
+        pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+            Ok(Runtime { client, dir: artifacts_dir.to_path_buf(), exes: HashMap::new(), exec_secs: 0.0, calls: 0 })
         }
-        let path = self.dir.join(format!("{op}_n{tier}.hlo.txt"));
-        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
-            .map_err(|e| anyhow!("load {}: {e:?}", path.display()))
-            .with_context(|| "run `make artifacts` first")?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile {op}_n{tier}: {e:?}"))?;
-        self.exes.insert(key, exe);
-        Ok(())
-    }
 
-    /// Execute `op` at `tier` on `inputs`; returns the artifact's output
-    /// tuple as host tensors.
-    pub fn call(&mut self, op: &str, tier: usize, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        self.ensure_compiled(op, tier)?;
-        let exe = self.exes.get(&(op.to_string(), tier)).unwrap();
-        let lits: Vec<xla::Literal> = inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
-        let t0 = std::time::Instant::now();
-        let result = exe
-            .execute::<xla::Literal>(&lits)
-            .map_err(|e| anyhow!("execute {op}_n{tier}: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("sync {op}_n{tier}: {e:?}"))?;
-        self.exec_secs += t0.elapsed().as_secs_f64();
-        self.calls += 1;
-        // Artifacts always return tuples (aot.py wraps single outputs).
-        let parts = result.to_tuple().map_err(|e| anyhow!("untuple {op}_n{tier}: {e:?}"))?;
-        parts.iter().map(Tensor::from_literal).collect()
-    }
+        /// Default artifacts directory (`$SPGEMM_AIA_ARTIFACTS` or `artifacts/`).
+        pub fn artifacts_dir() -> PathBuf {
+            super::artifacts_dir_impl()
+        }
 
-    /// Number of compiled executables resident.
-    pub fn compiled_count(&self) -> usize {
-        self.exes.len()
+        fn ensure_compiled(&mut self, op: &str, tier: usize) -> Result<()> {
+            let key = (op.to_string(), tier);
+            if self.exes.contains_key(&key) {
+                return Ok(());
+            }
+            let path = self.dir.join(format!("{op}_n{tier}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+                .map_err(|e| anyhow!("load {}: {e:?}", path.display()))
+                .with_context(|| "run `make artifacts` first")?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile {op}_n{tier}: {e:?}"))?;
+            self.exes.insert(key, exe);
+            Ok(())
+        }
+
+        /// Execute `op` at `tier` on `inputs`; returns the artifact's
+        /// output tuple as host tensors.
+        pub fn call(&mut self, op: &str, tier: usize, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+            self.ensure_compiled(op, tier)?;
+            let exe = self.exes.get(&(op.to_string(), tier)).unwrap();
+            let lits: Vec<xla::Literal> = inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+            let t0 = std::time::Instant::now();
+            let result = exe
+                .execute::<xla::Literal>(&lits)
+                .map_err(|e| anyhow!("execute {op}_n{tier}: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("sync {op}_n{tier}: {e:?}"))?;
+            self.exec_secs += t0.elapsed().as_secs_f64();
+            self.calls += 1;
+            // Artifacts always return tuples (aot.py wraps single outputs).
+            let parts = result.to_tuple().map_err(|e| anyhow!("untuple {op}_n{tier}: {e:?}"))?;
+            parts.iter().map(Tensor::from_literal).collect()
+        }
+
+        /// Number of compiled executables resident.
+        pub fn compiled_count(&self) -> usize {
+            self.exes.len()
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use super::*;
+    use crate::util::error::bail;
+
+    /// Std-only stand-in for the PJRT client (built without the `pjrt`
+    /// feature). Construction succeeds so callers can report runtime
+    /// status; execution fails with an actionable message.
+    pub struct Runtime {
+        dir: PathBuf,
+        /// Wall time spent executing artifacts — always 0.0 in the stub.
+        pub exec_secs: f64,
+        pub calls: u64,
+    }
+
+    impl Runtime {
+        /// Create a stub runtime rooted at an artifacts directory.
+        pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+            Ok(Runtime { dir: artifacts_dir.to_path_buf(), exec_secs: 0.0, calls: 0 })
+        }
+
+        /// Default artifacts directory (`$SPGEMM_AIA_ARTIFACTS` or `artifacts/`).
+        pub fn artifacts_dir() -> PathBuf {
+            super::artifacts_dir_impl()
+        }
+
+        /// Always fails: without the `pjrt` feature there is no executor.
+        /// The message distinguishes "artifact missing" (fix: run
+        /// `make artifacts` first) from "artifact present but this build
+        /// cannot run it" (fix: build with `--features pjrt`).
+        pub fn call(&mut self, op: &str, tier: usize, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+            let path = self.dir.join(format!("{op}_n{tier}.hlo.txt"));
+            if !path.exists() {
+                bail!(
+                    "artifact {} not found — run `make artifacts` first (and build with `--features pjrt` + a vendored `xla` crate to execute it)",
+                    path.display()
+                );
+            }
+            bail!(
+                "artifact {} present, but this build has no PJRT backend — rebuild with `--features pjrt` (requires a vendored `xla` crate, see Cargo.toml)",
+                path.display()
+            );
+        }
+
+        /// Number of compiled executables resident (none in the stub).
+        pub fn compiled_count(&self) -> usize {
+            0
+        }
+    }
+}
+
+pub use imp::Runtime;
 
 #[cfg(test)]
 mod tests {
-    //! These tests need `make artifacts` to have run; they are the
-    //! integration seam between L2 (JAX) and L3 (Rust) and are kept in
-    //! `rust/tests/runtime_integration.rs` so `cargo test --lib` stays
-    //! artifact-free. Only the pure helpers are tested here.
+    //! Artifact-dependent tests live in `rust/tests/runtime_integration.rs`
+    //! (they need `make artifacts` and the `pjrt` feature); only the pure
+    //! helpers and the stub's error contract are tested here.
 
     use super::*;
 
@@ -89,5 +160,17 @@ mod tests {
         assert_eq!(Runtime::artifacts_dir(), PathBuf::from("/tmp/xyz"));
         std::env::remove_var("SPGEMM_AIA_ARTIFACTS");
         assert_eq!(Runtime::artifacts_dir(), PathBuf::from("artifacts"));
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_reports_missing_artifact_actionably() {
+        let dir = std::env::temp_dir().join("spgemm_aia_stub_client");
+        let _ = std::fs::create_dir_all(&dir);
+        let mut rt = Runtime::new(&dir).expect("stub client");
+        let err = rt.call("layer_fwd", 8192, &[]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("make artifacts"), "{msg}");
+        assert_eq!(rt.compiled_count(), 0);
     }
 }

@@ -1,6 +1,9 @@
-//! Host-side f32 tensors marshalled to/from `xla::Literal`.
+//! Host-side f32 tensors, marshalled to/from `xla::Literal` when the
+//! `pjrt` feature is enabled (the marshalling pair is feature-gated; the
+//! tensor itself is plain std and always available).
 
-use anyhow::{ensure, Result};
+#[cfg(feature = "pjrt")]
+use crate::util::error::{ensure, Result};
 
 /// A dense row-major f32 tensor.
 #[derive(Clone, Debug, PartialEq)]
@@ -38,6 +41,7 @@ impl Tensor {
     }
 
     /// Convert to an XLA literal.
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let lit = xla::Literal::vec1(&self.data);
         if self.dims.is_empty() {
@@ -49,6 +53,7 @@ impl Tensor {
     }
 
     /// Convert back from an XLA literal (must be f32).
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
         let shape = lit.array_shape()?;
         let dims: Vec<i64> = shape.dims().to_vec();

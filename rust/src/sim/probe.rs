@@ -47,13 +47,66 @@ pub enum Region {
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Phase {
     Grouping,
+    /// The symbolic phase (the paper calls it "allocation").
     Allocation,
+    /// The numeric phase (the paper calls it "accumulation").
     Accumulation,
     /// ESC baseline phases share one bucket each.
     EscExpand,
     EscSort,
     EscCompress,
     Other,
+}
+
+impl Phase {
+    /// Stable lowercase name for metrics keys and JSON emission.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Grouping => "grouping",
+            Phase::Allocation => "symbolic",
+            Phase::Accumulation => "numeric",
+            Phase::EscExpand => "esc-expand",
+            Phase::EscSort => "esc-sort",
+            Phase::EscCompress => "esc-compress",
+            Phase::Other => "other",
+        }
+    }
+}
+
+/// Wall-clock seconds per engine phase on the *functional* path (the
+/// simulated path reports cycle-derived times through
+/// [`crate::sim::PhaseReport`] instead). Produced by
+/// `spgemm::hash::engine::multiply_timed`, accumulated by the
+/// coordinator's executor and metrics registry, and emitted into
+/// `BENCH_*.json` by `util::bench`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PhaseTimes {
+    pub grouping_s: f64,
+    pub symbolic_s: f64,
+    pub numeric_s: f64,
+}
+
+impl PhaseTimes {
+    pub fn total_s(&self) -> f64 {
+        self.grouping_s + self.symbolic_s + self.numeric_s
+    }
+
+    /// Accumulate another measurement (for multi-job executors).
+    pub fn accumulate(&mut self, o: &PhaseTimes) {
+        self.grouping_s += o.grouping_s;
+        self.symbolic_s += o.symbolic_s;
+        self.numeric_s += o.numeric_s;
+    }
+
+    /// Machine-readable form for `BENCH_*.json` / metrics dumps.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        let mut o = crate::util::json::Json::obj();
+        o.set("grouping_s", self.grouping_s.into());
+        o.set("symbolic_s", self.symbolic_s.into());
+        o.set("numeric_s", self.numeric_s.into());
+        o.set("total_s", self.total_s().into());
+        o
+    }
 }
 
 /// Access kinds (atomics cost extra and serialize under contention).

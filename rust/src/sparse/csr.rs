@@ -6,7 +6,7 @@
 //! row), `val` (values). Column indices are `u32` (all evaluated
 //! matrices have < 2^32 columns); row pointers are `usize`.
 
-use anyhow::{bail, ensure, Result};
+use crate::util::error::{bail, ensure, Result};
 
 /// A CSR sparse matrix with f64 values.
 #[derive(Clone, Debug, PartialEq)]

@@ -7,7 +7,7 @@
 
 use super::coo::Coo;
 use super::csr::Csr;
-use anyhow::{bail, ensure, Context, Result};
+use crate::util::error::{bail, ensure, Context, Result};
 use std::io::{BufRead, BufWriter, Write};
 use std::path::Path;
 

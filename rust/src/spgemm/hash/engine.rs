@@ -1,10 +1,31 @@
-//! The hash-based multi-phase SpGEMM engine (paper §III): row-grouping →
-//! allocation (symbolic, Algorithms 2–3) → accumulation (numeric,
-//! Algorithm 5), with PWPR / TBPR thread-assignment per Table I.
+//! The hash-based multi-phase SpGEMM engine (paper §III), structured as
+//! the paper's true pipeline:
 //!
-//! Two entry points share the same row processors:
-//! - [`multiply`] — the fast functional path, parallel across rows with
-//!   [`NullProbe`] (instrumentation compiles away);
+//! 1. **grouping** — per-row intermediate-product upper bounds
+//!   (Algorithm 1) binned into the Table I row categories;
+//! 2. **symbolic** — per-row *exact* output sizes via symbolic hash
+//!   inserts (Algorithms 2–3), producing the output row pointers;
+//! 3. **numeric** — value accumulation into pre-sized, disjoint output
+//!   slices (Algorithm 5), with PWPR / TBPR thread assignment per
+//!   Table I.
+//!
+//! Each phase is parallelised bin-by-bin through
+//! [`crate::util::parallel::par_dynamic_with`]: every worker owns one
+//! reusable hash table (plus gather scratch in the numeric phase) that
+//! survives across all rows it processes — no per-row allocation. The
+//! numeric phase additionally exploits the symbolic phase's exact counts:
+//! group-3 (global-table) rows get tables sized `2·nnz(C_i)` instead of
+//! `2·IP_i`, and rows with a single A entry are scaled copies of one B
+//! row — no table, no sort.
+//!
+//! Entry points:
+//! - [`multiply`] / [`multiply_timed`] — the fast functional path
+//!   ([`NullProbe`], instrumentation compiles away); `_timed` also
+//!   reports wall time per phase as a [`PhaseTimes`];
+//! - [`symbolic`] + [`numeric`] — the two phases as separate calls, for
+//!   callers that reuse a plan (or inspect it);
+//! - [`multiply_single_pass`] — the seed engine kept as the regression
+//!   baseline for `benches/spgemm_selfproduct.rs`;
 //! - [`multiply_traced`] — deterministic sequential path that emits the
 //!   full memory trace through a [`Probe`], in thread-block program
 //!   order, for the AIA simulator.
@@ -12,13 +33,223 @@
 use super::grouping::{global_table_size, GroupSpec, Grouping, Strategy, GROUP_SPECS};
 use super::sort::bitonic_sort_by_key;
 use super::table::{HashTable, TableLoc};
-use crate::sim::probe::{Kind, NullProbe, Phase, Probe, Region};
+use crate::sim::probe::{Kind, NullProbe, Phase, PhaseTimes, Probe, Region};
 use crate::spgemm::ip::{intermediate_products, intermediate_products_traced, IP_BLOCK_ROWS};
 use crate::sparse::Csr;
 use crate::util::{par_chunks, parallel::par_dynamic_with};
+use std::time::Instant;
 
-/// Fast parallel hash SpGEMM.
+/// Output of the symbolic phase: everything the numeric phase needs to
+/// fill values without re-deriving structure.
+pub struct SymbolicPlan {
+    /// Per-row intermediate-product upper bounds (Algorithm 1).
+    pub ip: Vec<u64>,
+    /// Table I row-category bins over `ip`.
+    pub grouping: Grouping,
+    /// *Exact* output row pointers: `rpt[i+1] - rpt[i]` = nnz of C row i.
+    pub rpt: Vec<usize>,
+}
+
+impl SymbolicPlan {
+    /// Total output non-zeros.
+    pub fn nnz(&self) -> usize {
+        *self.rpt.last().unwrap_or(&0)
+    }
+
+    /// Exact nnz of output row `i`.
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.rpt[i + 1] - self.rpt[i]
+    }
+}
+
+/// Dynamic-scheduling batch for a bin: PWPR bins hand each worker a
+/// block's worth of small rows; TBPR bins hand out fat rows a few at a
+/// time so the atomic counter isn't hammered.
+fn bin_batch(spec: &GroupSpec) -> usize {
+    match spec.strategy {
+        Strategy::Pwpr => spec.rows_per_block(),
+        Strategy::Tbpr => 4,
+    }
+}
+
+/// One reusable per-worker table for a bin.
+fn bin_table(spec: &GroupSpec) -> HashTable {
+    match spec.table_size {
+        Some(s) => HashTable::new(s, TableLoc::Shared),
+        None => HashTable::new(1024, TableLoc::Global),
+    }
+}
+
+/// Fast parallel hash SpGEMM (symbolic + numeric phases).
 pub fn multiply(a: &Csr, b: &Csr) -> Csr {
+    multiply_timed(a, b).0
+}
+
+/// [`multiply`] plus wall time per phase.
+pub fn multiply_timed(a: &Csr, b: &Csr) -> (Csr, PhaseTimes) {
+    assert_eq!(a.n_cols, b.n_rows, "dimension mismatch");
+    let t0 = Instant::now();
+    let ip = intermediate_products(a, b);
+    let grouping = Grouping::build(&ip);
+    let grouping_s = t0.elapsed().as_secs_f64();
+
+    let t1 = Instant::now();
+    let plan = symbolic_with(a, b, ip, grouping);
+    let symbolic_s = t1.elapsed().as_secs_f64();
+
+    let t2 = Instant::now();
+    let c = numeric(a, b, &plan);
+    let numeric_s = t2.elapsed().as_secs_f64();
+
+    (c, PhaseTimes { grouping_s, symbolic_s, numeric_s })
+}
+
+/// Symbolic phase: IP estimation, row binning, and exact per-row output
+/// sizes.
+pub fn symbolic(a: &Csr, b: &Csr) -> SymbolicPlan {
+    assert_eq!(a.n_cols, b.n_rows, "dimension mismatch");
+    let ip = intermediate_products(a, b);
+    let grouping = Grouping::build(&ip);
+    symbolic_with(a, b, ip, grouping)
+}
+
+/// Symbolic counting given precomputed IP + bins (shared by
+/// [`symbolic`] and [`multiply_timed`], which times the stages apart).
+fn symbolic_with(a: &Csr, b: &Csr, ip: Vec<u64>, grouping: Grouping) -> SymbolicPlan {
+    let mut row_nnz = vec![0u32; a.n_rows];
+    {
+        let nnz_ptr = row_nnz.as_mut_ptr() as usize;
+        for spec in &GROUP_SPECS {
+            let rows = grouping.group_rows(spec.id);
+            if rows.is_empty() {
+                continue;
+            }
+            let ip = &ip;
+            par_dynamic_with(
+                rows.len(),
+                bin_batch(spec),
+                || bin_table(spec),
+                |table, ri| {
+                    let row = rows[ri] as usize;
+                    let u = symbolic_row_nnz(a, b, row, ip[row], spec, table);
+                    // SAFETY: each row index occurs once in the bins, so
+                    // every `row_nnz` slot is written by exactly one
+                    // worker, and the Vec outlives the scope.
+                    unsafe { *(nnz_ptr as *mut u32).add(row) = u };
+                },
+            );
+        }
+    }
+    let mut rpt = vec![0usize; a.n_rows + 1];
+    for i in 0..a.n_rows {
+        rpt[i + 1] = rpt[i] + row_nnz[i] as usize;
+    }
+    SymbolicPlan { ip, grouping, rpt }
+}
+
+/// Exact nnz of one output row (symbolic hash inserts, with the trivial
+/// cases short-circuited).
+fn symbolic_row_nnz(a: &Csr, b: &Csr, row: usize, ip_row: u64, spec: &GroupSpec, table: &mut HashTable) -> u32 {
+    // No hashing needed when collisions are impossible: a single A entry
+    // reaches one B row (whose columns are unique by CSR invariant), and
+    // IP ≤ 1 yields at most one product.
+    if ip_row <= 1 || a.row_nnz(row) <= 1 {
+        return ip_row as u32;
+    }
+    match spec.table_size {
+        Some(_) => table.clear(),
+        // Unique count is bounded by both IP and the output width, so
+        // hub rows never allocate beyond 2·n_cols.
+        None => table.reset_with_capacity(global_table_size(ip_row.min(b.n_cols as u64))),
+    }
+    alloc_row(a, b, row, table, &mut NullProbe)
+}
+
+/// Numeric phase: accumulate values into the plan's pre-sized, disjoint
+/// output slices. The plan must come from [`symbolic`] on the same
+/// `(a, b)` pair.
+pub fn numeric(a: &Csr, b: &Csr, plan: &SymbolicPlan) -> Csr {
+    assert_eq!(a.n_cols, b.n_rows, "dimension mismatch");
+    assert_eq!(plan.rpt.len(), a.n_rows + 1, "plan does not match A");
+    let nnz_c = plan.nnz();
+    let mut col = vec![0u32; nnz_c];
+    let mut val = vec![0f64; nnz_c];
+    {
+        let col_ptr = col.as_mut_ptr() as usize;
+        let val_ptr = val.as_mut_ptr() as usize;
+        for spec in &GROUP_SPECS {
+            let rows = plan.grouping.group_rows(spec.id);
+            if rows.is_empty() {
+                continue;
+            }
+            par_dynamic_with(
+                rows.len(),
+                bin_batch(spec),
+                || (bin_table(spec), Vec::<(u32, f64)>::new()),
+                |(table, scratch), ri| {
+                    let row = rows[ri] as usize;
+                    let start = plan.rpt[row];
+                    let n_out = plan.rpt[row + 1] - start;
+                    if n_out == 0 {
+                        return;
+                    }
+                    let cp = col_ptr as *mut u32;
+                    let vp = val_ptr as *mut f64;
+                    // Single-A-entry rows are scaled copies of one B row:
+                    // already sorted, collision-free — no table, no sort.
+                    if a.row_nnz(row) == 1 {
+                        let j = a.rpt[row];
+                        let av = a.val[j];
+                        let (bc, bv) = b.row(a.col[j] as usize);
+                        // Real assert, not debug: the pointer writes below
+                        // are bounded by the plan, so a plan/input mismatch
+                        // must panic rather than corrupt memory.
+                        assert_eq!(bc.len(), n_out, "plan does not match inputs at row {row}");
+                        for (o, (&c, &v)) in bc.iter().zip(bv).enumerate() {
+                            // SAFETY: rows write disjoint
+                            // [rpt[i], rpt[i+1]) slices.
+                            unsafe {
+                                *cp.add(start + o) = c;
+                                *vp.add(start + o) = av * v;
+                            }
+                        }
+                        return;
+                    }
+                    match spec.table_size {
+                        Some(_) => table.clear(),
+                        // Exact sizing from the symbolic count: 2·nnz(C_i)
+                        // keeps load factor ≤ 0.5 and is far below the
+                        // 2·IP_i the single-pass engine allocated for hub
+                        // rows.
+                        None => table.reset_with_capacity(global_table_size(n_out as u64)),
+                    }
+                    accum_row_fast(a, b, row, table, scratch);
+                    // Real assert, not debug: bounds the unsafe writes below
+                    // (a stale/mismatched plan must panic, not scribble).
+                    assert_eq!(scratch.len(), n_out, "symbolic/numeric disagree on row {row}");
+                    // fast path: std sort (identical result to bitonic —
+                    // keys unique)
+                    scratch.sort_unstable_by_key(|e| e.0);
+                    for (o, &(c, v)) in scratch.iter().enumerate() {
+                        // SAFETY: as above — disjoint output slices.
+                        unsafe {
+                            *cp.add(start + o) = c;
+                            *vp.add(start + o) = v;
+                        }
+                    }
+                },
+            );
+        }
+    }
+    Csr::new_unchecked(a.n_rows, b.n_cols, plan.rpt.clone(), col, val)
+}
+
+/// The seed's engine: allocation and accumulation fused per bin, one
+/// freshly allocated table per worker chunk (PWPR) and IP-sized global
+/// tables. Kept as the regression baseline the two-phase pipeline is
+/// benched against (`benches/spgemm_selfproduct.rs`); output is
+/// identical to [`multiply`].
+pub fn multiply_single_pass(a: &Csr, b: &Csr) -> Csr {
     assert_eq!(a.n_cols, b.n_rows, "dimension mismatch");
     let ip = intermediate_products(a, b);
     let grouping = Grouping::build(&ip);
@@ -82,7 +313,6 @@ pub fn multiply(a: &Csr, b: &Csr) -> Csr {
             let rows = grouping.group_rows(g);
             let run_row = |row: usize, table: &mut HashTable, scratch: &mut Vec<(u32, f64)>| {
                 accum_row_fast(a, b, row, table, scratch);
-                // fast path: std sort (identical result to bitonic — keys unique)
                 scratch.sort_unstable_by_key(|e| e.0);
                 let start = rpt[row];
                 let cp = col_ptr as *mut u32;
@@ -138,7 +368,7 @@ pub fn multiply_traced<P: Probe>(a: &Csr, b: &Csr, probe: &mut P) -> Csr {
     let grouping = Grouping::build(&ip);
     let mut next_block = a.n_rows.div_ceil(IP_BLOCK_ROWS);
 
-    // ---- allocation phase ----
+    // ---- allocation (symbolic) phase ----
     let mut row_nnz = vec![0u32; a.n_rows];
     for g in 0..4 {
         let spec = &GROUP_SPECS[g];
@@ -174,7 +404,7 @@ pub fn multiply_traced<P: Probe>(a: &Csr, b: &Csr, probe: &mut P) -> Csr {
     }
     let nnz_c = rpt[a.n_rows];
 
-    // ---- accumulation phase ----
+    // ---- accumulation (numeric) phase ----
     let mut col = vec![0u32; nnz_c];
     let mut val = vec![0f64; nnz_c];
     let mut scratch: Vec<(u32, f64)> = Vec::new();
@@ -432,6 +662,52 @@ mod tests {
     }
 
     #[test]
+    fn two_phase_equals_single_pass_exactly() {
+        let mut rng = Pcg32::seeded(321);
+        let a = random_csr(&mut rng, 300, 250, 0.03);
+        let b = random_csr(&mut rng, 250, 280, 0.02);
+        // bit-for-bit: same structure, same value sums in the same order
+        assert_eq!(multiply(&a, &b), multiply_single_pass(&a, &b));
+    }
+
+    #[test]
+    fn symbolic_plan_is_exact() {
+        let mut rng = Pcg32::seeded(17);
+        let a = random_csr(&mut rng, 120, 100, 0.05);
+        let b = random_csr(&mut rng, 100, 90, 0.05);
+        let plan = symbolic(&a, &b);
+        let r = spgemm_reference(&a, &b);
+        assert_eq!(plan.rpt, r.rpt, "symbolic sizes must be exact, not bounds");
+        assert_eq!(plan.nnz(), r.nnz());
+        let c = numeric(&a, &b, &plan);
+        assert!(c.approx_eq(&r, 1e-10));
+    }
+
+    #[test]
+    fn phase_times_are_reported() {
+        let mut rng = Pcg32::seeded(23);
+        let a = random_csr(&mut rng, 400, 400, 0.02);
+        let (c, t) = multiply_timed(&a, &a);
+        assert!(c.nnz() > 0);
+        assert!(t.grouping_s >= 0.0 && t.symbolic_s >= 0.0 && t.numeric_s >= 0.0);
+        assert!(t.total_s() >= t.numeric_s);
+        assert!(t.total_s() > 0.0, "three timed phases cannot all be zero-width");
+    }
+
+    #[test]
+    fn single_entry_rows_take_copy_path() {
+        // Diagonal × random exercises the no-table scaled-copy path on
+        // every row; result must still be exact.
+        let mut rng = Pcg32::seeded(9);
+        let m = random_csr(&mut rng, 64, 64, 0.1);
+        let d = Csr::from_diag(&[2.5; 64]);
+        let c = multiply(&d, &m);
+        let mut expect = m.clone();
+        expect.map_values(|v| 2.5 * v);
+        assert!(c.approx_eq(&expect, 1e-12));
+    }
+
+    #[test]
     fn traced_equals_fast_path() {
         let mut rng = Pcg32::seeded(77);
         let a = random_csr(&mut rng, 200, 150, 0.02);
@@ -502,6 +778,8 @@ mod tests {
         let c = multiply(&a, &a);
         let r = spgemm_reference(&a, &a);
         assert!(c.approx_eq(&r, 1e-10));
+        // and the seed baseline still agrees on the same stress input
+        assert_eq!(c, multiply_single_pass(&a, &a));
     }
 
     #[test]

@@ -1,11 +1,12 @@
 //! Hash-based multi-phase SpGEMM (paper §III): row grouping (Table I),
 //! PWPR/TBPR thread assignment, the Algorithm-4 linear-probing hash
-//! table, and the allocation/accumulation phases.
+//! table, and the explicit symbolic (size) / numeric (value) phases —
+//! see `DESIGN.md` §"Two-phase hash engine".
 
 pub mod engine;
 pub mod grouping;
 pub mod sort;
 pub mod table;
 
-pub use engine::{multiply, multiply_traced};
+pub use engine::{multiply, multiply_single_pass, multiply_timed, multiply_traced, numeric, symbolic, SymbolicPlan};
 pub use grouping::{Grouping, Strategy, GROUP_SPECS};

@@ -3,9 +3,13 @@
 //! `cargo bench` targets are `harness = false` binaries that call into
 //! this module. It follows criterion's basic discipline — warmup,
 //! fixed-duration sampling, mean/stddev/median over per-iteration times —
-//! and prints one line per benchmark plus an optional machine-readable
-//! JSON dump under `target/bench-results/`.
+//! and prints one line per benchmark plus a machine-readable
+//! `BENCH_<name>.json` dump (results + free-form meta such as the
+//! engine's per-phase times) under `target/bench-results/` (override
+//! with `BENCH_OUT_DIR`). CI archives these files as the perf
+//! trajectory of the repo.
 
+use crate::util::json::Json;
 use std::hint::black_box;
 use std::time::{Duration, Instant};
 
@@ -58,6 +62,9 @@ pub struct Bencher {
     pub max_iters: u64,
     results: Vec<Stats>,
     group: String,
+    /// Free-form side data emitted with the results (e.g. per-phase
+    /// engine times, speedup ratios).
+    meta: Json,
 }
 
 impl Default for Bencher {
@@ -68,6 +75,7 @@ impl Default for Bencher {
             max_iters: 10_000,
             results: Vec::new(),
             group: String::new(),
+            meta: Json::obj(),
         }
     }
 }
@@ -135,9 +143,14 @@ impl Bencher {
         stats
     }
 
-    /// Write results JSON to `target/bench-results/<file>.json`.
-    pub fn finish(&self, file: &str) {
-        use crate::util::json::Json;
+    /// Attach a meta entry emitted alongside the results in
+    /// [`Bencher::finish`] (e.g. `phases/<dataset>` → [`crate::sim::probe::PhaseTimes`] JSON).
+    pub fn meta(&mut self, key: &str, v: Json) {
+        self.meta.set(key, v);
+    }
+
+    /// Write results to `<BENCH_OUT_DIR|target/bench-results>/BENCH_<name>.json`.
+    pub fn finish(&self, name: &str) {
         let mut arr = Json::Arr(vec![]);
         for s in &self.results {
             let mut o = Json::obj();
@@ -150,10 +163,17 @@ impl Bencher {
             o.set("iters", (s.iters as i64).into());
             arr.push(o);
         }
-        let dir = std::path::Path::new("target/bench-results");
+        let mut top = Json::obj();
+        top.set("schema", "spgemm-aia-bench-v1".into());
+        top.set("bench", name.into());
+        top.set("quick", std::env::var("BENCH_QUICK").is_ok().into());
+        top.set("results", arr);
+        top.set("meta", self.meta.clone());
+        let dir = std::env::var("BENCH_OUT_DIR").unwrap_or_else(|_| "target/bench-results".to_string());
+        let dir = std::path::Path::new(&dir);
         let _ = std::fs::create_dir_all(dir);
-        let path = dir.join(format!("{file}.json"));
-        if std::fs::write(&path, arr.render_pretty()).is_ok() {
+        let path = dir.join(format!("BENCH_{name}.json"));
+        if std::fs::write(&path, top.render_pretty()).is_ok() {
             println!("\nwrote {}", path.display());
         }
     }
@@ -198,8 +218,11 @@ mod tests {
         assert_eq!(fmt_time(2.5e-9), "2.5 ns");
     }
 
+    // One test for everything env-var dependent (BENCH_QUICK /
+    // BENCH_OUT_DIR), run sequentially and cleaned up at the end, so
+    // parallel lib tests never race a set_var against an env read.
     #[test]
-    fn bench_runs_and_records() {
+    fn bench_records_and_finish_writes_json_with_meta() {
         std::env::set_var("BENCH_QUICK", "1");
         let mut b = Bencher::new();
         b.measure = Duration::from_millis(20);
@@ -207,5 +230,19 @@ mod tests {
         let s = b.bench("noop", || 1 + 1);
         assert!(s.iters >= 1);
         assert_eq!(b.results.len(), 1);
+
+        let dir = std::env::temp_dir().join("spgemm_aia_bench_out");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::env::set_var("BENCH_OUT_DIR", &dir);
+        let mut phases = Json::obj();
+        phases.set("symbolic_s", 0.25.into());
+        b.meta("phases/noop", phases);
+        b.finish("unittest");
+        std::env::remove_var("BENCH_OUT_DIR");
+        std::env::remove_var("BENCH_QUICK");
+        let text = std::fs::read_to_string(dir.join("BENCH_unittest.json")).expect("bench json written");
+        assert!(text.contains("\"schema\""), "{text}");
+        assert!(text.contains("\"results\""), "{text}");
+        assert!(text.contains("symbolic_s"), "{text}");
     }
 }

@@ -1,0 +1,208 @@
+//! Std-only error handling (the offline build has no `anyhow`): a
+//! string-backed error with context chaining, the familiar `anyhow!` /
+//! `bail!` / `ensure!` macros, and a `Context` extension trait for
+//! `Result` and `Option`.
+//!
+//! The API is the subset of anyhow this crate actually uses, so callers
+//! read identically to the anyhow idiom:
+//!
+//! ```
+//! use spgemm_aia::util::error::{bail, ensure, Context, Result};
+//!
+//! fn parse(s: &str) -> Result<usize> {
+//!     ensure!(!s.is_empty(), "empty input");
+//!     let n: usize = s.trim().parse()?;
+//!     if n == 0 {
+//!         bail!("zero is not a valid size");
+//!     }
+//!     Some(n).context("unreachable")
+//! }
+//! assert!(parse("12").is_ok());
+//! assert!(parse("").is_err());
+//! ```
+
+use std::fmt;
+
+/// A lightweight dynamic error: one message, with outer context segments
+/// prepended `"context: cause"` the way anyhow's alternate formatting
+/// (`{:#}`) renders a chain.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context segment (outermost first, anyhow-style).
+    pub fn context(mut self, c: impl fmt::Display) -> Error {
+        self.msg = format!("{c}: {}", self.msg);
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Any std error converts via `?`. `Error` itself deliberately does NOT
+// implement `std::error::Error`, which keeps this blanket impl coherent
+// with core's reflexive `From<T> for T`.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// Crate-wide result alias (defaults to [`Error`], second parameter kept
+/// so `Result<T, ConcreteError>` call sites still read naturally).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attaching extension for `Result` and `Option`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a context message.
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    /// Like [`Context::context`] but lazily built.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(c))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any displayable).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::util::error::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::util::error::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*).into())
+    };
+}
+
+/// [`bail!`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            // Not routed through format!: the stringified condition may
+            // contain `{`/`}` (closures, struct patterns).
+            return Err($crate::util::error::Error::msg(concat!("condition failed: `", stringify!($cond), "`")).into());
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+// Make the macros importable alongside the types:
+// `use crate::util::error::{anyhow, bail, ensure};`
+pub use crate::{anyhow, bail, ensure};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn failing_io() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/path")
+            .with_context(|| "reading config".to_string())?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = failing_io().unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.starts_with("reading config: "), "{msg}");
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let name = "x";
+        let e = anyhow!("unknown dataset {name}");
+        assert_eq!(e.to_string(), "unknown dataset x");
+        let e2 = anyhow!("{} + {}", 1, 2);
+        assert_eq!(e2.to_string(), "1 + 2");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(n: usize) -> Result<usize> {
+            ensure!(n < 10, "n too big: {n}");
+            if n == 5 {
+                bail!("five is right out");
+            }
+            Ok(n)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(f(12).unwrap_err().to_string().contains("too big"));
+        assert!(f(5).unwrap_err().to_string().contains("right out"));
+    }
+
+    #[test]
+    fn bare_ensure_reports_condition_text() {
+        fn f(s: &str) -> Result<()> {
+            // Braces in the stringified condition must not be treated as
+            // format placeholders.
+            ensure!(!s.contains('{'));
+            Ok(())
+        }
+        assert!(f("plain").is_ok());
+        let msg = f("has{brace").unwrap_err().to_string();
+        assert!(msg.contains("condition failed"), "{msg}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing field").unwrap_err();
+        assert_eq!(e.to_string(), "missing field");
+    }
+
+    #[test]
+    fn parse_errors_convert() {
+        fn p(s: &str) -> Result<usize> {
+            Ok(s.parse::<usize>()?)
+        }
+        assert!(p("abc").is_err());
+        assert_eq!(p("7").unwrap(), 7);
+    }
+}

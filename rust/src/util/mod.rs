@@ -1,10 +1,14 @@
 //! Cross-cutting utilities: deterministic RNG, std-only data parallelism,
-//! JSON emission, micro-bench harness, and property-testing support.
+//! JSON emission, error handling, micro-bench harness, and
+//! property-testing support.
 //!
-//! These exist in-tree because the build environment is offline and only
-//! the `xla` crate closure is vendored (see Cargo.toml).
+//! These exist in-tree because the build environment is offline: the
+//! crate is std-only (no rayon/serde/criterion/anyhow — see Cargo.toml),
+//! and the PJRT runtime's `xla` dependency is gated behind the `pjrt`
+//! feature.
 
 pub mod bench;
+pub mod error;
 pub mod json;
 pub mod parallel;
 pub mod qc;

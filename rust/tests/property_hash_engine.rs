@@ -1,0 +1,105 @@
+//! Property tests for the two-phase hash engine (`util/qc.rs` harness):
+//! against the dense-accumulator oracle (`spgemm/reference.rs`) the
+//! output structure must be **bit-for-bit** identical (rpt and col
+//! arrays) and values must agree to 1e-10, across RMAT and structured
+//! generators; and the refactored symbolic/numeric pipeline must equal
+//! the seed single-pass engine exactly.
+
+use spgemm_aia::gen::{rmat, structured, RmatParams};
+use spgemm_aia::sparse::Csr;
+use spgemm_aia::spgemm::hash;
+use spgemm_aia::spgemm::reference::spgemm_reference;
+use spgemm_aia::util::{qc, Pcg32};
+
+fn assert_matches_oracle(c: &Csr, r: &Csr, what: &str) {
+    assert_eq!((c.n_rows, c.n_cols), (r.n_rows, r.n_cols), "{what}: shape");
+    assert_eq!(c.rpt, r.rpt, "{what}: rpt differs (structure must be bit-for-bit)");
+    assert_eq!(c.col, r.col, "{what}: col differs (structure must be bit-for-bit)");
+    assert!(c.approx_eq(r, 1e-10), "{what}: values beyond 1e-10");
+    assert!(c.validate().is_ok(), "{what}: invalid CSR");
+}
+
+#[test]
+fn property_rmat_self_products_match_oracle() {
+    qc::check(10, 4242, |g| {
+        let n = 16 + g.dim() * 8;
+        let nnz = n * (2 + g.rng.below_usize(6));
+        let params = match g.rng.below_usize(3) {
+            0 => RmatParams::web(),
+            1 => RmatParams::citation(),
+            _ => RmatParams::uniform(),
+        };
+        let mut rng = Pcg32::seeded(g.rng.next_u64());
+        let a = rmat(n, nnz, params, &mut rng);
+        let r = spgemm_reference(&a, &a);
+        let c = hash::multiply(&a, &a);
+        assert_matches_oracle(&c, &r, "rmat self-product");
+        // The symbolic phase alone must already be exact (sizes, not
+        // bounds), and the two-phase result must equal the seed engine
+        // bit-for-bit — same structure AND same value bits.
+        let plan = hash::symbolic(&a, &a);
+        assert_eq!(plan.rpt, r.rpt, "symbolic plan sizes must be exact");
+        assert_eq!(c, hash::multiply_single_pass(&a, &a), "two-phase vs seed single-pass");
+    });
+}
+
+#[test]
+fn property_structured_self_products_match_oracle() {
+    qc::check(8, 2025, |g| {
+        let mut rng = Pcg32::seeded(g.rng.next_u64());
+        let n = 32 + g.dim() * 4;
+        let (name, a) = match g.rng.below_usize(4) {
+            0 => ("circuit", structured::circuit(n, &mut rng)),
+            1 => ("economics", structured::economics(n, &mut rng)),
+            2 => ("fem_banded", structured::fem_banded(n, 4, &mut rng)),
+            _ => ("p2p", structured::p2p(n, &mut rng)),
+        };
+        let r = spgemm_reference(&a, &a);
+        let c = hash::multiply(&a, &a);
+        assert_matches_oracle(&c, &r, name);
+        assert_eq!(c, hash::multiply_single_pass(&a, &a), "{name}: two-phase vs seed single-pass");
+    });
+}
+
+#[test]
+fn property_rectangular_products_and_plan_reuse() {
+    qc::check(10, 909, |g| {
+        let m = 1 + g.dim() * 2;
+        let k = 1 + g.dim();
+        let n = 1 + g.dim() * 3;
+        let mut rng = Pcg32::seeded(g.rng.next_u64());
+        let mut coo_a = spgemm_aia::sparse::Coo::new(m, k);
+        let mut coo_b = spgemm_aia::sparse::Coo::new(k, n);
+        for _ in 0..(m * k / 5).max(1) {
+            coo_a.push(rng.below_usize(m), rng.below_usize(k), rng.f64_range(-1.0, 1.0));
+        }
+        for _ in 0..(k * n / 5).max(1) {
+            coo_b.push(rng.below_usize(k), rng.below_usize(n), rng.f64_range(-1.0, 1.0));
+        }
+        let a = coo_a.to_csr();
+        let b = coo_b.to_csr();
+        let r = spgemm_reference(&a, &b);
+        // One plan, two numeric runs: the plan is a pure function of the
+        // structure and can be reused across value fills.
+        let plan = hash::symbolic(&a, &b);
+        let c1 = hash::numeric(&a, &b, &plan);
+        let c2 = hash::numeric(&a, &b, &plan);
+        assert_matches_oracle(&c1, &r, "rectangular");
+        assert_eq!(c1, c2, "numeric must be deterministic given a plan");
+    });
+}
+
+#[test]
+fn property_phase_times_are_consistent() {
+    qc::check(6, 31337, |g| {
+        let n = 64 + g.dim() * 8;
+        let mut rng = Pcg32::seeded(g.rng.next_u64());
+        let a = rmat(n, n * 6, RmatParams::web(), &mut rng);
+        let (c, t) = hash::multiply_timed(&a, &a);
+        assert!(c.validate().is_ok());
+        assert!(t.grouping_s >= 0.0 && t.symbolic_s >= 0.0 && t.numeric_s >= 0.0);
+        let total = t.total_s();
+        assert!((total - (t.grouping_s + t.symbolic_s + t.numeric_s)).abs() < 1e-15);
+        assert!(total > 0.0, "timed phases cannot all be zero-width");
+    });
+}

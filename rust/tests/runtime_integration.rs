@@ -8,6 +8,10 @@ use spgemm_aia::runtime::{Runtime, Tensor};
 use spgemm_aia::util::Pcg32;
 
 fn runtime_or_skip() -> Option<Runtime> {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("[skip] built without the `pjrt` feature (std-only stub runtime)");
+        return None;
+    }
     let dir = Runtime::artifacts_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("[skip] artifacts not built (run `make artifacts`)");
