@@ -17,6 +17,7 @@ fn main() -> spgemm_aia::util::error::Result<()> {
     repro::fig6();
     repro::fig7_fig8();
     repro::fig9();
+    repro::plan_reuse();
     if cfg!(feature = "pjrt") {
         match Runtime::new(&Runtime::artifacts_dir()) {
             Ok(mut rt) => {

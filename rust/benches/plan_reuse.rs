@@ -1,0 +1,80 @@
+//! Bench: plan-reuse batched execution (ROADMAP "Batched multi-matrix
+//! execution") on the MCL self-product workload.
+//!
+//! An MCL iteration re-multiplies the flow matrix against a structure
+//! that stabilises as clustering converges, so the symbolic phase can be
+//! planned once and amortised. This bench pins that win: a cold
+//! `multiply` (plan + fill every iteration) against a reused-plan
+//! numeric fill, an expansion chain of 4 iterations both ways, and the
+//! pipelined `BatchExecutor` path where planning of product k+1 hides
+//! behind the fill of product k. Per-dataset speedups and the plan/fill
+//! split land in the JSON meta; CI archives `BENCH_plan_reuse.json` as
+//! part of the perf trajectory.
+
+use spgemm_aia::coordinator::batch::BatchExecutor;
+use spgemm_aia::gen;
+use spgemm_aia::spgemm::hash::{self, PlannedProduct};
+use spgemm_aia::util::bench::{bb, Bencher};
+use spgemm_aia::util::json::Json;
+
+fn main() {
+    let mut b = Bencher::new();
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let names: &[&str] =
+        if quick { &["Economics", "scircuit"] } else { &["Economics", "scircuit", "p2p-Gnutella04", "amazon0601", "cage15"] };
+
+    for name in names {
+        let ds = gen::table2_by_name(name).unwrap();
+        let a = (ds.gen)(1);
+        b.group(&format!("plan_reuse/{name}"));
+
+        // One MCL expansion, cold: grouping + symbolic + numeric per call.
+        let cold = b.bench("cold plan+fill", || bb(hash::multiply(&a, &a).nnz()));
+        // One MCL expansion with the structure already planned: numeric only.
+        let plan = PlannedProduct::plan(&a, &a);
+        let reused = b.bench("reused fill", || bb(plan.fill(&a, &a).nnz()));
+        let speedup = cold.median / reused.median;
+        println!("  -> reused-plan fill speedup over cold plan+fill: {speedup:.2}x");
+        b.meta(&format!("reuse_speedup/{name}"), Json::Num(speedup));
+        b.meta(&format!("plan_times/{name}"), plan.plan_times.to_json());
+
+        // A 4-iteration expansion chain (structure stable), both ways.
+        let chain_cold = b.bench("mcl-chain-4/cold", || {
+            let mut nnz = 0;
+            for _ in 0..4 {
+                nnz = hash::multiply(&a, &a).nnz();
+            }
+            bb(nnz)
+        });
+        let chain_reused = b.bench("mcl-chain-4/reused", || {
+            let p = PlannedProduct::plan(&a, &a);
+            let mut nnz = 0;
+            for _ in 0..4 {
+                nnz = p.fill(&a, &a).nnz();
+            }
+            bb(nnz)
+        });
+        b.meta(&format!("chain4_speedup/{name}"), Json::Num(chain_cold.median / chain_reused.median));
+
+        // Pipelined batch over 4 structurally distinct products (the
+        // planner thread overlaps the fills; identical structures would
+        // be deduped to one plan) vs the serial equivalent.
+        let variants: Vec<_> = (0..4u64).map(|k| (ds.gen)(1 + k)).collect();
+        let pairs: Vec<_> = variants.iter().map(|m| (m, m)).collect();
+        let serial = b.bench("batch-4-distinct/serial", || {
+            bb(variants.iter().map(|m| hash::multiply(m, m).nnz()).sum::<usize>())
+        });
+        let piped = b.bench("batch-4-distinct/pipelined", || {
+            let mut bx = BatchExecutor::new(4);
+            bb(bx.execute_batch(&pairs).len())
+        });
+        b.meta(&format!("batch_pipeline_speedup/{name}"), Json::Num(serial.median / piped.median));
+        let mut bx = BatchExecutor::new(4);
+        bx.execute_batch(&pairs);
+        if let Some(r) = &bx.last_batch {
+            b.meta(&format!("batch_overlap_speedup/{name}"), Json::Num(r.overlap_speedup()));
+            b.meta(&format!("batch_stream_utilization/{name}"), Json::Num(r.streams.utilization()));
+        }
+    }
+    b.finish("plan_reuse");
+}

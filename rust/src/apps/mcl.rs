@@ -2,8 +2,16 @@
 //! (matrix self-product — the SpGEMM hot spot), pruning, inflation, and
 //! column normalization until the flow matrix converges; clusters are
 //! the connected components of the converged matrix.
+//!
+//! Expansion reuses the symbolic plan across iterations through
+//! [`SpgemmExecutor::multiply_reusing`]: pruning and inflation may
+//! change the flow matrix's structure early on (detected via the
+//! operands' structure hash → replan), but as the flow stabilises the
+//! pattern repeats and later iterations pay only the numeric phase.
+//! [`MclResult`] reports the hit/miss split.
 
 use crate::coordinator::executor::SpgemmExecutor;
+use crate::spgemm::hash::PlannedProduct;
 use crate::sparse::ops;
 use crate::sparse::Csr;
 
@@ -38,6 +46,11 @@ pub struct MclResult {
     /// Simulated SpGEMM time (ms) if the executor simulates.
     pub sim_ms: f64,
     pub converged: bool,
+    /// Expansions served from a reused symbolic plan (functional hash
+    /// executors only — 0 under simulation or the ESC baseline).
+    pub plan_hits: usize,
+    /// Expansions that had to (re)plan.
+    pub plan_misses: usize,
 }
 
 /// Run MCL on (possibly weighted) adjacency `g` with the executor's
@@ -45,17 +58,22 @@ pub struct MclResult {
 pub fn mcl(g: &Csr, params: &MclParams, ex: &mut SpgemmExecutor) -> MclResult {
     assert_eq!(g.n_rows, g.n_cols, "MCL needs a square adjacency");
     let before = ex.sim_ms;
+    let (hits0, misses0) = (ex.plan_hits, ex.plan_misses);
     // Algorithm 6 lines 1–3.
     let with_loops = ops::add_self_loops(g, 1.0);
     let mut a = ops::column_normalize(&with_loops);
     let mut converged = false;
     let mut iterations = 0;
+    // One plan slot per expansion step: step s always multiplies A^s·A,
+    // so when prune/inflate leave the flow structure unchanged between
+    // iterations every step reuses its plan (structure-hash checked).
+    let mut plans: Vec<Option<PlannedProduct>> = (1..params.expansion).map(|_| None).collect();
     for _ in 0..params.max_iters {
         iterations += 1;
         // Expansion: A^e through the SpGEMM engine.
         let mut b = a.clone();
-        for _ in 1..params.expansion {
-            b = ex.multiply(&b, &a);
+        for slot in plans.iter_mut() {
+            b = ex.multiply_reusing(slot, &b, &a);
         }
         // Prune (θ, top-k per column).
         let c = ops::prune_columns(&b, params.theta, params.top_k);
@@ -71,7 +89,15 @@ pub fn mcl(g: &Csr, params: &MclParams, ex: &mut SpgemmExecutor) -> MclResult {
     }
     let clusters_raw = ops::connected_components(&a.drop_zeros());
     let n_clusters = clusters_raw.iter().copied().max().map(|m| m + 1).unwrap_or(0);
-    MclResult { clusters: clusters_raw, n_clusters, iterations, sim_ms: ex.sim_ms - before, converged }
+    MclResult {
+        clusters: clusters_raw,
+        n_clusters,
+        iterations,
+        sim_ms: ex.sim_ms - before,
+        converged,
+        plan_hits: ex.plan_hits - hits0,
+        plan_misses: ex.plan_misses - misses0,
+    }
 }
 
 #[cfg(test)]
@@ -155,5 +181,24 @@ mod tests {
         let r = mcl(&g, &MclParams { max_iters: 3, tol: 0.0, ..Default::default() }, &mut ex);
         // e=2 → 1 SpGEMM per iteration
         assert_eq!(ex.jobs, r.iterations);
+        // Every expansion is accounted as a plan hit or a plan miss.
+        assert_eq!(r.plan_hits + r.plan_misses, r.iterations);
+    }
+
+    #[test]
+    fn converging_mcl_reuses_plans() {
+        let g = two_cluster_graph();
+        let mut ex = SpgemmExecutor::fast(Variant::Hash);
+        let r = mcl(&g, &MclParams::default(), &mut ex);
+        assert!(r.converged);
+        assert!(r.plan_misses >= 1, "first expansion always plans");
+        // The flow structure stabilises well before Frobenius convergence,
+        // so a converged run must have reused at least one plan.
+        assert!(r.plan_hits >= 1, "expected plan reuse on a converging run (iters={})", r.iterations);
+        // Simulated executors keep pricing full kernels: no plan counters.
+        let mut sim = SpgemmExecutor::simulated(Variant::HashAia);
+        let rs = mcl(&g, &MclParams { max_iters: 2, ..Default::default() }, &mut sim);
+        assert_eq!((rs.plan_hits, rs.plan_misses), (0, 0));
+        assert!(rs.sim_ms > 0.0);
     }
 }

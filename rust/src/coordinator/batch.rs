@@ -1,0 +1,448 @@
+//! Batched plan-reuse execution (ROADMAP "Batched multi-matrix
+//! execution" + "AIA-aware bin scheduling").
+//!
+//! [`BatchExecutor`] drives the engine's plan-reuse layer
+//! ([`PlannedProduct`]) at application scope:
+//!
+//! - **Pipelined batches** — [`BatchExecutor::execute_batch`] plans a
+//!   set of products on a dedicated planner thread and streams the
+//!   numeric fills on the calling thread, so symbolic analysis of
+//!   product *k+1* overlaps the numeric fill of product *k* (the
+//!   host-side analogue of running the two phases on separate CUDA
+//!   streams). The Table-I bins of every planned product are also packed
+//!   onto the coordinator's stream model with
+//!   [`schedule_lpt`], which lets the group-3 (global-table, AIA-heavy)
+//!   bins co-schedule with the PWPR bins instead of serializing after
+//!   them; the resulting [`Schedule`] lands in the [`BatchReport`].
+//! - **Plan caching** — plans are keyed by the operands' structure
+//!   hashes and shared: [`BatchExecutor::multiply_cached`] reuses across
+//!   calls, and [`BatchExecutor::execute_batch`] dedupes repeated
+//!   structures within a batch, consults the cache, and seeds it with
+//!   the plans it builds — so iterative callers (MCL expansions, GNN
+//!   epochs) pay the symbolic phase only when a structure is genuinely
+//!   new. Hit/miss counts live in [`BatchStats`].
+//!
+//! Both paths produce output bit-identical to a cold
+//! [`crate::spgemm::hash::multiply`].
+//!
+//! Note on units: the stream-model job weights are **intermediate-product
+//! counts**, not milliseconds — see [`BatchExecutor::stream_schedule`].
+
+use super::metrics::Metrics;
+use super::scheduler::{schedule_lpt, Job, Schedule};
+use crate::spgemm::hash::{pair_key_from_hashes, PlannedProduct};
+use crate::sparse::Csr;
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// How many planned-but-unfilled products the pipeline holds: the
+/// planner thread runs at most this far ahead of the numeric fills,
+/// bounding peak plan memory.
+const PIPELINE_DEPTH: usize = 2;
+
+/// Plans cached by [`BatchExecutor::multiply_cached`] before arbitrary
+/// eviction kicks in (iterative workloads cycle over a handful of
+/// structures; this only bounds pathological callers).
+const CACHE_CAP: usize = 32;
+
+/// Counters accumulated across a [`BatchExecutor`]'s lifetime.
+#[derive(Clone, Debug, Default)]
+pub struct BatchStats {
+    /// Symbolic plans built (products whose structure was new).
+    pub plans_built: usize,
+    /// Numeric fills executed.
+    pub fills: usize,
+    /// Products (cached calls or batch members) served by an existing
+    /// or batch-shared plan.
+    pub plan_hits: usize,
+    /// Products that had to build a plan.
+    pub plan_misses: usize,
+    /// Wall seconds spent building plans (grouping + symbolic).
+    pub plan_s: f64,
+    /// Wall seconds spent in numeric fills.
+    pub fill_s: f64,
+}
+
+impl BatchStats {
+    /// Fraction of products served without replanning.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.plan_hits + self.plan_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.plan_hits as f64 / total as f64
+        }
+    }
+}
+
+/// What one [`BatchExecutor::execute_batch`] call did.
+#[derive(Clone, Debug)]
+pub struct BatchReport {
+    /// Products executed.
+    pub products: usize,
+    /// Wall time of the whole pipelined batch.
+    pub wall_s: f64,
+    /// Summed plan (grouping + symbolic) wall seconds for the batch's
+    /// *unique* structures — runs on the planner thread, overlapped
+    /// with fills; repeated structures share one plan.
+    pub plan_s: f64,
+    /// Summed numeric-fill wall seconds (calling thread).
+    pub fill_s: f64,
+    /// Table-I bins of every product packed onto the stream model with
+    /// LPT. **Weights are intermediate-product counts, not ms** — the
+    /// `Schedule`'s `*_ms` fields are in IP units here, so only relative
+    /// quantities (assignment, utilization, makespan ratios) are
+    /// meaningful; do not compare against simulated `sim_ms`.
+    pub streams: Schedule,
+}
+
+impl BatchReport {
+    /// Overlap win: serial plan+fill seconds divided by the pipelined
+    /// wall seconds (> 1 when planning hid behind fills).
+    pub fn overlap_speedup(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            return 1.0;
+        }
+        (self.plan_s + self.fill_s) / self.wall_s
+    }
+}
+
+/// Plans once, fills many: the coordinator-level entry point for
+/// iterative and batched SpGEMM (MCL expansion chains, GNN epochs,
+/// benchmark sweeps).
+///
+/// # Example
+///
+/// ```
+/// use spgemm_aia::coordinator::batch::BatchExecutor;
+/// use spgemm_aia::sparse::Csr;
+///
+/// let a = Csr::identity(16);
+/// let mut ex = BatchExecutor::new(4);
+///
+/// // Batched: planning of product k+1 overlaps the fill of product k;
+/// // the repeated structure here is planned once and shared.
+/// let out = ex.execute_batch(&[(&a, &a), (&a, &a)]);
+/// assert_eq!(out.len(), 2);
+/// assert_eq!(out[0], out[1]);
+///
+/// // Cached: a repeated structure reuses its plan (numeric phase only).
+/// let c1 = ex.multiply_cached(&a, &a);
+/// let c2 = ex.multiply_cached(&a, &a);
+/// assert_eq!(c1, c2);
+/// assert!(ex.stats.plan_hits >= 1);
+/// ```
+pub struct BatchExecutor {
+    /// Streams the bin-level [`Schedule`] packs onto (paper §III-C
+    /// launches each row group on its own stream).
+    pub n_streams: usize,
+    /// Lifetime counters.
+    pub stats: BatchStats,
+    /// Report for the most recent [`BatchExecutor::execute_batch`] call.
+    pub last_batch: Option<BatchReport>,
+    cache: HashMap<u64, Arc<PlannedProduct>>,
+}
+
+impl BatchExecutor {
+    pub fn new(n_streams: usize) -> BatchExecutor {
+        assert!(n_streams > 0, "need at least one stream");
+        BatchExecutor {
+            n_streams,
+            stats: BatchStats::default(),
+            last_batch: None,
+            cache: HashMap::new(),
+        }
+    }
+
+    /// Execute a batch of products with the symbolic/numeric pipeline:
+    /// a planner thread produces [`PlannedProduct`]s in input order
+    /// (running a bounded number of products ahead) while the calling
+    /// thread runs the numeric fills. Repeated structures — within the
+    /// batch or already in the plan cache — share one plan, and plans
+    /// built here seed the cache for later
+    /// [`BatchExecutor::multiply_cached`] calls. Outputs are returned in
+    /// input order and are bit-identical to per-pair
+    /// [`crate::spgemm::hash::multiply`] calls.
+    pub fn execute_batch(&mut self, pairs: &[(&Csr, &Csr)]) -> Vec<Csr> {
+        let t_batch = Instant::now();
+        let mut plan_s = 0.0;
+        let mut fill_s = 0.0;
+        let mut reused = 0usize;
+        let mut fresh_plans: Vec<Arc<PlannedProduct>> = Vec::new();
+        let mut jobs: Vec<Job> = Vec::new();
+        let mut out: Vec<Option<Csr>> = Vec::new();
+        out.resize_with(pairs.len(), || None);
+        // Read-only view of the cache for the planner thread (Arc
+        // clones — the plans themselves are shared, not copied).
+        let snapshot = self.cache.clone();
+        std::thread::scope(|s| {
+            let (tx, rx) = mpsc::sync_channel::<(usize, Arc<PlannedProduct>, bool)>(PIPELINE_DEPTH);
+            s.spawn(move || {
+                // Plans built earlier in this batch, keyed like the cache.
+                let mut built: HashMap<u64, Arc<PlannedProduct>> = HashMap::new();
+                for (i, &(a, b)) in pairs.iter().enumerate() {
+                    let (ah, bh) = (a.structure_hash(), b.structure_hash());
+                    let key = pair_key_from_hashes(ah, bh);
+                    let existing = built
+                        .get(&key)
+                        .or_else(|| snapshot.get(&key))
+                        .filter(|p| p.matches_fingerprint((a.n_rows, a.n_cols), (b.n_rows, b.n_cols), ah, bh))
+                        .cloned();
+                    let (p, fresh) = match existing {
+                        Some(p) => (p, false),
+                        None => {
+                            let p = Arc::new(PlannedProduct::plan(a, b));
+                            built.insert(key, Arc::clone(&p));
+                            (p, true)
+                        }
+                    };
+                    if tx.send((i, p, fresh)).is_err() {
+                        return; // receiver unwound — stop planning
+                    }
+                }
+            });
+            for (i, p, fresh) in rx {
+                if fresh {
+                    plan_s += p.plan_times.total_s();
+                    fresh_plans.push(Arc::clone(&p));
+                } else {
+                    reused += 1;
+                }
+                for (g, &w) in p.group_work().iter().enumerate() {
+                    if w > 0 {
+                        jobs.push(Job { id: format!("p{i}/group{g}"), ms: w as f64 });
+                    }
+                }
+                let (a, b) = pairs[i];
+                // Unchecked: the planner thread validated (or freshly
+                // built) the plan against these operands' fingerprints.
+                let (c, secs) = p.fill_unchecked_timed(a, b);
+                fill_s += secs;
+                out[i] = Some(c);
+            }
+        });
+        let fresh_count = fresh_plans.len();
+        self.stats.plans_built += fresh_count;
+        self.stats.plan_misses += fresh_count;
+        self.stats.plan_hits += reused;
+        self.stats.fills += pairs.len();
+        self.stats.plan_s += plan_s;
+        self.stats.fill_s += fill_s;
+        for p in fresh_plans {
+            self.cache_insert(p.key(), p);
+        }
+        self.last_batch = Some(BatchReport {
+            products: pairs.len(),
+            wall_s: t_batch.elapsed().as_secs_f64(),
+            plan_s,
+            fill_s,
+            streams: schedule_lpt(&jobs, self.n_streams),
+        });
+        out.into_iter().map(|c| c.expect("pipeline produced every product")).collect()
+    }
+
+    /// Multiply through the plan cache: reuse the cached plan when the
+    /// operands' structure is unchanged (numeric phase only), replan and
+    /// cache otherwise. Hit/miss counts land in [`BatchStats`]. Each
+    /// operand is hashed exactly once per call (key and validation share
+    /// the fingerprints).
+    pub fn multiply_cached(&mut self, a: &Csr, b: &Csr) -> Csr {
+        let (ah, bh) = (a.structure_hash(), b.structure_hash());
+        let key = pair_key_from_hashes(ah, bh);
+        if let Some(p) = self.cache.get(&key) {
+            if p.matches_fingerprint((a.n_rows, a.n_cols), (b.n_rows, b.n_cols), ah, bh) {
+                self.stats.plan_hits += 1;
+                let (c, secs) = p.fill_unchecked_timed(a, b);
+                self.stats.fills += 1;
+                self.stats.fill_s += secs;
+                return c;
+            }
+        }
+        self.stats.plan_misses += 1;
+        let p = PlannedProduct::plan(a, b);
+        self.stats.plans_built += 1;
+        self.stats.plan_s += p.plan_times.total_s();
+        let (c, secs) = p.fill_unchecked_timed(a, b);
+        self.stats.fills += 1;
+        self.stats.fill_s += secs;
+        self.cache_insert(key, Arc::new(p));
+        c
+    }
+
+    /// Insert a plan, evicting an arbitrary entry at the cap.
+    fn cache_insert(&mut self, key: u64, p: Arc<PlannedProduct>) {
+        if self.cache.len() >= CACHE_CAP && !self.cache.contains_key(&key) {
+            let evict = self.cache.keys().next().copied();
+            if let Some(k) = evict {
+                self.cache.remove(&k);
+            }
+        }
+        self.cache.insert(key, p);
+    }
+
+    /// Number of plans currently cached.
+    pub fn cached_plans(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Drop every cached plan (e.g. after a sparsification event that
+    /// invalidates the structures the cache was keyed on).
+    pub fn invalidate(&mut self) {
+        self.cache.clear();
+    }
+
+    /// Model the §III-C stream assignment for one planned product: one
+    /// job per non-empty Table-I bin, weighted by the bin's summed
+    /// intermediate products, LPT-packed onto [`BatchExecutor::n_streams`]
+    /// streams.
+    ///
+    /// The weights are **IP counts, not milliseconds** — the returned
+    /// [`Schedule`]'s `*_ms` fields are in IP units, so use it for
+    /// relative comparisons (assignment, utilization, makespan ratios)
+    /// only, never against simulated `sim_ms` values.
+    pub fn stream_schedule(&self, p: &PlannedProduct) -> Schedule {
+        let jobs: Vec<Job> = p
+            .group_work()
+            .iter()
+            .enumerate()
+            .filter(|&(_, &w)| w > 0)
+            .map(|(g, &w)| Job { id: format!("group{g}"), ms: w as f64 })
+            .collect();
+        schedule_lpt(&jobs, self.n_streams)
+    }
+
+    /// Export counters into a [`Metrics`] registry under `batch.*`.
+    pub fn export_metrics(&self, m: &mut Metrics) {
+        m.inc("batch.plans_built", self.stats.plans_built as u64);
+        m.inc("batch.fills", self.stats.fills as u64);
+        m.inc("batch.plan_hits", self.stats.plan_hits as u64);
+        m.inc("batch.plan_misses", self.stats.plan_misses as u64);
+        m.add_time("batch.plan", self.stats.plan_s);
+        m.add_time("batch.fill", self.stats.fill_s);
+        m.gauge("batch.plan_hit_rate", self.stats.hit_rate());
+        if let Some(r) = &self.last_batch {
+            m.gauge("batch.last.overlap_speedup", r.overlap_speedup());
+            m.gauge("batch.last.stream_utilization", r.streams.utilization());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spgemm::hash;
+    use crate::util::Pcg32;
+
+    fn random_square(seed: u64, n: usize, per_row: usize) -> Csr {
+        let mut rng = Pcg32::seeded(seed);
+        crate::gen::rmat(n, n * per_row, crate::gen::RmatParams::uniform(), &mut rng)
+    }
+
+    #[test]
+    fn batch_matches_serial_multiplies() {
+        let a = random_square(1, 128, 4);
+        let b = random_square(2, 128, 5);
+        let pairs = [(&a, &a), (&a, &b), (&b, &b)];
+        let mut ex = BatchExecutor::new(4);
+        let out = ex.execute_batch(&pairs);
+        assert_eq!(out.len(), 3);
+        for (i, &(x, y)) in pairs.iter().enumerate() {
+            assert_eq!(out[i], hash::multiply(x, y), "batch product {i} must equal cold multiply");
+        }
+        let r = ex.last_batch.as_ref().expect("batch report recorded");
+        assert_eq!(r.products, 3);
+        assert!(r.wall_s > 0.0 && r.plan_s > 0.0 && r.fill_s > 0.0);
+        assert!(r.streams.makespan_ms > 0.0);
+        // Three distinct structures: every product had to plan.
+        assert_eq!(ex.stats.plans_built, 3);
+        assert_eq!(ex.stats.fills, 3);
+        assert_eq!(ex.stats.plan_hits, 0);
+    }
+
+    #[test]
+    fn batch_dedupes_repeated_structures_and_seeds_cache() {
+        let a = random_square(8, 96, 4);
+        let mut ex = BatchExecutor::new(2);
+        let out = ex.execute_batch(&[(&a, &a), (&a, &a), (&a, &a)]);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0], out[2]);
+        assert_eq!(ex.stats.plans_built, 1, "identical structures must share one plan");
+        assert_eq!((ex.stats.plan_hits, ex.stats.plan_misses), (2, 1));
+        // The batch's plan seeded the cache: a following cached multiply
+        // hits, and a second identical batch plans nothing.
+        ex.multiply_cached(&a, &a);
+        assert_eq!(ex.stats.plan_hits, 3);
+        assert_eq!(ex.cached_plans(), 1);
+        ex.execute_batch(&[(&a, &a)]);
+        assert_eq!(ex.stats.plans_built, 1);
+        assert_eq!(ex.stats.plan_hits, 4);
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let mut ex = BatchExecutor::new(2);
+        assert!(ex.execute_batch(&[]).is_empty());
+        assert_eq!(ex.last_batch.as_ref().unwrap().products, 0);
+    }
+
+    #[test]
+    fn cache_hits_on_repeated_structure() {
+        let a = random_square(3, 96, 4);
+        let mut ex = BatchExecutor::new(2);
+        let c1 = ex.multiply_cached(&a, &a);
+        assert_eq!((ex.stats.plan_hits, ex.stats.plan_misses), (0, 1));
+        // Same structure, new values: must hit and still be exact.
+        let mut a2 = a.clone();
+        a2.map_values(|v| v * 0.5 + 1.0);
+        let c2 = ex.multiply_cached(&a2, &a2);
+        assert_eq!((ex.stats.plan_hits, ex.stats.plan_misses), (1, 1));
+        assert_eq!(c2, hash::multiply(&a2, &a2));
+        assert_ne!(c1, c2);
+        assert!(ex.stats.hit_rate() > 0.4 && ex.stats.hit_rate() < 0.6);
+        assert_eq!(ex.cached_plans(), 1);
+        ex.invalidate();
+        assert_eq!(ex.cached_plans(), 0);
+    }
+
+    #[test]
+    fn cache_replans_on_structure_change() {
+        let a = random_square(4, 96, 4);
+        let b = random_square(5, 96, 5);
+        let mut ex = BatchExecutor::new(2);
+        ex.multiply_cached(&a, &a);
+        let c = ex.multiply_cached(&b, &b);
+        assert_eq!(ex.stats.plan_misses, 2);
+        assert_eq!(c, hash::multiply(&b, &b));
+    }
+
+    #[test]
+    fn stream_schedule_covers_nonempty_bins() {
+        let a = random_square(6, 256, 6);
+        let p = crate::spgemm::hash::PlannedProduct::plan(&a, &a);
+        let ex = BatchExecutor::new(4);
+        let s = ex.stream_schedule(&p);
+        let nonempty = p.group_work().iter().filter(|&&w| w > 0).count();
+        assert_eq!(s.assignment.len(), nonempty);
+        assert!(s.makespan_ms > 0.0);
+        let total: f64 = p.group_work().iter().map(|&w| w as f64).sum();
+        assert!((s.serial_ms - total).abs() < 1e-9);
+    }
+
+    #[test]
+    fn metrics_export() {
+        let a = random_square(7, 96, 4);
+        let mut ex = BatchExecutor::new(2);
+        ex.multiply_cached(&a, &a); // miss, plan cached
+        ex.multiply_cached(&a, &a); // hit
+        ex.execute_batch(&[(&a, &a)]); // hit via the cache snapshot
+        let mut m = Metrics::new();
+        ex.export_metrics(&mut m);
+        assert_eq!(m.counter("batch.plan_hits"), 2);
+        assert_eq!(m.counter("batch.plan_misses"), 1);
+        assert_eq!(m.counter("batch.plans_built"), 1);
+        assert_eq!(m.counter("batch.fills"), 3);
+        assert!(m.timer_total("batch.fill") >= 0.0);
+    }
+}

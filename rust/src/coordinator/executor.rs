@@ -4,11 +4,16 @@
 //! simulation and accumulates per-job simulated time, so iterative
 //! applications (MCL, GNN training) can report end-to-end SpGEMM time
 //! per variant exactly the way the paper's figures do (AIA / no-AIA /
-//! cuSPARSE).
+//! cuSPARSE). Iterative callers whose operand structure repeats across
+//! jobs use [`SpgemmExecutor::multiply_reusing`], which keeps a
+//! [`PlannedProduct`] slot alive across calls and skips the
+//! grouping/symbolic phases whenever the structure is unchanged; hit and
+//! miss counts are accumulated and exported alongside the phase timers.
 
 use super::metrics::Metrics;
 use crate::sim::probe::PhaseTimes;
 use crate::sim::{simulate_spgemm, AiaMode, SimConfig, SimReport};
+use crate::spgemm::hash::PlannedProduct;
 use crate::spgemm::{hash, ip, spgemm, Algo};
 use crate::sparse::Csr;
 
@@ -76,6 +81,11 @@ pub struct SpgemmExecutor {
     /// jobs (grouping/symbolic/numeric — zero for simulated executors
     /// and non-hash engines).
     pub phase_times: PhaseTimes,
+    /// [`SpgemmExecutor::multiply_reusing`] jobs served by a cached plan
+    /// (numeric phase only).
+    pub plan_hits: usize,
+    /// [`SpgemmExecutor::multiply_reusing`] jobs that had to (re)plan.
+    pub plan_misses: usize,
 }
 
 impl SpgemmExecutor {
@@ -104,6 +114,8 @@ impl SpgemmExecutor {
             jobs: 0,
             reports: Vec::new(),
             phase_times: PhaseTimes::default(),
+            plan_hits: 0,
+            plan_misses: 0,
         }
     }
 
@@ -129,6 +141,48 @@ impl SpgemmExecutor {
         }
     }
 
+    /// Run one SpGEMM job with plan reuse: if `slot` holds a plan whose
+    /// structure fingerprints match `(a, b)`, only the numeric phase
+    /// runs; otherwise the job replans and stores the new plan in
+    /// `slot`. Output is bit-identical to [`SpgemmExecutor::multiply`].
+    ///
+    /// Only the functional hash path reuses plans — simulated executors
+    /// and the ESC baseline fall through to [`SpgemmExecutor::multiply`]
+    /// (the machine model prices the full kernel regardless, and ESC has
+    /// no symbolic plan), leaving the hit/miss counters untouched.
+    pub fn multiply_reusing(&mut self, slot: &mut Option<PlannedProduct>, a: &Csr, b: &Csr) -> Csr {
+        if self.sim.is_some() || self.variant.algo() != Algo::Hash {
+            return self.multiply(a, b);
+        }
+        self.jobs += 1;
+        let reuse = slot.as_ref().is_some_and(|p| p.matches(a, b));
+        if reuse {
+            self.plan_hits += 1;
+        } else {
+            let p = PlannedProduct::plan(a, b);
+            self.phase_times.accumulate(&p.plan_times);
+            self.plan_misses += 1;
+            *slot = Some(p);
+        }
+        let p = slot.as_ref().expect("slot was just filled on miss");
+        // Unchecked: hits were validated by `matches` above; misses hold
+        // a plan built from these exact operands.
+        let (c, numeric_s) = p.fill_unchecked_timed(a, b);
+        self.phase_times.accumulate(&PhaseTimes { grouping_s: 0.0, symbolic_s: 0.0, numeric_s });
+        c
+    }
+
+    /// Fraction of [`SpgemmExecutor::multiply_reusing`] jobs served from
+    /// a cached plan (0 when no reusing jobs ran).
+    pub fn plan_hit_rate(&self) -> f64 {
+        let total = self.plan_hits + self.plan_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.plan_hits as f64 / total as f64
+        }
+    }
+
     /// Aggregate GFLOPS over all jobs so far (paper's metric).
     pub fn gflops(&self) -> f64 {
         crate::sim::gflops(self.total_ip, self.sim_ms)
@@ -139,6 +193,8 @@ impl SpgemmExecutor {
     pub fn export_metrics(&self, m: &mut Metrics) {
         let prefix = format!("spgemm.{}", self.variant.name());
         m.inc(&format!("{prefix}.jobs"), self.jobs as u64);
+        m.inc(&format!("{prefix}.plan_hits"), self.plan_hits as u64);
+        m.inc(&format!("{prefix}.plan_misses"), self.plan_misses as u64);
         m.gauge(&format!("{prefix}.sim_ms"), self.sim_ms);
         m.observe_phase_times(&prefix, &self.phase_times);
     }
@@ -174,6 +230,49 @@ mod tests {
         ex.export_metrics(&mut m);
         assert_eq!(m.counter("spgemm.hash.jobs"), 1);
         assert!(m.timer_total("spgemm.hash.numeric") >= 0.0);
+    }
+
+    #[test]
+    fn multiply_reusing_hits_on_stable_structure() {
+        let a = crate::gen::rmat(192, 1200, crate::gen::RmatParams::uniform(), &mut Pcg32::seeded(4));
+        let mut ex = SpgemmExecutor::fast(Variant::Hash);
+        let mut slot = None;
+        let c1 = ex.multiply_reusing(&mut slot, &a, &a);
+        assert_eq!((ex.plan_hits, ex.plan_misses), (0, 1));
+        // Same structure, new values: plan must be reused and exact.
+        let mut a2 = a.clone();
+        a2.map_values(|v| v + 1.0);
+        let c2 = ex.multiply_reusing(&mut slot, &a2, &a2);
+        assert_eq!((ex.plan_hits, ex.plan_misses), (1, 1));
+        assert_eq!(c2, crate::spgemm::hash::multiply(&a2, &a2));
+        assert_ne!(c1, c2);
+        assert_eq!(ex.jobs, 2);
+        assert!((ex.plan_hit_rate() - 0.5).abs() < 1e-12);
+        // Structural change replans into the same slot.
+        let b = crate::gen::rmat(192, 1400, crate::gen::RmatParams::uniform(), &mut Pcg32::seeded(5));
+        let c3 = ex.multiply_reusing(&mut slot, &b, &b);
+        assert_eq!((ex.plan_hits, ex.plan_misses), (1, 2));
+        assert_eq!(c3, crate::spgemm::hash::multiply(&b, &b));
+        // Counters export into the metrics registry.
+        let mut m = Metrics::new();
+        ex.export_metrics(&mut m);
+        assert_eq!(m.counter("spgemm.hash.plan_hits"), 1);
+        assert_eq!(m.counter("spgemm.hash.plan_misses"), 2);
+    }
+
+    #[test]
+    fn multiply_reusing_falls_back_for_esc_and_sim() {
+        let a = crate::gen::rmat(128, 800, crate::gen::RmatParams::uniform(), &mut Pcg32::seeded(6));
+        let mut esc = SpgemmExecutor::fast(Variant::Cusparse);
+        let mut slot = None;
+        let c = esc.multiply_reusing(&mut slot, &a, &a);
+        assert!(slot.is_none(), "ESC path must not populate the plan slot");
+        assert_eq!((esc.plan_hits, esc.plan_misses), (0, 0));
+        assert!(c.approx_eq(&crate::spgemm::hash::multiply(&a, &a), 1e-10));
+        let mut sim = SpgemmExecutor::simulated(Variant::HashAia);
+        sim.multiply_reusing(&mut slot, &a, &a);
+        assert!(slot.is_none(), "simulated path must not populate the plan slot");
+        assert_eq!(sim.reports.len(), 1, "simulated path must still price the full kernel");
     }
 
     #[test]

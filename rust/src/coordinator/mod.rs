@@ -1,9 +1,12 @@
 //! L3 coordination layer: the SpGEMM job executor (variant selection +
-//! simulated-time accounting), the group/stream scheduler, and the
-//! metrics registry.
+//! simulated-time accounting), the plan-reuse batch executor (pipelined
+//! symbolic/numeric execution + plan caching for iterative workloads),
+//! the group/stream scheduler, and the metrics registry.
 
+pub mod batch;
 pub mod executor;
 pub mod metrics;
 pub mod scheduler;
 
+pub use batch::{BatchExecutor, BatchReport, BatchStats};
 pub use executor::{SpgemmExecutor, Variant};

@@ -6,7 +6,10 @@
 //! The scheduler assigns simulated job times to `n_streams` queues with
 //! LPT (longest-processing-time-first) and reports the makespan — the
 //! batch-level latency a multi-stream GPU run would see — alongside
-//! per-stream utilization.
+//! per-stream utilization. The plan-reuse batch executor
+//! ([`super::batch::BatchExecutor`]) feeds it the IP-weighted Table-I
+//! bins of every planned product, so the group-3 (AIA-heavy) bins
+//! co-schedule with the PWPR bins.
 
 /// One schedulable job: an opaque id plus its (simulated) duration.
 #[derive(Clone, Debug)]

@@ -17,6 +17,7 @@ use super::sparsify::{apply_mask, csr_from_masked, dense_from_csr, topk_abs_csr}
 use crate::coordinator::executor::{SpgemmExecutor, Variant};
 use crate::runtime::{Runtime, Tensor};
 use crate::sparse::Csr;
+use crate::spgemm::hash::PlannedProduct;
 use crate::util::Pcg32;
 use crate::util::error::Result;
 
@@ -65,6 +66,25 @@ pub enum AdjKind {
     Gin,
 }
 
+/// Dense index for the per-[`AdjKind`] caches.
+fn kind_idx(k: AdjKind) -> usize {
+    match k {
+        AdjKind::Gcn => 0,
+        AdjKind::Mean => 1,
+        AdjKind::Gin => 2,
+    }
+}
+
+/// The kind→adjacency map, as a free function so it also works under
+/// the split borrows in [`Trainer::aggregate`].
+fn data_adj(data: &GnnData, kind: AdjKind) -> &Csr {
+    match kind {
+        AdjKind::Gcn => &data.adj_gcn,
+        AdjKind::Mean => &data.adj_mean,
+        AdjKind::Gin => &data.adj_gin,
+    }
+}
+
 /// Hidden-layer forward cache for backprop.
 struct LayerCache {
     hp: Tensor,   // TopK-masked input (mask pattern source)
@@ -87,6 +107,16 @@ pub struct EpochStats {
 
 /// Hybrid trainer. `HIDDEN_LAYERS` GNN layers + aggregated output layer
 /// (3 aggregations per forward, matching the paper's 3-layer models).
+///
+/// The adjacency is static between sparsification events, so the
+/// trainer plans its sparse work once and reuses it across epochs:
+/// transposed adjacencies are built lazily and cached, and every
+/// aggregation call site owns a [`PlannedProduct`] slot driven through
+/// [`SpgemmExecutor::multiply_reusing`] — epochs whose top-k mask
+/// pattern repeats pay only the numeric phase ([`Trainer::plan_hit_rate`]
+/// reports how often that happened). Call
+/// [`Trainer::invalidate_plans`] after an event that changes an
+/// adjacency's structure.
 pub struct Trainer<'a> {
     pub rt: &'a mut Runtime,
     pub data: &'a GnnData,
@@ -101,6 +131,12 @@ pub struct Trainer<'a> {
     pub ex: SpgemmExecutor,
     /// SpGEMM jobs recorded on the most recent epoch.
     pub last_jobs: Vec<SpgemmJob>,
+    /// Cached transposed adjacencies, one per [`AdjKind`], built on
+    /// first backward use and kept until [`Trainer::invalidate_plans`].
+    adj_t: [Option<Csr>; 3],
+    /// One plan slot per aggregation call site (forward layers + forward
+    /// output, then the backward mirrors).
+    plan_slots: Vec<Option<PlannedProduct>>,
 }
 
 pub const HIDDEN_LAYERS: usize = 2;
@@ -127,20 +163,41 @@ impl<'a> Trainer<'a> {
             w_out,
             ex: SpgemmExecutor::fast(Variant::Hash),
             last_jobs: Vec::new(),
+            adj_t: [None, None, None],
+            plan_slots: (0..2 * (HIDDEN_LAYERS + 1)).map(|_| None).collect(),
         }
     }
 
+    /// Owned adjacency for variant replay ([`Trainer::simulate_epoch_ms`]).
+    /// The training hot path uses the cached references in
+    /// [`Trainer::aggregate`] instead.
     fn adj(&self, kind: AdjKind, transpose: bool) -> Csr {
-        let m = match kind {
-            AdjKind::Gcn => &self.data.adj_gcn,
-            AdjKind::Mean => &self.data.adj_mean,
-            AdjKind::Gin => &self.data.adj_gin,
-        };
+        let m = self.base_adj(kind);
         if transpose {
             m.transpose()
         } else {
             m.clone()
         }
+    }
+
+    fn base_adj(&self, kind: AdjKind) -> &Csr {
+        data_adj(self.data, kind)
+    }
+
+    /// Drop the cached transposes and every aggregation plan. Call after
+    /// a sparsification event that changes an adjacency's structure; the
+    /// next epoch transposes and plans once, then reuses again.
+    pub fn invalidate_plans(&mut self) {
+        self.adj_t = [None, None, None];
+        for s in self.plan_slots.iter_mut() {
+            *s = None;
+        }
+    }
+
+    /// Fraction of aggregations (across all epochs so far) served from a
+    /// reused plan instead of a fresh symbolic analysis.
+    pub fn plan_hit_rate(&self) -> f64 {
+        self.ex.plan_hit_rate()
     }
 
     fn agg_kind(&self) -> AdjKind {
@@ -151,10 +208,25 @@ impl<'a> Trainer<'a> {
         }
     }
 
-    /// One SpGEMM aggregation: `adjᵀ? · rhs`, recorded for variant replay.
-    fn aggregate(&mut self, kind: AdjKind, transpose: bool, rhs: Csr) -> Tensor {
-        let adj = self.adj(kind, transpose);
-        let out = self.ex.multiply(&adj, &rhs);
+    /// One SpGEMM aggregation: `adjᵀ? · rhs`, recorded for variant
+    /// replay. `slot` is this call site's plan-slot index: the adjacency
+    /// side is static between sparsification events, so whenever the rhs
+    /// mask pattern repeats the multiply reuses its plan and pays only
+    /// the numeric phase.
+    fn aggregate(&mut self, slot: usize, kind: AdjKind, transpose: bool, rhs: Csr) -> Tensor {
+        let idx = kind_idx(kind);
+        if transpose && self.adj_t[idx].is_none() {
+            self.adj_t[idx] = Some(self.base_adj(kind).transpose());
+        }
+        let out = {
+            let Trainer { ex, plan_slots, adj_t, data, .. } = self;
+            let adj: &Csr = if transpose {
+                adj_t[idx].as_ref().expect("transpose cached above")
+            } else {
+                data_adj(*data, kind)
+            };
+            ex.multiply_reusing(&mut plan_slots[slot], adj, &rhs)
+        };
         self.last_jobs.push(SpgemmJob { adj: kind, transpose, rhs });
         dense_from_csr(&out)
     }
@@ -169,7 +241,7 @@ impl<'a> Trainer<'a> {
             // L1 kernel artifact: TopK pruning (Eq. 2).
             let hp = self.rt.call("topk_mask", n, &[h.clone()])?.remove(0);
             let s = csr_from_masked(&hp);
-            let agg = self.aggregate(kind, false, s);
+            let agg = self.aggregate(l, kind, false, s);
             match self.arch {
                 Arch::Gcn => {
                     let mut out = self.rt.call("layer_fwd", n, &[agg.clone(), self.w_hidden[l].clone()])?;
@@ -204,7 +276,7 @@ impl<'a> Trainer<'a> {
         // Output layer: aggregate then linear (Eq. 1 with W_out).
         let hp_out = self.rt.call("topk_mask", n, &[h])?.remove(0);
         let s = csr_from_masked(&hp_out);
-        let agg_out = self.aggregate(kind, false, s);
+        let agg_out = self.aggregate(HIDDEN_LAYERS, kind, false, s);
         let logits = self.rt.call("out_fwd", n, &[agg_out.clone(), self.w_out.clone()])?.remove(0);
         Ok((logits, caches, agg_out, hp_out))
     }
@@ -228,7 +300,7 @@ impl<'a> Trainer<'a> {
         let dw_out = ob.remove(0);
         // Gradient aggregation: Âᵀ · TopK(G) (Eq. 3 realization).
         let g = topk_abs_csr(&dagg, self.k);
-        let dhp = self.aggregate(kind, true, g);
+        let dhp = self.aggregate(HIDDEN_LAYERS + 1, kind, true, g);
         let mut dh = apply_mask(&dhp, &hp_out);
 
         for l in (0..HIDDEN_LAYERS).rev() {
@@ -270,7 +342,7 @@ impl<'a> Trainer<'a> {
             // identical across layers, matching the paper's workload.
             {
                 let g = topk_abs_csr(&dagg_l, self.k);
-                let mut dhp = self.aggregate(kind, true, g);
+                let mut dhp = self.aggregate(HIDDEN_LAYERS + 2 + l, kind, true, g);
                 if let Some(ds) = d_self {
                     dhp.axpy(1.0, &ds);
                 }

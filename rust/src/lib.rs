@@ -5,9 +5,12 @@
 //! three-layer Rust + JAX + Pallas stack:
 //!
 //! - **L3 (this crate)** — the paper's hash-based multi-phase SpGEMM
-//!   engine, a cycle-approximate GPU + HBM + AIA memory-system simulator,
-//!   the evaluated applications (graph contraction, Markov clustering,
-//!   GNN training), and the coordinator/CLI.
+//!   engine with a plan-reuse layer for iterative workloads
+//!   ([`spgemm::hash::PlannedProduct`],
+//!   [`coordinator::batch::BatchExecutor`]), a cycle-approximate
+//!   GPU + HBM + AIA memory-system simulator, the evaluated
+//!   applications (graph contraction, Markov clustering, GNN training),
+//!   and the coordinator/CLI.
 //! - **L2 (`python/compile/model.py`)** — GNN dense compute (layer
 //!   fwd/bwd, loss) in JAX, AOT-lowered to HLO text artifacts.
 //! - **L1 (`python/compile/kernels/`)** — Pallas kernels (top-k pruning,
@@ -18,9 +21,11 @@
 //! cargo feature — the default build ships a std-only stub) and is
 //! self-contained.
 //!
-//! See `DESIGN.md` (repo root) for the full system inventory, the
-//! two-phase hash-engine split, and the experiment index mapping every
-//! paper table/figure to a module and bench target.
+//! See `README.md` (repo root) for the quickstart and bench workflow,
+//! and `DESIGN.md` for the full system inventory, the two-phase
+//! hash-engine split, the plan-reuse batched execution flow, and the
+//! experiment index mapping every paper table/figure to a module and
+//! bench target.
 
 // The engine mirrors the paper's GPU kernels: index-coupled loops over
 // CSR arrays and pointer-based disjoint writes are the idiom, not an

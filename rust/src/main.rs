@@ -3,7 +3,7 @@
 //! Subcommands (std-only arg parsing; the offline build has no clap):
 //!
 //! ```text
-//! spgemm-aia repro [all|table1|table2|table3|fig5|fig6|fig7|fig8|fig9|fig10|fig11]
+//! spgemm-aia repro [all|table1|table2|table3|fig5|fig6|fig7|fig8|fig9|fig10|fig11|planreuse]
 //! spgemm-aia spgemm --dataset <name> [--variant aia|hash|cusparse] [--seed N]
 //! spgemm-aia mcl --dataset <name> [--variant ...]
 //! spgemm-aia contract --dataset <name> [--variant ...]
@@ -62,7 +62,7 @@ fn run(args: &[String]) -> Result<()> {
 fn print_help() {
     println!(
         "spgemm-aia — hash-based multi-phase SpGEMM with near-HBM AIA (paper reproduction)\n\n\
-         USAGE:\n  spgemm-aia repro [all|table1|table2|table3|fig5|fig6|fig7|fig8|fig9|fig10|fig11]\n  \
+         USAGE:\n  spgemm-aia repro [all|table1|table2|table3|fig5|fig6|fig7|fig8|fig9|fig10|fig11|planreuse]\n  \
          spgemm-aia spgemm --dataset scircuit [--variant aia|hash|cusparse] [--seed N]\n  \
          spgemm-aia mcl --dataset Economics [--variant aia]\n  \
          spgemm-aia contract --dataset RoadTX [--variant aia]\n  \
@@ -131,6 +131,9 @@ fn cmd_repro(args: &[String]) -> Result<()> {
         "fig9" => {
             repro::fig9();
         }
+        "planreuse" | "plan-reuse" => {
+            repro::plan_reuse();
+        }
         "fig10" | "fig11" => {
             let mut rt = Runtime::new(&Runtime::artifacts_dir())?;
             repro::fig10_fig11(&mut rt)?;
@@ -142,6 +145,7 @@ fn cmd_repro(args: &[String]) -> Result<()> {
             repro::fig6();
             repro::fig7_fig8();
             repro::fig9();
+            repro::plan_reuse();
             // Figs 10/11 need a real PJRT backend. In stub builds skip
             // them rather than failing the other nine experiments; in
             // `pjrt` builds errors are genuine and must propagate.
@@ -268,5 +272,9 @@ fn cmd_gnn(args: &[String]) -> Result<()> {
     for v in Variant::all() {
         println!("  simulated SpGEMM/epoch {} = {:.2} ms", v.name(), trainer.simulate_epoch_ms(v));
     }
+    println!(
+        "  plan-reuse hit rate: {:.1}% of aggregations skipped the symbolic phase",
+        100.0 * trainer.plan_hit_rate()
+    );
     Ok(())
 }

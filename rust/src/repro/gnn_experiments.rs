@@ -119,6 +119,9 @@ pub struct TrainMeasurement {
     pub dense_gpu_ms: f64,
     /// Simulated SpGEMM ms/epoch per variant [AIA, noAIA, ESC].
     pub spgemm_ms: [f64; 3],
+    /// Fraction of the functional trainer's aggregations served from a
+    /// reused symbolic plan (plan-reuse batched execution).
+    pub plan_hit_rate: f64,
 }
 
 impl TrainMeasurement {
@@ -162,6 +165,7 @@ pub fn fig10_fig11(rt: &mut Runtime) -> Result<Json> {
     let mut out = Json::Arr(vec![]);
     let mut vs_sw = Vec::new();
     let mut vs_esc = Vec::new();
+    let mut hit_rates = Vec::new();
     for ds in active() {
         let data = GnnData::build(&ds, SEED);
         for arch in Arch::all() {
@@ -196,6 +200,8 @@ pub fn fig10_fig11(rt: &mut Runtime) -> Result<Json> {
             );
             o.set("reduction_vs_noaia_pct", r_sw.into());
             o.set("reduction_vs_cusparse_pct", r_esc.into());
+            o.set("plan_hit_rate", m.plan_hit_rate.into());
+            hit_rates.push(m.plan_hit_rate);
             out.push(o);
         }
     }
@@ -204,6 +210,10 @@ pub fn fig10_fig11(rt: &mut Runtime) -> Result<Json> {
         "\naverages: AIA vs software-only {:.1}% (paper: 30.3%), AIA vs cuSPARSE {:.1}% (paper: 48.6%)",
         avg(&vs_sw),
         avg(&vs_esc)
+    );
+    println!(
+        "functional-trainer plan-reuse hit rate: {:.1}% of aggregations skipped the symbolic phase",
+        100.0 * avg(&hit_rates)
     );
     save_json("fig10_fig11", &out);
     Ok(out)
@@ -231,5 +241,6 @@ pub fn train_one(rt: &mut Runtime, data: &GnnData, arch: Arch, epochs: usize) ->
         dense_secs_per_epoch: stats.dense_secs,
         dense_gpu_ms: dense_gpu_ms(data.n, arch),
         spgemm_ms,
+        plan_hit_rate: trainer.plan_hit_rate(),
     })
 }

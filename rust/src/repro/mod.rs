@@ -10,7 +10,7 @@ use crate::util::json::Json;
 
 pub use gnn_experiments::{fig10_fig11, fig9, table3};
 pub use graph_apps::{fig7_fig8, GRAPH_APP_DATASETS};
-pub use selfproduct::{fig5, fig6, table2};
+pub use selfproduct::{fig5, fig6, plan_reuse, table2};
 
 /// Default seed for every experiment (reproducible end to end).
 pub const SEED: u64 = 20250710;

@@ -76,9 +76,10 @@ impl Phase {
 /// Wall-clock seconds per engine phase on the *functional* path (the
 /// simulated path reports cycle-derived times through
 /// [`crate::sim::PhaseReport`] instead). Produced by
-/// `spgemm::hash::engine::multiply_timed`, accumulated by the
-/// coordinator's executor and metrics registry, and emitted into
-/// `BENCH_*.json` by `util::bench`.
+/// `spgemm::hash::engine::multiply_timed` and by the plan-reuse layer
+/// (`spgemm::hash::PlannedProduct` splits plan time from fill time),
+/// accumulated by the coordinator's executor and metrics registry, and
+/// emitted into `BENCH_*.json` by `util::bench`.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct PhaseTimes {
     pub grouping_s: f64,

@@ -205,6 +205,32 @@ impl Csr {
     pub fn bytes(&self) -> usize {
         self.rpt.len() * 8 + self.col.len() * 4 + self.val.len() * 8
     }
+
+    /// 64-bit hash of the sparsity *structure* — shape, `rpt`, and `col`;
+    /// values are excluded. A SpGEMM plan
+    /// ([`crate::spgemm::hash::SymbolicPlan`]) is a pure function of the
+    /// operands' structure, so plan-reuse keys on this hash: equal hashes
+    /// mean the cached plan is (up to a negligible collision probability)
+    /// valid for a new numeric fill. O(nnz), i.e. far below the cost of
+    /// the multiply it can save.
+    pub fn structure_hash(&self) -> u64 {
+        #[inline]
+        fn mix(h: u64, x: u64) -> u64 {
+            // FNV-1a word step plus an xorshift to spread low-entropy
+            // inputs (small column indices) across the high bits.
+            let h = (h ^ x).wrapping_mul(0x100_0000_01b3);
+            h ^ (h >> 29)
+        }
+        let mut h = mix(0xcbf2_9ce4_8422_2325, self.n_rows as u64);
+        h = mix(h, self.n_cols as u64);
+        for &p in &self.rpt {
+            h = mix(h, p as u64);
+        }
+        for &c in &self.col {
+            h = mix(h, c as u64);
+        }
+        h
+    }
 }
 
 #[cfg(test)]
@@ -278,6 +304,23 @@ mod tests {
         assert!(a.approx_eq(&b, 1e-10));
         b.val[0] += 1.0;
         assert!(!a.approx_eq(&b, 1e-10));
+    }
+
+    #[test]
+    fn structure_hash_ignores_values_and_sees_structure() {
+        let a = small();
+        let mut b = a.clone();
+        b.val[0] = 99.0;
+        assert_eq!(a.structure_hash(), b.structure_hash(), "values must not affect the structure hash");
+        // Moving an entry to a different column is a structural change.
+        let c = Csr::new(3, 3, vec![0, 2, 2, 4], vec![0, 1, 0, 1], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_ne!(a.structure_hash(), c.structure_hash());
+        // So is the same nnz distributed over different rows.
+        let d = Csr::new(3, 3, vec![0, 1, 2, 4], vec![0, 2, 0, 1], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_ne!(a.structure_hash(), d.structure_hash());
+        // And shape, even at identical arrays.
+        let e = Csr::new(3, 4, vec![0, 2, 2, 4], vec![0, 2, 0, 1], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_ne!(a.structure_hash(), e.structure_hash());
     }
 
     #[test]

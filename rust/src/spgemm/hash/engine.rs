@@ -23,7 +23,10 @@
 //!   ([`NullProbe`], instrumentation compiles away); `_timed` also
 //!   reports wall time per phase as a [`PhaseTimes`];
 //! - [`symbolic`] + [`numeric`] — the two phases as separate calls, for
-//!   callers that reuse a plan (or inspect it);
+//!   callers that reuse a plan (or inspect it); iterative callers should
+//!   prefer the validated handle [`super::plan::PlannedProduct`], which
+//!   binds a plan to the operands' structure hashes and amortises the
+//!   symbolic phase across numeric fills;
 //! - [`multiply_single_pass`] — the seed engine kept as the regression
 //!   baseline for `benches/spgemm_selfproduct.rs`;
 //! - [`multiply_traced`] — deterministic sequential path that emits the
@@ -87,6 +90,18 @@ pub fn multiply(a: &Csr, b: &Csr) -> Csr {
 
 /// [`multiply`] plus wall time per phase.
 pub fn multiply_timed(a: &Csr, b: &Csr) -> (Csr, PhaseTimes) {
+    let (plan, mut times) = symbolic_timed(a, b);
+    let t = Instant::now();
+    let c = numeric(a, b, &plan);
+    times.numeric_s = t.elapsed().as_secs_f64();
+    (c, times)
+}
+
+/// The symbolic half of [`multiply_timed`]: grouping + symbolic
+/// analysis with per-stage wall times (`numeric_s` left 0). Shared with
+/// the plan-reuse layer so phase attribution stays identical between
+/// cold multiplies and planned products.
+pub(super) fn symbolic_timed(a: &Csr, b: &Csr) -> (SymbolicPlan, PhaseTimes) {
     assert_eq!(a.n_cols, b.n_rows, "dimension mismatch");
     let t0 = Instant::now();
     let ip = intermediate_products(a, b);
@@ -97,11 +112,7 @@ pub fn multiply_timed(a: &Csr, b: &Csr) -> (Csr, PhaseTimes) {
     let plan = symbolic_with(a, b, ip, grouping);
     let symbolic_s = t1.elapsed().as_secs_f64();
 
-    let t2 = Instant::now();
-    let c = numeric(a, b, &plan);
-    let numeric_s = t2.elapsed().as_secs_f64();
-
-    (c, PhaseTimes { grouping_s, symbolic_s, numeric_s })
+    (plan, PhaseTimes { grouping_s, symbolic_s, numeric_s: 0.0 })
 }
 
 /// Symbolic phase: IP estimation, row binning, and exact per-row output
@@ -114,7 +125,7 @@ pub fn symbolic(a: &Csr, b: &Csr) -> SymbolicPlan {
 }
 
 /// Symbolic counting given precomputed IP + bins (shared by
-/// [`symbolic`] and [`multiply_timed`], which times the stages apart).
+/// [`symbolic`] and [`symbolic_timed`], which times the stages apart).
 fn symbolic_with(a: &Csr, b: &Csr, ip: Vec<u64>, grouping: Grouping) -> SymbolicPlan {
     let mut row_nnz = vec![0u32; a.n_rows];
     {

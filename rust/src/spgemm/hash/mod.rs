@@ -1,12 +1,16 @@
 //! Hash-based multi-phase SpGEMM (paper §III): row grouping (Table I),
 //! PWPR/TBPR thread assignment, the Algorithm-4 linear-probing hash
-//! table, and the explicit symbolic (size) / numeric (value) phases —
-//! see `DESIGN.md` §"Two-phase hash engine".
+//! table, the explicit symbolic (size) / numeric (value) phases, and the
+//! plan-reuse handle ([`PlannedProduct`]) that amortises symbolic
+//! analysis across the numeric fills of iterative workloads — see
+//! `DESIGN.md` §"Two-phase hash engine" and §"Plan reuse".
 
 pub mod engine;
 pub mod grouping;
+pub mod plan;
 pub mod sort;
 pub mod table;
 
 pub use engine::{multiply, multiply_single_pass, multiply_timed, multiply_traced, numeric, symbolic, SymbolicPlan};
 pub use grouping::{Grouping, Strategy, GROUP_SPECS};
+pub use plan::{pair_key, pair_key_from_hashes, PlannedProduct};

@@ -1,0 +1,243 @@
+//! Plan reuse for iterative workloads (ROADMAP "Batched multi-matrix
+//! execution").
+//!
+//! The headline iterative workloads — Markov clustering re-multiplying
+//! `M·M` every iteration, GNN training reusing one sparsified adjacency
+//! every epoch — repeat products whose *structure* is stable while only
+//! the *values* change. The symbolic phase is a pure function of the
+//! operands' structure, so its output ([`SymbolicPlan`]: exact row
+//! pointers, row grouping, IP bounds) can be computed once and amortised
+//! across numeric fills. [`PlannedProduct`] packages that: it owns the
+//! plan plus the structure fingerprints of the operands it was built
+//! from, validates every fill against them
+//! ([`PlannedProduct::matches`]), and times plan construction separately
+//! from fills so executors can account grouping/symbolic/numeric wall
+//! time exactly as [`super::engine::multiply_timed`] does.
+//!
+//! Callers that manage whole batches (plan product *k+1* while product
+//! *k* fills, stream-schedule the Table-I bins) sit one layer up, in
+//! [`crate::coordinator::batch::BatchExecutor`].
+
+use super::engine::{numeric, symbolic_timed, SymbolicPlan};
+use crate::sim::probe::PhaseTimes;
+use crate::sparse::Csr;
+use std::time::Instant;
+
+/// A reusable symbolic plan for one `A·B` product, bound to the
+/// structure of the operands it was planned from.
+///
+/// Obtain one with [`PlannedProduct::plan`], then run any number of
+/// numeric fills with [`PlannedProduct::fill`] — each fill costs only
+/// the numeric phase. [`PlannedProduct::matches`] reports whether the
+/// plan is still valid for a (possibly mutated) operand pair, which is
+/// how iterative callers decide between reuse and replan.
+pub struct PlannedProduct {
+    plan: SymbolicPlan,
+    a_shape: (usize, usize),
+    b_shape: (usize, usize),
+    a_hash: u64,
+    b_hash: u64,
+    /// Wall time spent building the plan (`grouping_s` + `symbolic_s`;
+    /// `numeric_s` stays 0 — fills report their own time).
+    pub plan_times: PhaseTimes,
+}
+
+impl PlannedProduct {
+    /// Run grouping + symbolic analysis for `a·b` and capture the
+    /// operands' structure fingerprints.
+    pub fn plan(a: &Csr, b: &Csr) -> PlannedProduct {
+        let (plan, plan_times) = symbolic_timed(a, b);
+        PlannedProduct {
+            plan,
+            a_shape: (a.n_rows, a.n_cols),
+            b_shape: (b.n_rows, b.n_cols),
+            a_hash: a.structure_hash(),
+            b_hash: b.structure_hash(),
+            plan_times,
+        }
+    }
+
+    /// Whether this plan is valid for `(a, b)`: same shapes and same
+    /// structure hashes as at plan time. O(nnz) — cheap relative to the
+    /// symbolic phase it can skip. Callers that already computed the
+    /// operands' hashes (e.g. for a cache key) should use
+    /// [`PlannedProduct::matches_fingerprint`] instead of re-hashing.
+    pub fn matches(&self, a: &Csr, b: &Csr) -> bool {
+        self.matches_fingerprint(
+            (a.n_rows, a.n_cols),
+            (b.n_rows, b.n_cols),
+            a.structure_hash(),
+            b.structure_hash(),
+        )
+    }
+
+    /// [`PlannedProduct::matches`] against precomputed shapes and
+    /// structure hashes — no operand scan.
+    pub fn matches_fingerprint(&self, a_shape: (usize, usize), b_shape: (usize, usize), a_hash: u64, b_hash: u64) -> bool {
+        self.a_shape == a_shape && self.b_shape == b_shape && self.a_hash == a_hash && self.b_hash == b_hash
+    }
+
+    /// Numeric fill under this plan: identical output to a cold
+    /// [`super::engine::multiply`] on the same operands, at the cost of
+    /// the numeric phase only.
+    ///
+    /// Panics if the operands' structure no longer matches the plan
+    /// (callers should [`PlannedProduct::matches`]-check and replan on
+    /// structural change instead of relying on this guard).
+    pub fn fill(&self, a: &Csr, b: &Csr) -> Csr {
+        assert!(
+            self.matches(a, b),
+            "PlannedProduct::fill: operand structure changed since plan time — replan"
+        );
+        self.fill_unchecked(a, b)
+    }
+
+    /// [`PlannedProduct::fill`] plus the fill's wall seconds (validation
+    /// runs before the timer starts, so the seconds are numeric-phase
+    /// only).
+    pub fn fill_timed(&self, a: &Csr, b: &Csr) -> (Csr, f64) {
+        assert!(
+            self.matches(a, b),
+            "PlannedProduct::fill: operand structure changed since plan time — replan"
+        );
+        self.fill_unchecked_timed(a, b)
+    }
+
+    /// Fill without revalidating the operands — for callers that just
+    /// ran [`PlannedProduct::matches`]/[`PlannedProduct::matches_fingerprint`]
+    /// or built the plan from these exact operands. A stale plan still
+    /// cannot corrupt memory (the numeric phase asserts per-row counts),
+    /// but the panic arrives later and uglier than `fill`'s.
+    pub(crate) fn fill_unchecked(&self, a: &Csr, b: &Csr) -> Csr {
+        numeric(a, b, &self.plan)
+    }
+
+    /// [`PlannedProduct::fill_unchecked`] plus the fill's wall seconds.
+    pub(crate) fn fill_unchecked_timed(&self, a: &Csr, b: &Csr) -> (Csr, f64) {
+        let t0 = Instant::now();
+        let c = self.fill_unchecked(a, b);
+        (c, t0.elapsed().as_secs_f64())
+    }
+
+    /// The underlying symbolic plan (exact output sizes, grouping, IP).
+    pub fn symbolic_plan(&self) -> &SymbolicPlan {
+        &self.plan
+    }
+
+    /// Exact output non-zeros this plan will produce.
+    pub fn nnz(&self) -> usize {
+        self.plan.nnz()
+    }
+
+    /// Estimated work (summed intermediate products) per Table-I row
+    /// group. These are the per-bin job weights the coordinator's stream
+    /// scheduler packs onto streams, letting the group-3 (global-table,
+    /// AIA-heavy) bin co-schedule with the PWPR bins.
+    pub fn group_work(&self) -> [u64; 4] {
+        let mut w = [0u64; 4];
+        for (g, wg) in w.iter_mut().enumerate() {
+            for &r in self.plan.grouping.group_rows(g) {
+                *wg += self.plan.ip[r as usize];
+            }
+        }
+        w
+    }
+
+    /// Combined fingerprint of the operand pair this plan was built for
+    /// (cache key for plan caches).
+    pub fn key(&self) -> u64 {
+        pair_key_from_hashes(self.a_hash, self.b_hash)
+    }
+}
+
+/// Cache key for an `(a, b)` operand pair — combines both structure
+/// hashes order-sensitively (`a·b` and `b·a` get distinct keys).
+pub fn pair_key(a: &Csr, b: &Csr) -> u64 {
+    pair_key_from_hashes(a.structure_hash(), b.structure_hash())
+}
+
+/// [`pair_key`] from precomputed structure hashes (no operand scan).
+pub fn pair_key_from_hashes(ah: u64, bh: u64) -> u64 {
+    let h = (ah ^ bh.rotate_left(17)).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    h ^ (h >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spgemm::hash::engine::multiply;
+    use crate::util::Pcg32;
+
+    fn random_csr(rng: &mut Pcg32, rows: usize, cols: usize, density: f64) -> Csr {
+        let mut coo = crate::sparse::Coo::new(rows, cols);
+        let target = ((rows * cols) as f64 * density) as usize;
+        for _ in 0..target {
+            coo.push(rng.below_usize(rows), rng.below_usize(cols), rng.f64_range(-2.0, 2.0));
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn reused_fill_is_bit_identical_to_cold_multiply() {
+        let mut rng = Pcg32::seeded(42);
+        let a = random_csr(&mut rng, 200, 180, 0.03);
+        let b = random_csr(&mut rng, 180, 160, 0.03);
+        let p = PlannedProduct::plan(&a, &b);
+        assert_eq!(p.nnz(), multiply(&a, &b).nnz());
+        let c1 = p.fill(&a, &b);
+        let c2 = p.fill(&a, &b);
+        assert_eq!(c1, multiply(&a, &b), "planned fill must equal cold multiply bit-for-bit");
+        assert_eq!(c1, c2, "fills must be deterministic");
+    }
+
+    #[test]
+    fn fill_accepts_new_values_same_structure() {
+        let mut rng = Pcg32::seeded(7);
+        let a = random_csr(&mut rng, 120, 120, 0.05);
+        let p = PlannedProduct::plan(&a, &a);
+        let mut a2 = a.clone();
+        a2.map_values(|v| v * 3.0 - 1.0);
+        assert!(p.matches(&a2, &a2), "value changes must not invalidate the plan");
+        assert_eq!(p.fill(&a2, &a2), multiply(&a2, &a2));
+    }
+
+    #[test]
+    fn matches_rejects_structural_change() {
+        let a = Csr::from_dense(&[vec![1.0, 0.0, 2.0], vec![0.0, 3.0, 0.0], vec![4.0, 0.0, 5.0]]);
+        let p = PlannedProduct::plan(&a, &a);
+        assert!(p.matches(&a, &a));
+        // Same shape and nnz count, one entry moved to a new column.
+        let moved = Csr::from_dense(&[vec![1.0, 2.0, 0.0], vec![0.0, 3.0, 0.0], vec![4.0, 0.0, 5.0]]);
+        assert!(!p.matches(&moved, &moved));
+        // One extra entry.
+        let grown = Csr::from_dense(&[vec![1.0, 6.0, 2.0], vec![0.0, 3.0, 0.0], vec![4.0, 0.0, 5.0]]);
+        assert!(!p.matches(&grown, &grown));
+    }
+
+    #[test]
+    #[should_panic(expected = "structure changed")]
+    fn fill_panics_on_stale_plan() {
+        let a = Csr::identity(8);
+        let p = PlannedProduct::plan(&a, &a);
+        let b = Csr::identity(9);
+        p.fill(&b, &b);
+    }
+
+    #[test]
+    fn group_work_covers_all_ip() {
+        let mut rng = Pcg32::seeded(3);
+        let a = random_csr(&mut rng, 150, 150, 0.04);
+        let p = PlannedProduct::plan(&a, &a);
+        let total: u64 = p.group_work().iter().sum();
+        assert_eq!(total, p.symbolic_plan().ip.iter().sum::<u64>(), "group work must partition total IP");
+    }
+
+    #[test]
+    fn pair_key_is_order_sensitive() {
+        let mut rng = Pcg32::seeded(5);
+        let a = random_csr(&mut rng, 40, 30, 0.1);
+        let b = random_csr(&mut rng, 30, 40, 0.1);
+        assert_ne!(pair_key(&a, &b), pair_key(&b, &a));
+        assert_eq!(pair_key(&a, &b), PlannedProduct::plan(&a, &b).key());
+    }
+}

@@ -1,0 +1,124 @@
+//! Plan-reuse properties (`util/qc.rs` harness): a reused
+//! `PlannedProduct` must produce output **bit-identical** to a cold
+//! `multiply` across the RMAT and structured generators; structural
+//! change between fills must be detected and replanned; and the
+//! coordinator's `BatchExecutor` / `SpgemmExecutor::multiply_reusing`
+//! paths must agree with their serial counterparts exactly.
+
+use spgemm_aia::coordinator::batch::BatchExecutor;
+use spgemm_aia::coordinator::executor::{SpgemmExecutor, Variant};
+use spgemm_aia::gen::{rmat, structured, RmatParams};
+use spgemm_aia::sparse::{Coo, Csr};
+use spgemm_aia::spgemm::hash::{self, PlannedProduct};
+use spgemm_aia::util::{qc, Pcg32};
+
+fn random_rect(rng: &mut Pcg32, rows: usize, cols: usize) -> Csr {
+    let mut coo = Coo::new(rows, cols);
+    for _ in 0..(rows * cols / 5).max(1) {
+        coo.push(rng.below_usize(rows), rng.below_usize(cols), rng.f64_range(-1.0, 1.0));
+    }
+    coo.to_csr()
+}
+
+#[test]
+fn property_reused_plan_is_bit_identical_rmat() {
+    qc::check(10, 7171, |g| {
+        let n = 16 + g.dim() * 8;
+        let nnz = n * (2 + g.rng.below_usize(6));
+        let params = match g.rng.below_usize(3) {
+            0 => RmatParams::web(),
+            1 => RmatParams::citation(),
+            _ => RmatParams::uniform(),
+        };
+        let mut rng = Pcg32::seeded(g.rng.next_u64());
+        let a = rmat(n, nnz, params, &mut rng);
+        let cold = hash::multiply(&a, &a);
+        let p = PlannedProduct::plan(&a, &a);
+        // Two fills from one plan: both bit-identical to the cold path.
+        assert_eq!(p.fill(&a, &a), cold, "reused fill vs cold multiply (1st)");
+        assert_eq!(p.fill(&a, &a), cold, "reused fill vs cold multiply (2nd)");
+        // New values under the same structure still reuse exactly.
+        let mut a2 = a.clone();
+        a2.map_values(|v| v * 1.5 - 0.25);
+        assert!(p.matches(&a2, &a2), "value-only change must keep the plan valid");
+        assert_eq!(p.fill(&a2, &a2), hash::multiply(&a2, &a2), "reused fill after value update");
+    });
+}
+
+#[test]
+fn property_reused_plan_is_bit_identical_structured() {
+    qc::check(8, 5252, |g| {
+        let mut rng = Pcg32::seeded(g.rng.next_u64());
+        let n = 32 + g.dim() * 4;
+        let (name, a) = match g.rng.below_usize(4) {
+            0 => ("circuit", structured::circuit(n, &mut rng)),
+            1 => ("economics", structured::economics(n, &mut rng)),
+            2 => ("fem_banded", structured::fem_banded(n, 4, &mut rng)),
+            _ => ("p2p", structured::p2p(n, &mut rng)),
+        };
+        let p = PlannedProduct::plan(&a, &a);
+        assert_eq!(p.fill(&a, &a), hash::multiply(&a, &a), "{name}: reused fill vs cold multiply");
+    });
+}
+
+#[test]
+fn property_rectangular_batch_matches_serial() {
+    qc::check(8, 6060, |g| {
+        let m = 1 + g.dim() * 2;
+        let k = 1 + g.dim();
+        let n = 1 + g.dim() * 3;
+        let mut rng = Pcg32::seeded(g.rng.next_u64());
+        let a = random_rect(&mut rng, m, k);
+        let b = random_rect(&mut rng, k, n);
+        let b2 = random_rect(&mut rng, k, n);
+        let pairs = [(&a, &b), (&a, &b2), (&a, &b)];
+        let mut ex = BatchExecutor::new(2);
+        let out = ex.execute_batch(&pairs);
+        for (i, &(x, y)) in pairs.iter().enumerate() {
+            assert_eq!(out[i], hash::multiply(x, y), "batch product {i} vs serial multiply");
+        }
+    });
+}
+
+#[test]
+fn replan_when_structure_changes_between_fills() {
+    let mut rng = Pcg32::seeded(99);
+    let a = rmat(128, 768, RmatParams::uniform(), &mut rng);
+    // Grow the structure: add a row's worth of new entries.
+    let mut coo = Coo::new(128, 128);
+    for i in 0..128 {
+        let (cols, vals) = a.row(i);
+        for (&c, &v) in cols.iter().zip(vals) {
+            coo.push(i, c as usize, v);
+        }
+    }
+    for j in 0..16 {
+        coo.push(7, (j * 5 + 1) % 128, 0.5);
+    }
+    let grown = coo.to_csr();
+    assert_ne!(a.structure_hash(), grown.structure_hash());
+
+    let mut ex = SpgemmExecutor::fast(Variant::Hash);
+    let mut slot = None;
+    let c1 = ex.multiply_reusing(&mut slot, &a, &a);
+    assert_eq!(c1, hash::multiply(&a, &a));
+    // The edge case: the input structure changed between fills — the
+    // stale plan must be detected (not silently reused) and replanned.
+    let c2 = ex.multiply_reusing(&mut slot, &grown, &grown);
+    assert_eq!(c2, hash::multiply(&grown, &grown), "post-change result must come from a fresh plan");
+    assert_eq!((ex.plan_hits, ex.plan_misses), (0, 2));
+    // And the slot now holds the new structure's plan: next call hits.
+    let c3 = ex.multiply_reusing(&mut slot, &grown, &grown);
+    assert_eq!(c3, c2);
+    assert_eq!((ex.plan_hits, ex.plan_misses), (1, 2));
+}
+
+#[test]
+fn stale_plan_fill_panics_instead_of_corrupting() {
+    let mut rng = Pcg32::seeded(13);
+    let a = rmat(64, 384, RmatParams::uniform(), &mut rng);
+    let b = rmat(64, 512, RmatParams::uniform(), &mut rng);
+    let p = PlannedProduct::plan(&a, &a);
+    let r = std::panic::catch_unwind(|| p.fill(&b, &b));
+    assert!(r.is_err(), "filling a stale plan must panic, not return garbage");
+}
