@@ -1,0 +1,93 @@
+//! Bench: plan-guided accumulator selection (ROADMAP "Plan-guided
+//! numeric accumulators") on dense-row-heavy structured generators.
+//!
+//! The hash engine pays probe chains and a scattered gather even on
+//! rows whose output approaches full density — exactly the rows the
+//! protein-contact analogue mass-produces in its self-product (dense
+//! diagonal blocks + long-range contacts make nearly every C row
+//! dense). This bench pins the win of the plan-guided dense-SPA
+//! fallback: the same product run hash-only (`spa_threshold = 2.0`,
+//! SPA disabled) vs plan-guided (default threshold), cold and as a
+//! reused-plan numeric fill (the purest accumulator comparison — no
+//! symbolic phase in the loop). A sparse control dataset where SPA
+//! never triggers documents that the threshold is conservative.
+//!
+//! Emits `BENCH_accumulator.json` with per-dataset speedups, the
+//! copy/hash/SPA row split, and the per-kind numeric seconds; CI
+//! archives it as part of the perf trajectory and the bench-trend job
+//! diffs it against the previous run.
+
+use spgemm_aia::gen::structured;
+use spgemm_aia::spgemm::hash::{
+    multiply_cfg, numeric_timed, symbolic_cfg, AccumKind, EngineConfig, DEFAULT_SPA_THRESHOLD,
+};
+use spgemm_aia::sparse::Csr;
+use spgemm_aia::util::bench::{bb, Bencher};
+use spgemm_aia::util::json::Json;
+use spgemm_aia::util::Pcg32;
+
+fn main() {
+    let mut b = Bencher::new();
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let scale = if quick { 1 } else { 2 };
+
+    let datasets: Vec<(&str, Csr)> = vec![
+        // Dense-row heavy: protein-contact A² rows are nearly fully dense.
+        ("protein", structured::protein_contact(600 * scale, 119, &mut Pcg32::seeded(1))),
+        // Banded FEM mesh: moderately dense output rows.
+        ("fem", structured::fem_banded(1500 * scale, 53, &mut Pcg32::seeded(2))),
+        // Sparse control: SPA must not trigger at the default threshold.
+        ("economics", structured::economics(4000 * scale, &mut Pcg32::seeded(3))),
+    ];
+
+    let hash_only = EngineConfig { spa_threshold: 2.0 };
+    let guided = EngineConfig { spa_threshold: DEFAULT_SPA_THRESHOLD };
+
+    for (name, a) in &datasets {
+        b.group(&format!("accumulator/{name}"));
+
+        // Where does the plan send the rows?
+        let plan = symbolic_cfg(a, a, &guided);
+        let kinds = plan.kind_rows();
+        println!(
+            "  plan: {} copy rows, {} hash rows, {} spa rows across {} bins",
+            kinds[0],
+            kinds[1],
+            kinds[2],
+            plan.bins.len()
+        );
+        let mut kind_json = Json::obj();
+        kind_json.set("copy_rows", kinds[0].into());
+        kind_json.set("hash_rows", kinds[1].into());
+        kind_json.set("spa_rows", kinds[2].into());
+        kind_json.set("bins", plan.bins.len().into());
+        b.meta(&format!("kinds/{name}"), kind_json);
+        if *name == "economics" {
+            assert_eq!(kinds[AccumKind::Spa.index()], 0, "sparse control must stay hash-only");
+        }
+
+        // Cold multiplies (symbolic + numeric each iteration).
+        let cold_hash = b.bench("cold/hash-only", || bb(multiply_cfg(a, a, &hash_only).nnz()));
+        let cold_spa = b.bench("cold/plan-guided", || bb(multiply_cfg(a, a, &guided).nnz()));
+        b.meta(&format!("cold_speedup/{name}"), Json::Num(cold_hash.median / cold_spa.median));
+
+        // Reused-plan numeric fills: the accumulator is the only
+        // difference between these two loops.
+        let plan_hash = symbolic_cfg(a, a, &hash_only);
+        let fill_hash = b.bench("fill/hash-only", || bb(numeric_timed(a, a, &plan_hash).0.nnz()));
+        let fill_spa = b.bench("fill/plan-guided", || bb(numeric_timed(a, a, &plan).0.nnz()));
+        let speedup = fill_hash.median / fill_spa.median;
+        println!("  -> plan-guided fill speedup over hash-only: {speedup:.2}x");
+        b.meta(&format!("fill_speedup/{name}"), Json::Num(speedup));
+
+        // Per-kind numeric seconds of one guided fill.
+        let (_, times) = numeric_timed(a, a, &plan);
+        b.meta(&format!("fill_times/{name}"), times.to_json());
+
+        // The three paths must agree bit-for-bit (also pinned by
+        // tests/accumulator_select.rs; asserting here keeps the bench
+        // honest about measuring identical work).
+        assert_eq!(multiply_cfg(a, a, &hash_only), multiply_cfg(a, a, &guided));
+    }
+    b.finish("accumulator");
+}

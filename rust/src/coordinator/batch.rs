@@ -1,26 +1,36 @@
 //! Batched plan-reuse execution (ROADMAP "Batched multi-matrix
-//! execution" + "AIA-aware bin scheduling").
+//! execution" + "True intra-product phase overlap").
 //!
 //! [`BatchExecutor`] drives the engine's plan-reuse layer
 //! ([`PlannedProduct`]) at application scope:
 //!
-//! - **Pipelined batches** — [`BatchExecutor::execute_batch`] plans a
-//!   set of products on a dedicated planner thread and streams the
-//!   numeric fills on the calling thread, so symbolic analysis of
-//!   product *k+1* overlaps the numeric fill of product *k* (the
-//!   host-side analogue of running the two phases on separate CUDA
-//!   streams). The Table-I bins of every planned product are also packed
-//!   onto the coordinator's stream model with
-//!   [`schedule_lpt`], which lets the group-3 (global-table, AIA-heavy)
-//!   bins co-schedule with the PWPR bins instead of serializing after
-//!   them; the resulting [`Schedule`] lands in the [`BatchReport`].
+//! - **Per-bin pipelined batches** — [`BatchExecutor::execute_batch`]
+//!   plans a set of products on a dedicated planner thread and streams
+//!   the numeric fills on the calling thread. The pipeline's unit is
+//!   the **numeric bin** (one Table-I group × one accumulator kind, see
+//!   [`crate::spgemm::hash::NumericBin`]), not the whole product: as
+//!   soon as a product's symbolic counts land, the planner emits one
+//!   completion event per bin over the bounded channel — in LPT order,
+//!   heaviest first, the same packing [`schedule_lpt`] uses — and the
+//!   consumer fills each bin on arrival. Symbolic analysis of product
+//!   *k+1* therefore overlaps the *individual bin fills* of product
+//!   *k*, not just its whole numeric phase (the host-side analogue of
+//!   per-stream kernel launches instead of a per-phase barrier). The
+//!   bins of every product are also packed onto the coordinator's
+//!   stream model with [`schedule_lpt`], which lets the group-3
+//!   (global-table, AIA-heavy) and SPA (streaming) bins co-schedule
+//!   with the PWPR bins; the resulting [`Schedule`] lands in the
+//!   [`BatchReport`] along with the per-accumulator-kind fill split.
 //! - **Plan caching** — plans are keyed by the operands' structure
 //!   hashes and shared: [`BatchExecutor::multiply_cached`] reuses across
 //!   calls, and [`BatchExecutor::execute_batch`] dedupes repeated
 //!   structures within a batch, consults the cache, and seeds it with
 //!   the plans it builds — so iterative callers (MCL expansions, GNN
 //!   epochs) pay the symbolic phase only when a structure is genuinely
-//!   new. Hit/miss counts live in [`BatchStats`].
+//!   new. Hit/miss counts live in [`BatchStats`] and are **per unique
+//!   structure hash**: a plan shared across several slots of one batch
+//!   counts one hit (or one miss) plus [`BatchStats::batch_shared`]
+//!   shares, never one hit per slot.
 //!
 //! Both paths produce output bit-identical to a cold
 //! [`crate::spgemm::hash::multiply`].
@@ -30,17 +40,20 @@
 
 use super::metrics::Metrics;
 use super::scheduler::{schedule_lpt, Job, Schedule};
-use crate::spgemm::hash::{pair_key_from_hashes, PlannedProduct};
+use crate::spgemm::hash::{numeric_bin_into, pair_key_from_hashes, PlannedProduct};
 use crate::sparse::Csr;
 use std::collections::HashMap;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
 
-/// How many planned-but-unfilled products the pipeline holds: the
-/// planner thread runs at most this far ahead of the numeric fills,
-/// bounding peak plan memory.
-const PIPELINE_DEPTH: usize = 2;
+/// How many pipeline events (plan completions + per-bin completions)
+/// the channel buffers. Worst case for plan memory is one-bin
+/// products (Plan+Bin pairs): 4 events ≈ 2 buffered plans plus the
+/// one being built — the same peak the old whole-product depth of 2
+/// allowed, now at bin granularity so multi-bin products overlap
+/// per bin instead of per phase.
+const PIPELINE_DEPTH: usize = 4;
 
 /// Plans cached by [`BatchExecutor::multiply_cached`] before arbitrary
 /// eviction kicks in (iterative workloads cycle over a handful of
@@ -48,17 +61,29 @@ const PIPELINE_DEPTH: usize = 2;
 const CACHE_CAP: usize = 32;
 
 /// Counters accumulated across a [`BatchExecutor`]'s lifetime.
+///
+/// Hit/miss counters are **per unique structure hash**: within one
+/// batch, the first slot with a given structure scores the hit (plan
+/// found in the cache) or the miss (plan had to be built); every
+/// further slot sharing that plan scores [`BatchStats::batch_shared`]
+/// instead. (The executor used to count a hit per *slot*, double-counting
+/// deduped `Arc` plans — pinned by
+/// `plan_cache_stats_count_per_unique_structure`.)
 #[derive(Clone, Debug, Default)]
 pub struct BatchStats {
-    /// Symbolic plans built (products whose structure was new).
+    /// Symbolic plans built (structures that were new).
     pub plans_built: usize,
-    /// Numeric fills executed.
+    /// Numeric fills executed (one per product).
     pub fills: usize,
-    /// Products (cached calls or batch members) served by an existing
-    /// or batch-shared plan.
+    /// Unique structures served by an already-cached plan.
     pub plan_hits: usize,
-    /// Products that had to build a plan.
+    /// Unique structures that had to build a plan.
     pub plan_misses: usize,
+    /// Batch slots that shared a plan with an earlier slot of the same
+    /// batch (in-batch dedup — neither a hit nor a miss).
+    pub batch_shared: usize,
+    /// Per-bin completion events filled by the batch pipeline.
+    pub bins_filled: usize,
     /// Wall seconds spent building plans (grouping + symbolic).
     pub plan_s: f64,
     /// Wall seconds spent in numeric fills.
@@ -82,6 +107,10 @@ impl BatchStats {
 pub struct BatchReport {
     /// Products executed.
     pub products: usize,
+    /// Per-bin completion events dispatched (and filled) — the
+    /// pipeline's work units; ≥ `products` whenever any product has
+    /// more than one non-empty bin.
+    pub bins: usize,
     /// Wall time of the whole pipelined batch.
     pub wall_s: f64,
     /// Summed plan (grouping + symbolic) wall seconds for the batch's
@@ -90,11 +119,15 @@ pub struct BatchReport {
     pub plan_s: f64,
     /// Summed numeric-fill wall seconds (calling thread).
     pub fill_s: f64,
-    /// Table-I bins of every product packed onto the stream model with
-    /// LPT. **Weights are intermediate-product counts, not ms** — the
-    /// `Schedule`'s `*_ms` fields are in IP units here, so only relative
-    /// quantities (assignment, utilization, makespan ratios) are
-    /// meaningful; do not compare against simulated `sim_ms`.
+    /// `fill_s` split by accumulator kind, indexed by
+    /// `AccumKind::index()` (copy, hash, SPA).
+    pub fill_kind_s: [f64; 3],
+    /// Per-kind numeric bins of every product packed onto the stream
+    /// model with LPT. **Weights are intermediate-product counts, not
+    /// ms** — the `Schedule`'s `*_ms` fields are in IP units here, so
+    /// only relative quantities (assignment, utilization, makespan
+    /// ratios) are meaningful; do not compare against simulated
+    /// `sim_ms`.
     pub streams: Schedule,
 }
 
@@ -156,78 +189,145 @@ impl BatchExecutor {
         }
     }
 
-    /// Execute a batch of products with the symbolic/numeric pipeline:
-    /// a planner thread produces [`PlannedProduct`]s in input order
-    /// (running a bounded number of products ahead) while the calling
-    /// thread runs the numeric fills. Repeated structures — within the
-    /// batch or already in the plan cache — share one plan, and plans
-    /// built here seed the cache for later
+    /// Execute a batch of products with the per-bin symbolic/numeric
+    /// pipeline: a planner thread produces [`PlannedProduct`]s in input
+    /// order and, the moment a product's symbolic counts land, emits
+    /// one completion event per numeric bin (heaviest first — the LPT
+    /// issue order) over the bounded channel; the calling thread fills
+    /// each bin as its event arrives. The planner runs a bounded number
+    /// of *bins* ahead, so symbolic analysis of product *k+1* overlaps
+    /// the individual bin fills of product *k*.
+    ///
+    /// Repeated structures — within the batch or already in the plan
+    /// cache — share one plan (counted per unique structure hash, see
+    /// [`BatchStats`]), and plans built here seed the cache for later
     /// [`BatchExecutor::multiply_cached`] calls. Outputs are returned in
     /// input order and are bit-identical to per-pair
     /// [`crate::spgemm::hash::multiply`] calls.
     pub fn execute_batch(&mut self, pairs: &[(&Csr, &Csr)]) -> Vec<Csr> {
+        /// Pipeline events, in channel order per product: one `Plan`
+        /// (symbolic counts landed), then one `Bin` per numeric bin.
+        enum PipeEvent {
+            Plan { slot: usize, plan: Arc<PlannedProduct>, fresh: bool, cache_hit: bool },
+            Bin { slot: usize, bin: usize },
+        }
+        /// A product mid-fill on the consumer side.
+        struct SlotState {
+            plan: Arc<PlannedProduct>,
+            col: Vec<u32>,
+            val: Vec<f64>,
+            bins_done: usize,
+        }
+
         let t_batch = Instant::now();
         let mut plan_s = 0.0;
         let mut fill_s = 0.0;
-        let mut reused = 0usize;
+        let mut fill_kind_s = [0f64; 3];
+        let mut bins_filled = 0usize;
+        let mut hits = 0usize;
+        let mut shared = 0usize;
         let mut fresh_plans: Vec<Arc<PlannedProduct>> = Vec::new();
         let mut jobs: Vec<Job> = Vec::new();
         let mut out: Vec<Option<Csr>> = Vec::new();
         out.resize_with(pairs.len(), || None);
+        let mut slots: Vec<Option<SlotState>> = Vec::new();
+        slots.resize_with(pairs.len(), || None);
         // Read-only view of the cache for the planner thread (Arc
         // clones — the plans themselves are shared, not copied).
         let snapshot = self.cache.clone();
         std::thread::scope(|s| {
-            let (tx, rx) = mpsc::sync_channel::<(usize, Arc<PlannedProduct>, bool)>(PIPELINE_DEPTH);
+            let (tx, rx) = mpsc::sync_channel::<PipeEvent>(PIPELINE_DEPTH);
             s.spawn(move || {
-                // Plans built earlier in this batch, keyed like the cache.
-                let mut built: HashMap<u64, Arc<PlannedProduct>> = HashMap::new();
+                // Plans resolved earlier in this batch, keyed like the
+                // cache — in-batch shares are neither hits nor misses.
+                let mut resolved: HashMap<u64, Arc<PlannedProduct>> = HashMap::new();
                 for (i, &(a, b)) in pairs.iter().enumerate() {
                     let (ah, bh) = (a.structure_hash(), b.structure_hash());
                     let key = pair_key_from_hashes(ah, bh);
-                    let existing = built
-                        .get(&key)
-                        .or_else(|| snapshot.get(&key))
-                        .filter(|p| p.matches_fingerprint((a.n_rows, a.n_cols), (b.n_rows, b.n_cols), ah, bh))
-                        .cloned();
-                    let (p, fresh) = match existing {
-                        Some(p) => (p, false),
-                        None => {
-                            let p = Arc::new(PlannedProduct::plan(a, b));
-                            built.insert(key, Arc::clone(&p));
-                            (p, true)
-                        }
+                    let fingerprint_ok = |p: &&Arc<PlannedProduct>| {
+                        p.matches_fingerprint((a.n_rows, a.n_cols), (b.n_rows, b.n_cols), ah, bh)
                     };
-                    if tx.send((i, p, fresh)).is_err() {
+                    let (p, fresh, cache_hit) = if let Some(p) = resolved.get(&key).filter(fingerprint_ok) {
+                        (Arc::clone(p), false, false)
+                    } else if let Some(p) = snapshot.get(&key).filter(fingerprint_ok) {
+                        resolved.insert(key, Arc::clone(p));
+                        (Arc::clone(p), false, true)
+                    } else {
+                        let p = Arc::new(PlannedProduct::plan(a, b));
+                        resolved.insert(key, Arc::clone(&p));
+                        (p, true, false)
+                    };
+                    // Symbolic counts are in: dispatch the product's bins
+                    // heaviest-first (LPT issue order) behind the plan event.
+                    let bins = &p.symbolic_plan().bins;
+                    let mut order: Vec<usize> = (0..bins.len()).collect();
+                    order.sort_by(|&x, &y| bins[y].weight.cmp(&bins[x].weight).then(x.cmp(&y)));
+                    if tx.send(PipeEvent::Plan { slot: i, plan: Arc::clone(&p), fresh, cache_hit }).is_err() {
                         return; // receiver unwound — stop planning
+                    }
+                    for bin in order {
+                        if tx.send(PipeEvent::Bin { slot: i, bin }).is_err() {
+                            return;
+                        }
                     }
                 }
             });
-            for (i, p, fresh) in rx {
-                if fresh {
-                    plan_s += p.plan_times.total_s();
-                    fresh_plans.push(Arc::clone(&p));
-                } else {
-                    reused += 1;
-                }
-                for (g, &w) in p.group_work().iter().enumerate() {
-                    if w > 0 {
-                        jobs.push(Job { id: format!("p{i}/group{g}"), ms: w as f64 });
+            for ev in rx {
+                match ev {
+                    PipeEvent::Plan { slot, plan, fresh, cache_hit } => {
+                        if fresh {
+                            plan_s += plan.plan_times.total_s();
+                            fresh_plans.push(Arc::clone(&plan));
+                        } else if cache_hit {
+                            hits += 1;
+                        } else {
+                            shared += 1;
+                        }
+                        for bin in &plan.symbolic_plan().bins {
+                            jobs.push(Job { id: format!("p{slot}/{}", bin.label()), ms: bin.weight as f64 });
+                        }
+                        let nnz = plan.nnz();
+                        let st = SlotState { col: vec![0u32; nnz], val: vec![0f64; nnz], plan, bins_done: 0 };
+                        if st.plan.symbolic_plan().bins.is_empty() {
+                            // Nothing to fill (empty output): finish now.
+                            let (a, b) = pairs[slot];
+                            let rpt = st.plan.symbolic_plan().rpt.clone();
+                            out[slot] = Some(Csr::new_unchecked(a.n_rows, b.n_cols, rpt, st.col, st.val));
+                        } else {
+                            slots[slot] = Some(st);
+                        }
+                    }
+                    PipeEvent::Bin { slot, bin } => {
+                        let (a, b) = pairs[slot];
+                        let st = slots[slot].as_mut().expect("plan event precedes its bin events");
+                        let kind_idx = st.plan.symbolic_plan().bins[bin].kind.index();
+                        let n_bins = st.plan.symbolic_plan().bins.len();
+                        let t0 = Instant::now();
+                        // Unchecked per-bin fill: the planner thread
+                        // validated (or freshly built) the plan against
+                        // these operands' fingerprints.
+                        numeric_bin_into(a, b, st.plan.symbolic_plan(), bin, &mut st.col, &mut st.val);
+                        let secs = t0.elapsed().as_secs_f64();
+                        fill_s += secs;
+                        fill_kind_s[kind_idx] += secs;
+                        bins_filled += 1;
+                        st.bins_done += 1;
+                        if st.bins_done == n_bins {
+                            let st = slots[slot].take().expect("slot is mid-fill");
+                            let rpt = st.plan.symbolic_plan().rpt.clone();
+                            out[slot] = Some(Csr::new_unchecked(a.n_rows, b.n_cols, rpt, st.col, st.val));
+                        }
                     }
                 }
-                let (a, b) = pairs[i];
-                // Unchecked: the planner thread validated (or freshly
-                // built) the plan against these operands' fingerprints.
-                let (c, secs) = p.fill_unchecked_timed(a, b);
-                fill_s += secs;
-                out[i] = Some(c);
             }
         });
         let fresh_count = fresh_plans.len();
         self.stats.plans_built += fresh_count;
         self.stats.plan_misses += fresh_count;
-        self.stats.plan_hits += reused;
+        self.stats.plan_hits += hits;
+        self.stats.batch_shared += shared;
         self.stats.fills += pairs.len();
+        self.stats.bins_filled += bins_filled;
         self.stats.plan_s += plan_s;
         self.stats.fill_s += fill_s;
         for p in fresh_plans {
@@ -235,9 +335,11 @@ impl BatchExecutor {
         }
         self.last_batch = Some(BatchReport {
             products: pairs.len(),
+            bins: bins_filled,
             wall_s: t_batch.elapsed().as_secs_f64(),
             plan_s,
             fill_s,
+            fill_kind_s,
             streams: schedule_lpt(&jobs, self.n_streams),
         });
         out.into_iter().map(|c| c.expect("pipeline produced every product")).collect()
@@ -254,9 +356,9 @@ impl BatchExecutor {
         if let Some(p) = self.cache.get(&key) {
             if p.matches_fingerprint((a.n_rows, a.n_cols), (b.n_rows, b.n_cols), ah, bh) {
                 self.stats.plan_hits += 1;
-                let (c, secs) = p.fill_unchecked_timed(a, b);
+                let (c, ft) = p.fill_unchecked_timed(a, b);
                 self.stats.fills += 1;
-                self.stats.fill_s += secs;
+                self.stats.fill_s += ft.numeric_s;
                 return c;
             }
         }
@@ -264,9 +366,9 @@ impl BatchExecutor {
         let p = PlannedProduct::plan(a, b);
         self.stats.plans_built += 1;
         self.stats.plan_s += p.plan_times.total_s();
-        let (c, secs) = p.fill_unchecked_timed(a, b);
+        let (c, ft) = p.fill_unchecked_timed(a, b);
         self.stats.fills += 1;
-        self.stats.fill_s += secs;
+        self.stats.fill_s += ft.numeric_s;
         self.cache_insert(key, Arc::new(p));
         c
     }
@@ -294,9 +396,11 @@ impl BatchExecutor {
     }
 
     /// Model the §III-C stream assignment for one planned product: one
-    /// job per non-empty Table-I bin, weighted by the bin's summed
-    /// intermediate products, LPT-packed onto [`BatchExecutor::n_streams`]
-    /// streams.
+    /// job per numeric bin (Table-I group × accumulator kind), weighted
+    /// by the bin's summed intermediate products, LPT-packed onto
+    /// [`BatchExecutor::n_streams`] streams — the same order
+    /// [`BatchExecutor::execute_batch`] dispatches per-bin completion
+    /// events in.
     ///
     /// The weights are **IP counts, not milliseconds** — the returned
     /// [`Schedule`]'s `*_ms` fields are in IP units, so use it for
@@ -304,11 +408,10 @@ impl BatchExecutor {
     /// only, never against simulated `sim_ms` values.
     pub fn stream_schedule(&self, p: &PlannedProduct) -> Schedule {
         let jobs: Vec<Job> = p
-            .group_work()
+            .symbolic_plan()
+            .bins
             .iter()
-            .enumerate()
-            .filter(|&(_, &w)| w > 0)
-            .map(|(g, &w)| Job { id: format!("group{g}"), ms: w as f64 })
+            .map(|bin| Job { id: bin.label(), ms: bin.weight as f64 })
             .collect();
         schedule_lpt(&jobs, self.n_streams)
     }
@@ -319,12 +422,20 @@ impl BatchExecutor {
         m.inc("batch.fills", self.stats.fills as u64);
         m.inc("batch.plan_hits", self.stats.plan_hits as u64);
         m.inc("batch.plan_misses", self.stats.plan_misses as u64);
+        m.inc("batch.batch_shared", self.stats.batch_shared as u64);
+        m.inc("batch.bins_filled", self.stats.bins_filled as u64);
         m.add_time("batch.plan", self.stats.plan_s);
         m.add_time("batch.fill", self.stats.fill_s);
         m.gauge("batch.plan_hit_rate", self.stats.hit_rate());
         if let Some(r) = &self.last_batch {
             m.gauge("batch.last.overlap_speedup", r.overlap_speedup());
             m.gauge("batch.last.stream_utilization", r.streams.utilization());
+            m.gauge("batch.last.bins", r.bins as f64);
+            // Gauges, not timers: this is a snapshot of the last batch,
+            // and repeated exports must not accumulate it.
+            m.gauge("batch.last.fill_copy_s", r.fill_kind_s[0]);
+            m.gauge("batch.last.fill_hash_s", r.fill_kind_s[1]);
+            m.gauge("batch.last.fill_spa_s", r.fill_kind_s[2]);
         }
     }
 }
@@ -353,12 +464,16 @@ mod tests {
         }
         let r = ex.last_batch.as_ref().expect("batch report recorded");
         assert_eq!(r.products, 3);
+        assert!(r.bins >= r.products, "every product fills at least one bin");
         assert!(r.wall_s > 0.0 && r.plan_s > 0.0 && r.fill_s > 0.0);
+        let kind_total: f64 = r.fill_kind_s.iter().sum();
+        assert!((kind_total - r.fill_s).abs() < 1e-9, "per-kind split must sum to fill_s");
         assert!(r.streams.makespan_ms > 0.0);
         // Three distinct structures: every product had to plan.
         assert_eq!(ex.stats.plans_built, 3);
         assert_eq!(ex.stats.fills, 3);
         assert_eq!(ex.stats.plan_hits, 0);
+        assert_eq!(ex.stats.bins_filled, r.bins);
     }
 
     #[test]
@@ -369,15 +484,48 @@ mod tests {
         assert_eq!(out.len(), 3);
         assert_eq!(out[0], out[2]);
         assert_eq!(ex.stats.plans_built, 1, "identical structures must share one plan");
-        assert_eq!((ex.stats.plan_hits, ex.stats.plan_misses), (2, 1));
+        // One unique structure, freshly built: one miss, zero hits —
+        // the two deduped slots are in-batch shares, not cache hits.
+        assert_eq!((ex.stats.plan_hits, ex.stats.plan_misses), (0, 1));
+        assert_eq!(ex.stats.batch_shared, 2);
         // The batch's plan seeded the cache: a following cached multiply
         // hits, and a second identical batch plans nothing.
         ex.multiply_cached(&a, &a);
-        assert_eq!(ex.stats.plan_hits, 3);
+        assert_eq!(ex.stats.plan_hits, 1);
         assert_eq!(ex.cached_plans(), 1);
         ex.execute_batch(&[(&a, &a)]);
         assert_eq!(ex.stats.plans_built, 1);
-        assert_eq!(ex.stats.plan_hits, 4);
+        assert_eq!(ex.stats.plan_hits, 2);
+    }
+
+    /// Regression: plan-cache hit stats used to be counted per *slot*,
+    /// so a deduped `Arc` plan shared across slots of one batch scored
+    /// a hit per slot. They are counted per unique structure hash now.
+    #[test]
+    fn plan_cache_stats_count_per_unique_structure() {
+        let a = random_square(11, 96, 4);
+        let b = random_square(12, 96, 4);
+        let mut ex = BatchExecutor::new(2);
+        // Seed the cache with a's plan.
+        ex.multiply_cached(&a, &a);
+        assert_eq!((ex.stats.plan_hits, ex.stats.plan_misses), (0, 1));
+        // 3 slots share the cached a-plan, 2 slots share a fresh b-plan:
+        // exactly one hit (a, cached) and one miss (b, built) — not 3
+        // hits — plus three in-batch shares.
+        let out = ex.execute_batch(&[(&a, &a), (&a, &a), (&b, &b), (&a, &a), (&b, &b)]);
+        assert_eq!(out.len(), 5);
+        assert_eq!(out[0], out[3]);
+        assert_eq!(out[2], out[4]);
+        assert_eq!(
+            (ex.stats.plan_hits, ex.stats.plan_misses, ex.stats.batch_shared),
+            (1, 2, 3),
+            "stats must count per unique structure hash, not per slot"
+        );
+        assert_eq!(ex.stats.plans_built, 2);
+        assert_eq!(ex.stats.fills, 6);
+        // Outputs are still exact under all the sharing.
+        assert_eq!(out[1], hash::multiply(&a, &a));
+        assert_eq!(out[4], hash::multiply(&b, &b));
     }
 
     #[test]
@@ -418,14 +566,15 @@ mod tests {
     }
 
     #[test]
-    fn stream_schedule_covers_nonempty_bins() {
+    fn stream_schedule_covers_all_numeric_bins() {
         let a = random_square(6, 256, 6);
         let p = crate::spgemm::hash::PlannedProduct::plan(&a, &a);
         let ex = BatchExecutor::new(4);
         let s = ex.stream_schedule(&p);
-        let nonempty = p.group_work().iter().filter(|&&w| w > 0).count();
-        assert_eq!(s.assignment.len(), nonempty);
+        assert_eq!(s.assignment.len(), p.symbolic_plan().bins.len());
         assert!(s.makespan_ms > 0.0);
+        // Bin weights partition the total IP (empty-output rows have
+        // zero IP), so the serial time equals the group-work total.
         let total: f64 = p.group_work().iter().map(|&w| w as f64).sum();
         assert!((s.serial_ms - total).abs() < 1e-9);
     }
@@ -443,6 +592,8 @@ mod tests {
         assert_eq!(m.counter("batch.plan_misses"), 1);
         assert_eq!(m.counter("batch.plans_built"), 1);
         assert_eq!(m.counter("batch.fills"), 3);
+        assert!(m.counter("batch.bins_filled") >= 1);
+        assert_eq!(m.counter("batch.batch_shared"), 0);
         assert!(m.timer_total("batch.fill") >= 0.0);
     }
 }

@@ -167,8 +167,9 @@ impl SpgemmExecutor {
         let p = slot.as_ref().expect("slot was just filled on miss");
         // Unchecked: hits were validated by `matches` above; misses hold
         // a plan built from these exact operands.
-        let (c, numeric_s) = p.fill_unchecked_timed(a, b);
-        self.phase_times.accumulate(&PhaseTimes { grouping_s: 0.0, symbolic_s: 0.0, numeric_s });
+        let (c, fill_times) = p.fill_unchecked_timed(a, b);
+        // Only the numeric fields are populated (incl. the per-kind split).
+        self.phase_times.accumulate(&fill_times);
         c
     }
 

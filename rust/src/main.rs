@@ -44,6 +44,19 @@ fn variant(args: &[String]) -> Result<Variant> {
 }
 
 fn run(args: &[String]) -> Result<()> {
+    // Global knob, honored by every subcommand: density threshold of the
+    // plan-guided dense-SPA accumulator (see DESIGN.md §Accumulator
+    // selection). Must be set before the first multiply.
+    if let Some(t) = opt(args, "--spa-threshold") {
+        let parsed: f64 =
+            t.parse().map_err(|_| anyhow!("--spa-threshold must be a number (got {t})"))?;
+        if !(0.0..=8.0).contains(&parsed) {
+            bail!("--spa-threshold out of range (0 forces SPA, ≥1 disables it; got {parsed})");
+        }
+        if !spgemm_aia::spgemm::hash::set_default_spa_threshold(parsed) {
+            eprintln!("warning: SPA threshold was already initialized; --spa-threshold ignored");
+        }
+    }
     match args.first().map(|s| s.as_str()) {
         Some("repro") => cmd_repro(args),
         Some("spgemm") => cmd_spgemm(args),
@@ -67,7 +80,12 @@ fn print_help() {
          spgemm-aia mcl --dataset Economics [--variant aia]\n  \
          spgemm-aia contract --dataset RoadTX [--variant aia]\n  \
          spgemm-aia gnn --dataset Flickr --arch gcn [--epochs 5]\n  \
-         spgemm-aia info\n\nENV:\n  REPRO_QUICK=1 small subsets; SPGEMM_AIA_ARTIFACTS=dir; SPGEMM_AIA_THREADS=n"
+         spgemm-aia info\n\nOPTIONS (all subcommands):\n  \
+         --spa-threshold T  dense-SPA density threshold: a row switches from hash to dense\n                     \
+         accumulation when nnz(C_i)/n_cols exceeds T (default 0.25;\n                     \
+         0 forces SPA on every multi-entry row, >=1 disables it)\n\nENV:\n  \
+         REPRO_QUICK=1 small subsets; SPGEMM_AIA_ARTIFACTS=dir; SPGEMM_AIA_THREADS=n;\n  \
+         SPGEMM_AIA_SPA_THRESHOLD=T (same as --spa-threshold)"
     );
 }
 
@@ -82,6 +100,7 @@ fn cmd_info() -> Result<()> {
         spgemm_aia::gen::table3_datasets().iter().map(|d| d.paper.name).collect::<Vec<_>>().join(", ")
     );
     println!("threads: {}", spgemm_aia::util::num_threads());
+    println!("spa-threshold: {}", spgemm_aia::spgemm::hash::default_spa_threshold());
     match Runtime::new(&Runtime::artifacts_dir()) {
         Ok(_) if cfg!(feature = "pjrt") => {
             println!("PJRT CPU client: ok (artifacts dir: {})", Runtime::artifacts_dir().display())

@@ -112,25 +112,31 @@ pub fn fig5() -> Json {
 
 /// Plan reuse on the iterative self-product workload (the MCL/GNN
 /// execution pattern): per dataset, the cost of a cold plan+fill vs a
-/// reused numeric fill and the overlap won by pipelining a batch of
-/// fills through [`BatchExecutor`]; then the plan-hit rate of a real
-/// MCL run, where the flow structure stabilises as clustering converges.
+/// reused numeric fill, the accumulator selection the plan baked in
+/// (copy/hash/SPA row split), and the per-bin overlap won by pipelining
+/// a batch of fills through [`BatchExecutor`] (bins dispatched as
+/// completion events, fill seconds split per accumulator kind); then
+/// the plan-hit rate of a real MCL run, where the flow structure
+/// stabilises as clustering converges.
 pub fn plan_reuse() -> Json {
     println!("\n=== Plan reuse: amortizing symbolic analysis across numeric fills (A^2) ===");
-    let t = Table::new(&[15, 11, 11, 11, 9, 10]);
-    t.header(&["name", "plan ms", "fill ms", "cold ms", "reuse", "overlap"]);
+    let t = Table::new(&[15, 11, 11, 11, 9, 10, 6, 17]);
+    t.header(&["name", "plan ms", "fill ms", "cold ms", "reuse", "overlap", "bins", "rows c/h/s"]);
     let mut out = Json::obj();
     let mut rows = Json::Arr(vec![]);
     for ds in active_datasets() {
         let a = (ds.gen)(SEED);
         let p = PlannedProduct::plan(&a, &a);
         let plan_s = p.plan_times.total_s();
-        let (_, fill_s) = p.fill_timed(&a, &a);
+        let (_, fill_times) = p.fill_timed(&a, &a);
+        let fill_s = fill_times.numeric_s;
         let cold_s = plan_s + fill_s;
         let reuse_x = cold_s / fill_s.max(1e-12);
+        let kind_rows = p.symbolic_plan().kind_rows();
         // Pipelined batch of 4 structurally *distinct* products (repeated
-        // structures would be deduped to one plan): planning of product
-        // k+1 overlaps the numeric fill of product k.
+        // structures would be deduped to one plan): the planner emits
+        // per-bin completion events, so symbolic analysis of product k+1
+        // overlaps the individual bin fills of product k.
         let variants: Vec<_> = (0..4u64).map(|k| (ds.gen)(SEED + k)).collect();
         let pairs: Vec<_> = variants.iter().map(|m| (m, m)).collect();
         let mut bx = BatchExecutor::new(4);
@@ -144,6 +150,8 @@ pub fn plan_reuse() -> Json {
             format!("{:.2}", cold_s * 1e3),
             format!("{reuse_x:.2}x"),
             format!("{overlap_x:.2}x"),
+            report.bins.to_string(),
+            format!("{}/{}/{}", kind_rows[0], kind_rows[1], kind_rows[2]),
         ]);
         let mut o = Json::obj();
         o.set("name", ds.paper.name.into());
@@ -153,6 +161,15 @@ pub fn plan_reuse() -> Json {
         o.set("reuse_speedup", reuse_x.into());
         o.set("batch_overlap_speedup", overlap_x.into());
         o.set("stream_utilization", report.streams.utilization().into());
+        // Per-bin overlap metrics: dispatch units and the per-kind
+        // numeric split of the pipelined fills.
+        o.set("batch_bins", report.bins.into());
+        o.set("copy_rows", kind_rows[0].into());
+        o.set("hash_rows", kind_rows[1].into());
+        o.set("spa_rows", kind_rows[2].into());
+        o.set("fill_copy_ms", (report.fill_kind_s[0] * 1e3).into());
+        o.set("fill_hash_ms", (report.fill_kind_s[1] * 1e3).into());
+        o.set("fill_spa_ms", (report.fill_kind_s[2] * 1e3).into());
         rows.push(o);
     }
     out.set("rows", rows);

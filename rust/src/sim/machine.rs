@@ -57,6 +57,8 @@ fn region_ordinal(r: Region) -> u64 {
         Region::GroupCtr => 13,
         Region::AiaStream => 14,
         Region::EscExpand => 15,
+        Region::SpaVals => 16,
+        Region::SpaFlags => 17,
     }
 }
 
@@ -68,8 +70,8 @@ fn region_base(r: Region) -> u64 {
 /// Bytes per element of the data regions streamed by `indirect_range`.
 fn data_elem_bytes(r: Region) -> u64 {
     match r {
-        Region::ColB | Region::ColA | Region::ColC | Region::RptA | Region::RptB | Region::RptC | Region::Map | Region::GroupCtr | Region::HashKeys => 4,
-        Region::ValA | Region::ValB | Region::ValC | Region::IpCount | Region::HashVals => 8,
+        Region::ColB | Region::ColA | Region::ColC | Region::RptA | Region::RptB | Region::RptC | Region::Map | Region::GroupCtr | Region::HashKeys | Region::SpaFlags => 4,
+        Region::ValA | Region::ValB | Region::ValC | Region::IpCount | Region::HashVals | Region::SpaVals => 8,
         Region::AiaStream | Region::EscExpand => 16,
     }
 }
@@ -277,7 +279,13 @@ impl Probe for Machine {
     }
 
     fn access(&mut self, region: Region, idx: usize, bytes: u32, kind: Kind) {
-        let salt = if matches!(region, Region::HashKeys | Region::HashVals) { self.hash_salt } else { 0 };
+        // Hash tables and SPA accumulators are per-block global-memory
+        // allocations: salt them so distinct blocks never alias.
+        let salt = if matches!(region, Region::HashKeys | Region::HashVals | Region::SpaVals | Region::SpaFlags) {
+            self.hash_salt
+        } else {
+            0
+        };
         let addr = region_base(region) + (salt + idx as u64) * bytes as u64;
         self.raw_access(addr, bytes as u64, kind, false);
     }

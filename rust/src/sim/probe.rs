@@ -40,6 +40,13 @@ pub enum Region {
     AiaStream,
     /// ESC baseline: expanded triple buffer.
     EscExpand,
+    /// Dense-SPA accumulator values (plan-guided dense rows). Accesses
+    /// are column-indexed into a contiguous per-row array, so the gather
+    /// scan is sequential — SPA rows are priced as streaming and never
+    /// go through the AIA engine (`indirect_range` is not emitted).
+    SpaVals,
+    /// Dense-SPA occupancy flags (one word per output column).
+    SpaFlags,
 }
 
 /// Kernel phases, for per-phase accounting (Fig. 5 reports per-phase L1
@@ -85,6 +92,11 @@ pub struct PhaseTimes {
     pub grouping_s: f64,
     pub symbolic_s: f64,
     pub numeric_s: f64,
+    /// Numeric seconds split by accumulator kind, indexed by
+    /// `spgemm::hash::AccumKind::index()` (scaled-copy, hash, SPA).
+    /// Sums to `numeric_s` for fills timed per bin, stays zero for
+    /// callers that only time the whole phase.
+    pub numeric_kind_s: [f64; 3],
 }
 
 impl PhaseTimes {
@@ -97,6 +109,9 @@ impl PhaseTimes {
         self.grouping_s += o.grouping_s;
         self.symbolic_s += o.symbolic_s;
         self.numeric_s += o.numeric_s;
+        for (k, v) in self.numeric_kind_s.iter_mut().zip(o.numeric_kind_s) {
+            *k += v;
+        }
     }
 
     /// Machine-readable form for `BENCH_*.json` / metrics dumps.
@@ -105,6 +120,9 @@ impl PhaseTimes {
         o.set("grouping_s", self.grouping_s.into());
         o.set("symbolic_s", self.symbolic_s.into());
         o.set("numeric_s", self.numeric_s.into());
+        o.set("numeric_copy_s", self.numeric_kind_s[0].into());
+        o.set("numeric_hash_s", self.numeric_kind_s[1].into());
+        o.set("numeric_spa_s", self.numeric_kind_s[2].into());
         o.set("total_s", self.total_s().into());
         o
     }

@@ -11,17 +11,42 @@
 //!
 //! Each phase is parallelised bin-by-bin through
 //! [`crate::util::parallel::par_dynamic_with`]: every worker owns one
-//! reusable hash table (plus gather scratch in the numeric phase) that
-//! survives across all rows it processes — no per-row allocation. The
-//! numeric phase additionally exploits the symbolic phase's exact counts:
-//! group-3 (global-table) rows get tables sized `2·nnz(C_i)` instead of
-//! `2·IP_i`, and rows with a single A entry are scaled copies of one B
-//! row — no table, no sort.
+//! reusable accumulator (plus gather scratch in the numeric phase) that
+//! survives across all rows it processes — no per-row allocation.
+//!
+//! # The symbolic → numeric contract
+//!
+//! The symbolic phase produces a [`SymbolicPlan`]: *exact* output row
+//! pointers, the Table-I row grouping, the per-row IP bounds — and,
+//! new with the plan-guided accumulator layer, the numeric work list
+//! itself ([`SymbolicPlan::bins`]). Because the symbolic phase knows
+//! every row's exact `nnz(C_i)`, the accumulator choice is made **at
+//! plan time, for free**: each Table-I bin is split by
+//! [`super::grouping::AccumKind`] into up to three homogeneous numeric
+//! bins —
+//!
+//! - **scaled-copy** rows (single A entry) copy one scaled B row, no
+//!   accumulator, no sort;
+//! - **hash** rows run Algorithm 4 linear probing, with group-3
+//!   (global-table) rows sized `2·nnz(C_i)` instead of `2·IP_i`;
+//! - **SPA** rows (output denser than [`EngineConfig::spa_threshold`])
+//!   stream into a [`super::table::DenseAccumulator`] — no probe
+//!   chains, sequential gather, priced as streaming by the simulator
+//!   (AIA-ineligible).
+//!
+//! All three paths are **bit-identical**: per-column accumulation order
+//! is the B-stream encounter order in each, and the final sort is over
+//! unique keys. The numeric phase ([`numeric`] / [`numeric_bin_into`])
+//! only consumes the plan; callers may fill bins one at a time (the
+//! per-bin overlap pipeline in `coordinator::batch` does) or all at
+//! once.
 //!
 //! Entry points:
 //! - [`multiply`] / [`multiply_timed`] — the fast functional path
 //!   ([`NullProbe`], instrumentation compiles away); `_timed` also
-//!   reports wall time per phase as a [`PhaseTimes`];
+//!   reports wall time per phase as a [`PhaseTimes`], with the numeric
+//!   seconds split per accumulator kind; `_cfg` variants take an
+//!   explicit [`EngineConfig`] (threshold knob);
 //! - [`symbolic`] + [`numeric`] — the two phases as separate calls, for
 //!   callers that reuse a plan (or inspect it); iterative callers should
 //!   prefer the validated handle [`super::plan::PlannedProduct`], which
@@ -31,19 +56,96 @@
 //!   baseline for `benches/spgemm_selfproduct.rs`;
 //! - [`multiply_traced`] — deterministic sequential path that emits the
 //!   full memory trace through a [`Probe`], in thread-block program
-//!   order, for the AIA simulator.
+//!   order, for the AIA simulator; SPA rows emit plain streaming
+//!   accesses instead of [`Probe::indirect_range`].
 
-use super::grouping::{global_table_size, GroupSpec, Grouping, Strategy, GROUP_SPECS};
+use super::grouping::{
+    global_table_size, select_accumulator, AccumKind, GroupSpec, Grouping, Strategy, DEFAULT_SPA_THRESHOLD,
+    GROUP_SPECS,
+};
 use super::sort::bitonic_sort_by_key;
-use super::table::{HashTable, TableLoc};
+use super::table::{DenseAccumulator, HashTable, TableLoc};
 use crate::sim::probe::{Kind, NullProbe, Phase, PhaseTimes, Probe, Region};
 use crate::spgemm::ip::{intermediate_products, intermediate_products_traced, IP_BLOCK_ROWS};
 use crate::sparse::Csr;
 use crate::util::{par_chunks, parallel::par_dynamic_with};
+use std::sync::OnceLock;
 use std::time::Instant;
 
+/// Tunables of the plan-guided numeric phase.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EngineConfig {
+    /// Density threshold of the SPA fallback: a row switches from hash
+    /// to dense-SPA accumulation when `nnz(C_i) / n_cols` **exceeds**
+    /// this value (strict, so `0.0` forces SPA on every multi-entry row
+    /// and any value ≥ 1.0 disables it). See
+    /// [`super::grouping::select_accumulator`] for the full decision
+    /// table.
+    pub spa_threshold: f64,
+}
+
+impl Default for EngineConfig {
+    /// The process-wide default threshold: the value set by
+    /// [`set_default_spa_threshold`] (the CLI's `--spa-threshold`), else
+    /// the `SPGEMM_AIA_SPA_THRESHOLD` env var, else
+    /// [`DEFAULT_SPA_THRESHOLD`].
+    fn default() -> EngineConfig {
+        EngineConfig { spa_threshold: default_spa_threshold() }
+    }
+}
+
+static SPA_THRESHOLD_CELL: OnceLock<f64> = OnceLock::new();
+
+/// Set the process-wide default SPA threshold (the CLI's
+/// `--spa-threshold` knob). Returns `false` if the default was already
+/// read or set — call once, at startup, before any multiply.
+pub fn set_default_spa_threshold(t: f64) -> bool {
+    SPA_THRESHOLD_CELL.set(t).is_ok()
+}
+
+/// The process-wide default SPA threshold (see
+/// [`EngineConfig::default`]). Env values outside the CLI's accepted
+/// `[0, 8]` range (or unparsable ones) are ignored, not latched — a
+/// stray `SPGEMM_AIA_SPA_THRESHOLD=-1` must not force the SPA onto
+/// every row of every multiply in the process.
+pub fn default_spa_threshold() -> f64 {
+    *SPA_THRESHOLD_CELL.get_or_init(|| {
+        std::env::var("SPGEMM_AIA_SPA_THRESHOLD")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .filter(|t: &f64| (0.0..=8.0).contains(t))
+            .unwrap_or(DEFAULT_SPA_THRESHOLD)
+    })
+}
+
+/// One homogeneous unit of numeric work: the rows of one Table-I group
+/// that share one accumulator kind. Bins are the granularity at which
+/// the numeric phase runs, the stream scheduler packs, and the batch
+/// pipeline dispatches per-bin completion events.
+#[derive(Clone, Debug)]
+pub struct NumericBin {
+    /// Table-I group id (0–3) — fixes strategy, block and table sizes.
+    pub group: u8,
+    /// Accumulator every row in this bin uses.
+    pub kind: AccumKind,
+    /// Member rows (original row ids, stable within the group). Rows
+    /// with zero output are excluded from every bin.
+    pub rows: Vec<u32>,
+    /// Summed intermediate products — the bin's scheduling weight.
+    pub weight: u64,
+}
+
+impl NumericBin {
+    /// Short label for schedules and metrics, e.g. `g3/spa`.
+    pub fn label(&self) -> String {
+        format!("g{}/{}", self.group, self.kind.name())
+    }
+}
+
 /// Output of the symbolic phase: everything the numeric phase needs to
-/// fill values without re-deriving structure.
+/// fill values without re-deriving structure, including the
+/// accumulator-kind decision per row (made here, where exact sizes are
+/// known — the numeric phase only consumes it).
 pub struct SymbolicPlan {
     /// Per-row intermediate-product upper bounds (Algorithm 1).
     pub ip: Vec<u64>,
@@ -51,6 +153,14 @@ pub struct SymbolicPlan {
     pub grouping: Grouping,
     /// *Exact* output row pointers: `rpt[i+1] - rpt[i]` = nnz of C row i.
     pub rpt: Vec<usize>,
+    /// Per-row accumulator kind (rows with zero output hold a
+    /// placeholder — use [`SymbolicPlan::accumulator_kind`]).
+    pub accum: Vec<AccumKind>,
+    /// The numeric work list: each Table-I bin split by accumulator
+    /// kind, empty bins dropped.
+    pub bins: Vec<NumericBin>,
+    /// Density threshold the kinds were selected with.
+    pub spa_threshold: f64,
 }
 
 impl SymbolicPlan {
@@ -62,6 +172,26 @@ impl SymbolicPlan {
     /// Exact nnz of output row `i`.
     pub fn row_nnz(&self, i: usize) -> usize {
         self.rpt[i + 1] - self.rpt[i]
+    }
+
+    /// Accumulator the numeric phase will use for row `i` (`None` for
+    /// rows with no output — they are skipped entirely).
+    pub fn accumulator_kind(&self, i: usize) -> Option<AccumKind> {
+        if self.row_nnz(i) == 0 {
+            None
+        } else {
+            Some(self.accum[i])
+        }
+    }
+
+    /// Row counts per accumulator kind, indexed by
+    /// [`AccumKind::index`] (copy, hash, SPA).
+    pub fn kind_rows(&self) -> [usize; 3] {
+        let mut n = [0usize; 3];
+        for b in &self.bins {
+            n[b.kind.index()] += b.rows.len();
+        }
+        n
     }
 }
 
@@ -83,17 +213,29 @@ fn bin_table(spec: &GroupSpec) -> HashTable {
     }
 }
 
-/// Fast parallel hash SpGEMM (symbolic + numeric phases).
+/// Fast parallel hash SpGEMM (symbolic + numeric phases), at the
+/// process-default [`EngineConfig`].
 pub fn multiply(a: &Csr, b: &Csr) -> Csr {
-    multiply_timed(a, b).0
+    multiply_cfg(a, b, &EngineConfig::default())
 }
 
-/// [`multiply`] plus wall time per phase.
+/// [`multiply`] with an explicit [`EngineConfig`].
+pub fn multiply_cfg(a: &Csr, b: &Csr, cfg: &EngineConfig) -> Csr {
+    multiply_timed_cfg(a, b, cfg).0
+}
+
+/// [`multiply`] plus wall time per phase (numeric seconds split per
+/// accumulator kind).
 pub fn multiply_timed(a: &Csr, b: &Csr) -> (Csr, PhaseTimes) {
-    let (plan, mut times) = symbolic_timed(a, b);
-    let t = Instant::now();
-    let c = numeric(a, b, &plan);
-    times.numeric_s = t.elapsed().as_secs_f64();
+    multiply_timed_cfg(a, b, &EngineConfig::default())
+}
+
+/// [`multiply_timed`] with an explicit [`EngineConfig`].
+pub fn multiply_timed_cfg(a: &Csr, b: &Csr, cfg: &EngineConfig) -> (Csr, PhaseTimes) {
+    let (plan, mut times) = symbolic_timed(a, b, cfg);
+    let (c, numeric_times) = numeric_timed(a, b, &plan);
+    times.numeric_s = numeric_times.numeric_s;
+    times.numeric_kind_s = numeric_times.numeric_kind_s;
     (c, times)
 }
 
@@ -101,7 +243,7 @@ pub fn multiply_timed(a: &Csr, b: &Csr) -> (Csr, PhaseTimes) {
 /// analysis with per-stage wall times (`numeric_s` left 0). Shared with
 /// the plan-reuse layer so phase attribution stays identical between
 /// cold multiplies and planned products.
-pub(super) fn symbolic_timed(a: &Csr, b: &Csr) -> (SymbolicPlan, PhaseTimes) {
+pub(super) fn symbolic_timed(a: &Csr, b: &Csr, cfg: &EngineConfig) -> (SymbolicPlan, PhaseTimes) {
     assert_eq!(a.n_cols, b.n_rows, "dimension mismatch");
     let t0 = Instant::now();
     let ip = intermediate_products(a, b);
@@ -109,24 +251,51 @@ pub(super) fn symbolic_timed(a: &Csr, b: &Csr) -> (SymbolicPlan, PhaseTimes) {
     let grouping_s = t0.elapsed().as_secs_f64();
 
     let t1 = Instant::now();
-    let plan = symbolic_with(a, b, ip, grouping);
+    let plan = symbolic_with(a, b, ip, grouping, cfg);
     let symbolic_s = t1.elapsed().as_secs_f64();
 
-    (plan, PhaseTimes { grouping_s, symbolic_s, numeric_s: 0.0 })
+    (plan, PhaseTimes { grouping_s, symbolic_s, ..PhaseTimes::default() })
 }
 
-/// Symbolic phase: IP estimation, row binning, and exact per-row output
-/// sizes.
+/// Symbolic phase: IP estimation, row binning, exact per-row output
+/// sizes, and the per-row accumulator decision — at the process-default
+/// [`EngineConfig`].
 pub fn symbolic(a: &Csr, b: &Csr) -> SymbolicPlan {
+    symbolic_cfg(a, b, &EngineConfig::default())
+}
+
+/// [`symbolic`] with an explicit [`EngineConfig`]: the threshold decides
+/// which rows the numeric phase will run through the dense SPA.
+///
+/// ```
+/// use spgemm_aia::sparse::Csr;
+/// use spgemm_aia::spgemm::hash::{symbolic_cfg, AccumKind, EngineConfig};
+///
+/// // Row 0 of C = A·B is fully dense (4/4 columns), row 1 comes from a
+/// // single A entry.
+/// let a = Csr::from_dense(&[vec![1.0, 1.0], vec![1.0, 0.0]]);
+/// let b = Csr::from_dense(&[
+///     vec![1.0, 1.0, 0.0, 0.0],
+///     vec![0.0, 0.0, 1.0, 1.0],
+/// ]);
+/// let plan = symbolic_cfg(&a, &b, &EngineConfig { spa_threshold: 0.5 });
+/// assert_eq!(plan.accumulator_kind(0), Some(AccumKind::Spa));
+/// assert_eq!(plan.accumulator_kind(1), Some(AccumKind::ScaledCopy));
+/// // Raising the threshold past 1.0 disables the SPA entirely.
+/// let plan = symbolic_cfg(&a, &b, &EngineConfig { spa_threshold: 2.0 });
+/// assert_eq!(plan.accumulator_kind(0), Some(AccumKind::Hash));
+/// ```
+pub fn symbolic_cfg(a: &Csr, b: &Csr, cfg: &EngineConfig) -> SymbolicPlan {
     assert_eq!(a.n_cols, b.n_rows, "dimension mismatch");
     let ip = intermediate_products(a, b);
     let grouping = Grouping::build(&ip);
-    symbolic_with(a, b, ip, grouping)
+    symbolic_with(a, b, ip, grouping, cfg)
 }
 
 /// Symbolic counting given precomputed IP + bins (shared by
-/// [`symbolic`] and [`symbolic_timed`], which times the stages apart).
-fn symbolic_with(a: &Csr, b: &Csr, ip: Vec<u64>, grouping: Grouping) -> SymbolicPlan {
+/// [`symbolic_cfg`] and [`symbolic_timed`], which times the stages
+/// apart).
+fn symbolic_with(a: &Csr, b: &Csr, ip: Vec<u64>, grouping: Grouping, cfg: &EngineConfig) -> SymbolicPlan {
     let mut row_nnz = vec![0u32; a.n_rows];
     {
         let nnz_ptr = row_nnz.as_mut_ptr() as usize;
@@ -155,7 +324,36 @@ fn symbolic_with(a: &Csr, b: &Csr, ip: Vec<u64>, grouping: Grouping) -> Symbolic
     for i in 0..a.n_rows {
         rpt[i + 1] = rpt[i] + row_nnz[i] as usize;
     }
-    SymbolicPlan { ip, grouping, rpt }
+    // Accumulator selection: exact sizes are now known, so the kind per
+    // row — and with it the numeric work list — costs one pass.
+    let mut accum = vec![AccumKind::ScaledCopy; a.n_rows];
+    let mut bins = Vec::new();
+    for spec in &GROUP_SPECS {
+        let mut parts: [Vec<u32>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+        let mut weights = [0u64; 3];
+        for &row in grouping.group_rows(spec.id) {
+            let r = row as usize;
+            let n_out = row_nnz[r] as usize;
+            if n_out == 0 {
+                continue; // never reaches the numeric phase
+            }
+            let kind = select_accumulator(a.row_nnz(r), n_out, b.n_cols, cfg.spa_threshold);
+            accum[r] = kind;
+            parts[kind.index()].push(row);
+            weights[kind.index()] += ip[r];
+        }
+        for (ki, rows) in parts.into_iter().enumerate() {
+            if !rows.is_empty() {
+                bins.push(NumericBin {
+                    group: spec.id as u8,
+                    kind: AccumKind::from_index(ki),
+                    rows,
+                    weight: weights[ki],
+                });
+            }
+        }
+    }
+    SymbolicPlan { ip, grouping, rpt, accum, bins, spa_threshold: cfg.spa_threshold }
 }
 
 /// Exact nnz of one output row (symbolic hash inserts, with the trivial
@@ -177,82 +375,139 @@ fn symbolic_row_nnz(a: &Csr, b: &Csr, row: usize, ip_row: u64, spec: &GroupSpec,
 }
 
 /// Numeric phase: accumulate values into the plan's pre-sized, disjoint
-/// output slices. The plan must come from [`symbolic`] on the same
-/// `(a, b)` pair.
+/// output slices, one plan bin at a time. The plan must come from
+/// [`symbolic`] on the same `(a, b)` pair.
 pub fn numeric(a: &Csr, b: &Csr, plan: &SymbolicPlan) -> Csr {
+    numeric_timed(a, b, plan).0
+}
+
+/// [`numeric`] plus wall time: total numeric seconds and the split per
+/// accumulator kind (only the `numeric*` fields of the returned
+/// [`PhaseTimes`] are populated).
+pub fn numeric_timed(a: &Csr, b: &Csr, plan: &SymbolicPlan) -> (Csr, PhaseTimes) {
+    // Validate here, not only per bin: a plan with zero bins (empty
+    // output) must still reject mismatched operands instead of handing
+    // back a malformed Csr.
     assert_eq!(a.n_cols, b.n_rows, "dimension mismatch");
     assert_eq!(plan.rpt.len(), a.n_rows + 1, "plan does not match A");
+    // Timer covers the O(nnz) output allocation too, matching what the
+    // plan-reuse fill timer has always measured (longitudinal bench
+    // numbers depend on this).
+    let t0 = Instant::now();
     let nnz_c = plan.nnz();
     let mut col = vec![0u32; nnz_c];
     let mut val = vec![0f64; nnz_c];
-    {
-        let col_ptr = col.as_mut_ptr() as usize;
-        let val_ptr = val.as_mut_ptr() as usize;
-        for spec in &GROUP_SPECS {
-            let rows = plan.grouping.group_rows(spec.id);
-            if rows.is_empty() {
-                continue;
-            }
-            par_dynamic_with(
-                rows.len(),
-                bin_batch(spec),
-                || (bin_table(spec), Vec::<(u32, f64)>::new()),
-                |(table, scratch), ri| {
-                    let row = rows[ri] as usize;
-                    let start = plan.rpt[row];
-                    let n_out = plan.rpt[row + 1] - start;
-                    if n_out == 0 {
-                        return;
+    let mut times = PhaseTimes::default();
+    for bi in 0..plan.bins.len() {
+        let t = Instant::now();
+        numeric_bin_into(a, b, plan, bi, &mut col, &mut val);
+        times.numeric_kind_s[plan.bins[bi].kind.index()] += t.elapsed().as_secs_f64();
+    }
+    times.numeric_s = t0.elapsed().as_secs_f64();
+    (Csr::new_unchecked(a.n_rows, b.n_cols, plan.rpt.clone(), col, val), times)
+}
+
+/// Fill one numeric bin of `plan` into caller-owned output buffers
+/// (`col`/`val` must be sized to `plan.nnz()`). Rows write disjoint
+/// `[rpt[i], rpt[i+1])` slices, so bins of the same plan may be filled
+/// in any order — this is the per-bin dispatch unit of the batch
+/// pipeline's phase overlap.
+pub fn numeric_bin_into(a: &Csr, b: &Csr, plan: &SymbolicPlan, bin_idx: usize, col: &mut [u32], val: &mut [f64]) {
+    assert_eq!(a.n_cols, b.n_rows, "dimension mismatch");
+    assert_eq!(plan.rpt.len(), a.n_rows + 1, "plan does not match A");
+    assert_eq!(col.len(), plan.nnz(), "output buffers must be sized to the plan");
+    assert_eq!(val.len(), plan.nnz(), "output buffers must be sized to the plan");
+    let bin = &plan.bins[bin_idx];
+    let spec = &GROUP_SPECS[bin.group as usize];
+    let rows = &bin.rows[..];
+    let col_ptr = col.as_mut_ptr() as usize;
+    let val_ptr = val.as_mut_ptr() as usize;
+    match bin.kind {
+        // Single-A-entry rows are scaled copies of one B row: already
+        // sorted, collision-free — no accumulator, no sort.
+        AccumKind::ScaledCopy => par_dynamic_with(
+            rows.len(),
+            bin_batch(spec),
+            || (),
+            |_, ri| {
+                let row = rows[ri] as usize;
+                let start = plan.rpt[row];
+                let n_out = plan.rpt[row + 1] - start;
+                let j = a.rpt[row];
+                let av = a.val[j];
+                let (bc, bv) = b.row(a.col[j] as usize);
+                // Real assert, not debug: the pointer writes below are
+                // bounded by the plan, so a plan/input mismatch must
+                // panic rather than corrupt memory.
+                assert_eq!(bc.len(), n_out, "plan does not match inputs at row {row}");
+                let cp = col_ptr as *mut u32;
+                let vp = val_ptr as *mut f64;
+                for (o, (&c, &v)) in bc.iter().zip(bv).enumerate() {
+                    // SAFETY: rows write disjoint [rpt[i], rpt[i+1]) slices.
+                    unsafe {
+                        *cp.add(start + o) = c;
+                        *vp.add(start + o) = av * v;
                     }
-                    let cp = col_ptr as *mut u32;
-                    let vp = val_ptr as *mut f64;
-                    // Single-A-entry rows are scaled copies of one B row:
-                    // already sorted, collision-free — no table, no sort.
-                    if a.row_nnz(row) == 1 {
-                        let j = a.rpt[row];
-                        let av = a.val[j];
-                        let (bc, bv) = b.row(a.col[j] as usize);
-                        // Real assert, not debug: the pointer writes below
-                        // are bounded by the plan, so a plan/input mismatch
-                        // must panic rather than corrupt memory.
-                        assert_eq!(bc.len(), n_out, "plan does not match inputs at row {row}");
-                        for (o, (&c, &v)) in bc.iter().zip(bv).enumerate() {
-                            // SAFETY: rows write disjoint
-                            // [rpt[i], rpt[i+1]) slices.
-                            unsafe {
-                                *cp.add(start + o) = c;
-                                *vp.add(start + o) = av * v;
-                            }
-                        }
-                        return;
-                    }
-                    match spec.table_size {
-                        Some(_) => table.clear(),
-                        // Exact sizing from the symbolic count: 2·nnz(C_i)
-                        // keeps load factor ≤ 0.5 and is far below the
-                        // 2·IP_i the single-pass engine allocated for hub
-                        // rows.
-                        None => table.reset_with_capacity(global_table_size(n_out as u64)),
-                    }
-                    accum_row_fast(a, b, row, table, scratch);
-                    // Real assert, not debug: bounds the unsafe writes below
-                    // (a stale/mismatched plan must panic, not scribble).
-                    assert_eq!(scratch.len(), n_out, "symbolic/numeric disagree on row {row}");
-                    // fast path: std sort (identical result to bitonic —
-                    // keys unique)
-                    scratch.sort_unstable_by_key(|e| e.0);
-                    for (o, &(c, v)) in scratch.iter().enumerate() {
-                        // SAFETY: as above — disjoint output slices.
-                        unsafe {
-                            *cp.add(start + o) = c;
-                            *vp.add(start + o) = v;
-                        }
-                    }
-                },
-            );
+                }
+            },
+        ),
+        AccumKind::Hash => par_dynamic_with(
+            rows.len(),
+            bin_batch(spec),
+            || (bin_table(spec), Vec::<(u32, f64)>::new()),
+            |(table, scratch), ri| {
+                let row = rows[ri] as usize;
+                let start = plan.rpt[row];
+                let n_out = plan.rpt[row + 1] - start;
+                match spec.table_size {
+                    Some(_) => table.clear(),
+                    // Exact sizing from the symbolic count: 2·nnz(C_i)
+                    // keeps load factor ≤ 0.5 and is far below the
+                    // 2·IP_i the single-pass engine allocated for hub
+                    // rows.
+                    None => table.reset_with_capacity(global_table_size(n_out as u64)),
+                }
+                accum_row_fast(a, b, row, table, scratch);
+                write_sorted_row(scratch, row, start, n_out, col_ptr, val_ptr);
+            },
+        ),
+        // Dense rows stream into a per-worker SPA: no probe chains, and
+        // the accumulation order per column is identical to the hash
+        // path's, so the sorted output is bit-identical.
+        AccumKind::Spa => par_dynamic_with(
+            rows.len(),
+            bin_batch(spec),
+            || (DenseAccumulator::new(b.n_cols), Vec::<(u32, f64)>::new()),
+            |(spa, scratch), ri| {
+                let row = rows[ri] as usize;
+                let start = plan.rpt[row];
+                let n_out = plan.rpt[row + 1] - start;
+                spa.clear();
+                accum_row_spa(a, b, row, spa, scratch);
+                write_sorted_row(scratch, row, start, n_out, col_ptr, val_ptr);
+            },
+        ),
+    }
+}
+
+/// Shared epilogue of the hash and SPA arms of [`numeric_bin_into`]:
+/// sort the gathered row (std sort — identical result to bitonic, keys
+/// unique) and write it into the row's disjoint output slice.
+///
+/// The length assert is a real assert, not debug: it bounds the unsafe
+/// writes below, so a stale/mismatched plan must panic, not scribble.
+fn write_sorted_row(scratch: &mut [(u32, f64)], row: usize, start: usize, n_out: usize, col_ptr: usize, val_ptr: usize) {
+    assert_eq!(scratch.len(), n_out, "symbolic/numeric disagree on row {row}");
+    scratch.sort_unstable_by_key(|e| e.0);
+    let cp = col_ptr as *mut u32;
+    let vp = val_ptr as *mut f64;
+    for (o, &(c, v)) in scratch.iter().enumerate() {
+        // SAFETY: rows write disjoint [rpt[i], rpt[i+1]) slices.
+        unsafe {
+            *cp.add(start + o) = c;
+            *vp.add(start + o) = v;
         }
     }
-    Csr::new_unchecked(a.n_rows, b.n_cols, plan.rpt.clone(), col, val)
 }
 
 /// The seed's engine: allocation and accumulation fused per bin, one
@@ -416,9 +671,11 @@ pub fn multiply_traced<P: Probe>(a: &Csr, b: &Csr, probe: &mut P) -> Csr {
     let nnz_c = rpt[a.n_rows];
 
     // ---- accumulation (numeric) phase ----
+    let spa_threshold = EngineConfig::default().spa_threshold;
     let mut col = vec![0u32; nnz_c];
     let mut val = vec![0f64; nnz_c];
     let mut scratch: Vec<(u32, f64)> = Vec::new();
+    let mut spa_holder: Option<DenseAccumulator> = None;
     for g in 0..4 {
         let spec = &GROUP_SPECS[g];
         let rows = grouping.group_rows(g);
@@ -429,6 +686,22 @@ pub fn multiply_traced<P: Probe>(a: &Csr, b: &Csr, probe: &mut P) -> Csr {
             for &row in chunk {
                 let row = row as usize;
                 probe.access(Region::Map, row, 4, Kind::Read);
+                let start = rpt[row];
+                // Plan-guided SPA rows: streamed accumulation, sequential
+                // gather (already column-sorted — no bitonic network).
+                if traced_row_uses_spa(a, b, row, row_nnz[row] as usize, spa_threshold) {
+                    let spa = spa_holder.get_or_insert_with(|| DenseAccumulator::new(b.n_cols));
+                    spa.clear();
+                    accum_row_spa_traced(a, b, row, spa, &mut scratch, probe);
+                    probe.access(Region::RptC, row, 4, Kind::Read);
+                    for (o, &(c, v)) in scratch.iter().enumerate() {
+                        probe.access(Region::ColC, start + o, 4, Kind::Write);
+                        probe.access(Region::ValC, start + o, 8, Kind::Write);
+                        col[start + o] = c;
+                        val[start + o] = v;
+                    }
+                    continue;
+                }
                 let table = match &mut table_holder {
                     Some(t) => {
                         t.clear();
@@ -443,7 +716,6 @@ pub fn multiply_traced<P: Probe>(a: &Csr, b: &Csr, probe: &mut P) -> Csr {
                 // Column-index sorting: the paper's in-block bitonic network.
                 bitonic_sort_by_key(&mut scratch, probe);
                 probe.access(Region::RptC, row, 4, Kind::Read);
-                let start = rpt[row];
                 for (o, &(c, v)) in scratch.iter().enumerate() {
                     probe.access(Region::ColC, start + o, 4, Kind::Write);
                     probe.access(Region::ValC, start + o, 8, Kind::Write);
@@ -497,8 +769,11 @@ pub fn multiply_traced_stats<P: Probe>(a: &Csr, b: &Csr, probe: &mut P, every: u
     let mut next_block = n_ip_blocks;
 
     // Allocation phase: real hash work on sampled blocks, IP bound for
-    // the rest (address generation only).
+    // the rest (address generation only; `exact` remembers which is
+    // which — the accumulator decision below must never run on a
+    // bound).
     let mut row_nnz = vec![0u32; a.n_rows];
+    let mut exact = vec![false; a.n_rows];
     for g in 0..4 {
         let spec = &GROUP_SPECS[g];
         let rows = grouping.group_rows(g);
@@ -515,6 +790,7 @@ pub fn multiply_traced_stats<P: Probe>(a: &Csr, b: &Csr, probe: &mut P, every: u
                     row_nnz[row] = ip[row].min(b.n_cols as u64) as u32;
                     continue;
                 }
+                exact[row] = true;
                 probe.access(Region::Map, row, 4, Kind::Read);
                 let table = match &mut table_holder {
                     Some(t) => {
@@ -540,7 +816,14 @@ pub fn multiply_traced_stats<P: Probe>(a: &Csr, b: &Csr, probe: &mut P, every: u
     }
 
     // Accumulation phase: sampled blocks only.
+    let spa_threshold = EngineConfig::default().spa_threshold;
     let mut scratch: Vec<(u32, f64)> = Vec::new();
+    let mut spa_holder: Option<DenseAccumulator> = None;
+    // Untraced counting table for rows whose allocation block was
+    // unsampled: their `row_nnz` is an IP upper bound, good enough for
+    // output addresses but not for the accumulator decision — deciding
+    // SPA-vs-hash on a bound would trace the wrong path entirely.
+    let mut count_table = HashTable::new(1024, TableLoc::Global);
     for g in 0..4 {
         let spec = &GROUP_SPECS[g];
         let rows = grouping.group_rows(g);
@@ -557,6 +840,31 @@ pub fn multiply_traced_stats<P: Probe>(a: &Csr, b: &Csr, probe: &mut P, every: u
             for &row in chunk {
                 let row = row as usize;
                 probe.access(Region::Map, row, 4, Kind::Read);
+                let start = rpt[row];
+                let bound = ip[row].min(b.n_cols as u64) as usize;
+                let n_out = if exact[row] {
+                    row_nnz[row] as usize
+                } else if bound as f64 <= spa_threshold * b.n_cols as f64 {
+                    // The IP bound already rules SPA out (n_out ≤ bound):
+                    // no need for the exact recount on sparse rows.
+                    bound
+                } else {
+                    count_table.reset_with_capacity(global_table_size(bound as u64));
+                    alloc_row(a, b, row, &mut count_table, &mut NullProbe) as usize
+                };
+                // SPA rows: streamed accumulation, sequential sorted
+                // gather — same decision as the fast path's plan.
+                if traced_row_uses_spa(a, b, row, n_out, spa_threshold) {
+                    let spa = spa_holder.get_or_insert_with(|| DenseAccumulator::new(b.n_cols));
+                    spa.clear();
+                    accum_row_spa_traced(a, b, row, spa, &mut scratch, probe);
+                    probe.access(Region::RptC, row, 4, Kind::Read);
+                    for (o, &(_c, _v)) in scratch.iter().enumerate() {
+                        probe.access(Region::ColC, start + o, 4, Kind::Write);
+                        probe.access(Region::ValC, start + o, 8, Kind::Write);
+                    }
+                    continue;
+                }
                 let table = match &mut table_holder {
                     Some(t) => {
                         t.clear();
@@ -570,7 +878,6 @@ pub fn multiply_traced_stats<P: Probe>(a: &Csr, b: &Csr, probe: &mut P, every: u
                 accum_row(a, b, row, table, &mut scratch, probe);
                 bitonic_sort_by_key(&mut scratch, probe);
                 probe.access(Region::RptC, row, 4, Kind::Read);
-                let start = rpt[row];
                 for (o, &(_c, _v)) in scratch.iter().enumerate() {
                     probe.access(Region::ColC, start + o, 4, Kind::Write);
                     probe.access(Region::ValC, start + o, 8, Kind::Write);
@@ -635,6 +942,62 @@ fn accum_row_fast(a: &Csr, b: &Csr, i: usize, table: &mut HashTable, scratch: &m
         }
     }
     table.gather_list(scratch);
+}
+
+/// Dense-SPA accumulation row processor (plan-guided dense rows): same
+/// intermediate products, same per-column accumulation order as the
+/// hash path, but into `vals[col]` directly — no probing. Caller clears
+/// the SPA and sorts `scratch`.
+fn accum_row_spa(a: &Csr, b: &Csr, i: usize, spa: &mut DenseAccumulator, scratch: &mut Vec<(u32, f64)>) {
+    for j in a.row_range(i) {
+        let colk = a.col[j] as usize;
+        let av = a.val[j];
+        for k in b.rpt[colk]..b.rpt[colk + 1] {
+            spa.add(b.col[k], av * b.val[k]);
+        }
+    }
+    spa.gather_list(scratch);
+}
+
+/// Traced dense-SPA row processor: the B rows are read as **plain
+/// streamed loads** (never [`Probe::indirect_range`] — SPA rows are
+/// AIA-ineligible by design, the gather/scatter engine buys nothing for
+/// a row that streams into a contiguous accumulator), and the SPA
+/// accesses land on [`Region::SpaVals`]/[`Region::SpaFlags`]. The
+/// gather is the GPU's sequential scan, so `scratch` comes back sorted
+/// by column — no bitonic network needed.
+fn accum_row_spa_traced<P: Probe>(
+    a: &Csr,
+    b: &Csr,
+    i: usize,
+    spa: &mut DenseAccumulator,
+    scratch: &mut Vec<(u32, f64)>,
+    probe: &mut P,
+) {
+    probe.access(Region::RptA, i, 4, Kind::Read);
+    probe.access(Region::RptA, i + 1, 4, Kind::Read);
+    for j in a.row_range(i) {
+        probe.access(Region::ColA, j, 4, Kind::Read);
+        probe.access(Region::ValA, j, 8, Kind::Read);
+        let colk = a.col[j] as usize;
+        let av = a.val[j];
+        probe.access(Region::RptB, colk, 4, Kind::Read);
+        probe.access(Region::RptB, colk + 1, 4, Kind::Read);
+        for k in b.rpt[colk]..b.rpt[colk + 1] {
+            probe.access(Region::ColB, k, 4, Kind::Read);
+            probe.access(Region::ValB, k, 8, Kind::Read);
+            spa.add_traced(b.col[k], av * b.val[k], probe);
+            probe.compute(1); // the multiply
+        }
+    }
+    spa.gather(scratch, probe);
+}
+
+/// Whether the traced paths run row `i` through the SPA — the same
+/// decision [`symbolic_cfg`] bakes into the plan, evaluated at the
+/// process-default threshold (the traced engine replans inline).
+fn traced_row_uses_spa(a: &Csr, b: &Csr, row: usize, n_out: usize, spa_threshold: f64) -> bool {
+    n_out > 0 && select_accumulator(a.row_nnz(row), n_out, b.n_cols, spa_threshold) == AccumKind::Spa
 }
 
 /// Strategy assigned to a row with the given IP (for tests/diagnostics).
@@ -808,5 +1171,113 @@ mod tests {
     fn strategy_assignment() {
         assert_eq!(strategy_for_ip(10), Strategy::Pwpr);
         assert_eq!(strategy_for_ip(100), Strategy::Tbpr);
+    }
+
+    /// Dense-ish operands so the default threshold actually selects SPA
+    /// rows (every output row of a dense product is fully dense).
+    fn dense_pair(seed: u64, n: usize) -> (Csr, Csr) {
+        let mut rng = Pcg32::seeded(seed);
+        (random_csr(&mut rng, n, n, 0.5), random_csr(&mut rng, n, n, 0.5))
+    }
+
+    #[test]
+    fn spa_and_hash_paths_are_bit_identical() {
+        let (a, b) = dense_pair(101, 96);
+        let forced_spa = multiply_cfg(&a, &b, &EngineConfig { spa_threshold: 0.0 });
+        let no_spa = multiply_cfg(&a, &b, &EngineConfig { spa_threshold: 2.0 });
+        let default = multiply(&a, &b);
+        // bit-for-bit across all accumulator selections
+        assert_eq!(forced_spa, no_spa);
+        assert_eq!(forced_spa, default);
+        let r = spgemm_reference(&a, &b);
+        assert!(forced_spa.approx_eq(&r, 1e-10));
+    }
+
+    #[test]
+    fn threshold_boundaries_select_kinds() {
+        let (a, b) = dense_pair(7, 64);
+        // 0.0 forces SPA on every multi-entry row: no hash bins remain.
+        let plan = symbolic_cfg(&a, &b, &EngineConfig { spa_threshold: 0.0 });
+        assert!(plan.bins.iter().all(|bin| bin.kind != AccumKind::Hash), "0.0 must force SPA");
+        assert!(plan.kind_rows()[AccumKind::Spa.index()] > 0);
+        // ≥ 1.0 disables SPA entirely.
+        for thr in [1.0, 1.5] {
+            let plan = symbolic_cfg(&a, &b, &EngineConfig { spa_threshold: thr });
+            assert!(plan.bins.iter().all(|bin| bin.kind != AccumKind::Spa), "{thr} must disable SPA");
+        }
+    }
+
+    #[test]
+    fn plan_bins_partition_nonempty_rows() {
+        let mut rng = Pcg32::seeded(55);
+        let a = random_csr(&mut rng, 300, 260, 0.03);
+        let b = random_csr(&mut rng, 260, 240, 0.03);
+        let plan = symbolic(&a, &b);
+        let mut seen = vec![false; a.n_rows];
+        for bin in &plan.bins {
+            assert!(!bin.rows.is_empty(), "empty bins must be dropped");
+            for &r in &bin.rows {
+                assert!(!seen[r as usize], "row {r} appears in two bins");
+                seen[r as usize] = true;
+                assert_eq!(plan.accumulator_kind(r as usize), Some(bin.kind));
+                assert_eq!(plan.grouping.group_of[r as usize], bin.group);
+            }
+            assert_eq!(bin.weight, bin.rows.iter().map(|&r| plan.ip[r as usize]).sum::<u64>());
+        }
+        for r in 0..a.n_rows {
+            assert_eq!(seen[r], plan.row_nnz(r) > 0, "row {r} binned iff it has output");
+            if plan.row_nnz(r) == 0 {
+                assert_eq!(plan.accumulator_kind(r), None);
+            }
+        }
+    }
+
+    #[test]
+    fn numeric_bin_into_fills_bins_in_any_order() {
+        let (a, b) = dense_pair(33, 80);
+        let plan = symbolic(&a, &b);
+        let expect = numeric(&a, &b, &plan);
+        let mut col = vec![0u32; plan.nnz()];
+        let mut val = vec![0f64; plan.nnz()];
+        for bi in (0..plan.bins.len()).rev() {
+            numeric_bin_into(&a, &b, &plan, bi, &mut col, &mut val);
+        }
+        let c = Csr::new_unchecked(a.n_rows, b.n_cols, plan.rpt.clone(), col, val);
+        assert_eq!(c, expect, "bins write disjoint slices — order must not matter");
+    }
+
+    #[test]
+    fn traced_spa_rows_equal_fast_path() {
+        // Dense product: the default threshold picks SPA on most rows,
+        // and the traced path must still match the fast path exactly.
+        let (a, b) = dense_pair(88, 72);
+        let plan = symbolic(&a, &b);
+        assert!(
+            plan.kind_rows()[AccumKind::Spa.index()] > 0,
+            "test needs SPA rows at the default threshold"
+        );
+        let fast = multiply(&a, &b);
+        let mut probe = CountingProbe::default();
+        let traced = multiply_traced(&a, &b, &mut probe);
+        assert_eq!(fast, traced);
+    }
+
+    #[test]
+    fn timed_numeric_splits_by_kind() {
+        let (a, b) = dense_pair(14, 96);
+        let (c, t) = multiply_timed(&a, &b);
+        assert!(c.nnz() > 0);
+        let kind_total: f64 = t.numeric_kind_s.iter().sum();
+        assert!(kind_total > 0.0, "per-kind numeric times must be recorded");
+        assert!(kind_total <= t.numeric_s + 1e-9, "kind split cannot exceed the numeric total");
+    }
+
+    #[test]
+    fn default_threshold_is_sane() {
+        // The accepted range matches the CLI/env validation ([0, 8]);
+        // values past 1.0 are legal and mean "SPA disabled".
+        let t = default_spa_threshold();
+        assert!((0.0..=8.0).contains(&t), "default threshold {t} out of range");
+        assert_eq!(EngineConfig::default().spa_threshold, t);
     }
 }

@@ -1,11 +1,107 @@
 //! Row-grouping phase (paper §III-B): logarithmic binning of rows by
 //! intermediate-product count into four groups, each with its own thread
-//! assignment strategy, block size, and hash-table size (Table I).
+//! assignment strategy, block size, and hash-table size (Table I), plus
+//! the **accumulator-selection model** the numeric phase is guided by.
 //!
 //! The matrix is *not* reordered; `Map` holds row ids sorted by group
 //! (stable within a group), exactly the paper's `Map[i]` indirection.
+//!
+//! # Accumulator selection
+//!
+//! Table I fixes *where the hash table lives* per IP bin; it does not
+//! decide *whether a hash table is the right accumulator at all*. Once
+//! the symbolic phase has exact per-row output sizes, every row can be
+//! classified by [`select_accumulator`] into one of three
+//! [`AccumKind`]s — the decision the plan bakes into each numeric bin
+//! (see `engine::SymbolicPlan::bins`):
+//!
+//! | kind | chosen when | why |
+//! |------|-------------|-----|
+//! | [`AccumKind::ScaledCopy`] | row of A has exactly 1 entry | `C_i = a·B_k`: already sorted, collision-free — no accumulator, no sort |
+//! | [`AccumKind::Spa`] | `nnz(C_i) / n_cols > spa_threshold` | dense output row: a dense accumulator streams `vals[col] += v` with zero probe chains and a sequential gather (Nagasaka et al., arXiv:1804.01698) |
+//! | [`AccumKind::Hash`] | otherwise | sparse output row: Algorithm 4 linear probing, Table I sizing |
+//!
+//! The threshold is tunable (`--spa-threshold`, default
+//! [`DEFAULT_SPA_THRESHOLD`]); `0.0` forces SPA on every multi-entry
+//! row, any value ≥ 1.0 disables SPA (the comparison is strict, and
+//! `nnz(C_i)` can never exceed `n_cols`).
 
 use super::super::ip::group_index_for_ip;
+
+/// Numeric-phase accumulator for one output row, chosen at plan time
+/// from the symbolic phase's exact `nnz(C_i)` (see
+/// [`select_accumulator`] and the module-level decision table).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AccumKind {
+    /// Single-A-entry row: `C_i` is one B row scaled by a constant —
+    /// copied straight into the output slice, no accumulator at all.
+    ScaledCopy,
+    /// Linear-probing hash table (Algorithm 4), sized per Table I.
+    Hash,
+    /// Dense sparse-accumulator (SPA): one `f64` slot per output
+    /// column, generation-stamped occupancy, O(unique) gather. Wins
+    /// when the output row is dense enough that hash probing degrades
+    /// to scanning anyway.
+    Spa,
+}
+
+impl AccumKind {
+    /// Stable ordinal for per-kind arrays (`PhaseTimes::numeric_kind_s`).
+    pub fn index(self) -> usize {
+        match self {
+            AccumKind::ScaledCopy => 0,
+            AccumKind::Hash => 1,
+            AccumKind::Spa => 2,
+        }
+    }
+
+    /// Inverse of [`AccumKind::index`]. Panics on out-of-range input.
+    pub fn from_index(i: usize) -> AccumKind {
+        match i {
+            0 => AccumKind::ScaledCopy,
+            1 => AccumKind::Hash,
+            2 => AccumKind::Spa,
+            _ => panic!("AccumKind index {i} out of range"),
+        }
+    }
+
+    /// Stable lowercase name for metrics keys, bench meta, and logs.
+    pub fn name(self) -> &'static str {
+        match self {
+            AccumKind::ScaledCopy => "copy",
+            AccumKind::Hash => "hash",
+            AccumKind::Spa => "spa",
+        }
+    }
+
+    pub const ALL: [AccumKind; 3] = [AccumKind::ScaledCopy, AccumKind::Hash, AccumKind::Spa];
+}
+
+/// Default SPA density threshold: a row whose output is more than a
+/// quarter dense stops hashing. At load factor 0.5 a Table-I hash row
+/// touches `2·nnz(C_i)` scattered slots plus probe chains; the SPA
+/// touches `nnz(C_i)` streamed slots plus an `n_cols` sequential scan,
+/// so the crossover sits near `nnz(C_i) ≈ n_cols/4` on the simulated
+/// device (see `benches/accumulator.rs` for the measured sweep).
+pub const DEFAULT_SPA_THRESHOLD: f64 = 0.25;
+
+/// Pick the numeric accumulator for one output row (module-level
+/// decision table). `a_row_nnz` is the row's entry count in A,
+/// `row_nnz` the *exact* output size from the symbolic phase, `n_cols`
+/// the output width. Rows with `row_nnz == 0` never reach the numeric
+/// phase and should not be classified.
+pub fn select_accumulator(a_row_nnz: usize, row_nnz: usize, n_cols: usize, spa_threshold: f64) -> AccumKind {
+    if a_row_nnz == 1 {
+        return AccumKind::ScaledCopy;
+    }
+    // Strict `>`: threshold 0.0 forces SPA on every multi-entry row with
+    // output, and any threshold ≥ 1.0 disables SPA (nnz ≤ n_cols).
+    if row_nnz as f64 > spa_threshold * n_cols as f64 {
+        AccumKind::Spa
+    } else {
+        AccumKind::Hash
+    }
+}
 
 /// Thread-assignment strategy (paper §III-C).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -167,5 +263,35 @@ mod tests {
         assert_eq!(global_table_size(8192), 16384);
         assert!(global_table_size(10_000) >= 20_000);
         assert!(global_table_size(0).is_power_of_two());
+    }
+
+    #[test]
+    fn accumulator_decision_table() {
+        // Single-A-entry rows copy regardless of density.
+        assert_eq!(select_accumulator(1, 1000, 1000, 0.25), AccumKind::ScaledCopy);
+        assert_eq!(select_accumulator(1, 1, 1000, 0.25), AccumKind::ScaledCopy);
+        // Sparse output rows hash, dense ones take the SPA.
+        assert_eq!(select_accumulator(8, 10, 1000, 0.25), AccumKind::Hash);
+        assert_eq!(select_accumulator(8, 600, 1000, 0.25), AccumKind::Spa);
+    }
+
+    #[test]
+    fn spa_threshold_boundaries() {
+        // 0.0 forces SPA on every multi-entry row with output...
+        assert_eq!(select_accumulator(2, 1, 1_000_000, 0.0), AccumKind::Spa);
+        // ...and ≥ 1.0 disables it, even for a fully dense row (strict >).
+        assert_eq!(select_accumulator(2, 1000, 1000, 1.0), AccumKind::Hash);
+        assert_eq!(select_accumulator(2, 1000, 1000, 2.0), AccumKind::Hash);
+        // Exactly at the threshold stays on the hash path (strict >).
+        assert_eq!(select_accumulator(2, 250, 1000, 0.25), AccumKind::Hash);
+        assert_eq!(select_accumulator(2, 251, 1000, 0.25), AccumKind::Spa);
+    }
+
+    #[test]
+    fn accum_kind_index_roundtrip() {
+        for k in AccumKind::ALL {
+            assert_eq!(AccumKind::from_index(k.index()), k);
+        }
+        assert_eq!(AccumKind::Spa.name(), "spa");
     }
 }

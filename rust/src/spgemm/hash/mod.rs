@@ -1,9 +1,12 @@
 //! Hash-based multi-phase SpGEMM (paper §III): row grouping (Table I),
 //! PWPR/TBPR thread assignment, the Algorithm-4 linear-probing hash
-//! table, the explicit symbolic (size) / numeric (value) phases, and the
-//! plan-reuse handle ([`PlannedProduct`]) that amortises symbolic
-//! analysis across the numeric fills of iterative workloads — see
-//! `DESIGN.md` §"Two-phase hash engine" and §"Plan reuse".
+//! table, the explicit symbolic (size) / numeric (value) phases with
+//! plan-guided accumulator selection ([`AccumKind`]: scaled-copy /
+//! hash / dense-SPA, decided per row at plan time from the exact
+//! `nnz(C_i)`), and the plan-reuse handle ([`PlannedProduct`]) that
+//! amortises symbolic analysis across the numeric fills of iterative
+//! workloads — see `DESIGN.md` §"Two-phase hash engine", §"Plan reuse",
+//! and §"Accumulator selection".
 
 pub mod engine;
 pub mod grouping;
@@ -11,6 +14,11 @@ pub mod plan;
 pub mod sort;
 pub mod table;
 
-pub use engine::{multiply, multiply_single_pass, multiply_timed, multiply_traced, numeric, symbolic, SymbolicPlan};
-pub use grouping::{Grouping, Strategy, GROUP_SPECS};
+pub use engine::{
+    default_spa_threshold, multiply, multiply_cfg, multiply_single_pass, multiply_timed, multiply_timed_cfg,
+    multiply_traced, numeric, numeric_bin_into, numeric_timed, set_default_spa_threshold, symbolic, symbolic_cfg,
+    EngineConfig, NumericBin, SymbolicPlan,
+};
+pub use grouping::{select_accumulator, AccumKind, Grouping, Strategy, DEFAULT_SPA_THRESHOLD, GROUP_SPECS};
 pub use plan::{pair_key, pair_key_from_hashes, PlannedProduct};
+pub use table::DenseAccumulator;

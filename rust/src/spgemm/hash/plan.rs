@@ -14,14 +14,20 @@
 //! from fills so executors can account grouping/symbolic/numeric wall
 //! time exactly as [`super::engine::multiply_timed`] does.
 //!
+//! Because the accumulator decision is part of the plan
+//! ([`SymbolicPlan::bins`] carries each Table-I bin split by
+//! [`super::grouping::AccumKind`]), a reused fill also reuses the
+//! hash/SPA/scaled-copy selection — iterative callers pay the density
+//! analysis once, at plan time.
+//!
 //! Callers that manage whole batches (plan product *k+1* while product
-//! *k* fills, stream-schedule the Table-I bins) sit one layer up, in
+//! *k* fills, stream-schedule the per-kind Table-I bins, dispatch
+//! per-bin completion events) sit one layer up, in
 //! [`crate::coordinator::batch::BatchExecutor`].
 
-use super::engine::{numeric, symbolic_timed, SymbolicPlan};
+use super::engine::{numeric, numeric_timed, symbolic_timed, EngineConfig, SymbolicPlan};
 use crate::sim::probe::PhaseTimes;
 use crate::sparse::Csr;
-use std::time::Instant;
 
 /// A reusable symbolic plan for one `A·B` product, bound to the
 /// structure of the operands it was planned from.
@@ -44,9 +50,16 @@ pub struct PlannedProduct {
 
 impl PlannedProduct {
     /// Run grouping + symbolic analysis for `a·b` and capture the
-    /// operands' structure fingerprints.
+    /// operands' structure fingerprints (process-default
+    /// [`EngineConfig`]).
     pub fn plan(a: &Csr, b: &Csr) -> PlannedProduct {
-        let (plan, plan_times) = symbolic_timed(a, b);
+        PlannedProduct::plan_cfg(a, b, &EngineConfig::default())
+    }
+
+    /// [`PlannedProduct::plan`] with an explicit [`EngineConfig`] — the
+    /// SPA threshold is baked into the plan and reused by every fill.
+    pub fn plan_cfg(a: &Csr, b: &Csr, cfg: &EngineConfig) -> PlannedProduct {
+        let (plan, plan_times) = symbolic_timed(a, b, cfg);
         PlannedProduct {
             plan,
             a_shape: (a.n_rows, a.n_cols),
@@ -92,10 +105,11 @@ impl PlannedProduct {
         self.fill_unchecked(a, b)
     }
 
-    /// [`PlannedProduct::fill`] plus the fill's wall seconds (validation
-    /// runs before the timer starts, so the seconds are numeric-phase
-    /// only).
-    pub fn fill_timed(&self, a: &Csr, b: &Csr) -> (Csr, f64) {
+    /// [`PlannedProduct::fill`] plus the fill's wall time as a
+    /// [`PhaseTimes`] (only the `numeric*` fields are populated — the
+    /// numeric total and the per-accumulator-kind split; validation
+    /// runs before the timer starts).
+    pub fn fill_timed(&self, a: &Csr, b: &Csr) -> (Csr, PhaseTimes) {
         assert!(
             self.matches(a, b),
             "PlannedProduct::fill: operand structure changed since plan time — replan"
@@ -112,11 +126,10 @@ impl PlannedProduct {
         numeric(a, b, &self.plan)
     }
 
-    /// [`PlannedProduct::fill_unchecked`] plus the fill's wall seconds.
-    pub(crate) fn fill_unchecked_timed(&self, a: &Csr, b: &Csr) -> (Csr, f64) {
-        let t0 = Instant::now();
-        let c = self.fill_unchecked(a, b);
-        (c, t0.elapsed().as_secs_f64())
+    /// [`PlannedProduct::fill_unchecked`] plus the fill's wall time
+    /// (numeric fields of [`PhaseTimes`] only).
+    pub(crate) fn fill_unchecked_timed(&self, a: &Csr, b: &Csr) -> (Csr, PhaseTimes) {
+        numeric_timed(a, b, &self.plan)
     }
 
     /// The underlying symbolic plan (exact output sizes, grouping, IP).

@@ -216,6 +216,113 @@ impl HashTable {
     }
 }
 
+/// Dense sparse-accumulator (SPA) for plan-guided dense output rows:
+/// one `f64` slot per output column plus a generation-stamped occupancy
+/// word, so `clear()` is O(1) exactly like [`HashTable`]'s.
+///
+/// The accumulation order per column is the B-stream encounter order —
+/// identical to the hash path's `Table[pos] += v` order — so a SPA row
+/// is **bit-identical** to the same row accumulated through a hash
+/// table (the caller sorts the gathered pairs by column either way; the
+/// keys are unique, so the sort is deterministic).
+///
+/// On the GPU the SPA lives in global memory (one array per thread
+/// block); inserts are `atomicAdd`s at `vals[col]` and the gather is a
+/// sequential scan — streaming, not indirection, which is why the
+/// simulator prices SPA rows through [`Region::SpaVals`]/
+/// [`Region::SpaFlags`] accesses instead of `indirect_range` (SPA rows
+/// are AIA-ineligible).
+pub struct DenseAccumulator {
+    vals: Vec<f64>,
+    stamps: Vec<u32>,
+    stamp: u32,
+    /// Columns touched this generation, in first-touch order.
+    occupied: Vec<u32>,
+}
+
+impl DenseAccumulator {
+    /// Accumulator for output rows of width `n_cols`.
+    pub fn new(n_cols: usize) -> DenseAccumulator {
+        DenseAccumulator { vals: vec![0.0; n_cols], stamps: vec![0; n_cols], stamp: 1, occupied: Vec::new() }
+    }
+
+    /// Output width this accumulator covers.
+    pub fn width(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Distinct columns touched since the last [`DenseAccumulator::clear`].
+    pub fn unique(&self) -> usize {
+        self.occupied.len()
+    }
+
+    /// Reset for the next row: O(1) generation bump (full re-init only
+    /// on stamp wraparound).
+    pub fn clear(&mut self) {
+        self.occupied.clear();
+        if self.stamp == u32::MAX {
+            self.stamps.fill(0);
+            self.stamp = 1;
+        } else {
+            self.stamp += 1;
+        }
+    }
+
+    /// `vals[col] += v` (fast functional path, no probe events).
+    #[inline]
+    pub fn add(&mut self, col: u32, v: f64) {
+        let p = col as usize;
+        if self.stamps[p] != self.stamp {
+            self.stamps[p] = self.stamp;
+            // Mirror the hash path exactly: occupy zeroes, then adds.
+            self.vals[p] = 0.0;
+            self.occupied.push(col);
+        }
+        self.vals[p] += v;
+    }
+
+    /// [`DenseAccumulator::add`] with the GPU access pattern emitted:
+    /// an occupancy-flag read, a flag CAS on first touch, and the
+    /// value `atomicAdd` — all column-indexed into the contiguous SPA
+    /// arrays (no probe chain, no indirection).
+    pub fn add_traced<P: Probe>(&mut self, col: u32, v: f64, probe: &mut P) {
+        let p = col as usize;
+        probe.access(Region::SpaFlags, p, 4, Kind::Read);
+        if self.stamps[p] != self.stamp {
+            self.stamps[p] = self.stamp;
+            self.vals[p] = 0.0;
+            self.occupied.push(col);
+            probe.access(Region::SpaFlags, p, 4, Kind::Atomic);
+        }
+        probe.access(Region::SpaVals, p, 8, Kind::Atomic);
+        self.vals[p] += v;
+        probe.compute(2); // fma
+    }
+
+    /// O(unique) gather for the functional fast path (first-touch
+    /// order; the caller sorts by column, same as the hash path).
+    pub fn gather_list(&self, out: &mut Vec<(u32, f64)>) {
+        out.clear();
+        out.extend(self.occupied.iter().map(|&c| (c, self.vals[c as usize])));
+    }
+
+    /// GPU-faithful gather: sequentially scan the whole dense array,
+    /// emitting one flag read per column and one value read per live
+    /// slot. This streaming scan is the SPA's cost signature — compare
+    /// [`HashTable::gather`]'s scattered full-capacity walk.
+    pub fn gather<P: Probe>(&self, out: &mut Vec<(u32, f64)>, probe: &mut P) {
+        out.clear();
+        for p in 0..self.vals.len() {
+            probe.access(Region::SpaFlags, p, 4, Kind::Read);
+            if self.stamps[p] == self.stamp {
+                probe.access(Region::SpaVals, p, 8, Kind::Read);
+                out.push((p as u32, self.vals[p]));
+            }
+        }
+        debug_assert_eq!(out.len(), self.unique());
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -298,5 +405,61 @@ mod tests {
         let mut out = Vec::new();
         t.gather(&mut out, &mut c);
         assert_eq!(c.accesses, 32); // whole-table scan
+    }
+
+    #[test]
+    fn spa_accumulates_like_hash_table() {
+        // Same insert stream through both accumulators: sorted gathers
+        // must be bit-identical (this is the SPA correctness contract).
+        let stream = [(3u32, 1.5), (7, -1.0), (3, 2.5), (0, 0.125), (7, 4.0), (3, -0.5)];
+        let mut t = HashTable::new(16, TableLoc::Shared);
+        let mut spa = DenseAccumulator::new(16);
+        for &(c, v) in &stream {
+            t.insert_numeric(c, v, &mut NullProbe);
+            spa.add(c, v);
+        }
+        let mut from_t = Vec::new();
+        t.gather_list(&mut from_t);
+        from_t.sort_unstable_by_key(|e| e.0);
+        let mut from_spa = Vec::new();
+        spa.gather_list(&mut from_spa);
+        from_spa.sort_unstable_by_key(|e| e.0);
+        assert_eq!(from_t, from_spa);
+        assert_eq!(spa.unique(), 3);
+    }
+
+    #[test]
+    fn spa_clear_is_generation_bump() {
+        let mut spa = DenseAccumulator::new(8);
+        spa.add(2, 1.0);
+        spa.add(2, 1.0);
+        assert_eq!(spa.unique(), 1);
+        spa.clear();
+        assert_eq!(spa.unique(), 0);
+        spa.add(2, 0.5);
+        let mut out = Vec::new();
+        spa.gather_list(&mut out);
+        assert_eq!(out, vec![(2, 0.5)], "stale generation must not leak");
+    }
+
+    #[test]
+    fn spa_traced_streams_not_probes() {
+        let mut spa = DenseAccumulator::new(32);
+        let mut c = CountingProbe::default();
+        spa.add_traced(5, 1.0, &mut c);
+        spa.add_traced(5, 2.0, &mut c);
+        // First touch: flag read + flag CAS + val atomic; repeat: flag
+        // read + val atomic. No shared-memory events, no indirection.
+        assert_eq!(c.accesses, 5);
+        assert_eq!(c.atomic, 3);
+        assert_eq!(c.shared, 0);
+        assert_eq!(c.indirect_ranges, 0);
+        // GPU-faithful gather scans the full width (one flag read per
+        // column + one value read per live slot), in column order.
+        let mut out = Vec::new();
+        let mut g = CountingProbe::default();
+        spa.gather(&mut out, &mut g);
+        assert_eq!(g.accesses, 32 + 1);
+        assert_eq!(out, vec![(5, 3.0)]);
     }
 }

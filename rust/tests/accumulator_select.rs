@@ -1,0 +1,172 @@
+//! Accumulator-selection properties (`util/qc.rs` harness): the three
+//! numeric paths — scaled-copy, hash, dense-SPA — must be
+//! **bit-identical** to each other and to the reference oracle across
+//! the RMAT and structured generators at any threshold, the threshold
+//! boundary semantics must hold exactly (`0.0` forces SPA on every
+//! multi-entry row, `1.0+` disables it), and the plan-guided paths must
+//! survive the coordinator's per-bin batch pipeline unchanged.
+
+use spgemm_aia::coordinator::batch::BatchExecutor;
+use spgemm_aia::gen::{rmat, structured, RmatParams};
+use spgemm_aia::sparse::{Coo, Csr};
+use spgemm_aia::spgemm::hash::{self, AccumKind, EngineConfig, PlannedProduct};
+use spgemm_aia::spgemm::reference::spgemm_reference;
+use spgemm_aia::util::{qc, Pcg32};
+
+const THRESHOLDS: [f64; 5] = [0.0, 0.1, 0.25, 0.5, 1.0];
+
+fn dense_random(rng: &mut Pcg32, n: usize, density: f64) -> Csr {
+    let mut coo = Coo::new(n, n);
+    for _ in 0..((n * n) as f64 * density) as usize {
+        coo.push(rng.below_usize(n), rng.below_usize(n), rng.f64_range(-2.0, 2.0));
+    }
+    coo.to_csr()
+}
+
+#[test]
+fn property_accumulator_paths_bit_identical_rmat() {
+    qc::check(10, 9090, |g| {
+        let n = 16 + g.dim() * 8;
+        let nnz = n * (2 + g.rng.below_usize(8));
+        let params = match g.rng.below_usize(3) {
+            0 => RmatParams::web(),
+            1 => RmatParams::citation(),
+            _ => RmatParams::uniform(),
+        };
+        let mut rng = Pcg32::seeded(g.rng.next_u64());
+        let a = rmat(n, nnz, params, &mut rng);
+        let oracle = spgemm_reference(&a, &a);
+        let baseline = hash::multiply_cfg(&a, &a, &EngineConfig { spa_threshold: 2.0 });
+        assert_eq!(baseline.rpt, oracle.rpt, "hash-only structure vs oracle");
+        assert!(baseline.approx_eq(&oracle, 1e-10), "hash-only values vs oracle");
+        for thr in THRESHOLDS {
+            let c = hash::multiply_cfg(&a, &a, &EngineConfig { spa_threshold: thr });
+            assert_eq!(c, baseline, "threshold {thr}: all accumulator paths must agree bit-for-bit");
+        }
+    });
+}
+
+#[test]
+fn property_accumulator_paths_bit_identical_structured() {
+    qc::check(8, 4242, |g| {
+        let mut rng = Pcg32::seeded(g.rng.next_u64());
+        let n = 32 + g.dim() * 4;
+        let (name, a) = match g.rng.below_usize(4) {
+            0 => ("protein", structured::protein_contact(n, 24, &mut rng)),
+            1 => ("fem_banded", structured::fem_banded(n, 12, &mut rng)),
+            2 => ("circuit", structured::circuit(n, &mut rng)),
+            _ => ("economics", structured::economics(n, &mut rng)),
+        };
+        let baseline = hash::multiply_cfg(&a, &a, &EngineConfig { spa_threshold: 2.0 });
+        for thr in THRESHOLDS {
+            let c = hash::multiply_cfg(&a, &a, &EngineConfig { spa_threshold: thr });
+            assert_eq!(c, baseline, "{name} at threshold {thr}: paths must agree bit-for-bit");
+        }
+    });
+}
+
+#[test]
+fn threshold_zero_forces_spa_threshold_one_disables() {
+    let mut rng = Pcg32::seeded(77);
+    let a = dense_random(&mut rng, 96, 0.4);
+    // 0.0: every multi-entry row with output goes SPA; hash bins vanish.
+    let plan = hash::symbolic_cfg(&a, &a, &EngineConfig { spa_threshold: 0.0 });
+    assert!(plan.bins.iter().all(|b| b.kind != AccumKind::Hash), "0.0 must force SPA");
+    assert!(plan.kind_rows()[AccumKind::Spa.index()] > 0, "0.0 must produce SPA bins");
+    // 1.0 and above: SPA disabled even on fully dense rows (strict >).
+    for thr in [1.0, 4.0] {
+        let plan = hash::symbolic_cfg(&a, &a, &EngineConfig { spa_threshold: thr });
+        assert!(
+            plan.bins.iter().all(|b| b.kind != AccumKind::Spa),
+            "threshold {thr} must disable SPA"
+        );
+    }
+    // Scaled-copy rows stay scaled-copy regardless of the threshold.
+    let d = Csr::from_diag(&[1.5; 96]);
+    for thr in [0.0, 0.25, 2.0] {
+        let plan = hash::symbolic_cfg(&d, &a, &EngineConfig { spa_threshold: thr });
+        assert!(
+            plan.bins.iter().all(|b| b.kind == AccumKind::ScaledCopy),
+            "diagonal A must stay on the copy path at threshold {thr}"
+        );
+    }
+}
+
+#[test]
+fn planned_fills_reuse_the_accumulator_decision() {
+    let mut rng = Pcg32::seeded(5);
+    let a = dense_random(&mut rng, 80, 0.35);
+    for thr in THRESHOLDS {
+        let cfg = EngineConfig { spa_threshold: thr };
+        let p = PlannedProduct::plan_cfg(&a, &a, &cfg);
+        assert_eq!(p.symbolic_plan().spa_threshold, thr, "plan must record its threshold");
+        let cold = hash::multiply_cfg(&a, &a, &cfg);
+        assert_eq!(p.fill(&a, &a), cold, "reused fill vs cold multiply at threshold {thr}");
+        // Value-only updates keep both the plan and the kind decision.
+        let mut a2 = a.clone();
+        a2.map_values(|v| v * 0.5 + 2.0);
+        assert!(p.matches(&a2, &a2));
+        assert_eq!(p.fill(&a2, &a2), hash::multiply_cfg(&a2, &a2, &cfg));
+    }
+}
+
+/// Half the rows are dense (SPA at the default threshold), half have
+/// two entries pointing into the sparse half (tiny outputs → hash), so
+/// a self-product is guaranteed to carry both bin kinds.
+fn mixed_density(n: usize, rng: &mut Pcg32) -> Csr {
+    let half = n / 2;
+    let mut coo = Coo::new(n, n);
+    for i in 0..half {
+        for j in 0..n {
+            if rng.coin(0.5) {
+                coo.push(i, j, rng.f64_range(-1.0, 1.0));
+            }
+        }
+    }
+    for i in half..n {
+        coo.push(i, half + (i * 7) % half, 1.0);
+        coo.push(i, half + (i * 13 + 5) % half, -0.5);
+    }
+    coo.to_csr()
+}
+
+#[test]
+fn batch_pipeline_preserves_spa_outputs() {
+    // The per-bin batch pipeline fills SPA/hash/copy bins as separate
+    // completion events; outputs must still equal serial multiplies
+    // bit-for-bit (default threshold — mixed inputs guarantee both SPA
+    // and hash bins in one product).
+    let mut rng = Pcg32::seeded(31);
+    let a = mixed_density(90, &mut rng);
+    let b = mixed_density(90, &mut rng);
+    let kinds = hash::symbolic(&a, &a).kind_rows();
+    assert!(kinds[AccumKind::Spa.index()] > 0, "test needs SPA rows at the default threshold");
+    assert!(kinds[AccumKind::Hash.index()] > 0, "test needs hash rows alongside the SPA rows");
+    let pairs = [(&a, &a), (&a, &b), (&b, &b), (&a, &a)];
+    let mut ex = BatchExecutor::new(4);
+    let out = ex.execute_batch(&pairs);
+    for (i, &(x, y)) in pairs.iter().enumerate() {
+        assert_eq!(out[i], hash::multiply(x, y), "batch product {i} vs serial multiply");
+    }
+    let report = ex.last_batch.as_ref().expect("batch ran");
+    assert!(report.bins > report.products, "mixed products must split into multiple bins");
+    assert!(report.fill_kind_s[AccumKind::Spa.index()] > 0.0, "SPA bins must be timed");
+}
+
+#[test]
+fn empty_and_degenerate_rows_never_select_spa_wrongly() {
+    // Zero matrix, identity, and a matrix with empty B rows: every path
+    // must agree at extreme thresholds.
+    let z = Csr::zeros(8, 8);
+    let i = Csr::identity(16);
+    let mut rng = Pcg32::seeded(13);
+    let m = dense_random(&mut rng, 16, 0.3);
+    for thr in [0.0, 0.25, 2.0] {
+        let cfg = EngineConfig { spa_threshold: thr };
+        assert_eq!(hash::multiply_cfg(&z, &z, &cfg).nnz(), 0);
+        assert_eq!(hash::multiply_cfg(&i, &m, &cfg), hash::multiply_cfg(&i, &m, &EngineConfig { spa_threshold: 0.5 }));
+        let plan = hash::symbolic_cfg(&z, &z, &cfg);
+        assert!(plan.bins.is_empty(), "zero output must produce no numeric bins");
+        assert_eq!(plan.accumulator_kind(0), None);
+    }
+}

@@ -1,0 +1,108 @@
+#!/usr/bin/env python3
+"""Diff two directories of BENCH_*.json files and annotate regressions.
+
+Used by the advisory `bench-trend` CI job: compares each benchmark's
+median wall time in the current run against the previous successful
+run's artifact and emits GitHub workflow annotations
+(`::warning::`/`::notice::`) for median regressions/improvements beyond
+the threshold. Std-lib only (the repo's offline policy), schema
+`spgemm-aia-bench-v1` (see rust/src/util/bench.rs).
+
+Exit code is always 0 unless --strict is passed (then regressions fail
+the job).
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def load_results(directory: Path):
+    """name -> median seconds, across every BENCH_*.json in directory."""
+    medians = {}
+    for path in sorted(directory.glob("BENCH_*.json")):
+        try:
+            doc = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"::warning::bench-trend: cannot read {path}: {e}")
+            continue
+        if doc.get("schema") != "spgemm-aia-bench-v1":
+            print(f"::warning::bench-trend: {path} has unknown schema {doc.get('schema')!r}")
+            continue
+        bench = doc.get("bench", path.stem)
+        for result in doc.get("results", []):
+            name = result.get("name")
+            median = result.get("median_s")
+            if name is None or not isinstance(median, (int, float)) or median <= 0:
+                continue
+            medians[f"{bench}::{name}"] = float(median)
+    return medians
+
+
+def fmt(seconds: float) -> str:
+    if seconds >= 1.0:
+        return f"{seconds:.3f} s"
+    if seconds >= 1e-3:
+        return f"{seconds * 1e3:.3f} ms"
+    return f"{seconds * 1e6:.1f} us"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("previous", type=Path, help="directory with the previous run's BENCH_*.json")
+    ap.add_argument("current", type=Path, help="directory with this run's BENCH_*.json")
+    ap.add_argument("--threshold-pct", type=float, default=15.0,
+                    help="annotate when median wall time moved more than this percentage")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero when any regression exceeds the threshold")
+    args = ap.parse_args()
+
+    current = load_results(args.current)
+    if not current:
+        print(f"::warning::bench-trend: no parsable BENCH_*.json under {args.current}")
+        return 0
+    if not args.previous.is_dir():
+        print(f"::notice::bench-trend: no previous artifact ({args.previous} missing) — "
+              "baseline recorded, nothing to compare")
+        return 0
+    previous = load_results(args.previous)
+
+    regressions = []
+    rows = []
+    for name, cur in sorted(current.items()):
+        prev = previous.get(name)
+        if prev is None:
+            rows.append((name, None, cur, None))
+            continue
+        delta_pct = (cur - prev) / prev * 100.0
+        rows.append((name, prev, cur, delta_pct))
+        if delta_pct > args.threshold_pct:
+            regressions.append((name, prev, cur, delta_pct))
+        elif delta_pct < -args.threshold_pct:
+            print(f"::notice::bench-trend: {name} improved {-delta_pct:.1f}% "
+                  f"({fmt(prev)} -> {fmt(cur)})")
+
+    print(f"\nbench trend ({len(rows)} benchmarks, threshold ±{args.threshold_pct:.0f}%):")
+    print(f"{'benchmark':<64} {'previous':>12} {'current':>12} {'delta':>8}")
+    for name, prev, cur, delta_pct in rows:
+        prev_s = fmt(prev) if prev is not None else "(new)"
+        delta_s = f"{delta_pct:+.1f}%" if delta_pct is not None else "-"
+        print(f"{name:<64} {prev_s:>12} {fmt(cur):>12} {delta_s:>8}")
+
+    for name, prev, cur, delta_pct in regressions:
+        print(f"::warning::bench-trend: median wall-time regression {delta_pct:+.1f}% "
+              f"on {name} ({fmt(prev)} -> {fmt(cur)})")
+    gone = sorted(set(previous) - set(current))
+    for name in gone:
+        print(f"::notice::bench-trend: benchmark {name} disappeared from this run")
+
+    if regressions and args.strict:
+        print(f"bench-trend: {len(regressions)} regression(s) beyond "
+              f"{args.threshold_pct:.0f}% (strict mode)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
