@@ -40,8 +40,8 @@ fn main() {
         ("economics", structured::economics(4000 * scale, &mut Pcg32::seeded(3))),
     ];
 
-    let hash_only = EngineConfig { spa_threshold: 2.0 };
-    let guided = EngineConfig { spa_threshold: DEFAULT_SPA_THRESHOLD };
+    let hash_only = EngineConfig { spa_threshold: 2.0, symbolic_threshold: None };
+    let guided = EngineConfig { spa_threshold: DEFAULT_SPA_THRESHOLD, symbolic_threshold: None };
 
     for (name, a) in &datasets {
         b.group(&format!("accumulator/{name}"));

@@ -17,8 +17,11 @@ use spgemm_aia::util::json::Json;
 fn main() {
     let mut b = Bencher::new();
     let quick = std::env::var("BENCH_QUICK").is_ok();
-    let names: &[&str] =
-        if quick { &["Economics", "scircuit"] } else { &["Economics", "scircuit", "p2p-Gnutella04", "amazon0601", "RoadTX", "cage15"] };
+    let names: &[&str] = if quick {
+        &["Economics", "scircuit"]
+    } else {
+        &["Economics", "scircuit", "p2p-Gnutella04", "amazon0601", "RoadTX", "cage15"]
+    };
 
     for name in names {
         let ds = gen::table2_by_name(name).unwrap();

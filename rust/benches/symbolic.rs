@@ -1,0 +1,87 @@
+//! Bench: symbolic-phase kernel selection (ROADMAP "Symbolic-phase
+//! SPA") on the same structured set the accumulator bench uses.
+//!
+//! The symbolic phase sizes every output row before a single value is
+//! computed — and on dense-bound rows, hash counting pays the same
+//! probe chains the numeric phase already avoids with the SPA. This
+//! bench pins the win of the bitmap counting kernel: the same symbolic
+//! analysis run hash-only (`symbolic_threshold = 8.0`, bitmap
+//! disabled), bitmap-forced (`0.0`), and plan-guided (the IP-bound
+//! rule at the cache-derived default). The plans are asserted
+//! identical across kernels (also pinned by
+//! `tests/symbolic_select.rs`), so the kernels are the only difference
+//! measured.
+//!
+//! Emits `BENCH_symbolic.json` with per-dataset speedups, the
+//! trivial/hash/bitmap row split, and the per-kernel symbolic seconds;
+//! CI's bench-smoke job archives it and `tools/bench_trend.py` diffs
+//! its medians against the previous main run.
+
+use spgemm_aia::gen::structured;
+use spgemm_aia::spgemm::hash::{default_spa_threshold, symbolic_cfg, EngineConfig, PlannedProduct, SymbolicKind};
+use spgemm_aia::sparse::Csr;
+use spgemm_aia::util::bench::{bb, Bencher};
+use spgemm_aia::util::json::Json;
+use spgemm_aia::util::Pcg32;
+
+fn main() {
+    let mut b = Bencher::new();
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let scale = if quick { 1 } else { 2 };
+
+    let datasets: Vec<(&str, Csr)> = vec![
+        // Dense-row heavy: protein-contact A² rows are nearly fully dense.
+        ("protein", structured::protein_contact(600 * scale, 119, &mut Pcg32::seeded(1))),
+        // Banded FEM mesh: moderately dense output rows.
+        ("fem", structured::fem_banded(1500 * scale, 53, &mut Pcg32::seeded(2))),
+        // Sparse control: most IP bounds stay under the default threshold.
+        ("economics", structured::economics(4000 * scale, &mut Pcg32::seeded(3))),
+    ];
+
+    let base = default_spa_threshold();
+    let hash_only = EngineConfig { spa_threshold: base, symbolic_threshold: Some(8.0) };
+    let bitmap = EngineConfig { spa_threshold: base, symbolic_threshold: Some(0.0) };
+    let guided = EngineConfig { spa_threshold: base, symbolic_threshold: None };
+
+    for (name, a) in &datasets {
+        b.group(&format!("symbolic/{name}"));
+
+        // Where does the IP-bound rule send the rows?
+        let plan = symbolic_cfg(a, a, &guided);
+        let rows = plan.symbolic_kind_rows();
+        println!(
+            "  plan: {} trivial rows, {} hash rows, {} bitmap rows",
+            rows[SymbolicKind::Trivial.index()],
+            rows[SymbolicKind::Hash.index()],
+            rows[SymbolicKind::Bitmap.index()]
+        );
+        let mut kind_json = Json::obj();
+        kind_json.set("trivial_rows", rows[0].into());
+        kind_json.set("hash_rows", rows[1].into());
+        kind_json.set("bitmap_rows", rows[2].into());
+        b.meta(&format!("kinds/{name}"), kind_json);
+
+        // The symbolic phase alone, per kernel mode. nnz() forces the
+        // plan so the whole analysis is inside the measured region.
+        let t_hash = b.bench("symbolic/hash-only", || bb(symbolic_cfg(a, a, &hash_only).nnz()));
+        let t_bitmap = b.bench("symbolic/bitmap", || bb(symbolic_cfg(a, a, &bitmap).nnz()));
+        let t_guided = b.bench("symbolic/plan-guided", || bb(symbolic_cfg(a, a, &guided).nnz()));
+        let speedup = t_hash.median / t_bitmap.median;
+        println!("  -> bitmap symbolic speedup over hash-only: {speedup:.2}x");
+        b.meta(&format!("bitmap_speedup/{name}"), Json::Num(speedup));
+        b.meta(&format!("guided_speedup/{name}"), Json::Num(t_hash.median / t_guided.median));
+
+        // Per-kernel symbolic seconds of one guided plan, via the
+        // plan-reuse layer's timed construction.
+        let p = PlannedProduct::plan_cfg(a, a, &guided);
+        b.meta(&format!("plan_times/{name}"), p.plan_times.to_json());
+
+        // The kernels must agree on the plan exactly (keeps the bench
+        // honest about measuring identical analysis).
+        let ph = symbolic_cfg(a, a, &hash_only);
+        let pb = symbolic_cfg(a, a, &bitmap);
+        assert_eq!(ph.rpt, pb.rpt, "{name}: counting kernels disagree on row sizes");
+        assert_eq!(ph.rpt, plan.rpt, "{name}: guided plan disagrees on row sizes");
+    }
+    b.finish("symbolic");
+}

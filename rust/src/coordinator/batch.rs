@@ -40,7 +40,7 @@
 
 use super::metrics::Metrics;
 use super::scheduler::{schedule_lpt, Job, Schedule};
-use crate::spgemm::hash::{numeric_bin_into, pair_key_from_hashes, PlannedProduct};
+use crate::spgemm::hash::{numeric_bin_into, pair_key_from_hashes, EngineConfig, PlannedProduct};
 use crate::sparse::Csr;
 use std::collections::HashMap;
 use std::sync::mpsc;
@@ -84,7 +84,12 @@ pub struct BatchStats {
     pub batch_shared: usize,
     /// Per-bin completion events filled by the batch pipeline.
     pub bins_filled: usize,
-    /// Wall seconds spent building plans (grouping + symbolic).
+    /// Wall seconds spent resolving plans: grouping + symbolic for
+    /// fresh structures, plus the fingerprint validation (structure
+    /// hashing, O(nnz)) that hits and in-batch shares still pay —
+    /// omitting the latter overstated the reported reuse saving
+    /// (regression-pinned by
+    /// `plan_resolution_time_is_accounted_for_cache_hits`).
     pub plan_s: f64,
     /// Wall seconds spent in numeric fills.
     pub fill_s: f64,
@@ -113,10 +118,17 @@ pub struct BatchReport {
     pub bins: usize,
     /// Wall time of the whole pipelined batch.
     pub wall_s: f64,
-    /// Summed plan (grouping + symbolic) wall seconds for the batch's
-    /// *unique* structures — runs on the planner thread, overlapped
-    /// with fills; repeated structures share one plan.
+    /// Planner-thread wall seconds resolving the batch's plans:
+    /// grouping + symbolic analysis for *unique* fresh structures,
+    /// plus fingerprint validation for every product (cache hits and
+    /// in-batch shares are not free — they re-hash both operands) —
+    /// overlapped with fills.
     pub plan_s: f64,
+    /// Plan-side symbolic seconds split by counting kernel, indexed by
+    /// `SymbolicKind::index()` (trivial, hash, bitmap) — summed over
+    /// the batch's freshly built plans, the per-kind *symbolic*
+    /// counterpart of `fill_kind_s`.
+    pub symbolic_kind_s: [f64; 3],
     /// Summed numeric-fill wall seconds (calling thread).
     pub fill_s: f64,
     /// `fill_s` split by accumulator kind, indexed by
@@ -208,7 +220,7 @@ impl BatchExecutor {
         /// Pipeline events, in channel order per product: one `Plan`
         /// (symbolic counts landed), then one `Bin` per numeric bin.
         enum PipeEvent {
-            Plan { slot: usize, plan: Arc<PlannedProduct>, fresh: bool, cache_hit: bool },
+            Plan { slot: usize, plan: Arc<PlannedProduct>, fresh: bool, cache_hit: bool, resolve_s: f64 },
             Bin { slot: usize, bin: usize },
         }
         /// A product mid-fill on the consumer side.
@@ -221,6 +233,7 @@ impl BatchExecutor {
 
         let t_batch = Instant::now();
         let mut plan_s = 0.0;
+        let mut symbolic_kind_s = [0f64; 3];
         let mut fill_s = 0.0;
         let mut fill_kind_s = [0f64; 3];
         let mut bins_filled = 0usize;
@@ -242,6 +255,7 @@ impl BatchExecutor {
                 // cache — in-batch shares are neither hits nor misses.
                 let mut resolved: HashMap<u64, Arc<PlannedProduct>> = HashMap::new();
                 for (i, &(a, b)) in pairs.iter().enumerate() {
+                    let t_resolve = Instant::now();
                     let (ah, bh) = (a.structure_hash(), b.structure_hash());
                     let key = pair_key_from_hashes(ah, bh);
                     let fingerprint_ok = |p: &&Arc<PlannedProduct>| {
@@ -253,16 +267,21 @@ impl BatchExecutor {
                         resolved.insert(key, Arc::clone(p));
                         (Arc::clone(p), false, true)
                     } else {
-                        let p = Arc::new(PlannedProduct::plan(a, b));
+                        // Fingerprints double as the plan's validation
+                        // hashes — each operand is hashed exactly once.
+                        let cfg = EngineConfig::default();
+                        let p = Arc::new(PlannedProduct::plan_cfg_hashed(a, b, &cfg, ah, bh));
                         resolved.insert(key, Arc::clone(&p));
                         (p, true, false)
                     };
+                    let resolve_s = t_resolve.elapsed().as_secs_f64();
                     // Symbolic counts are in: dispatch the product's bins
                     // heaviest-first (LPT issue order) behind the plan event.
                     let bins = &p.symbolic_plan().bins;
                     let mut order: Vec<usize> = (0..bins.len()).collect();
                     order.sort_by(|&x, &y| bins[y].weight.cmp(&bins[x].weight).then(x.cmp(&y)));
-                    if tx.send(PipeEvent::Plan { slot: i, plan: Arc::clone(&p), fresh, cache_hit }).is_err() {
+                    let ev = PipeEvent::Plan { slot: i, plan: Arc::clone(&p), fresh, cache_hit, resolve_s };
+                    if tx.send(ev).is_err() {
                         return; // receiver unwound — stop planning
                     }
                     for bin in order {
@@ -274,9 +293,17 @@ impl BatchExecutor {
             });
             for ev in rx {
                 match ev {
-                    PipeEvent::Plan { slot, plan, fresh, cache_hit } => {
+                    PipeEvent::Plan { slot, plan, fresh, cache_hit, resolve_s } => {
+                        // Planner-thread cost of this product: fingerprint
+                        // hashing plus, for fresh structures, the
+                        // grouping/symbolic analysis. Counted for hits and
+                        // in-batch shares too — validation is real work,
+                        // and reporting it as 0 overstated the reuse win.
+                        plan_s += resolve_s;
                         if fresh {
-                            plan_s += plan.plan_times.total_s();
+                            for (k, v) in symbolic_kind_s.iter_mut().zip(plan.plan_times.symbolic_kind_s) {
+                                *k += v;
+                            }
                             fresh_plans.push(Arc::clone(&plan));
                         } else if cache_hit {
                             hits += 1;
@@ -338,6 +365,7 @@ impl BatchExecutor {
             bins: bins_filled,
             wall_s: t_batch.elapsed().as_secs_f64(),
             plan_s,
+            symbolic_kind_s,
             fill_s,
             fill_kind_s,
             streams: schedule_lpt(&jobs, self.n_streams),
@@ -351,11 +379,15 @@ impl BatchExecutor {
     /// operand is hashed exactly once per call (key and validation share
     /// the fingerprints).
     pub fn multiply_cached(&mut self, a: &Csr, b: &Csr) -> Csr {
+        let t_resolve = Instant::now();
         let (ah, bh) = (a.structure_hash(), b.structure_hash());
         let key = pair_key_from_hashes(ah, bh);
         if let Some(p) = self.cache.get(&key) {
             if p.matches_fingerprint((a.n_rows, a.n_cols), (b.n_rows, b.n_cols), ah, bh) {
                 self.stats.plan_hits += 1;
+                // Hits still pay the structure-hash validation: count it
+                // so reuse is never reported as entirely free.
+                self.stats.plan_s += t_resolve.elapsed().as_secs_f64();
                 let (c, ft) = p.fill_unchecked_timed(a, b);
                 self.stats.fills += 1;
                 self.stats.fill_s += ft.numeric_s;
@@ -363,9 +395,13 @@ impl BatchExecutor {
             }
         }
         self.stats.plan_misses += 1;
-        let p = PlannedProduct::plan(a, b);
+        // Key fingerprints double as the plan's validation hashes (each
+        // operand hashed exactly once), and the miss counts the same
+        // resolve wall time the hit path does — hashing included — so
+        // the two paths stay comparable.
+        let p = PlannedProduct::plan_cfg_hashed(a, b, &EngineConfig::default(), ah, bh);
         self.stats.plans_built += 1;
-        self.stats.plan_s += p.plan_times.total_s();
+        self.stats.plan_s += t_resolve.elapsed().as_secs_f64();
         let (c, ft) = p.fill_unchecked_timed(a, b);
         self.stats.fills += 1;
         self.stats.fill_s += ft.numeric_s;
@@ -436,6 +472,9 @@ impl BatchExecutor {
             m.gauge("batch.last.fill_copy_s", r.fill_kind_s[0]);
             m.gauge("batch.last.fill_hash_s", r.fill_kind_s[1]);
             m.gauge("batch.last.fill_spa_s", r.fill_kind_s[2]);
+            m.gauge("batch.last.symbolic_trivial_s", r.symbolic_kind_s[0]);
+            m.gauge("batch.last.symbolic_hash_s", r.symbolic_kind_s[1]);
+            m.gauge("batch.last.symbolic_bitmap_s", r.symbolic_kind_s[2]);
         }
     }
 }
@@ -468,6 +507,9 @@ mod tests {
         assert!(r.wall_s > 0.0 && r.plan_s > 0.0 && r.fill_s > 0.0);
         let kind_total: f64 = r.fill_kind_s.iter().sum();
         assert!((kind_total - r.fill_s).abs() < 1e-9, "per-kind split must sum to fill_s");
+        let sym_total: f64 = r.symbolic_kind_s.iter().sum();
+        assert!(sym_total > 0.0, "per-kernel symbolic split must be recorded for fresh plans");
+        assert!(sym_total <= r.plan_s + 1e-9, "symbolic kernel seconds are part of the plan seconds");
         assert!(r.streams.makespan_ms > 0.0);
         // Three distinct structures: every product had to plan.
         assert_eq!(ex.stats.plans_built, 3);
@@ -526,6 +568,33 @@ mod tests {
         // Outputs are still exact under all the sharing.
         assert_eq!(out[1], hash::multiply(&a, &a));
         assert_eq!(out[4], hash::multiply(&b, &b));
+    }
+
+    /// Regression: `BatchReport.plan_s`/`BatchStats.plan_s` counted 0
+    /// planner seconds for products served from the plan cache, even
+    /// though the planner thread re-hashes both operands to validate
+    /// every hit — so the reported plan-reuse saving was overstated.
+    #[test]
+    fn plan_resolution_time_is_accounted_for_cache_hits() {
+        // Large enough that two structure hashes take measurable time.
+        let a = random_square(21, 4096, 8);
+        let mut ex = BatchExecutor::new(2);
+        ex.execute_batch(&[(&a, &a)]);
+        let cold = ex.last_batch.as_ref().unwrap().plan_s;
+        assert!(cold > 0.0);
+        let stats_plan_s = ex.stats.plan_s;
+        // Second batch: both slots resolve from the cache (one hit, one
+        // in-batch share) — no plans built, but resolution is not free.
+        ex.execute_batch(&[(&a, &a), (&a, &a)]);
+        assert_eq!(ex.stats.plans_built, 1, "second batch must be served from the cache");
+        let r = ex.last_batch.as_ref().unwrap();
+        assert!(r.plan_s > 0.0, "cache-hit products still cost fingerprint validation");
+        assert!(ex.stats.plan_s > stats_plan_s, "lifetime plan seconds must include validation");
+        assert_eq!(r.symbolic_kind_s, [0.0; 3], "no fresh plan → no new symbolic kernel seconds");
+        // The cached `multiply_cached` hit path counts validation too.
+        let before = ex.stats.plan_s;
+        ex.multiply_cached(&a, &a);
+        assert!(ex.stats.plan_s > before);
     }
 
     #[test]

@@ -155,7 +155,17 @@ impl SpgemmExecutor {
             return self.multiply(a, b);
         }
         self.jobs += 1;
+        let t_validate = std::time::Instant::now();
         let reuse = slot.as_ref().is_some_and(|p| p.matches(a, b));
+        // Plan validation re-hashes both operands' structure — real,
+        // O(nnz) operand-analysis work the hit path still pays. Charge
+        // it to the grouping slot so a reused job's grouping_s is the
+        // validation cost rather than a defaulted 0 and the reported
+        // plan-reuse saving is not overstated (the symbolic phase is
+        // the part reuse genuinely skips, so symbolic_s stays 0 on
+        // hits). Regression-pinned by
+        // `reused_jobs_charge_plan_validation_time`.
+        self.phase_times.grouping_s += t_validate.elapsed().as_secs_f64();
         if reuse {
             self.plan_hits += 1;
         } else {
@@ -259,6 +269,31 @@ mod tests {
         ex.export_metrics(&mut m);
         assert_eq!(m.counter("spgemm.hash.plan_hits"), 1);
         assert_eq!(m.counter("spgemm.hash.plan_misses"), 2);
+    }
+
+    /// Regression: the `multiply_reusing` hit path used to leave
+    /// `grouping_s` at its defaulted 0 even though validating the plan
+    /// re-hashes both operands (O(nnz)) — phase totals reported reuse's
+    /// operand analysis as free, overstating the plan-reuse saving.
+    #[test]
+    fn reused_jobs_charge_plan_validation_time() {
+        // Large enough that two structure hashes take measurable time.
+        let a = crate::gen::rmat(4096, 40_000, crate::gen::RmatParams::uniform(), &mut Pcg32::seeded(9));
+        let mut ex = SpgemmExecutor::fast(Variant::Hash);
+        let mut slot = None;
+        ex.multiply_reusing(&mut slot, &a, &a); // miss: plans
+        let after_miss = ex.phase_times;
+        assert!(after_miss.grouping_s > 0.0 && after_miss.symbolic_s > 0.0);
+        ex.multiply_reusing(&mut slot, &a, &a); // hit: fill only
+        assert_eq!((ex.plan_hits, ex.plan_misses), (1, 1));
+        assert!(
+            ex.phase_times.grouping_s > after_miss.grouping_s,
+            "the hit path must charge its plan-validation (structure-hash) time to grouping_s"
+        );
+        // The symbolic phase was genuinely skipped: no new symbolic
+        // seconds on the hit.
+        assert_eq!(ex.phase_times.symbolic_s, after_miss.symbolic_s);
+        assert!(ex.phase_times.numeric_s > after_miss.numeric_s, "the fill itself is still timed");
     }
 
     #[test]

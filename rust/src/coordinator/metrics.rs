@@ -43,13 +43,18 @@ impl Metrics {
     }
 
     /// Record the engine's per-phase wall times under
-    /// `<prefix>.{grouping,symbolic,numeric}` plus the numeric split per
-    /// accumulator kind under `<prefix>.numeric_{copy,hash,spa}` (one
-    /// observation each).
+    /// `<prefix>.{grouping,symbolic,numeric}` plus the symbolic split
+    /// per counting kernel under
+    /// `<prefix>.symbolic_{trivial,hash,bitmap}` and the numeric split
+    /// per accumulator kind under `<prefix>.numeric_{copy,hash,spa}`
+    /// (one observation each).
     pub fn observe_phase_times(&mut self, prefix: &str, pt: &PhaseTimes) {
         self.add_time(&format!("{prefix}.grouping"), pt.grouping_s);
         self.add_time(&format!("{prefix}.symbolic"), pt.symbolic_s);
         self.add_time(&format!("{prefix}.numeric"), pt.numeric_s);
+        self.add_time(&format!("{prefix}.symbolic_trivial"), pt.symbolic_kind_s[0]);
+        self.add_time(&format!("{prefix}.symbolic_hash"), pt.symbolic_kind_s[1]);
+        self.add_time(&format!("{prefix}.symbolic_bitmap"), pt.symbolic_kind_s[2]);
         self.add_time(&format!("{prefix}.numeric_copy"), pt.numeric_kind_s[0]);
         self.add_time(&format!("{prefix}.numeric_hash"), pt.numeric_kind_s[1]);
         self.add_time(&format!("{prefix}.numeric_spa"), pt.numeric_kind_s[2]);
@@ -110,6 +115,7 @@ mod tests {
             grouping_s: 0.5,
             symbolic_s: 1.0,
             numeric_s: 2.0,
+            symbolic_kind_s: [0.1, 0.6, 0.3],
             numeric_kind_s: [0.25, 1.5, 0.25],
         };
         m.observe_phase_times("spgemm", &pt);
@@ -118,6 +124,8 @@ mod tests {
         assert!((m.timer_total("spgemm.numeric") - 4.0).abs() < 1e-12);
         assert!((m.timer_total("spgemm.numeric_spa") - 0.5).abs() < 1e-12);
         assert!((m.timer_total("spgemm.numeric_hash") - 3.0).abs() < 1e-12);
+        assert!((m.timer_total("spgemm.symbolic_bitmap") - 0.6).abs() < 1e-12);
+        assert!((m.timer_total("spgemm.symbolic_hash") - 1.2).abs() < 1e-12);
         assert_eq!(m.timer_total("spgemm.missing"), 0.0);
     }
 

@@ -36,64 +36,180 @@ pub struct Dataset {
 pub fn table2_datasets() -> Vec<Dataset> {
     vec![
         Dataset {
-            paper: PaperMatrix { name: "RoadTX", rows: 1_393_383, nnz: 3_843_320, nnz_per_row: 2.8, max_nnz_row: 51, ip_a2: 12_099_370, nnz_a2: 3_843_320 },
+            paper: PaperMatrix {
+                name: "RoadTX",
+                rows: 1_393_383,
+                nnz: 3_843_320,
+                nnz_per_row: 2.8,
+                max_nnz_row: 51,
+                ip_a2: 12_099_370,
+                nnz_a2: 3_843_320,
+            },
             scale: 20,
-            gen: |seed| { let mut r = Pcg32::new(seed, 10); let m = road_grid(264, &mut r); permute_symmetric(&m, &mut r) }, // 264^2 ≈ 70k rows, arbitrary ids
+            // 264^2 ≈ 70k rows, arbitrary ids
+            gen: |seed| {
+                let mut r = Pcg32::new(seed, 10);
+                let m = road_grid(264, &mut r);
+                permute_symmetric(&m, &mut r)
+            },
         },
         Dataset {
-            paper: PaperMatrix { name: "p2p-Gnutella04", rows: 10_879, nnz: 39_994, nnz_per_row: 3.7, max_nnz_row: 497, ip_a2: 180_230, nnz_a2: 39_994 },
+            paper: PaperMatrix {
+                name: "p2p-Gnutella04",
+                rows: 10_879,
+                nnz: 39_994,
+                nnz_per_row: 3.7,
+                max_nnz_row: 497,
+                ip_a2: 180_230,
+                nnz_a2: 39_994,
+            },
             scale: 1, // small enough to keep at full scale
             gen: |seed| p2p(10_879, &mut Pcg32::new(seed, 11)),
         },
         Dataset {
-            paper: PaperMatrix { name: "amazon0601", rows: 403_394, nnz: 3_387_388, nnz_per_row: 8.4, max_nnz_row: 100, ip_a2: 32_373_599, nnz_a2: 16_258_436 },
+            paper: PaperMatrix {
+                name: "amazon0601",
+                rows: 403_394,
+                nnz: 3_387_388,
+                nnz_per_row: 8.4,
+                max_nnz_row: 100,
+                ip_a2: 32_373_599,
+                nnz_a2: 16_258_436,
+            },
             scale: 8,
             gen: |seed| community_powerlaw(50_424, 4, 64, &mut Pcg32::new(seed, 12)),
         },
         Dataset {
-            paper: PaperMatrix { name: "web-Google", rows: 916_428, nnz: 5_105_039, nnz_per_row: 5.6, max_nnz_row: 4334, ip_a2: 60_687_836, nnz_a2: 29_710_164 },
+            paper: PaperMatrix {
+                name: "web-Google",
+                rows: 916_428,
+                nnz: 5_105_039,
+                nnz_per_row: 5.6,
+                max_nnz_row: 4334,
+                ip_a2: 60_687_836,
+                nnz_a2: 29_710_164,
+            },
             scale: 16,
             gen: |seed| rmat(57_276, 320_000, RmatParams::web(), &mut Pcg32::new(seed, 13)),
         },
         Dataset {
-            paper: PaperMatrix { name: "scircuit", rows: 170_998, nnz: 958_936, nnz_per_row: 5.6, max_nnz_row: 353, ip_a2: 8_676_313, nnz_a2: 5_222_525 },
+            paper: PaperMatrix {
+                name: "scircuit",
+                rows: 170_998,
+                nnz: 958_936,
+                nnz_per_row: 5.6,
+                max_nnz_row: 353,
+                ip_a2: 8_676_313,
+                nnz_a2: 5_222_525,
+            },
             scale: 4,
-            gen: |seed| { let mut r = Pcg32::new(seed, 14); let m = circuit(42_749, &mut r); permute_symmetric(&m, &mut r) },
+            gen: |seed| {
+                let mut r = Pcg32::new(seed, 14);
+                let m = circuit(42_749, &mut r);
+                permute_symmetric(&m, &mut r)
+            },
         },
         Dataset {
-            paper: PaperMatrix { name: "cit-Patents", rows: 3_774_768, nnz: 16_518_948, nnz_per_row: 4.4, max_nnz_row: 770, ip_a2: 82_152_992, nnz_a2: 68_848_721 },
+            paper: PaperMatrix {
+                name: "cit-Patents",
+                rows: 3_774_768,
+                nnz: 16_518_948,
+                nnz_per_row: 4.4,
+                max_nnz_row: 770,
+                ip_a2: 82_152_992,
+                nnz_a2: 68_848_721,
+            },
             scale: 48,
             gen: |seed| rmat(78_641, 345_000, RmatParams::citation(), &mut Pcg32::new(seed, 15)),
         },
         Dataset {
-            paper: PaperMatrix { name: "Economics", rows: 206_500, nnz: 1_273_389, nnz_per_row: 6.2, max_nnz_row: 44, ip_a2: 7_556_897, nnz_a2: 6_704_899 },
+            paper: PaperMatrix {
+                name: "Economics",
+                rows: 206_500,
+                nnz: 1_273_389,
+                nnz_per_row: 6.2,
+                max_nnz_row: 44,
+                ip_a2: 7_556_897,
+                nnz_a2: 6_704_899,
+            },
             scale: 4,
             gen: |seed| economics(51_625, &mut Pcg32::new(seed, 16)),
         },
         Dataset {
-            paper: PaperMatrix { name: "webbase-1M", rows: 1_000_005, nnz: 3_105_536, nnz_per_row: 3.1, max_nnz_row: 4700, ip_a2: 69_524_195, nnz_a2: 51_111_996 },
+            paper: PaperMatrix {
+                name: "webbase-1M",
+                rows: 1_000_005,
+                nnz: 3_105_536,
+                nnz_per_row: 3.1,
+                max_nnz_row: 4700,
+                ip_a2: 69_524_195,
+                nnz_a2: 51_111_996,
+            },
             scale: 16,
-            gen: |seed| rmat(62_500, 195_000, RmatParams { a: 0.63, b: 0.17, c: 0.17, noise: 0.08 }, &mut Pcg32::new(seed, 17)),
+            gen: |seed| {
+                let params = RmatParams { a: 0.63, b: 0.17, c: 0.17, noise: 0.08 };
+                rmat(62_500, 195_000, params, &mut Pcg32::new(seed, 17))
+            },
         },
         Dataset {
-            paper: PaperMatrix { name: "wb-edu", rows: 9_845_725, nnz: 57_156_537, nnz_per_row: 5.8, max_nnz_row: 3841, ip_a2: 1_559_579_990, nnz_a2: 630_077_764 },
+            paper: PaperMatrix {
+                name: "wb-edu",
+                rows: 9_845_725,
+                nnz: 57_156_537,
+                nnz_per_row: 5.8,
+                max_nnz_row: 3841,
+                ip_a2: 1_559_579_990,
+                nnz_a2: 630_077_764,
+            },
             scale: 96,
             gen: |seed| rmat(102_560, 595_000, RmatParams::web(), &mut Pcg32::new(seed, 18)),
         },
         Dataset {
-            paper: PaperMatrix { name: "cage15", rows: 5_154_859, nnz: 99_199_551, nnz_per_row: 19.2, max_nnz_row: 47, ip_a2: 2_078_631_615, nnz_a2: 929_023_247 },
+            paper: PaperMatrix {
+                name: "cage15",
+                rows: 5_154_859,
+                nnz: 99_199_551,
+                nnz_per_row: 19.2,
+                max_nnz_row: 47,
+                ip_a2: 2_078_631_615,
+                nnz_a2: 929_023_247,
+            },
             scale: 64,
-            gen: |seed| { let mut r = Pcg32::new(seed, 19); let m = cage_regular(80_544, 19, &mut r); permute_symmetric(&m, &mut r) },
+            gen: |seed| {
+                let mut r = Pcg32::new(seed, 19);
+                let m = cage_regular(80_544, 19, &mut r);
+                permute_symmetric(&m, &mut r)
+            },
         },
         Dataset {
-            paper: PaperMatrix { name: "WindTunnel", rows: 217_918, nnz: 11_634_424, nnz_per_row: 53.4, max_nnz_row: 180, ip_a2: 626_054_402, nnz_a2: 32_772_236 },
+            paper: PaperMatrix {
+                name: "WindTunnel",
+                rows: 217_918,
+                nnz: 11_634_424,
+                nnz_per_row: 53.4,
+                max_nnz_row: 180,
+                ip_a2: 626_054_402,
+                nnz_a2: 32_772_236,
+            },
             scale: 8,
             gen: |seed| fem_banded(27_240, 53, &mut Pcg32::new(seed, 20)),
         },
         Dataset {
-            paper: PaperMatrix { name: "Protein", rows: 36_417, nnz: 4_344_765, nnz_per_row: 119.3, max_nnz_row: 204, ip_a2: 555_322_659, nnz_a2: 19_594_581 },
+            paper: PaperMatrix {
+                name: "Protein",
+                rows: 36_417,
+                nnz: 4_344_765,
+                nnz_per_row: 119.3,
+                max_nnz_row: 204,
+                ip_a2: 555_322_659,
+                nnz_a2: 19_594_581,
+            },
             scale: 4,
-            gen: |seed| { let mut r = Pcg32::new(seed, 21); let m = protein_contact(9_104, 119, &mut r); permute_symmetric(&m, &mut r) },
+            gen: |seed| {
+                let mut r = Pcg32::new(seed, 21);
+                let m = protein_contact(9_104, 119, &mut r);
+                permute_symmetric(&m, &mut r)
+            },
         },
     ]
 }
@@ -134,42 +250,84 @@ pub struct GnnDataset {
 pub fn table3_datasets() -> Vec<GnnDataset> {
     vec![
         GnnDataset {
-            paper: PaperGnnDataset { name: "Flickr", nodes: 89_250, edges: 989_006, avg_degree: 22.16, density_pct: 0.0248, category: "Social" },
+            paper: PaperGnnDataset {
+                name: "Flickr",
+                nodes: 89_250,
+                edges: 989_006,
+                avg_degree: 22.16,
+                density_pct: 0.0248,
+                category: "Social",
+            },
             nodes: 8192,
             scale: 11,
             avg_degree: 22,
             gen: |seed| community_powerlaw(8192, 11, 32, &mut Pcg32::new(seed, 30)),
         },
         GnnDataset {
-            paper: PaperGnnDataset { name: "ogbn-proteins", nodes: 132_534, edges: 79_122_504, avg_degree: 1193.92, density_pct: 0.9005, category: "Biological" },
+            paper: PaperGnnDataset {
+                name: "ogbn-proteins",
+                nodes: 132_534,
+                edges: 79_122_504,
+                avg_degree: 1193.92,
+                density_pct: 0.9005,
+                category: "Biological",
+            },
             nodes: 8192,
             scale: 16,
             avg_degree: 300,
             gen: |seed| protein_contact(8192, 300, &mut Pcg32::new(seed, 31)),
         },
         GnnDataset {
-            paper: PaperGnnDataset { name: "ogbn-arxiv", nodes: 169_343, edges: 1_335_586, avg_degree: 15.77, density_pct: 0.0093, category: "Citation" },
+            paper: PaperGnnDataset {
+                name: "ogbn-arxiv",
+                nodes: 169_343,
+                edges: 1_335_586,
+                avg_degree: 15.77,
+                density_pct: 0.0093,
+                category: "Citation",
+            },
             nodes: 16384,
             scale: 10,
             avg_degree: 16,
             gen: |seed| rmat(16384, 262_000, RmatParams::citation(), &mut Pcg32::new(seed, 32)),
         },
         GnnDataset {
-            paper: PaperGnnDataset { name: "Reddit", nodes: 232_965, edges: 114_848_857, avg_degree: 985.99, density_pct: 0.4232, category: "Social" },
+            paper: PaperGnnDataset {
+                name: "Reddit",
+                nodes: 232_965,
+                edges: 114_848_857,
+                avg_degree: 985.99,
+                density_pct: 0.4232,
+                category: "Social",
+            },
             nodes: 16384,
             scale: 14,
             avg_degree: 250,
             gen: |seed| community_powerlaw(16384, 125, 64, &mut Pcg32::new(seed, 33)),
         },
         GnnDataset {
-            paper: PaperGnnDataset { name: "Yelp", nodes: 716_847, edges: 13_954_819, avg_degree: 38.93, density_pct: 0.0054, category: "Social" },
+            paper: PaperGnnDataset {
+                name: "Yelp",
+                nodes: 716_847,
+                edges: 13_954_819,
+                avg_degree: 38.93,
+                density_pct: 0.0054,
+                category: "Social",
+            },
             nodes: 32_768,
             scale: 22,
             avg_degree: 39,
             gen: |seed| community_powerlaw(32_768, 20, 128, &mut Pcg32::new(seed, 34)),
         },
         GnnDataset {
-            paper: PaperGnnDataset { name: "ogbn-products", nodes: 2_449_029, edges: 126_167_053, avg_degree: 103.05, density_pct: 0.0042, category: "E-commerce" },
+            paper: PaperGnnDataset {
+                name: "ogbn-products",
+                nodes: 2_449_029,
+                edges: 126_167_053,
+                avg_degree: 103.05,
+                density_pct: 0.0042,
+                category: "E-commerce",
+            },
             nodes: 65_536,
             scale: 37,
             avg_degree: 103,

@@ -257,7 +257,8 @@ impl<'a> Trainer<'a> {
                     let mut o2 = self.rt.call("layer_fwd", n, &[m.clone(), self.w_hidden2[l].clone()])?;
                     let gate_b = o2.remove(1);
                     let act = o2.remove(0);
-                    caches.push(LayerCache { hp, agg, gate: gate_a, mid: Some((m, gate_b, Tensor::scalar(0.0))), sage_self: None });
+                    let mid = Some((m, gate_b, Tensor::scalar(0.0)));
+                    caches.push(LayerCache { hp, agg, gate: gate_a, mid, sage_self: None });
                     h = act;
                 }
                 Arch::Sage => {
@@ -307,17 +308,20 @@ impl<'a> Trainer<'a> {
             let c = &caches[l];
             let (dw1, dw2, dagg_l, d_self): (Tensor, Option<Tensor>, Tensor, Option<Tensor>) = match self.arch {
                 Arch::Gcn => {
-                    let mut lb = self.rt.call("layer_bwd", n, &[c.agg.clone(), dh.clone(), c.gate.clone(), self.w_hidden[l].clone()])?;
+                    let args = [c.agg.clone(), dh.clone(), c.gate.clone(), self.w_hidden[l].clone()];
+                    let mut lb = self.rt.call("layer_bwd", n, &args)?;
                     let dhl = lb.remove(1);
                     let dwl = lb.remove(0);
                     (dwl, None, dhl, None)
                 }
                 Arch::Gin => {
                     let (m, gate_b, _) = c.mid.as_ref().unwrap();
-                    let mut b2 = self.rt.call("layer_bwd", n, &[m.clone(), dh.clone(), gate_b.clone(), self.w_hidden2[l].clone()])?;
+                    let args = [m.clone(), dh.clone(), gate_b.clone(), self.w_hidden2[l].clone()];
+                    let mut b2 = self.rt.call("layer_bwd", n, &args)?;
                     let dm = b2.remove(1);
                     let dwb = b2.remove(0);
-                    let mut b1 = self.rt.call("layer_bwd", n, &[c.agg.clone(), dm, c.gate.clone(), self.w_hidden[l].clone()])?;
+                    let args = [c.agg.clone(), dm, c.gate.clone(), self.w_hidden[l].clone()];
+                    let mut b1 = self.rt.call("layer_bwd", n, &args)?;
                     let dagg_l = b1.remove(1);
                     let dwa = b1.remove(0);
                     (dwa, Some(dwb), dagg_l, None)
@@ -327,7 +331,14 @@ impl<'a> Trainer<'a> {
                     let mut sb = self.rt.call(
                         "sage_bwd",
                         n,
-                        &[hs.clone(), c.agg.clone(), dh.clone(), c.gate.clone(), self.w_hidden2[l].clone(), self.w_hidden[l].clone()],
+                        &[
+                            hs.clone(),
+                            c.agg.clone(),
+                            dh.clone(),
+                            c.gate.clone(),
+                            self.w_hidden2[l].clone(),
+                            self.w_hidden[l].clone(),
+                        ],
                     )?;
                     let dh_neigh = sb.remove(3);
                     let dh_self = sb.remove(2);

@@ -81,9 +81,12 @@ fn print_help() {
          spgemm-aia contract --dataset RoadTX [--variant aia]\n  \
          spgemm-aia gnn --dataset Flickr --arch gcn [--epochs 5]\n  \
          spgemm-aia info\n\nOPTIONS (all subcommands):\n  \
-         --spa-threshold T  dense-SPA density threshold: a row switches from hash to dense\n                     \
-         accumulation when nnz(C_i)/n_cols exceeds T (default 0.25;\n                     \
-         0 forces SPA on every multi-entry row, >=1 disables it)\n\nENV:\n  \
+         --spa-threshold T  dense-kernel density threshold, driving both the numeric SPA\n                     \
+         (row switches from hash accumulation when nnz(C_i)/n_cols exceeds T)\n                     \
+         and the symbolic bitmap counter (decided from the IP bound).\n                     \
+         Default derives from the simulated device's cache geometry\n                     \
+         (0.25 for the H200's 32-byte sectors); 0 forces the dense\n                     \
+         kernels on every non-trivial row, >=1 disables them\n\nENV:\n  \
          REPRO_QUICK=1 small subsets; SPGEMM_AIA_ARTIFACTS=dir; SPGEMM_AIA_THREADS=n;\n  \
          SPGEMM_AIA_SPA_THRESHOLD=T (same as --spa-threshold)"
     );
@@ -221,6 +224,30 @@ fn cmd_spgemm(args: &[String]) -> Result<()> {
             100.0 * p.l1_hit_ratio,
             p.hbm_bytes as f64 / 1e6,
             if p.aia_bound { " [AIA-bound]" } else { "" }
+        );
+    }
+    // Row-kernel split of the hash engine's plan: the symbolic per-kind
+    // counts next to the numeric ones (ESC has no plan to report).
+    // Re-derived from what is already in hand — the IP counts (O(nnz))
+    // and the computed product's exact row sizes — instead of re-running
+    // the whole symbolic analysis just to print six counters.
+    if v != Variant::Cusparse {
+        use spgemm_aia::spgemm::hash::{select_accumulator, select_symbolic};
+        let thr = (spgemm_aia::spgemm::hash::default_spa_threshold()
+            * spgemm_aia::sim::DeviceConfig::h200_scaled().dense_row_l2_overflow(a.n_cols))
+        .min(8.0);
+        let ip_rows = ip::intermediate_products(&a, &a);
+        let (mut nk, mut sk) = ([0usize; 3], [0usize; 3]);
+        for i in 0..a.n_rows {
+            sk[select_symbolic(a.row_nnz(i), ip_rows[i], a.n_cols, thr).index()] += 1;
+            let n_out = c.row_nnz(i);
+            if n_out > 0 {
+                nk[select_accumulator(a.row_nnz(i), n_out, a.n_cols, thr).index()] += 1;
+            }
+        }
+        println!(
+            "  plan: numeric rows copy/hash/spa = {}/{}/{} | symbolic rows trivial/hash/bitmap = {}/{}/{}",
+            nk[0], nk[1], nk[2], sk[0], sk[1], sk[2]
         );
     }
     Ok(())

@@ -120,8 +120,19 @@ pub fn fig5() -> Json {
 /// stabilises as clustering converges.
 pub fn plan_reuse() -> Json {
     println!("\n=== Plan reuse: amortizing symbolic analysis across numeric fills (A^2) ===");
-    let t = Table::new(&[15, 11, 11, 11, 9, 10, 6, 17]);
-    t.header(&["name", "plan ms", "fill ms", "cold ms", "reuse", "overlap", "bins", "rows c/h/s"]);
+    let t = Table::new(&[15, 11, 11, 11, 9, 10, 6, 15, 15, 12]);
+    t.header(&[
+        "name",
+        "plan ms",
+        "fill ms",
+        "cold ms",
+        "reuse",
+        "overlap",
+        "bins",
+        "rows c/h/s",
+        "sym t/h/b",
+        "sym ms h/b",
+    ]);
     let mut out = Json::obj();
     let mut rows = Json::Arr(vec![]);
     for ds in active_datasets() {
@@ -133,6 +144,10 @@ pub fn plan_reuse() -> Json {
         let cold_s = plan_s + fill_s;
         let reuse_x = cold_s / fill_s.max(1e-12);
         let kind_rows = p.symbolic_plan().kind_rows();
+        // The symbolic counterpart of the numeric split: which counting
+        // kernel sized each row, and what each kernel cost at plan time.
+        let sym_rows = p.symbolic_plan().symbolic_kind_rows();
+        let sym_s = p.plan_times.symbolic_kind_s;
         // Pipelined batch of 4 structurally *distinct* products (repeated
         // structures would be deduped to one plan): the planner emits
         // per-bin completion events, so symbolic analysis of product k+1
@@ -152,6 +167,8 @@ pub fn plan_reuse() -> Json {
             format!("{overlap_x:.2}x"),
             report.bins.to_string(),
             format!("{}/{}/{}", kind_rows[0], kind_rows[1], kind_rows[2]),
+            format!("{}/{}/{}", sym_rows[0], sym_rows[1], sym_rows[2]),
+            format!("{:.2}/{:.2}", sym_s[1] * 1e3, sym_s[2] * 1e3),
         ]);
         let mut o = Json::obj();
         o.set("name", ds.paper.name.into());
@@ -170,6 +187,14 @@ pub fn plan_reuse() -> Json {
         o.set("fill_copy_ms", (report.fill_kind_s[0] * 1e3).into());
         o.set("fill_hash_ms", (report.fill_kind_s[1] * 1e3).into());
         o.set("fill_spa_ms", (report.fill_kind_s[2] * 1e3).into());
+        // Symbolic per-kind split: rows counted by each kernel and the
+        // plan-time seconds each kernel spent.
+        o.set("symbolic_trivial_rows", sym_rows[0].into());
+        o.set("symbolic_hash_rows", sym_rows[1].into());
+        o.set("symbolic_bitmap_rows", sym_rows[2].into());
+        o.set("symbolic_trivial_ms", (sym_s[0] * 1e3).into());
+        o.set("symbolic_hash_ms", (sym_s[1] * 1e3).into());
+        o.set("symbolic_bitmap_ms", (sym_s[2] * 1e3).into());
         rows.push(o);
     }
     out.set("rows", rows);

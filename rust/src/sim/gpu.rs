@@ -138,6 +138,43 @@ impl DeviceConfig {
     pub fn hbm_bytes_per_cycle(&self) -> f64 {
         self.hbm_bw_gbps * 1e9 / (self.clock_ghz * 1e9)
     }
+
+    /// Base density crossover of the dense row kernels (symbolic bitmap
+    /// counter / numeric SPA accumulator) vs Table-I hash probing,
+    /// derived from the cache geometry instead of a magic constant.
+    ///
+    /// Per output non-zero, a hash row touches ~2 table slots of 4
+    /// bytes each (load factor ≤ 0.5 ⇒ ≈2 probes per insert), every
+    /// one a scattered line; a dense kernel touches one slot plus a
+    /// *sequential* scan that costs one line fetch per `line_bytes/4`
+    /// columns. Equating the hash path's scattered extra against the
+    /// dense scan puts the crossover at `nnz/n_cols = 2·4/line_bytes` —
+    /// 0.25 at this device's 32-byte sector granularity (pinned equal
+    /// to `spgemm::hash::DEFAULT_SPA_THRESHOLD` by a grouping test).
+    pub fn dense_row_threshold_base(&self) -> f64 {
+        8.0 / self.line_bytes as f64
+    }
+
+    /// How badly one dense row (4 bytes of kernel state per output
+    /// column) overflows the per-resident-block share of the L2
+    /// (`l2_bytes / l2_occupancy_div` — the same occupancy dilation the
+    /// cache model applies). 1.0 while the row fits; grows linearly
+    /// with the overflow once the sequential scan starts thrashing the
+    /// L2. The engine multiplies the threshold knob by this factor, so
+    /// dense kernels switch off progressively on very wide outputs.
+    pub fn dense_row_l2_overflow(&self, n_cols: usize) -> f64 {
+        let share = (self.l2_bytes / self.l2_occupancy_div.max(1)).max(1) as f64;
+        (n_cols as f64 * 4.0 / share).max(1.0)
+    }
+
+    /// The cache-adaptive dense-kernel threshold for outputs of width
+    /// `n_cols`: [`DeviceConfig::dense_row_threshold_base`] scaled by
+    /// [`DeviceConfig::dense_row_l2_overflow`], clamped to the CLI's
+    /// accepted `[0, 8]` range (≥ 1.0 already disables the dense
+    /// kernels entirely).
+    pub fn dense_row_threshold(&self, n_cols: usize) -> f64 {
+        (self.dense_row_threshold_base() * self.dense_row_l2_overflow(n_cols)).min(8.0)
+    }
 }
 
 #[cfg(test)]
@@ -160,5 +197,23 @@ mod tests {
         let f = DeviceConfig::h200_full();
         assert_eq!(f.l1_bytes, 8 * s.l1_bytes);
         assert_eq!(f.sms, s.sms);
+    }
+
+    #[test]
+    fn dense_row_threshold_derivation() {
+        let d = DeviceConfig::h200_scaled();
+        // 32-byte sectors: crossover at a quarter density.
+        assert!((d.dense_row_threshold_base() - 0.25).abs() < 1e-12);
+        // Rows that fit the per-block L2 share keep the base threshold.
+        assert_eq!(d.dense_row_l2_overflow(1_000), 1.0);
+        assert!((d.dense_row_threshold(1_000) - 0.25).abs() < 1e-12);
+        // The per-block L2 share is 4 MiB / 8 = 512 KiB = 131072 flag
+        // words: wider rows scale the threshold up...
+        let wide = 4 * 131_072;
+        assert!((d.dense_row_l2_overflow(wide) - 4.0).abs() < 1e-12);
+        assert!((d.dense_row_threshold(wide) - 1.0).abs() < 1e-12);
+        // ...monotonically, and clamped to the CLI's accepted range.
+        assert!(d.dense_row_threshold(wide * 2) >= d.dense_row_threshold(wide));
+        assert!(d.dense_row_threshold(usize::MAX / 8) <= 8.0);
     }
 }

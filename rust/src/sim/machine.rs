@@ -70,7 +70,8 @@ fn region_base(r: Region) -> u64 {
 /// Bytes per element of the data regions streamed by `indirect_range`.
 fn data_elem_bytes(r: Region) -> u64 {
     match r {
-        Region::ColB | Region::ColA | Region::ColC | Region::RptA | Region::RptB | Region::RptC | Region::Map | Region::GroupCtr | Region::HashKeys | Region::SpaFlags => 4,
+        Region::ColB | Region::ColA | Region::ColC | Region::RptA | Region::RptB | Region::RptC | Region::Map => 4,
+        Region::GroupCtr | Region::HashKeys | Region::SpaFlags => 4,
         Region::ValA | Region::ValB | Region::ValC | Region::IpCount | Region::HashVals | Region::SpaVals => 8,
         Region::AiaStream | Region::EscExpand => 16,
     }
@@ -279,8 +280,13 @@ impl Probe for Machine {
     }
 
     fn access(&mut self, region: Region, idx: usize, bytes: u32, kind: Kind) {
-        // Hash tables and SPA accumulators are per-block global-memory
-        // allocations: salt them so distinct blocks never alias.
+        // Hash tables and the dense row kernels (numeric SPA values and
+        // the flag words shared by the SPA and the symbolic bitmap
+        // counter) are per-block global-memory allocations: salt them
+        // so distinct blocks never alias. Dense-kernel rows reach here
+        // only through plain `access` events — the engines never emit
+        // `indirect_range` for them, which is what keeps bitmap/SPA
+        // rows AIA-ineligible (streaming-priced) by construction.
         let salt = if matches!(region, Region::HashKeys | Region::HashVals | Region::SpaVals | Region::SpaFlags) {
             self.hash_salt
         } else {

@@ -92,6 +92,12 @@ pub struct PhaseTimes {
     pub grouping_s: f64,
     pub symbolic_s: f64,
     pub numeric_s: f64,
+    /// Symbolic seconds split by counting kernel, indexed by
+    /// `spgemm::hash::SymbolicKind::index()` (trivial, hash, bitmap).
+    /// Sums to at most `symbolic_s` (the remainder is the partitioning
+    /// overhead outside the counting sub-bins); stays zero for callers
+    /// that only time the whole phase.
+    pub symbolic_kind_s: [f64; 3],
     /// Numeric seconds split by accumulator kind, indexed by
     /// `spgemm::hash::AccumKind::index()` (scaled-copy, hash, SPA).
     /// Sums to `numeric_s` for fills timed per bin, stays zero for
@@ -109,6 +115,9 @@ impl PhaseTimes {
         self.grouping_s += o.grouping_s;
         self.symbolic_s += o.symbolic_s;
         self.numeric_s += o.numeric_s;
+        for (k, v) in self.symbolic_kind_s.iter_mut().zip(o.symbolic_kind_s) {
+            *k += v;
+        }
         for (k, v) in self.numeric_kind_s.iter_mut().zip(o.numeric_kind_s) {
             *k += v;
         }
@@ -120,6 +129,9 @@ impl PhaseTimes {
         o.set("grouping_s", self.grouping_s.into());
         o.set("symbolic_s", self.symbolic_s.into());
         o.set("numeric_s", self.numeric_s.into());
+        o.set("symbolic_trivial_s", self.symbolic_kind_s[0].into());
+        o.set("symbolic_hash_s", self.symbolic_kind_s[1].into());
+        o.set("symbolic_bitmap_s", self.symbolic_kind_s[2].into());
         o.set("numeric_copy_s", self.numeric_kind_s[0].into());
         o.set("numeric_hash_s", self.numeric_kind_s[1].into());
         o.set("numeric_spa_s", self.numeric_kind_s[2].into());

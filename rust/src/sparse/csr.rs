@@ -160,7 +160,10 @@ impl Csr {
 
     /// Structural + numeric equality within `tol` (relative on large values).
     pub fn approx_eq(&self, other: &Csr, tol: f64) -> bool {
-        if self.n_rows != other.n_rows || self.n_cols != other.n_cols || self.rpt != other.rpt || self.col != other.col {
+        if self.n_rows != other.n_rows || self.n_cols != other.n_cols || self.rpt != other.rpt {
+            return false;
+        }
+        if self.col != other.col {
             return false;
         }
         self.val

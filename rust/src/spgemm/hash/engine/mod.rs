@@ -1,0 +1,490 @@
+//! The hash-based multi-phase SpGEMM engine (paper §III), structured as
+//! the paper's true pipeline:
+//!
+//! 1. **grouping** — per-row intermediate-product upper bounds
+//!   (Algorithm 1) binned into the Table I row categories;
+//! 2. **symbolic** — per-row *exact* output sizes ([`symbolic()`]:
+//!   Algorithms 2–3 hash inserts, or a dense bitmap counter on rows
+//!   whose IP bound crosses the density threshold), producing the
+//!   output row pointers;
+//! 3. **numeric** — value accumulation into pre-sized, disjoint output
+//!   slices ([`numeric()`]: Algorithm 5), with PWPR / TBPR thread
+//!   assignment per Table I.
+//!
+//! Each phase is parallelised bin-by-bin through
+//! [`crate::util::parallel::par_dynamic_with`]: every worker owns one
+//! reusable kernel state (hash table, bitmap counter, or SPA, plus
+//! gather scratch in the numeric phase) that survives across all rows
+//! it processes — no per-row allocation. `Probe` below refers to
+//! [`crate::sim::probe::Probe`]; the fast path's
+//! [`crate::sim::probe::NullProbe`] compiles to nothing.
+//!
+//! # The row-kernel abstraction
+//!
+//! Both phases run the same play: pick a per-row kernel at plan time,
+//! then execute homogeneous (group × kernel) sub-bins with reusable
+//! per-worker state. The pair of decisions is the
+//! [`super::grouping::RowKernel`]:
+//!
+//! - the **symbolic kind** ([`SymbolicKind`]: trivial / hash / bitmap)
+//!   is decided *before* the symbolic phase from the IP upper bound
+//!   (exact sizes do not exist yet) — bitmap rows count uniques through
+//!   a [`super::table::RowCounter`], the counting counterpart of the
+//!   numeric SPA;
+//! - the **numeric kind** ([`AccumKind`]: scaled-copy / hash / SPA) is
+//!   decided *after* it, from the exact `nnz(C_i)` the symbolic phase
+//!   produced.
+//!
+//! Both selections share the [`EngineConfig::spa_threshold`] knob,
+//! whose default derives from the simulated device's cache geometry
+//! (see [`crate::sim::DeviceConfig::dense_row_threshold_base`]) and
+//! which the engine scales up when one dense row stops fitting in the
+//! per-resident-block L2 share. The dense kernels of both phases are
+//! priced as **streaming / AIA-ineligible** by the simulator (plain
+//! `SpaVals`/`SpaFlags` accesses and sequential B loads, never
+//! [`crate::sim::probe::Probe::indirect_range`]).
+//!
+//! # The symbolic → numeric contract
+//!
+//! The symbolic phase produces a [`SymbolicPlan`]: *exact* output row
+//! pointers, the Table-I row grouping, the per-row IP bounds, the
+//! per-row kernel pair, and the numeric work list itself
+//! ([`SymbolicPlan::bins`] — every Table-I bin split by kernel pair
+//! into homogeneous [`NumericBin`]s). All numeric paths are
+//! **bit-identical**: per-column accumulation order is the B-stream
+//! encounter order in each, and the final sort is over unique keys.
+//! The numeric phase ([`numeric()`] / [`numeric_bin_into`]) only
+//! consumes the plan; callers may fill bins one at a time (the
+//! per-bin overlap pipeline in `coordinator::batch` does) or all at
+//! once.
+//!
+//! Entry points:
+//! - [`multiply`] / [`multiply_timed`] — the fast functional path
+//!   ([`crate::sim::probe::NullProbe`] instrumentation compiles away); `_timed` also
+//!   reports wall time per phase as a [`PhaseTimes`], with the numeric
+//!   seconds split per accumulator kind and the symbolic seconds split
+//!   per counting kernel; `_cfg` variants take an explicit
+//!   [`EngineConfig`] (threshold knobs);
+//! - [`symbolic()`] + [`numeric()`] — the two phases as separate calls, for
+//!   callers that reuse a plan (or inspect it); iterative callers should
+//!   prefer the validated handle [`super::plan::PlannedProduct`], which
+//!   binds a plan to the operands' structure hashes and amortises the
+//!   symbolic phase across numeric fills;
+//! - [`multiply_single_pass`] — the seed engine kept as the regression
+//!   baseline for `benches/spgemm_selfproduct.rs`;
+//! - [`multiply_traced`] / [`multiply_traced_cfg`] — deterministic
+//!   sequential path that emits the full memory trace through a
+//!   [`crate::sim::probe::Probe`], in thread-block program order, for the AIA simulator;
+//!   bitmap-symbolic and SPA-numeric rows emit plain streaming
+//!   accesses instead of `indirect_range`.
+
+mod numeric;
+mod symbolic;
+mod traced;
+
+pub use numeric::{numeric, numeric_bin_into, numeric_timed};
+pub use symbolic::{symbolic, symbolic_cfg};
+pub(crate) use symbolic::symbolic_timed;
+pub use traced::{multiply_single_pass, multiply_traced, multiply_traced_cfg, multiply_traced_stats};
+
+use super::grouping::{AccumKind, GroupSpec, Grouping, RowKernel, Strategy, SymbolicKind, GROUP_SPECS};
+use super::table::{HashTable, TableLoc};
+use crate::sim::gpu::DeviceConfig;
+use crate::sim::probe::PhaseTimes;
+use crate::sparse::Csr;
+use std::sync::OnceLock;
+
+/// Tunables of the plan-guided row kernels.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EngineConfig {
+    /// Density threshold of the dense row kernels: a row switches from
+    /// hash to dense-SPA accumulation when `nnz(C_i) / n_cols`
+    /// **exceeds** this value (strict, so `0.0` forces SPA on every
+    /// multi-entry row and any value ≥ 1.0 disables it), and — unless
+    /// [`EngineConfig::symbolic_threshold`] overrides — from hash to
+    /// bitmap unique-counting when the capped IP bound does. See
+    /// [`super::grouping::select_accumulator`] and
+    /// [`super::grouping::select_symbolic`] for the full decision
+    /// tables. The engine scales the knob by the simulated device's
+    /// L2-overflow factor for the output width and clamps to the CLI's
+    /// `[0, 8]` range (cache-adaptive — the same composition
+    /// [`crate::sim::DeviceConfig::dense_row_threshold`] provides for
+    /// the geometric base).
+    pub spa_threshold: f64,
+    /// Separate density threshold for the *symbolic* bitmap counter,
+    /// decided from the IP upper bound. `None` (the default) uses
+    /// [`EngineConfig::spa_threshold`] for both phases; tests and
+    /// benches pin the counting kernel with `Some(0.0)` (bitmap
+    /// everywhere) / `Some(8.0)` (hash everywhere).
+    pub symbolic_threshold: Option<f64>,
+}
+
+impl Default for EngineConfig {
+    /// The process-wide default threshold: the value set by
+    /// [`set_default_spa_threshold`] (the CLI's `--spa-threshold`), else
+    /// the `SPGEMM_AIA_SPA_THRESHOLD` env var, else the cache-geometry
+    /// derivation for the simulated device
+    /// ([`super::grouping::DEFAULT_SPA_THRESHOLD`] is its H200 value).
+    fn default() -> EngineConfig {
+        EngineConfig { spa_threshold: default_spa_threshold(), symbolic_threshold: None }
+    }
+}
+
+static SPA_THRESHOLD_CELL: OnceLock<f64> = OnceLock::new();
+
+/// Set the process-wide default SPA threshold (the CLI's
+/// `--spa-threshold` knob). Returns `false` if the default was already
+/// read or set — call once, at startup, before any multiply.
+pub fn set_default_spa_threshold(t: f64) -> bool {
+    SPA_THRESHOLD_CELL.set(t).is_ok()
+}
+
+/// The process-wide default SPA threshold (see
+/// [`EngineConfig::default`]). Env values outside the CLI's accepted
+/// `[0, 8]` range (or unparsable ones) are ignored, not latched — a
+/// stray `SPGEMM_AIA_SPA_THRESHOLD=-1` must not force the SPA onto
+/// every row of every multiply in the process. With neither the knob
+/// nor the env set, the default is **derived from the simulated
+/// device's cache geometry**
+/// ([`crate::sim::DeviceConfig::dense_row_threshold_base`]), not a
+/// magic constant.
+pub fn default_spa_threshold() -> f64 {
+    *SPA_THRESHOLD_CELL.get_or_init(|| {
+        std::env::var("SPGEMM_AIA_SPA_THRESHOLD")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .filter(|t: &f64| (0.0..=8.0).contains(t))
+            .unwrap_or_else(|| DeviceConfig::h200_scaled().dense_row_threshold_base())
+    })
+}
+
+/// The thresholds a multiply actually runs at for outputs of width
+/// `n_cols`: the configured knobs scaled by the simulated device's
+/// dense-row L2-overflow factor (1.0 while one dense row fits in the
+/// per-resident-block L2 share, growing past it — so the dense kernels
+/// switch off progressively on very wide outputs). Returns
+/// `(symbolic, numeric)`; the scaling preserves both boundary
+/// invariants (`0.0` still forces, ≥ 1.0 still disables).
+pub(crate) fn effective_thresholds(cfg: &EngineConfig, n_cols: usize) -> (f64, f64) {
+    // Same scaling-and-clamp [`DeviceConfig::dense_row_threshold`]
+    // documents for the geometric base, applied to the configured knob.
+    let overflow = DeviceConfig::h200_scaled().dense_row_l2_overflow(n_cols);
+    let scale = |t: f64| (t * overflow).min(8.0);
+    (scale(cfg.symbolic_threshold.unwrap_or(cfg.spa_threshold)), scale(cfg.spa_threshold))
+}
+
+/// One homogeneous unit of numeric work: the rows of one Table-I group
+/// that share one row-kernel pair (symbolic counting kernel × numeric
+/// accumulator). Bins are the granularity at which the numeric phase
+/// runs, the stream scheduler packs, and the batch pipeline dispatches
+/// per-bin completion events.
+#[derive(Clone, Debug)]
+pub struct NumericBin {
+    /// Table-I group id (0–3) — fixes strategy, block and table sizes.
+    pub group: u8,
+    /// Accumulator every row in this bin uses in the numeric phase.
+    pub kind: AccumKind,
+    /// Counting kernel every row in this bin used in the symbolic phase.
+    pub symbolic_kind: SymbolicKind,
+    /// Member rows (original row ids, stable within the group). Rows
+    /// with zero output are excluded from every bin.
+    pub rows: Vec<u32>,
+    /// Summed intermediate products — the bin's scheduling weight.
+    pub weight: u64,
+}
+
+impl NumericBin {
+    /// The bin's row-kernel pair.
+    pub fn kernel(&self) -> RowKernel {
+        RowKernel { symbolic: self.symbolic_kind, numeric: self.kind }
+    }
+
+    /// Short label for schedules and metrics, e.g. `g3/bitmap/spa`.
+    pub fn label(&self) -> String {
+        format!("g{}/{}", self.group, self.kernel().label())
+    }
+}
+
+/// Output of the symbolic phase: everything the numeric phase needs to
+/// fill values without re-deriving structure, including the row-kernel
+/// decision per row (the numeric half is made here, where exact sizes
+/// are known — the numeric phase only consumes it; the symbolic half
+/// was made before counting, from the IP bound).
+pub struct SymbolicPlan {
+    /// Per-row intermediate-product upper bounds (Algorithm 1).
+    pub ip: Vec<u64>,
+    /// Table I row-category bins over `ip`.
+    pub grouping: Grouping,
+    /// *Exact* output row pointers: `rpt[i+1] - rpt[i]` = nnz of C row i.
+    pub rpt: Vec<usize>,
+    /// Per-row accumulator kind (rows with zero output hold a
+    /// placeholder — use [`SymbolicPlan::accumulator_kind`]).
+    pub accum: Vec<AccumKind>,
+    /// Per-row symbolic counting kernel (defined for *every* row — the
+    /// symbolic phase processed them all, empty output or not).
+    pub symbolic: Vec<SymbolicKind>,
+    /// The numeric work list: each Table-I bin split by row-kernel
+    /// pair, empty bins dropped.
+    pub bins: Vec<NumericBin>,
+    /// Density threshold knob the kinds were selected with (the base
+    /// value, before the cache-adaptive width scaling).
+    pub spa_threshold: f64,
+}
+
+impl SymbolicPlan {
+    /// Total output non-zeros.
+    pub fn nnz(&self) -> usize {
+        *self.rpt.last().unwrap_or(&0)
+    }
+
+    /// Exact nnz of output row `i`.
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.rpt[i + 1] - self.rpt[i]
+    }
+
+    /// Accumulator the numeric phase will use for row `i` (`None` for
+    /// rows with no output — they are skipped entirely).
+    pub fn accumulator_kind(&self, i: usize) -> Option<AccumKind> {
+        if self.row_nnz(i) == 0 {
+            None
+        } else {
+            Some(self.accum[i])
+        }
+    }
+
+    /// Counting kernel the symbolic phase used for row `i`.
+    pub fn symbolic_kind(&self, i: usize) -> SymbolicKind {
+        self.symbolic[i]
+    }
+
+    /// The full row-kernel pair for row `i` (`None` for rows with no
+    /// output — they have a symbolic kind but never reach the numeric
+    /// phase).
+    pub fn row_kernel(&self, i: usize) -> Option<RowKernel> {
+        self.accumulator_kind(i).map(|numeric| RowKernel { symbolic: self.symbolic[i], numeric })
+    }
+
+    /// Row counts per accumulator kind, indexed by
+    /// [`AccumKind::index`] (copy, hash, SPA).
+    pub fn kind_rows(&self) -> [usize; 3] {
+        let mut n = [0usize; 3];
+        for b in &self.bins {
+            n[b.kind.index()] += b.rows.len();
+        }
+        n
+    }
+
+    /// Row counts per symbolic counting kernel, indexed by
+    /// [`SymbolicKind::index`] (trivial, hash, bitmap) — over **all**
+    /// rows, since the symbolic phase processes every row.
+    pub fn symbolic_kind_rows(&self) -> [usize; 3] {
+        let mut n = [0usize; 3];
+        for &k in &self.symbolic {
+            n[k.index()] += 1;
+        }
+        n
+    }
+}
+
+/// Dynamic-scheduling batch for a bin: PWPR bins hand each worker a
+/// block's worth of small rows; TBPR bins hand out fat rows a few at a
+/// time so the atomic counter isn't hammered.
+pub(crate) fn bin_batch(spec: &GroupSpec) -> usize {
+    match spec.strategy {
+        Strategy::Pwpr => spec.rows_per_block(),
+        Strategy::Tbpr => 4,
+    }
+}
+
+/// One reusable per-worker table for a bin.
+pub(crate) fn bin_table(spec: &GroupSpec) -> HashTable {
+    match spec.table_size {
+        Some(s) => HashTable::new(s, TableLoc::Shared),
+        None => HashTable::new(1024, TableLoc::Global),
+    }
+}
+
+/// Fast parallel hash SpGEMM (symbolic + numeric phases), at the
+/// process-default [`EngineConfig`].
+pub fn multiply(a: &Csr, b: &Csr) -> Csr {
+    multiply_cfg(a, b, &EngineConfig::default())
+}
+
+/// [`multiply`] with an explicit [`EngineConfig`].
+pub fn multiply_cfg(a: &Csr, b: &Csr, cfg: &EngineConfig) -> Csr {
+    multiply_timed_cfg(a, b, cfg).0
+}
+
+/// [`multiply`] plus wall time per phase (numeric seconds split per
+/// accumulator kind, symbolic seconds per counting kernel).
+pub fn multiply_timed(a: &Csr, b: &Csr) -> (Csr, PhaseTimes) {
+    multiply_timed_cfg(a, b, &EngineConfig::default())
+}
+
+/// [`multiply_timed`] with an explicit [`EngineConfig`].
+pub fn multiply_timed_cfg(a: &Csr, b: &Csr, cfg: &EngineConfig) -> (Csr, PhaseTimes) {
+    let (plan, mut times) = symbolic_timed(a, b, cfg);
+    let (c, numeric_times) = numeric_timed(a, b, &plan);
+    times.numeric_s = numeric_times.numeric_s;
+    times.numeric_kind_s = numeric_times.numeric_kind_s;
+    (c, times)
+}
+
+/// Strategy assigned to a row with the given IP (for tests/diagnostics).
+pub fn strategy_for_ip(ip: u64) -> Strategy {
+    GROUP_SPECS[crate::spgemm::ip::group_index_for_ip(ip)].strategy
+}
+
+/// Expose the spec list for the coordinator's stream scheduler.
+pub fn group_specs() -> &'static [GroupSpec; 4] {
+    &GROUP_SPECS
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::util::Pcg32;
+
+    pub fn random_csr(rng: &mut Pcg32, rows: usize, cols: usize, density: f64) -> Csr {
+        let mut coo = crate::sparse::Coo::new(rows, cols);
+        let target = ((rows * cols) as f64 * density) as usize;
+        for _ in 0..target {
+            coo.push(rng.below_usize(rows), rng.below_usize(cols), rng.f64_range(-2.0, 2.0));
+        }
+        coo.to_csr()
+    }
+
+    /// Dense-ish operands so the default threshold actually selects SPA
+    /// rows (every output row of a dense product is fully dense).
+    pub fn dense_pair(seed: u64, n: usize) -> (Csr, Csr) {
+        let mut rng = Pcg32::seeded(seed);
+        (random_csr(&mut rng, n, n, 0.5), random_csr(&mut rng, n, n, 0.5))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::random_csr;
+    use super::*;
+    use crate::spgemm::reference::spgemm_reference;
+    use crate::util::{qc, Pcg32};
+
+    #[test]
+    fn matches_reference_small() {
+        let a = Csr::from_dense(&[vec![1.0, 2.0, 0.0], vec![0.0, 0.0, 3.0], vec![1.0, 0.0, 1.0]]);
+        let b = Csr::from_dense(&[vec![0.0, 1.0], vec![1.0, 0.0], vec![2.0, 2.0]]);
+        let c = multiply(&a, &b);
+        let r = spgemm_reference(&a, &b);
+        assert!(c.approx_eq(&r, 1e-12), "{:?} vs {:?}", c.to_dense(), r.to_dense());
+    }
+
+    #[test]
+    fn phase_times_are_reported() {
+        let mut rng = Pcg32::seeded(23);
+        let a = random_csr(&mut rng, 400, 400, 0.02);
+        let (c, t) = multiply_timed(&a, &a);
+        assert!(c.nnz() > 0);
+        assert!(t.grouping_s >= 0.0 && t.symbolic_s >= 0.0 && t.numeric_s >= 0.0);
+        assert!(t.total_s() >= t.numeric_s);
+        assert!(t.total_s() > 0.0, "three timed phases cannot all be zero-width");
+        // The per-kernel symbolic split is recorded and bounded by the
+        // phase total (the remainder is partitioning overhead).
+        let sym_kind: f64 = t.symbolic_kind_s.iter().sum();
+        assert!(sym_kind > 0.0, "per-kernel symbolic times must be recorded");
+        assert!(sym_kind <= t.symbolic_s + 1e-9, "kernel split cannot exceed the symbolic total");
+    }
+
+    #[test]
+    fn single_entry_rows_take_copy_path() {
+        // Diagonal × random exercises the no-table scaled-copy path on
+        // every row; result must still be exact.
+        let mut rng = Pcg32::seeded(9);
+        let m = random_csr(&mut rng, 64, 64, 0.1);
+        let d = Csr::from_diag(&[2.5; 64]);
+        let c = multiply(&d, &m);
+        let mut expect = m.clone();
+        expect.map_values(|v| 2.5 * v);
+        assert!(c.approx_eq(&expect, 1e-12));
+    }
+
+    #[test]
+    fn matches_reference_randomized() {
+        qc::check(24, 2024, |g| {
+            let rows = g.dim();
+            let inner = g.dim();
+            let cols = g.dim();
+            let density = 0.02 + g.rng.f64() * 0.2;
+            let a = {
+                let mut rng = Pcg32::seeded(g.rng.next_u64());
+                random_csr(&mut rng, rows, inner, density)
+            };
+            let b = {
+                let mut rng = Pcg32::seeded(g.rng.next_u64());
+                random_csr(&mut rng, inner, cols, density)
+            };
+            let c = multiply(&a, &b);
+            let r = spgemm_reference(&a, &b);
+            assert!(c.validate().is_ok(), "invalid CSR output");
+            assert!(c.approx_eq(&r, 1e-10), "hash engine disagrees with reference");
+        });
+    }
+
+    #[test]
+    fn empty_and_identity_edge_cases() {
+        let z = Csr::zeros(5, 5);
+        assert_eq!(multiply(&z, &z).nnz(), 0);
+        let i = Csr::identity(64);
+        let mut rng = Pcg32::seeded(9);
+        let m = random_csr(&mut rng, 64, 64, 0.1);
+        assert!(multiply(&i, &m).approx_eq(&m, 1e-12));
+        assert!(multiply(&m, &i).approx_eq(&m, 1e-12));
+    }
+
+    #[test]
+    fn strategy_assignment() {
+        assert_eq!(strategy_for_ip(10), Strategy::Pwpr);
+        assert_eq!(strategy_for_ip(100), Strategy::Tbpr);
+    }
+
+    #[test]
+    fn default_threshold_is_sane() {
+        // The accepted range matches the CLI/env validation ([0, 8]);
+        // values past 1.0 are legal and mean "dense kernels disabled".
+        let t = default_spa_threshold();
+        assert!((0.0..=8.0).contains(&t), "default threshold {t} out of range");
+        assert_eq!(EngineConfig::default().spa_threshold, t);
+        assert_eq!(EngineConfig::default().symbolic_threshold, None);
+    }
+
+    #[test]
+    fn effective_thresholds_scale_with_width() {
+        // Narrow outputs keep the configured knob as-is; a symbolic
+        // override replaces only the symbolic half. The boundary
+        // invariants survive scaling: 0.0 stays 0.0, ≥ 1.0 stays ≥ 1.0.
+        let cfg = EngineConfig { spa_threshold: 0.25, symbolic_threshold: None };
+        assert_eq!(effective_thresholds(&cfg, 1_000), (0.25, 0.25));
+        let cfg = EngineConfig { spa_threshold: 0.25, symbolic_threshold: Some(0.0) };
+        assert_eq!(effective_thresholds(&cfg, 1_000), (0.0, 0.25));
+        // Past the per-block L2 share (512 KiB / 4 B = 131072 columns)
+        // both halves scale up together.
+        let cfg = EngineConfig { spa_threshold: 0.25, symbolic_threshold: None };
+        let (sym, num) = effective_thresholds(&cfg, 4 * 131_072);
+        assert!((num - 1.0).abs() < 1e-12, "numeric threshold must scale with L2 overflow");
+        assert_eq!(sym, num);
+        let cfg = EngineConfig { spa_threshold: 0.0, symbolic_threshold: None };
+        assert_eq!(effective_thresholds(&cfg, 4 * 131_072), (0.0, 0.0));
+    }
+
+    #[test]
+    fn bin_labels_carry_the_kernel_pair() {
+        let bin = NumericBin {
+            group: 3,
+            kind: AccumKind::Spa,
+            symbolic_kind: SymbolicKind::Bitmap,
+            rows: vec![1],
+            weight: 10,
+        };
+        assert_eq!(bin.label(), "g3/bitmap/spa");
+        assert_eq!(bin.kernel(), RowKernel { symbolic: SymbolicKind::Bitmap, numeric: AccumKind::Spa });
+    }
+}

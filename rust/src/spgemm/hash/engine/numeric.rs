@@ -1,0 +1,295 @@
+//! The numeric (accumulation) phase: value fills into the plan's
+//! pre-sized, disjoint output slices, one plan bin at a time.
+//!
+//! Each [`NumericBin`] is homogeneous in its row-kernel pair, so one
+//! `par_dynamic_with` call per bin hands every worker exactly the
+//! reusable state its accumulator needs (nothing for scaled copies, a
+//! Table-I hash table, or a [`DenseAccumulator`] SPA). All three paths
+//! are bit-identical — see the module docs of [`super`].
+
+use super::super::grouping::{global_table_size, AccumKind, GROUP_SPECS};
+use super::super::table::{DenseAccumulator, HashTable};
+use super::{bin_batch, bin_table, SymbolicPlan};
+use crate::sim::probe::{Kind, NullProbe, PhaseTimes, Probe, Region};
+use crate::sparse::Csr;
+use crate::util::parallel::par_dynamic_with;
+use std::time::Instant;
+
+/// Numeric phase: accumulate values into the plan's pre-sized, disjoint
+/// output slices, one plan bin at a time. The plan must come from
+/// [`super::symbolic()`] on the same `(a, b)` pair.
+pub fn numeric(a: &Csr, b: &Csr, plan: &SymbolicPlan) -> Csr {
+    numeric_timed(a, b, plan).0
+}
+
+/// [`numeric()`] plus wall time: total numeric seconds and the split per
+/// accumulator kind (only the `numeric*` fields of the returned
+/// [`PhaseTimes`] are populated).
+pub fn numeric_timed(a: &Csr, b: &Csr, plan: &SymbolicPlan) -> (Csr, PhaseTimes) {
+    // Validate here, not only per bin: a plan with zero bins (empty
+    // output) must still reject mismatched operands instead of handing
+    // back a malformed Csr.
+    assert_eq!(a.n_cols, b.n_rows, "dimension mismatch");
+    assert_eq!(plan.rpt.len(), a.n_rows + 1, "plan does not match A");
+    // Timer covers the O(nnz) output allocation too, matching what the
+    // plan-reuse fill timer has always measured (longitudinal bench
+    // numbers depend on this).
+    let t0 = Instant::now();
+    let nnz_c = plan.nnz();
+    let mut col = vec![0u32; nnz_c];
+    let mut val = vec![0f64; nnz_c];
+    let mut times = PhaseTimes::default();
+    for bi in 0..plan.bins.len() {
+        let t = Instant::now();
+        numeric_bin_into(a, b, plan, bi, &mut col, &mut val);
+        times.numeric_kind_s[plan.bins[bi].kind.index()] += t.elapsed().as_secs_f64();
+    }
+    times.numeric_s = t0.elapsed().as_secs_f64();
+    (Csr::new_unchecked(a.n_rows, b.n_cols, plan.rpt.clone(), col, val), times)
+}
+
+/// Fill one numeric bin of `plan` into caller-owned output buffers
+/// (`col`/`val` must be sized to `plan.nnz()`). Rows write disjoint
+/// `[rpt[i], rpt[i+1])` slices, so bins of the same plan may be filled
+/// in any order — this is the per-bin dispatch unit of the batch
+/// pipeline's phase overlap.
+pub fn numeric_bin_into(a: &Csr, b: &Csr, plan: &SymbolicPlan, bin_idx: usize, col: &mut [u32], val: &mut [f64]) {
+    assert_eq!(a.n_cols, b.n_rows, "dimension mismatch");
+    assert_eq!(plan.rpt.len(), a.n_rows + 1, "plan does not match A");
+    assert_eq!(col.len(), plan.nnz(), "output buffers must be sized to the plan");
+    assert_eq!(val.len(), plan.nnz(), "output buffers must be sized to the plan");
+    let bin = &plan.bins[bin_idx];
+    let spec = &GROUP_SPECS[bin.group as usize];
+    let rows = &bin.rows[..];
+    let col_ptr = col.as_mut_ptr() as usize;
+    let val_ptr = val.as_mut_ptr() as usize;
+    match bin.kind {
+        // Single-A-entry rows are scaled copies of one B row: already
+        // sorted, collision-free — no accumulator, no sort.
+        AccumKind::ScaledCopy => par_dynamic_with(
+            rows.len(),
+            bin_batch(spec),
+            || (),
+            |_, ri| {
+                let row = rows[ri] as usize;
+                let start = plan.rpt[row];
+                let n_out = plan.rpt[row + 1] - start;
+                let j = a.rpt[row];
+                let av = a.val[j];
+                let (bc, bv) = b.row(a.col[j] as usize);
+                // Real assert, not debug: the pointer writes below are
+                // bounded by the plan, so a plan/input mismatch must
+                // panic rather than corrupt memory.
+                assert_eq!(bc.len(), n_out, "plan does not match inputs at row {row}");
+                let cp = col_ptr as *mut u32;
+                let vp = val_ptr as *mut f64;
+                for (o, (&c, &v)) in bc.iter().zip(bv).enumerate() {
+                    // SAFETY: rows write disjoint [rpt[i], rpt[i+1]) slices.
+                    unsafe {
+                        *cp.add(start + o) = c;
+                        *vp.add(start + o) = av * v;
+                    }
+                }
+            },
+        ),
+        AccumKind::Hash => par_dynamic_with(
+            rows.len(),
+            bin_batch(spec),
+            || (bin_table(spec), Vec::<(u32, f64)>::new()),
+            |(table, scratch), ri| {
+                let row = rows[ri] as usize;
+                let start = plan.rpt[row];
+                let n_out = plan.rpt[row + 1] - start;
+                match spec.table_size {
+                    Some(_) => table.clear(),
+                    // Exact sizing from the symbolic count: 2·nnz(C_i)
+                    // keeps load factor ≤ 0.5 and is far below the
+                    // 2·IP_i the single-pass engine allocated for hub
+                    // rows.
+                    None => table.reset_with_capacity(global_table_size(n_out as u64)),
+                }
+                accum_row_fast(a, b, row, table, scratch);
+                write_sorted_row(scratch, row, start, n_out, col_ptr, val_ptr);
+            },
+        ),
+        // Dense rows stream into a per-worker SPA: no probe chains, and
+        // the accumulation order per column is identical to the hash
+        // path's, so the sorted output is bit-identical.
+        AccumKind::Spa => par_dynamic_with(
+            rows.len(),
+            bin_batch(spec),
+            || (DenseAccumulator::new(b.n_cols), Vec::<(u32, f64)>::new()),
+            |(spa, scratch), ri| {
+                let row = rows[ri] as usize;
+                let start = plan.rpt[row];
+                let n_out = plan.rpt[row + 1] - start;
+                spa.clear();
+                accum_row_spa(a, b, row, spa, scratch);
+                write_sorted_row(scratch, row, start, n_out, col_ptr, val_ptr);
+            },
+        ),
+    }
+}
+
+/// Shared epilogue of the hash and SPA arms of [`numeric_bin_into`]:
+/// sort the gathered row (std sort — identical result to bitonic, keys
+/// unique) and write it into the row's disjoint output slice.
+///
+/// The length assert is a real assert, not debug: it bounds the unsafe
+/// writes below, so a stale/mismatched plan must panic, not scribble.
+fn write_sorted_row(
+    scratch: &mut [(u32, f64)],
+    row: usize,
+    start: usize,
+    n_out: usize,
+    col_ptr: usize,
+    val_ptr: usize,
+) {
+    assert_eq!(scratch.len(), n_out, "symbolic/numeric disagree on row {row}");
+    scratch.sort_unstable_by_key(|e| e.0);
+    let cp = col_ptr as *mut u32;
+    let vp = val_ptr as *mut f64;
+    for (o, &(c, v)) in scratch.iter().enumerate() {
+        // SAFETY: rows write disjoint [rpt[i], rpt[i+1]) slices.
+        unsafe {
+            *cp.add(start + o) = c;
+            *vp.add(start + o) = v;
+        }
+    }
+}
+
+/// Accumulation-phase row processor (Algorithm 5): numeric hash inserts
+/// of every intermediate product, then whole-table gather into `scratch`
+/// (unsorted — the caller sorts).
+pub(crate) fn accum_row<P: Probe>(
+    a: &Csr,
+    b: &Csr,
+    i: usize,
+    table: &mut HashTable,
+    scratch: &mut Vec<(u32, f64)>,
+    probe: &mut P,
+) {
+    probe.access(Region::RptA, i, 4, Kind::Read);
+    probe.access(Region::RptA, i + 1, 4, Kind::Read);
+    for j in a.row_range(i) {
+        probe.access(Region::ColA, j, 4, Kind::Read);
+        probe.access(Region::ValA, j, 8, Kind::Read);
+        let colk = a.col[j] as usize;
+        let av = a.val[j];
+        let (lo, hi) = (b.rpt[colk], b.rpt[colk + 1]);
+        // Accumulation streams both col_B and val_B.
+        probe.indirect_range(Region::RptB, colk, &[Region::ColB, Region::ValB], lo, hi);
+        for k in lo..hi {
+            table.insert_numeric(b.col[k], av * b.val[k], probe);
+            probe.compute(1); // the multiply
+        }
+    }
+    table.gather(scratch, probe);
+}
+
+/// Fast-path accumulation row processor: same inserts as [`accum_row`]
+/// but gathers in O(unique) via the occupied list (no probe events).
+pub(crate) fn accum_row_fast(a: &Csr, b: &Csr, i: usize, table: &mut HashTable, scratch: &mut Vec<(u32, f64)>) {
+    for j in a.row_range(i) {
+        let colk = a.col[j] as usize;
+        let av = a.val[j];
+        for k in b.rpt[colk]..b.rpt[colk + 1] {
+            table.insert_numeric(b.col[k], av * b.val[k], &mut NullProbe);
+        }
+    }
+    table.gather_list(scratch);
+}
+
+/// Dense-SPA accumulation row processor (plan-guided dense rows): same
+/// intermediate products, same per-column accumulation order as the
+/// hash path, but into `vals[col]` directly — no probing. Caller clears
+/// the SPA and sorts `scratch`.
+fn accum_row_spa(a: &Csr, b: &Csr, i: usize, spa: &mut DenseAccumulator, scratch: &mut Vec<(u32, f64)>) {
+    for j in a.row_range(i) {
+        let colk = a.col[j] as usize;
+        let av = a.val[j];
+        for k in b.rpt[colk]..b.rpt[colk + 1] {
+            spa.add(b.col[k], av * b.val[k]);
+        }
+    }
+    spa.gather_list(scratch);
+}
+
+/// Traced dense-SPA row processor: the B rows are read as **plain
+/// streamed loads** (never `indirect_range` — SPA rows are
+/// AIA-ineligible by design, the gather/scatter engine buys nothing for
+/// a row that streams into a contiguous accumulator), and the SPA
+/// accesses land on [`Region::SpaVals`]/[`Region::SpaFlags`]. The
+/// gather is the GPU's sequential scan, so `scratch` comes back sorted
+/// by column — no bitonic network needed.
+pub(crate) fn accum_row_spa_traced<P: Probe>(
+    a: &Csr,
+    b: &Csr,
+    i: usize,
+    spa: &mut DenseAccumulator,
+    scratch: &mut Vec<(u32, f64)>,
+    probe: &mut P,
+) {
+    probe.access(Region::RptA, i, 4, Kind::Read);
+    probe.access(Region::RptA, i + 1, 4, Kind::Read);
+    for j in a.row_range(i) {
+        probe.access(Region::ColA, j, 4, Kind::Read);
+        probe.access(Region::ValA, j, 8, Kind::Read);
+        let colk = a.col[j] as usize;
+        let av = a.val[j];
+        probe.access(Region::RptB, colk, 4, Kind::Read);
+        probe.access(Region::RptB, colk + 1, 4, Kind::Read);
+        for k in b.rpt[colk]..b.rpt[colk + 1] {
+            probe.access(Region::ColB, k, 4, Kind::Read);
+            probe.access(Region::ValB, k, 8, Kind::Read);
+            spa.add_traced(b.col[k], av * b.val[k], probe);
+            probe.compute(1); // the multiply
+        }
+    }
+    spa.gather(scratch, probe);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::dense_pair;
+    use super::super::{multiply, multiply_cfg, multiply_timed, symbolic, EngineConfig};
+    use super::*;
+    use crate::spgemm::reference::spgemm_reference;
+
+    #[test]
+    fn spa_and_hash_paths_are_bit_identical() {
+        let (a, b) = dense_pair(101, 96);
+        let forced_spa = multiply_cfg(&a, &b, &EngineConfig { spa_threshold: 0.0, symbolic_threshold: None });
+        let no_spa = multiply_cfg(&a, &b, &EngineConfig { spa_threshold: 2.0, symbolic_threshold: None });
+        let default = multiply(&a, &b);
+        // bit-for-bit across all accumulator selections
+        assert_eq!(forced_spa, no_spa);
+        assert_eq!(forced_spa, default);
+        let r = spgemm_reference(&a, &b);
+        assert!(forced_spa.approx_eq(&r, 1e-10));
+    }
+
+    #[test]
+    fn numeric_bin_into_fills_bins_in_any_order() {
+        let (a, b) = dense_pair(33, 80);
+        let plan = symbolic(&a, &b);
+        let expect = numeric(&a, &b, &plan);
+        let mut col = vec![0u32; plan.nnz()];
+        let mut val = vec![0f64; plan.nnz()];
+        for bi in (0..plan.bins.len()).rev() {
+            numeric_bin_into(&a, &b, &plan, bi, &mut col, &mut val);
+        }
+        let c = Csr::new_unchecked(a.n_rows, b.n_cols, plan.rpt.clone(), col, val);
+        assert_eq!(c, expect, "bins write disjoint slices — order must not matter");
+    }
+
+    #[test]
+    fn timed_numeric_splits_by_kind() {
+        let (a, b) = dense_pair(14, 96);
+        let (c, t) = multiply_timed(&a, &b);
+        assert!(c.nnz() > 0);
+        let kind_total: f64 = t.numeric_kind_s.iter().sum();
+        assert!(kind_total > 0.0, "per-kind numeric times must be recorded");
+        assert!(kind_total <= t.numeric_s + 1e-9, "kind split cannot exceed the numeric total");
+    }
+}

@@ -1,0 +1,377 @@
+//! The symbolic (allocation) phase: exact per-row output sizes through
+//! plan-selected counting kernels.
+//!
+//! Every row's [`SymbolicKind`] is decided *before* counting, from the
+//! IP upper bound (exact sizes do not exist yet —
+//! [`super::super::grouping::select_symbolic`]): trivial rows skip
+//! counting entirely, sparse-bound rows run Algorithms 2–3 symbolic
+//! hash inserts, dense-bound rows count first touches in a
+//! [`RowCounter`] bitmap — no probe chains, O(1) clear, identical
+//! counts by construction. Each Table-I group is partitioned by kind
+//! and the sub-bins run (and are timed) separately, which is where
+//! [`PhaseTimes::symbolic_kind_s`] comes from.
+
+use super::super::grouping::{
+    global_table_size, select_accumulator, select_symbolic, AccumKind, GroupSpec, Grouping, SymbolicKind,
+    GROUP_SPECS,
+};
+use super::super::table::{HashTable, RowCounter};
+use super::{bin_batch, bin_table, effective_thresholds, EngineConfig, NumericBin, SymbolicPlan};
+use crate::sim::probe::{Kind, NullProbe, PhaseTimes, Probe, Region};
+use crate::spgemm::ip::intermediate_products;
+use crate::sparse::Csr;
+use crate::util::parallel::par_dynamic_with;
+use std::time::Instant;
+
+/// Symbolic phase: IP estimation, row binning, exact per-row output
+/// sizes, and the per-row kernel decision — at the process-default
+/// [`EngineConfig`].
+pub fn symbolic(a: &Csr, b: &Csr) -> SymbolicPlan {
+    symbolic_cfg(a, b, &EngineConfig::default())
+}
+
+/// [`symbolic()`] with an explicit [`EngineConfig`]: the threshold decides
+/// which rows count through the bitmap and which rows the numeric phase
+/// will run through the dense SPA.
+///
+/// ```
+/// use spgemm_aia::sparse::Csr;
+/// use spgemm_aia::spgemm::hash::{symbolic_cfg, AccumKind, EngineConfig};
+///
+/// // Row 0 of C = A·B is fully dense (4/4 columns), row 1 comes from a
+/// // single A entry.
+/// let a = Csr::from_dense(&[vec![1.0, 1.0], vec![1.0, 0.0]]);
+/// let b = Csr::from_dense(&[
+///     vec![1.0, 1.0, 0.0, 0.0],
+///     vec![0.0, 0.0, 1.0, 1.0],
+/// ]);
+/// let plan = symbolic_cfg(&a, &b, &EngineConfig { spa_threshold: 0.5, symbolic_threshold: None });
+/// assert_eq!(plan.accumulator_kind(0), Some(AccumKind::Spa));
+/// assert_eq!(plan.accumulator_kind(1), Some(AccumKind::ScaledCopy));
+/// // Raising the threshold past 1.0 disables the SPA entirely.
+/// let plan = symbolic_cfg(&a, &b, &EngineConfig { spa_threshold: 2.0, symbolic_threshold: None });
+/// assert_eq!(plan.accumulator_kind(0), Some(AccumKind::Hash));
+/// ```
+pub fn symbolic_cfg(a: &Csr, b: &Csr, cfg: &EngineConfig) -> SymbolicPlan {
+    assert_eq!(a.n_cols, b.n_rows, "dimension mismatch");
+    let ip = intermediate_products(a, b);
+    let grouping = Grouping::build(&ip);
+    symbolic_with(a, b, ip, grouping, cfg).0
+}
+
+/// The symbolic half of [`super::multiply_timed`]: grouping + symbolic
+/// analysis with per-stage wall times (`numeric_s` left 0, the
+/// per-kernel symbolic split populated). Shared with the plan-reuse
+/// layer so phase attribution stays identical between cold multiplies
+/// and planned products.
+pub(crate) fn symbolic_timed(a: &Csr, b: &Csr, cfg: &EngineConfig) -> (SymbolicPlan, PhaseTimes) {
+    assert_eq!(a.n_cols, b.n_rows, "dimension mismatch");
+    let t0 = Instant::now();
+    let ip = intermediate_products(a, b);
+    let grouping = Grouping::build(&ip);
+    let grouping_s = t0.elapsed().as_secs_f64();
+
+    let t1 = Instant::now();
+    let (plan, symbolic_kind_s) = symbolic_with(a, b, ip, grouping, cfg);
+    let symbolic_s = t1.elapsed().as_secs_f64();
+
+    (plan, PhaseTimes { grouping_s, symbolic_s, symbolic_kind_s, ..PhaseTimes::default() })
+}
+
+/// Symbolic counting given precomputed IP + bins (shared by
+/// [`symbolic_cfg`] and [`symbolic_timed`], which times the stages
+/// apart). Returns the plan plus the wall seconds each counting kernel
+/// spent, indexed by [`SymbolicKind::index`].
+fn symbolic_with(
+    a: &Csr,
+    b: &Csr,
+    ip: Vec<u64>,
+    grouping: Grouping,
+    cfg: &EngineConfig,
+) -> (SymbolicPlan, [f64; 3]) {
+    let (sym_threshold, num_threshold) = effective_thresholds(cfg, b.n_cols);
+    // --- symbolic kernel selection: per row, from the IP bound ---
+    let mut sym = vec![SymbolicKind::Trivial; a.n_rows];
+    for (r, k) in sym.iter_mut().enumerate() {
+        *k = select_symbolic(a.row_nnz(r), ip[r], b.n_cols, sym_threshold);
+    }
+    // --- counting, one (group × kernel) sub-bin at a time ---
+    let mut row_nnz = vec![0u32; a.n_rows];
+    let mut symbolic_kind_s = [0f64; 3];
+    {
+        let nnz_ptr = row_nnz.as_mut_ptr() as usize;
+        for spec in &GROUP_SPECS {
+            let rows = grouping.group_rows(spec.id);
+            if rows.is_empty() {
+                continue;
+            }
+            let mut parts: [Vec<u32>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+            for &row in rows {
+                parts[sym[row as usize].index()].push(row);
+            }
+            let ip = &ip;
+            for (ki, part) in parts.iter().enumerate() {
+                if part.is_empty() {
+                    continue;
+                }
+                let t0 = Instant::now();
+                match SymbolicKind::from_index(ki) {
+                    // Collisions impossible: a single A entry reaches one
+                    // B row (whose columns are unique by CSR invariant),
+                    // and IP ≤ 1 yields at most one product — the count
+                    // *is* the IP bound.
+                    SymbolicKind::Trivial => {
+                        for &row in part {
+                            let row = row as usize;
+                            // SAFETY: each row index occurs once across
+                            // all sub-bins, so every `row_nnz` slot is
+                            // written exactly once, and the Vec outlives
+                            // the scope.
+                            unsafe { *(nnz_ptr as *mut u32).add(row) = ip[row] as u32 };
+                        }
+                    }
+                    SymbolicKind::Hash => par_dynamic_with(
+                        part.len(),
+                        bin_batch(spec),
+                        || bin_table(spec),
+                        |table, ri| {
+                            let row = part[ri] as usize;
+                            let u = symbolic_row_nnz_hash(a, b, row, ip[row], spec, table);
+                            // SAFETY: see above — disjoint slots.
+                            unsafe { *(nnz_ptr as *mut u32).add(row) = u };
+                        },
+                    ),
+                    SymbolicKind::Bitmap => par_dynamic_with(
+                        part.len(),
+                        bin_batch(spec),
+                        || RowCounter::new(b.n_cols),
+                        |counter, ri| {
+                            let row = part[ri] as usize;
+                            let u = symbolic_row_nnz_bitmap(a, b, row, counter);
+                            // SAFETY: see above — disjoint slots.
+                            unsafe { *(nnz_ptr as *mut u32).add(row) = u };
+                        },
+                    ),
+                }
+                symbolic_kind_s[ki] += t0.elapsed().as_secs_f64();
+            }
+        }
+    }
+    let mut rpt = vec![0usize; a.n_rows + 1];
+    for i in 0..a.n_rows {
+        rpt[i + 1] = rpt[i] + row_nnz[i] as usize;
+    }
+    // Accumulator selection: exact sizes are now known, so the numeric
+    // kind per row — and with it the numeric work list — costs one
+    // pass. Bins are split by the full (symbolic, numeric) kernel pair
+    // so the pair survives into the scheduler and the metrics.
+    let mut accum = vec![AccumKind::ScaledCopy; a.n_rows];
+    let mut bins = Vec::new();
+    for spec in &GROUP_SPECS {
+        let mut parts: [[Vec<u32>; 3]; 3] = Default::default();
+        let mut weights = [[0u64; 3]; 3];
+        for &row in grouping.group_rows(spec.id) {
+            let r = row as usize;
+            let n_out = row_nnz[r] as usize;
+            if n_out == 0 {
+                continue; // never reaches the numeric phase
+            }
+            let kind = select_accumulator(a.row_nnz(r), n_out, b.n_cols, num_threshold);
+            accum[r] = kind;
+            let (si, ni) = (sym[r].index(), kind.index());
+            parts[si][ni].push(row);
+            weights[si][ni] += ip[r];
+        }
+        for (si, by_numeric) in parts.into_iter().enumerate() {
+            for (ni, rows) in by_numeric.into_iter().enumerate() {
+                if !rows.is_empty() {
+                    bins.push(NumericBin {
+                        group: spec.id as u8,
+                        kind: AccumKind::from_index(ni),
+                        symbolic_kind: SymbolicKind::from_index(si),
+                        rows,
+                        weight: weights[si][ni],
+                    });
+                }
+            }
+        }
+    }
+    let plan = SymbolicPlan { ip, grouping, rpt, accum, symbolic: sym, bins, spa_threshold: cfg.spa_threshold };
+    (plan, symbolic_kind_s)
+}
+
+/// Exact nnz of one output row via symbolic hash inserts (the hash
+/// counting kernel — callers have already routed trivial rows away).
+fn symbolic_row_nnz_hash(a: &Csr, b: &Csr, row: usize, ip_row: u64, spec: &GroupSpec, table: &mut HashTable) -> u32 {
+    if ip_row <= 1 || a.row_nnz(row) <= 1 {
+        return ip_row as u32;
+    }
+    match spec.table_size {
+        Some(_) => table.clear(),
+        // Unique count is bounded by both IP and the output width, so
+        // hub rows never allocate beyond 2·n_cols.
+        None => table.reset_with_capacity(global_table_size(ip_row.min(b.n_cols as u64))),
+    }
+    alloc_row(a, b, row, table, &mut NullProbe)
+}
+
+/// Exact nnz of one output row via the dense bitmap counter (the
+/// bitmap counting kernel): first-touch counting, no probe chains, no
+/// gather — the count is the CAS-success tally.
+fn symbolic_row_nnz_bitmap(a: &Csr, b: &Csr, row: usize, counter: &mut RowCounter) -> u32 {
+    counter.clear();
+    for j in a.row_range(row) {
+        let colk = a.col[j] as usize;
+        for k in b.rpt[colk]..b.rpt[colk + 1] {
+            counter.count(b.col[k]);
+        }
+    }
+    counter.unique() as u32
+}
+
+/// Allocation-phase row processor (Algorithms 2–3 minus the thread
+/// bookkeeping): symbolic hash inserts of every B-column reachable from
+/// row `i` of A. Returns the unique count (= nnz of output row).
+pub(crate) fn alloc_row<P: Probe>(a: &Csr, b: &Csr, i: usize, table: &mut HashTable, probe: &mut P) -> u32 {
+    probe.access(Region::RptA, i, 4, Kind::Read);
+    probe.access(Region::RptA, i + 1, 4, Kind::Read);
+    for j in a.row_range(i) {
+        probe.access(Region::ColA, j, 4, Kind::Read);
+        let colk = a.col[j] as usize;
+        let (lo, hi) = (b.rpt[colk], b.rpt[colk + 1]);
+        // Two-level indirection on B, allocation needs col_B only.
+        probe.indirect_range(Region::RptB, colk, &[Region::ColB], lo, hi);
+        for k in lo..hi {
+            table.insert_symbolic(b.col[k], probe);
+        }
+    }
+    table.unique as u32
+}
+
+/// Traced bitmap counting row processor: the B rows are read as **plain
+/// streamed loads** (never `indirect_range` — bitmap rows are
+/// AIA-ineligible by design, mirroring the numeric SPA's pricing), and
+/// the counter accesses land on `Region::SpaFlags`. No gather scan
+/// follows: on the GPU the unique count is the tally of successful
+/// flag CASes, reduced per block.
+pub(crate) fn alloc_row_bitmap_traced<P: Probe>(
+    a: &Csr,
+    b: &Csr,
+    i: usize,
+    counter: &mut RowCounter,
+    probe: &mut P,
+) -> u32 {
+    probe.access(Region::RptA, i, 4, Kind::Read);
+    probe.access(Region::RptA, i + 1, 4, Kind::Read);
+    for j in a.row_range(i) {
+        probe.access(Region::ColA, j, 4, Kind::Read);
+        let colk = a.col[j] as usize;
+        probe.access(Region::RptB, colk, 4, Kind::Read);
+        probe.access(Region::RptB, colk + 1, 4, Kind::Read);
+        for k in b.rpt[colk]..b.rpt[colk + 1] {
+            probe.access(Region::ColB, k, 4, Kind::Read);
+            counter.count_traced(b.col[k], probe);
+        }
+    }
+    counter.unique() as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{dense_pair, random_csr};
+    use super::super::numeric;
+    use super::*;
+    use crate::spgemm::reference::spgemm_reference;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn symbolic_plan_is_exact() {
+        let mut rng = Pcg32::seeded(17);
+        let a = random_csr(&mut rng, 120, 100, 0.05);
+        let b = random_csr(&mut rng, 100, 90, 0.05);
+        let plan = symbolic(&a, &b);
+        let r = spgemm_reference(&a, &b);
+        assert_eq!(plan.rpt, r.rpt, "symbolic sizes must be exact, not bounds");
+        assert_eq!(plan.nnz(), r.nnz());
+        let c = numeric(&a, &b, &plan);
+        assert!(c.approx_eq(&r, 1e-10));
+    }
+
+    #[test]
+    fn threshold_boundaries_select_kinds() {
+        let (a, b) = dense_pair(7, 64);
+        // 0.0 forces SPA on every multi-entry row: no hash bins remain.
+        let plan = symbolic_cfg(&a, &b, &EngineConfig { spa_threshold: 0.0, symbolic_threshold: None });
+        assert!(plan.bins.iter().all(|bin| bin.kind != AccumKind::Hash), "0.0 must force SPA");
+        assert!(plan.kind_rows()[AccumKind::Spa.index()] > 0);
+        // ≥ 1.0 disables SPA entirely.
+        for thr in [1.0, 1.5] {
+            let plan = symbolic_cfg(&a, &b, &EngineConfig { spa_threshold: thr, symbolic_threshold: None });
+            assert!(plan.bins.iter().all(|bin| bin.kind != AccumKind::Spa), "{thr} must disable SPA");
+        }
+    }
+
+    #[test]
+    fn symbolic_kernel_follows_the_ip_bound_rule() {
+        let mut rng = Pcg32::seeded(41);
+        let a = random_csr(&mut rng, 200, 180, 0.04);
+        let b = random_csr(&mut rng, 180, 150, 0.04);
+        let cfg = EngineConfig { spa_threshold: 0.25, symbolic_threshold: None };
+        let plan = symbolic_cfg(&a, &b, &cfg);
+        for r in 0..a.n_rows {
+            let expect = select_symbolic(a.row_nnz(r), plan.ip[r], b.n_cols, 0.25);
+            assert_eq!(plan.symbolic_kind(r), expect, "row {r} kernel must follow the IP-bound rule");
+        }
+        assert_eq!(plan.symbolic_kind_rows().iter().sum::<usize>(), a.n_rows);
+        // A symbolic override rewires only the counting kernel, never
+        // the sizes or the numeric kinds.
+        let forced = symbolic_cfg(&a, &b, &EngineConfig { spa_threshold: 0.25, symbolic_threshold: Some(0.0) });
+        assert_eq!(forced.rpt, plan.rpt);
+        assert_eq!(forced.accum, plan.accum);
+        assert!(
+            (0..a.n_rows).all(|r| forced.symbolic_kind(r) != SymbolicKind::Hash),
+            "symbolic_threshold 0.0 must force the bitmap on every non-trivial row"
+        );
+    }
+
+    #[test]
+    fn plan_bins_partition_nonempty_rows() {
+        let mut rng = Pcg32::seeded(55);
+        let a = random_csr(&mut rng, 300, 260, 0.03);
+        let b = random_csr(&mut rng, 260, 240, 0.03);
+        let plan = symbolic(&a, &b);
+        let mut seen = vec![false; a.n_rows];
+        for bin in &plan.bins {
+            assert!(!bin.rows.is_empty(), "empty bins must be dropped");
+            for &r in &bin.rows {
+                assert!(!seen[r as usize], "row {r} appears in two bins");
+                seen[r as usize] = true;
+                assert_eq!(plan.accumulator_kind(r as usize), Some(bin.kind));
+                assert_eq!(plan.symbolic_kind(r as usize), bin.symbolic_kind);
+                assert_eq!(plan.row_kernel(r as usize), Some(bin.kernel()));
+                assert_eq!(plan.grouping.group_of[r as usize], bin.group);
+            }
+            assert_eq!(bin.weight, bin.rows.iter().map(|&r| plan.ip[r as usize]).sum::<u64>());
+        }
+        for r in 0..a.n_rows {
+            assert_eq!(seen[r], plan.row_nnz(r) > 0, "row {r} binned iff it has output");
+            if plan.row_nnz(r) == 0 {
+                assert_eq!(plan.accumulator_kind(r), None);
+                assert_eq!(plan.row_kernel(r), None);
+            }
+        }
+    }
+
+    #[test]
+    fn timed_symbolic_splits_by_kernel() {
+        // Dense product at a forced-bitmap threshold: the bitmap kernel
+        // must be the one accumulating symbolic seconds.
+        let (a, b) = dense_pair(14, 96);
+        let cfg = EngineConfig { spa_threshold: 0.25, symbolic_threshold: Some(0.0) };
+        let (plan, t) = symbolic_timed(&a, &b, &cfg);
+        assert!(plan.symbolic_kind_rows()[SymbolicKind::Bitmap.index()] > 0);
+        assert!(t.symbolic_kind_s[SymbolicKind::Bitmap.index()] > 0.0, "bitmap seconds must be recorded");
+        assert_eq!(t.symbolic_kind_s[SymbolicKind::Hash.index()], 0.0, "no hash sub-bin ran");
+        assert!(t.symbolic_kind_s.iter().sum::<f64>() <= t.symbolic_s + 1e-9);
+    }
+}

@@ -1,0 +1,552 @@
+//! The instrumented engines: the seed single-pass baseline and the
+//! deterministic sequential traced paths that feed the AIA simulator.
+//!
+//! The traced paths replay the same row-kernel decisions the fast
+//! path's plan bakes in ([`super::symbolic_cfg`]), evaluated inline at
+//! the same effective thresholds: bitmap-symbolic and SPA-numeric rows
+//! emit plain streaming accesses (`SpaFlags`/`SpaVals` plus sequential
+//! B loads — AIA-ineligible), hash rows emit the two-level indirection
+//! the AIA engine model rewrites.
+
+use super::super::grouping::{
+    global_table_size, select_accumulator, select_symbolic, AccumKind, Grouping, Strategy, SymbolicKind,
+    GROUP_SPECS,
+};
+use super::super::sort::bitonic_sort_by_key;
+use super::super::table::{DenseAccumulator, HashTable, RowCounter, TableLoc};
+use super::numeric::{accum_row, accum_row_fast, accum_row_spa_traced};
+use super::symbolic::{alloc_row, alloc_row_bitmap_traced};
+use super::{effective_thresholds, EngineConfig};
+use crate::sim::probe::{Kind, NullProbe, Phase, Probe, Region};
+use crate::spgemm::ip::{intermediate_products, intermediate_products_traced, IP_BLOCK_ROWS};
+use crate::sparse::Csr;
+use crate::util::{par_chunks, parallel::par_dynamic_with};
+
+/// Whether the traced paths run row `i` through the numeric SPA — the
+/// same decision [`super::symbolic_cfg`] bakes into the plan, at the
+/// effective (width-scaled) threshold the caller resolved.
+fn traced_row_uses_spa(a: &Csr, b: &Csr, row: usize, n_out: usize, num_threshold: f64) -> bool {
+    n_out > 0 && select_accumulator(a.row_nnz(row), n_out, b.n_cols, num_threshold) == AccumKind::Spa
+}
+
+/// The seed's engine: allocation and accumulation fused per bin, one
+/// freshly allocated table per worker chunk (PWPR) and IP-sized global
+/// tables. Kept as the regression baseline the two-phase pipeline is
+/// benched against (`benches/spgemm_selfproduct.rs`); output is
+/// identical to [`super::multiply`].
+pub fn multiply_single_pass(a: &Csr, b: &Csr) -> Csr {
+    assert_eq!(a.n_cols, b.n_rows, "dimension mismatch");
+    let ip = intermediate_products(a, b);
+    let grouping = Grouping::build(&ip);
+
+    // ---- allocation phase: per-row unique counts -> rpt_C ----
+    let mut row_nnz = vec![0u32; a.n_rows];
+    {
+        let nnz_ptr = row_nnz.as_mut_ptr() as usize;
+        for g in 0..4 {
+            let spec = &GROUP_SPECS[g];
+            let rows = grouping.group_rows(g);
+            match spec.strategy {
+                Strategy::Pwpr => {
+                    // many small rows: static chunks, one table per chunk
+                    par_chunks(rows.len(), |start, end| {
+                        let p = nnz_ptr as *mut u32;
+                        let mut table = HashTable::new(spec.table_size.unwrap(), TableLoc::Shared);
+                        for &row in &rows[start..end] {
+                            table.clear();
+                            let u = alloc_row(a, b, row as usize, &mut table, &mut NullProbe);
+                            unsafe { *p.add(row as usize) = u };
+                        }
+                    });
+                }
+                Strategy::Tbpr => {
+                    // fewer, fatter rows: dynamic scheduling with one
+                    // growable table per worker (no per-row allocation)
+                    let loc = if spec.table_size.is_some() { TableLoc::Shared } else { TableLoc::Global };
+                    let base = spec.table_size.unwrap_or(1024);
+                    par_dynamic_with(
+                        rows.len(),
+                        4,
+                        || HashTable::new(base, loc),
+                        |table, ri| {
+                            let p = nnz_ptr as *mut u32;
+                            let row = rows[ri] as usize;
+                            let size = spec.table_size.unwrap_or_else(|| global_table_size(ip[row]));
+                            table.reset_with_capacity(size);
+                            let u = alloc_row(a, b, row, table, &mut NullProbe);
+                            unsafe { *p.add(row) = u };
+                        },
+                    );
+                }
+            }
+        }
+    }
+    let mut rpt = vec![0usize; a.n_rows + 1];
+    for i in 0..a.n_rows {
+        rpt[i + 1] = rpt[i] + row_nnz[i] as usize;
+    }
+    let nnz_c = rpt[a.n_rows];
+
+    // ---- accumulation phase: values into disjoint output slices ----
+    let mut col = vec![0u32; nnz_c];
+    let mut val = vec![0f64; nnz_c];
+    {
+        let col_ptr = col.as_mut_ptr() as usize;
+        let val_ptr = val.as_mut_ptr() as usize;
+        for g in 0..4 {
+            let spec = &GROUP_SPECS[g];
+            let rows = grouping.group_rows(g);
+            let run_row = |row: usize, table: &mut HashTable, scratch: &mut Vec<(u32, f64)>| {
+                accum_row_fast(a, b, row, table, scratch);
+                scratch.sort_unstable_by_key(|e| e.0);
+                let start = rpt[row];
+                let cp = col_ptr as *mut u32;
+                let vp = val_ptr as *mut f64;
+                for (o, &(c, v)) in scratch.iter().enumerate() {
+                    // SAFETY: rows write disjoint [rpt[i], rpt[i+1]) slices.
+                    unsafe {
+                        *cp.add(start + o) = c;
+                        *vp.add(start + o) = v;
+                    }
+                }
+            };
+            match spec.strategy {
+                Strategy::Pwpr => {
+                    par_chunks(rows.len(), |start, end| {
+                        let mut table = HashTable::new(spec.table_size.unwrap(), TableLoc::Shared);
+                        let mut scratch = Vec::new();
+                        for &row in &rows[start..end] {
+                            table.clear();
+                            run_row(row as usize, &mut table, &mut scratch);
+                        }
+                    });
+                }
+                Strategy::Tbpr => {
+                    let loc = if spec.table_size.is_some() { TableLoc::Shared } else { TableLoc::Global };
+                    let base = spec.table_size.unwrap_or(1024);
+                    par_dynamic_with(
+                        rows.len(),
+                        4,
+                        || (HashTable::new(base, loc), Vec::new()),
+                        |(table, scratch), ri| {
+                            let row = rows[ri] as usize;
+                            let size = spec.table_size.unwrap_or_else(|| global_table_size(ip[row]));
+                            table.reset_with_capacity(size);
+                            run_row(row, table, scratch);
+                        },
+                    );
+                }
+            }
+        }
+    }
+    Csr::new_unchecked(a.n_rows, b.n_cols, rpt, col, val)
+}
+
+/// Instrumented sequential hash SpGEMM at the process-default
+/// [`EngineConfig`]: identical output to [`super::multiply`], plus a
+/// full program-order memory trace through `probe`.
+pub fn multiply_traced<P: Probe>(a: &Csr, b: &Csr, probe: &mut P) -> Csr {
+    multiply_traced_cfg(a, b, probe, &EngineConfig::default())
+}
+
+/// [`multiply_traced`] with an explicit [`EngineConfig`] — the traced
+/// path replays the same row-kernel selection the fast path's plan
+/// would bake in at this config. Blocks are numbered globally across
+/// phases so the machine model's round-robin SM assignment interleaves
+/// groups the way concurrent streams would.
+pub fn multiply_traced_cfg<P: Probe>(a: &Csr, b: &Csr, probe: &mut P, cfg: &EngineConfig) -> Csr {
+    assert_eq!(a.n_cols, b.n_rows, "dimension mismatch");
+    let (sym_threshold, num_threshold) = effective_thresholds(cfg, b.n_cols);
+    // ---- grouping phase ----
+    let ip = intermediate_products_traced(a, b, probe);
+    let grouping = Grouping::build(&ip);
+    let mut next_block = a.n_rows.div_ceil(IP_BLOCK_ROWS);
+
+    // ---- allocation (symbolic) phase ----
+    let mut row_nnz = vec![0u32; a.n_rows];
+    let mut bitmap_holder: Option<RowCounter> = None;
+    for g in 0..4 {
+        let spec = &GROUP_SPECS[g];
+        let rows = grouping.group_rows(g);
+        let mut table_holder: Option<HashTable> = spec.table_size.map(|s| HashTable::new(s, TableLoc::Shared));
+        for chunk in rows.chunks(spec.rows_per_block()) {
+            probe.begin_block(next_block, Phase::Allocation);
+            next_block += 1;
+            for &row in chunk {
+                let row = row as usize;
+                probe.access(Region::Map, row, 4, Kind::Read);
+                // Plan-guided bitmap rows: streaming first-touch counts,
+                // no hash table, no indirection (AIA-ineligible).
+                if select_symbolic(a.row_nnz(row), ip[row], b.n_cols, sym_threshold) == SymbolicKind::Bitmap {
+                    let counter = bitmap_holder.get_or_insert_with(|| RowCounter::new(b.n_cols));
+                    counter.clear();
+                    row_nnz[row] = alloc_row_bitmap_traced(a, b, row, counter, probe);
+                    probe.access(Region::RptC, row + 1, 4, Kind::Write);
+                    continue;
+                }
+                let table = match &mut table_holder {
+                    Some(t) => {
+                        t.clear();
+                        t
+                    }
+                    None => {
+                        table_holder = Some(HashTable::new(global_table_size(ip[row]), TableLoc::Global));
+                        table_holder.as_mut().unwrap()
+                    }
+                };
+                row_nnz[row] = alloc_row(a, b, row, table, probe);
+                if spec.table_size.is_none() {
+                    table_holder = None; // fresh global table per huge row
+                }
+                probe.access(Region::RptC, row + 1, 4, Kind::Write);
+            }
+        }
+    }
+    let mut rpt = vec![0usize; a.n_rows + 1];
+    for i in 0..a.n_rows {
+        rpt[i + 1] = rpt[i] + row_nnz[i] as usize;
+    }
+    let nnz_c = rpt[a.n_rows];
+
+    // ---- accumulation (numeric) phase ----
+    let mut col = vec![0u32; nnz_c];
+    let mut val = vec![0f64; nnz_c];
+    let mut scratch: Vec<(u32, f64)> = Vec::new();
+    let mut spa_holder: Option<DenseAccumulator> = None;
+    for g in 0..4 {
+        let spec = &GROUP_SPECS[g];
+        let rows = grouping.group_rows(g);
+        let mut table_holder: Option<HashTable> = spec.table_size.map(|s| HashTable::new(s, TableLoc::Shared));
+        for chunk in rows.chunks(spec.rows_per_block()) {
+            probe.begin_block(next_block, Phase::Accumulation);
+            next_block += 1;
+            for &row in chunk {
+                let row = row as usize;
+                probe.access(Region::Map, row, 4, Kind::Read);
+                let start = rpt[row];
+                // Plan-guided SPA rows: streamed accumulation, sequential
+                // gather (already column-sorted — no bitonic network).
+                if traced_row_uses_spa(a, b, row, row_nnz[row] as usize, num_threshold) {
+                    let spa = spa_holder.get_or_insert_with(|| DenseAccumulator::new(b.n_cols));
+                    spa.clear();
+                    accum_row_spa_traced(a, b, row, spa, &mut scratch, probe);
+                    probe.access(Region::RptC, row, 4, Kind::Read);
+                    for (o, &(c, v)) in scratch.iter().enumerate() {
+                        probe.access(Region::ColC, start + o, 4, Kind::Write);
+                        probe.access(Region::ValC, start + o, 8, Kind::Write);
+                        col[start + o] = c;
+                        val[start + o] = v;
+                    }
+                    continue;
+                }
+                let table = match &mut table_holder {
+                    Some(t) => {
+                        t.clear();
+                        t
+                    }
+                    None => {
+                        table_holder = Some(HashTable::new(global_table_size(ip[row]), TableLoc::Global));
+                        table_holder.as_mut().unwrap()
+                    }
+                };
+                accum_row(a, b, row, table, &mut scratch, probe);
+                // Column-index sorting: the paper's in-block bitonic network.
+                bitonic_sort_by_key(&mut scratch, probe);
+                probe.access(Region::RptC, row, 4, Kind::Read);
+                for (o, &(c, v)) in scratch.iter().enumerate() {
+                    probe.access(Region::ColC, start + o, 4, Kind::Write);
+                    probe.access(Region::ValC, start + o, 8, Kind::Write);
+                    col[start + o] = c;
+                    val[start + o] = v;
+                }
+                if spec.table_size.is_none() {
+                    table_holder = None;
+                }
+            }
+        }
+    }
+    Csr::new_unchecked(a.n_rows, b.n_cols, rpt, col, val)
+}
+
+/// Statistics-only traced run: emits the memory trace of every
+/// `every`-th thread block and **skips the functional work of the
+/// rest** (their output-row sizes are approximated by their IP upper
+/// bound, which only shifts unsampled output addresses). Use when only
+/// the [`crate::sim::SimReport`] is needed — the fast parallel
+/// [`super::multiply`] provides the actual product. `every = 1` traces
+/// every block (identical trace to [`multiply_traced`]). Runs at the
+/// process-default [`EngineConfig`], like the fast path it samples.
+pub fn multiply_traced_stats<P: Probe>(a: &Csr, b: &Csr, probe: &mut P, every: usize) {
+    let cfg = EngineConfig::default();
+    assert_eq!(a.n_cols, b.n_rows, "dimension mismatch");
+    let (sym_threshold, num_threshold) = effective_thresholds(&cfg, b.n_cols);
+    let every = every.max(1);
+    // IP for *all* rows (cheap, parallel) — grouping must be exact.
+    let ip = intermediate_products(a, b);
+    // Grouping-phase trace for sampled blocks only.
+    let n_ip_blocks = a.n_rows.div_ceil(IP_BLOCK_ROWS);
+    for blk in 0..n_ip_blocks {
+        if blk % every != 0 {
+            continue;
+        }
+        probe.begin_block(blk, Phase::Grouping);
+        let lo = blk * IP_BLOCK_ROWS;
+        let hi = ((blk + 1) * IP_BLOCK_ROWS).min(a.n_rows);
+        for i in lo..hi {
+            probe.access(Region::RptA, i, 4, Kind::Read);
+            probe.access(Region::RptA, i + 1, 4, Kind::Read);
+            for (jo, &c) in a.row(i).0.iter().enumerate() {
+                probe.access(Region::ColA, a.rpt[i] + jo, 4, Kind::Read);
+                probe.indirect_range(Region::RptB, c as usize, &[], 0, 0);
+                probe.compute(2);
+            }
+            probe.access(Region::IpCount, i, 8, Kind::Write);
+            probe.access(Region::GroupCtr, crate::spgemm::ip::group_index_for_ip(ip[i]), 4, Kind::Atomic);
+            probe.compute(4);
+        }
+    }
+    let grouping = Grouping::build(&ip);
+    let mut next_block = n_ip_blocks;
+
+    // Allocation phase: real work on sampled blocks (bitmap or hash,
+    // per the plan's kernel rule), IP bound for the rest (address
+    // generation only; `exact` remembers which is which — the
+    // accumulator decision below must never run on a bound).
+    let mut row_nnz = vec![0u32; a.n_rows];
+    let mut exact = vec![false; a.n_rows];
+    let mut bitmap_holder: Option<RowCounter> = None;
+    for g in 0..4 {
+        let spec = &GROUP_SPECS[g];
+        let rows = grouping.group_rows(g);
+        let mut table_holder: Option<HashTable> = spec.table_size.map(|s| HashTable::new(s, TableLoc::Shared));
+        for chunk in rows.chunks(spec.rows_per_block()) {
+            let sampled = next_block % every == 0;
+            if sampled {
+                probe.begin_block(next_block, Phase::Allocation);
+            }
+            next_block += 1;
+            for &row in chunk {
+                let row = row as usize;
+                if !sampled {
+                    row_nnz[row] = ip[row].min(b.n_cols as u64) as u32;
+                    continue;
+                }
+                exact[row] = true;
+                probe.access(Region::Map, row, 4, Kind::Read);
+                if select_symbolic(a.row_nnz(row), ip[row], b.n_cols, sym_threshold) == SymbolicKind::Bitmap {
+                    let counter = bitmap_holder.get_or_insert_with(|| RowCounter::new(b.n_cols));
+                    counter.clear();
+                    row_nnz[row] = alloc_row_bitmap_traced(a, b, row, counter, probe);
+                    probe.access(Region::RptC, row + 1, 4, Kind::Write);
+                    continue;
+                }
+                let table = match &mut table_holder {
+                    Some(t) => {
+                        t.clear();
+                        t
+                    }
+                    None => {
+                        table_holder = Some(HashTable::new(global_table_size(ip[row]), TableLoc::Global));
+                        table_holder.as_mut().unwrap()
+                    }
+                };
+                row_nnz[row] = alloc_row(a, b, row, table, probe);
+                if spec.table_size.is_none() {
+                    table_holder = None;
+                }
+                probe.access(Region::RptC, row + 1, 4, Kind::Write);
+            }
+        }
+    }
+    let mut rpt = vec![0usize; a.n_rows + 1];
+    for i in 0..a.n_rows {
+        rpt[i + 1] = rpt[i] + row_nnz[i] as usize;
+    }
+
+    // Accumulation phase: sampled blocks only.
+    let mut scratch: Vec<(u32, f64)> = Vec::new();
+    let mut spa_holder: Option<DenseAccumulator> = None;
+    // Untraced counting table for rows whose allocation block was
+    // unsampled: their `row_nnz` is an IP upper bound, good enough for
+    // output addresses but not for the accumulator decision — deciding
+    // SPA-vs-hash on a bound would trace the wrong path entirely.
+    let mut count_table = HashTable::new(1024, TableLoc::Global);
+    for g in 0..4 {
+        let spec = &GROUP_SPECS[g];
+        let rows = grouping.group_rows(g);
+        let mut table_holder: Option<HashTable> = spec.table_size.map(|s| HashTable::new(s, TableLoc::Shared));
+        for chunk in rows.chunks(spec.rows_per_block()) {
+            let sampled = next_block % every == 0;
+            if sampled {
+                probe.begin_block(next_block, Phase::Accumulation);
+            }
+            next_block += 1;
+            if !sampled {
+                continue;
+            }
+            for &row in chunk {
+                let row = row as usize;
+                probe.access(Region::Map, row, 4, Kind::Read);
+                let start = rpt[row];
+                let bound = ip[row].min(b.n_cols as u64) as usize;
+                let n_out = if exact[row] {
+                    row_nnz[row] as usize
+                } else if bound as f64 <= num_threshold * b.n_cols as f64 {
+                    // The IP bound already rules SPA out (n_out ≤ bound):
+                    // no need for the exact recount on sparse rows.
+                    bound
+                } else {
+                    count_table.reset_with_capacity(global_table_size(bound as u64));
+                    alloc_row(a, b, row, &mut count_table, &mut NullProbe) as usize
+                };
+                // SPA rows: streamed accumulation, sequential sorted
+                // gather — same decision as the fast path's plan.
+                if traced_row_uses_spa(a, b, row, n_out, num_threshold) {
+                    let spa = spa_holder.get_or_insert_with(|| DenseAccumulator::new(b.n_cols));
+                    spa.clear();
+                    accum_row_spa_traced(a, b, row, spa, &mut scratch, probe);
+                    probe.access(Region::RptC, row, 4, Kind::Read);
+                    for (o, &(_c, _v)) in scratch.iter().enumerate() {
+                        probe.access(Region::ColC, start + o, 4, Kind::Write);
+                        probe.access(Region::ValC, start + o, 8, Kind::Write);
+                    }
+                    continue;
+                }
+                let table = match &mut table_holder {
+                    Some(t) => {
+                        t.clear();
+                        t
+                    }
+                    None => {
+                        table_holder = Some(HashTable::new(global_table_size(ip[row]), TableLoc::Global));
+                        table_holder.as_mut().unwrap()
+                    }
+                };
+                accum_row(a, b, row, table, &mut scratch, probe);
+                bitonic_sort_by_key(&mut scratch, probe);
+                probe.access(Region::RptC, row, 4, Kind::Read);
+                for (o, &(_c, _v)) in scratch.iter().enumerate() {
+                    probe.access(Region::ColC, start + o, 4, Kind::Write);
+                    probe.access(Region::ValC, start + o, 8, Kind::Write);
+                }
+                if spec.table_size.is_none() {
+                    table_holder = None;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{dense_pair, random_csr};
+    use super::super::{multiply, symbolic, symbolic_cfg};
+    use super::*;
+    use crate::sim::probe::CountingProbe;
+    use crate::spgemm::reference::spgemm_reference;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn two_phase_equals_single_pass_exactly() {
+        let mut rng = Pcg32::seeded(321);
+        let a = random_csr(&mut rng, 300, 250, 0.03);
+        let b = random_csr(&mut rng, 250, 280, 0.02);
+        // bit-for-bit: same structure, same value sums in the same order
+        assert_eq!(multiply(&a, &b), multiply_single_pass(&a, &b));
+    }
+
+    #[test]
+    fn traced_equals_fast_path() {
+        let mut rng = Pcg32::seeded(77);
+        let a = random_csr(&mut rng, 200, 150, 0.02);
+        let b = random_csr(&mut rng, 150, 180, 0.03);
+        let fast = multiply(&a, &b);
+        let mut probe = CountingProbe::default();
+        let traced = multiply_traced(&a, &b, &mut probe);
+        assert_eq!(fast, traced);
+        assert!(probe.indirect_ranges > 0);
+        assert!(probe.shared > 0);
+    }
+
+    #[test]
+    fn exercises_all_four_groups() {
+        // Build a matrix whose rows produce IPs in every group: B dense-ish
+        // rows amplify.
+        let mut rng = Pcg32::seeded(5);
+        let n = 600;
+        let mut coo = crate::sparse::Coo::new(n, n);
+        // row 0: 1 nnz (group 0); row 1: 40 nnz (g1); row 2: 300 nnz (g2 via
+        // IP multiplication); rows 3..: heavy hub rows for group 3.
+        for j in 0..1 {
+            coo.push(0, j * 7 % n, 1.0);
+        }
+        for j in 0..40 {
+            coo.push(1, (j * 13) % n, 1.0);
+        }
+        for j in 0..300 {
+            coo.push(2, (j * 2 + 1) % n, 1.0);
+        }
+        for r in 3..40 {
+            for j in 0..r * 20 % n {
+                coo.push(r, (j * 3 + r) % n, 1.0);
+            }
+        }
+        for r in 40..n {
+            for _ in 0..6 {
+                coo.push(r, rng.below_usize(n), 1.0);
+            }
+        }
+        let a = coo.to_csr();
+        let ip = intermediate_products(&a, &a);
+        let grouping = Grouping::build(&ip);
+        let non_empty = (0..4).filter(|&g| !grouping.group_rows(g).is_empty()).count();
+        assert!(non_empty >= 3, "expected ≥3 groups populated, got {non_empty}");
+        let c = multiply(&a, &a);
+        let r = spgemm_reference(&a, &a);
+        assert!(c.approx_eq(&r, 1e-10));
+        // and the seed baseline still agrees on the same stress input
+        assert_eq!(c, multiply_single_pass(&a, &a));
+    }
+
+    #[test]
+    fn traced_spa_rows_equal_fast_path() {
+        // Dense product: the default threshold picks SPA on most rows,
+        // and the traced path must still match the fast path exactly.
+        let (a, b) = dense_pair(88, 72);
+        let plan = symbolic(&a, &b);
+        assert!(
+            plan.kind_rows()[AccumKind::Spa.index()] > 0,
+            "test needs SPA rows at the default threshold"
+        );
+        let fast = multiply(&a, &b);
+        let mut probe = CountingProbe::default();
+        let traced = multiply_traced(&a, &b, &mut probe);
+        assert_eq!(fast, traced);
+    }
+
+    #[test]
+    fn traced_bitmap_symbolic_is_streaming_and_exact() {
+        // Same numeric threshold both ways, only the symbolic kernel
+        // flips: outputs must stay bit-identical, and the bitmap run
+        // must drop the allocation phase's indirect ranges (it reads B
+        // as plain streamed loads — AIA-ineligible).
+        let (a, b) = dense_pair(19, 90);
+        let bitmap = EngineConfig { spa_threshold: 0.25, symbolic_threshold: Some(0.0) };
+        let hash = EngineConfig { spa_threshold: 0.25, symbolic_threshold: Some(8.0) };
+        let mut probe_b = CountingProbe::default();
+        let mut probe_h = CountingProbe::default();
+        let c_b = multiply_traced_cfg(&a, &b, &mut probe_b, &bitmap);
+        let c_h = multiply_traced_cfg(&a, &b, &mut probe_h, &hash);
+        assert_eq!(c_b, c_h, "the symbolic kernel must never change the product");
+        assert_eq!(c_b, multiply(&a, &b));
+        assert!(
+            probe_b.indirect_ranges < probe_h.indirect_ranges,
+            "bitmap symbolic rows must not emit indirect ranges (bitmap={} hash={})",
+            probe_b.indirect_ranges,
+            probe_h.indirect_ranges
+        );
+        // The forced-bitmap plan actually had bitmap rows to trace.
+        let plan = symbolic_cfg(&a, &b, &bitmap);
+        assert!(plan.symbolic_kind_rows()[SymbolicKind::Bitmap.index()] > 0);
+    }
+}

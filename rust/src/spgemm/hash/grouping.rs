@@ -1,19 +1,23 @@
 //! Row-grouping phase (paper §III-B): logarithmic binning of rows by
 //! intermediate-product count into four groups, each with its own thread
 //! assignment strategy, block size, and hash-table size (Table I), plus
-//! the **accumulator-selection model** the numeric phase is guided by.
+//! the **row-kernel selection model** both engine phases are guided by.
 //!
 //! The matrix is *not* reordered; `Map` holds row ids sorted by group
 //! (stable within a group), exactly the paper's `Map[i]` indirection.
 //!
-//! # Accumulator selection
+//! # Row-kernel selection
 //!
 //! Table I fixes *where the hash table lives* per IP bin; it does not
-//! decide *whether a hash table is the right accumulator at all*. Once
-//! the symbolic phase has exact per-row output sizes, every row can be
-//! classified by [`select_accumulator`] into one of three
-//! [`AccumKind`]s — the decision the plan bakes into each numeric bin
-//! (see `engine::SymbolicPlan::bins`):
+//! decide *whether a hash table is the right kernel at all*. Every row
+//! gets a [`RowKernel`] pair at plan time — a symbolic counting kernel
+//! and a numeric accumulator — and the Table-I bins carry the pair end
+//! to end (see `engine::SymbolicPlan::bins`). The two halves are
+//! decided from different information, because they run at different
+//! points of the pipeline:
+//!
+//! **Numeric** ([`select_accumulator`], [`AccumKind`]) — decided from
+//! the symbolic phase's *exact* per-row output sizes:
 //!
 //! | kind | chosen when | why |
 //! |------|-------------|-----|
@@ -21,9 +25,27 @@
 //! | [`AccumKind::Spa`] | `nnz(C_i) / n_cols > spa_threshold` | dense output row: a dense accumulator streams `vals[col] += v` with zero probe chains and a sequential gather (Nagasaka et al., arXiv:1804.01698) |
 //! | [`AccumKind::Hash`] | otherwise | sparse output row: Algorithm 4 linear probing, Table I sizing |
 //!
-//! The threshold is tunable (`--spa-threshold`, default
-//! [`DEFAULT_SPA_THRESHOLD`]); `0.0` forces SPA on every multi-entry
-//! row, any value ≥ 1.0 disables SPA (the comparison is strict, and
+//! **Symbolic** ([`select_symbolic`], [`SymbolicKind`]) — exact sizes
+//! do not exist before the symbolic phase, so the decision comes from
+//! the IP *upper bound* instead (capped at `n_cols`, since a row can
+//! never have more uniques than output columns):
+//!
+//! | kind | chosen when | why |
+//! |------|-------------|-----|
+//! | [`SymbolicKind::Trivial`] | `IP_i ≤ 1` or row of A has ≤ 1 entry | collisions impossible — the count *is* `IP_i`, no kernel runs |
+//! | [`SymbolicKind::Bitmap`] | `min(IP_i, n_cols) / n_cols > threshold` | potentially dense row: a generation-stamped dense bitmap ([`super::table::RowCounter`]) counts uniques with zero probe chains — streaming, AIA-ineligible, exactly like the numeric SPA |
+//! | [`SymbolicKind::Hash`] | otherwise | sparse bound: Algorithms 2–3 symbolic hash inserts, Table I sizing |
+//!
+//! Both halves share one threshold knob (`--spa-threshold`). Its
+//! default is **derived from the simulated device's cache geometry**
+//! ([`crate::sim::DeviceConfig::dense_row_threshold_base`], the
+//! crossover where hash probing's scattered extra traffic outweighs a
+//! dense kernel's sequential scan — [`DEFAULT_SPA_THRESHOLD`] is that
+//! derivation evaluated for the H200's 32-byte sectors), and the
+//! engine scales it up when a dense row stops fitting in the
+//! per-resident-block L2 share. Both comparisons are strict, so `0.0`
+//! forces the dense kernel on every non-trivial row and any value
+//! ≥ 1.0 disables it (the symbolic bound is capped at `n_cols`, and
 //! `nnz(C_i)` can never exceed `n_cols`).
 
 use super::super::ip::group_index_for_ip;
@@ -77,12 +99,81 @@ impl AccumKind {
     pub const ALL: [AccumKind; 3] = [AccumKind::ScaledCopy, AccumKind::Hash, AccumKind::Spa];
 }
 
-/// Default SPA density threshold: a row whose output is more than a
-/// quarter dense stops hashing. At load factor 0.5 a Table-I hash row
-/// touches `2·nnz(C_i)` scattered slots plus probe chains; the SPA
-/// touches `nnz(C_i)` streamed slots plus an `n_cols` sequential scan,
-/// so the crossover sits near `nnz(C_i) ≈ n_cols/4` on the simulated
-/// device (see `benches/accumulator.rs` for the measured sweep).
+/// Symbolic-phase counting kernel for one output row, chosen at plan
+/// time from the IP *upper bound* (exact sizes do not exist yet — see
+/// [`select_symbolic`] and the module-level decision table).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SymbolicKind {
+    /// `IP_i ≤ 1` or single-A-entry row: collisions are impossible, the
+    /// unique count *is* `IP_i` — no counting kernel runs at all.
+    Trivial,
+    /// Symbolic hash inserts (Algorithms 2–3), sized per Table I.
+    Hash,
+    /// Generation-stamped dense bitmap ([`super::table::RowCounter`]):
+    /// one occupancy word per output column, O(1) clear, first-touch
+    /// counting with zero probe chains. Streaming / AIA-ineligible,
+    /// exactly like the numeric SPA.
+    Bitmap,
+}
+
+impl SymbolicKind {
+    /// Stable ordinal for per-kind arrays (`PhaseTimes::symbolic_kind_s`).
+    pub fn index(self) -> usize {
+        match self {
+            SymbolicKind::Trivial => 0,
+            SymbolicKind::Hash => 1,
+            SymbolicKind::Bitmap => 2,
+        }
+    }
+
+    /// Inverse of [`SymbolicKind::index`]. Panics on out-of-range input.
+    pub fn from_index(i: usize) -> SymbolicKind {
+        match i {
+            0 => SymbolicKind::Trivial,
+            1 => SymbolicKind::Hash,
+            2 => SymbolicKind::Bitmap,
+            _ => panic!("SymbolicKind index {i} out of range"),
+        }
+    }
+
+    /// Stable lowercase name for metrics keys, bench meta, and logs.
+    pub fn name(self) -> &'static str {
+        match self {
+            SymbolicKind::Trivial => "trivial",
+            SymbolicKind::Hash => "hash",
+            SymbolicKind::Bitmap => "bitmap",
+        }
+    }
+
+    pub const ALL: [SymbolicKind; 3] = [SymbolicKind::Trivial, SymbolicKind::Hash, SymbolicKind::Bitmap];
+}
+
+/// The kernel pair the plan selects for one row: how the symbolic phase
+/// counts it and how the numeric phase accumulates it. Carried by every
+/// `engine::NumericBin`, so the pair survives from the table primitives
+/// through the batch pipeline to the metrics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct RowKernel {
+    pub symbolic: SymbolicKind,
+    pub numeric: AccumKind,
+}
+
+impl RowKernel {
+    /// Short label for schedules and metrics, e.g. `bitmap/spa`.
+    pub fn label(&self) -> String {
+        format!("{}/{}", self.symbolic.name(), self.numeric.name())
+    }
+}
+
+/// Default dense-kernel density threshold: the cache-geometry
+/// derivation of [`crate::sim::DeviceConfig::dense_row_threshold_base`]
+/// evaluated for the simulated H200's 32-byte sectors. At load factor
+/// 0.5 a Table-I hash row touches `2·nnz(C_i)` scattered slots plus
+/// probe chains; the dense kernels touch `nnz(C_i)` streamed slots plus
+/// a sequential scan costing one line per `line_bytes / 4` columns, so
+/// the crossover sits at `2·4 / line_bytes = 0.25` (see
+/// `benches/accumulator.rs` for the measured sweep, and the equality
+/// test below pinning the constant to the derivation).
 pub const DEFAULT_SPA_THRESHOLD: f64 = 0.25;
 
 /// Pick the numeric accumulator for one output row (module-level
@@ -100,6 +191,25 @@ pub fn select_accumulator(a_row_nnz: usize, row_nnz: usize, n_cols: usize, spa_t
         AccumKind::Spa
     } else {
         AccumKind::Hash
+    }
+}
+
+/// Pick the symbolic counting kernel for one row (module-level decision
+/// table). Unlike [`select_accumulator`] this runs *before* the
+/// symbolic phase, so the decision comes from the IP upper bound `ip`,
+/// capped at `n_cols` (unique count can never exceed the output
+/// width). The comparison is strict on the capped bound, mirroring the
+/// numeric rule's boundary semantics: `0.0` forces the bitmap on every
+/// non-trivial row, any threshold ≥ 1.0 disables it.
+pub fn select_symbolic(a_row_nnz: usize, ip: u64, n_cols: usize, threshold: f64) -> SymbolicKind {
+    if ip <= 1 || a_row_nnz <= 1 {
+        return SymbolicKind::Trivial;
+    }
+    let bound = ip.min(n_cols as u64);
+    if bound as f64 > threshold * n_cols as f64 {
+        SymbolicKind::Bitmap
+    } else {
+        SymbolicKind::Hash
     }
 }
 
@@ -293,5 +403,51 @@ mod tests {
             assert_eq!(AccumKind::from_index(k.index()), k);
         }
         assert_eq!(AccumKind::Spa.name(), "spa");
+    }
+
+    #[test]
+    fn symbolic_kind_index_roundtrip() {
+        for k in SymbolicKind::ALL {
+            assert_eq!(SymbolicKind::from_index(k.index()), k);
+        }
+        assert_eq!(SymbolicKind::Bitmap.name(), "bitmap");
+        let rk = RowKernel { symbolic: SymbolicKind::Bitmap, numeric: AccumKind::Spa };
+        assert_eq!(rk.label(), "bitmap/spa");
+    }
+
+    #[test]
+    fn symbolic_decision_table() {
+        // Trivial short-circuits: IP ≤ 1 or a single A entry.
+        assert_eq!(select_symbolic(1, 1000, 1000, 0.25), SymbolicKind::Trivial);
+        assert_eq!(select_symbolic(8, 1, 1000, 0.25), SymbolicKind::Trivial);
+        assert_eq!(select_symbolic(8, 0, 1000, 0.25), SymbolicKind::Trivial);
+        // Sparse bound hashes, dense bound takes the bitmap.
+        assert_eq!(select_symbolic(8, 100, 1000, 0.25), SymbolicKind::Hash);
+        assert_eq!(select_symbolic(8, 600, 1000, 0.25), SymbolicKind::Bitmap);
+        // The bound is capped at n_cols before comparing.
+        assert_eq!(select_symbolic(8, 50_000, 1000, 0.25), SymbolicKind::Bitmap);
+    }
+
+    #[test]
+    fn symbolic_threshold_boundaries() {
+        // 0.0 forces the bitmap on every non-trivial row...
+        assert_eq!(select_symbolic(2, 2, 1_000_000, 0.0), SymbolicKind::Bitmap);
+        // ...and ≥ 1.0 disables it even when IP exceeds the width (the
+        // capped bound can never beat n_cols under a strict compare).
+        assert_eq!(select_symbolic(2, 1000, 1000, 1.0), SymbolicKind::Hash);
+        assert_eq!(select_symbolic(2, 50_000, 1000, 1.0), SymbolicKind::Hash);
+        assert_eq!(select_symbolic(2, 1000, 1000, 2.0), SymbolicKind::Hash);
+        // Exactly at the threshold stays on the hash path (strict >).
+        assert_eq!(select_symbolic(2, 250, 1000, 0.25), SymbolicKind::Hash);
+        assert_eq!(select_symbolic(2, 251, 1000, 0.25), SymbolicKind::Bitmap);
+    }
+
+    #[test]
+    fn default_threshold_matches_cache_geometry_derivation() {
+        // The constant is the H200 instantiation of the cache-geometry
+        // crossover — if the device's sector size changes, this pins
+        // the drift.
+        let dev = crate::sim::DeviceConfig::h200_scaled();
+        assert_eq!(DEFAULT_SPA_THRESHOLD, dev.dense_row_threshold_base());
     }
 }

@@ -1,12 +1,14 @@
 //! Hash-based multi-phase SpGEMM (paper §III): row grouping (Table I),
 //! PWPR/TBPR thread assignment, the Algorithm-4 linear-probing hash
 //! table, the explicit symbolic (size) / numeric (value) phases with
-//! plan-guided accumulator selection ([`AccumKind`]: scaled-copy /
-//! hash / dense-SPA, decided per row at plan time from the exact
-//! `nnz(C_i)`), and the plan-reuse handle ([`PlannedProduct`]) that
-//! amortises symbolic analysis across the numeric fills of iterative
-//! workloads — see `DESIGN.md` §"Two-phase hash engine", §"Plan reuse",
-//! and §"Accumulator selection".
+//! plan-guided **row-kernel selection** (the [`RowKernel`] pair:
+//! [`SymbolicKind`] trivial / hash / bitmap counting decided from the
+//! IP upper bound, [`AccumKind`] scaled-copy / hash / dense-SPA decided
+//! from the exact `nnz(C_i)`), and the plan-reuse handle
+//! ([`PlannedProduct`]) that amortises symbolic analysis across the
+//! numeric fills of iterative workloads — see `DESIGN.md` §"Two-phase
+//! hash engine", §"Plan reuse", §"Accumulator selection", and
+//! §"Symbolic kernel selection".
 
 pub mod engine;
 pub mod grouping;
@@ -16,9 +18,12 @@ pub mod table;
 
 pub use engine::{
     default_spa_threshold, multiply, multiply_cfg, multiply_single_pass, multiply_timed, multiply_timed_cfg,
-    multiply_traced, numeric, numeric_bin_into, numeric_timed, set_default_spa_threshold, symbolic, symbolic_cfg,
-    EngineConfig, NumericBin, SymbolicPlan,
+    multiply_traced, multiply_traced_cfg, numeric, numeric_bin_into, numeric_timed, set_default_spa_threshold,
+    symbolic, symbolic_cfg, EngineConfig, NumericBin, SymbolicPlan,
 };
-pub use grouping::{select_accumulator, AccumKind, Grouping, Strategy, DEFAULT_SPA_THRESHOLD, GROUP_SPECS};
+pub use grouping::{
+    select_accumulator, select_symbolic, AccumKind, Grouping, RowKernel, Strategy, SymbolicKind,
+    DEFAULT_SPA_THRESHOLD, GROUP_SPECS,
+};
 pub use plan::{pair_key, pair_key_from_hashes, PlannedProduct};
-pub use table::DenseAccumulator;
+pub use table::{DenseAccumulator, RowCounter};

@@ -14,11 +14,14 @@
 //! from fills so executors can account grouping/symbolic/numeric wall
 //! time exactly as [`super::engine::multiply_timed`] does.
 //!
-//! Because the accumulator decision is part of the plan
-//! ([`SymbolicPlan::bins`] carries each Table-I bin split by
-//! [`super::grouping::AccumKind`]), a reused fill also reuses the
-//! hash/SPA/scaled-copy selection — iterative callers pay the density
-//! analysis once, at plan time.
+//! Because the row-kernel decision is part of the plan
+//! ([`SymbolicPlan::bins`] carries each Table-I bin split by the
+//! ([`super::grouping::SymbolicKind`], [`super::grouping::AccumKind`])
+//! pair), a reused fill also reuses the hash/SPA/scaled-copy selection
+//! — iterative callers pay the density analysis once, at plan time —
+//! and the plan records which counting kernel produced each row's size
+//! (`plan_times` keeps the per-kernel symbolic split alongside the
+//! grouping/symbolic totals).
 //!
 //! Callers that manage whole batches (plan product *k+1* while product
 //! *k* fills, stream-schedule the per-kind Table-I bins, dispatch
@@ -59,13 +62,22 @@ impl PlannedProduct {
     /// [`PlannedProduct::plan`] with an explicit [`EngineConfig`] — the
     /// SPA threshold is baked into the plan and reused by every fill.
     pub fn plan_cfg(a: &Csr, b: &Csr, cfg: &EngineConfig) -> PlannedProduct {
+        PlannedProduct::plan_cfg_hashed(a, b, cfg, a.structure_hash(), b.structure_hash())
+    }
+
+    /// [`PlannedProduct::plan_cfg`] with the operands' structure hashes
+    /// precomputed by the caller — cache layers already hold them as
+    /// keys, so this skips a second O(nnz) hashing pass. The hashes
+    /// must be `a.structure_hash()`/`b.structure_hash()` of these exact
+    /// operands.
+    pub(crate) fn plan_cfg_hashed(a: &Csr, b: &Csr, cfg: &EngineConfig, a_hash: u64, b_hash: u64) -> PlannedProduct {
         let (plan, plan_times) = symbolic_timed(a, b, cfg);
         PlannedProduct {
             plan,
             a_shape: (a.n_rows, a.n_cols),
             b_shape: (b.n_rows, b.n_cols),
-            a_hash: a.structure_hash(),
-            b_hash: b.structure_hash(),
+            a_hash,
+            b_hash,
             plan_times,
         }
     }
@@ -86,7 +98,13 @@ impl PlannedProduct {
 
     /// [`PlannedProduct::matches`] against precomputed shapes and
     /// structure hashes — no operand scan.
-    pub fn matches_fingerprint(&self, a_shape: (usize, usize), b_shape: (usize, usize), a_hash: u64, b_hash: u64) -> bool {
+    pub fn matches_fingerprint(
+        &self,
+        a_shape: (usize, usize),
+        b_shape: (usize, usize),
+        a_hash: u64,
+        b_hash: u64,
+    ) -> bool {
         self.a_shape == a_shape && self.b_shape == b_shape && self.a_hash == a_hash && self.b_hash == b_hash
     }
 

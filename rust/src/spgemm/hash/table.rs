@@ -323,6 +323,86 @@ impl DenseAccumulator {
     }
 }
 
+/// Dense bitmap unique-counter for plan-guided *symbolic* rows — the
+/// counting counterpart of [`DenseAccumulator`]: one generation-stamped
+/// occupancy word per output column, O(1) clear, no values at all (the
+/// symbolic phase only needs the unique count).
+///
+/// On the GPU the bitmap lives in global memory (one array per thread
+/// block); a first touch is an `atomicCAS` on the flag word whose
+/// success feeds a per-block unique counter, so — unlike the hash
+/// kernel — counting never probes a chain and never scans a table: the
+/// accesses are column-indexed into one contiguous array. That is why
+/// the simulator prices bitmap rows through [`Region::SpaFlags`]
+/// accesses and plain streamed B-row loads instead of
+/// [`Probe::indirect_range`] (bitmap symbolic rows are AIA-ineligible,
+/// mirroring the numeric SPA's pricing).
+pub struct RowCounter {
+    stamps: Vec<u32>,
+    stamp: u32,
+    unique: usize,
+}
+
+impl RowCounter {
+    /// Counter for output rows of width `n_cols`.
+    pub fn new(n_cols: usize) -> RowCounter {
+        RowCounter { stamps: vec![0; n_cols], stamp: 1, unique: 0 }
+    }
+
+    /// Output width this counter covers.
+    pub fn width(&self) -> usize {
+        self.stamps.len()
+    }
+
+    /// Distinct columns counted since the last [`RowCounter::clear`].
+    pub fn unique(&self) -> usize {
+        self.unique
+    }
+
+    /// Reset for the next row: O(1) generation bump (full re-init only
+    /// on stamp wraparound).
+    pub fn clear(&mut self) {
+        self.unique = 0;
+        if self.stamp == u32::MAX {
+            self.stamps.fill(0);
+            self.stamp = 1;
+        } else {
+            self.stamp += 1;
+        }
+    }
+
+    /// Count `col`, returning `true` on first touch (fast functional
+    /// path, no probe events).
+    #[inline]
+    pub fn count(&mut self, col: u32) -> bool {
+        let p = col as usize;
+        if self.stamps[p] != self.stamp {
+            self.stamps[p] = self.stamp;
+            self.unique += 1;
+            return true;
+        }
+        false
+    }
+
+    /// [`RowCounter::count`] with the GPU access pattern emitted: an
+    /// occupancy-flag read, and on first touch the flag CAS (whose
+    /// success is the count — no gather scan ever runs). All accesses
+    /// are column-indexed into the contiguous flag array: no probe
+    /// chain, no indirection.
+    pub fn count_traced<P: Probe>(&mut self, col: u32, probe: &mut P) -> bool {
+        let p = col as usize;
+        probe.access(Region::SpaFlags, p, 4, Kind::Read);
+        probe.compute(1); // the stamp compare
+        if self.stamps[p] != self.stamp {
+            self.stamps[p] = self.stamp;
+            self.unique += 1;
+            probe.access(Region::SpaFlags, p, 4, Kind::Atomic);
+            return true;
+        }
+        false
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -440,6 +520,49 @@ mod tests {
         let mut out = Vec::new();
         spa.gather_list(&mut out);
         assert_eq!(out, vec![(2, 0.5)], "stale generation must not leak");
+    }
+
+    #[test]
+    fn row_counter_counts_uniques_like_symbolic_hash() {
+        // Same column stream through the hash table's symbolic inserts
+        // and the bitmap counter: unique counts must agree exactly.
+        let stream = [3u32, 7, 3, 0, 7, 3, 12, 0];
+        let mut t = HashTable::new(16, TableLoc::Shared);
+        let mut c = RowCounter::new(16);
+        for &col in &stream {
+            let new_t = t.insert_symbolic(col, &mut NullProbe);
+            let new_c = c.count(col);
+            assert_eq!(new_t, new_c, "first-touch detection must agree on col {col}");
+        }
+        assert_eq!(c.unique(), t.unique);
+        assert_eq!(c.unique(), 4);
+        assert_eq!(c.width(), 16);
+    }
+
+    #[test]
+    fn row_counter_clear_is_generation_bump() {
+        let mut c = RowCounter::new(8);
+        assert!(c.count(2));
+        assert!(!c.count(2));
+        assert_eq!(c.unique(), 1);
+        c.clear();
+        assert_eq!(c.unique(), 0);
+        assert!(c.count(2), "stale generation must not leak");
+        assert_eq!(c.unique(), 1);
+    }
+
+    #[test]
+    fn row_counter_traced_streams_not_probes() {
+        let mut c = RowCounter::new(32);
+        let mut p = CountingProbe::default();
+        assert!(c.count_traced(5, &mut p));
+        assert!(!c.count_traced(5, &mut p));
+        // First touch: flag read + flag CAS; repeat: flag read only.
+        // No shared-memory events, no indirection, no value traffic.
+        assert_eq!(p.accesses, 3);
+        assert_eq!(p.atomic, 1);
+        assert_eq!(p.shared, 0);
+        assert_eq!(p.indirect_ranges, 0);
     }
 
     #[test]

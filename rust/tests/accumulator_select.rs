@@ -36,11 +36,11 @@ fn property_accumulator_paths_bit_identical_rmat() {
         let mut rng = Pcg32::seeded(g.rng.next_u64());
         let a = rmat(n, nnz, params, &mut rng);
         let oracle = spgemm_reference(&a, &a);
-        let baseline = hash::multiply_cfg(&a, &a, &EngineConfig { spa_threshold: 2.0 });
+        let baseline = hash::multiply_cfg(&a, &a, &EngineConfig { spa_threshold: 2.0, symbolic_threshold: None });
         assert_eq!(baseline.rpt, oracle.rpt, "hash-only structure vs oracle");
         assert!(baseline.approx_eq(&oracle, 1e-10), "hash-only values vs oracle");
         for thr in THRESHOLDS {
-            let c = hash::multiply_cfg(&a, &a, &EngineConfig { spa_threshold: thr });
+            let c = hash::multiply_cfg(&a, &a, &EngineConfig { spa_threshold: thr, symbolic_threshold: None });
             assert_eq!(c, baseline, "threshold {thr}: all accumulator paths must agree bit-for-bit");
         }
     });
@@ -57,9 +57,9 @@ fn property_accumulator_paths_bit_identical_structured() {
             2 => ("circuit", structured::circuit(n, &mut rng)),
             _ => ("economics", structured::economics(n, &mut rng)),
         };
-        let baseline = hash::multiply_cfg(&a, &a, &EngineConfig { spa_threshold: 2.0 });
+        let baseline = hash::multiply_cfg(&a, &a, &EngineConfig { spa_threshold: 2.0, symbolic_threshold: None });
         for thr in THRESHOLDS {
-            let c = hash::multiply_cfg(&a, &a, &EngineConfig { spa_threshold: thr });
+            let c = hash::multiply_cfg(&a, &a, &EngineConfig { spa_threshold: thr, symbolic_threshold: None });
             assert_eq!(c, baseline, "{name} at threshold {thr}: paths must agree bit-for-bit");
         }
     });
@@ -70,12 +70,12 @@ fn threshold_zero_forces_spa_threshold_one_disables() {
     let mut rng = Pcg32::seeded(77);
     let a = dense_random(&mut rng, 96, 0.4);
     // 0.0: every multi-entry row with output goes SPA; hash bins vanish.
-    let plan = hash::symbolic_cfg(&a, &a, &EngineConfig { spa_threshold: 0.0 });
+    let plan = hash::symbolic_cfg(&a, &a, &EngineConfig { spa_threshold: 0.0, symbolic_threshold: None });
     assert!(plan.bins.iter().all(|b| b.kind != AccumKind::Hash), "0.0 must force SPA");
     assert!(plan.kind_rows()[AccumKind::Spa.index()] > 0, "0.0 must produce SPA bins");
     // 1.0 and above: SPA disabled even on fully dense rows (strict >).
     for thr in [1.0, 4.0] {
-        let plan = hash::symbolic_cfg(&a, &a, &EngineConfig { spa_threshold: thr });
+        let plan = hash::symbolic_cfg(&a, &a, &EngineConfig { spa_threshold: thr, symbolic_threshold: None });
         assert!(
             plan.bins.iter().all(|b| b.kind != AccumKind::Spa),
             "threshold {thr} must disable SPA"
@@ -84,7 +84,7 @@ fn threshold_zero_forces_spa_threshold_one_disables() {
     // Scaled-copy rows stay scaled-copy regardless of the threshold.
     let d = Csr::from_diag(&[1.5; 96]);
     for thr in [0.0, 0.25, 2.0] {
-        let plan = hash::symbolic_cfg(&d, &a, &EngineConfig { spa_threshold: thr });
+        let plan = hash::symbolic_cfg(&d, &a, &EngineConfig { spa_threshold: thr, symbolic_threshold: None });
         assert!(
             plan.bins.iter().all(|b| b.kind == AccumKind::ScaledCopy),
             "diagonal A must stay on the copy path at threshold {thr}"
@@ -97,7 +97,7 @@ fn planned_fills_reuse_the_accumulator_decision() {
     let mut rng = Pcg32::seeded(5);
     let a = dense_random(&mut rng, 80, 0.35);
     for thr in THRESHOLDS {
-        let cfg = EngineConfig { spa_threshold: thr };
+        let cfg = EngineConfig { spa_threshold: thr, symbolic_threshold: None };
         let p = PlannedProduct::plan_cfg(&a, &a, &cfg);
         assert_eq!(p.symbolic_plan().spa_threshold, thr, "plan must record its threshold");
         let cold = hash::multiply_cfg(&a, &a, &cfg);
@@ -162,9 +162,10 @@ fn empty_and_degenerate_rows_never_select_spa_wrongly() {
     let mut rng = Pcg32::seeded(13);
     let m = dense_random(&mut rng, 16, 0.3);
     for thr in [0.0, 0.25, 2.0] {
-        let cfg = EngineConfig { spa_threshold: thr };
+        let cfg = EngineConfig { spa_threshold: thr, symbolic_threshold: None };
         assert_eq!(hash::multiply_cfg(&z, &z, &cfg).nnz(), 0);
-        assert_eq!(hash::multiply_cfg(&i, &m, &cfg), hash::multiply_cfg(&i, &m, &EngineConfig { spa_threshold: 0.5 }));
+        let half = EngineConfig { spa_threshold: 0.5, symbolic_threshold: None };
+        assert_eq!(hash::multiply_cfg(&i, &m, &cfg), hash::multiply_cfg(&i, &m, &half));
         let plan = hash::symbolic_cfg(&z, &z, &cfg);
         assert!(plan.bins.is_empty(), "zero output must produce no numeric bins");
         assert_eq!(plan.accumulator_kind(0), None);

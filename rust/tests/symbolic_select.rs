@@ -1,0 +1,177 @@
+//! Symbolic kernel-selection properties (`util/qc.rs` harness): the
+//! counting kernel is an implementation detail — bitmap-counted and
+//! hash-counted symbolic phases must produce **identical**
+//! `SymbolicPlan`s (row sizes, bins, numeric kinds) across the RMAT and
+//! structured generators at any threshold; the threshold boundary
+//! semantics must hold exactly (`0.0` forces the bitmap on every
+//! non-trivial row, any value ≥ 1.0 disables it); and the recorded
+//! per-row kinds must follow the IP-bound decision rule.
+
+use spgemm_aia::gen::{rmat, structured, RmatParams};
+use spgemm_aia::sparse::{Coo, Csr};
+use spgemm_aia::spgemm::hash::{self, select_symbolic, EngineConfig, SymbolicKind, SymbolicPlan};
+use spgemm_aia::util::{qc, Pcg32};
+use std::collections::BTreeMap;
+
+/// The numeric thresholds each property sweeps: dense kernels forced,
+/// the cache-geometry default, and disabled.
+const THRESHOLDS: [f64; 3] = [0.0, 0.25, 1.5];
+
+fn forced(spa_threshold: f64, kernel: SymbolicKind) -> EngineConfig {
+    let t = match kernel {
+        SymbolicKind::Bitmap => 0.0, // every non-trivial row counts via bitmap
+        _ => 8.0,                    // bitmap disabled: every non-trivial row hashes
+    };
+    EngineConfig { spa_threshold, symbolic_threshold: Some(t) }
+}
+
+/// Flatten a plan's bins to a `(group, numeric kind) -> (rows, weight)`
+/// view — everything about the numeric work list that must not depend
+/// on which kernel counted the rows.
+fn numeric_view(plan: &SymbolicPlan) -> BTreeMap<(u8, usize), (Vec<u32>, u64)> {
+    let mut m: BTreeMap<(u8, usize), (Vec<u32>, u64)> = BTreeMap::new();
+    for bin in &plan.bins {
+        let e = m.entry((bin.group, bin.kind.index())).or_insert_with(|| (Vec::new(), 0));
+        e.0.extend(&bin.rows);
+        e.1 += bin.weight;
+    }
+    for e in m.values_mut() {
+        e.0.sort_unstable();
+    }
+    m
+}
+
+fn assert_plans_identical(reference: &SymbolicPlan, other: &SymbolicPlan, ctx: &str) {
+    assert_eq!(reference.rpt, other.rpt, "{ctx}: row sizes must not depend on the counting kernel");
+    assert_eq!(reference.accum, other.accum, "{ctx}: numeric kinds must not depend on the counting kernel");
+    assert_eq!(
+        numeric_view(reference),
+        numeric_view(other),
+        "{ctx}: the numeric work list must not depend on the counting kernel"
+    );
+}
+
+/// All three symbolic modes — forced bitmap, forced hash, plan-guided —
+/// at every threshold, on one operand pair.
+fn check_kernel_independence(a: &Csr, name: &str) {
+    for thr in THRESHOLDS {
+        let bitmap = hash::symbolic_cfg(a, a, &forced(thr, SymbolicKind::Bitmap));
+        let hashed = hash::symbolic_cfg(a, a, &forced(thr, SymbolicKind::Hash));
+        let guided = hash::symbolic_cfg(a, a, &EngineConfig { spa_threshold: thr, symbolic_threshold: None });
+        assert_plans_identical(&hashed, &bitmap, &format!("{name} thr={thr} bitmap-vs-hash"));
+        assert_plans_identical(&hashed, &guided, &format!("{name} thr={thr} guided-vs-hash"));
+        // Boundary semantics of the forcing override.
+        assert_eq!(
+            bitmap.symbolic_kind_rows()[SymbolicKind::Hash.index()],
+            0,
+            "{name}: symbolic_threshold 0.0 must force the bitmap on every non-trivial row"
+        );
+        assert_eq!(
+            hashed.symbolic_kind_rows()[SymbolicKind::Bitmap.index()],
+            0,
+            "{name}: symbolic_threshold 8.0 must disable the bitmap"
+        );
+        // The numeric output is bit-identical across counting kernels.
+        let c_bitmap = hash::multiply_cfg(a, a, &forced(thr, SymbolicKind::Bitmap));
+        let c_hashed = hash::multiply_cfg(a, a, &forced(thr, SymbolicKind::Hash));
+        assert_eq!(c_bitmap, c_hashed, "{name} thr={thr}: products must agree bit-for-bit");
+    }
+}
+
+#[test]
+fn property_symbolic_kernels_plan_identical_rmat() {
+    qc::check(10, 7171, |g| {
+        let n = 16 + g.dim() * 8;
+        let nnz = n * (2 + g.rng.below_usize(8));
+        let params = match g.rng.below_usize(3) {
+            0 => RmatParams::web(),
+            1 => RmatParams::citation(),
+            _ => RmatParams::uniform(),
+        };
+        let mut rng = Pcg32::seeded(g.rng.next_u64());
+        let a = rmat(n, nnz, params, &mut rng);
+        check_kernel_independence(&a, "rmat");
+    });
+}
+
+#[test]
+fn property_symbolic_kernels_plan_identical_structured() {
+    qc::check(8, 2626, |g| {
+        let mut rng = Pcg32::seeded(g.rng.next_u64());
+        let n = 32 + g.dim() * 4;
+        let (name, a) = match g.rng.below_usize(4) {
+            0 => ("protein", structured::protein_contact(n, 24, &mut rng)),
+            1 => ("fem_banded", structured::fem_banded(n, 12, &mut rng)),
+            2 => ("circuit", structured::circuit(n, &mut rng)),
+            _ => ("economics", structured::economics(n, &mut rng)),
+        };
+        check_kernel_independence(&a, name);
+    });
+}
+
+#[test]
+fn shared_threshold_boundaries_drive_the_symbolic_kernel() {
+    // Without a symbolic override, the shared knob decides both halves:
+    // 0.0 forces the bitmap on every non-trivial row, ≥ 1.0 disables it
+    // (the IP bound is capped at n_cols, so even hub rows cannot cross
+    // a threshold of 1.0).
+    let mut rng = Pcg32::seeded(99);
+    let mut coo = Coo::new(96, 96);
+    for _ in 0..96 * 24 {
+        coo.push(rng.below_usize(96), rng.below_usize(96), rng.f64_range(-1.0, 1.0));
+    }
+    let a = coo.to_csr();
+    let plan = hash::symbolic_cfg(&a, &a, &EngineConfig { spa_threshold: 0.0, symbolic_threshold: None });
+    let rows = plan.symbolic_kind_rows();
+    assert_eq!(rows[SymbolicKind::Hash.index()], 0, "0.0 must force the bitmap");
+    assert!(rows[SymbolicKind::Bitmap.index()] > 0, "0.0 must actually produce bitmap rows");
+    for thr in [1.0, 4.0] {
+        let plan = hash::symbolic_cfg(&a, &a, &EngineConfig { spa_threshold: thr, symbolic_threshold: None });
+        assert_eq!(
+            plan.symbolic_kind_rows()[SymbolicKind::Bitmap.index()],
+            0,
+            "threshold {thr} must disable the bitmap"
+        );
+    }
+}
+
+#[test]
+fn recorded_kinds_follow_the_ip_bound_rule() {
+    let mut rng = Pcg32::seeded(7);
+    let a = rmat(256, 2048, RmatParams::web(), &mut rng);
+    let cfg = EngineConfig { spa_threshold: 0.25, symbolic_threshold: None };
+    let plan = hash::symbolic_cfg(&a, &a, &cfg);
+    for r in 0..a.n_rows {
+        let expect = select_symbolic(a.row_nnz(r), plan.ip[r], a.n_cols, 0.25);
+        assert_eq!(plan.symbolic_kind(r), expect, "row {r}");
+        if let Some(kernel) = plan.row_kernel(r) {
+            assert_eq!(kernel.symbolic, plan.symbolic_kind(r));
+            assert_eq!(Some(kernel.numeric), plan.accumulator_kind(r));
+        }
+    }
+    // Every bin is homogeneous in its pair, and the plan's bins agree
+    // with the per-row record.
+    for bin in &plan.bins {
+        for &r in &bin.rows {
+            assert_eq!(plan.symbolic_kind(r as usize), bin.symbolic_kind);
+            assert_eq!(plan.accumulator_kind(r as usize), Some(bin.kind));
+        }
+    }
+}
+
+#[test]
+fn planned_products_preserve_the_symbolic_kernel_split() {
+    // Through the plan-reuse layer: plan once per kernel mode, fill —
+    // outputs identical, and the plan's per-kernel symbolic seconds
+    // land in `plan_times`.
+    let mut rng = Pcg32::seeded(13);
+    let a = rmat(192, 3000, RmatParams::uniform(), &mut rng);
+    let bitmap = hash::PlannedProduct::plan_cfg(&a, &a, &forced(0.25, SymbolicKind::Bitmap));
+    let hashed = hash::PlannedProduct::plan_cfg(&a, &a, &forced(0.25, SymbolicKind::Hash));
+    assert_eq!(bitmap.fill(&a, &a), hashed.fill(&a, &a));
+    let bitmap_s = bitmap.plan_times.symbolic_kind_s;
+    assert_eq!(bitmap_s[SymbolicKind::Hash.index()], 0.0, "forced-bitmap plan ran no hash kernel");
+    if bitmap.symbolic_plan().symbolic_kind_rows()[SymbolicKind::Bitmap.index()] > 0 {
+        assert!(bitmap_s[SymbolicKind::Bitmap.index()] > 0.0, "bitmap kernel seconds must be recorded");
+    }
+}
