@@ -1,0 +1,23 @@
+# Build entry points for the spgemm-aia reproduction.
+#
+# `make artifacts` is the (future) PJRT artifact pipeline: it will run
+# the L2/L1 Python AOT lowering (`python/compile/aot.py`) and drop
+# `artifacts/*.hlo.txt` for the Rust runtime to load. The toolchain it
+# needs (jax + the vendored `xla` crate closure behind the `pjrt`
+# feature) is not wired up yet — see ROADMAP.md "PJRT artifact
+# pipeline" — so for now the target fails with the actionable message
+# the runtime's own errors point at.
+
+.PHONY: artifacts
+artifacts:
+	@echo "error: the PJRT artifact pipeline is not wired up yet." >&2
+	@echo "" >&2
+	@echo "'make artifacts' will lower python/compile/ (aot.py: L2 model + L1 Pallas kernels)" >&2
+	@echo "to artifacts/*.hlo.txt. Until the pipeline lands you need:" >&2
+	@echo "  1. a Python env with jax[cpu] (pip install 'jax[cpu]'), then" >&2
+	@echo "     python python/compile/aot.py --out artifacts/" >&2
+	@echo "  2. a vendored 'xla' crate closure, built with: cargo build --features pjrt" >&2
+	@echo "" >&2
+	@echo "Everything else (engines, simulator, apps, benches) builds without this:" >&2
+	@echo "  cd rust && cargo build --release" >&2
+	@exit 1

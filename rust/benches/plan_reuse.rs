@@ -7,13 +7,18 @@
 //! `multiply` (plan + fill every iteration) against a reused-plan
 //! numeric fill, an expansion chain of 4 iterations both ways, and the
 //! pipelined `BatchExecutor` path where planning of product k+1 hides
-//! behind the fill of product k. Per-dataset speedups and the plan/fill
-//! split land in the JSON meta; CI archives `BENCH_plan_reuse.json` as
-//! part of the perf trajectory.
+//! behind the fill of product k, and the cold-process disk-hit path
+//! where a plan persisted by one `BatchExecutor`'s store is loaded,
+//! validated, and filled by a fresh one (the `--plan-cache` /
+//! `SPGEMM_AIA_PLAN_CACHE` cross-process win — the bench honors that
+//! env var for its cache directory, so CI can warm the disk tier in one
+//! invocation and hit it in the next). Per-dataset speedups and the
+//! plan/fill split land in the JSON meta; CI archives
+//! `BENCH_plan_reuse.json` as part of the perf trajectory.
 
 use spgemm_aia::coordinator::batch::BatchExecutor;
 use spgemm_aia::gen;
-use spgemm_aia::spgemm::hash::{self, PlannedProduct};
+use spgemm_aia::spgemm::hash::{self, PlannedProduct, TieredStore};
 use spgemm_aia::util::bench::{bb, Bencher};
 use spgemm_aia::util::json::Json;
 
@@ -59,20 +64,48 @@ fn main() {
         });
         b.meta(&format!("chain4_speedup/{name}"), Json::Num(chain_cold.median / chain_reused.median));
 
+        // Cold-process disk hit: the plan was persisted by one
+        // executor's store (a previous process when the plan-cache env
+        // dir is warm, the writer below otherwise); each iteration
+        // stands in for a fresh process — a new BatchExecutor whose
+        // memory tier is cold loads, validates, and fills from disk.
+        let cache_dir = hash::default_plan_cache_dir()
+            .unwrap_or_else(|| std::env::temp_dir().join("spgemm-aia-bench-plan-cache"));
+        let mut writer = BatchExecutor::with_store(4, TieredStore::with_disk(&cache_dir));
+        writer.multiply_cached(&a, &a); // ensure the plan file exists
+        let disk_hit = b.bench("cold-process disk-hit fill", || {
+            let mut bx = BatchExecutor::with_store(4, TieredStore::with_disk(&cache_dir));
+            bb(bx.multiply_cached(&a, &a).nnz())
+        });
+        b.meta(&format!("disk_hit_speedup/{name}"), Json::Num(cold.median / disk_hit.median));
+        // Counters from one representative cold-process run: a clean
+        // hit is 1 disk hit, 0 plans built, 0 corrupt files.
+        let mut probe = BatchExecutor::with_store(4, TieredStore::with_disk(&cache_dir));
+        probe.multiply_cached(&a, &a);
+        let mut dj = Json::obj();
+        dj.set("disk_hits", probe.stats.disk_hits.into());
+        dj.set("plans_built", probe.stats.plans_built.into());
+        dj.set("disk_corrupt", probe.stats.disk_corrupt.into());
+        dj.set("writer_disk_hits", writer.stats.disk_hits.into());
+        b.meta(&format!("disk_tier/{name}"), dj);
+
         // Pipelined batch over 4 structurally distinct products (the
         // planner thread overlaps the fills; identical structures would
-        // be deduped to one plan) vs the serial equivalent.
+        // be deduped to one plan) vs the serial equivalent. Pinned to a
+        // memory-only store: with a plan-cache env dir set, the process
+        // default would turn iterations 2+ into disk hits and this
+        // scenario would stop measuring the overlap it names.
         let variants: Vec<_> = (0..4u64).map(|k| (ds.gen)(1 + k)).collect();
         let pairs: Vec<_> = variants.iter().map(|m| (m, m)).collect();
         let serial = b.bench("batch-4-distinct/serial", || {
             bb(variants.iter().map(|m| hash::multiply(m, m).nnz()).sum::<usize>())
         });
         let piped = b.bench("batch-4-distinct/pipelined", || {
-            let mut bx = BatchExecutor::new(4);
+            let mut bx = BatchExecutor::with_store(4, TieredStore::mem_only());
             bb(bx.execute_batch(&pairs).len())
         });
         b.meta(&format!("batch_pipeline_speedup/{name}"), Json::Num(serial.median / piped.median));
-        let mut bx = BatchExecutor::new(4);
+        let mut bx = BatchExecutor::with_store(4, TieredStore::mem_only());
         bx.execute_batch(&pairs);
         if let Some(r) = &bx.last_batch {
             b.meta(&format!("batch_overlap_speedup/{name}"), Json::Num(r.overlap_speedup()));

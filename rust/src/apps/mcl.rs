@@ -14,6 +14,7 @@ use crate::coordinator::executor::SpgemmExecutor;
 use crate::spgemm::hash::PlannedProduct;
 use crate::sparse::ops;
 use crate::sparse::Csr;
+use std::sync::Arc;
 
 /// MCL hyper-parameters (paper defaults: e = 2, r = 2).
 #[derive(Clone, Debug)]
@@ -51,6 +52,9 @@ pub struct MclResult {
     pub plan_hits: usize,
     /// Expansions that had to (re)plan.
     pub plan_misses: usize,
+    /// Expansions served by the executor's plan store *disk* tier — a
+    /// plan persisted by an earlier process (0 without `--plan-cache`).
+    pub disk_hits: usize,
 }
 
 /// Run MCL on (possibly weighted) adjacency `g` with the executor's
@@ -58,7 +62,7 @@ pub struct MclResult {
 pub fn mcl(g: &Csr, params: &MclParams, ex: &mut SpgemmExecutor) -> MclResult {
     assert_eq!(g.n_rows, g.n_cols, "MCL needs a square adjacency");
     let before = ex.sim_ms;
-    let (hits0, misses0) = (ex.plan_hits, ex.plan_misses);
+    let (hits0, misses0, disk0) = (ex.plan_hits, ex.plan_misses, ex.disk_hits);
     // Algorithm 6 lines 1–3.
     let with_loops = ops::add_self_loops(g, 1.0);
     let mut a = ops::column_normalize(&with_loops);
@@ -67,7 +71,10 @@ pub fn mcl(g: &Csr, params: &MclParams, ex: &mut SpgemmExecutor) -> MclResult {
     // One plan slot per expansion step: step s always multiplies A^s·A,
     // so when prune/inflate leave the flow structure unchanged between
     // iterations every step reuses its plan (structure-hash checked).
-    let mut plans: Vec<Option<PlannedProduct>> = (1..params.expansion).map(|_| None).collect();
+    // Slot misses fall through to the executor's tiered plan store, so
+    // with `--plan-cache` a re-run on the same graph starts from the
+    // previous process's plans.
+    let mut plans: Vec<Option<Arc<PlannedProduct>>> = (1..params.expansion).map(|_| None).collect();
     for _ in 0..params.max_iters {
         iterations += 1;
         // Expansion: A^e through the SpGEMM engine.
@@ -97,6 +104,7 @@ pub fn mcl(g: &Csr, params: &MclParams, ex: &mut SpgemmExecutor) -> MclResult {
         converged,
         plan_hits: ex.plan_hits - hits0,
         plan_misses: ex.plan_misses - misses0,
+        disk_hits: ex.disk_hits - disk0,
     }
 }
 
@@ -174,21 +182,32 @@ mod tests {
         assert_eq!(rh.iterations, re.iterations);
     }
 
+    /// Pinned to a memory-only plan store: these tests assert plan
+    /// hit/miss counts, which a `SPGEMM_AIA_PLAN_CACHE` env var leaking
+    /// in from the developer's shell (warm disk tier from a previous
+    /// `cargo test`) would turn stateful. Cross-process MCL reuse is
+    /// covered by `tests/plan_store.rs` with a pinned directory.
+    fn mem_pinned_hash() -> SpgemmExecutor {
+        let mut ex = SpgemmExecutor::fast(Variant::Hash);
+        ex.attach_plan_store(crate::spgemm::hash::TieredStore::mem_only());
+        ex
+    }
+
     #[test]
     fn expansion_counts_spgemm_jobs() {
         let g = two_cluster_graph();
-        let mut ex = SpgemmExecutor::fast(Variant::Hash);
+        let mut ex = mem_pinned_hash();
         let r = mcl(&g, &MclParams { max_iters: 3, tol: 0.0, ..Default::default() }, &mut ex);
         // e=2 → 1 SpGEMM per iteration
         assert_eq!(ex.jobs, r.iterations);
-        // Every expansion is accounted as a plan hit or a plan miss.
-        assert_eq!(r.plan_hits + r.plan_misses, r.iterations);
+        // Every expansion is accounted as a plan hit, disk hit, or miss.
+        assert_eq!(r.plan_hits + r.disk_hits + r.plan_misses, r.iterations);
     }
 
     #[test]
     fn converging_mcl_reuses_plans() {
         let g = two_cluster_graph();
-        let mut ex = SpgemmExecutor::fast(Variant::Hash);
+        let mut ex = mem_pinned_hash();
         let r = mcl(&g, &MclParams::default(), &mut ex);
         assert!(r.converged);
         assert!(r.plan_misses >= 1, "first expansion always plans");

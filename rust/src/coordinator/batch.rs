@@ -22,15 +22,22 @@
 //!   with the PWPR bins; the resulting [`Schedule`] lands in the
 //!   [`BatchReport`] along with the per-accumulator-kind fill split.
 //! - **Plan caching** — plans are keyed by the operands' structure
-//!   hashes and shared: [`BatchExecutor::multiply_cached`] reuses across
+//!   fingerprints and shared through a tiered
+//!   [`crate::spgemm::hash::planstore::TieredStore`] (memory tier, plus
+//!   the versioned on-disk tier when a plan-cache directory is
+//!   configured): [`BatchExecutor::multiply_cached`] reuses across
 //!   calls, and [`BatchExecutor::execute_batch`] dedupes repeated
-//!   structures within a batch, consults the cache, and seeds it with
+//!   structures within a batch, consults the store, and seeds it with
 //!   the plans it builds — so iterative callers (MCL expansions, GNN
 //!   epochs) pay the symbolic phase only when a structure is genuinely
-//!   new. Hit/miss counts live in [`BatchStats`] and are **per unique
-//!   structure hash**: a plan shared across several slots of one batch
-//!   counts one hit (or one miss) plus [`BatchStats::batch_shared`]
-//!   shares, never one hit per slot.
+//!   new *to the store*, which with a disk tier includes structures
+//!   planned by earlier processes. Hit/miss counts live in
+//!   [`BatchStats`] and are **per unique structure hash**: a plan
+//!   shared across several slots of one batch counts one hit (or one
+//!   miss) plus [`BatchStats::batch_shared`] shares, never one hit per
+//!   slot. Disk-tier traffic is split out
+//!   ([`BatchStats::disk_hits`] / [`BatchStats::disk_corrupt`]), and a
+//!   corrupt or stale plan file always degrades to a silent replan.
 //!
 //! Both paths produce output bit-identical to a cold
 //! [`crate::spgemm::hash::multiply`].
@@ -40,7 +47,8 @@
 
 use super::metrics::Metrics;
 use super::scheduler::{schedule_lpt, Job, Schedule};
-use crate::spgemm::hash::{numeric_bin_into, pair_key_from_hashes, EngineConfig, PlannedProduct};
+use crate::spgemm::hash::planstore::{GetOutcome, StoreStats};
+use crate::spgemm::hash::{numeric_bin_into, EngineConfig, PlanFingerprint, PlanStore, PlannedProduct, TieredStore};
 use crate::sparse::Csr;
 use std::collections::HashMap;
 use std::sync::mpsc;
@@ -54,11 +62,6 @@ use std::time::Instant;
 /// allowed, now at bin granularity so multi-bin products overlap
 /// per bin instead of per phase.
 const PIPELINE_DEPTH: usize = 4;
-
-/// Plans cached by [`BatchExecutor::multiply_cached`] before arbitrary
-/// eviction kicks in (iterative workloads cycle over a handful of
-/// structures; this only bounds pathological callers).
-const CACHE_CAP: usize = 32;
 
 /// Counters accumulated across a [`BatchExecutor`]'s lifetime.
 ///
@@ -82,11 +85,21 @@ pub struct BatchStats {
     /// Batch slots that shared a plan with an earlier slot of the same
     /// batch (in-batch dedup — neither a hit nor a miss).
     pub batch_shared: usize,
+    /// Unique structures served by the plan store's *disk* tier: a plan
+    /// written by an earlier process (or an earlier store on the same
+    /// directory), loaded, fingerprint-validated, and promoted to the
+    /// memory tier. Counted separately from [`BatchStats::plan_hits`]
+    /// so the cross-process win is visible.
+    pub disk_hits: usize,
+    /// Plan files that failed to load (bad magic/version/checksum or
+    /// truncated) — each degraded to a silent miss + replan.
+    pub disk_corrupt: usize,
     /// Per-bin completion events filled by the batch pipeline.
     pub bins_filled: usize,
     /// Wall seconds spent resolving plans: grouping + symbolic for
-    /// fresh structures, plus the fingerprint validation (structure
-    /// hashing, O(nnz)) that hits and in-batch shares still pay —
+    /// fresh structures, disk load + validation for disk hits, plus the
+    /// fingerprint validation (an O(nnz) structure scan on first touch,
+    /// a memo read after) that hits and in-batch shares still pay —
     /// omitting the latter overstated the reported reuse saving
     /// (regression-pinned by
     /// `plan_resolution_time_is_accounted_for_cache_hits`).
@@ -96,13 +109,15 @@ pub struct BatchStats {
 }
 
 impl BatchStats {
-    /// Fraction of products served without replanning.
+    /// Fraction of products served without replanning (memory- and
+    /// disk-tier hits both count — neither ran the symbolic phase).
     pub fn hit_rate(&self) -> f64 {
-        let total = self.plan_hits + self.plan_misses;
+        let hits = self.plan_hits + self.disk_hits;
+        let total = hits + self.plan_misses;
         if total == 0 {
             0.0
         } else {
-            self.plan_hits as f64 / total as f64
+            hits as f64 / total as f64
         }
     }
 }
@@ -119,10 +134,11 @@ pub struct BatchReport {
     /// Wall time of the whole pipelined batch.
     pub wall_s: f64,
     /// Planner-thread wall seconds resolving the batch's plans:
-    /// grouping + symbolic analysis for *unique* fresh structures,
-    /// plus fingerprint validation for every product (cache hits and
-    /// in-batch shares are not free — they re-hash both operands) —
-    /// overlapped with fills.
+    /// grouping + symbolic analysis for *unique* fresh structures, disk
+    /// load + validation for disk-tier hits, plus fingerprint
+    /// validation for every product (cache hits and in-batch shares are
+    /// not free, though the memoized structure hashes make repeat
+    /// validation a cell read) — overlapped with fills.
     pub plan_s: f64,
     /// Plan-side symbolic seconds split by counting kernel, indexed by
     /// `SymbolicKind::index()` (trivial, hash, bitmap) — summed over
@@ -134,6 +150,9 @@ pub struct BatchReport {
     /// `fill_s` split by accumulator kind, indexed by
     /// `AccumKind::index()` (copy, hash, SPA).
     pub fill_kind_s: [f64; 3],
+    /// Unique structures of this batch served by the plan store's disk
+    /// tier (symbolic phase skipped across a process boundary).
+    pub disk_hits: usize,
     /// Per-kind numeric bins of every product packed onto the stream
     /// model with LPT. **Weights are intermediate-product counts, not
     /// ms** — the `Schedule`'s `*_ms` fields are in IP units here, so
@@ -187,18 +206,23 @@ pub struct BatchExecutor {
     pub stats: BatchStats,
     /// Report for the most recent [`BatchExecutor::execute_batch`] call.
     pub last_batch: Option<BatchReport>,
-    cache: HashMap<u64, Arc<PlannedProduct>>,
+    store: TieredStore,
 }
 
 impl BatchExecutor {
+    /// Executor over the process-default plan store
+    /// ([`TieredStore::process_default`]): memory tier always, plus the
+    /// on-disk tier when `--plan-cache` / `SPGEMM_AIA_PLAN_CACHE`
+    /// configured a directory.
     pub fn new(n_streams: usize) -> BatchExecutor {
+        BatchExecutor::with_store(n_streams, TieredStore::process_default())
+    }
+
+    /// Executor over an explicit plan store (tests, benches, and the
+    /// repro harness pin their cache directories with this).
+    pub fn with_store(n_streams: usize, store: TieredStore) -> BatchExecutor {
         assert!(n_streams > 0, "need at least one stream");
-        BatchExecutor {
-            n_streams,
-            stats: BatchStats::default(),
-            last_batch: None,
-            cache: HashMap::new(),
-        }
+        BatchExecutor { n_streams, stats: BatchStats::default(), last_batch: None, store }
     }
 
     /// Execute a batch of products with the per-bin symbolic/numeric
@@ -217,10 +241,31 @@ impl BatchExecutor {
     /// input order and are bit-identical to per-pair
     /// [`crate::spgemm::hash::multiply`] calls.
     pub fn execute_batch(&mut self, pairs: &[(&Csr, &Csr)]) -> Vec<Csr> {
+        /// Where the planner thread resolved one slot's plan.
+        enum PlanSource {
+            /// Structure new to the store: the symbolic phase ran.
+            Fresh,
+            /// Resolved earlier in this same batch (in-batch dedup).
+            Shared,
+            /// Memory-tier hit.
+            Mem,
+            /// Disk-tier hit (plan from an earlier process, validated).
+            Disk,
+        }
         /// Pipeline events, in channel order per product: one `Plan`
         /// (symbolic counts landed), then one `Bin` per numeric bin.
         enum PipeEvent {
-            Plan { slot: usize, plan: Arc<PlannedProduct>, fresh: bool, cache_hit: bool, resolve_s: f64 },
+            Plan {
+                slot: usize,
+                plan: Arc<PlannedProduct>,
+                source: PlanSource,
+                /// A plan file for this fingerprint was unreadable
+                /// (degraded to whatever `source` says happened next).
+                corrupt: bool,
+                /// A plan file parsed but carried a foreign fingerprint.
+                stale: bool,
+                resolve_s: f64,
+            },
             Bin { slot: usize, bin: usize },
         }
         /// A product mid-fill on the consumer side.
@@ -238,41 +283,61 @@ impl BatchExecutor {
         let mut fill_kind_s = [0f64; 3];
         let mut bins_filled = 0usize;
         let mut hits = 0usize;
+        let mut disk_hits = 0usize;
+        let mut corrupts = 0usize;
+        let mut stales = 0usize;
         let mut shared = 0usize;
         let mut fresh_plans: Vec<Arc<PlannedProduct>> = Vec::new();
+        let mut disk_loaded: Vec<Arc<PlannedProduct>> = Vec::new();
         let mut jobs: Vec<Job> = Vec::new();
         let mut out: Vec<Option<Csr>> = Vec::new();
         out.resize_with(pairs.len(), || None);
         let mut slots: Vec<Option<SlotState>> = Vec::new();
         slots.resize_with(pairs.len(), || None);
-        // Read-only view of the cache for the planner thread (Arc
-        // clones — the plans themselves are shared, not copied).
-        let snapshot = self.cache.clone();
+        // Read-only view of the tiered store for the planner thread:
+        // `Arc` clones of the memory tier plus a stateless disk handle —
+        // disk load + validation happen on the planner thread, where
+        // they overlap the numeric fills like any other plan resolution.
+        let snapshot = self.store.snapshot();
         std::thread::scope(|s| {
             let (tx, rx) = mpsc::sync_channel::<PipeEvent>(PIPELINE_DEPTH);
             s.spawn(move || {
                 // Plans resolved earlier in this batch, keyed like the
-                // cache — in-batch shares are neither hits nor misses.
+                // store — in-batch shares are neither hits nor misses.
                 let mut resolved: HashMap<u64, Arc<PlannedProduct>> = HashMap::new();
                 for (i, &(a, b)) in pairs.iter().enumerate() {
                     let t_resolve = Instant::now();
-                    let (ah, bh) = (a.structure_hash(), b.structure_hash());
-                    let key = pair_key_from_hashes(ah, bh);
-                    let fingerprint_ok = |p: &&Arc<PlannedProduct>| {
-                        p.matches_fingerprint((a.n_rows, a.n_cols), (b.n_rows, b.n_cols), ah, bh)
-                    };
-                    let (p, fresh, cache_hit) = if let Some(p) = resolved.get(&key).filter(fingerprint_ok) {
-                        (Arc::clone(p), false, false)
-                    } else if let Some(p) = snapshot.get(&key).filter(fingerprint_ok) {
-                        resolved.insert(key, Arc::clone(p));
-                        (Arc::clone(p), false, true)
+                    // The operands' structure hashes are memoized, so
+                    // fingerprinting repeated structures is a cell read.
+                    let fp = PlanFingerprint::of(a, b);
+                    let key = fp.key();
+                    let (mut corrupt, mut stale) = (false, false);
+                    let (p, source) = if let Some(p) = resolved.get(&key).filter(|p| fp.matches(p)) {
+                        (Arc::clone(p), PlanSource::Shared)
                     } else {
-                        // Fingerprints double as the plan's validation
-                        // hashes — each operand is hashed exactly once.
-                        let cfg = EngineConfig::default();
-                        let p = Arc::new(PlannedProduct::plan_cfg_hashed(a, b, &cfg, ah, bh));
-                        resolved.insert(key, Arc::clone(&p));
-                        (p, true, false)
+                        match snapshot.lookup(&fp) {
+                            (Some(p), GetOutcome::MemHit) => {
+                                resolved.insert(key, Arc::clone(&p));
+                                (p, PlanSource::Mem)
+                            }
+                            (Some(p), _) => {
+                                resolved.insert(key, Arc::clone(&p));
+                                (p, PlanSource::Disk)
+                            }
+                            (None, outcome) => {
+                                if let GetOutcome::Miss { corrupt: c, stale: st } = outcome {
+                                    corrupt = c;
+                                    stale = st;
+                                }
+                                // Fingerprints double as the plan's
+                                // validation hashes — each operand is
+                                // structure-scanned at most once.
+                                let cfg = EngineConfig::default();
+                                let p = Arc::new(PlannedProduct::plan_cfg_hashed(a, b, &cfg, fp.a_hash, fp.b_hash));
+                                resolved.insert(key, Arc::clone(&p));
+                                (p, PlanSource::Fresh)
+                            }
+                        }
                     };
                     let resolve_s = t_resolve.elapsed().as_secs_f64();
                     // Symbolic counts are in: dispatch the product's bins
@@ -280,7 +345,7 @@ impl BatchExecutor {
                     let bins = &p.symbolic_plan().bins;
                     let mut order: Vec<usize> = (0..bins.len()).collect();
                     order.sort_by(|&x, &y| bins[y].weight.cmp(&bins[x].weight).then(x.cmp(&y)));
-                    let ev = PipeEvent::Plan { slot: i, plan: Arc::clone(&p), fresh, cache_hit, resolve_s };
+                    let ev = PipeEvent::Plan { slot: i, plan: Arc::clone(&p), source, corrupt, stale, resolve_s };
                     if tx.send(ev).is_err() {
                         return; // receiver unwound — stop planning
                     }
@@ -293,22 +358,33 @@ impl BatchExecutor {
             });
             for ev in rx {
                 match ev {
-                    PipeEvent::Plan { slot, plan, fresh, cache_hit, resolve_s } => {
+                    PipeEvent::Plan { slot, plan, source, corrupt, stale, resolve_s } => {
                         // Planner-thread cost of this product: fingerprint
-                        // hashing plus, for fresh structures, the
-                        // grouping/symbolic analysis. Counted for hits and
-                        // in-batch shares too — validation is real work,
-                        // and reporting it as 0 overstated the reuse win.
+                        // resolution (and for disk hits the load+validate)
+                        // plus, for fresh structures, the grouping/symbolic
+                        // analysis. Counted for hits and in-batch shares
+                        // too — validation is real work, and reporting it
+                        // as 0 overstated the reuse win.
                         plan_s += resolve_s;
-                        if fresh {
-                            for (k, v) in symbolic_kind_s.iter_mut().zip(plan.plan_times.symbolic_kind_s) {
-                                *k += v;
+                        if corrupt {
+                            corrupts += 1;
+                        }
+                        if stale {
+                            stales += 1;
+                        }
+                        match source {
+                            PlanSource::Fresh => {
+                                for (k, v) in symbolic_kind_s.iter_mut().zip(plan.plan_times.symbolic_kind_s) {
+                                    *k += v;
+                                }
+                                fresh_plans.push(Arc::clone(&plan));
                             }
-                            fresh_plans.push(Arc::clone(&plan));
-                        } else if cache_hit {
-                            hits += 1;
-                        } else {
-                            shared += 1;
+                            PlanSource::Mem => hits += 1,
+                            PlanSource::Disk => {
+                                disk_hits += 1;
+                                disk_loaded.push(Arc::clone(&plan));
+                            }
+                            PlanSource::Shared => shared += 1,
                         }
                         for bin in &plan.symbolic_plan().bins {
                             jobs.push(Job { id: format!("p{slot}/{}", bin.label()), ms: bin.weight as f64 });
@@ -352,13 +428,30 @@ impl BatchExecutor {
         self.stats.plans_built += fresh_count;
         self.stats.plan_misses += fresh_count;
         self.stats.plan_hits += hits;
+        self.stats.disk_hits += disk_hits;
+        self.stats.disk_corrupt += corrupts;
         self.stats.batch_shared += shared;
         self.stats.fills += pairs.len();
         self.stats.bins_filled += bins_filled;
         self.stats.plan_s += plan_s;
         self.stats.fill_s += fill_s;
+        // The planner thread resolved against a snapshot: fold what it
+        // observed into the store's own counters, promote disk-loaded
+        // plans into the memory tier, and write fresh plans through to
+        // both tiers.
+        self.store.tally(&StoreStats {
+            mem_hits: hits as u64,
+            disk_hits: disk_hits as u64,
+            misses: fresh_count as u64,
+            corrupt: corrupts as u64,
+            stale: stales as u64,
+            ..StoreStats::default()
+        });
+        for p in disk_loaded {
+            self.store.admit(p, false);
+        }
         for p in fresh_plans {
-            self.cache_insert(p.key(), p);
+            self.store.admit(p, true);
         }
         self.last_batch = Some(BatchReport {
             products: pairs.len(),
@@ -368,67 +461,75 @@ impl BatchExecutor {
             symbolic_kind_s,
             fill_s,
             fill_kind_s,
+            disk_hits,
             streams: schedule_lpt(&jobs, self.n_streams),
         });
         out.into_iter().map(|c| c.expect("pipeline produced every product")).collect()
     }
 
-    /// Multiply through the plan cache: reuse the cached plan when the
-    /// operands' structure is unchanged (numeric phase only), replan and
-    /// cache otherwise. Hit/miss counts land in [`BatchStats`]. Each
-    /// operand is hashed exactly once per call (key and validation share
-    /// the fingerprints).
+    /// Multiply through the tiered plan store: reuse a stored plan when
+    /// the operands' structure is unchanged (numeric phase only —
+    /// memory tier first, then the validated disk tier), replan and
+    /// store otherwise. Hit/miss counts land in [`BatchStats`]
+    /// (disk-tier hits under [`BatchStats::disk_hits`]). The operands'
+    /// structure hashes are memoized, so fingerprinting costs one scan
+    /// per matrix lifetime, not one per call.
     pub fn multiply_cached(&mut self, a: &Csr, b: &Csr) -> Csr {
         let t_resolve = Instant::now();
-        let (ah, bh) = (a.structure_hash(), b.structure_hash());
-        let key = pair_key_from_hashes(ah, bh);
-        if let Some(p) = self.cache.get(&key) {
-            if p.matches_fingerprint((a.n_rows, a.n_cols), (b.n_rows, b.n_cols), ah, bh) {
-                self.stats.plan_hits += 1;
-                // Hits still pay the structure-hash validation: count it
-                // so reuse is never reported as entirely free.
-                self.stats.plan_s += t_resolve.elapsed().as_secs_f64();
-                let (c, ft) = p.fill_unchecked_timed(a, b);
-                self.stats.fills += 1;
-                self.stats.fill_s += ft.numeric_s;
-                return c;
+        let fp = PlanFingerprint::of(a, b);
+        let (found, outcome) = self.store.get_traced(&fp);
+        if let Some(p) = found {
+            match outcome {
+                GetOutcome::DiskHit => self.stats.disk_hits += 1,
+                _ => self.stats.plan_hits += 1,
             }
+            // Hits still pay fingerprint validation (and disk hits the
+            // load): count it so reuse is never reported as entirely
+            // free.
+            self.stats.plan_s += t_resolve.elapsed().as_secs_f64();
+            let (c, ft) = p.fill_unchecked_timed(a, b);
+            self.stats.fills += 1;
+            self.stats.fill_s += ft.numeric_s;
+            return c;
+        }
+        if let GetOutcome::Miss { corrupt: true, .. } = outcome {
+            self.stats.disk_corrupt += 1;
         }
         self.stats.plan_misses += 1;
-        // Key fingerprints double as the plan's validation hashes (each
-        // operand hashed exactly once), and the miss counts the same
-        // resolve wall time the hit path does — hashing included — so
-        // the two paths stay comparable.
-        let p = PlannedProduct::plan_cfg_hashed(a, b, &EngineConfig::default(), ah, bh);
+        // Key fingerprints double as the plan's validation hashes, and
+        // the miss counts the same resolve wall time the hit path does,
+        // so the two paths stay comparable.
+        let p = Arc::new(PlannedProduct::plan_cfg_hashed(a, b, &EngineConfig::default(), fp.a_hash, fp.b_hash));
         self.stats.plans_built += 1;
         self.stats.plan_s += t_resolve.elapsed().as_secs_f64();
         let (c, ft) = p.fill_unchecked_timed(a, b);
         self.stats.fills += 1;
         self.stats.fill_s += ft.numeric_s;
-        self.cache_insert(key, Arc::new(p));
+        self.store.put(p);
         c
     }
 
-    /// Insert a plan, evicting an arbitrary entry at the cap.
-    fn cache_insert(&mut self, key: u64, p: Arc<PlannedProduct>) {
-        if self.cache.len() >= CACHE_CAP && !self.cache.contains_key(&key) {
-            let evict = self.cache.keys().next().copied();
-            if let Some(k) = evict {
-                self.cache.remove(&k);
-            }
-        }
-        self.cache.insert(key, p);
-    }
-
-    /// Number of plans currently cached.
+    /// Number of plans currently in the store's memory tier.
     pub fn cached_plans(&self) -> usize {
-        self.cache.len()
+        self.store.len()
     }
 
-    /// Drop every cached plan (e.g. after a sparsification event that
-    /// invalidates the structures the cache was keyed on).
+    /// The plan store's own counters (per-tier hit/miss/evict/corrupt).
+    pub fn store_stats(&self) -> StoreStats {
+        self.store.stats()
+    }
+
+    /// The disk tier's cache directory, if one is attached.
+    pub fn plan_cache_dir(&self) -> Option<&std::path::Path> {
+        self.store.disk_dir()
+    }
+
+    /// Drop the store's memory tier (e.g. after a sparsification event
+    /// that invalidates the structures it was keyed on). Disk files are
+    /// left in place — they are fingerprint-validated on every load, so
+    /// a stale file costs a read, never a wrong result.
     pub fn invalidate(&mut self) {
-        self.cache.clear();
+        self.store.clear();
     }
 
     /// Model the §III-C stream assignment for one planned product: one
@@ -452,14 +553,25 @@ impl BatchExecutor {
         schedule_lpt(&jobs, self.n_streams)
     }
 
-    /// Export counters into a [`Metrics`] registry under `batch.*`.
+    /// Export counters into a [`Metrics`] registry under `batch.*`
+    /// (executor-level) and `batch.store.*` (plan-store tiers).
     pub fn export_metrics(&self, m: &mut Metrics) {
         m.inc("batch.plans_built", self.stats.plans_built as u64);
         m.inc("batch.fills", self.stats.fills as u64);
         m.inc("batch.plan_hits", self.stats.plan_hits as u64);
         m.inc("batch.plan_misses", self.stats.plan_misses as u64);
+        m.inc("batch.disk_hits", self.stats.disk_hits as u64);
+        m.inc("batch.disk_corrupt", self.stats.disk_corrupt as u64);
         m.inc("batch.batch_shared", self.stats.batch_shared as u64);
         m.inc("batch.bins_filled", self.stats.bins_filled as u64);
+        let ss = self.store.stats();
+        m.inc("batch.store.mem_hits", ss.mem_hits);
+        m.inc("batch.store.disk_hits", ss.disk_hits);
+        m.inc("batch.store.misses", ss.misses);
+        m.inc("batch.store.stores", ss.stores);
+        m.inc("batch.store.evictions", ss.evictions);
+        m.inc("batch.store.corrupt", ss.corrupt);
+        m.inc("batch.store.stale", ss.stale);
         m.add_time("batch.plan", self.stats.plan_s);
         m.add_time("batch.fill", self.stats.fill_s);
         m.gauge("batch.plan_hit_rate", self.stats.hit_rate());
@@ -490,12 +602,21 @@ mod tests {
         crate::gen::rmat(n, n * per_row, crate::gen::RmatParams::uniform(), &mut rng)
     }
 
+    /// Executor pinned to a memory-only store: these tests assert exact
+    /// hit/miss counts, which a `SPGEMM_AIA_PLAN_CACHE` env var leaking
+    /// in from the developer's shell (→ process-default disk tier,
+    /// warm from a previous `cargo test`) would turn stateful. Disk-tier
+    /// behavior is covered by `tests/plan_store.rs` with pinned dirs.
+    fn mem_executor(n_streams: usize) -> BatchExecutor {
+        BatchExecutor::with_store(n_streams, TieredStore::mem_only())
+    }
+
     #[test]
     fn batch_matches_serial_multiplies() {
         let a = random_square(1, 128, 4);
         let b = random_square(2, 128, 5);
         let pairs = [(&a, &a), (&a, &b), (&b, &b)];
-        let mut ex = BatchExecutor::new(4);
+        let mut ex = mem_executor(4);
         let out = ex.execute_batch(&pairs);
         assert_eq!(out.len(), 3);
         for (i, &(x, y)) in pairs.iter().enumerate() {
@@ -521,7 +642,7 @@ mod tests {
     #[test]
     fn batch_dedupes_repeated_structures_and_seeds_cache() {
         let a = random_square(8, 96, 4);
-        let mut ex = BatchExecutor::new(2);
+        let mut ex = mem_executor(2);
         let out = ex.execute_batch(&[(&a, &a), (&a, &a), (&a, &a)]);
         assert_eq!(out.len(), 3);
         assert_eq!(out[0], out[2]);
@@ -547,7 +668,7 @@ mod tests {
     fn plan_cache_stats_count_per_unique_structure() {
         let a = random_square(11, 96, 4);
         let b = random_square(12, 96, 4);
-        let mut ex = BatchExecutor::new(2);
+        let mut ex = mem_executor(2);
         // Seed the cache with a's plan.
         ex.multiply_cached(&a, &a);
         assert_eq!((ex.stats.plan_hits, ex.stats.plan_misses), (0, 1));
@@ -572,13 +693,14 @@ mod tests {
 
     /// Regression: `BatchReport.plan_s`/`BatchStats.plan_s` counted 0
     /// planner seconds for products served from the plan cache, even
-    /// though the planner thread re-hashes both operands to validate
-    /// every hit — so the reported plan-reuse saving was overstated.
+    /// though the planner thread fingerprint-validates every hit (an
+    /// O(nnz) structure scan on first touch, a memo read after) — so
+    /// the reported plan-reuse saving was overstated.
     #[test]
     fn plan_resolution_time_is_accounted_for_cache_hits() {
         // Large enough that two structure hashes take measurable time.
         let a = random_square(21, 4096, 8);
-        let mut ex = BatchExecutor::new(2);
+        let mut ex = mem_executor(2);
         ex.execute_batch(&[(&a, &a)]);
         let cold = ex.last_batch.as_ref().unwrap().plan_s;
         assert!(cold > 0.0);
@@ -599,7 +721,7 @@ mod tests {
 
     #[test]
     fn empty_batch_is_fine() {
-        let mut ex = BatchExecutor::new(2);
+        let mut ex = mem_executor(2);
         assert!(ex.execute_batch(&[]).is_empty());
         assert_eq!(ex.last_batch.as_ref().unwrap().products, 0);
     }
@@ -607,7 +729,7 @@ mod tests {
     #[test]
     fn cache_hits_on_repeated_structure() {
         let a = random_square(3, 96, 4);
-        let mut ex = BatchExecutor::new(2);
+        let mut ex = mem_executor(2);
         let c1 = ex.multiply_cached(&a, &a);
         assert_eq!((ex.stats.plan_hits, ex.stats.plan_misses), (0, 1));
         // Same structure, new values: must hit and still be exact.
@@ -627,7 +749,7 @@ mod tests {
     fn cache_replans_on_structure_change() {
         let a = random_square(4, 96, 4);
         let b = random_square(5, 96, 5);
-        let mut ex = BatchExecutor::new(2);
+        let mut ex = mem_executor(2);
         ex.multiply_cached(&a, &a);
         let c = ex.multiply_cached(&b, &b);
         assert_eq!(ex.stats.plan_misses, 2);
@@ -638,7 +760,7 @@ mod tests {
     fn stream_schedule_covers_all_numeric_bins() {
         let a = random_square(6, 256, 6);
         let p = crate::spgemm::hash::PlannedProduct::plan(&a, &a);
-        let ex = BatchExecutor::new(4);
+        let ex = mem_executor(4);
         let s = ex.stream_schedule(&p);
         assert_eq!(s.assignment.len(), p.symbolic_plan().bins.len());
         assert!(s.makespan_ms > 0.0);
@@ -651,7 +773,7 @@ mod tests {
     #[test]
     fn metrics_export() {
         let a = random_square(7, 96, 4);
-        let mut ex = BatchExecutor::new(2);
+        let mut ex = mem_executor(2);
         ex.multiply_cached(&a, &a); // miss, plan cached
         ex.multiply_cached(&a, &a); // hit
         ex.execute_batch(&[(&a, &a)]); // hit via the cache snapshot

@@ -20,6 +20,7 @@ use crate::sparse::Csr;
 use crate::spgemm::hash::PlannedProduct;
 use crate::util::Pcg32;
 use crate::util::error::Result;
+use std::sync::Arc;
 
 /// The three evaluated architectures (paper Table III experiments).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -135,8 +136,10 @@ pub struct Trainer<'a> {
     /// first backward use and kept until [`Trainer::invalidate_plans`].
     adj_t: [Option<Csr>; 3],
     /// One plan slot per aggregation call site (forward layers + forward
-    /// output, then the backward mirrors).
-    plan_slots: Vec<Option<PlannedProduct>>,
+    /// output, then the backward mirrors). Slot misses fall through to
+    /// the executor's tiered plan store, so with `--plan-cache` a
+    /// re-trained process starts from the previous run's plans.
+    plan_slots: Vec<Option<Arc<PlannedProduct>>>,
 }
 
 pub const HIDDEN_LAYERS: usize = 2;

@@ -57,6 +57,19 @@ fn run(args: &[String]) -> Result<()> {
             eprintln!("warning: SPA threshold was already initialized; --spa-threshold ignored");
         }
     }
+    // Global knob, honored by every subcommand: directory of the plan
+    // store's on-disk tier (DESIGN.md §Plan persistence). Every
+    // functional hash executor built afterwards persists symbolic plans
+    // there and loads validated ones back, so repeated runs on the same
+    // generated dataset skip the symbolic phase across processes.
+    if let Some(dir) = opt(args, "--plan-cache") {
+        if dir.is_empty() {
+            bail!("--plan-cache needs a directory path");
+        }
+        if !spgemm_aia::spgemm::hash::set_default_plan_cache_dir(std::path::PathBuf::from(dir)) {
+            eprintln!("warning: plan-cache dir was already initialized; --plan-cache ignored");
+        }
+    }
     match args.first().map(|s| s.as_str()) {
         Some("repro") => cmd_repro(args),
         Some("spgemm") => cmd_spgemm(args),
@@ -86,9 +99,14 @@ fn print_help() {
          and the symbolic bitmap counter (decided from the IP bound).\n                     \
          Default derives from the simulated device's cache geometry\n                     \
          (0.25 for the H200's 32-byte sectors); 0 forces the dense\n                     \
-         kernels on every non-trivial row, >=1 disables them\n\nENV:\n  \
+         kernels on every non-trivial row, >=1 disables them\n  \
+         --plan-cache DIR   persist symbolic plans to DIR (versioned, fingerprint-keyed\n                     \
+         binary files) and load validated ones back, so repeated runs\n                     \
+         on the same generated dataset skip the symbolic phase across\n                     \
+         processes. Stale/corrupt/old-version files replan silently\n\nENV:\n  \
          REPRO_QUICK=1 small subsets; SPGEMM_AIA_ARTIFACTS=dir; SPGEMM_AIA_THREADS=n;\n  \
-         SPGEMM_AIA_SPA_THRESHOLD=T (same as --spa-threshold)"
+         SPGEMM_AIA_SPA_THRESHOLD=T (same as --spa-threshold);\n  \
+         SPGEMM_AIA_PLAN_CACHE=DIR (same as --plan-cache)"
     );
 }
 
@@ -104,6 +122,10 @@ fn cmd_info() -> Result<()> {
     );
     println!("threads: {}", spgemm_aia::util::num_threads());
     println!("spa-threshold: {}", spgemm_aia::spgemm::hash::default_spa_threshold());
+    match spgemm_aia::spgemm::hash::default_plan_cache_dir() {
+        Some(d) => println!("plan-cache: {}", d.display()),
+        None => println!("plan-cache: (none — plans live and die with the process)"),
+    }
     match Runtime::new(&Runtime::artifacts_dir()) {
         Ok(_) if cfg!(feature = "pjrt") => {
             println!("PJRT CPU client: ok (artifacts dir: {})", Runtime::artifacts_dir().display())

@@ -7,9 +7,10 @@
 //! matrices have < 2^32 columns); row pointers are `usize`.
 
 use crate::util::error::{bail, ensure, Result};
+use std::sync::OnceLock;
 
 /// A CSR sparse matrix with f64 values.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug)]
 pub struct Csr {
     pub n_rows: usize,
     pub n_cols: usize,
@@ -19,6 +20,26 @@ pub struct Csr {
     pub col: Vec<u32>,
     /// Non-zero values, parallel to `col`.
     pub val: Vec<f64>,
+    /// Compute-once memo of [`Csr::structure_hash`]. Values may be
+    /// mutated freely (the hash ignores them); every in-tree *structural*
+    /// change builds a new `Csr` through a constructor, which starts
+    /// with an empty memo. `OnceLock` keeps the matrix `Sync` (plan
+    /// fingerprints are taken on the batch planner thread) and `Clone`
+    /// carries the memo along — a clone shares the original's structure.
+    structure_memo: OnceLock<u64>,
+}
+
+/// Equality is over the five public fields only — the lazily computed
+/// structure-hash memo is derived state and must not affect `==` (a
+/// freshly built matrix equals a hashed one).
+impl PartialEq for Csr {
+    fn eq(&self, other: &Csr) -> bool {
+        self.n_rows == other.n_rows
+            && self.n_cols == other.n_cols
+            && self.rpt == other.rpt
+            && self.col == other.col
+            && self.val == other.val
+    }
 }
 
 impl Csr {
@@ -40,7 +61,7 @@ impl Csr {
                 ensure!((last as usize) < n_cols, "row {i} col {last} out of bounds {n_cols}");
             }
         }
-        Ok(Csr { n_rows, n_cols, rpt, col, val })
+        Ok(Csr { n_rows, n_cols, rpt, col, val, structure_memo: OnceLock::new() })
     }
 
     /// Construct without validation (hot paths that build valid output by
@@ -52,13 +73,13 @@ impl Csr {
         }
         #[cfg(not(debug_assertions))]
         {
-            Csr { n_rows, n_cols, rpt, col, val }
+            Csr { n_rows, n_cols, rpt, col, val, structure_memo: OnceLock::new() }
         }
     }
 
     /// The empty matrix of a given shape.
     pub fn zeros(n_rows: usize, n_cols: usize) -> Csr {
-        Csr { n_rows, n_cols, rpt: vec![0; n_rows + 1], col: vec![], val: vec![] }
+        Csr { n_rows, n_cols, rpt: vec![0; n_rows + 1], col: vec![], val: vec![], structure_memo: OnceLock::new() }
     }
 
     /// Identity matrix.
@@ -69,13 +90,21 @@ impl Csr {
             rpt: (0..=n).collect(),
             col: (0..n as u32).collect(),
             val: vec![1.0; n],
+            structure_memo: OnceLock::new(),
         }
     }
 
     /// Diagonal matrix from a vector.
     pub fn from_diag(d: &[f64]) -> Csr {
         let n = d.len();
-        Csr { n_rows: n, n_cols: n, rpt: (0..=n).collect(), col: (0..n as u32).collect(), val: d.to_vec() }
+        Csr {
+            n_rows: n,
+            n_cols: n,
+            rpt: (0..=n).collect(),
+            col: (0..n as u32).collect(),
+            val: d.to_vec(),
+            structure_memo: OnceLock::new(),
+        }
     }
 
     #[inline]
@@ -214,9 +243,25 @@ impl Csr {
     /// ([`crate::spgemm::hash::SymbolicPlan`]) is a pure function of the
     /// operands' structure, so plan-reuse keys on this hash: equal hashes
     /// mean the cached plan is (up to a negligible collision probability)
-    /// valid for a new numeric fill. O(nnz), i.e. far below the cost of
-    /// the multiply it can save.
+    /// valid for a new numeric fill.
+    ///
+    /// Memoized: the first call pays the O(nnz) scan, every later call on
+    /// the same matrix (or a clone of it) is a cell read — so the hot
+    /// reuse paths that fingerprint-validate per multiply
+    /// ([`crate::spgemm::hash::PlannedProduct::matches`], the plan-store
+    /// lookups) stop re-hashing the operands on every call, and
+    /// `PhaseTimes` accounting charges the structure scan exactly once.
     pub fn structure_hash(&self) -> u64 {
+        *self.structure_memo.get_or_init(|| self.compute_structure_hash())
+    }
+
+    /// The memoized hash if [`Csr::structure_hash`] has already run
+    /// (compute-once regression hook; `None` means no scan happened yet).
+    pub fn cached_structure_hash(&self) -> Option<u64> {
+        self.structure_memo.get().copied()
+    }
+
+    fn compute_structure_hash(&self) -> u64 {
         #[inline]
         fn mix(h: u64, x: u64) -> u64 {
             // FNV-1a word step plus an xorshift to spread low-entropy
@@ -324,6 +369,28 @@ mod tests {
         // And shape, even at identical arrays.
         let e = Csr::new(3, 4, vec![0, 2, 2, 4], vec![0, 2, 0, 1], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
         assert_ne!(a.structure_hash(), e.structure_hash());
+    }
+
+    #[test]
+    fn structure_hash_is_memoized_once() {
+        let a = small();
+        assert_eq!(a.cached_structure_hash(), None, "fresh matrices carry no memo");
+        let h = a.structure_hash();
+        assert_eq!(a.cached_structure_hash(), Some(h), "first call must populate the memo");
+        assert_eq!(a.structure_hash(), h, "later calls read the memo");
+        // Clones share the structure, so they inherit the memo.
+        let b = a.clone();
+        assert_eq!(b.cached_structure_hash(), Some(h));
+        // Value mutation never touches the (value-blind) memo.
+        let mut c = a.clone();
+        c.val[0] = -7.0;
+        assert_eq!(c.structure_hash(), h);
+        // The memo is derived state: a freshly built identical matrix
+        // (memo empty) still compares equal to a hashed one.
+        let fresh = Csr::new(3, 3, vec![0, 2, 2, 4], vec![0, 2, 0, 1], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(fresh.cached_structure_hash(), None);
+        assert_eq!(fresh, a);
+        assert_eq!(fresh.structure_hash(), h, "memoized and recomputed hashes agree");
     }
 
     #[test]

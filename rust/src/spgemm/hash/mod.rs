@@ -6,13 +6,16 @@
 //! IP upper bound, [`AccumKind`] scaled-copy / hash / dense-SPA decided
 //! from the exact `nnz(C_i)`), and the plan-reuse handle
 //! ([`PlannedProduct`]) that amortises symbolic analysis across the
-//! numeric fills of iterative workloads — see `DESIGN.md` §"Two-phase
-//! hash engine", §"Plan reuse", §"Accumulator selection", and
-//! §"Symbolic kernel selection".
+//! numeric fills of iterative workloads, backed by the tiered plan
+//! store ([`planstore`]: in-memory + versioned on-disk caching, so the
+//! amortization extends across process lifetimes) — see `DESIGN.md`
+//! §"Two-phase hash engine", §"Plan reuse", §"Accumulator selection",
+//! §"Symbolic kernel selection", and §"Plan persistence".
 
 pub mod engine;
 pub mod grouping;
 pub mod plan;
+pub mod planstore;
 pub mod sort;
 pub mod table;
 
@@ -26,4 +29,8 @@ pub use grouping::{
     DEFAULT_SPA_THRESHOLD, GROUP_SPECS,
 };
 pub use plan::{pair_key, pair_key_from_hashes, PlannedProduct};
+pub use planstore::{
+    default_plan_cache_dir, set_default_plan_cache_dir, DiskStore, MemStore, PlanFingerprint, PlanStore,
+    StoreStats, TieredStore,
+};
 pub use table::{DenseAccumulator, RowCounter};

@@ -82,11 +82,48 @@ impl PlannedProduct {
         }
     }
 
+    /// Rebuild a handle from deserialized parts (the plan store's disk
+    /// tier). `plan_times` is zeroed: a loaded plan paid no symbolic
+    /// seconds in this process — loaders charge their load+validate wall
+    /// time themselves. The caller (the store) is responsible for plan /
+    /// fingerprint coherence; a wrong pairing is caught by the same
+    /// `matches` guard every fill path runs.
+    pub(crate) fn from_parts(
+        plan: SymbolicPlan,
+        a_shape: (usize, usize),
+        b_shape: (usize, usize),
+        a_hash: u64,
+        b_hash: u64,
+    ) -> PlannedProduct {
+        PlannedProduct { plan, a_shape, b_shape, a_hash, b_hash, plan_times: PhaseTimes::default() }
+    }
+
+    /// Shape of operand A at plan time (serialization accessor).
+    pub(crate) fn a_shape(&self) -> (usize, usize) {
+        self.a_shape
+    }
+
+    /// Shape of operand B at plan time (serialization accessor).
+    pub(crate) fn b_shape(&self) -> (usize, usize) {
+        self.b_shape
+    }
+
+    /// Structure hash of operand A at plan time (serialization accessor).
+    pub(crate) fn a_hash(&self) -> u64 {
+        self.a_hash
+    }
+
+    /// Structure hash of operand B at plan time (serialization accessor).
+    pub(crate) fn b_hash(&self) -> u64 {
+        self.b_hash
+    }
+
     /// Whether this plan is valid for `(a, b)`: same shapes and same
-    /// structure hashes as at plan time. O(nnz) — cheap relative to the
-    /// symbolic phase it can skip. Callers that already computed the
-    /// operands' hashes (e.g. for a cache key) should use
-    /// [`PlannedProduct::matches_fingerprint`] instead of re-hashing.
+    /// structure hashes as at plan time. The operands' hashes are
+    /// memoized ([`Csr::structure_hash`]), so on hot reuse paths this is
+    /// a cell read, not an O(nnz) re-scan. Callers that already hold the
+    /// hashes (e.g. as a cache key) can use
+    /// [`PlannedProduct::matches_fingerprint`] directly.
     pub fn matches(&self, a: &Csr, b: &Csr) -> bool {
         self.matches_fingerprint(
             (a.n_rows, a.n_cols),

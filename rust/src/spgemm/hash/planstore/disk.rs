@@ -1,0 +1,416 @@
+//! The versioned on-disk tier: one binary file per planned product,
+//! keyed by the operand pair's structure fingerprint, so a plan built
+//! by one process serves the numeric-only fill path of the next.
+//!
+//! # Format (`SAPL` v1, little-endian, see `util/serial.rs`)
+//!
+//! | field | type | notes |
+//! |-------|------|-------|
+//! | magic | 4 B `b"SAPL"` | SpGEMM-Aia PLan |
+//! | version | u32 | currently [`FORMAT_VERSION`]; mismatch ⇒ miss |
+//! | a_rows, a_cols, b_rows, b_cols | 4 × u64 | operand shapes |
+//! | a_hash, b_hash | 2 × u64 | [`crate::sparse::Csr::structure_hash`] fingerprints |
+//! | spa_threshold | f64 bits | knob the row kernels were selected with |
+//! | ip | u64-slice | per-row IP bounds; the Table-I grouping is rebuilt from these ([`Grouping::build`] is a pure function of `ip`) |
+//! | rpt | u64-slice | exact output row pointers (`n_rows + 1`) |
+//! | accum | u8-slice | per-row [`AccumKind`] ordinals |
+//! | symbolic | u8-slice | per-row [`SymbolicKind`] ordinals |
+//! | bins | u64 count, then per bin: group u8, kind u8, symbolic u8, weight u64, rows u32-slice | the numeric work list |
+//! | checksum | u64 | FNV-1a of every preceding byte |
+//!
+//! # Validation ladder (any failure ⇒ silent miss + replan, never a panic)
+//!
+//! 1. **checksum** — trailing FNV-1a over the whole body (covers the
+//!    magic and version bytes too, so a flipped version byte or any
+//!    other bit flip surfaces here) ⇒ [`DiskLoad::Corrupt`];
+//! 2. **magic / version** — wrong file type or a future/old format
+//!    revision ⇒ [`DiskLoad::Corrupt`];
+//! 3. **fingerprint + configuration** — shapes + structure hashes vs
+//!    the probe (a key collision or a renamed file), and the persisted
+//!    `spa_threshold` vs the process's configured knob (the row-kernel
+//!    selection is baked into the plan — a file written under a
+//!    different `--spa-threshold` must not override the current run's
+//!    configuration) ⇒ [`DiskLoad::Stale`];
+//! 4. **structural sanity** — truncated payload, out-of-range kind
+//!    ordinals, non-monotonic `rpt`, row ids ≥ `n_rows`
+//!    ⇒ [`DiskLoad::Corrupt`]. This keeps a decoded plan safe to hand
+//!    to `numeric_bin_into`, whose release build skips re-validation.
+//!
+//! Writes go through a same-directory temp file + rename, so a reader
+//! racing a writer sees either the old plan or the new one, not a
+//! torn file.
+
+use super::{PlanFingerprint, PlanStore, StoreStats};
+use crate::spgemm::hash::engine::{NumericBin, SymbolicPlan};
+use crate::spgemm::hash::grouping::{AccumKind, Grouping, SymbolicKind};
+use crate::spgemm::hash::plan::PlannedProduct;
+use crate::util::error::{bail, ensure, Result};
+use crate::util::serial::{fnv1a, Reader, Writer};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// First four bytes of every plan file.
+pub const MAGIC: [u8; 4] = *b"SAPL";
+/// Current revision of the on-disk layout. Bump on any layout change;
+/// old files then read as a clean miss and are rewritten on the next
+/// replan.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Outcome of probing the disk tier for one fingerprint.
+pub enum DiskLoad {
+    /// File present, checksum and fingerprint valid: the plan, ready to
+    /// fill (its `plan_times` are zero — the loader charges load time).
+    Hit(Arc<PlannedProduct>),
+    /// File parsed but was built for a different operand pair
+    /// (fingerprint mismatch — e.g. a key collision or a moved file).
+    Stale,
+    /// File unreadable: bad magic/version/checksum, truncated, or
+    /// structurally insane payload.
+    Corrupt,
+    /// No file for this fingerprint.
+    Absent,
+}
+
+/// Filesystem-backed plan store rooted at one cache directory.
+///
+/// Loads are `&self` and stateless, so a cheap clone of the store can
+/// serve lookups from the batch planner thread; the [`PlanStore`] impl
+/// layers hit/miss/corrupt counters on top for standalone use.
+#[derive(Clone)]
+pub struct DiskStore {
+    dir: PathBuf,
+    stats: StoreStats,
+}
+
+impl DiskStore {
+    /// Store rooted at `dir` (created lazily on the first save).
+    pub fn new(dir: impl Into<PathBuf>) -> DiskStore {
+        DiskStore { dir: dir.into(), stats: StoreStats::default() }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Deterministic file path for a fingerprint key (one file per
+    /// operand-pair structure).
+    pub fn path_for(&self, key: u64) -> PathBuf {
+        self.dir.join(format!("{key:016x}.plan"))
+    }
+
+    /// Probe the tier for `fp` (pure — no stats, no writes).
+    ///
+    /// A parsed plan must match both the operand fingerprint *and* the
+    /// process's configured SPA threshold: the per-row kernel selection
+    /// is baked into the plan at plan time, so a file persisted under a
+    /// different `--spa-threshold` would silently serve the wrong
+    /// kernel selection (outputs stay bit-identical, but the knob's
+    /// semantics would break across the process boundary). Either
+    /// mismatch reads as [`DiskLoad::Stale`] — replanning under the
+    /// current threshold rewrites the file.
+    pub fn load(&self, fp: &PlanFingerprint) -> DiskLoad {
+        let bytes = match std::fs::read(self.path_for(fp.key())) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return DiskLoad::Absent,
+            Err(_) => return DiskLoad::Corrupt,
+        };
+        let configured = crate::spgemm::hash::engine::EngineConfig::default().spa_threshold;
+        match decode_plan(&bytes) {
+            Ok(p) if !fp.matches(&p) => DiskLoad::Stale,
+            Ok(p) if p.symbolic_plan().spa_threshold.to_bits() != configured.to_bits() => DiskLoad::Stale,
+            Ok(p) => DiskLoad::Hit(Arc::new(p)),
+            Err(_) => DiskLoad::Corrupt,
+        }
+    }
+
+    /// Persist one plan (pure — no stats). Best-effort: IO failures
+    /// return `false` and leave the tier a silent no-op, mirroring the
+    /// load side's miss-don't-panic contract.
+    pub fn save(&self, plan: &PlannedProduct) -> bool {
+        let bytes = encode_plan_with_version(plan, FORMAT_VERSION);
+        if std::fs::create_dir_all(&self.dir).is_err() {
+            return false;
+        }
+        let key = plan.key();
+        // Same-directory temp + rename: readers never see a torn file.
+        // The temp name carries pid *and* a process-wide sequence number,
+        // so two same-process threads saving the same key cannot
+        // interleave writes into one temp path.
+        static TMP_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let seq = TMP_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let tmp = self.dir.join(format!(".{key:016x}.tmp{}-{seq}", std::process::id()));
+        if std::fs::write(&tmp, &bytes).is_err() {
+            return false;
+        }
+        std::fs::rename(&tmp, self.path_for(key)).is_ok()
+    }
+}
+
+impl PlanStore for DiskStore {
+    fn get(&mut self, fp: &PlanFingerprint) -> Option<Arc<PlannedProduct>> {
+        match self.load(fp) {
+            DiskLoad::Hit(p) => {
+                self.stats.disk_hits += 1;
+                Some(p)
+            }
+            DiskLoad::Stale => {
+                self.stats.stale += 1;
+                self.stats.misses += 1;
+                None
+            }
+            DiskLoad::Corrupt => {
+                self.stats.corrupt += 1;
+                self.stats.misses += 1;
+                None
+            }
+            DiskLoad::Absent => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    fn put(&mut self, plan: Arc<PlannedProduct>) {
+        if self.save(&plan) {
+            self.stats.stores += 1;
+        }
+    }
+
+    /// Plan files currently in the cache directory.
+    fn len(&self) -> usize {
+        std::fs::read_dir(&self.dir)
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .filter(|e| e.path().extension().is_some_and(|x| x == "plan"))
+                    .count()
+            })
+            .unwrap_or(0)
+    }
+
+    /// Delete every plan file under the cache directory (best effort).
+    fn clear(&mut self) {
+        if let Ok(rd) = std::fs::read_dir(&self.dir) {
+            for e in rd.filter_map(|e| e.ok()) {
+                if e.path().extension().is_some_and(|x| x == "plan") {
+                    let _ = std::fs::remove_file(e.path());
+                }
+            }
+        }
+    }
+
+    fn stats(&self) -> StoreStats {
+        self.stats
+    }
+}
+
+/// Serialize one plan into the v-`version` byte layout (the version
+/// parameter exists so tests can fabricate future-revision files with
+/// valid checksums).
+pub(crate) fn encode_plan_with_version(plan: &PlannedProduct, version: u32) -> Vec<u8> {
+    let sp = plan.symbolic_plan();
+    let mut w = Writer::new();
+    w.put_bytes(&MAGIC);
+    w.put_u32(version);
+    let (ar, ac) = plan.a_shape();
+    let (br, bc) = plan.b_shape();
+    w.put_usize(ar);
+    w.put_usize(ac);
+    w.put_usize(br);
+    w.put_usize(bc);
+    w.put_u64(plan.a_hash());
+    w.put_u64(plan.b_hash());
+    w.put_f64(sp.spa_threshold);
+    w.put_u64_slice(&sp.ip);
+    w.put_usize_slice(&sp.rpt);
+    let accum: Vec<u8> = sp.accum.iter().map(|k| k.index() as u8).collect();
+    w.put_u8_slice(&accum);
+    let symbolic: Vec<u8> = sp.symbolic.iter().map(|k| k.index() as u8).collect();
+    w.put_u8_slice(&symbolic);
+    w.put_usize(sp.bins.len());
+    for bin in &sp.bins {
+        w.put_u8(bin.group);
+        w.put_u8(bin.kind.index() as u8);
+        w.put_u8(bin.symbolic_kind.index() as u8);
+        w.put_u64(bin.weight);
+        w.put_u32_slice(&bin.rows);
+    }
+    let sum = fnv1a(w.bytes());
+    w.put_u64(sum);
+    w.into_bytes()
+}
+
+/// Parse and structurally validate one plan file body. Errors on any
+/// corruption; the *fingerprint* decision (hit vs stale) is the
+/// caller's, via [`PlanFingerprint::matches`] on the result.
+pub(crate) fn decode_plan(bytes: &[u8]) -> Result<PlannedProduct> {
+    ensure!(bytes.len() > 8, "file shorter than its checksum trailer");
+    let (body, tail) = bytes.split_at(bytes.len() - 8);
+    let declared = u64::from_le_bytes(tail.try_into().expect("8-byte split"));
+    ensure!(fnv1a(body) == declared, "checksum mismatch");
+    let mut r = Reader::new(body);
+    ensure!(r.take(4)? == &MAGIC[..], "bad magic");
+    let version = r.get_u32()?;
+    ensure!(version == FORMAT_VERSION, "format version {version} != {FORMAT_VERSION}");
+    let a_shape = (r.get_usize()?, r.get_usize()?);
+    let b_shape = (r.get_usize()?, r.get_usize()?);
+    let a_hash = r.get_u64()?;
+    let b_hash = r.get_u64()?;
+    let spa_threshold = r.get_f64()?;
+    let ip = r.get_u64_vec()?;
+    let n_rows = ip.len();
+    ensure!(n_rows == a_shape.0, "ip rows {n_rows} != A rows {}", a_shape.0);
+    let rpt = r.get_usize_vec()?;
+    ensure!(rpt.len() == n_rows + 1, "rpt len {} != rows+1 {}", rpt.len(), n_rows + 1);
+    ensure!(rpt.first() == Some(&0), "rpt[0] must be 0");
+    for w in rpt.windows(2) {
+        ensure!(w[0] <= w[1], "rpt not monotonic");
+    }
+    let accum = decode_kinds(&r.get_u8_vec()?, n_rows, AccumKind::from_index, AccumKind::ALL.len())?;
+    let symbolic = decode_kinds(&r.get_u8_vec()?, n_rows, SymbolicKind::from_index, SymbolicKind::ALL.len())?;
+    let n_bins = r.get_usize()?;
+    let mut bins = Vec::new();
+    for _ in 0..n_bins {
+        let group = r.get_u8()?;
+        ensure!((group as usize) < 4, "bin group {group} out of range");
+        let kind_ix = r.get_u8()? as usize;
+        ensure!(kind_ix < AccumKind::ALL.len(), "bin accumulator ordinal {kind_ix} out of range");
+        let sym_ix = r.get_u8()? as usize;
+        ensure!(sym_ix < SymbolicKind::ALL.len(), "bin symbolic ordinal {sym_ix} out of range");
+        let weight = r.get_u64()?;
+        let rows = r.get_u32_vec()?;
+        for &row in &rows {
+            ensure!((row as usize) < n_rows, "bin row {row} out of range {n_rows}");
+        }
+        bins.push(NumericBin {
+            group,
+            kind: AccumKind::from_index(kind_ix),
+            symbolic_kind: SymbolicKind::from_index(sym_ix),
+            rows,
+            weight,
+        });
+    }
+    ensure!(r.is_done(), "trailing bytes after the bin list");
+    // The Table-I grouping is a pure function of the IP bounds — rebuilt
+    // rather than stored (smaller files, one representation to corrupt).
+    let grouping = Grouping::build(&ip);
+    let plan = SymbolicPlan { ip, grouping, rpt, accum, symbolic, bins, spa_threshold };
+    Ok(PlannedProduct::from_parts(plan, a_shape, b_shape, a_hash, b_hash))
+}
+
+/// Decode a per-row kind array from its ordinal bytes, rejecting
+/// out-of-range ordinals (the enums' `from_index` panics — corrupt
+/// input must error instead).
+fn decode_kinds<K>(bytes: &[u8], n_rows: usize, from_index: fn(usize) -> K, n_kinds: usize) -> Result<Vec<K>> {
+    ensure!(bytes.len() == n_rows, "kind array len {} != rows {n_rows}", bytes.len());
+    let mut out = Vec::with_capacity(n_rows);
+    for &b in bytes {
+        if (b as usize) >= n_kinds {
+            bail!("kind ordinal {b} out of range {n_kinds}");
+        }
+        out.push(from_index(b as usize));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Csr;
+    use crate::util::Pcg32;
+
+    fn unique_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("spgemm-aia-diskstore-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn random_plan(seed: u64, n: usize) -> (Csr, PlannedProduct) {
+        let mut rng = Pcg32::seeded(seed);
+        let a = crate::gen::rmat(n, n * 5, crate::gen::RmatParams::uniform(), &mut rng);
+        let p = PlannedProduct::plan(&a, &a);
+        (a, p)
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_is_exact() {
+        let (a, p) = random_plan(3, 128);
+        let bytes = encode_plan_with_version(&p, FORMAT_VERSION);
+        let q = decode_plan(&bytes).expect("roundtrip decode");
+        assert!(q.matches(&a, &a));
+        assert_eq!(q.nnz(), p.nnz());
+        assert_eq!(q.symbolic_plan().rpt, p.symbolic_plan().rpt);
+        assert_eq!(q.symbolic_plan().ip, p.symbolic_plan().ip);
+        assert_eq!(q.symbolic_plan().bins.len(), p.symbolic_plan().bins.len());
+        assert_eq!(q.symbolic_plan().spa_threshold.to_bits(), p.symbolic_plan().spa_threshold.to_bits());
+        // Loaded plans report zero plan-time seconds — the loader
+        // charges its own load+validate wall time instead.
+        assert_eq!(q.plan_times.total_s(), 0.0);
+        // And the fill is bit-identical to the original plan's.
+        assert_eq!(q.fill(&a, &a), p.fill(&a, &a));
+    }
+
+    #[test]
+    fn store_and_load_through_the_trait() {
+        let dir = unique_dir("trait");
+        let mut s = DiskStore::new(&dir);
+        let (a, p) = random_plan(5, 96);
+        let fp = PlanFingerprint::of(&a, &a);
+        assert!(s.get(&fp).is_none(), "empty directory misses");
+        s.put(Arc::new(p));
+        assert_eq!(s.len(), 1);
+        let q = s.get(&fp).expect("persisted plan must load");
+        assert_eq!(q.fill(&a, &a), crate::spgemm::hash::multiply(&a, &a));
+        assert_eq!((s.stats().disk_hits, s.stats().misses, s.stats().stores), (1, 1, 1));
+        s.clear();
+        assert_eq!(s.len(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn every_truncation_point_decodes_to_an_error() {
+        let (_, p) = random_plan(7, 64);
+        let bytes = encode_plan_with_version(&p, FORMAT_VERSION);
+        for cut in 0..bytes.len() {
+            assert!(decode_plan(&bytes[..cut]).is_err(), "truncation at {cut} must fail cleanly");
+        }
+        assert!(decode_plan(&bytes).is_ok());
+    }
+
+    #[test]
+    fn any_flipped_byte_fails_the_checksum() {
+        let (_, p) = random_plan(9, 64);
+        let bytes = encode_plan_with_version(&p, FORMAT_VERSION);
+        // Flip a sample of bytes across the file, version field included.
+        for pos in [0usize, 4, 5, 20, bytes.len() / 2, bytes.len() - 9, bytes.len() - 1] {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 0x40;
+            assert!(decode_plan(&bad).is_err(), "flip at {pos} must fail");
+        }
+    }
+
+    #[test]
+    fn foreign_threshold_is_stale_not_served() {
+        let dir = unique_dir("threshold");
+        let mut rng = Pcg32::seeded(13);
+        let a = crate::gen::rmat(96, 96 * 5, crate::gen::RmatParams::uniform(), &mut rng);
+        // A knob guaranteed to differ from whatever this process runs at.
+        let foreign = crate::spgemm::hash::default_spa_threshold() + 1.0;
+        let cfg = crate::spgemm::hash::engine::EngineConfig { spa_threshold: foreign, symbolic_threshold: None };
+        let mut s = DiskStore::new(&dir);
+        s.put(Arc::new(PlannedProduct::plan_cfg(&a, &a, &cfg)));
+        let fp = PlanFingerprint::of(&a, &a);
+        assert!(s.get(&fp).is_none(), "a plan selected under a foreign threshold must not load");
+        assert_eq!(s.stats().stale, 1, "threshold mismatch is stale, not corrupt");
+        // Rewriting under the process default heals the entry.
+        s.put(Arc::new(PlannedProduct::plan(&a, &a)));
+        assert!(s.get(&fp).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn future_version_with_valid_checksum_is_a_miss() {
+        let (_, p) = random_plan(11, 64);
+        let bytes = encode_plan_with_version(&p, FORMAT_VERSION + 1);
+        assert!(decode_plan(&bytes).is_err(), "unknown format revision must not parse");
+    }
+}

@@ -1,0 +1,139 @@
+//! The in-memory tier: the structure-keyed `HashMap` of `Arc`-shared
+//! plans that used to live inside `coordinator::batch::BatchExecutor`,
+//! now behind the [`PlanStore`] trait so it composes with the disk tier.
+
+use super::{PlanFingerprint, PlanStore, StoreStats};
+use crate::spgemm::hash::plan::PlannedProduct;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Plans kept before arbitrary eviction kicks in (iterative workloads
+/// cycle over a handful of structures; the cap only bounds pathological
+/// callers).
+pub const DEFAULT_MEM_CAP: usize = 32;
+
+/// Bounded in-memory plan cache, keyed by [`PlanFingerprint::key`] and
+/// fingerprint-validated on every lookup (a key collision must degrade
+/// to a miss, never serve a wrong plan).
+pub struct MemStore {
+    cap: usize,
+    map: HashMap<u64, Arc<PlannedProduct>>,
+    stats: StoreStats,
+}
+
+impl Default for MemStore {
+    fn default() -> MemStore {
+        MemStore::new(DEFAULT_MEM_CAP)
+    }
+}
+
+impl MemStore {
+    /// A store holding at most `cap` plans (arbitrary eviction at the cap).
+    pub fn new(cap: usize) -> MemStore {
+        assert!(cap > 0, "a zero-capacity plan cache is a typo, not a policy");
+        MemStore { cap, map: HashMap::new(), stats: StoreStats::default() }
+    }
+
+    /// Fingerprint-validated lookup with no stats side effects — the
+    /// composing [`super::TieredStore`] keeps one coherent counter set
+    /// instead of double-counting per tier.
+    pub(crate) fn lookup(&self, fp: &PlanFingerprint) -> Option<Arc<PlannedProduct>> {
+        self.map.get(&fp.key()).filter(|p| fp.matches(p)).map(Arc::clone)
+    }
+
+    /// Insert without stats; returns `true` if an unrelated entry was
+    /// evicted to make room.
+    pub(crate) fn insert(&mut self, plan: Arc<PlannedProduct>) -> bool {
+        let key = plan.key();
+        let mut evicted = false;
+        if self.map.len() >= self.cap && !self.map.contains_key(&key) {
+            if let Some(k) = self.map.keys().next().copied() {
+                self.map.remove(&k);
+                evicted = true;
+            }
+        }
+        self.map.insert(key, plan);
+        evicted
+    }
+
+    /// Read-only clone of the map for lock-free planner-thread lookups
+    /// (`Arc` clones — plans are shared, not copied).
+    pub(crate) fn snapshot_map(&self) -> HashMap<u64, Arc<PlannedProduct>> {
+        self.map.clone()
+    }
+}
+
+impl PlanStore for MemStore {
+    fn get(&mut self, fp: &PlanFingerprint) -> Option<Arc<PlannedProduct>> {
+        match self.lookup(fp) {
+            Some(p) => {
+                self.stats.mem_hits += 1;
+                Some(p)
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    fn put(&mut self, plan: Arc<PlannedProduct>) {
+        if self.insert(plan) {
+            self.stats.evictions += 1;
+        }
+        self.stats.stores += 1;
+    }
+
+    fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    fn clear(&mut self) {
+        self.map.clear();
+    }
+
+    fn stats(&self) -> StoreStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Csr;
+
+    fn plan_of(n: usize) -> Arc<PlannedProduct> {
+        let a = Csr::identity(n);
+        Arc::new(PlannedProduct::plan(&a, &a))
+    }
+
+    #[test]
+    fn hit_miss_and_eviction_counters() {
+        let mut s = MemStore::new(2);
+        let a = Csr::identity(4);
+        let fp = PlanFingerprint::of(&a, &a);
+        assert!(s.get(&fp).is_none());
+        s.put(plan_of(4));
+        let got = s.get(&fp).expect("stored plan must hit");
+        assert_eq!(got.nnz(), 4);
+        assert_eq!((s.stats().mem_hits, s.stats().misses, s.stats().stores), (1, 1, 1));
+        // Two more distinct structures overflow the cap of 2.
+        s.put(plan_of(5));
+        s.put(plan_of(6));
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.stats().evictions, 1);
+        s.clear();
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn lookup_rejects_fingerprint_mismatch() {
+        // Same key slot, different structure: forced by inserting under
+        // a's key but probing with b's fingerprint — absent key → miss;
+        // the validation path is exercised by the tiered/disk tests.
+        let mut s = MemStore::default();
+        s.put(plan_of(4));
+        let b = Csr::identity(5);
+        assert!(s.get(&PlanFingerprint::of(&b, &b)).is_none());
+    }
+}

@@ -1,0 +1,430 @@
+//! Tiered plan store (ROADMAP "Plan persistence"): the plan cache as a
+//! subsystem instead of a `HashMap` welded into the batch executor.
+//!
+//! The symbolic phase is a pure function of the operands' *structure*,
+//! so its output survives not just across iterations (in-memory plan
+//! reuse, PR 2) but across **process lifetimes**: a CLI run that planned
+//! `A²` for a generated dataset can leave the plan on disk, and the next
+//! run on the same dataset skips straight to the numeric fill. Liu &
+//! Vinter (arXiv:1504.05022) and OCEAN (arXiv:2604.19004) both identify
+//! the upper-bound/estimation analysis as the dominant non-numeric cost
+//! worth amortizing — persistence extends that amortization to every
+//! future process.
+//!
+//! Three pieces:
+//!
+//! - [`PlanStore`] — the trait: fingerprint-keyed `get`/`put` of
+//!   `Arc<PlannedProduct>`s plus hit/miss/evict/corrupt counters
+//!   ([`StoreStats`]).
+//! - [`MemStore`] / [`DiskStore`] — the tiers. `MemStore` is the
+//!   bounded structure-keyed map that used to live in `BatchExecutor`;
+//!   `DiskStore` is the versioned binary format (`disk.rs` documents
+//!   the layout and its validation ladder — stale fingerprint, version
+//!   mismatch, or truncated file all degrade to a silent miss + replan,
+//!   never a panic).
+//! - [`TieredStore`] — the `mem → disk` composition every consumer
+//!   holds: lookups try memory first, then load-validate-or-replan
+//!   through disk (disk hits are promoted to the memory tier); fresh
+//!   plans are written through to both tiers.
+//!
+//! Consumers: [`crate::coordinator::batch::BatchExecutor`] (including
+//! its planner thread, via [`TieredStore::snapshot`]),
+//! [`crate::coordinator::executor::SpgemmExecutor::multiply_reusing`]
+//! on slot misses, and through those MCL, GNN training, and the
+//! `repro planreuse` experiment. The CLI's `--plan-cache DIR` (env
+//! `SPGEMM_AIA_PLAN_CACHE`) selects the process-default disk tier —
+//! see [`default_plan_cache_dir`].
+
+mod disk;
+mod mem;
+
+pub use disk::{DiskLoad, DiskStore, FORMAT_VERSION};
+pub use mem::{MemStore, DEFAULT_MEM_CAP};
+
+use super::plan::{pair_key_from_hashes, PlannedProduct};
+use crate::sparse::Csr;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, OnceLock};
+
+/// Structure identity of one `A·B` product: operand shapes plus their
+/// [`Csr::structure_hash`] fingerprints. This is the store key *and*
+/// the validation record — every tier re-checks the full fingerprint on
+/// lookup, so a key collision (or a renamed plan file) degrades to a
+/// miss rather than serving a wrong plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlanFingerprint {
+    pub a_shape: (usize, usize),
+    pub b_shape: (usize, usize),
+    pub a_hash: u64,
+    pub b_hash: u64,
+}
+
+impl PlanFingerprint {
+    /// Fingerprint of an operand pair. The structure hashes are
+    /// memoized on the matrices, so repeated fingerprinting of the same
+    /// operands is a cell read, not an O(nnz) scan.
+    pub fn of(a: &Csr, b: &Csr) -> PlanFingerprint {
+        PlanFingerprint {
+            a_shape: (a.n_rows, a.n_cols),
+            b_shape: (b.n_rows, b.n_cols),
+            a_hash: a.structure_hash(),
+            b_hash: b.structure_hash(),
+        }
+    }
+
+    /// 64-bit store key (order-sensitive combination of both hashes —
+    /// the same key [`PlannedProduct::key`] reports for its plan).
+    pub fn key(&self) -> u64 {
+        pair_key_from_hashes(self.a_hash, self.b_hash)
+    }
+
+    /// Full-fingerprint validation against a candidate plan.
+    pub fn matches(&self, p: &PlannedProduct) -> bool {
+        p.matches_fingerprint(self.a_shape, self.b_shape, self.a_hash, self.b_hash)
+    }
+}
+
+/// Counters every [`PlanStore`] reports. Tier naming: `mem_hits` /
+/// `disk_hits` split where a hit was served; `stale` and `corrupt`
+/// sub-classify disk misses (fingerprint/configuration mismatch vs
+/// unreadable file); `evictions` counts memory-tier capacity
+/// evictions; `stores` counts successful writes to the
+/// implementation's *persistent* tier — a standalone [`MemStore`]
+/// counts every insert, while [`TieredStore`] counts disk
+/// write-throughs only (0 without a disk tier: memory-tier population
+/// is visible through `len`, not `stores`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    pub mem_hits: u64,
+    pub disk_hits: u64,
+    pub misses: u64,
+    pub stores: u64,
+    pub evictions: u64,
+    pub corrupt: u64,
+    pub stale: u64,
+}
+
+impl StoreStats {
+    /// Hits across all tiers.
+    pub fn hits(&self) -> u64 {
+        self.mem_hits + self.disk_hits
+    }
+
+    /// Accumulate another counter set (tier composition / batch tallies).
+    pub fn merge(&mut self, o: &StoreStats) {
+        self.mem_hits += o.mem_hits;
+        self.disk_hits += o.disk_hits;
+        self.misses += o.misses;
+        self.stores += o.stores;
+        self.evictions += o.evictions;
+        self.corrupt += o.corrupt;
+        self.stale += o.stale;
+    }
+}
+
+/// A fingerprint-keyed cache of planned products. `get` must validate
+/// the full fingerprint (never trust the key alone), `put` must be
+/// best-effort (an unwritable tier degrades to a smaller cache, not an
+/// error), and implementations keep their own [`StoreStats`].
+pub trait PlanStore {
+    fn get(&mut self, fp: &PlanFingerprint) -> Option<Arc<PlannedProduct>>;
+    fn put(&mut self, plan: Arc<PlannedProduct>);
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    fn clear(&mut self);
+    fn stats(&self) -> StoreStats;
+}
+
+/// Where a [`TieredStore::get_traced`] lookup was resolved.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GetOutcome {
+    MemHit,
+    DiskHit,
+    /// Nothing served; the flags say whether the disk tier saw an
+    /// unreadable file or a fingerprint mismatch on the way.
+    Miss { corrupt: bool, stale: bool },
+}
+
+/// The `mem → disk` composition. Disk is optional — [`TieredStore::mem_only`]
+/// reproduces the pre-persistence behavior exactly.
+pub struct TieredStore {
+    mem: MemStore,
+    disk: Option<DiskStore>,
+    stats: StoreStats,
+}
+
+impl Default for TieredStore {
+    /// [`TieredStore::process_default`].
+    fn default() -> TieredStore {
+        TieredStore::process_default()
+    }
+}
+
+impl TieredStore {
+    /// Memory tier only (no persistence).
+    pub fn mem_only() -> TieredStore {
+        TieredStore { mem: MemStore::default(), disk: None, stats: StoreStats::default() }
+    }
+
+    /// Memory tier backed by a disk tier rooted at `dir`.
+    pub fn with_disk(dir: impl Into<PathBuf>) -> TieredStore {
+        TieredStore { mem: MemStore::default(), disk: Some(DiskStore::new(dir)), stats: StoreStats::default() }
+    }
+
+    /// The store the process was configured for: disk-backed when
+    /// `--plan-cache` / `SPGEMM_AIA_PLAN_CACHE` named a directory
+    /// ([`default_plan_cache_dir`]), memory-only otherwise.
+    pub fn process_default() -> TieredStore {
+        match default_plan_cache_dir() {
+            Some(dir) => TieredStore::with_disk(dir),
+            None => TieredStore::mem_only(),
+        }
+    }
+
+    /// The disk tier's directory, if one is attached.
+    pub fn disk_dir(&self) -> Option<&Path> {
+        self.disk.as_ref().map(|d| d.dir())
+    }
+
+    /// [`PlanStore::get`] plus *where* the lookup resolved. Disk hits
+    /// are promoted into the memory tier, so the next lookup of the
+    /// same structure is a map probe.
+    pub fn get_traced(&mut self, fp: &PlanFingerprint) -> (Option<Arc<PlannedProduct>>, GetOutcome) {
+        if let Some(p) = self.mem.lookup(fp) {
+            self.stats.mem_hits += 1;
+            return (Some(p), GetOutcome::MemHit);
+        }
+        let (mut corrupt, mut stale) = (false, false);
+        if let Some(disk) = &self.disk {
+            match disk.load(fp) {
+                DiskLoad::Hit(p) => {
+                    self.stats.disk_hits += 1;
+                    if self.mem.insert(Arc::clone(&p)) {
+                        self.stats.evictions += 1;
+                    }
+                    return (Some(p), GetOutcome::DiskHit);
+                }
+                DiskLoad::Corrupt => {
+                    self.stats.corrupt += 1;
+                    corrupt = true;
+                }
+                DiskLoad::Stale => {
+                    self.stats.stale += 1;
+                    stale = true;
+                }
+                DiskLoad::Absent => {}
+            }
+        }
+        self.stats.misses += 1;
+        (None, GetOutcome::Miss { corrupt, stale })
+    }
+
+    /// Insert a plan into the memory tier, writing through to disk only
+    /// when `to_disk` (freshly built plans persist; plans just loaded
+    /// *from* disk are promoted without being rewritten).
+    pub fn admit(&mut self, plan: Arc<PlannedProduct>, to_disk: bool) {
+        if to_disk {
+            if let Some(disk) = &self.disk {
+                if disk.save(&plan) {
+                    self.stats.stores += 1;
+                }
+            }
+        }
+        if self.mem.insert(plan) {
+            self.stats.evictions += 1;
+        }
+    }
+
+    /// Fold outcome counters observed outside `get`/`put` (the batch
+    /// planner thread resolves against a [`TieredStore::snapshot`] and
+    /// reports what happened here) into this store's [`StoreStats`].
+    pub fn tally(&mut self, outcomes: &StoreStats) {
+        self.stats.merge(outcomes);
+    }
+
+    /// Immutable view for a planner thread: an `Arc`-cloned copy of the
+    /// memory tier plus a stateless handle on the disk tier. Lookups
+    /// are pure; the caller reports outcomes back via
+    /// [`TieredStore::tally`] and inserts via [`TieredStore::admit`].
+    pub fn snapshot(&self) -> StoreSnapshot {
+        StoreSnapshot {
+            mem: self.mem.snapshot_map(),
+            disk: self.disk.as_ref().map(|d| DiskStore::new(d.dir())),
+        }
+    }
+}
+
+impl PlanStore for TieredStore {
+    fn get(&mut self, fp: &PlanFingerprint) -> Option<Arc<PlannedProduct>> {
+        self.get_traced(fp).0
+    }
+
+    fn put(&mut self, plan: Arc<PlannedProduct>) {
+        self.admit(plan, true);
+    }
+
+    /// Plans in the *memory* tier (the bounded working set; the disk
+    /// tier is unbounded and only consulted on memory misses).
+    fn len(&self) -> usize {
+        self.mem.len()
+    }
+
+    /// Drop the memory tier. Disk files are left in place: they are
+    /// fingerprint-validated on every load, so a stale file can only
+    /// ever cost a read, never a wrong result.
+    fn clear(&mut self) {
+        self.mem.clear();
+    }
+
+    fn stats(&self) -> StoreStats {
+        self.stats
+    }
+}
+
+/// Read-only view of a [`TieredStore`] for lock-free planner-thread
+/// lookups (see [`TieredStore::snapshot`]).
+pub struct StoreSnapshot {
+    mem: HashMap<u64, Arc<PlannedProduct>>,
+    disk: Option<DiskStore>,
+}
+
+impl StoreSnapshot {
+    /// Fingerprint-validated lookup, memory tier first, then disk —
+    /// the pure counterpart of [`TieredStore::get_traced`], with the
+    /// same `(plan, outcome)` shape (no stats, no promotion; the
+    /// caller reports outcomes back via [`TieredStore::tally`]).
+    pub fn lookup(&self, fp: &PlanFingerprint) -> (Option<Arc<PlannedProduct>>, GetOutcome) {
+        if let Some(p) = self.mem.get(&fp.key()).filter(|p| fp.matches(p)) {
+            return (Some(Arc::clone(p)), GetOutcome::MemHit);
+        }
+        match self.disk.as_ref().map(|d| d.load(fp)) {
+            Some(DiskLoad::Hit(p)) => (Some(p), GetOutcome::DiskHit),
+            Some(DiskLoad::Corrupt) => (None, GetOutcome::Miss { corrupt: true, stale: false }),
+            Some(DiskLoad::Stale) => (None, GetOutcome::Miss { corrupt: false, stale: true }),
+            Some(DiskLoad::Absent) | None => (None, GetOutcome::Miss { corrupt: false, stale: false }),
+        }
+    }
+}
+
+static PLAN_CACHE_DIR_CELL: OnceLock<Option<PathBuf>> = OnceLock::new();
+
+/// Set the process-wide plan-cache directory (the CLI's `--plan-cache`
+/// knob). Returns `false` if the default was already read or set — call
+/// once, at startup, before the first executor is built.
+pub fn set_default_plan_cache_dir(dir: PathBuf) -> bool {
+    PLAN_CACHE_DIR_CELL.set(Some(dir)).is_ok()
+}
+
+/// The process-wide plan-cache directory: the value set by
+/// [`set_default_plan_cache_dir`], else the `SPGEMM_AIA_PLAN_CACHE` env
+/// var, else `None` (no disk tier — plans live and die with the
+/// process). Empty env values are treated as unset.
+pub fn default_plan_cache_dir() -> Option<PathBuf> {
+    PLAN_CACHE_DIR_CELL
+        .get_or_init(|| {
+            std::env::var_os("SPGEMM_AIA_PLAN_CACHE")
+                .filter(|v| !v.is_empty())
+                .map(PathBuf::from)
+        })
+        .clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn unique_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("spgemm-aia-tiered-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn random_square(seed: u64, n: usize) -> Csr {
+        let mut rng = Pcg32::seeded(seed);
+        crate::gen::rmat(n, n * 4, crate::gen::RmatParams::uniform(), &mut rng)
+    }
+
+    #[test]
+    fn fingerprint_key_matches_plan_key() {
+        let a = random_square(1, 64);
+        let fp = PlanFingerprint::of(&a, &a);
+        let p = PlannedProduct::plan(&a, &a);
+        assert_eq!(fp.key(), p.key());
+        assert!(fp.matches(&p));
+        let b = random_square(2, 64);
+        assert!(!PlanFingerprint::of(&b, &b).matches(&p));
+    }
+
+    #[test]
+    fn tiered_promotes_disk_hits_to_mem() {
+        let dir = unique_dir("promote");
+        let a = random_square(3, 96);
+        let fp = PlanFingerprint::of(&a, &a);
+        // Writer "process": build and persist.
+        let mut writer = TieredStore::with_disk(&dir);
+        writer.put(Arc::new(PlannedProduct::plan(&a, &a)));
+        assert_eq!(writer.stats().stores, 1);
+        // Reader "process": cold memory tier, warm disk.
+        let mut reader = TieredStore::with_disk(&dir);
+        let (p, how) = reader.get_traced(&fp);
+        assert!(p.is_some());
+        assert_eq!(how, GetOutcome::DiskHit);
+        // Promoted: second lookup is a memory hit.
+        let (_, how2) = reader.get_traced(&fp);
+        assert_eq!(how2, GetOutcome::MemHit);
+        assert_eq!((reader.stats().disk_hits, reader.stats().mem_hits), (1, 1));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mem_only_store_misses_cold() {
+        let a = random_square(4, 64);
+        let mut s = TieredStore::mem_only();
+        let (p, how) = s.get_traced(&PlanFingerprint::of(&a, &a));
+        assert!(p.is_none());
+        assert_eq!(how, GetOutcome::Miss { corrupt: false, stale: false });
+        assert_eq!(s.stats().misses, 1);
+        assert!(s.disk_dir().is_none());
+    }
+
+    #[test]
+    fn snapshot_lookup_agrees_with_store() {
+        let dir = unique_dir("snapshot");
+        let a = random_square(5, 96);
+        let b = random_square(6, 96);
+        let mut s = TieredStore::with_disk(&dir);
+        s.put(Arc::new(PlannedProduct::plan(&a, &a)));
+        let snap = s.snapshot();
+        let (hit, how) = snap.lookup(&PlanFingerprint::of(&a, &a));
+        assert!(hit.is_some());
+        assert_eq!(how, GetOutcome::MemHit);
+        let (miss, how) = snap.lookup(&PlanFingerprint::of(&b, &b));
+        assert!(miss.is_none());
+        assert_eq!(how, GetOutcome::Miss { corrupt: false, stale: false });
+        // A fresh store's snapshot sees only the disk tier.
+        let cold = TieredStore::with_disk(&dir).snapshot();
+        let (hit, how) = cold.lookup(&PlanFingerprint::of(&a, &a));
+        assert!(hit.is_some());
+        assert_eq!(how, GetOutcome::DiskHit);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn clear_keeps_disk_files() {
+        let dir = unique_dir("clear");
+        let a = random_square(7, 64);
+        let mut s = TieredStore::with_disk(&dir);
+        s.put(Arc::new(PlannedProduct::plan(&a, &a)));
+        assert_eq!(s.len(), 1);
+        s.clear();
+        assert_eq!(s.len(), 0, "memory tier dropped");
+        let (p, how) = s.get_traced(&PlanFingerprint::of(&a, &a));
+        assert!(p.is_some(), "disk tier survives an invalidate");
+        assert_eq!(how, GetOutcome::DiskHit);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

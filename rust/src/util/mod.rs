@@ -1,6 +1,6 @@
 //! Cross-cutting utilities: deterministic RNG, std-only data parallelism,
-//! JSON emission, error handling, micro-bench harness, and
-//! property-testing support.
+//! JSON emission, little-endian binary serialization, error handling,
+//! micro-bench harness, and property-testing support.
 //!
 //! These exist in-tree because the build environment is offline: the
 //! crate is std-only (no rayon/serde/criterion/anyhow — see Cargo.toml),
@@ -13,6 +13,7 @@ pub mod json;
 pub mod parallel;
 pub mod qc;
 pub mod rng;
+pub mod serial;
 
 pub use parallel::{num_threads, par_chunks, par_dynamic, par_map};
 pub use rng::Pcg32;

@@ -1,0 +1,262 @@
+//! Tiny little-endian binary codec (offline build has no serde/bincode).
+//!
+//! Only what the versioned on-disk plan tier
+//! ([`crate::spgemm::hash::planstore::DiskStore`]) needs: fixed-width
+//! integers, `f64` bit patterns, and length-prefixed slices, written
+//! into a `Vec<u8>` and read back with hard bounds checks. The write
+//! side is infallible (it only grows a buffer); every read returns a
+//! [`Result`] and fails cleanly on truncation — a corrupt or cut-short
+//! file must degrade to a cache miss, never a panic or an over-sized
+//! allocation (slice reads bound the declared length by the bytes
+//! actually remaining before allocating).
+//!
+//! `f64` round-trips via [`f64::to_bits`]/[`f64::from_bits`], so values
+//! (including the engine's threshold knob) are bit-identical after a
+//! round trip. Writing only what `util/json.rs` writes for text, this
+//! stays std-only by design.
+
+use crate::util::error::{anyhow, ensure, Result};
+
+/// FNV-1a over a byte slice — the checksum the on-disk plan format
+/// trails its payload with (catches bit flips that would otherwise
+/// deserialize into structurally plausible garbage).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Append-only binary writer.
+#[derive(Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Writer {
+        Writer::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// The bytes written so far (for checksumming before the trailer).
+    pub fn bytes(&self) -> &[u8] {
+        &self.buf
+    }
+
+    pub fn put_bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+
+    pub fn put_u8(&mut self, x: u8) {
+        self.buf.push(x);
+    }
+
+    pub fn put_u32(&mut self, x: u32) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, x: u64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    /// `usize` travels as `u64` (the format is 64-bit regardless of host).
+    pub fn put_usize(&mut self, x: usize) {
+        self.put_u64(x as u64);
+    }
+
+    pub fn put_f64(&mut self, x: f64) {
+        self.put_u64(x.to_bits());
+    }
+
+    /// Length-prefixed (`u64` count) slice of bytes.
+    pub fn put_u8_slice(&mut self, xs: &[u8]) {
+        self.put_usize(xs.len());
+        self.put_bytes(xs);
+    }
+
+    /// Length-prefixed (`u64` count) slice of `u32`s.
+    pub fn put_u32_slice(&mut self, xs: &[u32]) {
+        self.put_usize(xs.len());
+        for &x in xs {
+            self.put_u32(x);
+        }
+    }
+
+    /// Length-prefixed (`u64` count) slice of `u64`s.
+    pub fn put_u64_slice(&mut self, xs: &[u64]) {
+        self.put_usize(xs.len());
+        for &x in xs {
+            self.put_u64(x);
+        }
+    }
+
+    /// Length-prefixed (`u64` count) slice of `usize`s, as `u64`s.
+    pub fn put_usize_slice(&mut self, xs: &[usize]) {
+        self.put_usize(xs.len());
+        for &x in xs {
+            self.put_u64(x as u64);
+        }
+    }
+}
+
+/// Bounds-checked binary reader over a borrowed byte slice.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    /// Take `n` raw bytes; errors (never panics) past the end.
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(n <= self.remaining(), "truncated: need {n} bytes, {} left", self.remaining());
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    pub fn get_usize(&mut self) -> Result<usize> {
+        let x = self.get_u64()?;
+        usize::try_from(x).map_err(|_| anyhow!("value {x} exceeds the host usize"))
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.get_u64()?))
+    }
+
+    /// Declared element count of a length-prefixed slice, bounded by
+    /// what could actually fit in the remaining bytes — a corrupt
+    /// length must fail here, not in an over-sized allocation.
+    fn get_len(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.get_usize()?;
+        ensure!(
+            n.checked_mul(elem_bytes).is_some_and(|total| total <= self.remaining()),
+            "truncated: {n} elements of {elem_bytes} bytes exceed the {} remaining",
+            self.remaining()
+        );
+        Ok(n)
+    }
+
+    pub fn get_u8_vec(&mut self) -> Result<Vec<u8>> {
+        let n = self.get_len(1)?;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    pub fn get_u32_vec(&mut self) -> Result<Vec<u32>> {
+        let n = self.get_len(4)?;
+        (0..n).map(|_| self.get_u32()).collect()
+    }
+
+    pub fn get_u64_vec(&mut self) -> Result<Vec<u64>> {
+        let n = self.get_len(8)?;
+        (0..n).map(|_| self.get_u64()).collect()
+    }
+
+    pub fn get_usize_vec(&mut self) -> Result<Vec<usize>> {
+        let n = self.get_len(8)?;
+        (0..n).map(|_| self.get_usize()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_primitives() {
+        let mut w = Writer::new();
+        w.put_u8(7);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u64(u64::MAX - 3);
+        w.put_usize(42);
+        w.put_f64(-0.1);
+        w.put_u8_slice(&[1, 2, 3]);
+        w.put_u32_slice(&[10, 20]);
+        w.put_u64_slice(&[5]);
+        w.put_usize_slice(&[0, 9, 18]);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert_eq!(r.get_u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.get_usize().unwrap(), 42);
+        // f64 must round-trip bit-identically.
+        assert_eq!(r.get_f64().unwrap().to_bits(), (-0.1f64).to_bits());
+        assert_eq!(r.get_u8_vec().unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.get_u32_vec().unwrap(), vec![10, 20]);
+        assert_eq!(r.get_u64_vec().unwrap(), vec![5]);
+        assert_eq!(r.get_usize_vec().unwrap(), vec![0, 9, 18]);
+        assert!(r.is_done());
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let mut w = Writer::new();
+        w.put_u64_slice(&[1, 2, 3]);
+        let bytes = w.into_bytes();
+        // Cut at every possible length: reads must error, never panic.
+        for cut in 0..bytes.len() {
+            let mut r = Reader::new(&bytes[..cut]);
+            let _ = r.get_u64_vec(); // ok or error — both acceptable at partial cuts
+        }
+        let mut r = Reader::new(&bytes[..bytes.len() - 1]);
+        assert!(r.get_u64_vec().is_err(), "one missing byte must fail the slice read");
+    }
+
+    #[test]
+    fn corrupt_length_fails_before_allocating() {
+        let mut w = Writer::new();
+        w.put_u64(u64::MAX); // absurd element count
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert!(r.get_u32_vec().is_err());
+        let mut r = Reader::new(&bytes);
+        assert!(r.get_u64_vec().is_err());
+    }
+
+    #[test]
+    fn fnv_is_stable_and_sensitive() {
+        let h = fnv1a(b"spgemm");
+        assert_eq!(h, fnv1a(b"spgemm"), "checksum must be deterministic");
+        assert_ne!(h, fnv1a(b"spgemM"));
+        assert_ne!(fnv1a(&[]), 0);
+    }
+}

@@ -9,7 +9,7 @@
 use spgemm_aia::coordinator::batch::BatchExecutor;
 use spgemm_aia::gen::{rmat, structured, RmatParams};
 use spgemm_aia::sparse::{Coo, Csr};
-use spgemm_aia::spgemm::hash::{self, AccumKind, EngineConfig, PlannedProduct};
+use spgemm_aia::spgemm::hash::{self, AccumKind, EngineConfig, PlannedProduct, TieredStore};
 use spgemm_aia::spgemm::reference::spgemm_reference;
 use spgemm_aia::util::{qc, Pcg32};
 
@@ -143,7 +143,9 @@ fn batch_pipeline_preserves_spa_outputs() {
     assert!(kinds[AccumKind::Spa.index()] > 0, "test needs SPA rows at the default threshold");
     assert!(kinds[AccumKind::Hash.index()] > 0, "test needs hash rows alongside the SPA rows");
     let pairs = [(&a, &a), (&a, &b), (&b, &b), (&a, &a)];
-    let mut ex = BatchExecutor::new(4);
+    // Memory-only store: keep this pipeline test off any plan-cache
+    // directory a shell-exported SPGEMM_AIA_PLAN_CACHE might name.
+    let mut ex = BatchExecutor::with_store(4, TieredStore::mem_only());
     let out = ex.execute_batch(&pairs);
     for (i, &(x, y)) in pairs.iter().enumerate() {
         assert_eq!(out[i], hash::multiply(x, y), "batch product {i} vs serial multiply");

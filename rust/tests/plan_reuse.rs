@@ -9,7 +9,7 @@ use spgemm_aia::coordinator::batch::BatchExecutor;
 use spgemm_aia::coordinator::executor::{SpgemmExecutor, Variant};
 use spgemm_aia::gen::{rmat, structured, RmatParams};
 use spgemm_aia::sparse::{Coo, Csr};
-use spgemm_aia::spgemm::hash::{self, PlannedProduct};
+use spgemm_aia::spgemm::hash::{self, PlannedProduct, TieredStore};
 use spgemm_aia::util::{qc, Pcg32};
 
 fn random_rect(rng: &mut Pcg32, rows: usize, cols: usize) -> Csr {
@@ -72,7 +72,9 @@ fn property_rectangular_batch_matches_serial() {
         let b = random_rect(&mut rng, k, n);
         let b2 = random_rect(&mut rng, k, n);
         let pairs = [(&a, &b), (&a, &b2), (&a, &b)];
-        let mut ex = BatchExecutor::new(2);
+        // Memory-only store: qc generates many structures — do not
+        // write them into a shell-configured plan-cache directory.
+        let mut ex = BatchExecutor::with_store(2, TieredStore::mem_only());
         let out = ex.execute_batch(&pairs);
         for (i, &(x, y)) in pairs.iter().enumerate() {
             assert_eq!(out[i], hash::multiply(x, y), "batch product {i} vs serial multiply");
@@ -99,6 +101,10 @@ fn replan_when_structure_changes_between_fills() {
     assert_ne!(a.structure_hash(), grown.structure_hash());
 
     let mut ex = SpgemmExecutor::fast(Variant::Hash);
+    // Memory-only store: this test asserts exact hit/miss counts, which
+    // a SPGEMM_AIA_PLAN_CACHE env var from the developer's shell (warm
+    // disk tier) would turn stateful across `cargo test` runs.
+    ex.attach_plan_store(TieredStore::mem_only());
     let mut slot = None;
     let c1 = ex.multiply_reusing(&mut slot, &a, &a);
     assert_eq!(c1, hash::multiply(&a, &a));

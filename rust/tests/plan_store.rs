@@ -1,0 +1,280 @@
+//! Tiered plan-store acceptance tests (`DESIGN.md` §Plan persistence):
+//!
+//! - a plan written by one "process" (store instance) and loaded by
+//!   another produces a `fill` result **bit-identical** to a cold
+//!   `multiply`, with zero symbolic-phase seconds on the hit path
+//!   (load + validation time still charged);
+//! - the on-disk format round-trips across the RMAT and structured
+//!   generators;
+//! - every corruption case — truncated file, flipped version byte,
+//!   stale fingerprint (file renamed under a foreign key) — degrades to
+//!   a silent miss + clean replan, never a panic.
+
+use spgemm_aia::coordinator::batch::BatchExecutor;
+use spgemm_aia::coordinator::executor::{SpgemmExecutor, Variant};
+use spgemm_aia::gen::{rmat, structured, RmatParams};
+use spgemm_aia::sparse::Csr;
+use spgemm_aia::spgemm::hash::planstore::{DiskStore, PlanFingerprint, PlanStore, TieredStore};
+use spgemm_aia::spgemm::hash::{self, PlannedProduct};
+use spgemm_aia::util::Pcg32;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Per-test scratch directory (tests run in parallel in one process —
+/// the tag keeps them disjoint), cleaned on entry so every run is cold.
+fn scratch(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("spgemm-aia-planstore-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn rmat_square(seed: u64, n: usize, per_row: usize) -> Csr {
+    let mut rng = Pcg32::seeded(seed);
+    rmat(n, n * per_row, RmatParams::uniform(), &mut rng)
+}
+
+/// The acceptance criterion, end to end on the batch path: plan written
+/// by one executor, loaded by a fresh one (cold memory tier), fill
+/// bit-identical to a cold multiply, zero symbolic seconds reported on
+/// the hit path while validation time is still charged.
+#[test]
+fn cross_process_disk_hit_is_bit_identical_with_zero_symbolic_seconds() {
+    let dir = scratch("cross-process");
+    let a = rmat_square(1, 512, 6);
+    let cold = hash::multiply(&a, &a);
+
+    // "Process" 1: plans, fills, persists.
+    let mut writer = BatchExecutor::with_store(4, TieredStore::with_disk(&dir));
+    let c1 = writer.execute_batch(&[(&a, &a)]).remove(0);
+    assert_eq!(c1, cold);
+    assert_eq!(writer.stats.plans_built, 1);
+    assert_eq!(writer.store_stats().stores, 1, "the fresh plan must be persisted");
+
+    // "Process" 2: fresh executor, fresh store, same directory.
+    let mut reader = BatchExecutor::with_store(4, TieredStore::with_disk(&dir));
+    let c2 = reader.execute_batch(&[(&a, &a)]).remove(0);
+    assert_eq!(c2, cold, "disk-hit fill must be bit-identical to a cold multiply");
+    assert_eq!(reader.stats.plans_built, 0, "nothing replanned");
+    assert_eq!((reader.stats.disk_hits, reader.stats.plan_hits, reader.stats.plan_misses), (1, 0, 0));
+    let report = reader.last_batch.as_ref().expect("batch report recorded");
+    assert_eq!(report.disk_hits, 1);
+    assert_eq!(report.symbolic_kind_s, [0.0; 3], "the hit path must report zero symbolic-phase seconds");
+    assert!(report.plan_s > 0.0, "load + fingerprint validation is still charged");
+    assert!(reader.stats.hit_rate() > 0.99, "disk hits count as reuse");
+
+    // And the cached entry point agrees: cold memory tier again, one
+    // disk hit, promoted so the next call is a memory hit.
+    let mut reader2 = BatchExecutor::with_store(4, TieredStore::with_disk(&dir));
+    assert_eq!(reader2.multiply_cached(&a, &a), cold);
+    assert_eq!(reader2.multiply_cached(&a, &a), cold);
+    assert_eq!((reader2.stats.disk_hits, reader2.stats.plan_hits, reader2.stats.plans_built), (1, 1, 0));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The same criterion on the application entry point:
+/// `SpgemmExecutor::multiply_reusing` with an attached store — a fresh
+/// executor's slot miss is served by the disk tier, skipping the
+/// symbolic phase (symbolic_s stays 0) while grouping_s charges the
+/// load + validation.
+#[test]
+fn multiply_reusing_served_from_disk_skips_symbolic_phase() {
+    let dir = scratch("reusing");
+    let a = rmat_square(2, 384, 5);
+    let cold = hash::multiply(&a, &a);
+
+    let mut writer = SpgemmExecutor::fast(Variant::Hash);
+    writer.attach_plan_store(TieredStore::with_disk(&dir));
+    let mut slot = None;
+    assert_eq!(writer.multiply_reusing(&mut slot, &a, &a), cold);
+    assert_eq!((writer.plan_hits, writer.plan_misses, writer.disk_hits), (0, 1, 0));
+
+    let mut reader = SpgemmExecutor::fast(Variant::Hash);
+    reader.attach_plan_store(TieredStore::with_disk(&dir));
+    let mut slot = None; // fresh process: no slot, cold memory tier
+    let c = reader.multiply_reusing(&mut slot, &a, &a);
+    assert_eq!(c, cold, "disk-served fill must be bit-identical to a cold multiply");
+    assert_eq!((reader.plan_hits, reader.plan_misses, reader.disk_hits), (0, 0, 1));
+    assert_eq!(reader.phase_times.symbolic_s, 0.0, "the symbolic phase must not run on a disk hit");
+    assert!(reader.phase_times.grouping_s > 0.0, "load + validation time is still charged");
+    assert!(reader.phase_times.numeric_s > 0.0, "the fill itself is timed");
+    assert!(slot.is_some(), "the served plan lands in the slot for later in-process hits");
+    assert!((reader.plan_hit_rate() - 1.0).abs() < 1e-12);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Round-trip across generators: persist, reload into a fresh store,
+/// and compare the reloaded plan's `fill` bit-for-bit against a cold
+/// `multiply`, for RMAT and each structured family.
+#[test]
+fn roundtrip_fill_matches_cold_multiply_across_generators() {
+    let dir = scratch("generators");
+    let mut rng = Pcg32::seeded(33);
+    let mats: Vec<(&str, Csr)> = vec![
+        ("rmat-web", rmat(192, 1400, RmatParams::web(), &mut rng)),
+        ("rmat-citation", rmat(160, 1100, RmatParams::citation(), &mut rng)),
+        ("circuit", structured::circuit(160, &mut rng)),
+        ("economics", structured::economics(160, &mut rng)),
+        ("fem_banded", structured::fem_banded(160, 4, &mut rng)),
+        ("p2p", structured::p2p(160, &mut rng)),
+        ("protein", structured::protein_contact(128, 6, &mut rng)),
+    ];
+    for (name, a) in &mats {
+        let cold = hash::multiply(a, a);
+        let mut store = DiskStore::new(&dir);
+        store.put(Arc::new(PlannedProduct::plan(a, a)));
+        let mut fresh = DiskStore::new(&dir);
+        let fp = PlanFingerprint::of(a, a);
+        let p = fresh.get(&fp).unwrap_or_else(|| panic!("{name}: persisted plan must load"));
+        assert_eq!(p.fill(a, a), cold, "{name}: reloaded fill vs cold multiply");
+        assert_eq!(p.nnz(), cold.nnz(), "{name}");
+        assert_eq!(p.plan_times.total_s(), 0.0, "{name}: loaded plans carry no plan-time seconds");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Truncation at every byte boundary of a real plan file degrades to a
+/// clean replan — silent miss, corrupt counter, correct output.
+#[test]
+fn truncated_plan_file_degrades_to_clean_replan() {
+    let dir = scratch("truncate");
+    let a = rmat_square(4, 256, 5);
+    let cold = hash::multiply(&a, &a);
+    let fp = PlanFingerprint::of(&a, &a);
+    let mut writer = BatchExecutor::with_store(2, TieredStore::with_disk(&dir));
+    writer.multiply_cached(&a, &a);
+    let path = DiskStore::new(&dir).path_for(fp.key());
+    let bytes = std::fs::read(&path).expect("plan file written");
+    // A sample of cut points, including pathological ones.
+    for cut in [0usize, 1, 4, 8, bytes.len() / 3, bytes.len() / 2, bytes.len() - 9, bytes.len() - 1] {
+        std::fs::write(&path, &bytes[..cut]).unwrap();
+        let mut ex = BatchExecutor::with_store(2, TieredStore::with_disk(&dir));
+        let c = ex.multiply_cached(&a, &a);
+        assert_eq!(c, cold, "cut at {cut}: replanned output must match the cold multiply");
+        assert_eq!(ex.stats.disk_corrupt, 1, "cut at {cut}: the corrupt file is counted");
+        assert_eq!((ex.stats.disk_hits, ex.stats.plans_built), (0, 1), "cut at {cut}: silent miss + rebuild");
+    }
+    // The replan rewrote the file: the next cold process hits again.
+    let mut ex = BatchExecutor::with_store(2, TieredStore::with_disk(&dir));
+    ex.multiply_cached(&a, &a);
+    assert_eq!((ex.stats.disk_hits, ex.stats.disk_corrupt), (1, 0), "replans must heal the cache");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A flipped version byte (or any other bit flip — the trailing
+/// checksum covers the whole body) reads as corrupt and replans.
+#[test]
+fn flipped_version_byte_degrades_to_clean_replan() {
+    let dir = scratch("version");
+    let a = rmat_square(5, 256, 5);
+    let cold = hash::multiply(&a, &a);
+    let fp = PlanFingerprint::of(&a, &a);
+    let mut writer = BatchExecutor::with_store(2, TieredStore::with_disk(&dir));
+    writer.multiply_cached(&a, &a);
+    let path = DiskStore::new(&dir).path_for(fp.key());
+    let mut bytes = std::fs::read(&path).expect("plan file written");
+    bytes[4] ^= 0x01; // the version field sits right after the 4-byte magic
+    std::fs::write(&path, &bytes).unwrap();
+    let mut ex = BatchExecutor::with_store(2, TieredStore::with_disk(&dir));
+    assert_eq!(ex.multiply_cached(&a, &a), cold);
+    assert_eq!((ex.stats.disk_corrupt, ex.stats.plans_built), (1, 1));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A structurally valid plan file sitting under the *wrong* key (e.g. a
+/// renamed/copied cache entry) fails fingerprint validation: a stale
+/// silent miss, a clean replan, and never a wrong result.
+#[test]
+fn stale_fingerprint_degrades_to_clean_replan() {
+    let dir = scratch("stale");
+    let a = rmat_square(6, 256, 5);
+    let b = rmat_square(7, 256, 5); // same shape, different structure
+    let cold_b = hash::multiply(&b, &b);
+    let mut writer = BatchExecutor::with_store(2, TieredStore::with_disk(&dir));
+    writer.multiply_cached(&a, &a);
+    // Masquerade a's plan file as b's.
+    let ds = DiskStore::new(&dir);
+    let a_path = ds.path_for(PlanFingerprint::of(&a, &a).key());
+    let b_path = ds.path_for(PlanFingerprint::of(&b, &b).key());
+    std::fs::rename(&a_path, &b_path).expect("rename plan file");
+    let mut ex = BatchExecutor::with_store(2, TieredStore::with_disk(&dir));
+    let c = ex.multiply_cached(&b, &b);
+    assert_eq!(c, cold_b, "a stale plan must never leak into the output");
+    assert_eq!(ex.stats.plans_built, 1, "stale fingerprint forces a replan");
+    assert_eq!((ex.stats.disk_hits, ex.stats.disk_corrupt), (0, 0), "stale is a miss, not corruption");
+    assert_eq!(ex.store_stats().stale, 1, "the store counts the stale file");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A plan persisted under a different `--spa-threshold` must not
+/// override the current process's kernel selection: the disk tier
+/// treats it as stale, replans under the configured knob, and the
+/// rewrite heals the cache entry.
+#[test]
+fn foreign_threshold_plan_degrades_to_clean_replan() {
+    let dir = scratch("threshold");
+    let a = rmat_square(10, 256, 5);
+    let cold = hash::multiply(&a, &a);
+    // Simulate a previous run with a different knob by persisting a plan
+    // selected under it directly.
+    let foreign = hash::default_spa_threshold() + 1.0;
+    let cfg = spgemm_aia::spgemm::hash::EngineConfig { spa_threshold: foreign, symbolic_threshold: None };
+    let mut seed_store = DiskStore::new(&dir);
+    seed_store.put(Arc::new(PlannedProduct::plan_cfg(&a, &a, &cfg)));
+    // This process (default threshold): the file must read as stale.
+    let mut ex = BatchExecutor::with_store(2, TieredStore::with_disk(&dir));
+    assert_eq!(ex.multiply_cached(&a, &a), cold);
+    assert_eq!((ex.stats.disk_hits, ex.stats.plans_built), (0, 1), "foreign-threshold plan forces a replan");
+    assert_eq!(ex.store_stats().stale, 1);
+    // The replan rewrote the file under the current knob: next cold
+    // process hits.
+    let mut ex2 = BatchExecutor::with_store(2, TieredStore::with_disk(&dir));
+    assert_eq!(ex2.multiply_cached(&a, &a), cold);
+    assert_eq!((ex2.stats.disk_hits, ex2.stats.plans_built), (1, 0));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The batch pipeline (planner thread + snapshot lookups) sees the disk
+/// tier too, and repeated structures inside the batch still dedupe.
+#[test]
+fn batch_pipeline_mixes_disk_hits_and_fresh_plans() {
+    let dir = scratch("pipeline");
+    let a = rmat_square(8, 192, 4);
+    let b = rmat_square(9, 192, 4);
+    let mut writer = BatchExecutor::with_store(2, TieredStore::with_disk(&dir));
+    writer.multiply_cached(&a, &a); // persist a's plan only
+    let mut ex = BatchExecutor::with_store(4, TieredStore::with_disk(&dir));
+    let out = ex.execute_batch(&[(&a, &a), (&b, &b), (&a, &a)]);
+    assert_eq!(out[0], hash::multiply(&a, &a));
+    assert_eq!(out[1], hash::multiply(&b, &b));
+    assert_eq!(out[0], out[2]);
+    // a: disk hit (once; the repeat is an in-batch share), b: fresh.
+    assert_eq!(ex.stats.disk_hits, 1);
+    assert_eq!(ex.stats.plans_built, 1);
+    assert_eq!(ex.stats.batch_shared, 1);
+    // b's fresh plan was persisted: a fully warm third process.
+    let mut ex2 = BatchExecutor::with_store(4, TieredStore::with_disk(&dir));
+    ex2.execute_batch(&[(&a, &a), (&b, &b)]);
+    assert_eq!((ex2.stats.disk_hits, ex2.stats.plans_built), (2, 0));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// MCL driven with a store-attached executor: a second "process" on the
+/// same graph replays its expansions from disk.
+#[test]
+fn mcl_rerun_starts_from_persisted_plans() {
+    let dir = scratch("mcl");
+    let mut rng = Pcg32::seeded(12);
+    let g = spgemm_aia::gen::structured::community_powerlaw(96, 5, 3, &mut rng);
+    let params = spgemm_aia::apps::MclParams { max_iters: 4, tol: 0.0, ..Default::default() };
+    let mut ex1 = SpgemmExecutor::fast(Variant::Hash);
+    ex1.attach_plan_store(TieredStore::with_disk(&dir));
+    let r1 = spgemm_aia::apps::mcl(&g, &params, &mut ex1);
+    assert!(r1.plan_misses >= 1, "first process must plan at least once");
+    let mut ex2 = SpgemmExecutor::fast(Variant::Hash);
+    ex2.attach_plan_store(TieredStore::with_disk(&dir));
+    let r2 = spgemm_aia::apps::mcl(&g, &params, &mut ex2);
+    assert_eq!(r1.clusters, r2.clusters, "persisted plans must not change the clustering");
+    assert!(r2.disk_hits >= 1, "second process must be served from disk at least once");
+    assert_eq!(r2.plan_misses, 0, "every structure of the rerun was already persisted");
+    let _ = std::fs::remove_dir_all(&dir);
+}
