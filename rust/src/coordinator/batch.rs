@@ -122,6 +122,62 @@ impl BatchStats {
     }
 }
 
+/// Where a plan-reuse lookup resolved one product's plan.
+///
+/// Was a private detail of [`BatchExecutor::execute_batch`]; the serve
+/// daemon reports it per request (`"plan":"fresh|shared|mem|disk"`), so
+/// it is public with a stable wire label.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanSource {
+    /// Structure new to the store: the symbolic phase ran.
+    Fresh,
+    /// Resolved earlier in the same batch (in-batch dedup).
+    Shared,
+    /// Memory-tier hit.
+    Mem,
+    /// Disk-tier hit (plan from an earlier process, validated).
+    Disk,
+}
+
+impl PlanSource {
+    /// Stable lowercase label — what the serve line protocol emits.
+    pub fn label(self) -> &'static str {
+        match self {
+            PlanSource::Fresh => "fresh",
+            PlanSource::Shared => "shared",
+            PlanSource::Mem => "mem",
+            PlanSource::Disk => "disk",
+        }
+    }
+
+    /// True when the symbolic phase was skipped (any kind of reuse).
+    pub fn is_hit(self) -> bool {
+        !matches!(self, PlanSource::Fresh)
+    }
+}
+
+/// Per-call trace of one [`BatchExecutor::multiply_cached_traced`]:
+/// where the plan came from and what the call cost. The serve daemon's
+/// per-request accounting (and its CI smoke assertion that a second
+/// identical product pays zero symbolic seconds) rides on this.
+#[derive(Clone, Copy, Debug)]
+pub struct CachedMultiply {
+    /// Where the plan was resolved (never [`PlanSource::Shared`] here —
+    /// sharing is a batch concept).
+    pub source: PlanSource,
+    /// Seconds resolving the plan: fingerprint + store lookup, plus
+    /// grouping + symbolic analysis when the structure was new.
+    pub plan_s: f64,
+    /// Seconds in the numeric fill.
+    pub fill_s: f64,
+    /// Symbolic-phase seconds *this call* paid: the freshly built
+    /// plan's symbolic wall time on a miss, exactly `0.0` on any hit —
+    /// the quantity plan reuse exists to zero out.
+    pub symbolic_s: f64,
+    /// Output nonzeros.
+    pub nnz: usize,
+}
+
 /// What one [`BatchExecutor::execute_batch`] call did.
 #[derive(Clone, Debug)]
 pub struct BatchReport {
@@ -241,17 +297,6 @@ impl BatchExecutor {
     /// input order and are bit-identical to per-pair
     /// [`crate::spgemm::hash::multiply`] calls.
     pub fn execute_batch(&mut self, pairs: &[(&Csr, &Csr)]) -> Vec<Csr> {
-        /// Where the planner thread resolved one slot's plan.
-        enum PlanSource {
-            /// Structure new to the store: the symbolic phase ran.
-            Fresh,
-            /// Resolved earlier in this same batch (in-batch dedup).
-            Shared,
-            /// Memory-tier hit.
-            Mem,
-            /// Disk-tier hit (plan from an earlier process, validated).
-            Disk,
-        }
         /// Pipeline events, in channel order per product: one `Plan`
         /// (symbolic counts landed), then one `Bin` per numeric bin.
         enum PipeEvent {
@@ -475,22 +520,37 @@ impl BatchExecutor {
     /// structure hashes are memoized, so fingerprinting costs one scan
     /// per matrix lifetime, not one per call.
     pub fn multiply_cached(&mut self, a: &Csr, b: &Csr) -> Csr {
+        self.multiply_cached_traced(a, b).0
+    }
+
+    /// [`BatchExecutor::multiply_cached`] plus a per-call
+    /// [`CachedMultiply`] trace: plan source, resolve/fill seconds, and
+    /// the symbolic seconds this call actually paid (0 on any hit).
+    pub fn multiply_cached_traced(&mut self, a: &Csr, b: &Csr) -> (Csr, CachedMultiply) {
         let t_resolve = Instant::now();
         let fp = PlanFingerprint::of(a, b);
         let (found, outcome) = self.store.get_traced(&fp);
         if let Some(p) = found {
-            match outcome {
-                GetOutcome::DiskHit => self.stats.disk_hits += 1,
-                _ => self.stats.plan_hits += 1,
-            }
+            let source = match outcome {
+                GetOutcome::DiskHit => {
+                    self.stats.disk_hits += 1;
+                    PlanSource::Disk
+                }
+                _ => {
+                    self.stats.plan_hits += 1;
+                    PlanSource::Mem
+                }
+            };
             // Hits still pay fingerprint validation (and disk hits the
             // load): count it so reuse is never reported as entirely
             // free.
-            self.stats.plan_s += t_resolve.elapsed().as_secs_f64();
+            let plan_s = t_resolve.elapsed().as_secs_f64();
+            self.stats.plan_s += plan_s;
             let (c, ft) = p.fill_unchecked_timed(a, b);
             self.stats.fills += 1;
             self.stats.fill_s += ft.numeric_s;
-            return c;
+            let trace = CachedMultiply { source, plan_s, fill_s: ft.numeric_s, symbolic_s: 0.0, nnz: c.nnz() };
+            return (c, trace);
         }
         if let GetOutcome::Miss { corrupt: true, .. } = outcome {
             self.stats.disk_corrupt += 1;
@@ -501,12 +561,15 @@ impl BatchExecutor {
         // so the two paths stay comparable.
         let p = Arc::new(PlannedProduct::plan_cfg_hashed(a, b, &EngineConfig::default(), fp.a_hash, fp.b_hash));
         self.stats.plans_built += 1;
-        self.stats.plan_s += t_resolve.elapsed().as_secs_f64();
+        let plan_s = t_resolve.elapsed().as_secs_f64();
+        self.stats.plan_s += plan_s;
+        let symbolic_s = p.plan_times.symbolic_s;
         let (c, ft) = p.fill_unchecked_timed(a, b);
         self.stats.fills += 1;
         self.stats.fill_s += ft.numeric_s;
         self.store.put(p);
-        c
+        let trace = CachedMultiply { source: PlanSource::Fresh, plan_s, fill_s: ft.numeric_s, symbolic_s, nnz: c.nnz() };
+        (c, trace)
     }
 
     /// Number of plans currently in the store's memory tier.
@@ -520,8 +583,15 @@ impl BatchExecutor {
     }
 
     /// The disk tier's cache directory, if one is attached.
-    pub fn plan_cache_dir(&self) -> Option<&std::path::Path> {
+    pub fn plan_cache_dir(&self) -> Option<std::path::PathBuf> {
         self.store.disk_dir()
+    }
+
+    /// A shared handle to this executor's plan store — [`TieredStore`]
+    /// clones share tiers and counters, so a serve session (or another
+    /// executor) built from this handle reuses the same cache.
+    pub fn store(&self) -> TieredStore {
+        self.store.clone()
     }
 
     /// Drop the store's memory tier (e.g. after a sparsification event
@@ -564,14 +634,7 @@ impl BatchExecutor {
         m.inc("batch.disk_corrupt", self.stats.disk_corrupt as u64);
         m.inc("batch.batch_shared", self.stats.batch_shared as u64);
         m.inc("batch.bins_filled", self.stats.bins_filled as u64);
-        let ss = self.store.stats();
-        m.inc("batch.store.mem_hits", ss.mem_hits);
-        m.inc("batch.store.disk_hits", ss.disk_hits);
-        m.inc("batch.store.misses", ss.misses);
-        m.inc("batch.store.stores", ss.stores);
-        m.inc("batch.store.evictions", ss.evictions);
-        m.inc("batch.store.corrupt", ss.corrupt);
-        m.inc("batch.store.stale", ss.stale);
+        m.observe_store_stats("batch.store", &self.store.stats());
         m.add_time("batch.plan", self.stats.plan_s);
         m.add_time("batch.fill", self.stats.fill_s);
         m.gauge("batch.plan_hit_rate", self.stats.hit_rate());
@@ -743,6 +806,25 @@ mod tests {
         assert_eq!(ex.cached_plans(), 1);
         ex.invalidate();
         assert_eq!(ex.cached_plans(), 0);
+    }
+
+    #[test]
+    fn traced_multiply_reports_source_and_symbolic_cost() {
+        let a = random_square(9, 96, 4);
+        let mut ex = mem_executor(2);
+        let (c1, t1) = ex.multiply_cached_traced(&a, &a);
+        assert_eq!(t1.source, PlanSource::Fresh);
+        assert!(!t1.source.is_hit());
+        assert_eq!(t1.source.label(), "fresh");
+        assert!(t1.symbolic_s > 0.0, "a fresh plan pays the symbolic phase");
+        assert_eq!(t1.nnz, c1.nnz());
+        let (c2, t2) = ex.multiply_cached_traced(&a, &a);
+        assert_eq!(t2.source, PlanSource::Mem);
+        assert!(t2.source.is_hit());
+        assert_eq!(t2.source.label(), "mem");
+        assert_eq!(t2.symbolic_s, 0.0, "a plan hit pays zero symbolic seconds");
+        assert_eq!(c1, c2, "hit and miss paths are bit-identical");
+        assert_eq!(t1.nnz, t2.nnz);
     }
 
     #[test]

@@ -146,6 +146,16 @@ impl SpgemmExecutor {
         }
     }
 
+    /// Functional executor over an explicit, possibly *shared* plan
+    /// store — [`TieredStore`] clones share tiers and counters, so the
+    /// serve daemon (and anything else holding a clone) pools its plans
+    /// with this executor instead of minting a private cache.
+    pub fn with_plan_store(variant: Variant, store: TieredStore) -> SpgemmExecutor {
+        let mut ex = SpgemmExecutor::fast(variant);
+        ex.attach_plan_store(store);
+        ex
+    }
+
     /// Attach (or replace) the tiered plan store consulted by
     /// [`SpgemmExecutor::multiply_reusing`] slot misses — tests and
     /// benches pin their cache directories with this.
@@ -286,13 +296,7 @@ impl SpgemmExecutor {
         m.inc(&format!("{prefix}.plan_misses"), self.plan_misses as u64);
         m.inc(&format!("{prefix}.disk_hits"), self.disk_hits as u64);
         if let Some(ss) = self.plan_store_stats() {
-            m.inc(&format!("{prefix}.store.mem_hits"), ss.mem_hits);
-            m.inc(&format!("{prefix}.store.disk_hits"), ss.disk_hits);
-            m.inc(&format!("{prefix}.store.misses"), ss.misses);
-            m.inc(&format!("{prefix}.store.stores"), ss.stores);
-            m.inc(&format!("{prefix}.store.evictions"), ss.evictions);
-            m.inc(&format!("{prefix}.store.corrupt"), ss.corrupt);
-            m.inc(&format!("{prefix}.store.stale"), ss.stale);
+            m.observe_store_stats(&format!("{prefix}.store"), &ss);
         }
         m.gauge(&format!("{prefix}.sim_ms"), self.sim_ms);
         m.observe_phase_times(&prefix, &self.phase_times);

@@ -60,6 +60,24 @@ impl Metrics {
         self.add_time(&format!("{prefix}.numeric_spa"), pt.numeric_kind_s[2]);
     }
 
+    /// Record a plan-store counter snapshot under
+    /// `<prefix>.{mem_hits,disk_hits,misses,stores,evictions,corrupt,stale}`.
+    /// Counters are *set* (not incremented): the stats are cumulative
+    /// already, so repeated exports must not double-count.
+    pub fn observe_store_stats(&mut self, prefix: &str, ss: &crate::spgemm::hash::StoreStats) {
+        for (name, v) in [
+            ("mem_hits", ss.mem_hits),
+            ("disk_hits", ss.disk_hits),
+            ("misses", ss.misses),
+            ("stores", ss.stores),
+            ("evictions", ss.evictions),
+            ("corrupt", ss.corrupt),
+            ("stale", ss.stale),
+        ] {
+            self.counters.insert(format!("{prefix}.{name}"), v);
+        }
+    }
+
     pub fn counter(&self, name: &str) -> u64 {
         self.counters.get(name).copied().unwrap_or(0)
     }
@@ -127,6 +145,27 @@ mod tests {
         assert!((m.timer_total("spgemm.symbolic_bitmap") - 0.6).abs() < 1e-12);
         assert!((m.timer_total("spgemm.symbolic_hash") - 1.2).abs() < 1e-12);
         assert_eq!(m.timer_total("spgemm.missing"), 0.0);
+    }
+
+    #[test]
+    fn store_stats_are_set_not_summed() {
+        use crate::spgemm::hash::StoreStats;
+        let mut m = Metrics::new();
+        let ss = StoreStats {
+            mem_hits: 3,
+            disk_hits: 1,
+            misses: 2,
+            stores: 2,
+            evictions: 0,
+            corrupt: 0,
+            stale: 1,
+        };
+        m.observe_store_stats("s.store", &ss);
+        m.observe_store_stats("s.store", &ss); // cumulative snapshot: re-export must not double
+        assert_eq!(m.counter("s.store.mem_hits"), 3);
+        assert_eq!(m.counter("s.store.disk_hits"), 1);
+        assert_eq!(m.counter("s.store.misses"), 2);
+        assert_eq!(m.counter("s.store.stale"), 1);
     }
 
     #[test]

@@ -8,5 +8,5 @@ pub mod executor;
 pub mod metrics;
 pub mod scheduler;
 
-pub use batch::{BatchExecutor, BatchReport, BatchStats};
+pub use batch::{BatchExecutor, BatchReport, BatchStats, CachedMultiply, PlanSource};
 pub use executor::{SpgemmExecutor, Variant};

@@ -10,7 +10,9 @@
 //!   [`coordinator::batch::BatchExecutor`]), a cycle-approximate
 //!   GPU + HBM + AIA memory-system simulator, the evaluated
 //!   applications (graph contraction, Markov clustering, GNN training),
-//!   and the coordinator/CLI.
+//!   the coordinator/CLI, and a service daemon ([`serve`]) exposing a
+//!   resident executor over one shared plan store through a
+//!   Unix-socket line protocol.
 //! - **L2 (`python/compile/model.py`)** — GNN dense compute (layer
 //!   fwd/bwd, loss) in JAX, AOT-lowered to HLO text artifacts.
 //! - **L1 (`python/compile/kernels/`)** — Pallas kernels (top-k pruning,
@@ -41,4 +43,5 @@ pub mod apps;
 pub mod runtime;
 pub mod gnn;
 pub mod repro;
+pub mod serve;
 pub mod spgemm;

@@ -8,6 +8,8 @@
 //! spgemm-aia mcl --dataset <name> [--variant ...]
 //! spgemm-aia contract --dataset <name> [--variant ...]
 //! spgemm-aia gnn --dataset <name> --arch gcn|gin|sage [--epochs N]
+//! spgemm-aia serve --socket <path> [--queue N] [--streams N] [--plan-cache DIR]
+//! spgemm-aia plan-cache ls|verify|prune [--dir DIR] [--max-bytes N]
 //! spgemm-aia info
 //! ```
 
@@ -76,6 +78,8 @@ fn run(args: &[String]) -> Result<()> {
         Some("mcl") => cmd_mcl(args),
         Some("contract") => cmd_contract(args),
         Some("gnn") => cmd_gnn(args),
+        Some("serve") => cmd_serve(args),
+        Some("plan-cache") => cmd_plan_cache(args),
         Some("info") => cmd_info(),
         Some("help") | None => {
             print_help();
@@ -83,6 +87,116 @@ fn run(args: &[String]) -> Result<()> {
         }
         Some(other) => bail!("unknown subcommand {other} (try `help`)"),
     }
+}
+
+/// `serve` — the daemon (DESIGN.md §2e).
+///
+/// Its plan store is built from `serve`'s own flag/env resolution
+/// ([`spgemm_aia::serve::resolve_plan_cache`]), deliberately bypassing
+/// the process-wide `OnceLock` default: that cell latches on first
+/// read, so anything constructed before flag parsing could have pinned
+/// the wrong cache directory for the daemon's whole lifetime
+/// (regression-pinned by `tests/serve.rs`).
+fn cmd_serve(args: &[String]) -> Result<()> {
+    #[cfg(not(unix))]
+    {
+        let _ = args;
+        bail!("serve needs unix domain sockets (unsupported on this platform)");
+    }
+    #[cfg(unix)]
+    {
+        let socket = opt(args, "--socket").ok_or_else(|| anyhow!("--socket PATH required"))?;
+        let mut cfg = spgemm_aia::serve::ServeConfig::default();
+        if let Some(q) = opt(args, "--queue") {
+            cfg.queue_capacity = q.parse().map_err(|_| anyhow!("--queue must be a positive integer (got {q})"))?;
+            if cfg.queue_capacity == 0 {
+                bail!("--queue must be at least 1");
+            }
+        }
+        if let Some(s) = opt(args, "--streams") {
+            cfg.n_streams = s.parse().map_err(|_| anyhow!("--streams must be a positive integer (got {s})"))?;
+            if cfg.n_streams == 0 {
+                bail!("--streams must be at least 1");
+            }
+        }
+        let env = std::env::var("SPGEMM_AIA_PLAN_CACHE").ok();
+        cfg.plan_cache = spgemm_aia::serve::resolve_plan_cache(opt(args, "--plan-cache"), env.as_deref());
+        spgemm_aia::serve::session::run_daemon(std::path::Path::new(socket), &cfg)
+    }
+}
+
+/// `plan-cache ls|verify|prune` — lifecycle management of the disk
+/// tier, over the same validation ladder the loader uses.
+fn cmd_plan_cache(args: &[String]) -> Result<()> {
+    use spgemm_aia::spgemm::hash::DiskStore;
+    let action = args
+        .get(1)
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow!("plan-cache needs an action: ls | verify | prune --max-bytes N"))?;
+    let dir = opt(args, "--dir")
+        .map(std::path::PathBuf::from)
+        .or_else(spgemm_aia::spgemm::hash::default_plan_cache_dir)
+        .ok_or_else(|| anyhow!("no cache directory (use --dir, --plan-cache, or SPGEMM_AIA_PLAN_CACHE)"))?;
+    let store = DiskStore::new(&dir);
+    match action {
+        "ls" => {
+            let entries = store.entries();
+            let total: u64 = entries.iter().map(|e| e.bytes).sum();
+            for e in &entries {
+                println!(
+                    "{:>10} B  key={}  {}",
+                    e.bytes,
+                    e.key.map(|k| format!("{k:016x}")).unwrap_or_else(|| "????".into()),
+                    e.path.display()
+                );
+            }
+            println!("{} plan file(s), {} bytes in {}", entries.len(), total, dir.display());
+        }
+        "verify" => {
+            let entries = store.entries();
+            let mut bad = 0usize;
+            for e in &entries {
+                match DiskStore::verify_path(&e.path) {
+                    Ok(s) => println!(
+                        "ok   {}  key={:016x}  {}x{} * {}x{}  nnz={}  bins={}",
+                        e.path.display(),
+                        s.key,
+                        s.a_shape.0,
+                        s.a_shape.1,
+                        s.b_shape.0,
+                        s.b_shape.1,
+                        s.nnz,
+                        s.bins
+                    ),
+                    Err(err) => {
+                        bad += 1;
+                        println!("BAD  {}: {err:#}", e.path.display());
+                    }
+                }
+            }
+            if bad > 0 {
+                bail!("{bad} of {} plan file(s) failed verification in {}", entries.len(), dir.display());
+            }
+            println!("verified {} plan file(s) in {}: all ok", entries.len(), dir.display());
+        }
+        "prune" => {
+            let max = opt(args, "--max-bytes")
+                .ok_or_else(|| anyhow!("prune needs --max-bytes N"))?
+                .parse::<u64>()
+                .map_err(|_| anyhow!("--max-bytes must be a non-negative integer"))?;
+            let r = store.prune(max);
+            println!(
+                "pruned {} -> {} bytes (kept {}, removed {}) in {}",
+                r.bytes_before,
+                r.bytes_after,
+                r.kept,
+                r.removed,
+                dir.display()
+            );
+        }
+        other => bail!("unknown plan-cache action {other} (ls | verify | prune)"),
+    }
+    Ok(())
 }
 
 fn print_help() {
@@ -93,7 +207,12 @@ fn print_help() {
          spgemm-aia mcl --dataset Economics [--variant aia]\n  \
          spgemm-aia contract --dataset RoadTX [--variant aia]\n  \
          spgemm-aia gnn --dataset Flickr --arch gcn [--epochs 5]\n  \
-         spgemm-aia info\n\nOPTIONS (all subcommands):\n  \
+         spgemm-aia serve --socket PATH [--queue 64] [--streams 4] [--plan-cache DIR]\n  \
+         spgemm-aia plan-cache ls|verify|prune [--dir DIR] [--max-bytes N]\n  \
+         spgemm-aia info\n\nSERVE:\n  \
+         newline-delimited JSON over a unix socket; ops register, multiply,\n  \
+         release, stats, ping, shutdown (see README \"Running as a service\").\n  \
+         A full queue answers busy — retry, the daemon never buffers unboundedly.\n\nOPTIONS (all subcommands):\n  \
          --spa-threshold T  dense-kernel density threshold, driving both the numeric SPA\n                     \
          (row switches from hash accumulation when nnz(C_i)/n_cols exceeds T)\n                     \
          and the symbolic bitmap counter (decided from the IP bound).\n                     \

@@ -1,0 +1,650 @@
+//! SpGEMM service daemon: a resident executor over one shared plan
+//! store (ROADMAP "Service daemon"; DESIGN.md §2e).
+//!
+//! Everything before this module amortized the symbolic phase *within*
+//! a process (plan slots, the batch executor's cache) or across
+//! processes *via disk*. The daemon closes the remaining gap: a
+//! [`Server`] owns one [`TieredStore`] and one worker thread with a
+//! resident [`BatchExecutor`] built over a **clone** of that store
+//! (clones share tiers and counters), so every client session pools
+//! plans in memory — client 2's first multiply of a structure client 1
+//! already planned is a memory hit, no disk round trip, no replan.
+//!
+//! Shape of the thing:
+//!
+//! - [`ServeHandle`] — the in-process API (clonable, thread-safe):
+//!   `register`/`release` matrices through the generation-counted
+//!   [`registry::MatrixRegistry`], `multiply` by handle, `stats`.
+//!   The Unix-socket line protocol ([`protocol`], [`session`]) is a
+//!   thin shell over this handle — every test that drives the handle
+//!   drives the daemon's whole request path short of framing.
+//! - [`queue::RequestQueue`] — bounded admission with explicit
+//!   backpressure: a full queue returns [`ServeError::Busy`]
+//!   immediately (the client retries), never unbounded growth, never a
+//!   parked connection thread.
+//! - One worker thread — requests execute serially on the resident
+//!   executor (the engine already parallelizes *inside* a multiply;
+//!   serializing products keeps plan-store accounting exact and the
+//!   memory peak at one product).
+//!
+//! Every response carries where its plan came from
+//! ([`PlanSource`]) and the symbolic seconds the call actually paid —
+//! the CI smoke test asserts a repeated product reports `plan: "mem"`
+//! with `symbolic_s == 0` and a bit-identical checksum.
+
+pub mod protocol;
+pub mod queue;
+pub mod registry;
+#[cfg(unix)]
+pub mod session;
+
+pub use registry::{HandleId, MatrixRegistry};
+
+use crate::coordinator::batch::{BatchExecutor, PlanSource};
+use crate::coordinator::metrics::Metrics;
+use crate::sparse::Csr;
+use crate::spgemm::hash::{StoreStats, TieredStore};
+use crate::util::json::Json;
+use crate::util::serial::{fnv1a_seeded, FNV_OFFSET};
+use queue::{QueueReceiver, RequestQueue, SubmitError};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Daemon knobs (socket path lives with [`session::run_daemon`], not
+/// here — the in-process server has no socket).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Max enqueued (accepted, unstarted) multiplies; beyond this,
+    /// submissions bounce with [`ServeError::Busy`].
+    pub queue_capacity: usize,
+    /// Stream count of the resident executor's bin scheduler.
+    pub n_streams: usize,
+    /// Disk tier of the daemon's plan store; `None` = memory only.
+    pub plan_cache: Option<PathBuf>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig { queue_capacity: 64, n_streams: 4, plan_cache: None }
+    }
+}
+
+/// Flag-over-env plan-cache resolution for the daemon.
+///
+/// `serve` builds its store from this *explicitly* instead of reading
+/// the process-wide `OnceLock` default: that cell latches on first
+/// read, so any executor constructed before flag parsing would have
+/// pinned whatever the cell held at that moment — under a daemon,
+/// silently the wrong cache directory for its whole lifetime.
+/// Empty values count as unset.
+pub fn resolve_plan_cache(flag: Option<&str>, env: Option<&str>) -> Option<PathBuf> {
+    flag.filter(|s| !s.is_empty()).or_else(|| env.filter(|s| !s.is_empty())).map(PathBuf::from)
+}
+
+/// Content checksum of a result matrix: shape, row pointers, columns,
+/// and value *bit patterns*, FNV-1a-chained in order. Two responses
+/// with equal checksums (and equal nnz) are bit-identical products —
+/// what the smoke test asserts across hit/miss and across processes.
+pub fn csr_checksum(c: &Csr) -> u64 {
+    let mut h = fnv1a_seeded(FNV_OFFSET, &(c.n_rows as u64).to_le_bytes());
+    h = fnv1a_seeded(h, &(c.n_cols as u64).to_le_bytes());
+    for &r in &c.rpt {
+        h = fnv1a_seeded(h, &(r as u64).to_le_bytes());
+    }
+    for &col in &c.col {
+        h = fnv1a_seeded(h, &col.to_le_bytes());
+    }
+    for &v in &c.val {
+        h = fnv1a_seeded(h, &v.to_bits().to_le_bytes());
+    }
+    h
+}
+
+/// Everything a multiply request answers with.
+#[derive(Clone, Debug)]
+pub struct MultiplyOutcome {
+    pub c: Csr,
+    /// `c.nnz()`, pre-extracted for responses that drop the values.
+    pub nnz: usize,
+    /// [`csr_checksum`] of `c`.
+    pub checksum: u64,
+    /// Where the plan came from (`fresh`/`mem`/`disk`).
+    pub source: PlanSource,
+    /// Seconds resolving the plan (lookup + validation; plus
+    /// grouping/symbolic when fresh).
+    pub plan_s: f64,
+    /// Seconds in the numeric fill.
+    pub fill_s: f64,
+    /// Symbolic seconds this request paid — `0.0` on any plan hit.
+    pub symbolic_s: f64,
+}
+
+/// Request-path failures, each with a stable wire code.
+#[derive(Debug)]
+pub enum ServeError {
+    /// Queue at capacity — retry later (explicit backpressure).
+    Busy { depth: usize, capacity: usize },
+    /// Handle released, stale, or never issued.
+    UnknownHandle(u64),
+    /// Operand shapes don't compose.
+    BadRequest(String),
+    /// Daemon is draining; no new work.
+    ShuttingDown,
+    /// Worker thread is gone (shut down or died).
+    WorkerGone,
+}
+
+impl ServeError {
+    /// Stable machine-readable code — the line protocol's `error`
+    /// field.
+    pub fn code(&self) -> &'static str {
+        match self {
+            ServeError::Busy { .. } => "busy",
+            ServeError::UnknownHandle(_) => "unknown_handle",
+            ServeError::BadRequest(_) => "bad_request",
+            ServeError::ShuttingDown => "shutting_down",
+            ServeError::WorkerGone => "worker_gone",
+        }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Busy { depth, capacity } => {
+                write!(f, "queue full ({depth}/{capacity} pending) — retry later")
+            }
+            ServeError::UnknownHandle(raw) => write!(f, "unknown matrix handle {raw}"),
+            ServeError::BadRequest(msg) => write!(f, "{msg}"),
+            ServeError::ShuttingDown => write!(f, "daemon is shutting down"),
+            ServeError::WorkerGone => write!(f, "worker thread is gone"),
+        }
+    }
+}
+
+/// Per-client counters (keyed by the session id
+/// [`ServeHandle::new_client`] mints).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClientStats {
+    pub requests: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+/// Daemon-lifetime counters.
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    /// Multiplies executed (accepted *and* completed by the worker).
+    pub requests: u64,
+    /// Submissions bounced off the full queue.
+    pub busy_rejections: u64,
+    /// Requests served from the memory tier (or an in-batch share).
+    pub plan_hits: u64,
+    /// Requests served from the validated disk tier.
+    pub disk_hits: u64,
+    /// Requests that had to build a plan.
+    pub plan_misses: u64,
+    /// Matrices registered over the daemon's lifetime.
+    pub registered: u64,
+    /// Handles released.
+    pub released: u64,
+    pub per_client: BTreeMap<u64, ClientStats>,
+}
+
+impl ServeStats {
+    /// Fraction of executed multiplies that skipped the symbolic phase.
+    pub fn hit_rate(&self) -> f64 {
+        let hits = self.plan_hits + self.disk_hits;
+        let total = hits + self.plan_misses;
+        if total == 0 {
+            0.0
+        } else {
+            hits as f64 / total as f64
+        }
+    }
+}
+
+/// Jobs the worker thread consumes.
+enum Job {
+    Multiply { a: Arc<Csr>, b: Arc<Csr>, client: u64, reply: mpsc::Sender<MultiplyOutcome> },
+    /// Park the worker until the guard drops (tests use this to pin
+    /// the queue at a known depth and exercise backpressure
+    /// deterministically).
+    Quiesce { entered: mpsc::Sender<()>, release: mpsc::Receiver<()> },
+    Shutdown,
+}
+
+/// Clonable, thread-safe client face of a running [`Server`] — one per
+/// connection thread, or handed around freely in-process.
+#[derive(Clone)]
+pub struct ServeHandle {
+    queue: RequestQueue<Job>,
+    registry: Arc<Mutex<MatrixRegistry>>,
+    stats: Arc<Mutex<ServeStats>>,
+    store: TieredStore,
+    shutting_down: Arc<AtomicBool>,
+    next_client: Arc<AtomicU64>,
+}
+
+impl ServeHandle {
+    /// Mint a client/session id (per-client stats key).
+    pub fn new_client(&self) -> u64 {
+        self.next_client.fetch_add(1, Ordering::SeqCst)
+    }
+
+    fn stats_lock(&self) -> std::sync::MutexGuard<'_, ServeStats> {
+        self.stats.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn registry_lock(&self) -> std::sync::MutexGuard<'_, MatrixRegistry> {
+        self.registry.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Register an operand; its structure hash is computed here, once.
+    pub fn register(&self, m: Csr) -> Result<HandleId, ServeError> {
+        if self.shutting_down.load(Ordering::SeqCst) {
+            return Err(ServeError::ShuttingDown);
+        }
+        let h = self.registry_lock().register(Arc::new(m));
+        self.stats_lock().registered += 1;
+        Ok(h)
+    }
+
+    /// The matrix behind a wire handle.
+    pub fn resolve(&self, raw: u64) -> Result<Arc<Csr>, ServeError> {
+        self.registry_lock()
+            .resolve(HandleId::from_raw(raw))
+            .ok_or(ServeError::UnknownHandle(raw))
+    }
+
+    /// Release a handle (generation-bumped: it can never alias again).
+    pub fn release(&self, raw: u64) -> Result<(), ServeError> {
+        if !self.registry_lock().release(HandleId::from_raw(raw)) {
+            return Err(ServeError::UnknownHandle(raw));
+        }
+        self.stats_lock().released += 1;
+        Ok(())
+    }
+
+    /// Registered (live) matrices right now.
+    pub fn registered_live(&self) -> usize {
+        self.registry_lock().len()
+    }
+
+    /// Enqueue one multiply and wait for its result. Backpressure is
+    /// explicit: a full queue fails *now* with [`ServeError::Busy`]
+    /// instead of blocking the caller behind unbounded work.
+    pub fn multiply(&self, client: u64, a: Arc<Csr>, b: Arc<Csr>) -> Result<MultiplyOutcome, ServeError> {
+        if self.shutting_down.load(Ordering::SeqCst) {
+            return Err(ServeError::ShuttingDown);
+        }
+        if a.n_cols != b.n_rows {
+            return Err(ServeError::BadRequest(format!(
+                "shape mismatch: a is {}x{}, b is {}x{}",
+                a.n_rows, a.n_cols, b.n_rows, b.n_cols
+            )));
+        }
+        let (reply, result) = mpsc::channel();
+        match self.queue.submit(Job::Multiply { a, b, client, reply }) {
+            Ok(_) => {}
+            Err(SubmitError::Busy(_)) => {
+                self.stats_lock().busy_rejections += 1;
+                return Err(ServeError::Busy { depth: self.queue.depth(), capacity: self.queue.capacity() });
+            }
+            Err(SubmitError::Closed(_)) => return Err(ServeError::WorkerGone),
+        }
+        result.recv().map_err(|_| ServeError::WorkerGone)
+    }
+
+    /// [`ServeHandle::multiply`] with both operands named by handle.
+    pub fn multiply_by_handle(&self, client: u64, a_raw: u64, b_raw: u64) -> Result<MultiplyOutcome, ServeError> {
+        let a = self.resolve(a_raw)?;
+        let b = self.resolve(b_raw)?;
+        self.multiply(client, a, b)
+    }
+
+    /// Park the worker until the returned guard drops. Submitted
+    /// through the queue like any job, so it runs after everything
+    /// already accepted; while parked, accepted jobs pile up to
+    /// capacity and further submissions bounce — the deterministic
+    /// backpressure fixture.
+    pub fn quiesce(&self) -> Result<QuiesceGuard, ServeError> {
+        let (entered_tx, entered_rx) = mpsc::channel();
+        let (release_tx, release_rx) = mpsc::channel();
+        match self.queue.submit(Job::Quiesce { entered: entered_tx, release: release_rx }) {
+            Ok(_) => {}
+            Err(SubmitError::Busy(_)) => {
+                return Err(ServeError::Busy { depth: self.queue.depth(), capacity: self.queue.capacity() })
+            }
+            Err(SubmitError::Closed(_)) => return Err(ServeError::WorkerGone),
+        }
+        entered_rx.recv().map_err(|_| ServeError::WorkerGone)?;
+        Ok(QuiesceGuard { _release: release_tx })
+    }
+
+    /// Accepted-but-unstarted multiplies right now.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.depth()
+    }
+
+    pub fn queue_capacity(&self) -> usize {
+        self.queue.capacity()
+    }
+
+    /// Snapshot of the daemon-lifetime counters.
+    pub fn stats(&self) -> ServeStats {
+        self.stats_lock().clone()
+    }
+
+    /// The shared plan store's own counters.
+    pub fn store_stats(&self) -> StoreStats {
+        self.store.stats()
+    }
+
+    /// A clone of the daemon's shared plan store (clones share tiers
+    /// and counters).
+    pub fn store(&self) -> TieredStore {
+        self.store.clone()
+    }
+
+    /// Export daemon counters under `serve.*` (and the shared store
+    /// under `serve.store.*`, per-client under `serve.client.<id>.*`).
+    pub fn export_metrics(&self, m: &mut Metrics) {
+        let st = self.stats();
+        m.gauge("serve.queue_depth", self.queue.depth() as f64);
+        m.gauge("serve.queue_capacity", self.queue.capacity() as f64);
+        m.inc("serve.requests", st.requests);
+        m.inc("serve.busy_rejections", st.busy_rejections);
+        m.inc("serve.plan_hits", st.plan_hits);
+        m.inc("serve.disk_hits", st.disk_hits);
+        m.inc("serve.plan_misses", st.plan_misses);
+        m.inc("serve.registered", st.registered);
+        m.inc("serve.released", st.released);
+        m.gauge("serve.plan_hit_rate", st.hit_rate());
+        for (client, cs) in &st.per_client {
+            m.inc(&format!("serve.client.{client}.requests"), cs.requests);
+            m.inc(&format!("serve.client.{client}.hits"), cs.hits);
+            m.inc(&format!("serve.client.{client}.misses"), cs.misses);
+        }
+        m.observe_store_stats("serve.store", &self.store.stats());
+    }
+
+    /// The `stats` protocol op's payload.
+    pub fn stats_json(&self) -> Json {
+        let st = self.stats();
+        let ss = self.store.stats();
+        let mut o = Json::obj();
+        o.set("requests", (st.requests as i64).into());
+        o.set("busy_rejections", (st.busy_rejections as i64).into());
+        o.set("plan_hits", (st.plan_hits as i64).into());
+        o.set("disk_hits", (st.disk_hits as i64).into());
+        o.set("plan_misses", (st.plan_misses as i64).into());
+        o.set("plan_hit_rate", st.hit_rate().into());
+        o.set("registered", (st.registered as i64).into());
+        o.set("released", (st.released as i64).into());
+        o.set("registered_live", (self.registered_live() as i64).into());
+        o.set("queue_depth", (self.queue.depth() as i64).into());
+        o.set("queue_capacity", (self.queue.capacity() as i64).into());
+        let mut store = Json::obj();
+        store.set("mem_hits", (ss.mem_hits as i64).into());
+        store.set("disk_hits", (ss.disk_hits as i64).into());
+        store.set("misses", (ss.misses as i64).into());
+        store.set("stores", (ss.stores as i64).into());
+        store.set("evictions", (ss.evictions as i64).into());
+        store.set("corrupt", (ss.corrupt as i64).into());
+        store.set("stale", (ss.stale as i64).into());
+        o.set("store", store);
+        let mut clients = Json::obj();
+        for (client, cs) in &st.per_client {
+            let mut c = Json::obj();
+            c.set("requests", (cs.requests as i64).into());
+            c.set("hits", (cs.hits as i64).into());
+            c.set("misses", (cs.misses as i64).into());
+            clients.set(&client.to_string(), c);
+        }
+        o.set("clients", clients);
+        o
+    }
+}
+
+/// Holds the worker parked; drop to resume (see
+/// [`ServeHandle::quiesce`]).
+pub struct QuiesceGuard {
+    _release: mpsc::Sender<()>,
+}
+
+/// A running daemon core: one shared [`TieredStore`], one worker
+/// thread with a resident [`BatchExecutor`] over a clone of it, one
+/// bounded queue. The Unix-socket front end is [`session::run_daemon`];
+/// in-process consumers use [`Server::handle`] directly.
+pub struct Server {
+    handle: ServeHandle,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start with a store built from `cfg.plan_cache` **explicitly** —
+    /// never from the process-default `OnceLock` (see
+    /// [`resolve_plan_cache`] for why that latch is a footgun under a
+    /// daemon).
+    pub fn start(cfg: &ServeConfig) -> Server {
+        let store = match &cfg.plan_cache {
+            Some(dir) => TieredStore::with_disk(dir.clone()),
+            None => TieredStore::mem_only(),
+        };
+        Server::start_with_store(cfg, store)
+    }
+
+    /// Start over an existing store handle (tests; embedding the daemon
+    /// next to other executors that should pool plans with it).
+    pub fn start_with_store(cfg: &ServeConfig, store: TieredStore) -> Server {
+        let (queue, jobs) = queue::bounded(cfg.queue_capacity);
+        let handle = ServeHandle {
+            queue,
+            registry: Arc::new(Mutex::new(MatrixRegistry::new())),
+            stats: Arc::new(Mutex::new(ServeStats::default())),
+            store: store.clone(),
+            shutting_down: Arc::new(AtomicBool::new(false)),
+            next_client: Arc::new(AtomicU64::new(1)),
+        };
+        let executor = BatchExecutor::with_store(cfg.n_streams, store);
+        let stats = Arc::clone(&handle.stats);
+        let worker = std::thread::Builder::new()
+            .name("spgemm-serve-worker".into())
+            .spawn(move || worker_loop(jobs, executor, stats))
+            .expect("spawn serve worker");
+        Server { handle, worker: Some(worker) }
+    }
+
+    /// A clonable client handle.
+    pub fn handle(&self) -> ServeHandle {
+        self.handle.clone()
+    }
+
+    /// Stop accepting work, drain everything already accepted, join
+    /// the worker. (Dropping the server does the same.)
+    pub fn shutdown(mut self) {
+        self.stop_inner();
+    }
+
+    fn stop_inner(&mut self) {
+        let Some(worker) = self.worker.take() else {
+            return;
+        };
+        self.handle.shutting_down.store(true, Ordering::SeqCst);
+        // Blocking submit: the shutdown job queues *behind* accepted
+        // work, so in-flight clients get their replies before the
+        // worker exits.
+        let _ = self.handle.queue.submit_blocking(Job::Shutdown);
+        let _ = worker.join();
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop_inner();
+    }
+}
+
+fn worker_loop(jobs: QueueReceiver<Job>, mut executor: BatchExecutor, stats: Arc<Mutex<ServeStats>>) {
+    while let Some(job) = jobs.recv() {
+        match job {
+            Job::Multiply { a, b, client, reply } => {
+                let (c, trace) = executor.multiply_cached_traced(&a, &b);
+                let checksum = csr_checksum(&c);
+                {
+                    let mut st = stats.lock().unwrap_or_else(|e| e.into_inner());
+                    st.requests += 1;
+                    match trace.source {
+                        PlanSource::Fresh => st.plan_misses += 1,
+                        PlanSource::Disk => st.disk_hits += 1,
+                        PlanSource::Mem | PlanSource::Shared => st.plan_hits += 1,
+                    }
+                    let cs = st.per_client.entry(client).or_default();
+                    cs.requests += 1;
+                    if trace.source.is_hit() {
+                        cs.hits += 1;
+                    } else {
+                        cs.misses += 1;
+                    }
+                }
+                let outcome = MultiplyOutcome {
+                    nnz: trace.nnz,
+                    checksum,
+                    source: trace.source,
+                    plan_s: trace.plan_s,
+                    fill_s: trace.fill_s,
+                    symbolic_s: trace.symbolic_s,
+                    c,
+                };
+                // The client may have disconnected mid-flight; its
+                // result is simply dropped.
+                let _ = reply.send(outcome);
+            }
+            Job::Quiesce { entered, release } => {
+                let _ = entered.send(());
+                // Park until the guard drops (recv errors when the
+                // sender is gone — same thing).
+                let _ = release.recv();
+            }
+            Job::Shutdown => break,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spgemm::hash;
+    use crate::util::Pcg32;
+
+    fn random_square(seed: u64, n: usize) -> Csr {
+        let mut rng = Pcg32::seeded(seed);
+        crate::gen::rmat(n, n * 4, crate::gen::RmatParams::uniform(), &mut rng)
+    }
+
+    fn mem_server(capacity: usize) -> Server {
+        Server::start_with_store(
+            &ServeConfig { queue_capacity: capacity, n_streams: 2, plan_cache: None },
+            TieredStore::mem_only(),
+        )
+    }
+
+    #[test]
+    fn checksum_separates_structure_and_values() {
+        let a = random_square(1, 64);
+        let mut a2 = a.clone();
+        assert_eq!(csr_checksum(&a), csr_checksum(&a.clone()));
+        a2.map_values(|v| v + 1.0);
+        assert_ne!(csr_checksum(&a), csr_checksum(&a2), "value changes must change the checksum");
+    }
+
+    #[test]
+    fn register_multiply_release_roundtrip() {
+        let server = mem_server(8);
+        let h = server.handle();
+        let client = h.new_client();
+        let a = random_square(2, 96);
+        let reference = hash::multiply(&a, &a);
+        let ha = h.register(a).unwrap();
+        let out = h.multiply_by_handle(client, ha.raw(), ha.raw()).unwrap();
+        assert_eq!(out.source, PlanSource::Fresh);
+        assert_eq!(out.c, reference, "served product equals a cold multiply");
+        assert_eq!(out.nnz, reference.nnz());
+        assert_eq!(out.checksum, csr_checksum(&reference));
+        assert!(out.symbolic_s > 0.0);
+        // Second multiply: memory hit, zero symbolic seconds, identical.
+        let out2 = h.multiply_by_handle(client, ha.raw(), ha.raw()).unwrap();
+        assert_eq!(out2.source, PlanSource::Mem);
+        assert_eq!(out2.symbolic_s, 0.0);
+        assert_eq!(out2.checksum, out.checksum);
+        // Release: the handle is dead, with the generation bumped.
+        h.release(ha.raw()).unwrap();
+        assert!(matches!(h.release(ha.raw()), Err(ServeError::UnknownHandle(_))));
+        assert!(matches!(
+            h.multiply_by_handle(client, ha.raw(), ha.raw()),
+            Err(ServeError::UnknownHandle(_))
+        ));
+        let st = h.stats();
+        assert_eq!((st.requests, st.plan_hits, st.plan_misses), (2, 1, 1));
+        assert_eq!((st.registered, st.released), (1, 1));
+        assert_eq!(st.per_client.get(&client).unwrap().requests, 2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn shape_mismatch_is_a_bad_request() {
+        let server = mem_server(4);
+        let h = server.handle();
+        let e = h
+            .multiply(h.new_client(), Arc::new(Csr::identity(4)), Arc::new(Csr::identity(5)))
+            .unwrap_err();
+        assert_eq!(e.code(), "bad_request");
+    }
+
+    #[test]
+    fn shutdown_rejects_new_work_and_drains() {
+        let server = mem_server(4);
+        let h = server.handle();
+        let a = Arc::new(random_square(3, 64));
+        h.multiply(h.new_client(), Arc::clone(&a), Arc::clone(&a)).unwrap();
+        server.shutdown();
+        assert!(matches!(
+            h.multiply(h.new_client(), Arc::clone(&a), a),
+            Err(ServeError::ShuttingDown | ServeError::WorkerGone)
+        ));
+        assert!(matches!(h.register(Csr::identity(4)), Err(ServeError::ShuttingDown)));
+    }
+
+    #[test]
+    fn resolve_plan_cache_prefers_flag_over_env() {
+        assert_eq!(resolve_plan_cache(Some("/a"), Some("/b")), Some(PathBuf::from("/a")));
+        assert_eq!(resolve_plan_cache(None, Some("/b")), Some(PathBuf::from("/b")));
+        assert_eq!(resolve_plan_cache(Some(""), Some("/b")), Some(PathBuf::from("/b")), "empty flag is unset");
+        assert_eq!(resolve_plan_cache(None, Some("")), None, "empty env is unset");
+        assert_eq!(resolve_plan_cache(None, None), None);
+    }
+
+    #[test]
+    fn metrics_and_stats_json_export() {
+        let server = mem_server(4);
+        let h = server.handle();
+        let client = h.new_client();
+        let a = Arc::new(random_square(4, 64));
+        h.multiply(client, Arc::clone(&a), Arc::clone(&a)).unwrap();
+        h.multiply(client, Arc::clone(&a), Arc::clone(&a)).unwrap();
+        let mut m = Metrics::new();
+        h.export_metrics(&mut m);
+        assert_eq!(m.counter("serve.requests"), 2);
+        assert_eq!(m.counter("serve.plan_hits"), 1);
+        assert_eq!(m.counter("serve.plan_misses"), 1);
+        assert_eq!(m.counter(&format!("serve.client.{client}.requests")), 2);
+        let js = h.stats_json().render();
+        assert!(js.contains("\"requests\":2"), "stats json carries totals: {js}");
+        assert!(js.contains("\"plan_hit_rate\":0.5"), "{js}");
+        server.shutdown();
+    }
+}

@@ -1,0 +1,350 @@
+//! Newline-delimited JSON line protocol — a thin shell over
+//! [`ServeHandle`].
+//!
+//! One request object per line in, one response object per line out:
+//!
+//! ```text
+//! > {"op":"register","matrix":{"rows":2,"cols":2,"rpt":[0,1,2],"col":[0,1],"val":[1.0,1.0]}}
+//! < {"ok":true,"handle":0,"rows":2,"cols":2,"nnz":2,"structure_hash":"9c30d5bc8f1b8655"}
+//! > {"op":"register","dataset":"scircuit","seed":7}
+//! < {"ok":true,"handle":1,...}
+//! > {"op":"multiply","a":0,"b":0}
+//! < {"ok":true,"nnz":2,"checksum":"…","plan":"fresh","plan_s":…,"fill_s":…,"symbolic_s":…}
+//! > {"op":"multiply","a":0,"b":0,"values":true}
+//! < {"ok":true,...,"plan":"mem","symbolic_s":0.0,"rpt":[…],"col":[…],"val":[…]}
+//! > {"op":"stats"}            < {"ok":true,"stats":{…}}
+//! > {"op":"release","handle":0}  < {"ok":true,"released":0}
+//! > {"op":"ping"}             < {"ok":true,"pong":true}
+//! > {"op":"shutdown"}         < {"ok":true,"stopping":true}   (daemon drains and exits)
+//! ```
+//!
+//! Failures are `{"ok":false,"error":"<code>","message":"…"}` with the
+//! stable codes of [`ServeError::code`] (plus `bad_request` for parse
+//! failures); a `busy` response additionally carries `queue_depth` /
+//! `queue_capacity` so clients can back off informedly. Checksums and
+//! structure hashes travel as 16-digit hex strings (JSON integers are
+//! `i64` on the wire; `u64` values must not go through them).
+//!
+//! [`handle_line`] is the whole dispatcher — the socket session
+//! ([`super::session`]) only frames lines and moves bytes, so
+//! in-process tests of `handle_line` cover the daemon's full request
+//! path short of I/O.
+
+use super::{MultiplyOutcome, ServeError, ServeHandle};
+use crate::sparse::Csr;
+use crate::util::error::{anyhow, bail, Result};
+use crate::util::json::Json;
+
+/// One parsed client request.
+#[derive(Debug)]
+pub enum Request {
+    /// Upload an operand (inline CSR or a named generated dataset).
+    Register { matrix: Csr },
+    /// Multiply two registered operands; `values` asks for the full
+    /// result arrays instead of just `nnz` + checksum.
+    Multiply { a: u64, b: u64, values: bool },
+    Release { handle: u64 },
+    Stats,
+    Ping,
+    Shutdown,
+}
+
+/// `u64` as the protocol ships it: 16 hex digits.
+pub fn hex64(x: u64) -> String {
+    format!("{x:016x}")
+}
+
+/// Parse one request line.
+pub fn parse_request(line: &str) -> Result<Request> {
+    let doc = Json::parse(line)?;
+    let op = doc.get("op").and_then(Json::as_str).ok_or_else(|| anyhow!("missing string field 'op'"))?;
+    match op {
+        "register" => parse_register(&doc),
+        "multiply" => Ok(Request::Multiply {
+            a: field_u64(&doc, "a")?,
+            b: field_u64(&doc, "b")?,
+            values: doc.get("values").and_then(Json::as_bool).unwrap_or(false),
+        }),
+        "release" => Ok(Request::Release { handle: field_u64(&doc, "handle")? }),
+        "stats" => Ok(Request::Stats),
+        "ping" => Ok(Request::Ping),
+        "shutdown" => Ok(Request::Shutdown),
+        other => bail!("unknown op {other:?}"),
+    }
+}
+
+fn field_u64(doc: &Json, key: &str) -> Result<u64> {
+    doc.get(key)
+        .and_then(Json::as_u64)
+        .ok_or_else(|| anyhow!("missing or non-integer field {key:?}"))
+}
+
+fn usize_array(obj: &Json, key: &str) -> Result<Vec<usize>> {
+    obj.get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("matrix.{key} must be an array"))?
+        .iter()
+        .map(|v| {
+            v.as_u64()
+                .and_then(|x| usize::try_from(x).ok())
+                .ok_or_else(|| anyhow!("matrix.{key} entries must be non-negative integers"))
+        })
+        .collect()
+}
+
+fn parse_register(doc: &Json) -> Result<Request> {
+    if let Some(name) = doc.get("dataset").and_then(Json::as_str) {
+        let seed = doc.get("seed").and_then(Json::as_u64).unwrap_or(crate::repro::SEED);
+        if let Some(ds) = crate::gen::table2_by_name(name) {
+            return Ok(Request::Register { matrix: (ds.gen)(seed) });
+        }
+        if let Some(ds) = crate::gen::table3_by_name(name) {
+            return Ok(Request::Register { matrix: (ds.gen)(seed) });
+        }
+        bail!("unknown dataset {name:?} (see `spgemm-aia info`)");
+    }
+    let m = doc.get("matrix").ok_or_else(|| anyhow!("register needs 'dataset' or 'matrix'"))?;
+    let rows = field_u64(m, "rows")? as usize;
+    let cols = field_u64(m, "cols")? as usize;
+    let rpt = usize_array(m, "rpt")?;
+    let col: Vec<u32> = usize_array(m, "col")?
+        .into_iter()
+        .map(|c| u32::try_from(c).map_err(|_| anyhow!("matrix.col entry exceeds u32")))
+        .collect::<Result<_>>()?;
+    let val: Vec<f64> = m
+        .get("val")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("matrix.val must be an array"))?
+        .iter()
+        .map(|v| v.as_f64().ok_or_else(|| anyhow!("matrix.val entries must be numbers")))
+        .collect::<Result<_>>()?;
+    // Validating constructor: socket input never reaches the unchecked
+    // kernels without a full structural check.
+    let matrix = Csr::new(rows, cols, rpt, col, val)?;
+    Ok(Request::Register { matrix })
+}
+
+fn ok_response() -> Json {
+    let mut o = Json::obj();
+    o.set("ok", Json::Bool(true));
+    o
+}
+
+/// `{"ok":false,...}` with a stable code.
+pub fn error_response(code: &str, message: &str) -> Json {
+    let mut o = Json::obj();
+    o.set("ok", Json::Bool(false));
+    o.set("error", Json::Str(code.into()));
+    o.set("message", Json::Str(message.into()));
+    o
+}
+
+fn serve_error_response(e: &ServeError) -> Json {
+    let mut o = error_response(e.code(), &e.to_string());
+    if let ServeError::Busy { depth, capacity } = e {
+        o.set("queue_depth", (*depth as i64).into());
+        o.set("queue_capacity", (*capacity as i64).into());
+    }
+    o
+}
+
+fn multiply_response(out: &MultiplyOutcome, values: bool) -> Json {
+    let mut o = ok_response();
+    o.set("nnz", (out.nnz as i64).into());
+    o.set("checksum", Json::Str(hex64(out.checksum)));
+    o.set("plan", Json::Str(out.source.label().into()));
+    o.set("plan_s", out.plan_s.into());
+    o.set("fill_s", out.fill_s.into());
+    o.set("symbolic_s", out.symbolic_s.into());
+    if values {
+        o.set("rows", (out.c.n_rows as i64).into());
+        o.set("cols", (out.c.n_cols as i64).into());
+        o.set("rpt", Json::Arr(out.c.rpt.iter().map(|&r| (r as i64).into()).collect()));
+        o.set("col", Json::Arr(out.c.col.iter().map(|&c| (c as i64).into()).collect()));
+        // f64 values render with round-trip precision (the emitter uses
+        // shortest-exact formatting), so "values":true is lossless.
+        o.set("val", Json::Arr(out.c.val.iter().map(|&v| v.into()).collect()));
+    }
+    o
+}
+
+/// Process one request line against a handle. Returns the response
+/// line (no trailing newline) and whether the daemon should stop
+/// (`shutdown` op).
+pub fn handle_line(h: &ServeHandle, client: u64, line: &str) -> (String, bool) {
+    let request = match parse_request(line) {
+        Ok(r) => r,
+        Err(e) => return (error_response("bad_request", &format!("{e:#}")).render(), false),
+    };
+    let response = match request {
+        Request::Ping => {
+            let mut o = ok_response();
+            o.set("pong", Json::Bool(true));
+            o
+        }
+        Request::Register { matrix } => {
+            // Response fields come off the matrix before it moves into
+            // the registry; the hash memo moves with it.
+            let (rows, cols, nnz) = (matrix.n_rows, matrix.n_cols, matrix.nnz());
+            let hash = matrix.structure_hash();
+            match h.register(matrix) {
+                Ok(handle) => {
+                    let mut o = ok_response();
+                    o.set("handle", (handle.raw() as i64).into());
+                    o.set("rows", (rows as i64).into());
+                    o.set("cols", (cols as i64).into());
+                    o.set("nnz", (nnz as i64).into());
+                    o.set("structure_hash", Json::Str(hex64(hash)));
+                    o
+                }
+                Err(e) => serve_error_response(&e),
+            }
+        }
+        Request::Multiply { a, b, values } => match h.multiply_by_handle(client, a, b) {
+            Ok(out) => multiply_response(&out, values),
+            Err(e) => serve_error_response(&e),
+        },
+        Request::Release { handle } => match h.release(handle) {
+            Ok(()) => {
+                let mut o = ok_response();
+                o.set("released", (handle as i64).into());
+                o
+            }
+            Err(e) => serve_error_response(&e),
+        },
+        Request::Stats => {
+            let mut o = ok_response();
+            o.set("stats", h.stats_json());
+            o
+        }
+        Request::Shutdown => {
+            let mut o = ok_response();
+            o.set("stopping", Json::Bool(true));
+            return (o.render(), true);
+        }
+    };
+    (response.render(), false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::{Server, ServeConfig};
+    use crate::spgemm::hash::TieredStore;
+
+    fn mem_server() -> Server {
+        Server::start_with_store(
+            &ServeConfig { queue_capacity: 8, n_streams: 2, plan_cache: None },
+            TieredStore::mem_only(),
+        )
+    }
+
+    /// A small but non-trivial CSR as its inline-register JSON line.
+    fn inline_register_line() -> String {
+        // 4x4: row 0 -> {0,2}, row 1 -> {1}, row 2 -> {0,3}, row 3 -> {}
+        r#"{"op":"register","matrix":{"rows":4,"cols":4,"rpt":[0,2,3,5,5],"col":[0,2,1,0,3],"val":[1.0,2.0,3.0,4.5,-1.25]}}"#
+            .to_string()
+    }
+
+    #[test]
+    fn parse_request_covers_every_op() {
+        assert!(matches!(parse_request(r#"{"op":"ping"}"#).unwrap(), Request::Ping));
+        assert!(matches!(parse_request(r#"{"op":"stats"}"#).unwrap(), Request::Stats));
+        assert!(matches!(parse_request(r#"{"op":"shutdown"}"#).unwrap(), Request::Shutdown));
+        assert!(matches!(
+            parse_request(r#"{"op":"release","handle":7}"#).unwrap(),
+            Request::Release { handle: 7 }
+        ));
+        match parse_request(r#"{"op":"multiply","a":1,"b":2,"values":true}"#).unwrap() {
+            Request::Multiply { a: 1, b: 2, values: true } => {}
+            other => panic!("bad multiply parse: {other:?}"),
+        }
+        match parse_request(&inline_register_line()).unwrap() {
+            Request::Register { matrix } => {
+                assert_eq!((matrix.n_rows, matrix.nnz()), (4, 5));
+            }
+            other => panic!("bad register parse: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_request_rejects_malformed_input() {
+        for bad in [
+            "not json at all",
+            r#"{"no_op":1}"#,
+            r#"{"op":"frobnicate"}"#,
+            r#"{"op":"multiply","a":1}"#,
+            r#"{"op":"multiply","a":"x","b":2}"#,
+            r#"{"op":"release"}"#,
+            r#"{"op":"register"}"#,
+            r#"{"op":"register","dataset":"no-such-dataset"}"#,
+            // Structurally invalid CSR: rpt[last] != nnz.
+            r#"{"op":"register","matrix":{"rows":1,"cols":1,"rpt":[0,2],"col":[0],"val":[1.0]}}"#,
+        ] {
+            assert!(parse_request(bad).is_err(), "must reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn line_session_register_multiply_stats_release() {
+        let server = mem_server();
+        let h = server.handle();
+        let client = h.new_client();
+        let (resp, stop) = handle_line(&h, client, &inline_register_line());
+        assert!(!stop);
+        let reg = Json::parse(&resp).unwrap();
+        assert_eq!(reg.get("ok").and_then(Json::as_bool), Some(true), "{resp}");
+        let handle = reg.get("handle").and_then(Json::as_u64).unwrap();
+        assert_eq!(reg.get("nnz").and_then(Json::as_i64), Some(5));
+        // First multiply: fresh plan; values requested.
+        let line = format!(r#"{{"op":"multiply","a":{handle},"b":{handle},"values":true}}"#);
+        let (resp1, _) = handle_line(&h, client, &line);
+        let m1 = Json::parse(&resp1).unwrap();
+        assert_eq!(m1.get("plan").and_then(Json::as_str), Some("fresh"), "{resp1}");
+        assert!(m1.get("rpt").and_then(Json::as_arr).is_some_and(|a| a.len() == 5));
+        // Second multiply: memory hit, zero symbolic, identical checksum.
+        let (resp2, _) = handle_line(&h, client, &line);
+        let m2 = Json::parse(&resp2).unwrap();
+        assert_eq!(m2.get("plan").and_then(Json::as_str), Some("mem"), "{resp2}");
+        assert_eq!(m2.get("symbolic_s").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(
+            m1.get("checksum").and_then(Json::as_str),
+            m2.get("checksum").and_then(Json::as_str),
+            "hit and miss must be bit-identical"
+        );
+        assert_eq!(m1.get("nnz").and_then(Json::as_i64), m2.get("nnz").and_then(Json::as_i64));
+        // Stats reconcile.
+        let (resp, _) = handle_line(&h, client, r#"{"op":"stats"}"#);
+        let stats = Json::parse(&resp).unwrap();
+        let s = stats.get("stats").unwrap();
+        assert_eq!(s.get("requests").and_then(Json::as_i64), Some(2), "{resp}");
+        assert_eq!(s.get("plan_hits").and_then(Json::as_i64), Some(1));
+        assert_eq!(s.get("plan_misses").and_then(Json::as_i64), Some(1));
+        // Release, then the handle is unknown.
+        let (resp, _) = handle_line(&h, client, &format!(r#"{{"op":"release","handle":{handle}}}"#));
+        assert_eq!(Json::parse(&resp).unwrap().get("ok").and_then(Json::as_bool), Some(true));
+        let (resp, _) = handle_line(&h, client, &line);
+        let err = Json::parse(&resp).unwrap();
+        assert_eq!(err.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(err.get("error").and_then(Json::as_str), Some("unknown_handle"), "{resp}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn bad_lines_get_bad_request_and_shutdown_stops() {
+        let server = mem_server();
+        let h = server.handle();
+        let client = h.new_client();
+        let (resp, stop) = handle_line(&h, client, "][ not json");
+        assert!(!stop);
+        let err = Json::parse(&resp).unwrap();
+        assert_eq!(err.get("error").and_then(Json::as_str), Some("bad_request"), "{resp}");
+        let (resp, stop) = handle_line(&h, client, r#"{"op":"ping"}"#);
+        assert!(!stop);
+        assert!(resp.contains("\"pong\":true"));
+        let (resp, stop) = handle_line(&h, client, r#"{"op":"shutdown"}"#);
+        assert!(stop, "shutdown must signal the session loop to stop");
+        assert!(resp.contains("\"stopping\":true"));
+        server.shutdown();
+    }
+}

@@ -1,0 +1,165 @@
+//! Bounded request queue with explicit backpressure.
+//!
+//! The daemon's admission contract: the queue never grows without
+//! bound. [`RequestQueue::submit`] is a `try_send` — when the channel
+//! is at capacity the job comes straight back as
+//! [`SubmitError::Busy`], and the protocol layer turns that into a
+//! `busy` response the client can retry, instead of the connection
+//! thread (and the client behind it) silently parking on a send. The
+//! queue depth is tracked explicitly so `serve.queue_depth` is a
+//! readable gauge, not something inferred from channel internals.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+
+/// Why a submission was refused — the job is handed back either way.
+#[derive(Debug)]
+pub enum SubmitError<T> {
+    /// Queue at capacity: explicit backpressure, retry later.
+    Busy(T),
+    /// Receiver gone (worker exited): the queue is permanently closed.
+    Closed(T),
+}
+
+/// Build a queue of at most `capacity` pending jobs (`capacity >= 1`;
+/// a rendezvous channel would make *every* submit "busy" while the
+/// worker computes, which is backpressure in name only).
+pub fn bounded<T>(capacity: usize) -> (RequestQueue<T>, QueueReceiver<T>) {
+    assert!(capacity >= 1, "queue capacity must be at least 1");
+    let (tx, rx) = mpsc::sync_channel(capacity);
+    let depth = Arc::new(AtomicUsize::new(0));
+    (RequestQueue { tx, depth: Arc::clone(&depth), capacity }, QueueReceiver { rx, depth })
+}
+
+/// The submitting side. Clones share the channel and the depth gauge
+/// (one per connection thread).
+pub struct RequestQueue<T> {
+    tx: SyncSender<T>,
+    depth: Arc<AtomicUsize>,
+    capacity: usize,
+}
+
+// Manual impl: `T` itself need not be `Clone`.
+impl<T> Clone for RequestQueue<T> {
+    fn clone(&self) -> RequestQueue<T> {
+        RequestQueue { tx: self.tx.clone(), depth: Arc::clone(&self.depth), capacity: self.capacity }
+    }
+}
+
+impl<T> RequestQueue<T> {
+    /// Non-blocking admission: `Ok(depth after enqueue)` or the job
+    /// back. The gauge is incremented *before* the send and rolled back
+    /// on refusal, so a receiver that drains the job immediately can
+    /// never decrement a count that was not yet added.
+    pub fn submit(&self, job: T) -> Result<usize, SubmitError<T>> {
+        let d = self.depth.fetch_add(1, Ordering::SeqCst) + 1;
+        match self.tx.try_send(job) {
+            Ok(()) => Ok(d),
+            Err(TrySendError::Full(job)) => {
+                self.depth.fetch_sub(1, Ordering::SeqCst);
+                Err(SubmitError::Busy(job))
+            }
+            Err(TrySendError::Disconnected(job)) => {
+                self.depth.fetch_sub(1, Ordering::SeqCst);
+                Err(SubmitError::Closed(job))
+            }
+        }
+    }
+
+    /// Blocking admission — used only for control jobs (shutdown) that
+    /// must queue *behind* already-accepted work rather than bounce.
+    pub fn submit_blocking(&self, job: T) -> Result<(), SubmitError<T>> {
+        self.depth.fetch_add(1, Ordering::SeqCst);
+        match self.tx.send(job) {
+            Ok(()) => Ok(()),
+            Err(mpsc::SendError(job)) => {
+                self.depth.fetch_sub(1, Ordering::SeqCst);
+                Err(SubmitError::Closed(job))
+            }
+        }
+    }
+
+    /// Jobs currently enqueued (accepted, not yet picked up).
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::SeqCst)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+/// The worker side: exactly one receiver.
+pub struct QueueReceiver<T> {
+    rx: Receiver<T>,
+    depth: Arc<AtomicUsize>,
+}
+
+impl<T> QueueReceiver<T> {
+    /// Next job, blocking; `None` once every sender is gone.
+    pub fn recv(&self) -> Option<T> {
+        match self.rx.recv() {
+            Ok(job) => {
+                self.depth.fetch_sub(1, Ordering::SeqCst);
+                Some(job)
+            }
+            Err(_) => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn submit_recv_tracks_depth() {
+        let (q, rx) = bounded::<u32>(4);
+        assert_eq!(q.depth(), 0);
+        assert_eq!(q.submit(1).unwrap(), 1);
+        assert_eq!(q.submit(2).unwrap(), 2);
+        assert_eq!(q.depth(), 2);
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(q.depth(), 1);
+        assert_eq!(rx.recv(), Some(2));
+        assert_eq!(q.depth(), 0);
+    }
+
+    #[test]
+    fn full_queue_is_busy_not_blocking() {
+        let (q, rx) = bounded::<u32>(2);
+        q.submit(1).unwrap();
+        q.submit(2).unwrap();
+        match q.submit(3) {
+            Err(SubmitError::Busy(job)) => assert_eq!(job, 3, "the job must come back"),
+            other => panic!("expected Busy, got {other:?}"),
+        }
+        assert_eq!(q.depth(), 2, "a refused submit must not leak into the gauge");
+        // Draining one slot re-admits.
+        assert_eq!(rx.recv(), Some(1));
+        q.submit(3).unwrap();
+    }
+
+    #[test]
+    fn dropped_receiver_closes_the_queue() {
+        let (q, rx) = bounded::<u32>(2);
+        drop(rx);
+        assert!(matches!(q.submit(1), Err(SubmitError::Closed(1))));
+        assert!(matches!(q.submit_blocking(2), Err(SubmitError::Closed(2))));
+        assert_eq!(q.depth(), 0);
+    }
+
+    #[test]
+    fn clones_share_channel_and_gauge() {
+        let (q, rx) = bounded::<u32>(3);
+        let q2 = q.clone();
+        q.submit(1).unwrap();
+        q2.submit(2).unwrap();
+        assert_eq!(q.depth(), 2);
+        assert_eq!(q2.depth(), 2);
+        assert_eq!(q2.capacity(), 3);
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(rx.recv(), Some(2));
+    }
+}

@@ -1,0 +1,163 @@
+//! Matrix registration handles: upload once, multiply many.
+//!
+//! A daemon client registers an operand and gets back a [`HandleId`];
+//! every later multiply names handles instead of re-shipping (and
+//! re-hashing) the matrix. Registration is where
+//! [`Csr::structure_hash`] is computed, so the O(nnz) fingerprint scan
+//! happens once per upload — every subsequent plan lookup on that
+//! operand is a memo read.
+//!
+//! Handles are **generation-counted**: a slot's generation bumps on
+//! release, and a handle carries the generation it was minted under,
+//! so a released handle can never alias a matrix that later reuses its
+//! slot — resolution fails with "unknown handle" instead of silently
+//! multiplying the wrong operand.
+
+use crate::sparse::Csr;
+use std::sync::Arc;
+
+/// Opaque client-facing matrix handle: slot index + generation. The
+/// wire form is [`HandleId::raw`] (`gen << 32 | index`), which fits the
+/// protocol's `i64` JSON integers for any realistic session.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct HandleId {
+    pub index: u32,
+    pub gen: u32,
+}
+
+impl HandleId {
+    /// Wire encoding.
+    pub fn raw(self) -> u64 {
+        (self.gen as u64) << 32 | self.index as u64
+    }
+
+    /// Decode a wire handle (any bit pattern decodes; stale or
+    /// fabricated handles fail at [`MatrixRegistry::resolve`]).
+    pub fn from_raw(raw: u64) -> HandleId {
+        HandleId { index: raw as u32, gen: (raw >> 32) as u32 }
+    }
+}
+
+struct Slot {
+    /// Current generation; a handle resolves only while its generation
+    /// matches.
+    gen: u32,
+    entry: Option<Arc<Csr>>,
+}
+
+/// Slab of registered matrices with a free list.
+#[derive(Default)]
+pub struct MatrixRegistry {
+    slots: Vec<Slot>,
+    free: Vec<u32>,
+}
+
+impl MatrixRegistry {
+    pub fn new() -> MatrixRegistry {
+        MatrixRegistry::default()
+    }
+
+    /// Register a matrix, computing (and memoizing) its structure hash
+    /// now so multiplies never pay the scan.
+    pub fn register(&mut self, m: Arc<Csr>) -> HandleId {
+        let _ = m.structure_hash();
+        match self.free.pop() {
+            Some(index) => {
+                let slot = &mut self.slots[index as usize];
+                slot.entry = Some(m);
+                HandleId { index, gen: slot.gen }
+            }
+            None => {
+                let index = u32::try_from(self.slots.len()).expect("registry slot count exceeds u32");
+                self.slots.push(Slot { gen: 0, entry: Some(m) });
+                HandleId { index, gen: 0 }
+            }
+        }
+    }
+
+    /// The matrix behind a handle — `None` for released, stale, or
+    /// fabricated handles.
+    pub fn resolve(&self, h: HandleId) -> Option<Arc<Csr>> {
+        self.slots
+            .get(h.index as usize)
+            .filter(|s| s.gen == h.gen)
+            .and_then(|s| s.entry.as_ref().map(Arc::clone))
+    }
+
+    /// Release a handle, bumping the slot's generation so the handle
+    /// (and any copy of it) is dead forever. `false` if the handle was
+    /// already invalid.
+    pub fn release(&mut self, h: HandleId) -> bool {
+        let Some(slot) = self.slots.get_mut(h.index as usize) else {
+            return false;
+        };
+        if slot.gen != h.gen || slot.entry.is_none() {
+            return false;
+        }
+        slot.entry = None;
+        slot.gen = slot.gen.wrapping_add(1);
+        self.free.push(h.index);
+        true
+    }
+
+    /// Registered (live) matrices.
+    pub fn len(&self) -> usize {
+        self.slots.iter().filter(|s| s.entry.is_some()).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raw_roundtrip() {
+        let h = HandleId { index: 7, gen: 3 };
+        assert_eq!(h.raw(), (3u64 << 32) | 7);
+        assert_eq!(HandleId::from_raw(h.raw()), h);
+        assert_eq!(HandleId::from_raw(0), HandleId { index: 0, gen: 0 });
+    }
+
+    #[test]
+    fn register_resolve_release() {
+        let mut r = MatrixRegistry::new();
+        let a = Arc::new(Csr::identity(4));
+        let h = r.register(Arc::clone(&a));
+        assert_eq!(r.len(), 1);
+        assert!(a.cached_structure_hash().is_some(), "registration must warm the hash memo");
+        let got = r.resolve(h).expect("live handle resolves");
+        assert!(Arc::ptr_eq(&got, &a));
+        assert!(r.release(h));
+        assert_eq!(r.len(), 0);
+        assert!(r.resolve(h).is_none(), "released handle is dead");
+        assert!(!r.release(h), "double release fails");
+    }
+
+    #[test]
+    fn released_slot_reuse_cannot_alias() {
+        let mut r = MatrixRegistry::new();
+        let h1 = r.register(Arc::new(Csr::identity(4)));
+        assert!(r.release(h1));
+        // The slot is reused, but under a bumped generation: the old
+        // handle must not resolve to the new matrix.
+        let h2 = r.register(Arc::new(Csr::identity(8)));
+        assert_eq!(h2.index, h1.index, "free list reuses the slot");
+        assert_ne!(h2.gen, h1.gen);
+        assert_ne!(h2.raw(), h1.raw());
+        assert!(r.resolve(h1).is_none(), "stale handle must not alias the new matrix");
+        assert_eq!(r.resolve(h2).unwrap().n_rows, 8);
+    }
+
+    #[test]
+    fn fabricated_handles_fail() {
+        let mut r = MatrixRegistry::new();
+        let h = r.register(Arc::new(Csr::identity(2)));
+        assert!(r.resolve(HandleId { index: 99, gen: 0 }).is_none());
+        assert!(r.resolve(HandleId { index: h.index, gen: h.gen.wrapping_add(5) }).is_none());
+        assert!(!r.release(HandleId { index: 99, gen: 0 }));
+    }
+}

@@ -1,0 +1,151 @@
+//! Unix-socket front end of the daemon: accept loop, per-connection
+//! line framing, signal-driven shutdown.
+//!
+//! [`run_daemon`] binds the socket, starts the [`Server`] core, and
+//! accepts connections until either a `shutdown` protocol op or a
+//! SIGTERM/SIGINT arrives. All protocol semantics live in
+//! [`super::protocol::handle_line`] — this module only moves bytes.
+//!
+//! Shutdown discipline (what the CI smoke test times): the listener is
+//! polled non-blocking (std's blocking `accept` retries `EINTR`
+//! internally, so a signal could never interrupt it), connection reads
+//! carry a short timeout so every connection thread re-checks the stop
+//! flags at a bounded cadence, and the server core drains accepted
+//! work before the process exits — a client that got an `ok` submit
+//! always gets its reply. The socket file is removed on the way out.
+
+use super::protocol;
+use super::{ServeConfig, Server};
+use crate::util::error::{Context, Result};
+use std::io::{BufRead, BufReader, BufWriter, ErrorKind, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Set by the signal handler; polled by the accept loop and every
+/// connection thread.
+static SIGNALED: AtomicBool = AtomicBool::new(false);
+
+extern "C" fn on_signal(_signum: i32) {
+    SIGNALED.store(true, Ordering::SeqCst);
+}
+
+/// Install SIGTERM/SIGINT handlers through libc's `signal` (std links
+/// libc on unix; declaring the symbol keeps the crate std-only). The
+/// handler only flips an atomic — async-signal-safe by construction.
+fn install_signal_handlers() {
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGINT, on_signal);
+        signal(SIGTERM, on_signal);
+    }
+}
+
+/// Run the daemon on `socket` until `shutdown` (protocol) or
+/// SIGTERM/SIGINT. Blocks the calling thread for the daemon's
+/// lifetime.
+pub fn run_daemon(socket: &Path, cfg: &ServeConfig) -> Result<()> {
+    install_signal_handlers();
+    // A stale socket file from a crashed daemon would fail the bind.
+    if socket.exists() {
+        let _ = std::fs::remove_file(socket);
+    }
+    if let Some(parent) = socket.parent().filter(|p| !p.as_os_str().is_empty()) {
+        let _ = std::fs::create_dir_all(parent);
+    }
+    let listener =
+        UnixListener::bind(socket).with_context(|| format!("binding unix socket {}", socket.display()))?;
+    listener.set_nonblocking(true).context("setting the listener non-blocking")?;
+    let server = Server::start(cfg);
+    let handle = server.handle();
+    let stop = Arc::new(AtomicBool::new(false));
+    eprintln!(
+        "serve: listening on {} (queue capacity {}, {} streams, plan cache {})",
+        socket.display(),
+        cfg.queue_capacity,
+        cfg.n_streams,
+        cfg.plan_cache.as_ref().map(|d| d.display().to_string()).unwrap_or_else(|| "none".into()),
+    );
+    let mut connections = Vec::new();
+    while !stop.load(Ordering::SeqCst) && !SIGNALED.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _addr)) => {
+                let handle = handle.clone();
+                let stop = Arc::clone(&stop);
+                connections.push(std::thread::spawn(move || serve_connection(stream, handle, stop)));
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => std::thread::sleep(Duration::from_millis(20)),
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => {
+                eprintln!("serve: accept error: {e}");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+    eprintln!("serve: shutting down ({})", if SIGNALED.load(Ordering::SeqCst) { "signal" } else { "protocol" });
+    // No new connections; existing ones observe the stop flags within
+    // one read timeout, finish their in-flight request (the worker is
+    // still up), and exit.
+    drop(listener);
+    for conn in connections {
+        let _ = conn.join();
+    }
+    // Drain accepted work, join the worker, then clean up the socket.
+    server.shutdown();
+    let _ = std::fs::remove_file(socket);
+    eprintln!("serve: stopped");
+    Ok(())
+}
+
+/// One connection: read request lines, answer each on its own line.
+fn serve_connection(stream: UnixStream, handle: super::ServeHandle, stop: Arc<AtomicBool>) {
+    let client = handle.new_client();
+    // The read timeout is the connection's stop-poll cadence: idle
+    // connections re-check the flags this often, which bounds shutdown
+    // latency without a reader thread per flag.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = BufWriter::new(stream);
+    let mut line = String::new();
+    loop {
+        if stop.load(Ordering::SeqCst) || SIGNALED.load(Ordering::SeqCst) {
+            break;
+        }
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // EOF: client hung up
+            Ok(_) => {
+                if !line.ends_with('\n') {
+                    // Partial final line (EOF without newline): the next
+                    // read returns Ok(0) and ends the session.
+                    continue;
+                }
+                let trimmed = line.trim();
+                if !trimmed.is_empty() {
+                    let (response, stop_daemon) = protocol::handle_line(&handle, client, trimmed);
+                    if writeln!(writer, "{response}").and_then(|()| writer.flush()).is_err() {
+                        break;
+                    }
+                    if stop_daemon {
+                        stop.store(true, Ordering::SeqCst);
+                        break;
+                    }
+                }
+                line.clear();
+            }
+            // Timeout (flag-poll tick) — partial data read so far stays
+            // in `line` and the next pass appends to it.
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {}
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => break,
+        }
+    }
+}

@@ -30,7 +30,7 @@ pub use grouping::{
 };
 pub use plan::{pair_key, pair_key_from_hashes, PlannedProduct};
 pub use planstore::{
-    default_plan_cache_dir, set_default_plan_cache_dir, DiskStore, MemStore, PlanFingerprint, PlanStore,
-    StoreStats, TieredStore,
+    default_plan_cache_dir, set_default_plan_cache_dir, DiskStore, GetOutcome, MemStore, PlanFileInfo,
+    PlanFingerprint, PlanStore, PlanSummary, PruneReport, StoreStats, TieredStore,
 };
 pub use table::{DenseAccumulator, RowCounter};

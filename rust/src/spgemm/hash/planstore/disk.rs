@@ -44,7 +44,7 @@ use super::{PlanFingerprint, PlanStore, StoreStats};
 use crate::spgemm::hash::engine::{NumericBin, SymbolicPlan};
 use crate::spgemm::hash::grouping::{AccumKind, Grouping, SymbolicKind};
 use crate::spgemm::hash::plan::PlannedProduct;
-use crate::util::error::{bail, ensure, Result};
+use crate::util::error::{anyhow, bail, ensure, Result};
 use crate::util::serial::{fnv1a, Reader, Writer};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -143,6 +143,132 @@ impl DiskStore {
             return false;
         }
         std::fs::rename(&tmp, self.path_for(key)).is_ok()
+    }
+}
+
+/// One `.plan` file as the lifecycle tooling (`spgemm-aia plan-cache`)
+/// sees it — filesystem facts only; decode facts are a
+/// [`PlanSummary`].
+#[derive(Clone, Debug)]
+pub struct PlanFileInfo {
+    pub path: PathBuf,
+    /// Store key parsed from the `<key:016x>.plan` file name, `None`
+    /// when the name does not follow the store's convention (such a
+    /// file can never be probed and is dead weight).
+    pub key: Option<u64>,
+    pub bytes: u64,
+    /// Modification time, when the filesystem reports one — the age
+    /// order [`DiskStore::prune`] evicts in.
+    pub modified: Option<std::time::SystemTime>,
+}
+
+/// Facts decoded from one valid plan file (`plan-cache ls`/`verify`).
+#[derive(Clone, Copy, Debug)]
+pub struct PlanSummary {
+    /// The plan's own pair key — on a healthy file this matches the
+    /// key in the file name; a mismatch means the file was renamed and
+    /// will only ever read as stale at runtime.
+    pub key: u64,
+    pub a_shape: (usize, usize),
+    pub b_shape: (usize, usize),
+    /// Exact output nnz the plan's row pointers promise.
+    pub nnz: usize,
+    /// Numeric bins in the plan's work list.
+    pub bins: usize,
+    /// The SPA threshold the plan's row kernels were selected under.
+    pub spa_threshold: f64,
+}
+
+/// What one [`DiskStore::prune`] sweep did.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PruneReport {
+    /// Plan files left in the directory.
+    pub kept: usize,
+    /// Plan files deleted (oldest-modified first).
+    pub removed: usize,
+    pub bytes_before: u64,
+    pub bytes_after: u64,
+}
+
+impl DiskStore {
+    /// Every `.plan` file under the cache directory, oldest-modified
+    /// first (the eviction order [`DiskStore::prune`] uses; files with
+    /// unreadable metadata sort first, i.e. evict first). Best-effort:
+    /// an unreadable directory is an empty listing, mirroring the
+    /// load side's miss-don't-panic contract.
+    pub fn entries(&self) -> Vec<PlanFileInfo> {
+        let mut out = Vec::new();
+        if let Ok(rd) = std::fs::read_dir(&self.dir) {
+            for e in rd.filter_map(|e| e.ok()) {
+                let path = e.path();
+                if !path.extension().is_some_and(|x| x == "plan") {
+                    continue;
+                }
+                let key = path.file_stem().and_then(|s| s.to_str()).and_then(|s| u64::from_str_radix(s, 16).ok());
+                let meta = e.metadata().ok();
+                out.push(PlanFileInfo {
+                    key,
+                    bytes: meta.as_ref().map(|m| m.len()).unwrap_or(0),
+                    modified: meta.and_then(|m| m.modified().ok()),
+                    path,
+                });
+            }
+        }
+        out.sort_by(|a, b| a.modified.cmp(&b.modified).then_with(|| a.path.cmp(&b.path)));
+        out
+    }
+
+    /// Run the full validation ladder over one plan file — read,
+    /// checksum, magic/version, structural sanity — exactly what a
+    /// runtime load would accept, and return the decoded header facts.
+    /// Deliberately does *not* compare the persisted SPA threshold to
+    /// this process's knob: a file from a differently-configured run is
+    /// stale for this process, not damaged, and `plan-cache verify`
+    /// must not fail a healthy shared cache over configuration skew.
+    pub fn verify_path(path: &Path) -> Result<PlanSummary> {
+        let bytes = std::fs::read(path).map_err(|e| anyhow!("read {}: {e}", path.display()))?;
+        let p = decode_plan(&bytes)?;
+        let sp = p.symbolic_plan();
+        Ok(PlanSummary {
+            key: p.key(),
+            a_shape: p.a_shape(),
+            b_shape: p.b_shape(),
+            nnz: p.nnz(),
+            bins: sp.bins.len(),
+            spa_threshold: sp.spa_threshold,
+        })
+    }
+
+    /// Shrink the cache directory to at most `max_bytes` of plan files
+    /// by deleting the oldest-modified first, and sweep any abandoned
+    /// writer temp files (a crashed process leaves its `.tmp` behind;
+    /// a live writer's rename simply fails afterwards and degrades to
+    /// the save path's silent no-op). Best-effort throughout.
+    pub fn prune(&self, max_bytes: u64) -> PruneReport {
+        if let Ok(rd) = std::fs::read_dir(&self.dir) {
+            for e in rd.filter_map(|e| e.ok()) {
+                let name = e.file_name();
+                let name = name.to_string_lossy();
+                if name.starts_with('.') && name.contains(".tmp") {
+                    let _ = std::fs::remove_file(e.path());
+                }
+            }
+        }
+        let entries = self.entries();
+        let total: u64 = entries.iter().map(|e| e.bytes).sum();
+        let mut report =
+            PruneReport { kept: entries.len(), removed: 0, bytes_before: total, bytes_after: total };
+        for e in &entries {
+            if report.bytes_after <= max_bytes {
+                break;
+            }
+            if std::fs::remove_file(&e.path).is_ok() {
+                report.removed += 1;
+                report.kept -= 1;
+                report.bytes_after -= e.bytes;
+            }
+        }
+        report
     }
 }
 
@@ -404,6 +530,47 @@ mod tests {
         // Rewriting under the process default heals the entry.
         s.put(Arc::new(PlannedProduct::plan(&a, &a)));
         assert!(s.get(&fp).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lifecycle_entries_verify_and_prune() {
+        let dir = unique_dir("lifecycle");
+        let s = DiskStore::new(&dir);
+        for seed in [31, 32, 33] {
+            let (_, p) = random_plan(seed, 64 + seed as usize);
+            assert!(s.save(&p));
+        }
+        let entries = s.entries();
+        assert_eq!(entries.len(), 3);
+        let total: u64 = entries.iter().map(|e| e.bytes).sum();
+        for e in &entries {
+            assert!(e.bytes > 0);
+            let summary = DiskStore::verify_path(&e.path).expect("freshly saved file must verify");
+            assert_eq!(Some(summary.key), e.key, "file name key must match the plan's own key");
+            assert_eq!(summary.a_shape.0, summary.b_shape.0);
+        }
+        // Corrupt one file in place: verify must now error on it.
+        let victim = &entries[0].path;
+        let mut bytes = std::fs::read(victim).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        std::fs::write(victim, &bytes).unwrap();
+        assert!(DiskStore::verify_path(victim).is_err(), "flipped byte must fail verify");
+        // An abandoned writer temp file gets swept by prune...
+        std::fs::write(dir.join(".deadbeef.tmp999-0"), b"junk").unwrap();
+        // ...and pruning to roughly one file's budget deletes oldest-first.
+        let keep = entries.last().unwrap().bytes;
+        let r = s.prune(keep);
+        assert_eq!(r.bytes_before, total);
+        assert!(r.bytes_after <= keep.max(entries.iter().map(|e| e.bytes).max().unwrap()));
+        assert_eq!(r.kept + r.removed, 3);
+        assert!(r.removed >= 2, "a one-file budget must evict the other two");
+        assert_eq!(s.entries().len(), r.kept);
+        assert!(!dir.join(".deadbeef.tmp999-0").exists(), "prune sweeps abandoned temp files");
+        // Pruning to zero empties the directory of plans.
+        let r = s.prune(0);
+        assert_eq!((r.kept, r.bytes_after), (0, 0));
         let _ = std::fs::remove_dir_all(&dir);
     }
 

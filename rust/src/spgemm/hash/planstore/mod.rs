@@ -38,14 +38,14 @@
 mod disk;
 mod mem;
 
-pub use disk::{DiskLoad, DiskStore, FORMAT_VERSION};
+pub use disk::{DiskLoad, DiskStore, PlanFileInfo, PlanSummary, PruneReport, FORMAT_VERSION};
 pub use mem::{MemStore, DEFAULT_MEM_CAP};
 
 use super::plan::{pair_key_from_hashes, PlannedProduct};
 use crate::sparse::Csr;
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::{Arc, OnceLock};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
 
 /// Structure identity of one `A·B` product: operand shapes plus their
 /// [`Csr::structure_hash`] fingerprints. This is the store key *and*
@@ -150,7 +150,29 @@ pub enum GetOutcome {
 
 /// The `mem → disk` composition. Disk is optional — [`TieredStore::mem_only`]
 /// reproduces the pre-persistence behavior exactly.
+///
+/// The store is a shared *handle*: the tiers and their counters live
+/// behind an `Arc<Mutex<..>>`, and **cloning shares them** rather than
+/// copying. That is what lets one resident store back every executor
+/// and client session of the serve daemon ([`crate::serve`]) — a plan
+/// built for one session's operands is a memory hit for every other
+/// session, and `serve.plan_hit_rate` is a property of the store, not
+/// of whichever executor happened to build the plan. Constructors
+/// (`mem_only`/`with_disk`/`process_default`) still mint *independent*
+/// stores, so existing per-test and per-CLI-run isolation is unchanged.
+///
+/// Locking: every operation takes the mutex for its whole duration,
+/// including disk-tier I/O on `get_traced`/`admit` — lookups and
+/// write-throughs are serialized, which is exactly the coherence the
+/// daemon wants. Latency-sensitive planner threads avoid the lock via
+/// [`TieredStore::snapshot`] (unchanged: an `Arc`-cloned view).
+#[derive(Clone)]
 pub struct TieredStore {
+    inner: Arc<Mutex<TieredInner>>,
+}
+
+/// The actual tiers, behind [`TieredStore`]'s mutex.
+struct TieredInner {
     mem: MemStore,
     disk: Option<DiskStore>,
     stats: StoreStats,
@@ -164,19 +186,33 @@ impl Default for TieredStore {
 }
 
 impl TieredStore {
+    fn from_tiers(mem: MemStore, disk: Option<DiskStore>) -> TieredStore {
+        TieredStore { inner: Arc::new(Mutex::new(TieredInner { mem, disk, stats: StoreStats::default() })) }
+    }
+
+    /// Lock the tiers. A panic elsewhere can only have abandoned whole
+    /// operations (tiers mutate by whole-value inserts, never partial
+    /// writes), so a poisoned lock is recovered, not propagated — the
+    /// daemon must not brick its plan cache because one request died.
+    fn lock(&self) -> MutexGuard<'_, TieredInner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     /// Memory tier only (no persistence).
     pub fn mem_only() -> TieredStore {
-        TieredStore { mem: MemStore::default(), disk: None, stats: StoreStats::default() }
+        TieredStore::from_tiers(MemStore::default(), None)
     }
 
     /// Memory tier backed by a disk tier rooted at `dir`.
     pub fn with_disk(dir: impl Into<PathBuf>) -> TieredStore {
-        TieredStore { mem: MemStore::default(), disk: Some(DiskStore::new(dir)), stats: StoreStats::default() }
+        TieredStore::from_tiers(MemStore::default(), Some(DiskStore::new(dir)))
     }
 
-    /// The store the process was configured for: disk-backed when
-    /// `--plan-cache` / `SPGEMM_AIA_PLAN_CACHE` named a directory
-    /// ([`default_plan_cache_dir`]), memory-only otherwise.
+    /// A *fresh* store configured the way the process was: disk-backed
+    /// when `--plan-cache` / `SPGEMM_AIA_PLAN_CACHE` named a directory
+    /// ([`default_plan_cache_dir`]), memory-only otherwise. Each call
+    /// mints an independent store (shared residency is opt-in, via
+    /// `clone` of one handle).
     pub fn process_default() -> TieredStore {
         match default_plan_cache_dir() {
             Some(dir) => TieredStore::with_disk(dir),
@@ -184,65 +220,69 @@ impl TieredStore {
         }
     }
 
-    /// The disk tier's directory, if one is attached.
-    pub fn disk_dir(&self) -> Option<&Path> {
-        self.disk.as_ref().map(|d| d.dir())
+    /// The disk tier's directory, if one is attached (owned: the path
+    /// must outlive the lock guard).
+    pub fn disk_dir(&self) -> Option<PathBuf> {
+        self.lock().disk.as_ref().map(|d| d.dir().to_path_buf())
     }
 
     /// [`PlanStore::get`] plus *where* the lookup resolved. Disk hits
     /// are promoted into the memory tier, so the next lookup of the
-    /// same structure is a map probe.
-    pub fn get_traced(&mut self, fp: &PlanFingerprint) -> (Option<Arc<PlannedProduct>>, GetOutcome) {
-        if let Some(p) = self.mem.lookup(fp) {
-            self.stats.mem_hits += 1;
+    /// same structure is a map probe. `&self`: safe from any holder of
+    /// a shared handle.
+    pub fn get_traced(&self, fp: &PlanFingerprint) -> (Option<Arc<PlannedProduct>>, GetOutcome) {
+        let mut g = self.lock();
+        if let Some(p) = g.mem.lookup(fp) {
+            g.stats.mem_hits += 1;
             return (Some(p), GetOutcome::MemHit);
         }
         let (mut corrupt, mut stale) = (false, false);
-        if let Some(disk) = &self.disk {
+        if let Some(disk) = &g.disk {
             match disk.load(fp) {
                 DiskLoad::Hit(p) => {
-                    self.stats.disk_hits += 1;
-                    if self.mem.insert(Arc::clone(&p)) {
-                        self.stats.evictions += 1;
+                    g.stats.disk_hits += 1;
+                    if g.mem.insert(Arc::clone(&p)) {
+                        g.stats.evictions += 1;
                     }
                     return (Some(p), GetOutcome::DiskHit);
                 }
                 DiskLoad::Corrupt => {
-                    self.stats.corrupt += 1;
+                    g.stats.corrupt += 1;
                     corrupt = true;
                 }
                 DiskLoad::Stale => {
-                    self.stats.stale += 1;
+                    g.stats.stale += 1;
                     stale = true;
                 }
                 DiskLoad::Absent => {}
             }
         }
-        self.stats.misses += 1;
+        g.stats.misses += 1;
         (None, GetOutcome::Miss { corrupt, stale })
     }
 
     /// Insert a plan into the memory tier, writing through to disk only
     /// when `to_disk` (freshly built plans persist; plans just loaded
     /// *from* disk are promoted without being rewritten).
-    pub fn admit(&mut self, plan: Arc<PlannedProduct>, to_disk: bool) {
+    pub fn admit(&self, plan: Arc<PlannedProduct>, to_disk: bool) {
+        let mut g = self.lock();
         if to_disk {
-            if let Some(disk) = &self.disk {
+            if let Some(disk) = &g.disk {
                 if disk.save(&plan) {
-                    self.stats.stores += 1;
+                    g.stats.stores += 1;
                 }
             }
         }
-        if self.mem.insert(plan) {
-            self.stats.evictions += 1;
+        if g.mem.insert(plan) {
+            g.stats.evictions += 1;
         }
     }
 
     /// Fold outcome counters observed outside `get`/`put` (the batch
     /// planner thread resolves against a [`TieredStore::snapshot`] and
     /// reports what happened here) into this store's [`StoreStats`].
-    pub fn tally(&mut self, outcomes: &StoreStats) {
-        self.stats.merge(outcomes);
+    pub fn tally(&self, outcomes: &StoreStats) {
+        self.lock().stats.merge(outcomes);
     }
 
     /// Immutable view for a planner thread: an `Arc`-cloned copy of the
@@ -250,10 +290,8 @@ impl TieredStore {
     /// are pure; the caller reports outcomes back via
     /// [`TieredStore::tally`] and inserts via [`TieredStore::admit`].
     pub fn snapshot(&self) -> StoreSnapshot {
-        StoreSnapshot {
-            mem: self.mem.snapshot_map(),
-            disk: self.disk.as_ref().map(|d| DiskStore::new(d.dir())),
-        }
+        let g = self.lock();
+        StoreSnapshot { mem: g.mem.snapshot_map(), disk: g.disk.as_ref().map(|d| DiskStore::new(d.dir())) }
     }
 }
 
@@ -269,18 +307,18 @@ impl PlanStore for TieredStore {
     /// Plans in the *memory* tier (the bounded working set; the disk
     /// tier is unbounded and only consulted on memory misses).
     fn len(&self) -> usize {
-        self.mem.len()
+        self.lock().mem.len()
     }
 
     /// Drop the memory tier. Disk files are left in place: they are
     /// fingerprint-validated on every load, so a stale file can only
     /// ever cost a read, never a wrong result.
     fn clear(&mut self) {
-        self.mem.clear();
+        self.lock().mem.clear();
     }
 
     fn stats(&self) -> StoreStats {
-        self.stats
+        self.lock().stats
     }
 }
 
@@ -369,7 +407,7 @@ mod tests {
         writer.put(Arc::new(PlannedProduct::plan(&a, &a)));
         assert_eq!(writer.stats().stores, 1);
         // Reader "process": cold memory tier, warm disk.
-        let mut reader = TieredStore::with_disk(&dir);
+        let reader = TieredStore::with_disk(&dir);
         let (p, how) = reader.get_traced(&fp);
         assert!(p.is_some());
         assert_eq!(how, GetOutcome::DiskHit);
@@ -383,7 +421,7 @@ mod tests {
     #[test]
     fn mem_only_store_misses_cold() {
         let a = random_square(4, 64);
-        let mut s = TieredStore::mem_only();
+        let s = TieredStore::mem_only();
         let (p, how) = s.get_traced(&PlanFingerprint::of(&a, &a));
         assert!(p.is_none());
         assert_eq!(how, GetOutcome::Miss { corrupt: false, stale: false });
@@ -411,6 +449,27 @@ mod tests {
         assert!(hit.is_some());
         assert_eq!(how, GetOutcome::DiskHit);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn clones_share_tiers_and_counters() {
+        // A cloned handle is the *same* store: a plan admitted through
+        // one clone is a memory hit through the other, and the counters
+        // are one set — the property the serve daemon's shared
+        // residency is built on.
+        let a = random_square(8, 64);
+        let fp = PlanFingerprint::of(&a, &a);
+        let s = TieredStore::mem_only();
+        let t = s.clone();
+        s.admit(Arc::new(PlannedProduct::plan(&a, &a)), false);
+        let (p, how) = t.get_traced(&fp);
+        assert!(p.is_some(), "clone must see the original's plan");
+        assert_eq!(how, GetOutcome::MemHit);
+        assert_eq!(s.stats().mem_hits, 1, "counters are shared, not per-clone");
+        // And misses observed through the clone land in the same stats.
+        let b = random_square(9, 64);
+        let _ = t.get_traced(&PlanFingerprint::of(&b, &b));
+        assert_eq!((s.stats().mem_hits, s.stats().misses), (1, 1));
     }
 
     #[test]

@@ -1,9 +1,16 @@
-//! Tiny JSON emitter (offline build has no `serde_json`).
+//! Tiny JSON emitter *and parser* (offline build has no `serde_json`).
 //!
-//! Only what the metrics registry and the repro harness need: objects,
-//! arrays, numbers, strings, with correct escaping. Writing only — we
-//! never parse JSON.
+//! Writing covers what the metrics registry and the repro harness
+//! need: objects, arrays, numbers, strings, with correct escaping.
+//! Reading ([`Json::parse`]) exists for the serve daemon's line
+//! protocol (`serve/protocol.rs`): a recursive-descent parser over the
+//! same [`Json`] tree, hardened for untrusted socket input — depth
+//! capped, every error a message instead of a panic. It is lenient
+//! where strict JSON is pedantic (leading zeros in numbers parse), and
+//! strict where it matters (strings must be valid escapes, input must
+//! be one complete document with nothing trailing).
 
+use crate::util::error::{anyhow, bail, ensure, Result};
 use std::fmt::Write as _;
 
 /// A JSON value tree.
@@ -18,9 +25,83 @@ pub enum Json {
     Obj(Vec<(String, Json)>),
 }
 
+/// Nesting cap for [`Json::parse`] — socket input must not be able to
+/// overflow the stack with `[[[[…`.
+const MAX_PARSE_DEPTH: usize = 64;
+
 impl Json {
     pub fn obj() -> Json {
         Json::Obj(Vec::new())
+    }
+
+    /// Parse one complete JSON document (see the module docs for the
+    /// leniency/strictness contract). Objects keep their key order;
+    /// duplicate keys are kept as-is and [`Json::get`] returns the
+    /// first.
+    pub fn parse(s: &str) -> Result<Json> {
+        let mut p = Parser { b: s.as_bytes(), i: 0, depth: 0 };
+        let v = p.value()?;
+        p.ws();
+        ensure!(p.i == p.b.len(), "trailing characters after the document at byte {}", p.i);
+        Ok(v)
+    }
+
+    /// Object field lookup (first match; `None` on non-objects).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Integer view: `Int` directly, or a `Num` that is exactly
+    /// integral and in range (protocol fields like seeds arrive as
+    /// whatever the client's emitter produced).
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Json::Int(i) => Some(*i),
+            Json::Num(x) if x.fract() == 0.0 && *x >= i64::MIN as f64 && *x <= i64::MAX as f64 => Some(*x as i64),
+            _ => None,
+        }
+    }
+
+    /// Non-negative integer view (see [`Json::as_i64`]).
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_i64().and_then(|i| u64::try_from(i).ok())
+    }
+
+    /// Numeric view: `Num` directly, `Int` widened.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            Json::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(xs) => Some(xs),
+            _ => None,
+        }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, Json::Null)
     }
 
     /// Insert/overwrite a key on an object (panics on non-objects —
@@ -137,6 +218,224 @@ fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
 }
 
+/// Recursive-descent state for [`Json::parse`]: a byte cursor over the
+/// input (always a valid `&str`, so multi-byte scalars can be copied by
+/// slicing at their boundaries) plus the current nesting depth.
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+    depth: usize,
+}
+
+impl Parser<'_> {
+    fn ws(&mut self) {
+        while matches!(self.b.get(self.i), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        self.ws();
+        match self.b.get(self.i) {
+            None => bail!("unexpected end of input"),
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(&c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(&c) => bail!("unexpected character {:?} at byte {}", c as char, self.i),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json> {
+        ensure!(self.b[self.i..].starts_with(word.as_bytes()), "bad literal at byte {}", self.i);
+        self.i += word.len();
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        if self.b.get(self.i) == Some(&b'-') {
+            self.i += 1;
+        }
+        while self.b.get(self.i).is_some_and(|c| c.is_ascii_digit()) {
+            self.i += 1;
+        }
+        let mut float = false;
+        if self.b.get(self.i) == Some(&b'.') {
+            float = true;
+            self.i += 1;
+            while self.b.get(self.i).is_some_and(|c| c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        if matches!(self.b.get(self.i), Some(b'e' | b'E')) {
+            float = true;
+            self.i += 1;
+            if matches!(self.b.get(self.i), Some(b'+' | b'-')) {
+                self.i += 1;
+            }
+            while self.b.get(self.i).is_some_and(|c| c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i]).expect("number chars are ASCII");
+        if !float {
+            // Exact integers stay `Int` (a u64 handle in a 53-bit f64
+            // would silently round); overflow falls through to f64.
+            if let Ok(i) = text.parse::<i64>() {
+                return Ok(Json::Int(i));
+            }
+        }
+        match text.parse::<f64>() {
+            Ok(x) => Ok(Json::Num(x)),
+            Err(_) => bail!("bad number {text:?} at byte {start}"),
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.i += 1; // opening quote
+        let mut out = String::new();
+        loop {
+            match self.b.get(self.i) {
+                None => bail!("unterminated string"),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    match self.b.get(self.i) {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b'b') => out.push('\u{0008}'),
+                        Some(b'f') => out.push('\u{000c}'),
+                        Some(b'u') => out.push(self.unicode_escape()?),
+                        _ => bail!("bad escape at byte {}", self.i),
+                    }
+                    self.i += 1;
+                }
+                Some(&c) if c < 0x20 => bail!("raw control character in string at byte {}", self.i),
+                Some(&c) => {
+                    // Copy one UTF-8 scalar; the input is a valid &str,
+                    // so slicing at the leading byte's length is safe.
+                    let len = match c {
+                        0x00..=0x7f => 1,
+                        0xc0..=0xdf => 2,
+                        0xe0..=0xef => 3,
+                        _ => 4,
+                    };
+                    ensure!(self.i + len <= self.b.len(), "truncated UTF-8 scalar");
+                    out.push_str(std::str::from_utf8(&self.b[self.i..self.i + len]).expect("input is valid UTF-8"));
+                    self.i += len;
+                }
+            }
+        }
+    }
+
+    /// `\uXXXX` (cursor on the `u`), including surrogate pairs; leaves
+    /// the cursor on the last consumed hex digit.
+    fn unicode_escape(&mut self) -> Result<char> {
+        let hi = self.hex4()?;
+        if (0xdc00..0xe000).contains(&hi) {
+            bail!("unpaired low surrogate \\u{hi:04x}");
+        }
+        if !(0xd800..0xdc00).contains(&hi) {
+            return char::from_u32(hi).ok_or_else(|| anyhow!("invalid scalar \\u{hi:04x}"));
+        }
+        // High surrogate: the low half must follow immediately.
+        ensure!(
+            self.b.get(self.i + 1) == Some(&b'\\') && self.b.get(self.i + 2) == Some(&b'u'),
+            "unpaired high surrogate \\u{hi:04x}"
+        );
+        self.i += 2; // onto the second 'u'
+        let lo = self.hex4()?;
+        ensure!((0xdc00..0xe000).contains(&lo), "invalid low surrogate \\u{lo:04x}");
+        let c = 0x10000 + ((hi - 0xd800) << 10) + (lo - 0xdc00);
+        char::from_u32(c).ok_or_else(|| anyhow!("invalid surrogate pair"))
+    }
+
+    /// Four hex digits after the `u` the cursor sits on; advances the
+    /// cursor onto the last digit.
+    fn hex4(&mut self) -> Result<u32> {
+        let mut v = 0u32;
+        for k in 1..=4 {
+            let d = self
+                .b
+                .get(self.i + k)
+                .and_then(|c| (*c as char).to_digit(16))
+                .ok_or_else(|| anyhow!("bad \\u escape at byte {}", self.i))?;
+            v = v * 16 + d;
+        }
+        self.i += 4;
+        Ok(v)
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.depth += 1;
+        ensure!(self.depth <= MAX_PARSE_DEPTH, "nesting deeper than {MAX_PARSE_DEPTH}");
+        self.i += 1; // '['
+        let mut xs = Vec::new();
+        self.ws();
+        if self.b.get(self.i) == Some(&b']') {
+            self.i += 1;
+            self.depth -= 1;
+            return Ok(Json::Arr(xs));
+        }
+        loop {
+            xs.push(self.value()?);
+            self.ws();
+            match self.b.get(self.i) {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    self.depth -= 1;
+                    return Ok(Json::Arr(xs));
+                }
+                _ => bail!("expected ',' or ']' at byte {}", self.i),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.depth += 1;
+        ensure!(self.depth <= MAX_PARSE_DEPTH, "nesting deeper than {MAX_PARSE_DEPTH}");
+        self.i += 1; // '{'
+        let mut pairs = Vec::new();
+        self.ws();
+        if self.b.get(self.i) == Some(&b'}') {
+            self.i += 1;
+            self.depth -= 1;
+            return Ok(Json::Obj(pairs));
+        }
+        loop {
+            self.ws();
+            ensure!(self.b.get(self.i) == Some(&b'"'), "expected an object key at byte {}", self.i);
+            let k = self.string()?;
+            self.ws();
+            ensure!(self.b.get(self.i) == Some(&b':'), "expected ':' at byte {}", self.i);
+            self.i += 1;
+            pairs.push((k, self.value()?));
+            self.ws();
+            match self.b.get(self.i) {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    self.depth -= 1;
+                    return Ok(Json::Obj(pairs));
+                }
+                _ => bail!("expected ',' or '}}' at byte {}", self.i),
+            }
+        }
+    }
+}
+
 impl From<&str> for Json {
     fn from(s: &str) -> Self {
         Json::Str(s.to_string())
@@ -201,5 +500,75 @@ mod tests {
         o.set("k", 1i64.into());
         o.set("k", 2i64.into());
         assert_eq!(o.render(), r#"{"k":2}"#);
+    }
+
+    #[test]
+    fn parse_roundtrips_render() {
+        let mut o = Json::obj();
+        o.set("name", "p2p-Gnutella04".into());
+        o.set("nnz", 39_994usize.into());
+        o.set("rate", 0.75f64.into());
+        o.set("ok", true.into());
+        o.set("none", Json::Null);
+        o.set("xs", Json::Arr(vec![Json::Int(1), Json::Num(2.5), Json::Str("a\"b\n".into())]));
+        let parsed = Json::parse(&o.render()).expect("own output must parse");
+        assert_eq!(parsed, o);
+        // And the pretty form parses to the same tree.
+        assert_eq!(Json::parse(&o.render_pretty()).unwrap(), o);
+    }
+
+    #[test]
+    fn parse_numbers() {
+        assert_eq!(Json::parse("42").unwrap(), Json::Int(42));
+        assert_eq!(Json::parse("-7").unwrap(), Json::Int(-7));
+        assert_eq!(Json::parse("2.5").unwrap(), Json::Num(2.5));
+        assert_eq!(Json::parse("1e3").unwrap(), Json::Num(1000.0));
+        assert_eq!(Json::parse("-1.25E-2").unwrap(), Json::Num(-0.0125));
+        // u64-sized handles overflow i64 and widen to f64 rather than erroring.
+        assert!(matches!(Json::parse("18446744073709551615").unwrap(), Json::Num(_)));
+        assert!(Json::parse("-").is_err());
+        assert!(Json::parse("1.2.3").is_err());
+    }
+
+    #[test]
+    fn parse_escapes_and_unicode() {
+        assert_eq!(Json::parse(r#""a\"b\\c\nd""#).unwrap(), Json::Str("a\"b\\c\nd".into()));
+        // BMP escape, and a surrogate pair → one astral scalar.
+        assert_eq!(Json::parse(r#""\u0041""#).unwrap(), Json::Str("A".into()));
+        assert_eq!(Json::parse(r#""\ud83d\ude00""#).unwrap(), Json::Str("😀".into()));
+        // Raw multi-byte UTF-8 passes through (2- and 4-byte scalars).
+        assert_eq!(Json::parse("\"héllo 😀\"").unwrap(), Json::Str("héllo 😀".into()));
+        assert!(Json::parse(r#""\ud83d""#).is_err(), "unpaired high surrogate");
+        assert!(Json::parse(r#""\ude00""#).is_err(), "unpaired low surrogate");
+        assert!(Json::parse(r#""\x""#).is_err(), "unknown escape");
+    }
+
+    #[test]
+    fn parse_rejects_malformed_documents() {
+        for bad in ["", "{", "[1,", r#"{"a":}"#, r#"{"a":1"#, "tru", "nul", "[1] x", "\"unterminated", "{1:2}"] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+        // Depth cap: 100 nested arrays overflow the limit cleanly.
+        let deep = "[".repeat(100) + &"]".repeat(100);
+        assert!(Json::parse(&deep).is_err());
+        // ...but reasonable nesting is fine.
+        let ok = "[".repeat(20) + &"]".repeat(20);
+        assert!(Json::parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn accessors() {
+        let v = Json::parse(r#"{"s":"x","i":3,"f":2.5,"b":false,"a":[1,2],"n":null}"#).unwrap();
+        assert_eq!(v.get("s").and_then(|j| j.as_str()), Some("x"));
+        assert_eq!(v.get("i").and_then(|j| j.as_i64()), Some(3));
+        assert_eq!(v.get("i").and_then(|j| j.as_u64()), Some(3));
+        assert_eq!(v.get("i").and_then(|j| j.as_f64()), Some(3.0));
+        assert_eq!(v.get("f").and_then(|j| j.as_f64()), Some(2.5));
+        assert_eq!(v.get("f").and_then(|j| j.as_i64()), None, "2.5 is not an integer");
+        assert_eq!(v.get("b").and_then(|j| j.as_bool()), Some(false));
+        assert_eq!(v.get("a").and_then(|j| j.as_arr()).map(|a| a.len()), Some(2));
+        assert!(v.get("n").is_some_and(|j| j.is_null()));
+        assert!(v.get("missing").is_none());
+        assert_eq!(Json::Int(-1).as_u64(), None);
     }
 }

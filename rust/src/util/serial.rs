@@ -17,11 +17,22 @@
 
 use crate::util::error::{anyhow, ensure, Result};
 
+/// FNV-1a offset basis — the seed [`fnv1a`] starts from.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
 /// FNV-1a over a byte slice — the checksum the on-disk plan format
 /// trails its payload with (catches bit flips that would otherwise
 /// deserialize into structurally plausible garbage).
 pub fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    fnv1a_seeded(FNV_OFFSET, bytes)
+}
+
+/// FNV-1a continuation: fold `bytes` into an existing hash state, so a
+/// multi-array checksum (the serve daemon's per-result CSR checksum)
+/// streams over its parts instead of concatenating them —
+/// `fnv1a_seeded(fnv1a(a), b) == fnv1a(a ++ b)`.
+pub fn fnv1a_seeded(seed: u64, bytes: &[u8]) -> u64 {
+    let mut h = seed;
     for &b in bytes {
         h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
     }

@@ -1,0 +1,307 @@
+//! Service-daemon acceptance tests (`DESIGN.md` §2e), all in-process
+//! through [`ServeHandle`] — the socket layer is a thin shell over the
+//! same API and is exercised end to end by `tools/serve_smoke.py` in CI:
+//!
+//! - N concurrent clients with shared and distinct operands get results
+//!   **bit-identical** to a cold `hash::multiply`, with plan sharing
+//!   visible in the stats;
+//! - a full queue answers `busy` — explicit backpressure, never a
+//!   deadlock and never unbounded buffering;
+//! - released handles error, and a reused slot can never alias a new
+//!   matrix (generation counting);
+//! - stats counters reconcile with the requests actually made, and
+//!   export into the metrics registry;
+//! - the daemon's store comes from *its own* configuration, not the
+//!   process-wide `OnceLock` default (regression: a latched default
+//!   must not hijack the daemon's cache directory);
+//! - a second server on the same cache directory is served from disk
+//!   with zero symbolic seconds.
+
+use spgemm_aia::coordinator::PlanSource;
+use spgemm_aia::gen::{rmat, RmatParams};
+use spgemm_aia::serve::{csr_checksum, ServeConfig, ServeError, Server};
+use spgemm_aia::sparse::Csr;
+use spgemm_aia::spgemm::hash::{self, DiskStore, TieredStore};
+use spgemm_aia::util::Pcg32;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Per-test scratch directory (tests run in parallel in one process —
+/// the tag keeps them disjoint), cleaned on entry so every run is cold.
+fn scratch(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("spgemm-aia-serve-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn rmat_square(seed: u64, n: usize, per_row: usize) -> Csr {
+    let mut rng = Pcg32::seeded(seed);
+    rmat(n, n * per_row, RmatParams::uniform(), &mut rng)
+}
+
+fn mem_cfg(queue_capacity: usize) -> ServeConfig {
+    ServeConfig { queue_capacity, n_streams: 2, plan_cache: None }
+}
+
+/// Four clients on their own threads, every one multiplying the shared
+/// `A` by `A` and by a private `B_i`. Every result must be
+/// bit-identical to a cold multiply, and the shared structure must be
+/// planned exactly once (the worker serializes, so every `A*A` after
+/// the first is a memory hit).
+#[test]
+fn concurrent_clients_get_bit_identical_results_and_share_plans() {
+    const CLIENTS: usize = 4;
+    let server = Server::start_with_store(&mem_cfg(16), TieredStore::mem_only());
+    let handle = server.handle();
+    let a = Arc::new(rmat_square(1, 256, 5));
+    let cold_aa = Arc::new(hash::multiply(&a, &a));
+
+    let workers: Vec<_> = (0..CLIENTS)
+        .map(|i| {
+            let handle = handle.clone();
+            let a = Arc::clone(&a);
+            let cold_aa = Arc::clone(&cold_aa);
+            std::thread::spawn(move || {
+                let client = handle.new_client();
+                let b = Arc::new(rmat_square(10 + i as u64, 256, 4));
+                let cold_ab = hash::multiply(&a, &b);
+                let out_aa = handle.multiply(client, Arc::clone(&a), Arc::clone(&a)).expect("A*A");
+                let out_ab = handle.multiply(client, Arc::clone(&a), Arc::clone(&b)).expect("A*B_i");
+                assert_eq!(out_aa.c, *cold_aa, "client {i}: A*A must match a cold multiply bit for bit");
+                assert_eq!(out_ab.c, cold_ab, "client {i}: A*B_{i} must match a cold multiply bit for bit");
+                assert_eq!(out_aa.checksum, csr_checksum(&cold_aa));
+                assert_eq!(out_ab.source, PlanSource::Fresh, "every B_i is a distinct structure");
+                (client, out_aa.source)
+            })
+        })
+        .collect();
+    let outcomes: Vec<_> = workers.into_iter().map(|w| w.join().expect("client thread")).collect();
+
+    // Exactly one client paid the symbolic phase for A*A.
+    let fresh_aa = outcomes.iter().filter(|(_, s)| *s == PlanSource::Fresh).count();
+    assert_eq!(fresh_aa, 1, "the shared structure must be planned exactly once");
+    assert!(outcomes.iter().all(|(_, s)| *s != PlanSource::Disk), "memory-only store: no disk tier");
+
+    let stats = handle.stats();
+    assert_eq!(stats.requests, 2 * CLIENTS as u64);
+    assert_eq!(stats.plan_hits, CLIENTS as u64 - 1, "3 of 4 A*A requests reuse the plan");
+    assert_eq!(stats.plan_misses, CLIENTS as u64 + 1, "4 distinct B_i plus the first A*A");
+    assert_eq!(stats.busy_rejections, 0);
+    for (client, _) in &outcomes {
+        let cs = stats.per_client.get(client).expect("per-client stats recorded");
+        assert_eq!(cs.requests, 2, "client {client}: two multiplies");
+        assert_eq!(cs.hits + cs.misses, 2, "client {client}: every request is a hit or a miss");
+    }
+    server.shutdown();
+}
+
+/// Backpressure, deterministically: quiesce parks the worker, the
+/// bounded queue fills to exactly its capacity, and every further
+/// submission bounces with `busy` instead of blocking or buffering.
+/// Releasing the worker drains everything and all clients — including
+/// the ones that had to retry — get bit-identical results.
+#[test]
+fn full_queue_answers_busy_then_drains_without_deadlock() {
+    const CLIENTS: usize = 4;
+    const CAPACITY: usize = 2; // deliberately < CLIENTS
+    let server = Server::start_with_store(&mem_cfg(CAPACITY), TieredStore::mem_only());
+    let handle = server.handle();
+    assert_eq!(handle.queue_capacity(), CAPACITY);
+    let a = Arc::new(rmat_square(2, 192, 4));
+    let cold = hash::multiply(&a, &a);
+
+    let guard = handle.quiesce().expect("park the worker");
+    let workers: Vec<_> = (0..CLIENTS)
+        .map(|_| {
+            let handle = handle.clone();
+            let a = Arc::clone(&a);
+            std::thread::spawn(move || {
+                let client = handle.new_client();
+                loop {
+                    match handle.multiply(client, Arc::clone(&a), Arc::clone(&a)) {
+                        Ok(out) => return out,
+                        Err(ServeError::Busy { capacity, .. }) => {
+                            assert_eq!(capacity, CAPACITY);
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(e) => panic!("unexpected serve error: {e}"),
+                    }
+                }
+            })
+        })
+        .collect();
+
+    // With the worker parked, the queue must pin at capacity and the
+    // overflow clients must be bouncing, not blocking. (Asserted on the
+    // observed condition, not a fresh read — a retrying client's
+    // in-flight submit transiently inflates the depth gauge by design.)
+    let deadline = Instant::now() + Duration::from_secs(20);
+    let mut pinned = false;
+    while Instant::now() < deadline && !pinned {
+        pinned = handle.queue_depth() == CAPACITY && handle.stats().busy_rejections >= 2;
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(
+        pinned,
+        "queue must fill to its capacity with overflow rejected, not buffered (depth {}, busy {})",
+        handle.queue_depth(),
+        handle.stats().busy_rejections
+    );
+
+    drop(guard); // resume the worker: everything drains
+    for w in workers {
+        let out = w.join().expect("client thread");
+        assert_eq!(out.c, cold, "retried requests must still be bit-identical");
+    }
+    assert_eq!(handle.stats().requests, CLIENTS as u64);
+    assert_eq!(handle.queue_depth(), 0, "the queue drains completely");
+    server.shutdown();
+}
+
+/// Generation-counted handles: a released handle errors everywhere it
+/// could be used, and a new matrix landing in the recycled slot gets a
+/// different raw id — the stale handle can never alias it.
+#[test]
+fn released_handles_error_and_never_alias_recycled_slots() {
+    let server = Server::start_with_store(&mem_cfg(8), TieredStore::mem_only());
+    let handle = server.handle();
+    let client = handle.new_client();
+    let a = rmat_square(3, 128, 4);
+    let b = rmat_square(4, 128, 4);
+    let cold_bb = hash::multiply(&b, &b);
+
+    let ha = handle.register(a).expect("register A").raw();
+    assert_eq!(handle.registered_live(), 1);
+    handle.release(ha).expect("release A");
+    assert_eq!(handle.registered_live(), 0);
+
+    // Every use of the released handle is an error, not a stale read.
+    assert!(matches!(handle.resolve(ha), Err(ServeError::UnknownHandle(_))));
+    assert!(matches!(handle.release(ha), Err(ServeError::UnknownHandle(_))));
+    match handle.multiply_by_handle(client, ha, ha) {
+        Err(e @ ServeError::UnknownHandle(_)) => assert_eq!(e.code(), "unknown_handle"),
+        other => panic!("released handle must be unknown, got {other:?}"),
+    }
+
+    // B recycles A's slot but under a bumped generation: new raw id,
+    // and the old handle still resolves to nothing.
+    let hb = handle.register(b).expect("register B").raw();
+    assert_ne!(hb, ha, "recycled slot must mint a fresh raw id");
+    assert!(matches!(handle.resolve(ha), Err(ServeError::UnknownHandle(_))));
+    let out = handle.multiply_by_handle(client, hb, hb).expect("B*B through the fresh handle");
+    assert_eq!(out.c, cold_bb);
+
+    let stats = handle.stats();
+    assert_eq!((stats.registered, stats.released), (2, 1));
+    server.shutdown();
+}
+
+/// The stats counters reconcile with the requests actually made, and
+/// the metrics export carries them (plus the queue gauges and the
+/// per-client breakdown) into the registry.
+#[test]
+fn stats_reconcile_with_requests_and_export_to_metrics() {
+    let server = Server::start_with_store(&mem_cfg(8), TieredStore::mem_only());
+    let handle = server.handle();
+    let client = handle.new_client();
+    let a = Arc::new(rmat_square(5, 192, 4));
+
+    let first = handle.multiply(client, Arc::clone(&a), Arc::clone(&a)).expect("first multiply");
+    let second = handle.multiply(client, Arc::clone(&a), Arc::clone(&a)).expect("second multiply");
+    assert_eq!(first.source, PlanSource::Fresh);
+    assert_eq!(second.source, PlanSource::Mem);
+    assert_eq!(second.symbolic_s, 0.0, "plan hits pay no symbolic seconds");
+    assert_eq!((first.nnz, first.checksum), (second.nnz, second.checksum));
+
+    let stats = handle.stats();
+    assert_eq!((stats.requests, stats.plan_hits, stats.plan_misses, stats.disk_hits), (2, 1, 1, 0));
+    assert!((stats.hit_rate() - 0.5).abs() < 1e-12);
+    let cs = stats.per_client.get(&client).expect("per-client stats");
+    assert_eq!((cs.requests, cs.hits, cs.misses), (2, 1, 1));
+    // The worker's own store agrees with the serve-level counters.
+    let ss = handle.store_stats();
+    assert_eq!((ss.mem_hits, ss.misses, ss.stores), (1, 1, 1));
+
+    let mut m = spgemm_aia::coordinator::metrics::Metrics::default();
+    handle.export_metrics(&mut m);
+    assert_eq!(m.counter("serve.requests"), 2);
+    assert_eq!(m.counter("serve.plan_hits"), 1);
+    assert_eq!(m.counter("serve.plan_misses"), 1);
+    assert_eq!(m.counter(&format!("serve.client.{client}.requests")), 2);
+    assert_eq!(m.counter("serve.store.mem_hits"), 1);
+    let rendered = m.to_json().render();
+    assert!(rendered.contains("serve.queue_depth"), "queue depth gauge exported: {rendered}");
+    assert!(rendered.contains("serve.plan_hit_rate"), "hit-rate gauge exported: {rendered}");
+    let js = handle.stats_json().render();
+    assert!(js.contains("\"requests\":2") && js.contains("\"clients\""), "stats_json shape: {js}");
+    server.shutdown();
+}
+
+/// Regression (the `OnceLock` bug): the daemon's store must come from
+/// its *own* flag/env resolution, never the process-wide default. A
+/// latched default pointing elsewhere must not receive the daemon's
+/// plan files.
+#[test]
+fn serve_store_comes_from_its_own_flag_not_the_process_default() {
+    let decoy = scratch("oncelock-decoy");
+    let flagged = scratch("oncelock-flag");
+    // Latch the process default onto the decoy directory (first writer
+    // wins; either way the cell now holds *something* that is not the
+    // daemon's flag).
+    let _ = hash::set_default_plan_cache_dir(decoy.clone());
+
+    // Flag-over-env resolution is what `serve` feeds its config from.
+    assert_eq!(
+        spgemm_aia::serve::resolve_plan_cache(Some(flagged.to_str().unwrap()), Some(decoy.to_str().unwrap())),
+        Some(flagged.clone()),
+        "the flag must win over the environment"
+    );
+    assert_eq!(spgemm_aia::serve::resolve_plan_cache(None, Some("from-env")), Some(PathBuf::from("from-env")));
+    assert_eq!(spgemm_aia::serve::resolve_plan_cache(Some(""), None), None, "empty flag counts as unset");
+
+    let cfg = ServeConfig { plan_cache: Some(flagged.clone()), ..mem_cfg(8) };
+    let server = Server::start(&cfg);
+    let handle = server.handle();
+    let a = Arc::new(rmat_square(6, 192, 4));
+    handle.multiply(handle.new_client(), Arc::clone(&a), Arc::clone(&a)).expect("multiply");
+    server.shutdown();
+
+    assert!(
+        !DiskStore::new(&flagged).entries().is_empty(),
+        "the daemon must persist plans under its flagged directory"
+    );
+    assert!(
+        DiskStore::new(&decoy).entries().is_empty(),
+        "the latched process default must not receive the daemon's plans"
+    );
+    let _ = std::fs::remove_dir_all(&decoy);
+    let _ = std::fs::remove_dir_all(&flagged);
+}
+
+/// Cross-process reuse through the daemon: a second server on the same
+/// cache directory answers from the disk tier, bit-identically and
+/// with zero symbolic seconds.
+#[test]
+fn second_server_on_same_cache_dir_is_served_from_disk() {
+    let dir = scratch("cross-server");
+    let a = Arc::new(rmat_square(7, 256, 5));
+    let cfg = ServeConfig { plan_cache: Some(dir.clone()), ..mem_cfg(8) };
+
+    let first = Server::start(&cfg);
+    let h1 = first.handle();
+    let warm = h1.multiply(h1.new_client(), Arc::clone(&a), Arc::clone(&a)).expect("warm the cache");
+    assert_eq!(warm.source, PlanSource::Fresh);
+    first.shutdown();
+
+    let second = Server::start(&cfg);
+    let h2 = second.handle();
+    let hit = h2.multiply(h2.new_client(), Arc::clone(&a), Arc::clone(&a)).expect("served from disk");
+    assert_eq!(hit.source, PlanSource::Disk, "a fresh server must find the persisted plan");
+    assert_eq!(hit.symbolic_s, 0.0, "the disk hit skips the symbolic phase");
+    assert_eq!((hit.nnz, hit.checksum), (warm.nnz, warm.checksum), "bit-identical across servers");
+    assert_eq!(h2.store_stats().disk_hits, 1);
+    assert_eq!(h2.stats().disk_hits, 1);
+    second.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,20 +1,23 @@
 #!/usr/bin/env python3
 """Diff two directories of BENCH_*.json files and annotate regressions.
 
-Used by the advisory `bench-trend` CI job: compares each benchmark's
-median wall time in the current run against the previous successful
-run's artifact and emits GitHub workflow annotations
-(`::warning::`/`::notice::`) for median regressions/improvements beyond
-the threshold. Std-lib only (the repo's offline policy), schema
-`spgemm-aia-bench-v1` (see rust/src/util/bench.rs).
+Used by the `bench-trend` CI job: compares each benchmark's median wall
+time in the current run against the previous successful run's artifact
+and emits GitHub workflow annotations (`::warning::`/`::notice::`) for
+median regressions/improvements beyond the threshold. Std-lib only (the
+repo's offline policy), schema `spgemm-aia-bench-v1` (see
+rust/src/util/bench.rs).
 
 Exit code is always 0 unless --strict is passed (then regressions fail
-the job).
+the job). `--self-test` runs the comparison logic against synthetic
+BENCH JSON instead of real directories (the python-tests CI job runs
+it) and exits non-zero on any assertion failure.
 """
 
 import argparse
 import json
 import sys
+import tempfile
 from pathlib import Path
 
 
@@ -40,6 +43,29 @@ def load_results(directory: Path):
     return medians
 
 
+def compare(previous: dict, current: dict, threshold_pct: float):
+    """Pure comparison core, shared by main() and the self-test.
+
+    Returns (rows, regressions, improvements, gone) where rows is
+    [(name, prev_or_None, cur, delta_pct_or_None)] over the current
+    set, regressions/improvements are the rows beyond +/- threshold,
+    and gone is the sorted list of names only the previous run had.
+    """
+    rows, regressions, improvements = [], [], []
+    for name, cur in sorted(current.items()):
+        prev = previous.get(name)
+        if prev is None:
+            rows.append((name, None, cur, None))
+            continue
+        delta_pct = (cur - prev) / prev * 100.0
+        rows.append((name, prev, cur, delta_pct))
+        if delta_pct > threshold_pct:
+            regressions.append((name, prev, cur, delta_pct))
+        elif delta_pct < -threshold_pct:
+            improvements.append((name, prev, cur, delta_pct))
+    return rows, regressions, improvements, sorted(set(previous) - set(current))
+
+
 def fmt(seconds: float) -> str:
     if seconds >= 1.0:
         return f"{seconds:.3f} s"
@@ -48,15 +74,78 @@ def fmt(seconds: float) -> str:
     return f"{seconds * 1e6:.1f} us"
 
 
+def self_test() -> int:
+    """Unit assertions over synthetic BENCH JSON: loader filtering and
+    every compare() outcome (ok / regression / improvement / new /
+    gone), so the CI gate catches logic rot without real artifacts."""
+    prev = {"b::steady": 1.0, "b::faster": 1.0, "b::slower": 1.0, "b::gone": 1.0}
+    cur = {"b::steady": 1.05, "b::faster": 0.5, "b::slower": 2.0, "b::new": 0.1}
+    rows, regs, imps, gone = compare(prev, cur, threshold_pct=15.0)
+    assert len(rows) == 4, rows
+    assert [r[0] for r in regs] == ["b::slower"], regs
+    assert abs(regs[0][3] - 100.0) < 1e-9, regs
+    assert [r[0] for r in imps] == ["b::faster"], imps
+    assert gone == ["b::gone"], gone
+    new = [r for r in rows if r[1] is None]
+    assert [r[0] for r in new] == ["b::new"], rows
+    steady = next(r for r in rows if r[0] == "b::steady")
+    assert steady[3] is not None and abs(steady[3] - 5.0) < 1e-9, steady
+
+    # Threshold edges: exactly-at-threshold is neither direction.
+    _, regs, imps, _ = compare({"b::x": 1.0}, {"b::x": 1.15}, threshold_pct=15.0)
+    assert not regs and not imps, (regs, imps)
+    # Empty previous: everything is new, nothing regresses.
+    rows, regs, imps, gone = compare({}, cur, threshold_pct=15.0)
+    assert len(rows) == 4 and not regs and not imps and not gone
+
+    # Loader: good files parse; bad schema, corrupt JSON, non-positive
+    # or missing medians, and non-BENCH names are all skipped.
+    with tempfile.TemporaryDirectory(prefix="bench-trend-selftest-") as td:
+        d = Path(td)
+        (d / "BENCH_good.json").write_text(json.dumps({
+            "schema": "spgemm-aia-bench-v1",
+            "bench": "good",
+            "results": [
+                {"name": "a", "median_s": 0.25},
+                {"name": "b", "median_s": 2},
+                {"name": "zero", "median_s": 0.0},
+                {"name": "bad-type", "median_s": "fast"},
+                {"median_s": 1.0},
+            ],
+        }))
+        (d / "BENCH_badschema.json").write_text(json.dumps({
+            "schema": "someone-elses-v9", "results": [{"name": "x", "median_s": 1.0}],
+        }))
+        (d / "BENCH_corrupt.json").write_text("{ not json")
+        (d / "NOTBENCH_skipped.json").write_text(json.dumps({
+            "schema": "spgemm-aia-bench-v1", "results": [{"name": "x", "median_s": 1.0}],
+        }))
+        loaded = load_results(d)
+        assert loaded == {"good::a": 0.25, "good::b": 2.0}, loaded
+
+    assert fmt(2.5) == "2.500 s" and fmt(0.0025) == "2.500 ms" and fmt(2.5e-6) == "2.5 us"
+    print("bench-trend: self-test ok")
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("previous", type=Path, help="directory with the previous run's BENCH_*.json")
-    ap.add_argument("current", type=Path, help="directory with this run's BENCH_*.json")
+    ap.add_argument("previous", type=Path, nargs="?",
+                    help="directory with the previous run's BENCH_*.json")
+    ap.add_argument("current", type=Path, nargs="?",
+                    help="directory with this run's BENCH_*.json")
     ap.add_argument("--threshold-pct", type=float, default=15.0,
                     help="annotate when median wall time moved more than this percentage")
     ap.add_argument("--strict", action="store_true",
                     help="exit non-zero when any regression exceeds the threshold")
+    ap.add_argument("--self-test", action="store_true",
+                    help="run unit assertions over synthetic BENCH JSON and exit")
     args = ap.parse_args()
+
+    if args.self_test:
+        return self_test()
+    if args.previous is None or args.current is None:
+        ap.error("previous and current directories are required (or pass --self-test)")
 
     current = load_results(args.current)
     if not current:
@@ -68,20 +157,10 @@ def main() -> int:
         return 0
     previous = load_results(args.previous)
 
-    regressions = []
-    rows = []
-    for name, cur in sorted(current.items()):
-        prev = previous.get(name)
-        if prev is None:
-            rows.append((name, None, cur, None))
-            continue
-        delta_pct = (cur - prev) / prev * 100.0
-        rows.append((name, prev, cur, delta_pct))
-        if delta_pct > args.threshold_pct:
-            regressions.append((name, prev, cur, delta_pct))
-        elif delta_pct < -args.threshold_pct:
-            print(f"::notice::bench-trend: {name} improved {-delta_pct:.1f}% "
-                  f"({fmt(prev)} -> {fmt(cur)})")
+    rows, regressions, improvements, gone = compare(previous, current, args.threshold_pct)
+    for name, prev, cur, delta_pct in improvements:
+        print(f"::notice::bench-trend: {name} improved {-delta_pct:.1f}% "
+              f"({fmt(prev)} -> {fmt(cur)})")
 
     print(f"\nbench trend ({len(rows)} benchmarks, threshold ±{args.threshold_pct:.0f}%):")
     print(f"{'benchmark':<64} {'previous':>12} {'current':>12} {'delta':>8}")
@@ -93,7 +172,6 @@ def main() -> int:
     for name, prev, cur, delta_pct in regressions:
         print(f"::warning::bench-trend: median wall-time regression {delta_pct:+.1f}% "
               f"on {name} ({fmt(prev)} -> {fmt(cur)})")
-    gone = sorted(set(previous) - set(current))
     for name in gone:
         print(f"::notice::bench-trend: benchmark {name} disappeared from this run")
 

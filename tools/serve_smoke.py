@@ -1,0 +1,216 @@
+#!/usr/bin/env python3
+"""End-to-end smoke test of `spgemm-aia serve` over its Unix socket.
+
+Drives the required `serve-smoke` CI job (std-lib only, per the repo's
+offline policy). Two phases against one plan-cache directory:
+
+Phase 1 — boot a daemon on a temp socket, run a scripted session:
+register two inline CSR operands, multiply twice (first response must
+be a `fresh` plan, the second a `mem` hit with zero symbolic seconds
+and bit-identical nnz/checksum), reconcile the stats counters, check
+released handles error, then SIGTERM and require a clean exit within
+the deadline with the socket file removed.
+
+Phase 2 — boot a *second* daemon on the same cache directory,
+re-register the same operands, and require the first multiply to be
+served from the `disk` tier: zero symbolic seconds and a checksum
+bit-identical to phase 1's. Exit via the `shutdown` protocol op.
+
+The caller (CI) then runs `spgemm-aia plan-cache verify/ls` against the
+same cache directory as a final step.
+"""
+
+import argparse
+import json
+import os
+import random
+import signal
+import socket
+import subprocess
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+CONNECT_DEADLINE_S = 60.0
+EXIT_DEADLINE_S = 20.0
+IO_TIMEOUT_S = 120.0
+
+
+def log(msg: str) -> None:
+    print(f"serve-smoke: {msg}", flush=True)
+
+
+def fail(msg: str) -> None:
+    print(f"serve-smoke: FAIL: {msg}", file=sys.stderr, flush=True)
+    sys.exit(1)
+
+
+def make_csr(seed: int, n: int, per_row: int) -> dict:
+    """A deterministic random CSR in the protocol's inline-matrix shape."""
+    rng = random.Random(seed)
+    rpt, col, val = [0], [], []
+    for _ in range(n):
+        k = rng.randint(0, per_row)
+        for c in sorted(rng.sample(range(n), k)):
+            col.append(c)
+            val.append(round(rng.uniform(-4.0, 4.0), 6))
+        rpt.append(len(col))
+    return {"rows": n, "cols": n, "rpt": rpt, "col": col, "val": val}
+
+
+class Client:
+    """One line-protocol session."""
+
+    def __init__(self, sock_path: Path):
+        deadline = time.monotonic() + CONNECT_DEADLINE_S
+        while True:
+            try:
+                self.sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+                self.sock.connect(str(sock_path))
+                break
+            except OSError:
+                self.sock.close()
+                if time.monotonic() > deadline:
+                    fail(f"daemon socket {sock_path} never came up")
+                time.sleep(0.2)
+        self.sock.settimeout(IO_TIMEOUT_S)
+        self.rfile = self.sock.makefile("r", encoding="utf-8")
+
+    def request(self, obj: dict) -> dict:
+        line = json.dumps(obj)
+        self.sock.sendall(line.encode() + b"\n")
+        resp = self.rfile.readline()
+        if not resp:
+            fail(f"daemon hung up answering {line}")
+        try:
+            return json.loads(resp)
+        except json.JSONDecodeError:
+            fail(f"unparsable response to {line}: {resp!r}")
+
+    def ok(self, obj: dict) -> dict:
+        resp = self.request(obj)
+        if resp.get("ok") is not True:
+            fail(f"request {obj} answered {resp}")
+        return resp
+
+    def err(self, obj: dict, code: str) -> dict:
+        resp = self.request(obj)
+        if resp.get("ok") is not False or resp.get("error") != code:
+            fail(f"request {obj} should fail with {code!r}, answered {resp}")
+        return resp
+
+    def close(self) -> None:
+        self.rfile.close()
+        self.sock.close()
+
+
+def spawn(binary: Path, sock: Path, cache: Path) -> subprocess.Popen:
+    proc = subprocess.Popen(
+        [str(binary), "serve", "--socket", str(sock), "--plan-cache", str(cache), "--queue", "8"],
+    )
+    log(f"daemon pid {proc.pid} on {sock}")
+    return proc
+
+
+def wait_exit(proc: subprocess.Popen, sock: Path, how: str) -> None:
+    try:
+        code = proc.wait(timeout=EXIT_DEADLINE_S)
+    except subprocess.TimeoutExpired:
+        proc.kill()
+        fail(f"daemon did not exit within {EXIT_DEADLINE_S}s of {how}")
+    if code != 0:
+        fail(f"daemon exited {code} after {how}")
+    if sock.exists():
+        fail(f"daemon left its socket file behind after {how}")
+    log(f"daemon exited cleanly after {how}")
+
+
+def expect(cond: bool, msg: str) -> None:
+    if not cond:
+        fail(msg)
+
+
+def phase1(binary: Path, sock: Path, cache: Path) -> str:
+    proc = spawn(binary, sock, cache)
+    c = Client(sock)
+    c.ok({"op": "ping"})
+
+    a = c.ok({"op": "register", "matrix": make_csr(42, 256, 6)})
+    b = c.ok({"op": "register", "matrix": make_csr(43, 256, 6)})
+    ha, hb = a["handle"], b["handle"]
+    expect(a["nnz"] > 0 and b["nnz"] > 0, "registered operands must be non-empty")
+
+    first = c.ok({"op": "multiply", "a": ha, "b": hb})
+    expect(first["plan"] == "fresh", f"first multiply must build a plan, got {first}")
+    expect(first["symbolic_s"] >= 0.0, f"fresh plan reports its symbolic seconds: {first}")
+
+    second = c.ok({"op": "multiply", "a": ha, "b": hb})
+    expect(second["plan"] == "mem", f"second multiply must be a memory hit, got {second}")
+    expect(second["symbolic_s"] == 0.0, f"plan hits pay no symbolic seconds: {second}")
+    expect(
+        (second["nnz"], second["checksum"]) == (first["nnz"], first["checksum"]),
+        f"hit must be bit-identical to the miss: {first} vs {second}",
+    )
+    log(f"multiply nnz={first['nnz']} checksum={first['checksum']} (fresh -> mem, bit-identical)")
+
+    stats = c.ok({"op": "stats"})["stats"]
+    expect(stats["requests"] == 2, f"stats.requests: {stats}")
+    expect(stats["plan_hits"] == 1 and stats["plan_misses"] == 1, f"hit/miss split: {stats}")
+    expect(stats["registered"] == 2 and stats["registered_live"] == 2, f"registration counters: {stats}")
+    expect(stats["store"]["stores"] == 1, f"the fresh plan must be persisted: {stats}")
+
+    c.ok({"op": "release", "handle": ha})
+    c.err({"op": "release", "handle": ha}, "unknown_handle")
+    c.err({"op": "multiply", "a": ha, "b": hb}, "unknown_handle")
+    c.close()
+
+    proc.send_signal(signal.SIGTERM)
+    wait_exit(proc, sock, "SIGTERM")
+    plans = list(cache.glob("*.plan"))
+    expect(len(plans) >= 1, f"no plan files persisted under {cache}")
+    log(f"{len(plans)} plan file(s) persisted under {cache}")
+    return first["checksum"]
+
+
+def phase2(binary: Path, sock: Path, cache: Path, checksum: str) -> None:
+    proc = spawn(binary, sock, cache)
+    c = Client(sock)
+
+    ha = c.ok({"op": "register", "matrix": make_csr(42, 256, 6)})["handle"]
+    hb = c.ok({"op": "register", "matrix": make_csr(43, 256, 6)})["handle"]
+    hit = c.ok({"op": "multiply", "a": ha, "b": hb})
+    expect(hit["plan"] == "disk", f"a fresh daemon on the same cache must hit disk, got {hit}")
+    expect(hit["symbolic_s"] == 0.0, f"disk hits skip the symbolic phase: {hit}")
+    expect(hit["checksum"] == checksum, f"cross-process result must be bit-identical: {hit}")
+    stats = c.ok({"op": "stats"})["stats"]
+    expect(stats["disk_hits"] == 1 and stats["plan_misses"] == 0, f"disk-hit counters: {stats}")
+    log(f"cross-process disk hit, checksum {hit['checksum']} matches phase 1")
+
+    resp = c.ok({"op": "shutdown"})
+    expect(resp.get("stopping") is True, f"shutdown ack: {resp}")
+    c.close()
+    wait_exit(proc, sock, "the shutdown op")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--binary", type=Path, default=Path("rust/target/release/spgemm-aia"))
+    ap.add_argument("--cache-dir", type=Path, default=None,
+                    help="plan-cache directory (kept for the CI plan-cache verify step)")
+    args = ap.parse_args()
+    if not args.binary.exists():
+        fail(f"binary {args.binary} not found (build with: cargo build --release)")
+
+    work = Path(tempfile.mkdtemp(prefix="spgemm-serve-smoke-"))
+    cache = args.cache_dir or (work / "plan-cache")
+    cache.mkdir(parents=True, exist_ok=True)
+
+    checksum = phase1(args.binary, work / "phase1.sock", cache)
+    phase2(args.binary, work / "phase2.sock", cache, checksum)
+    log(f"OK (plan cache kept at {cache})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
