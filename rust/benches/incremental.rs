@@ -1,0 +1,90 @@
+//! Bench: incremental dirty-row replanning (ROADMAP "Incremental
+//! SpGEMM — dirty-row replan") on the dynamic-graph workload.
+//!
+//! A mutating graph dirties a few rows per step; the delta planner
+//! (`spgemm::hash::incremental`) re-runs the symbolic phase for those
+//! rows only and patches the plan in place. This bench pins that win
+//! against the cold path it replaces: a full replan of the mutated
+//! product vs a delta patch at 0.1 % / 1 % / 10 % dirty rows on the
+//! Protein and Economics analogues, plus a 4-iteration MCL prune chain
+//! where the per-iteration prune is the mutation source. Dirty-set
+//! sizes and the hit/delta/miss split land in the JSON meta; CI
+//! archives `BENCH_incremental.json` as part of the perf trajectory
+//! (picked up by `tools/bench_trend.py`).
+
+use spgemm_aia::apps::{mcl, MclParams};
+use spgemm_aia::coordinator::executor::{SpgemmExecutor, Variant};
+use spgemm_aia::gen;
+use spgemm_aia::spgemm::hash::{
+    delta_patch, mutate_row_fraction, DeltaOutcome, EngineConfig, PlannedProduct, TieredStore,
+};
+use spgemm_aia::util::bench::{bb, Bencher};
+use spgemm_aia::util::json::Json;
+
+fn main() {
+    let mut b = Bencher::new();
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let names: &[&str] = if quick { &["Economics"] } else { &["Protein", "Economics"] };
+
+    for name in names {
+        let ds = gen::table2_by_name(name).unwrap();
+        let a = (ds.gen)(1);
+        b.group(&format!("incremental/{name}"));
+        let base = PlannedProduct::plan(&a, &a);
+
+        for (frac, pct) in [(0.001f64, "0.1pct"), (0.01, "1pct"), (0.1, "10pct")] {
+            let label = format!("dirty-{pct}");
+            // Mutate `frac` of A's rows; the right operand stays the
+            // unmutated structure, so the dirty set is exactly the
+            // mutated rows (no B-side feeders).
+            let a2 = mutate_row_fraction(&a, frac, 7);
+            let cold = b.bench(&format!("{label}/cold replan"), || bb(PlannedProduct::plan(&a2, &a).nnz()));
+            let delta = b.bench(&format!("{label}/delta replan"), || {
+                match delta_patch(&base, &a2, &a, &EngineConfig::default()) {
+                    DeltaOutcome::Patched(dp) => bb(dp.plan.nnz()),
+                    DeltaOutcome::Rebuild(why) => panic!("{name} {label}: bench mutation must patch: {why}"),
+                }
+            });
+            let speedup = cold.median / delta.median;
+            println!("  -> delta replan speedup over cold at {label}: {speedup:.2}x");
+            let dirty_rows = match delta_patch(&base, &a2, &a, &EngineConfig::default()) {
+                DeltaOutcome::Patched(dp) => dp.dirty_rows,
+                DeltaOutcome::Rebuild(why) => panic!("{name} {label}: bench mutation must patch: {why}"),
+            };
+            let mut o = Json::obj();
+            o.set("dirty_rows", dirty_rows.into());
+            o.set("total_rows", a.n_rows.into());
+            o.set("cold_s", Json::Num(cold.median));
+            o.set("delta_s", Json::Num(delta.median));
+            o.set("speedup", Json::Num(speedup));
+            b.meta(&format!("replan/{name}/{label}"), o);
+        }
+    }
+
+    // A 4-iteration MCL prune chain: each iteration's prune step dirties
+    // part of the flow structure, and the executor patches the displaced
+    // slot plan instead of replanning cold — the same workload `repro
+    // planreuse` reports on.
+    b.group("incremental/mcl-prune-chain");
+    let ds = gen::table2_by_name("Economics").unwrap();
+    let g = (ds.gen)(1);
+    let params = MclParams { max_iters: 4, tol: 0.0, top_k: 16, ..Default::default() };
+    b.bench("mcl-4-iter/delta-executor", || {
+        let mut ex = SpgemmExecutor::fast(Variant::Hash);
+        ex.attach_plan_store(TieredStore::mem_only());
+        let r = mcl(&g, &params, &mut ex);
+        bb(r.iterations)
+    });
+    let mut ex = SpgemmExecutor::fast(Variant::Hash);
+    ex.attach_plan_store(TieredStore::mem_only());
+    let r = mcl(&g, &params, &mut ex);
+    let mut o = Json::obj();
+    o.set("iterations", r.iterations.into());
+    o.set("plan_hits", r.plan_hits.into());
+    o.set("plan_deltas", r.plan_deltas.into());
+    o.set("plan_misses", r.plan_misses.into());
+    o.set("delta_rows", r.delta_rows.into());
+    b.meta("mcl_prune_chain", o);
+
+    b.finish("incremental");
+}

@@ -6,9 +6,13 @@
 //! Expansion reuses the symbolic plan across iterations through
 //! [`SpgemmExecutor::multiply_reusing`]: pruning and inflation may
 //! change the flow matrix's structure early on (detected via the
-//! operands' structure hash → replan), but as the flow stabilises the
-//! pattern repeats and later iterations pay only the numeric phase.
-//! [`MclResult`] reports the hit/miss split.
+//! operands' structure hash). Instead of blanket plan invalidation,
+//! the slot's displaced plan becomes the delta baseline: the executor
+//! diffs per-row structure hashes and re-plans only the rows the prune
+//! step actually dirtied (`spgemm::hash::incremental`), falling back to
+//! a full replan when the drift is too large. As the flow stabilises
+//! the pattern repeats and later iterations pay only the numeric phase.
+//! [`MclResult`] reports the hit/delta/miss split.
 
 use crate::coordinator::executor::SpgemmExecutor;
 use crate::spgemm::hash::PlannedProduct;
@@ -50,11 +54,18 @@ pub struct MclResult {
     /// Expansions served from a reused symbolic plan (functional hash
     /// executors only — 0 under simulation or the ESC baseline).
     pub plan_hits: usize,
-    /// Expansions that had to (re)plan.
+    /// Expansions that had to (re)plan from scratch.
     pub plan_misses: usize,
     /// Expansions served by the executor's plan store *disk* tier — a
     /// plan persisted by an earlier process (0 without `--plan-cache`).
     pub disk_hits: usize,
+    /// Expansions served by delta-patching the previous iteration's
+    /// plan after the prune step dirtied part of the flow structure
+    /// (neither hit nor miss; see `spgemm::hash::incremental`).
+    pub plan_deltas: usize,
+    /// Total rows whose symbolic phase was re-run across all delta
+    /// patches (the dirty-set sizes summed).
+    pub delta_rows: usize,
 }
 
 /// Run MCL on (possibly weighted) adjacency `g` with the executor's
@@ -63,6 +74,7 @@ pub fn mcl(g: &Csr, params: &MclParams, ex: &mut SpgemmExecutor) -> MclResult {
     assert_eq!(g.n_rows, g.n_cols, "MCL needs a square adjacency");
     let before = ex.sim_ms;
     let (hits0, misses0, disk0) = (ex.plan_hits, ex.plan_misses, ex.disk_hits);
+    let (deltas0, drows0) = (ex.plan_deltas, ex.delta_rows);
     // Algorithm 6 lines 1–3.
     let with_loops = ops::add_self_loops(g, 1.0);
     let mut a = ops::column_normalize(&with_loops);
@@ -105,6 +117,8 @@ pub fn mcl(g: &Csr, params: &MclParams, ex: &mut SpgemmExecutor) -> MclResult {
         plan_hits: ex.plan_hits - hits0,
         plan_misses: ex.plan_misses - misses0,
         disk_hits: ex.disk_hits - disk0,
+        plan_deltas: ex.plan_deltas - deltas0,
+        delta_rows: ex.delta_rows - drows0,
     }
 }
 
@@ -200,8 +214,15 @@ mod tests {
         let r = mcl(&g, &MclParams { max_iters: 3, tol: 0.0, ..Default::default() }, &mut ex);
         // e=2 → 1 SpGEMM per iteration
         assert_eq!(ex.jobs, r.iterations);
-        // Every expansion is accounted as a plan hit, disk hit, or miss.
-        assert_eq!(r.plan_hits + r.disk_hits + r.plan_misses, r.iterations);
+        // Every expansion is accounted as exactly one of: plan hit,
+        // disk hit, delta patch, or full miss.
+        assert_eq!(r.plan_hits + r.disk_hits + r.plan_deltas + r.plan_misses, r.iterations);
+        // Delta patches that did fire re-planned a bounded dirty set.
+        if r.plan_deltas > 0 {
+            assert!(r.delta_rows >= r.plan_deltas);
+        } else {
+            assert_eq!(r.delta_rows, 0);
+        }
     }
 
     #[test]

@@ -96,6 +96,18 @@ pub struct BatchStats {
     pub disk_corrupt: usize,
     /// Per-bin completion events filled by the batch pipeline.
     pub bins_filled: usize,
+    /// Products served by dirty-row delta patching
+    /// ([`crate::spgemm::hash::delta_patch`]): the previous same-shape
+    /// plan was patched in place instead of a full replan. Neither a
+    /// hit nor a miss — excluded from [`BatchStats::hit_rate`] on both
+    /// sides (regression-pinned).
+    pub delta_patches: usize,
+    /// Rows whose symbolic phase re-ran across all delta patches (the
+    /// dirty sets' total size).
+    pub delta_rows: usize,
+    /// Wall seconds spent building delta patches (subset of
+    /// [`BatchStats::plan_s`]).
+    pub delta_plan_s: f64,
     /// Wall seconds spent resolving plans: grouping + symbolic for
     /// fresh structures, disk load + validation for disk hits, plus the
     /// fingerprint validation (an O(nnz) structure scan on first touch,
@@ -111,6 +123,9 @@ pub struct BatchStats {
 impl BatchStats {
     /// Fraction of products served without replanning (memory- and
     /// disk-tier hits both count — neither ran the symbolic phase).
+    /// Delta-patched products are excluded from numerator *and*
+    /// denominator: they re-ran the symbolic phase over their dirty
+    /// rows only, so folding them into either side would skew the rate.
     pub fn hit_rate(&self) -> f64 {
         let hits = self.plan_hits + self.disk_hits;
         let total = hits + self.plan_misses;
@@ -137,6 +152,10 @@ pub enum PlanSource {
     Mem,
     /// Disk-tier hit (plan from an earlier process, validated).
     Disk,
+    /// Store miss patched from the previous same-shape plan: the
+    /// symbolic phase re-ran over the dirty rows only
+    /// ([`crate::spgemm::hash::delta_patch`]).
+    Delta,
 }
 
 impl PlanSource {
@@ -147,12 +166,15 @@ impl PlanSource {
             PlanSource::Shared => "shared",
             PlanSource::Mem => "mem",
             PlanSource::Disk => "disk",
+            PlanSource::Delta => "delta",
         }
     }
 
-    /// True when the symbolic phase was skipped (any kind of reuse).
+    /// True when the symbolic phase was skipped entirely (verbatim
+    /// reuse). A delta patch is *not* a hit: it re-ran the symbolic
+    /// phase, just only over its dirty rows.
     pub fn is_hit(self) -> bool {
-        !matches!(self, PlanSource::Fresh)
+        !matches!(self, PlanSource::Fresh | PlanSource::Delta)
     }
 }
 
@@ -209,6 +231,21 @@ pub struct BatchReport {
     /// Unique structures of this batch served by the plan store's disk
     /// tier (symbolic phase skipped across a process boundary).
     pub disk_hits: usize,
+    /// Unique structures of this batch served by dirty-row delta
+    /// patching instead of a full replan.
+    pub delta_patches: usize,
+    /// Rows whose symbolic phase re-ran across this batch's delta
+    /// patches (total dirty-set size; compare against `products` ×
+    /// rows to see the replanning saved).
+    pub delta_rows: usize,
+    /// Planner seconds spent building delta patches (subset of
+    /// `plan_s`).
+    pub delta_plan_s: f64,
+    /// Symbolic seconds the delta patches paid over their dirty rows —
+    /// the incremental counterpart of the fresh plans'
+    /// `symbolic_kind_s` total, so full-vs-delta symbolic cost is
+    /// directly comparable per batch.
+    pub symbolic_delta_s: f64,
     /// Per-kind numeric bins of every product packed onto the stream
     /// model with LPT. **Weights are intermediate-product counts, not
     /// ms** — the `Schedule`'s `*_ms` fields are in IP units here, so
@@ -263,6 +300,11 @@ pub struct BatchExecutor {
     /// Report for the most recent [`BatchExecutor::execute_batch`] call.
     pub last_batch: Option<BatchReport>,
     store: TieredStore,
+    /// Most recently resolved plan key per operand-shape quadruple —
+    /// the delta planner's predecessor index: on a store miss, the
+    /// previous same-shape plan (fetched via
+    /// [`TieredStore::peek_key`]) is the dirty-row patch baseline.
+    recent_by_shape: HashMap<[usize; 4], u64>,
 }
 
 impl BatchExecutor {
@@ -278,7 +320,13 @@ impl BatchExecutor {
     /// repro harness pin their cache directories with this).
     pub fn with_store(n_streams: usize, store: TieredStore) -> BatchExecutor {
         assert!(n_streams > 0, "need at least one stream");
-        BatchExecutor { n_streams, stats: BatchStats::default(), last_batch: None, store }
+        BatchExecutor {
+            n_streams,
+            stats: BatchStats::default(),
+            last_batch: None,
+            store,
+            recent_by_shape: HashMap::new(),
+        }
     }
 
     /// Execute a batch of products with the per-bin symbolic/numeric
@@ -309,6 +357,9 @@ impl BatchExecutor {
                 corrupt: bool,
                 /// A plan file parsed but carried a foreign fingerprint.
                 stale: bool,
+                /// Dirty rows the delta patch replanned (0 unless
+                /// `source` is [`PlanSource::Delta`]).
+                delta_rows: usize,
                 resolve_s: f64,
             },
             Bin { slot: usize, bin: usize },
@@ -332,7 +383,12 @@ impl BatchExecutor {
         let mut corrupts = 0usize;
         let mut stales = 0usize;
         let mut shared = 0usize;
+        let mut deltas = 0usize;
+        let mut delta_rows_total = 0usize;
+        let mut delta_plan_s = 0.0;
+        let mut symbolic_delta_s = 0.0;
         let mut fresh_plans: Vec<Arc<PlannedProduct>> = Vec::new();
+        let mut delta_plans: Vec<Arc<PlannedProduct>> = Vec::new();
         let mut disk_loaded: Vec<Arc<PlannedProduct>> = Vec::new();
         let mut jobs: Vec<Job> = Vec::new();
         let mut out: Vec<Option<Csr>> = Vec::new();
@@ -344,8 +400,13 @@ impl BatchExecutor {
         // disk load + validation happen on the planner thread, where
         // they overlap the numeric fills like any other plan resolution.
         let snapshot = self.store.snapshot();
+        // The planner thread's copy of the predecessor index — updated
+        // as it resolves, so later slots of this batch can delta off
+        // earlier ones; the consumer folds the updates back afterwards.
+        let mut recent = self.recent_by_shape.clone();
         std::thread::scope(|s| {
             let (tx, rx) = mpsc::sync_channel::<PipeEvent>(PIPELINE_DEPTH);
+            let recent = &mut recent;
             s.spawn(move || {
                 // Plans resolved earlier in this batch, keyed like the
                 // store — in-batch shares are neither hits nor misses.
@@ -356,7 +417,9 @@ impl BatchExecutor {
                     // fingerprinting repeated structures is a cell read.
                     let fp = PlanFingerprint::of(a, b);
                     let key = fp.key();
+                    let shape = [a.n_rows, a.n_cols, b.n_rows, b.n_cols];
                     let (mut corrupt, mut stale) = (false, false);
+                    let mut delta_rows = 0usize;
                     let (p, source) = if let Some(p) = resolved.get(&key).filter(|p| fp.matches(p)) {
                         (Arc::clone(p), PlanSource::Shared)
                     } else {
@@ -374,23 +437,48 @@ impl BatchExecutor {
                                     corrupt = c;
                                     stale = st;
                                 }
-                                // Fingerprints double as the plan's
-                                // validation hashes — each operand is
-                                // structure-scanned at most once.
                                 let cfg = EngineConfig::default();
-                                let p = Arc::new(PlannedProduct::plan_cfg_hashed(a, b, &cfg, fp.a_hash, fp.b_hash));
-                                resolved.insert(key, Arc::clone(&p));
-                                (p, PlanSource::Fresh)
+                                // Store miss: before a full replan, try
+                                // patching the previous same-shape plan's
+                                // dirty rows (the baseline may live in
+                                // this batch's `resolved` set or in the
+                                // store snapshot).
+                                let base = recent
+                                    .get(&shape)
+                                    .and_then(|k| resolved.get(k).map(Arc::clone).or_else(|| snapshot.peek_key(*k)));
+                                let patched = base.as_deref().and_then(|base| {
+                                    match crate::spgemm::hash::delta_patch(base, a, b, &cfg) {
+                                        crate::spgemm::hash::DeltaOutcome::Patched(dp) => Some(dp),
+                                        crate::spgemm::hash::DeltaOutcome::Rebuild(_) => None,
+                                    }
+                                });
+                                match patched {
+                                    Some(dp) => {
+                                        delta_rows = dp.dirty_rows;
+                                        let p = Arc::new(dp.plan);
+                                        resolved.insert(key, Arc::clone(&p));
+                                        (p, PlanSource::Delta)
+                                    }
+                                    None => {
+                                        // Fingerprints double as the plan's
+                                        // validation hashes — each operand is
+                                        // structure-scanned at most once.
+                                        let p = Arc::new(PlannedProduct::plan_cfg_hashed(a, b, &cfg, fp.a_hash, fp.b_hash));
+                                        resolved.insert(key, Arc::clone(&p));
+                                        (p, PlanSource::Fresh)
+                                    }
+                                }
                             }
                         }
                     };
+                    recent.insert(shape, key);
                     let resolve_s = t_resolve.elapsed().as_secs_f64();
                     // Symbolic counts are in: dispatch the product's bins
                     // heaviest-first (LPT issue order) behind the plan event.
                     let bins = &p.symbolic_plan().bins;
                     let mut order: Vec<usize> = (0..bins.len()).collect();
                     order.sort_by(|&x, &y| bins[y].weight.cmp(&bins[x].weight).then(x.cmp(&y)));
-                    let ev = PipeEvent::Plan { slot: i, plan: Arc::clone(&p), source, corrupt, stale, resolve_s };
+                    let ev = PipeEvent::Plan { slot: i, plan: Arc::clone(&p), source, corrupt, stale, delta_rows, resolve_s };
                     if tx.send(ev).is_err() {
                         return; // receiver unwound — stop planning
                     }
@@ -403,7 +491,7 @@ impl BatchExecutor {
             });
             for ev in rx {
                 match ev {
-                    PipeEvent::Plan { slot, plan, source, corrupt, stale, resolve_s } => {
+                    PipeEvent::Plan { slot, plan, source, corrupt, stale, delta_rows, resolve_s } => {
                         // Planner-thread cost of this product: fingerprint
                         // resolution (and for disk hits the load+validate)
                         // plus, for fresh structures, the grouping/symbolic
@@ -430,6 +518,13 @@ impl BatchExecutor {
                                 disk_loaded.push(Arc::clone(&plan));
                             }
                             PlanSource::Shared => shared += 1,
+                            PlanSource::Delta => {
+                                deltas += 1;
+                                delta_rows_total += delta_rows;
+                                delta_plan_s += plan.plan_times.total_s();
+                                symbolic_delta_s += plan.plan_times.symbolic_s;
+                                delta_plans.push(Arc::clone(&plan));
+                            }
                         }
                         for bin in &plan.symbolic_plan().bins {
                             jobs.push(Job { id: format!("p{slot}/{}", bin.label()), ms: bin.weight as f64 });
@@ -476,26 +571,36 @@ impl BatchExecutor {
         self.stats.disk_hits += disk_hits;
         self.stats.disk_corrupt += corrupts;
         self.stats.batch_shared += shared;
+        self.stats.delta_patches += deltas;
+        self.stats.delta_rows += delta_rows_total;
+        self.stats.delta_plan_s += delta_plan_s;
         self.stats.fills += pairs.len();
         self.stats.bins_filled += bins_filled;
         self.stats.plan_s += plan_s;
         self.stats.fill_s += fill_s;
+        // The planner's predecessor index survives into the next call.
+        self.recent_by_shape = recent;
         // The planner thread resolved against a snapshot: fold what it
         // observed into the store's own counters, promote disk-loaded
         // plans into the memory tier, and write fresh plans through to
-        // both tiers.
+        // both tiers. Delta patches tally as `delta_patches`, neither
+        // hit nor miss.
         self.store.tally(&StoreStats {
             mem_hits: hits as u64,
             disk_hits: disk_hits as u64,
             misses: fresh_count as u64,
             corrupt: corrupts as u64,
             stale: stales as u64,
+            delta_patches: deltas as u64,
             ..StoreStats::default()
         });
         for p in disk_loaded {
             self.store.admit(p, false);
         }
         for p in fresh_plans {
+            self.store.admit(p, true);
+        }
+        for p in delta_plans {
             self.store.admit(p, true);
         }
         self.last_batch = Some(BatchReport {
@@ -507,6 +612,10 @@ impl BatchExecutor {
             fill_s,
             fill_kind_s,
             disk_hits,
+            delta_patches: deltas,
+            delta_rows: delta_rows_total,
+            delta_plan_s,
+            symbolic_delta_s,
             streams: schedule_lpt(&jobs, self.n_streams),
         });
         out.into_iter().map(|c| c.expect("pipeline produced every product")).collect()
@@ -529,6 +638,7 @@ impl BatchExecutor {
     pub fn multiply_cached_traced(&mut self, a: &Csr, b: &Csr) -> (Csr, CachedMultiply) {
         let t_resolve = Instant::now();
         let fp = PlanFingerprint::of(a, b);
+        let shape = [a.n_rows, a.n_cols, b.n_rows, b.n_cols];
         let (found, outcome) = self.store.get_traced(&fp);
         if let Some(p) = found {
             let source = match outcome {
@@ -541,6 +651,7 @@ impl BatchExecutor {
                     PlanSource::Mem
                 }
             };
+            self.recent_by_shape.insert(shape, fp.key());
             // Hits still pay fingerprint validation (and disk hits the
             // load): count it so reuse is never reported as entirely
             // free.
@@ -555,20 +666,50 @@ impl BatchExecutor {
         if let GetOutcome::Miss { corrupt: true, .. } = outcome {
             self.stats.disk_corrupt += 1;
         }
-        self.stats.plan_misses += 1;
-        // Key fingerprints double as the plan's validation hashes, and
-        // the miss counts the same resolve wall time the hit path does,
-        // so the two paths stay comparable.
-        let p = Arc::new(PlannedProduct::plan_cfg_hashed(a, b, &EngineConfig::default(), fp.a_hash, fp.b_hash));
-        self.stats.plans_built += 1;
+        let cfg = EngineConfig::default();
+        // Store miss: before a full replan, try patching the previous
+        // same-shape plan's dirty rows (dynamic-graph drift — e.g. a
+        // re-registered handle with a mutated matrix).
+        let patched = self
+            .recent_by_shape
+            .get(&shape)
+            .and_then(|k| self.store.peek_key(*k))
+            .and_then(|base| match crate::spgemm::hash::delta_patch(&base, a, b, &cfg) {
+                crate::spgemm::hash::DeltaOutcome::Patched(dp) => Some(dp),
+                crate::spgemm::hash::DeltaOutcome::Rebuild(_) => None,
+            });
+        let (p, source, symbolic_s) = match patched {
+            Some(dp) => {
+                let p = Arc::new(dp.plan);
+                self.stats.delta_patches += 1;
+                self.stats.delta_rows += dp.dirty_rows;
+                self.stats.delta_plan_s += p.plan_times.total_s();
+                // The lookup above scored a miss, but a patched product
+                // is neither a hit nor a miss — reclassify it.
+                self.store.note_delta_patch();
+                let symbolic_s = p.plan_times.symbolic_s;
+                (p, PlanSource::Delta, symbolic_s)
+            }
+            None => {
+                self.stats.plan_misses += 1;
+                // Key fingerprints double as the plan's validation
+                // hashes, and the miss counts the same resolve wall
+                // time the hit path does, so the two paths stay
+                // comparable.
+                let p = Arc::new(PlannedProduct::plan_cfg_hashed(a, b, &cfg, fp.a_hash, fp.b_hash));
+                self.stats.plans_built += 1;
+                let symbolic_s = p.plan_times.symbolic_s;
+                (p, PlanSource::Fresh, symbolic_s)
+            }
+        };
+        self.recent_by_shape.insert(shape, fp.key());
         let plan_s = t_resolve.elapsed().as_secs_f64();
         self.stats.plan_s += plan_s;
-        let symbolic_s = p.plan_times.symbolic_s;
         let (c, ft) = p.fill_unchecked_timed(a, b);
         self.stats.fills += 1;
         self.stats.fill_s += ft.numeric_s;
         self.store.put(p);
-        let trace = CachedMultiply { source: PlanSource::Fresh, plan_s, fill_s: ft.numeric_s, symbolic_s, nnz: c.nnz() };
+        let trace = CachedMultiply { source, plan_s, fill_s: ft.numeric_s, symbolic_s, nnz: c.nnz() };
         (c, trace)
     }
 
@@ -633,6 +774,9 @@ impl BatchExecutor {
         m.inc("batch.disk_hits", self.stats.disk_hits as u64);
         m.inc("batch.disk_corrupt", self.stats.disk_corrupt as u64);
         m.inc("batch.batch_shared", self.stats.batch_shared as u64);
+        m.inc("batch.delta_patches", self.stats.delta_patches as u64);
+        m.inc("batch.delta_rows", self.stats.delta_rows as u64);
+        m.gauge("batch.delta_plan_s", self.stats.delta_plan_s);
         m.inc("batch.bins_filled", self.stats.bins_filled as u64);
         m.observe_store_stats("batch.store", &self.store.stats());
         m.add_time("batch.plan", self.stats.plan_s);
@@ -825,6 +969,50 @@ mod tests {
         assert_eq!(t2.symbolic_s, 0.0, "a plan hit pays zero symbolic seconds");
         assert_eq!(c1, c2, "hit and miss paths are bit-identical");
         assert_eq!(t1.nnz, t2.nnz);
+    }
+
+    /// A mutated same-shape structure routes through the dirty-row
+    /// delta planner on both entry points — `multiply_cached_traced`
+    /// (the serve path) and `execute_batch` (the planner thread) — with
+    /// exact output, `"delta"` as the wire label, and counters that
+    /// keep delta patches out of the hit rate on both sides.
+    #[test]
+    fn cached_and_batched_paths_delta_patch_mutated_structures() {
+        let a = random_square(31, 192, 5);
+        let mut ex = mem_executor(2);
+        let (c0, t0) = ex.multiply_cached_traced(&a, &a);
+        assert_eq!(t0.source, PlanSource::Fresh);
+        // Serve path: small drift → delta.
+        let a2 = hash::mutate_row_fraction(&a, 0.02, 41);
+        let (c2, t2) = ex.multiply_cached_traced(&a2, &a2);
+        assert_eq!(t2.source, PlanSource::Delta);
+        assert_eq!(t2.source.label(), "delta");
+        assert!(!t2.source.is_hit(), "a delta patch re-ran symbolic work, it is not a hit");
+        assert_eq!(c2, hash::multiply(&a2, &a2), "patched fill must be exact");
+        assert_ne!(c0, c2);
+        assert_eq!((ex.stats.plan_hits, ex.stats.plan_misses, ex.stats.delta_patches), (0, 1, 1));
+        assert!(ex.stats.delta_rows > 0 && ex.stats.delta_rows < a.n_rows);
+        // The store agrees: the patch is neither a hit nor a miss there.
+        let ss = ex.store_stats();
+        assert_eq!(ss.delta_patches, 1);
+        assert_eq!((ss.hits(), ss.misses), (0, 1), "the patched lookup's miss was reclassified");
+        // hit_rate excludes the delta on both sides of the fraction.
+        assert_eq!(ex.stats.hit_rate(), 0.0);
+        // Batch path: a further drift delta-patches on the planner thread.
+        let a3 = hash::mutate_row_fraction(&a2, 0.02, 42);
+        let out = ex.execute_batch(&[(&a3, &a3)]);
+        assert_eq!(out[0], hash::multiply(&a3, &a3));
+        let r = ex.last_batch.as_ref().unwrap();
+        assert_eq!((r.delta_patches, ex.stats.delta_patches), (1, 2));
+        assert!(r.delta_rows > 0 && r.delta_plan_s > 0.0);
+        assert!(r.symbolic_delta_s <= r.delta_plan_s + 1e-9);
+        // The patched plan chains off the patched predecessor.
+        assert_eq!(ex.store_stats().delta_patches, 2);
+        // Counters export.
+        let mut m = Metrics::new();
+        ex.export_metrics(&mut m);
+        assert_eq!(m.counter("batch.delta_patches"), 2);
+        assert_eq!(m.counter("batch.delta_rows"), ex.stats.delta_rows as u64);
     }
 
     #[test]

@@ -98,6 +98,18 @@ pub struct SpgemmExecutor {
     /// store's *disk* tier (plan from an earlier process, validated —
     /// symbolic phase skipped across the process boundary).
     pub disk_hits: usize,
+    /// [`SpgemmExecutor::multiply_reusing`] jobs served by patching the
+    /// previous slot plan's dirty rows instead of a full replan
+    /// ([`crate::spgemm::hash::delta_patch`]). Neither a hit nor a miss
+    /// in [`SpgemmExecutor::plan_hit_rate`] — the symbolic phase ran,
+    /// but only over the dirty rows.
+    pub plan_deltas: usize,
+    /// Rows whose symbolic phase re-ran across all delta-patched jobs
+    /// (the dirty sets' total size).
+    pub delta_rows: usize,
+    /// Wall seconds spent building delta patches (the incremental
+    /// counterpart of the full plans' `plan_times`).
+    pub delta_plan_s: f64,
     /// Tiered plan store consulted on slot misses (and seeded on
     /// replans). `None` = slot-only reuse, the pre-persistence behavior.
     plan_store: Option<TieredStore>,
@@ -142,6 +154,9 @@ impl SpgemmExecutor {
             plan_hits: 0,
             plan_misses: 0,
             disk_hits: 0,
+            plan_deltas: 0,
+            delta_rows: 0,
+            delta_plan_s: 0.0,
             plan_store,
         }
     }
@@ -225,7 +240,10 @@ impl SpgemmExecutor {
             self.phase_times.grouping_s += t_validate.elapsed().as_secs_f64();
         } else {
             // Slot miss: try the tiered store before paying the
-            // symbolic phase.
+            // symbolic phase. The displaced plan is kept as the delta
+            // baseline — if the store misses too, a same-shape mutation
+            // of the previous structure replans only its dirty rows.
+            let prior = slot.clone();
             let fp = PlanFingerprint::of(a, b);
             let mut from_store = None;
             if let Some(store) = self.plan_store.as_mut() {
@@ -249,9 +267,32 @@ impl SpgemmExecutor {
                 None => {
                     self.phase_times.grouping_s += t_validate.elapsed().as_secs_f64();
                     let cfg = EngineConfig::default();
-                    let p = Arc::new(PlannedProduct::plan_cfg_hashed(a, b, &cfg, fp.a_hash, fp.b_hash));
+                    // Dirty-row replanning: patch the displaced plan in
+                    // place when the new operands are a small structural
+                    // drift of its baseline; fall through to a full
+                    // replan on any rebuild verdict.
+                    let patched = prior.as_deref().and_then(|base| match hash::delta_patch(base, a, b, &cfg) {
+                        hash::DeltaOutcome::Patched(dp) => Some(dp),
+                        hash::DeltaOutcome::Rebuild(_) => None,
+                    });
+                    let p = match patched {
+                        Some(dp) => {
+                            let p = Arc::new(dp.plan);
+                            self.plan_deltas += 1;
+                            self.delta_rows += dp.dirty_rows;
+                            self.delta_plan_s += p.plan_times.total_s();
+                            if let Some(store) = self.plan_store.as_mut() {
+                                store.note_delta_patch();
+                            }
+                            p
+                        }
+                        None => {
+                            let p = Arc::new(PlannedProduct::plan_cfg_hashed(a, b, &cfg, fp.a_hash, fp.b_hash));
+                            self.plan_misses += 1;
+                            p
+                        }
+                    };
                     self.phase_times.accumulate(&p.plan_times);
-                    self.plan_misses += 1;
                     if let Some(store) = self.plan_store.as_mut() {
                         store.put(Arc::clone(&p));
                     }
@@ -271,7 +312,10 @@ impl SpgemmExecutor {
 
     /// Fraction of [`SpgemmExecutor::multiply_reusing`] jobs served from
     /// a cached plan — slot/memory hits and disk hits both count; 0 when
-    /// no reusing jobs ran.
+    /// no reusing jobs ran. Delta-patched jobs are *excluded* from both
+    /// numerator and denominator: they neither reused a plan verbatim
+    /// nor paid a full replan, and folding them into either side would
+    /// skew the rate (pinned by the `delta_patches` regression tests).
     pub fn plan_hit_rate(&self) -> f64 {
         let hits = self.plan_hits + self.disk_hits;
         let total = hits + self.plan_misses;
@@ -295,6 +339,9 @@ impl SpgemmExecutor {
         m.inc(&format!("{prefix}.plan_hits"), self.plan_hits as u64);
         m.inc(&format!("{prefix}.plan_misses"), self.plan_misses as u64);
         m.inc(&format!("{prefix}.disk_hits"), self.disk_hits as u64);
+        m.inc(&format!("{prefix}.plan_deltas"), self.plan_deltas as u64);
+        m.inc(&format!("{prefix}.delta_rows"), self.delta_rows as u64);
+        m.gauge(&format!("{prefix}.delta_plan_s"), self.delta_plan_s);
         if let Some(ss) = self.plan_store_stats() {
             m.observe_store_stats(&format!("{prefix}.store"), &ss);
         }
@@ -428,6 +475,45 @@ mod tests {
             hit_validation_s < cold_hash_s,
             "memoized validation ({hit_validation_s:.9}s) must undercut one cold O(nnz) hash ({cold_hash_s:.9}s)"
         );
+    }
+
+    /// A small structural drift of the previous structure must route
+    /// through the dirty-row delta planner: exact output, a lineage-
+    /// carrying slot plan, and counters that treat the job as neither a
+    /// plan hit nor a full replan.
+    #[test]
+    fn multiply_reusing_patches_small_structural_drift() {
+        let a = crate::gen::rmat(256, 2000, crate::gen::RmatParams::uniform(), &mut Pcg32::seeded(21));
+        let mut ex = mem_pinned(Variant::Hash);
+        let mut slot = None;
+        ex.multiply_reusing(&mut slot, &a, &a); // cold: full replan
+        let a2 = crate::spgemm::hash::mutate_row_fraction(&a, 0.02, 7);
+        let c2 = ex.multiply_reusing(&mut slot, &a2, &a2); // drift: delta patch
+        assert_eq!((ex.plan_hits, ex.plan_misses, ex.plan_deltas), (0, 1, 1));
+        assert!(ex.delta_rows > 0 && ex.delta_rows < a.n_rows, "only dirty rows replanned");
+        assert!(ex.delta_plan_s > 0.0, "the patch's plan time is charged, honestly");
+        assert_eq!(c2, crate::spgemm::hash::multiply(&a2, &a2), "patched fill must be exact");
+        let p = slot.as_ref().expect("slot holds the patched plan");
+        assert_eq!(p.delta().expect("patched plan carries lineage").chain_len, 1);
+        // The delta job is excluded from the hit rate (0 hits, 1 miss).
+        assert_eq!(ex.plan_hit_rate(), 0.0);
+        // Re-running the mutated structure is a plain slot hit.
+        ex.multiply_reusing(&mut slot, &a2, &a2);
+        assert_eq!(ex.plan_hits, 1);
+        // An unrelated same-shape structure rebuilds instead of patching.
+        let b = crate::gen::rmat(256, 2600, crate::gen::RmatParams::uniform(), &mut Pcg32::seeded(22));
+        let cb = ex.multiply_reusing(&mut slot, &b, &b);
+        assert_eq!((ex.plan_misses, ex.plan_deltas), (2, 1));
+        assert_eq!(cb, crate::spgemm::hash::multiply(&b, &b));
+        // Store counters agree: one patch, neither hit nor miss there.
+        let ss = ex.plan_store_stats().expect("mem-pinned store");
+        assert_eq!(ss.delta_patches, 1);
+        assert_eq!(ss.hits(), 0, "delta patches must not inflate store hits");
+        // And the new counters export.
+        let mut m = Metrics::new();
+        ex.export_metrics(&mut m);
+        assert_eq!(m.counter("spgemm.hash.plan_deltas"), 1);
+        assert_eq!(m.counter("spgemm.hash.delta_rows"), ex.delta_rows as u64);
     }
 
     #[test]

@@ -61,7 +61,7 @@ impl Metrics {
     }
 
     /// Record a plan-store counter snapshot under
-    /// `<prefix>.{mem_hits,disk_hits,misses,stores,evictions,corrupt,stale}`.
+    /// `<prefix>.{mem_hits,disk_hits,misses,delta_patches,stores,evictions,corrupt,stale}`.
     /// Counters are *set* (not incremented): the stats are cumulative
     /// already, so repeated exports must not double-count.
     pub fn observe_store_stats(&mut self, prefix: &str, ss: &crate::spgemm::hash::StoreStats) {
@@ -69,6 +69,7 @@ impl Metrics {
             ("mem_hits", ss.mem_hits),
             ("disk_hits", ss.disk_hits),
             ("misses", ss.misses),
+            ("delta_patches", ss.delta_patches),
             ("stores", ss.stores),
             ("evictions", ss.evictions),
             ("corrupt", ss.corrupt),
@@ -155,6 +156,7 @@ mod tests {
             mem_hits: 3,
             disk_hits: 1,
             misses: 2,
+            delta_patches: 4,
             stores: 2,
             evictions: 0,
             corrupt: 0,
@@ -165,6 +167,7 @@ mod tests {
         assert_eq!(m.counter("s.store.mem_hits"), 3);
         assert_eq!(m.counter("s.store.disk_hits"), 1);
         assert_eq!(m.counter("s.store.misses"), 2);
+        assert_eq!(m.counter("s.store.delta_patches"), 4);
         assert_eq!(m.counter("s.store.stale"), 1);
     }
 

@@ -115,9 +115,13 @@ pub struct EpochStats {
 /// aggregation call site owns a [`PlannedProduct`] slot driven through
 /// [`SpgemmExecutor::multiply_reusing`] — epochs whose top-k mask
 /// pattern repeats pay only the numeric phase ([`Trainer::plan_hit_rate`]
-/// reports how often that happened). Call
-/// [`Trainer::invalidate_plans`] after an event that changes an
-/// adjacency's structure.
+/// reports how often that happened). After a sparsification event that
+/// edits an adjacency's structure, call
+/// [`Trainer::note_sparsification`]: the displaced plans stay in their
+/// slots as delta baselines, so the next epoch re-plans only the rows
+/// the event dirtied (`spgemm::hash::incremental`) instead of paying a
+/// full symbolic pass per call site. [`Trainer::invalidate_plans`]
+/// remains the blanket fallback for wholesale adjacency replacement.
 pub struct Trainer<'a> {
     pub rt: &'a mut Runtime,
     pub data: &'a GnnData,
@@ -187,14 +191,33 @@ impl<'a> Trainer<'a> {
         data_adj(self.data, kind)
     }
 
-    /// Drop the cached transposes and every aggregation plan. Call after
-    /// a sparsification event that changes an adjacency's structure; the
-    /// next epoch transposes and plans once, then reuses again.
+    /// Drop the cached transposes and every aggregation plan. Use when
+    /// an adjacency is replaced wholesale (different graph); the next
+    /// epoch transposes and plans from scratch, then reuses again. For
+    /// in-place structural edits prefer [`Trainer::note_sparsification`].
     pub fn invalidate_plans(&mut self) {
         self.adj_t = [None, None, None];
         for s in self.plan_slots.iter_mut() {
             *s = None;
         }
+    }
+
+    /// Record a sparsification event that edited an adjacency's
+    /// structure in place (e.g. edge pruning between epochs). Cached
+    /// transposes are stale and dropped, but the aggregation plans stay
+    /// in their slots: on the next epoch each call site's structure-hash
+    /// check misses and [`SpgemmExecutor::multiply_reusing`] uses the
+    /// displaced plan as a delta baseline, re-running the symbolic phase
+    /// only for the dirtied rows ([`Trainer::plan_deltas`] counts how
+    /// often that path served an aggregation).
+    pub fn note_sparsification(&mut self) {
+        self.adj_t = [None, None, None];
+    }
+
+    /// Aggregations (across all epochs so far) served by delta-patching
+    /// a displaced plan after a sparsification event.
+    pub fn plan_deltas(&self) -> usize {
+        self.ex.plan_deltas
     }
 
     /// Fraction of aggregations (across all epochs so far) served from a

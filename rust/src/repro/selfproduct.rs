@@ -239,20 +239,68 @@ pub fn plan_reuse() -> Json {
     disk.set("store_stale", (ss.stale as i64).into());
     disk.set("store_evictions", (ss.evictions as i64).into());
     out.set("disk", disk);
+    // Incremental replanning under structural drift (the dynamic-graph
+    // path): mutate 1% of the rows of A and delta-patch the existing
+    // plan instead of replanning cold — the symbolic phase re-runs only
+    // for the dirty rows, and the patched plan is bit-identical to a
+    // cold plan of the mutated product.
+    let ds = crate::gen::table2_by_name("Economics").unwrap();
+    let a = (ds.gen)(SEED);
+    let base = PlannedProduct::plan(&a, &a);
+    let cold_plan_s = base.plan_times.total_s();
+    let cold_symbolic_s = base.plan_times.symbolic_s;
+    let a2 = hash::mutate_row_fraction(&a, 0.01, SEED);
+    let mut delta = Json::obj();
+    match hash::delta_patch(&base, &a2, &a, &hash::EngineConfig::default()) {
+        hash::DeltaOutcome::Patched(dp) => {
+            let delta_plan_s = dp.plan.plan_times.total_s();
+            let delta_symbolic_s = dp.plan.plan_times.symbolic_s;
+            let (c_delta, _) = dp.plan.fill_timed(&a2, &a);
+            let bit_identical = c_delta == hash::multiply(&a2, &a);
+            println!(
+                "\nDelta replan (Economics, 1% rows dirty): {} / {} rows re-planned — plan {:.2} ms cold vs {:.2} ms \
+                 delta, symbolic {:.2} ms cold vs {:.2} ms delta, bit-identical to cold multiply: {}",
+                dp.dirty_rows,
+                a.n_rows,
+                cold_plan_s * 1e3,
+                delta_plan_s * 1e3,
+                cold_symbolic_s * 1e3,
+                delta_symbolic_s * 1e3,
+                bit_identical
+            );
+            delta.set("dirty_rows", dp.dirty_rows.into());
+            delta.set("total_rows", a.n_rows.into());
+            delta.set("delta_rows", dp.dirty_rows.into());
+            delta.set("cold_plan_ms", (cold_plan_s * 1e3).into());
+            delta.set("delta_plan_ms", (delta_plan_s * 1e3).into());
+            delta.set("cold_symbolic_ms", (cold_symbolic_s * 1e3).into());
+            delta.set("delta_symbolic_ms", (delta_symbolic_s * 1e3).into());
+            delta.set("bit_identical", bit_identical.into());
+        }
+        hash::DeltaOutcome::Rebuild(why) => {
+            println!("\nDelta replan (Economics): fell back to full replan ({why})");
+            delta.set("rebuild", why.into());
+        }
+    }
+    out.set("delta", delta);
     // Plan-hit rate of an actual MCL run: early iterations replan as
-    // pruning reshapes the flow, late iterations reuse.
+    // pruning reshapes the flow (delta-patched where the drift is
+    // bounded), late iterations reuse.
     let ds = crate::gen::table2_by_name("Economics").unwrap();
     let g = (ds.gen)(SEED);
     let mut ex = SpgemmExecutor::fast(Variant::Hash);
     let iters = if quick() { 4 } else { 8 };
     let r = mcl(&g, &MclParams { max_iters: iters, tol: 1e-4, top_k: 16, ..Default::default() }, &mut ex);
-    let hit_rate = (r.plan_hits + r.disk_hits) as f64 / (r.plan_hits + r.disk_hits + r.plan_misses).max(1) as f64;
+    let expansions = (r.plan_hits + r.disk_hits + r.plan_deltas + r.plan_misses).max(1);
+    let hit_rate = (r.plan_hits + r.disk_hits) as f64 / expansions as f64;
     println!(
-        "\nMCL(Economics, {} iters): {} plan hits ({} from disk) / {} misses — {:.0}% of expansions skipped the \
-         symbolic phase",
+        "\nMCL(Economics, {} iters): {} plan hits ({} from disk) / {} delta patches ({} rows re-planned) / {} full \
+         misses — {:.0}% of expansions skipped the symbolic phase entirely",
         r.iterations,
         r.plan_hits + r.disk_hits,
         r.disk_hits,
+        r.plan_deltas,
+        r.delta_rows,
         r.plan_misses,
         100.0 * hit_rate
     );
@@ -260,6 +308,8 @@ pub fn plan_reuse() -> Json {
     out.set("mcl_plan_hits", r.plan_hits.into());
     out.set("mcl_plan_misses", r.plan_misses.into());
     out.set("mcl_disk_hits", r.disk_hits.into());
+    out.set("mcl_plan_deltas", r.plan_deltas.into());
+    out.set("mcl_delta_rows", r.delta_rows.into());
     out.set("mcl_plan_hit_rate", hit_rate.into());
     save_json("plan_reuse", &out);
     out

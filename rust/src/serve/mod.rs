@@ -111,14 +111,18 @@ pub struct MultiplyOutcome {
     pub nnz: usize,
     /// [`csr_checksum`] of `c`.
     pub checksum: u64,
-    /// Where the plan came from (`fresh`/`mem`/`disk`).
+    /// Where the plan came from (`fresh`/`mem`/`disk`/`delta` — the
+    /// last when a re-registered, mutated matrix routed through the
+    /// dirty-row delta planner).
     pub source: PlanSource,
     /// Seconds resolving the plan (lookup + validation; plus
-    /// grouping/symbolic when fresh).
+    /// grouping/symbolic when fresh, or the dirty-row patch when
+    /// delta).
     pub plan_s: f64,
     /// Seconds in the numeric fill.
     pub fill_s: f64,
-    /// Symbolic seconds this request paid — `0.0` on any plan hit.
+    /// Symbolic seconds this request paid — `0.0` on any plan hit;
+    /// on a delta patch, the dirty rows' counting cost only.
     pub symbolic_s: f64,
 }
 
@@ -172,6 +176,9 @@ pub struct ClientStats {
     pub requests: u64,
     pub hits: u64,
     pub misses: u64,
+    /// Requests served by dirty-row delta patching (neither hit nor
+    /// miss — `requests = hits + misses + deltas`).
+    pub deltas: u64,
 }
 
 /// Daemon-lifetime counters.
@@ -187,6 +194,11 @@ pub struct ServeStats {
     pub disk_hits: u64,
     /// Requests that had to build a plan.
     pub plan_misses: u64,
+    /// Requests served by patching the previous same-shape plan's
+    /// dirty rows ([`PlanSource::Delta`]) — e.g. a client re-registered
+    /// a mutated matrix. Neither a hit nor a miss in
+    /// [`ServeStats::hit_rate`].
+    pub plan_deltas: u64,
     /// Matrices registered over the daemon's lifetime.
     pub registered: u64,
     /// Handles released.
@@ -196,6 +208,8 @@ pub struct ServeStats {
 
 impl ServeStats {
     /// Fraction of executed multiplies that skipped the symbolic phase.
+    /// Delta-patched requests re-ran it (over dirty rows only), so they
+    /// are excluded from both sides of the fraction.
     pub fn hit_rate(&self) -> f64 {
         let hits = self.plan_hits + self.disk_hits;
         let total = hits + self.plan_misses;
@@ -361,6 +375,7 @@ impl ServeHandle {
         m.inc("serve.plan_hits", st.plan_hits);
         m.inc("serve.disk_hits", st.disk_hits);
         m.inc("serve.plan_misses", st.plan_misses);
+        m.inc("serve.plan_deltas", st.plan_deltas);
         m.inc("serve.registered", st.registered);
         m.inc("serve.released", st.released);
         m.gauge("serve.plan_hit_rate", st.hit_rate());
@@ -368,6 +383,7 @@ impl ServeHandle {
             m.inc(&format!("serve.client.{client}.requests"), cs.requests);
             m.inc(&format!("serve.client.{client}.hits"), cs.hits);
             m.inc(&format!("serve.client.{client}.misses"), cs.misses);
+            m.inc(&format!("serve.client.{client}.deltas"), cs.deltas);
         }
         m.observe_store_stats("serve.store", &self.store.stats());
     }
@@ -382,6 +398,7 @@ impl ServeHandle {
         o.set("plan_hits", (st.plan_hits as i64).into());
         o.set("disk_hits", (st.disk_hits as i64).into());
         o.set("plan_misses", (st.plan_misses as i64).into());
+        o.set("plan_deltas", (st.plan_deltas as i64).into());
         o.set("plan_hit_rate", st.hit_rate().into());
         o.set("registered", (st.registered as i64).into());
         o.set("released", (st.released as i64).into());
@@ -396,6 +413,7 @@ impl ServeHandle {
         store.set("evictions", (ss.evictions as i64).into());
         store.set("corrupt", (ss.corrupt as i64).into());
         store.set("stale", (ss.stale as i64).into());
+        store.set("delta_patches", (ss.delta_patches as i64).into());
         o.set("store", store);
         let mut clients = Json::obj();
         for (client, cs) in &st.per_client {
@@ -403,6 +421,7 @@ impl ServeHandle {
             c.set("requests", (cs.requests as i64).into());
             c.set("hits", (cs.hits as i64).into());
             c.set("misses", (cs.misses as i64).into());
+            c.set("deltas", (cs.deltas as i64).into());
             clients.set(&client.to_string(), c);
         }
         o.set("clients", clients);
@@ -502,13 +521,14 @@ fn worker_loop(jobs: QueueReceiver<Job>, mut executor: BatchExecutor, stats: Arc
                         PlanSource::Fresh => st.plan_misses += 1,
                         PlanSource::Disk => st.disk_hits += 1,
                         PlanSource::Mem | PlanSource::Shared => st.plan_hits += 1,
+                        PlanSource::Delta => st.plan_deltas += 1,
                     }
                     let cs = st.per_client.entry(client).or_default();
                     cs.requests += 1;
-                    if trace.source.is_hit() {
-                        cs.hits += 1;
-                    } else {
-                        cs.misses += 1;
+                    match trace.source {
+                        PlanSource::Delta => cs.deltas += 1,
+                        s if s.is_hit() => cs.hits += 1,
+                        _ => cs.misses += 1,
                     }
                 }
                 let outcome = MultiplyOutcome {

@@ -27,6 +27,9 @@ pub struct Csr {
     /// fingerprints are taken on the batch planner thread) and `Clone`
     /// carries the memo along — a clone shares the original's structure.
     structure_memo: OnceLock<u64>,
+    /// Compute-once memo of [`Csr::row_structure_hashes`] — one hash per
+    /// row, same lifecycle rules as `structure_memo`.
+    row_hash_memo: OnceLock<Vec<u64>>,
 }
 
 /// Equality is over the five public fields only — the lazily computed
@@ -61,7 +64,7 @@ impl Csr {
                 ensure!((last as usize) < n_cols, "row {i} col {last} out of bounds {n_cols}");
             }
         }
-        Ok(Csr { n_rows, n_cols, rpt, col, val, structure_memo: OnceLock::new() })
+        Ok(Csr { n_rows, n_cols, rpt, col, val, structure_memo: OnceLock::new(), row_hash_memo: OnceLock::new() })
     }
 
     /// Construct without validation (hot paths that build valid output by
@@ -73,13 +76,13 @@ impl Csr {
         }
         #[cfg(not(debug_assertions))]
         {
-            Csr { n_rows, n_cols, rpt, col, val, structure_memo: OnceLock::new() }
+            Csr { n_rows, n_cols, rpt, col, val, structure_memo: OnceLock::new(), row_hash_memo: OnceLock::new() }
         }
     }
 
     /// The empty matrix of a given shape.
     pub fn zeros(n_rows: usize, n_cols: usize) -> Csr {
-        Csr { n_rows, n_cols, rpt: vec![0; n_rows + 1], col: vec![], val: vec![], structure_memo: OnceLock::new() }
+        Csr { n_rows, n_cols, rpt: vec![0; n_rows + 1], col: vec![], val: vec![], structure_memo: OnceLock::new(), row_hash_memo: OnceLock::new() }
     }
 
     /// Identity matrix.
@@ -91,6 +94,7 @@ impl Csr {
             col: (0..n as u32).collect(),
             val: vec![1.0; n],
             structure_memo: OnceLock::new(),
+            row_hash_memo: OnceLock::new(),
         }
     }
 
@@ -104,6 +108,7 @@ impl Csr {
             col: (0..n as u32).collect(),
             val: d.to_vec(),
             structure_memo: OnceLock::new(),
+            row_hash_memo: OnceLock::new(),
         }
     }
 
@@ -262,13 +267,6 @@ impl Csr {
     }
 
     fn compute_structure_hash(&self) -> u64 {
-        #[inline]
-        fn mix(h: u64, x: u64) -> u64 {
-            // FNV-1a word step plus an xorshift to spread low-entropy
-            // inputs (small column indices) across the high bits.
-            let h = (h ^ x).wrapping_mul(0x100_0000_01b3);
-            h ^ (h >> 29)
-        }
         let mut h = mix(0xcbf2_9ce4_8422_2325, self.n_rows as u64);
         h = mix(h, self.n_cols as u64);
         for &p in &self.rpt {
@@ -279,6 +277,42 @@ impl Csr {
         }
         h
     }
+
+    /// Per-row 64-bit hashes of the sparsity structure — row i's hash
+    /// covers its nnz and column indices, values excluded (same mix
+    /// function as [`Csr::structure_hash`]). Two matrices of equal shape
+    /// whose row-i hashes agree have (up to collision) identical row-i
+    /// patterns, which is exactly what incremental replanning
+    /// ([`crate::spgemm::hash::incremental`]) needs to diff old vs new
+    /// operands row by row.
+    ///
+    /// Memoized like the whole-structure hash: first call pays one
+    /// O(nnz) scan, clones inherit the memo, value mutation never
+    /// invalidates it.
+    pub fn row_structure_hashes(&self) -> &[u64] {
+        self.row_hash_memo.get_or_init(|| {
+            (0..self.n_rows)
+                .map(|i| {
+                    let (cols, _) = self.row(i);
+                    let mut h = mix(0xcbf2_9ce4_8422_2325, cols.len() as u64);
+                    for &c in cols {
+                        h = mix(h, c as u64);
+                    }
+                    h
+                })
+                .collect()
+        })
+    }
+}
+
+/// FNV-1a word step plus an xorshift to spread low-entropy inputs
+/// (small column indices) across the high bits. Shared by the
+/// whole-structure and per-row hashes so the two stay comparable
+/// diagnostics of the same scan.
+#[inline]
+fn mix(h: u64, x: u64) -> u64 {
+    let h = (h ^ x).wrapping_mul(0x100_0000_01b3);
+    h ^ (h >> 29)
 }
 
 #[cfg(test)]
@@ -391,6 +425,32 @@ mod tests {
         assert_eq!(fresh.cached_structure_hash(), None);
         assert_eq!(fresh, a);
         assert_eq!(fresh.structure_hash(), h, "memoized and recomputed hashes agree");
+    }
+
+    #[test]
+    fn row_structure_hashes_localize_changes() {
+        let a = small();
+        let ha = a.row_structure_hashes().to_vec();
+        assert_eq!(ha.len(), 3);
+        // Values never affect row hashes.
+        let mut b = a.clone();
+        b.val[0] = -5.0;
+        assert_eq!(b.row_structure_hashes(), &ha[..]);
+        // Moving row 2's entry changes only row 2's hash.
+        let c = Csr::new(3, 3, vec![0, 2, 2, 4], vec![0, 2, 0, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let hc = c.row_structure_hashes();
+        assert_eq!(hc[0], ha[0]);
+        assert_eq!(hc[1], ha[1]);
+        assert_ne!(hc[2], ha[2]);
+        // Identical patterns in different rows hash identically (the row
+        // hash is position-independent; position lives in the index).
+        let d = Csr::new(2, 3, vec![0, 2, 4], vec![0, 2, 0, 2], vec![1.0; 4]).unwrap();
+        let hd = d.row_structure_hashes();
+        assert_eq!(hd[0], hd[1]);
+        // Clones share the memo.
+        let e = a.clone();
+        let _ = a.row_structure_hashes();
+        assert_eq!(e.row_structure_hashes(), &ha[..]);
     }
 
     #[test]

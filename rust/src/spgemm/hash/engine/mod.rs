@@ -84,7 +84,7 @@ mod traced;
 
 pub use numeric::{numeric, numeric_bin_into, numeric_timed};
 pub use symbolic::{symbolic, symbolic_cfg};
-pub(crate) use symbolic::symbolic_timed;
+pub(crate) use symbolic::{build_bins, symbolic_row_nnz_bitmap, symbolic_row_nnz_hash, symbolic_timed};
 pub use traced::{multiply_single_pass, multiply_traced, multiply_traced_cfg, multiply_traced_stats};
 
 use super::grouping::{AccumKind, GroupSpec, Grouping, RowKernel, Strategy, SymbolicKind, GROUP_SPECS};

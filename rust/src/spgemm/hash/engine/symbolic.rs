@@ -161,10 +161,29 @@ fn symbolic_with(
     for i in 0..a.n_rows {
         rpt[i + 1] = rpt[i] + row_nnz[i] as usize;
     }
-    // Accumulator selection: exact sizes are now known, so the numeric
-    // kind per row — and with it the numeric work list — costs one
-    // pass. Bins are split by the full (symbolic, numeric) kernel pair
-    // so the pair survives into the scheduler and the metrics.
+    let (accum, bins) = build_bins(a, b.n_cols, &ip, &grouping, &rpt, &sym, num_threshold);
+    let plan = SymbolicPlan { ip, grouping, rpt, accum, symbolic: sym, bins, spa_threshold: cfg.spa_threshold };
+    (plan, symbolic_kind_s)
+}
+
+/// Accumulator selection + bin construction: exact sizes are known
+/// (`rpt`), so the numeric kind per row — and with it the numeric work
+/// list — costs one pass. Bins are split by the full (symbolic,
+/// numeric) kernel pair so the pair survives into the scheduler and
+/// the metrics; within a bin rows stay in ascending id order (the
+/// grouping's stable sort), which makes bins a pure function of
+/// (grouping, rpt, sym) — the incremental replanner
+/// ([`super::super::incremental`]) rebuilds them wholesale and gets
+/// bit-identical bins to a cold plan by construction.
+pub(crate) fn build_bins(
+    a: &Csr,
+    b_n_cols: usize,
+    ip: &[u64],
+    grouping: &Grouping,
+    rpt: &[usize],
+    sym: &[SymbolicKind],
+    num_threshold: f64,
+) -> (Vec<AccumKind>, Vec<NumericBin>) {
     let mut accum = vec![AccumKind::ScaledCopy; a.n_rows];
     let mut bins = Vec::new();
     for spec in &GROUP_SPECS {
@@ -172,11 +191,11 @@ fn symbolic_with(
         let mut weights = [[0u64; 3]; 3];
         for &row in grouping.group_rows(spec.id) {
             let r = row as usize;
-            let n_out = row_nnz[r] as usize;
+            let n_out = rpt[r + 1] - rpt[r];
             if n_out == 0 {
                 continue; // never reaches the numeric phase
             }
-            let kind = select_accumulator(a.row_nnz(r), n_out, b.n_cols, num_threshold);
+            let kind = select_accumulator(a.row_nnz(r), n_out, b_n_cols, num_threshold);
             accum[r] = kind;
             let (si, ni) = (sym[r].index(), kind.index());
             parts[si][ni].push(row);
@@ -196,13 +215,21 @@ fn symbolic_with(
             }
         }
     }
-    let plan = SymbolicPlan { ip, grouping, rpt, accum, symbolic: sym, bins, spa_threshold: cfg.spa_threshold };
-    (plan, symbolic_kind_s)
+    (accum, bins)
 }
 
 /// Exact nnz of one output row via symbolic hash inserts (the hash
 /// counting kernel — callers have already routed trivial rows away).
-fn symbolic_row_nnz_hash(a: &Csr, b: &Csr, row: usize, ip_row: u64, spec: &GroupSpec, table: &mut HashTable) -> u32 {
+/// `pub(crate)` so the incremental replanner can recount exactly the
+/// dirty rows with the identical kernel a cold plan would run.
+pub(crate) fn symbolic_row_nnz_hash(
+    a: &Csr,
+    b: &Csr,
+    row: usize,
+    ip_row: u64,
+    spec: &GroupSpec,
+    table: &mut HashTable,
+) -> u32 {
     if ip_row <= 1 || a.row_nnz(row) <= 1 {
         return ip_row as u32;
     }
@@ -218,7 +245,7 @@ fn symbolic_row_nnz_hash(a: &Csr, b: &Csr, row: usize, ip_row: u64, spec: &Group
 /// Exact nnz of one output row via the dense bitmap counter (the
 /// bitmap counting kernel): first-touch counting, no probe chains, no
 /// gather — the count is the CAS-success tally.
-fn symbolic_row_nnz_bitmap(a: &Csr, b: &Csr, row: usize, counter: &mut RowCounter) -> u32 {
+pub(crate) fn symbolic_row_nnz_bitmap(a: &Csr, b: &Csr, row: usize, counter: &mut RowCounter) -> u32 {
     counter.clear();
     for j in a.row_range(row) {
         let colk = a.col[j] as usize;

@@ -1,0 +1,416 @@
+//! Incremental dirty-row replanning for dynamic graphs (ROADMAP
+//! "Incremental SpGEMM — dirty-row replan").
+//!
+//! Iterative apps mutate operand *structure* a few rows at a time —
+//! MCL's per-iteration prune, GNN sparsification, streaming edge
+//! inserts/deletes — yet a structure-hash mismatch used to throw the
+//! whole plan away and re-pay the full symbolic phase. This module
+//! patches a [`PlannedProduct`] in place instead:
+//!
+//! 1. **Diff** the old and new operands through memoized per-row FNV
+//!    hashes ([`crate::sparse::Csr::row_structure_hashes`]). A row of A
+//!    is *dirty* when its own pattern changed, or when it touches a row
+//!    of B whose pattern changed (the column-touch rule — its IP bound
+//!    and hash-table sizing depend on those B rows). Scanning the *new*
+//!    A suffices: a clean row's pattern is by definition unchanged, so
+//!    its touch set is too.
+//! 2. **Re-run symbolic work only for dirty rows** — IP bounds, the
+//!    counting kernel (the same
+//!    [`super::engine`] `symbolic_row_nnz_hash`/`_bitmap` kernels the
+//!    cold path runs), and exact output sizes. Clean rows keep their
+//!    counts: they are structure-derived facts of unchanged rows.
+//! 3. **Rebuild the cheap O(n) derived state wholesale** — grouping
+//!    (a stable counting sort of the IP vector), `rpt` prefix sum,
+//!    per-row kernel kinds, and the IP-weighted bins
+//!    ([`super::engine`] `build_bins`). Within-bin row order is
+//!    ascending row id in both the cold and patched paths, so the
+//!    patched plan is **bit-identical** to a cold plan by construction
+//!    (pinned by `tests/incremental.rs`).
+//!
+//! The patched plan's identity is the mutated operands' fingerprint;
+//! its provenance is a [`DeltaLineage`] — base fingerprint plus an
+//! ordered, self-verifiable delta digest — which both plan-store tiers
+//! validate so a stale or damaged chain degrades to a silent full
+//! replan, never a wrong answer (see `DESIGN.md` §"Incremental
+//! replanning").
+
+use super::engine::{
+    build_bins, effective_thresholds, symbolic_row_nnz_bitmap, symbolic_row_nnz_hash, EngineConfig, SymbolicPlan,
+};
+use super::grouping::{select_symbolic, Grouping, SymbolicKind, GROUP_SPECS};
+use super::plan::{pair_key_from_hashes, DeltaLineage, PlannedProduct};
+use super::table::{HashTable, RowCounter};
+use crate::sim::probe::PhaseTimes;
+use crate::sparse::Csr;
+use std::time::Instant;
+
+/// Longest admissible patch chain. The digest chain is exact at any
+/// length, but each patch re-derives O(n) state from retained counts —
+/// a bounded chain caps how far a plan can drift from a cold build and
+/// forces a periodic full replan that re-anchors the lineage.
+pub const MAX_DELTA_CHAIN: u32 = 8;
+
+/// Dirty-row fraction above which patching is pointless: past half the
+/// rows, a full symbolic pass is no slower and resets the chain. This
+/// is also what keeps *unrelated* same-shape matrices off the delta
+/// path — their diff is ~100% dirty, so they fall through to a cold
+/// plan (`PlanSource::Fresh`), not a bogus "delta".
+pub const REBUILD_DIRTY_FRACTION: f64 = 0.5;
+
+/// A successful in-place patch.
+pub struct DeltaPatch {
+    /// The patched plan, bound to the mutated operands' fingerprint and
+    /// carrying the extended [`DeltaLineage`]. `plan_times` holds only
+    /// the patch's own seconds (diff + grouping in `grouping_s`,
+    /// dirty-row counting + bin rebuild in `symbolic_s`).
+    pub plan: PlannedProduct,
+    /// Rows of A whose symbolic work was actually re-run — the quantity
+    /// the ≤ 5 %-of-rows acceptance bound is asserted on.
+    pub dirty_rows: usize,
+}
+
+/// What [`delta_patch`] decided.
+pub enum DeltaOutcome {
+    /// The plan was patched; use `patch.plan` instead of replanning.
+    Patched(Box<DeltaPatch>),
+    /// Patching was refused (reason is diagnostic only) — run a cold
+    /// plan. Never an error: the cold path is always correct.
+    Rebuild(&'static str),
+}
+
+/// Try to patch `base` (a plan for some earlier structure of this
+/// operand pair) into a plan for the *current* `(a, b)`.
+///
+/// Callers should first check `base.matches(a, b)` — operands whose
+/// structure is unchanged need no patch at all (a value-only mutation
+/// is a plain plan hit). The patch is refused — `Rebuild` — when the
+/// shapes changed, the chain is at [`MAX_DELTA_CHAIN`], or more than
+/// [`REBUILD_DIRTY_FRACTION`] of A's rows are dirty.
+///
+/// The patched plan is bit-identical to `PlannedProduct::plan_cfg(a,
+/// b, cfg)` — same `rpt`, row kinds, bins, and fills — for any `cfg`:
+/// every retained per-row fact (IP bound, exact count) is a pure
+/// function of unchanged structure, and everything threshold-dependent
+/// (kernel kinds, bins) is recomputed under `cfg`.
+pub fn delta_patch(base: &PlannedProduct, a: &Csr, b: &Csr, cfg: &EngineConfig) -> DeltaOutcome {
+    if base.a_shape() != (a.n_rows, a.n_cols) || base.b_shape() != (b.n_rows, b.n_cols) {
+        return DeltaOutcome::Rebuild("operand shape changed");
+    }
+    let chain_len = base.delta().map_or(0, |d| d.chain_len);
+    if chain_len >= MAX_DELTA_CHAIN {
+        return DeltaOutcome::Rebuild("delta chain at rebuild threshold");
+    }
+
+    // --- dirty-set diff (charged as grouping time, like cold IP/binning) ---
+    let t0 = Instant::now();
+    let a_hash = a.structure_hash();
+    let b_hash = b.structure_hash();
+    let (a_old, b_old) = (base.a_row_hashes(), base.b_row_hashes());
+    let (a_new, b_new) = (a.row_structure_hashes(), b.row_structure_hashes());
+    let mut b_dirty = vec![false; b.n_rows];
+    let mut any_b_dirty = false;
+    for r in 0..b.n_rows {
+        if b_old[r] != b_new[r] {
+            b_dirty[r] = true;
+            any_b_dirty = true;
+        }
+    }
+    let mut dirty: Vec<u32> = Vec::new(); // ascending by construction
+    for r in 0..a.n_rows {
+        let self_dirty = a_old[r] != a_new[r];
+        let feeds_dirty = any_b_dirty && a.row(r).0.iter().any(|&c| b_dirty[c as usize]);
+        if self_dirty || feeds_dirty {
+            dirty.push(r as u32);
+        }
+    }
+    if dirty.is_empty() {
+        // Hash changed but no row did — collision paranoia; the cold
+        // path is the only safe answer.
+        return DeltaOutcome::Rebuild("structure hash changed but no dirty rows found");
+    }
+    if (dirty.len() as f64) > REBUILD_DIRTY_FRACTION * a.n_rows as f64 {
+        return DeltaOutcome::Rebuild("dirty fraction above rebuild threshold");
+    }
+
+    // --- patch: dirty IP + wholesale grouping / kernel selection ---
+    let old = base.symbolic_plan();
+    let (sym_threshold, num_threshold) = effective_thresholds(cfg, b.n_cols);
+    let mut ip = old.ip.clone();
+    for &r in &dirty {
+        let r = r as usize;
+        ip[r] = a.row(r).0.iter().map(|&c| (b.rpt[c as usize + 1] - b.rpt[c as usize]) as u64).sum();
+    }
+    let grouping = Grouping::build(&ip);
+    let mut sym = vec![SymbolicKind::Trivial; a.n_rows];
+    for (r, k) in sym.iter_mut().enumerate() {
+        *k = select_symbolic(a.row_nnz(r), ip[r], b.n_cols, sym_threshold);
+    }
+    let grouping_s = t0.elapsed().as_secs_f64();
+
+    // --- dirty-row counting with the cold path's kernels ---
+    let t1 = Instant::now();
+    let mut counts: Vec<usize> = (0..a.n_rows).map(|r| old.rpt[r + 1] - old.rpt[r]).collect();
+    let mut tables: [Option<HashTable>; GROUP_SPECS.len()] = Default::default();
+    let mut counter: Option<RowCounter> = None;
+    let mut symbolic_kind_s = [0f64; 3];
+    for &r in &dirty {
+        let r = r as usize;
+        let tk = Instant::now();
+        let n = match sym[r] {
+            // Same short-circuit as the cold trivial sub-bin: the IP
+            // bound *is* the exact count.
+            SymbolicKind::Trivial => ip[r] as u32,
+            SymbolicKind::Hash => {
+                let g = grouping.group_of[r] as usize;
+                let spec = &GROUP_SPECS[g];
+                let table = tables[g].get_or_insert_with(|| super::engine::bin_table(spec));
+                symbolic_row_nnz_hash(a, b, r, ip[r], spec, table)
+            }
+            SymbolicKind::Bitmap => {
+                let c = counter.get_or_insert_with(|| RowCounter::new(b.n_cols));
+                symbolic_row_nnz_bitmap(a, b, r, c)
+            }
+        };
+        symbolic_kind_s[sym[r].index()] += tk.elapsed().as_secs_f64();
+        counts[r] = n as usize;
+    }
+    let mut rpt = vec![0usize; a.n_rows + 1];
+    for i in 0..a.n_rows {
+        rpt[i + 1] = rpt[i] + counts[i];
+    }
+    let (accum, bins) = build_bins(a, b.n_cols, &ip, &grouping, &rpt, &sym, num_threshold);
+    let plan = SymbolicPlan { ip, grouping, rpt, accum, symbolic: sym, bins, spa_threshold: cfg.spa_threshold };
+    let symbolic_s = t1.elapsed().as_secs_f64();
+
+    // --- extend the lineage ---
+    let (base_a_hash, base_b_hash, prev_digest) = match base.delta() {
+        Some(d) => (d.base_a_hash, d.base_b_hash, d.digest),
+        None => (base.a_hash(), base.b_hash(), pair_key_from_hashes(base.a_hash(), base.b_hash())),
+    };
+    let mut lineage =
+        DeltaLineage { base_a_hash, base_b_hash, chain_len: chain_len + 1, prev_digest, digest: 0 };
+    lineage.digest = lineage.expected_digest(a_hash, b_hash, a.row_structure_hashes(), b.row_structure_hashes());
+
+    let plan_times = PhaseTimes { grouping_s, symbolic_s, symbolic_kind_s, ..PhaseTimes::default() };
+    let planned = PlannedProduct::from_patch(plan, a, b, a_hash, b_hash, lineage, plan_times);
+    DeltaOutcome::Patched(Box::new(DeltaPatch { plan: planned, dirty_rows: dirty.len() }))
+}
+
+/// Deterministically flip the structure of `fraction` of `m`'s rows —
+/// an edge insert-or-delete per selected row (remove column `(seed +
+/// row) % n_cols` when present, insert it when absent). Shared by the
+/// differential tests, `benches/incremental.rs`, and `repro
+/// planreuse`'s delta section so all three exercise the same mutation
+/// model. `fraction` is clamped to `[0, 1]`; at least one row mutates
+/// whenever `fraction > 0` and the matrix is non-empty.
+pub fn mutate_row_fraction(m: &Csr, fraction: f64, seed: u64) -> Csr {
+    let n = m.n_rows;
+    if n == 0 || m.n_cols == 0 || fraction <= 0.0 {
+        return m.clone();
+    }
+    let count = ((fraction.min(1.0) * n as f64).ceil() as usize).clamp(1, n);
+    let mut rng = crate::util::Pcg32::seeded(seed);
+    let mut pick = vec![false; n];
+    let mut picked = 0usize;
+    while picked < count {
+        let r = rng.below_usize(n);
+        if !pick[r] {
+            pick[r] = true;
+            picked += 1;
+        }
+    }
+    let mut rpt = Vec::with_capacity(n + 1);
+    rpt.push(0usize);
+    let mut col = Vec::with_capacity(m.nnz() + count);
+    let mut val = Vec::with_capacity(m.nnz() + count);
+    for r in 0..n {
+        let (cs, vs) = m.row(r);
+        if !pick[r] {
+            col.extend_from_slice(cs);
+            val.extend_from_slice(vs);
+        } else {
+            let flip = ((seed.wrapping_add(r as u64)) % m.n_cols as u64) as u32;
+            let mut inserted = false;
+            for (&c, &v) in cs.iter().zip(vs) {
+                if c == flip {
+                    inserted = true; // delete: skip the entry
+                    continue;
+                }
+                if !inserted && c > flip {
+                    col.push(flip);
+                    val.push(1.0);
+                    inserted = true;
+                }
+                col.push(c);
+                val.push(v);
+            }
+            if !inserted {
+                col.push(flip);
+                val.push(1.0);
+            }
+        }
+        rpt.push(col.len());
+    }
+    Csr::new_unchecked(n, m.n_cols, rpt, col, val)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::engine::testutil::random_csr;
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn assert_plans_identical(p: &PlannedProduct, q: &PlannedProduct) {
+        let (sp, sq) = (p.symbolic_plan(), q.symbolic_plan());
+        assert_eq!(sp.ip, sq.ip, "ip");
+        assert_eq!(sp.rpt, sq.rpt, "rpt");
+        assert_eq!(sp.accum, sq.accum, "accum kinds");
+        assert_eq!(sp.symbolic, sq.symbolic, "symbolic kinds");
+        assert_eq!(sp.bins.len(), sq.bins.len(), "bin count");
+        for (x, y) in sp.bins.iter().zip(&sq.bins) {
+            assert_eq!(x.group, y.group);
+            assert_eq!(x.kind, y.kind);
+            assert_eq!(x.symbolic_kind, y.symbolic_kind);
+            assert_eq!(x.rows, y.rows, "bin membership/order");
+            assert_eq!(x.weight, y.weight);
+        }
+    }
+
+    #[test]
+    fn patched_plan_is_bit_identical_to_cold() {
+        let mut rng = Pcg32::seeded(91);
+        let a = random_csr(&mut rng, 250, 220, 0.03);
+        let b = random_csr(&mut rng, 220, 200, 0.03);
+        let base = PlannedProduct::plan(&a, &b);
+        let a2 = mutate_row_fraction(&a, 0.02, 7);
+        assert_ne!(a.structure_hash(), a2.structure_hash());
+        match delta_patch(&base, &a2, &b, &EngineConfig::default()) {
+            DeltaOutcome::Patched(p) => {
+                let cold = PlannedProduct::plan(&a2, &b);
+                assert_plans_identical(&p.plan, &cold);
+                assert_eq!(p.plan.fill(&a2, &b), cold.fill(&a2, &b), "fills must be bit-identical");
+                assert!(p.dirty_rows <= 5 + 250 * 2 / 100, "delta must localize: {} rows", p.dirty_rows);
+                let d = p.plan.delta().expect("patched plan must carry lineage");
+                assert_eq!(d.chain_len, 1);
+                assert_eq!(d.base_a_hash, a.structure_hash());
+            }
+            DeltaOutcome::Rebuild(why) => panic!("small mutation must patch, got rebuild: {why}"),
+        }
+    }
+
+    #[test]
+    fn b_side_mutation_dirties_feeding_rows_only() {
+        let mut rng = Pcg32::seeded(13);
+        let a = random_csr(&mut rng, 180, 150, 0.02);
+        let b = random_csr(&mut rng, 150, 140, 0.03);
+        let base = PlannedProduct::plan(&a, &b);
+        let b2 = mutate_row_fraction(&b, 0.01, 3);
+        match delta_patch(&base, &a, &b2, &EngineConfig::default()) {
+            DeltaOutcome::Patched(p) => {
+                let cold = PlannedProduct::plan(&a, &b2);
+                assert_plans_identical(&p.plan, &cold);
+                assert_eq!(p.plan.fill(&a, &b2), cold.fill(&a, &b2));
+                // Only rows of A touching the mutated B rows are dirty.
+                let dirty_b: Vec<usize> = (0..b.n_rows)
+                    .filter(|&r| b.row_structure_hashes()[r] != b2.row_structure_hashes()[r])
+                    .collect();
+                let expect = (0..a.n_rows)
+                    .filter(|&r| a.row(r).0.iter().any(|&c| dirty_b.contains(&(c as usize))))
+                    .count();
+                assert_eq!(p.dirty_rows, expect, "column-touch rule must be exact");
+            }
+            DeltaOutcome::Rebuild(why) => panic!("B-side mutation must patch: {why}"),
+        }
+    }
+
+    #[test]
+    fn chains_extend_and_cap_at_rebuild_threshold() {
+        let mut rng = Pcg32::seeded(29);
+        let mut a = random_csr(&mut rng, 120, 120, 0.05);
+        let b = random_csr(&mut rng, 120, 110, 0.05);
+        let mut plan = PlannedProduct::plan(&a, &b);
+        let root_hash = a.structure_hash();
+        for step in 0..MAX_DELTA_CHAIN {
+            let a2 = mutate_row_fraction(&a, 0.02, 100 + step as u64);
+            match delta_patch(&plan, &a2, &b, &EngineConfig::default()) {
+                DeltaOutcome::Patched(p) => {
+                    let d = *p.plan.delta().unwrap();
+                    assert_eq!(d.chain_len, step + 1);
+                    assert_eq!(d.base_a_hash, root_hash, "lineage must point at the cold root");
+                    assert_plans_identical(&p.plan, &PlannedProduct::plan(&a2, &b));
+                    plan = p.plan;
+                    a = a2;
+                }
+                DeltaOutcome::Rebuild(why) => panic!("step {step} must patch: {why}"),
+            }
+        }
+        let a2 = mutate_row_fraction(&a, 0.02, 999);
+        assert!(
+            matches!(delta_patch(&plan, &a2, &b, &EngineConfig::default()), DeltaOutcome::Rebuild(_)),
+            "chain past MAX_DELTA_CHAIN must force a rebuild"
+        );
+    }
+
+    #[test]
+    fn refuses_unrelated_matrices_and_shape_changes() {
+        let mut rng = Pcg32::seeded(5);
+        let a = random_csr(&mut rng, 100, 100, 0.04);
+        let b = random_csr(&mut rng, 100, 100, 0.04);
+        let base = PlannedProduct::plan(&a, &a);
+        // An unrelated same-shape matrix is ~all-dirty — Rebuild, so
+        // executor paths keep reporting it Fresh.
+        let c = random_csr(&mut rng, 100, 100, 0.04);
+        assert!(matches!(delta_patch(&base, &c, &c, &EngineConfig::default()), DeltaOutcome::Rebuild(_)));
+        // Shape change is refused outright.
+        let d = random_csr(&mut rng, 101, 100, 0.04);
+        assert!(matches!(delta_patch(&base, &d, &b, &EngineConfig::default()), DeltaOutcome::Rebuild(_)));
+    }
+
+    #[test]
+    fn lineage_digest_is_coherent_and_tamper_evident() {
+        let mut rng = Pcg32::seeded(61);
+        let a = random_csr(&mut rng, 90, 90, 0.05);
+        let base = PlannedProduct::plan(&a, &a);
+        let a2 = mutate_row_fraction(&a, 0.03, 17);
+        let DeltaOutcome::Patched(p) = delta_patch(&base, &a2, &a2, &EngineConfig::default()) else {
+            panic!("must patch");
+        };
+        assert!(p.plan.lineage_is_coherent(), "a fresh patch must validate");
+        let d = p.plan.delta().unwrap();
+        let expect = d.expected_digest(
+            a2.structure_hash(),
+            a2.structure_hash(),
+            a2.row_structure_hashes(),
+            a2.row_structure_hashes(),
+        );
+        assert_eq!(d.digest, expect);
+        // Any field flip breaks the digest.
+        let mut forged = *d;
+        forged.chain_len += 1;
+        assert_ne!(
+            forged.expected_digest(
+                a2.structure_hash(),
+                a2.structure_hash(),
+                a2.row_structure_hashes(),
+                a2.row_structure_hashes(),
+            ),
+            d.digest
+        );
+    }
+
+    #[test]
+    fn mutate_row_fraction_is_deterministic_and_valid() {
+        let mut rng = Pcg32::seeded(8);
+        let a = random_csr(&mut rng, 70, 60, 0.05);
+        let m1 = mutate_row_fraction(&a, 0.1, 4);
+        let m2 = mutate_row_fraction(&a, 0.1, 4);
+        assert_eq!(m1, m2, "same seed must give the same mutation");
+        assert!(m1.validate().is_ok());
+        assert_ne!(m1.structure_hash(), a.structure_hash());
+        let changed = (0..a.n_rows)
+            .filter(|&r| a.row_structure_hashes()[r] != m1.row_structure_hashes()[r])
+            .count();
+        assert_eq!(changed, 7, "exactly ceil(0.1·70) rows must change");
+        assert_eq!(mutate_row_fraction(&a, 0.0, 4), a, "fraction 0 is the identity");
+    }
+}

@@ -14,6 +14,7 @@
 
 pub mod engine;
 pub mod grouping;
+pub mod incremental;
 pub mod plan;
 pub mod planstore;
 pub mod sort;
@@ -28,7 +29,10 @@ pub use grouping::{
     select_accumulator, select_symbolic, AccumKind, Grouping, RowKernel, Strategy, SymbolicKind,
     DEFAULT_SPA_THRESHOLD, GROUP_SPECS,
 };
-pub use plan::{pair_key, pair_key_from_hashes, PlannedProduct};
+pub use incremental::{
+    delta_patch, mutate_row_fraction, DeltaOutcome, DeltaPatch, MAX_DELTA_CHAIN, REBUILD_DIRTY_FRACTION,
+};
+pub use plan::{pair_key, pair_key_from_hashes, DeltaLineage, PlannedProduct};
 pub use planstore::{
     default_plan_cache_dir, set_default_plan_cache_dir, DiskStore, GetOutcome, MemStore, PlanFileInfo,
     PlanFingerprint, PlanStore, PlanSummary, PruneReport, StoreStats, TieredStore,

@@ -46,9 +46,79 @@ pub struct PlannedProduct {
     b_shape: (usize, usize),
     a_hash: u64,
     b_hash: u64,
+    /// Per-row structure hashes of the operands at plan time
+    /// ([`Csr::row_structure_hashes`]) — what the incremental replanner
+    /// diffs against a mutated operand to find the dirty rows.
+    a_row_hashes: Vec<u64>,
+    b_row_hashes: Vec<u64>,
+    /// `None` for a cold (full-symbolic) plan; `Some` when this plan was
+    /// produced by patching an earlier plan in place — the lineage is
+    /// what keeps the fingerprint chain honest across the store tiers.
+    delta: Option<DeltaLineage>,
     /// Wall time spent building the plan (`grouping_s` + `symbolic_s`;
     /// `numeric_s` stays 0 — fills report their own time).
     pub plan_times: PhaseTimes,
+}
+
+/// Provenance of a delta-patched plan: which cold plan it descends
+/// from, how many patches deep, and an order-sensitive digest of every
+/// applied dirty set. A patched plan's *identity* (its `a_hash`/
+/// `b_hash`, hence its store key) is that of the mutated operands it
+/// now serves; the lineage is the audit trail the plan store validates
+/// so a stale or forged chain degrades to a full replan, never a wrong
+/// answer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DeltaLineage {
+    /// `a_hash` of the root cold plan this chain grew from.
+    pub base_a_hash: u64,
+    /// `b_hash` of the root cold plan.
+    pub base_b_hash: u64,
+    /// Number of patches applied since the cold plan (≥ 1).
+    pub chain_len: u32,
+    /// Digest the chain carried *before* this patch: the root's
+    /// [`pair_key_from_hashes`] for the first patch, the previous
+    /// lineage's `digest` afterwards. Stored so validators can recompute
+    /// `digest` without replaying the mutation history.
+    pub prev_digest: u64,
+    /// Ordered fold over every applied delta:
+    /// `digest = fnv1a_seeded(prev_digest, encode(lineage fields,
+    /// patched identity, patched row hashes))` — see [`chain_digest`].
+    /// Order-sensitive (each step seeds from the last) and verifiable
+    /// from the plan's own content, so both store tiers can reject a
+    /// forged or bit-damaged chain as stale.
+    pub digest: u64,
+}
+
+impl DeltaLineage {
+    /// The digest this lineage must carry to be coherent with a plan
+    /// whose identity is `(a_hash, b_hash)` and whose per-row hashes are
+    /// `(a_rows, b_rows)` — anything else marks the chain stale.
+    pub(crate) fn expected_digest(&self, a_hash: u64, b_hash: u64, a_rows: &[u64], b_rows: &[u64]) -> u64 {
+        chain_digest(self.prev_digest, self.base_a_hash, self.base_b_hash, self.chain_len, a_hash, b_hash, a_rows, b_rows)
+    }
+}
+
+/// One step of the delta-digest fold (see [`DeltaLineage::digest`]).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn chain_digest(
+    prev: u64,
+    base_a_hash: u64,
+    base_b_hash: u64,
+    chain_len: u32,
+    a_hash: u64,
+    b_hash: u64,
+    a_rows: &[u64],
+    b_rows: &[u64],
+) -> u64 {
+    let mut w = crate::util::serial::Writer::new();
+    w.put_u64(base_a_hash);
+    w.put_u64(base_b_hash);
+    w.put_u32(chain_len);
+    w.put_u64(a_hash);
+    w.put_u64(b_hash);
+    w.put_u64_slice(a_rows);
+    w.put_u64_slice(b_rows);
+    crate::util::serial::fnv1a_seeded(prev, w.bytes())
 }
 
 impl PlannedProduct {
@@ -78,6 +148,9 @@ impl PlannedProduct {
             b_shape: (b.n_rows, b.n_cols),
             a_hash,
             b_hash,
+            a_row_hashes: a.row_structure_hashes().to_vec(),
+            b_row_hashes: b.row_structure_hashes().to_vec(),
+            delta: None,
             plan_times,
         }
     }
@@ -94,8 +167,78 @@ impl PlannedProduct {
         b_shape: (usize, usize),
         a_hash: u64,
         b_hash: u64,
+        a_row_hashes: Vec<u64>,
+        b_row_hashes: Vec<u64>,
+        delta: Option<DeltaLineage>,
     ) -> PlannedProduct {
-        PlannedProduct { plan, a_shape, b_shape, a_hash, b_hash, plan_times: PhaseTimes::default() }
+        PlannedProduct {
+            plan,
+            a_shape,
+            b_shape,
+            a_hash,
+            b_hash,
+            a_row_hashes,
+            b_row_hashes,
+            delta,
+            plan_times: PhaseTimes::default(),
+        }
+    }
+
+    /// Assemble a delta-patched plan (the incremental replanner's
+    /// constructor): the patched `SymbolicPlan`, the mutated operands'
+    /// whole-structure and per-row hashes, and the extended lineage.
+    /// `plan_times` carries only the patch's own symbolic seconds.
+    pub(crate) fn from_patch(
+        plan: SymbolicPlan,
+        a: &Csr,
+        b: &Csr,
+        a_hash: u64,
+        b_hash: u64,
+        delta: DeltaLineage,
+        plan_times: PhaseTimes,
+    ) -> PlannedProduct {
+        PlannedProduct {
+            plan,
+            a_shape: (a.n_rows, a.n_cols),
+            b_shape: (b.n_rows, b.n_cols),
+            a_hash,
+            b_hash,
+            a_row_hashes: a.row_structure_hashes().to_vec(),
+            b_row_hashes: b.row_structure_hashes().to_vec(),
+            delta: Some(delta),
+            plan_times,
+        }
+    }
+
+    /// Per-row structure hashes of operand A at plan time.
+    pub(crate) fn a_row_hashes(&self) -> &[u64] {
+        &self.a_row_hashes
+    }
+
+    /// Per-row structure hashes of operand B at plan time.
+    pub(crate) fn b_row_hashes(&self) -> &[u64] {
+        &self.b_row_hashes
+    }
+
+    /// Delta lineage, if this plan was produced by incremental patching
+    /// (`None` for cold full-symbolic plans).
+    pub fn delta(&self) -> Option<&DeltaLineage> {
+        self.delta.as_ref()
+    }
+
+    /// Whether the delta lineage (if any) is internally coherent: chain
+    /// length within the rebuild threshold and the digest reproducible
+    /// from the plan's own identity and row hashes. Cold plans are
+    /// trivially coherent. Both store tiers gate on this so a stale,
+    /// truncated, or forged chain degrades to a silent full replan.
+    pub(crate) fn lineage_is_coherent(&self) -> bool {
+        match &self.delta {
+            None => true,
+            Some(d) => {
+                (1..=super::incremental::MAX_DELTA_CHAIN).contains(&d.chain_len)
+                    && d.digest == d.expected_digest(self.a_hash, self.b_hash, &self.a_row_hashes, &self.b_row_hashes)
+            }
+        }
     }
 
     /// Shape of operand A at plan time (serialization accessor).

@@ -2,7 +2,7 @@
 //! keyed by the operand pair's structure fingerprint, so a plan built
 //! by one process serves the numeric-only fill path of the next.
 //!
-//! # Format (`SAPL` v1, little-endian, see `util/serial.rs`)
+//! # Format (`SAPL` v2, little-endian, see `util/serial.rs`)
 //!
 //! | field | type | notes |
 //! |-------|------|-------|
@@ -16,7 +16,13 @@
 //! | accum | u8-slice | per-row [`AccumKind`] ordinals |
 //! | symbolic | u8-slice | per-row [`SymbolicKind`] ordinals |
 //! | bins | u64 count, then per bin: group u8, kind u8, symbolic u8, weight u64, rows u32-slice | the numeric work list |
+//! | a_row_hashes, b_row_hashes | 2 × u64-slice | per-row structure hashes (v2: the incremental replanner's diff baseline) |
+//! | delta flag | u8 | 0 = cold plan, 1 = a lineage record follows |
+//! | lineage | base_a_hash u64, base_b_hash u64, chain_len u32, prev_digest u64, digest u64 | present iff flag = 1 ([`crate::spgemm::hash::DeltaLineage`]) |
 //! | checksum | u64 | FNV-1a of every preceding byte |
+//!
+//! v1 files (no row hashes, no lineage) read as a version mismatch —
+//! a clean miss that replans and rewrites the entry in v2.
 //!
 //! # Validation ladder (any failure ⇒ silent miss + replan, never a panic)
 //!
@@ -31,8 +37,15 @@
 //!    selection is baked into the plan — a file written under a
 //!    different `--spa-threshold` must not override the current run's
 //!    configuration) ⇒ [`DiskLoad::Stale`];
-//! 4. **structural sanity** — truncated payload, out-of-range kind
-//!    ordinals, non-monotonic `rpt`, row ids ≥ `n_rows`
+//! 4. **delta-chain coherence** — a lineage-carrying plan whose chain
+//!    is over-long or whose digest does not reproduce from the plan's
+//!    own identity and row hashes
+//!    ([`PlannedProduct::lineage_is_coherent`]) ⇒ [`DiskLoad::Stale`]
+//!    (the chain is unverifiable, so the entry degrades to a full
+//!    replan that rewrites it with a fresh, lineage-free plan);
+//! 5. **structural sanity** — truncated payload, out-of-range kind
+//!    ordinals, non-monotonic `rpt`, row ids ≥ `n_rows`, row-hash
+//!    vectors that disagree with the shapes
 //!    ⇒ [`DiskLoad::Corrupt`]. This keeps a decoded plan safe to hand
 //!    to `numeric_bin_into`, whose release build skips re-validation.
 //!
@@ -43,7 +56,7 @@
 use super::{PlanFingerprint, PlanStore, StoreStats};
 use crate::spgemm::hash::engine::{NumericBin, SymbolicPlan};
 use crate::spgemm::hash::grouping::{AccumKind, Grouping, SymbolicKind};
-use crate::spgemm::hash::plan::PlannedProduct;
+use crate::spgemm::hash::plan::{DeltaLineage, PlannedProduct};
 use crate::util::error::{anyhow, bail, ensure, Result};
 use crate::util::serial::{fnv1a, Reader, Writer};
 use std::path::{Path, PathBuf};
@@ -53,8 +66,9 @@ use std::sync::Arc;
 pub const MAGIC: [u8; 4] = *b"SAPL";
 /// Current revision of the on-disk layout. Bump on any layout change;
 /// old files then read as a clean miss and are rewritten on the next
-/// replan.
-pub const FORMAT_VERSION: u32 = 1;
+/// replan. v2 added the per-row structure hashes and the optional
+/// delta lineage record.
+pub const FORMAT_VERSION: u32 = 2;
 
 /// Outcome of probing the disk tier for one fingerprint.
 pub enum DiskLoad {
@@ -118,6 +132,11 @@ impl DiskStore {
         match decode_plan(&bytes) {
             Ok(p) if !fp.matches(&p) => DiskLoad::Stale,
             Ok(p) if p.symbolic_plan().spa_threshold.to_bits() != configured.to_bits() => DiskLoad::Stale,
+            // A delta-patched plan whose chain cannot be re-verified
+            // from its own content (forged/mismatched digest, over-long
+            // chain) is unusable-but-well-formed: stale, so the replan
+            // rewrites the entry with a fresh lineage-free plan.
+            Ok(p) if !p.lineage_is_coherent() => DiskLoad::Stale,
             Ok(p) => DiskLoad::Hit(Arc::new(p)),
             Err(_) => DiskLoad::Corrupt,
         }
@@ -177,6 +196,8 @@ pub struct PlanSummary {
     pub bins: usize,
     /// The SPA threshold the plan's row kernels were selected under.
     pub spa_threshold: f64,
+    /// Length of the plan's delta-patch chain (0 for a cold plan).
+    pub delta_chain: u32,
 }
 
 /// What one [`DiskStore::prune`] sweep did.
@@ -236,6 +257,7 @@ impl DiskStore {
             nnz: p.nnz(),
             bins: sp.bins.len(),
             spa_threshold: sp.spa_threshold,
+            delta_chain: p.delta().map(|d| d.chain_len).unwrap_or(0),
         })
     }
 
@@ -360,6 +382,19 @@ pub(crate) fn encode_plan_with_version(plan: &PlannedProduct, version: u32) -> V
         w.put_u64(bin.weight);
         w.put_u32_slice(&bin.rows);
     }
+    w.put_u64_slice(plan.a_row_hashes());
+    w.put_u64_slice(plan.b_row_hashes());
+    match plan.delta() {
+        None => w.put_u8(0),
+        Some(d) => {
+            w.put_u8(1);
+            w.put_u64(d.base_a_hash);
+            w.put_u64(d.base_b_hash);
+            w.put_u32(d.chain_len);
+            w.put_u64(d.prev_digest);
+            w.put_u64(d.digest);
+        }
+    }
     let sum = fnv1a(w.bytes());
     w.put_u64(sum);
     w.into_bytes()
@@ -415,12 +450,27 @@ pub(crate) fn decode_plan(bytes: &[u8]) -> Result<PlannedProduct> {
             weight,
         });
     }
-    ensure!(r.is_done(), "trailing bytes after the bin list");
+    let a_row_hashes = r.get_u64_vec()?;
+    ensure!(a_row_hashes.len() == a_shape.0, "A row-hash len {} != A rows {}", a_row_hashes.len(), a_shape.0);
+    let b_row_hashes = r.get_u64_vec()?;
+    ensure!(b_row_hashes.len() == b_shape.0, "B row-hash len {} != B rows {}", b_row_hashes.len(), b_shape.0);
+    let delta = match r.get_u8()? {
+        0 => None,
+        1 => Some(DeltaLineage {
+            base_a_hash: r.get_u64()?,
+            base_b_hash: r.get_u64()?,
+            chain_len: r.get_u32()?,
+            prev_digest: r.get_u64()?,
+            digest: r.get_u64()?,
+        }),
+        flag => bail!("delta flag {flag} out of range"),
+    };
+    ensure!(r.is_done(), "trailing bytes after the delta record");
     // The Table-I grouping is a pure function of the IP bounds — rebuilt
     // rather than stored (smaller files, one representation to corrupt).
     let grouping = Grouping::build(&ip);
     let plan = SymbolicPlan { ip, grouping, rpt, accum, symbolic, bins, spa_threshold };
-    Ok(PlannedProduct::from_parts(plan, a_shape, b_shape, a_hash, b_hash))
+    Ok(PlannedProduct::from_parts(plan, a_shape, b_shape, a_hash, b_hash, a_row_hashes, b_row_hashes, delta))
 }
 
 /// Decode a per-row kind array from its ordinal bytes, rejecting
@@ -571,6 +621,45 @@ mod tests {
         // Pruning to zero empties the directory of plans.
         let r = s.prune(0);
         assert_eq!((r.kept, r.bytes_after), (0, 0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn delta_patched_plan_roundtrips_and_forged_digest_is_stale() {
+        use crate::spgemm::hash::engine::EngineConfig;
+        use crate::spgemm::hash::incremental::{delta_patch, mutate_row_fraction, DeltaOutcome};
+        let dir = unique_dir("delta");
+        let mut s = DiskStore::new(&dir);
+        let (a, base) = random_plan(17, 128);
+        let a2 = mutate_row_fraction(&a, 0.01, 99);
+        let patched = match delta_patch(&base, &a2, &a2, &EngineConfig::default()) {
+            DeltaOutcome::Patched(p) => p.plan,
+            DeltaOutcome::Rebuild(why) => panic!("small mutation must patch, got rebuild: {why}"),
+        };
+        assert!(patched.delta().is_some());
+        let fp = PlanFingerprint::of(&a2, &a2);
+        s.put(Arc::new(patched));
+        let q = s.get(&fp).expect("delta-patched plan must round-trip through disk");
+        let d = q.delta().expect("lineage must survive serialization");
+        assert_eq!(d.chain_len, 1);
+        assert!(q.lineage_is_coherent());
+        assert_eq!(q.fill(&a2, &a2), crate::spgemm::hash::multiply(&a2, &a2));
+        // Forge the lineage digest in place and re-seal the checksum:
+        // the file is well-formed but its chain no longer re-verifies,
+        // so it must read as stale (silent full replan), not corrupt.
+        let path = s.path_for(fp.key());
+        let mut bytes = std::fs::read(&path).unwrap();
+        let body_len = bytes.len() - 8;
+        bytes[body_len - 8] ^= 0x01; // digest is the last lineage field
+        let sum = fnv1a(&bytes[..body_len]).to_le_bytes();
+        bytes[body_len..].copy_from_slice(&sum);
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(matches!(s.load(&fp), DiskLoad::Stale), "forged digest must be stale, not corrupt");
+        assert!(s.get(&fp).is_none());
+        // A full replan heals the entry with a lineage-free plan.
+        s.put(Arc::new(PlannedProduct::plan(&a2, &a2)));
+        let healed = s.get(&fp).expect("rewritten entry must load");
+        assert!(healed.delta().is_none());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -56,6 +56,13 @@ impl MemStore {
         evicted
     }
 
+    /// Raw key probe without fingerprint validation or stats — the
+    /// delta planner's predecessor fetch (the caller re-derives validity
+    /// from the plan's own shapes and row hashes).
+    pub(crate) fn peek_key(&self, key: u64) -> Option<Arc<PlannedProduct>> {
+        self.map.get(&key).map(Arc::clone)
+    }
+
     /// Read-only clone of the map for lock-free planner-thread lookups
     /// (`Arc` clones — plans are shared, not copied).
     pub(crate) fn snapshot_map(&self) -> HashMap<u64, Arc<PlannedProduct>> {

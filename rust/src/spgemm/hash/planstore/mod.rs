@@ -103,10 +103,20 @@ pub struct StoreStats {
     pub evictions: u64,
     pub corrupt: u64,
     pub stale: u64,
+    /// Plans produced by patching a cached predecessor
+    /// ([`crate::spgemm::hash::incremental`]) instead of a full replan.
+    /// A patch is **neither a hit nor a miss**: the store did not serve
+    /// the requested fingerprint (so counting it a hit would inflate
+    /// `hits()`), but real — partial — symbolic work ran (so counting
+    /// it a miss would double-charge it against the lookup that already
+    /// recorded the miss). It is excluded from [`StoreStats::hits`] and
+    /// from every consumer hit rate, pinned by regression tests.
+    pub delta_patches: u64,
 }
 
 impl StoreStats {
-    /// Hits across all tiers.
+    /// Hits across all tiers (`delta_patches` excluded — a patch served
+    /// new symbolic work, not a cached plan).
     pub fn hits(&self) -> u64 {
         self.mem_hits + self.disk_hits
     }
@@ -120,6 +130,7 @@ impl StoreStats {
         self.evictions += o.evictions;
         self.corrupt += o.corrupt;
         self.stale += o.stale;
+        self.delta_patches += o.delta_patches;
     }
 }
 
@@ -264,7 +275,15 @@ impl TieredStore {
     /// Insert a plan into the memory tier, writing through to disk only
     /// when `to_disk` (freshly built plans persist; plans just loaded
     /// *from* disk are promoted without being rewritten).
+    ///
+    /// A delta-patched plan whose lineage does not validate
+    /// ([`PlannedProduct::lineage_is_coherent`]) is refused outright —
+    /// the caller keeps its (still correct) plan, but an unverifiable
+    /// chain never enters either tier.
     pub fn admit(&self, plan: Arc<PlannedProduct>, to_disk: bool) {
+        if !plan.lineage_is_coherent() {
+            return;
+        }
         let mut g = self.lock();
         if to_disk {
             if let Some(disk) = &g.disk {
@@ -283,6 +302,27 @@ impl TieredStore {
     /// reports what happened here) into this store's [`StoreStats`].
     pub fn tally(&self, outcomes: &StoreStats) {
         self.lock().stats.merge(outcomes);
+    }
+
+    /// Record one delta patch by *reclassifying* the miss the preceding
+    /// lookup counted (see [`StoreStats::delta_patches`]): the caller
+    /// probed this store, missed, and then patched a predecessor plan
+    /// instead of fully replanning — so the product ends up as neither
+    /// a hit nor a miss. Callers that resolved against a
+    /// [`TieredStore::snapshot`] (no miss was counted here) report
+    /// patches through [`TieredStore::tally`] instead.
+    pub fn note_delta_patch(&self) {
+        let mut g = self.lock();
+        g.stats.misses = g.stats.misses.saturating_sub(1);
+        g.stats.delta_patches += 1;
+    }
+
+    /// Probe the memory tier by raw store key, with **no stats side
+    /// effects** — the delta planner fetching a *predecessor* plan for
+    /// an operand pair that already missed is bookkeeping, not a second
+    /// cache query.
+    pub fn peek_key(&self, key: u64) -> Option<Arc<PlannedProduct>> {
+        self.lock().mem.peek_key(key)
     }
 
     /// Immutable view for a planner thread: an `Arc`-cloned copy of the
@@ -344,6 +384,12 @@ impl StoreSnapshot {
             Some(DiskLoad::Stale) => (None, GetOutcome::Miss { corrupt: false, stale: true }),
             Some(DiskLoad::Absent) | None => (None, GetOutcome::Miss { corrupt: false, stale: false }),
         }
+    }
+
+    /// Raw memory-tier key probe (the planner thread's predecessor
+    /// fetch for the delta path) — pure, like [`StoreSnapshot::lookup`].
+    pub fn peek_key(&self, key: u64) -> Option<Arc<PlannedProduct>> {
+        self.mem.get(&key).map(Arc::clone)
     }
 }
 
@@ -470,6 +516,71 @@ mod tests {
         let b = random_square(9, 64);
         let _ = t.get_traced(&PlanFingerprint::of(&b, &b));
         assert_eq!((s.stats().mem_hits, s.stats().misses), (1, 1));
+    }
+
+    /// Satellite regression: a delta-patched plan counts as **neither**
+    /// a `mem_hit` nor a `miss` in [`StoreStats`] — `note_delta_patch`
+    /// reclassifies the lookup's miss, `hits()` excludes the counter,
+    /// `merge` carries it, and `admit` refuses a chain that does not
+    /// re-verify from the plan's own content.
+    #[test]
+    fn delta_patches_are_neither_hits_nor_misses() {
+        use crate::spgemm::hash::engine::{EngineConfig, SymbolicPlan};
+        use crate::spgemm::hash::grouping::Grouping;
+        use crate::spgemm::hash::{delta_patch, mutate_row_fraction, DeltaOutcome};
+        let a = random_square(10, 128);
+        let s = TieredStore::mem_only();
+        let base = Arc::new(PlannedProduct::plan(&a, &a));
+        s.admit(Arc::clone(&base), false);
+        let a2 = mutate_row_fraction(&a, 0.02, 3);
+        let fp2 = PlanFingerprint::of(&a2, &a2);
+        // The consumer's sequence: probe (miss), patch, reclassify, admit.
+        let (found, _) = s.get_traced(&fp2);
+        assert!(found.is_none());
+        assert_eq!(s.stats().misses, 1);
+        let patched = match delta_patch(&base, &a2, &a2, &EngineConfig::default()) {
+            DeltaOutcome::Patched(p) => Arc::new(p.plan),
+            DeltaOutcome::Rebuild(why) => panic!("small mutation must patch, got rebuild: {why}"),
+        };
+        s.note_delta_patch();
+        s.admit(Arc::clone(&patched), false);
+        let st = s.stats();
+        assert_eq!((st.mem_hits, st.misses, st.delta_patches), (0, 0, 1), "a patch is neither hit nor miss");
+        assert_eq!(st.hits(), 0, "hits() must exclude delta patches");
+        let mut folded = StoreStats::default();
+        folded.merge(&st);
+        assert_eq!(folded.delta_patches, 1, "merge must carry the counter");
+        // The admitted patch is a normal citizen afterwards.
+        assert!(s.get_traced(&fp2).0.is_some());
+        assert_eq!(s.stats().hits(), 1);
+        // An unverifiable chain is refused by admit: same plan content,
+        // one flipped digest bit.
+        let sp = patched.symbolic_plan();
+        let forged_sp = SymbolicPlan {
+            ip: sp.ip.clone(),
+            grouping: Grouping::build(&sp.ip),
+            rpt: sp.rpt.clone(),
+            accum: sp.accum.clone(),
+            symbolic: sp.symbolic.clone(),
+            bins: sp.bins.clone(),
+            spa_threshold: sp.spa_threshold,
+        };
+        let mut lineage = *patched.delta().expect("patched plan carries lineage");
+        lineage.digest ^= 1;
+        let forged = PlannedProduct::from_parts(
+            forged_sp,
+            patched.a_shape(),
+            patched.b_shape(),
+            patched.a_hash(),
+            patched.b_hash(),
+            patched.a_row_hashes().to_vec(),
+            patched.b_row_hashes().to_vec(),
+            Some(lineage),
+        );
+        assert!(!forged.lineage_is_coherent());
+        s.admit(Arc::new(forged), false);
+        let served = s.get_traced(&fp2).0.expect("the coherent plan must still be served");
+        assert!(served.lineage_is_coherent(), "admit must refuse an unverifiable chain");
     }
 
     #[test]

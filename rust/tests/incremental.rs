@@ -1,0 +1,298 @@
+//! Differential acceptance harness for incremental dirty-row
+//! replanning (`spgemm::hash::incremental`, `DESIGN.md` §Incremental
+//! replanning):
+//!
+//! - randomized mutation sequences — edge inserts, edge deletes,
+//!   reweights, whole-row clears, and no-op structural rewrites — over
+//!   RMAT and structured generators, where at every step the
+//!   delta-patched plan and its fill must be **bit-identical** to a
+//!   cold plan + multiply of the mutated operands: same `rpt`, same
+//!   per-row kernel kinds, same bin membership and order;
+//! - the acceptance bound: a 1 %-dirty mutation replans symbolic work
+//!   for ≤ 5 % of the rows, asserted on `DeltaPatch::dirty_rows` and on
+//!   the executor / batch `delta_rows` counters that surface it.
+
+use spgemm_aia::coordinator::batch::BatchExecutor;
+use spgemm_aia::coordinator::executor::{SpgemmExecutor, Variant};
+use spgemm_aia::gen::{rmat, structured, RmatParams};
+use spgemm_aia::sparse::Csr;
+use spgemm_aia::spgemm::hash::{
+    self, delta_patch, mutate_row_fraction, DeltaOutcome, EngineConfig, PlannedProduct, TieredStore,
+};
+use spgemm_aia::util::Pcg32;
+
+/// Full structural equality of two plans: everything the numeric phase
+/// consumes, down to bin membership order. `PlannedProduct` exposes no
+/// `==` on purpose — this spells out exactly which facts must agree.
+fn assert_plans_identical(tag: &str, got: &PlannedProduct, want: &PlannedProduct) {
+    let (g, w) = (got.symbolic_plan(), want.symbolic_plan());
+    assert_eq!(g.ip, w.ip, "{tag}: IP bounds");
+    assert_eq!(g.rpt, w.rpt, "{tag}: exact row pointers");
+    assert_eq!(g.accum, w.accum, "{tag}: accumulator kinds");
+    assert_eq!(g.symbolic, w.symbolic, "{tag}: symbolic counting kinds");
+    assert_eq!(g.spa_threshold, w.spa_threshold, "{tag}: SPA threshold");
+    assert_eq!(g.grouping.group_of, w.grouping.group_of, "{tag}: group assignment");
+    assert_eq!(g.grouping.map, w.grouping.map, "{tag}: group sort order");
+    assert_eq!(g.grouping.ranges, w.grouping.ranges, "{tag}: group ranges");
+    assert_eq!(g.bins.len(), w.bins.len(), "{tag}: bin count");
+    for (i, (x, y)) in g.bins.iter().zip(&w.bins).enumerate() {
+        assert_eq!(x.group, y.group, "{tag}: bin {i} group");
+        assert_eq!(x.kind, y.kind, "{tag}: bin {i} accumulator");
+        assert_eq!(x.symbolic_kind, y.symbolic_kind, "{tag}: bin {i} symbolic kind");
+        assert_eq!(x.rows, y.rows, "{tag}: bin {i} membership/order");
+        assert_eq!(x.weight, y.weight, "{tag}: bin {i} weight");
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Mutation {
+    /// Insert a few edges at random positions (skip if already present).
+    InsertEdges,
+    /// Delete a few random existing edges.
+    DeleteEdges,
+    /// Scale a few values — structure unchanged, plan must plain-reuse.
+    Reweight,
+    /// Clear one whole row.
+    ClearRow,
+    /// Rebuild the matrix from its own triplets — byte-identical
+    /// structure through a fresh constructor (fresh hash memos), the
+    /// plan must plain-reuse.
+    NoopRewrite,
+}
+
+const SEQUENCE: [Mutation; 10] = [
+    Mutation::InsertEdges,
+    Mutation::DeleteEdges,
+    Mutation::Reweight,
+    Mutation::ClearRow,
+    Mutation::NoopRewrite,
+    Mutation::InsertEdges,
+    Mutation::ClearRow,
+    Mutation::DeleteEdges,
+    Mutation::InsertEdges,
+    Mutation::Reweight,
+];
+
+fn to_rows(m: &Csr) -> Vec<Vec<(u32, f64)>> {
+    (0..m.n_rows)
+        .map(|r| {
+            let (c, v) = m.row(r);
+            c.iter().copied().zip(v.iter().copied()).collect()
+        })
+        .collect()
+}
+
+fn from_rows(n_cols: usize, rows: Vec<Vec<(u32, f64)>>) -> Csr {
+    let n = rows.len();
+    let mut rpt = Vec::with_capacity(n + 1);
+    rpt.push(0usize);
+    let mut col = Vec::new();
+    let mut val = Vec::new();
+    for row in rows {
+        for (c, v) in row {
+            col.push(c);
+            val.push(v);
+        }
+        rpt.push(col.len());
+    }
+    Csr::new(n, n_cols, rpt, col, val).expect("mutated matrix must stay a valid CSR")
+}
+
+fn apply(m: &Csr, kind: Mutation, rng: &mut Pcg32) -> Csr {
+    let mut rows = to_rows(m);
+    let n = rows.len();
+    match kind {
+        Mutation::InsertEdges => {
+            for _ in 0..3 {
+                let r = rng.below_usize(n);
+                let c = rng.below_usize(m.n_cols) as u32;
+                let row = &mut rows[r];
+                if let Err(pos) = row.binary_search_by_key(&c, |e| e.0) {
+                    row.insert(pos, (c, rng.f64_range(0.5, 1.5)));
+                }
+            }
+        }
+        Mutation::DeleteEdges => {
+            for _ in 0..3 {
+                let r = rng.below_usize(n);
+                if !rows[r].is_empty() {
+                    let i = rng.below_usize(rows[r].len());
+                    rows[r].remove(i);
+                }
+            }
+        }
+        Mutation::Reweight => {
+            for _ in 0..5 {
+                let r = rng.below_usize(n);
+                if !rows[r].is_empty() {
+                    let i = rng.below_usize(rows[r].len());
+                    rows[r][i].1 *= 1.5;
+                }
+            }
+        }
+        Mutation::ClearRow => {
+            let r = rng.below_usize(n);
+            rows[r].clear();
+        }
+        Mutation::NoopRewrite => {}
+    }
+    from_rows(m.n_cols, rows)
+}
+
+/// The tentpole criterion: over a randomized mutation sequence, every
+/// structural step delta-patches (or openly rebuilds — never silently
+/// degrades) and the patched plan + fill are bit-identical to a cold
+/// plan + multiply; every non-structural step is a plain plan reuse
+/// whose fill still matches a cold multiply of the new values.
+#[test]
+fn mutation_sequences_patch_bit_identically_across_generators() {
+    let mut rng = Pcg32::seeded(2025);
+    let mats: Vec<(&str, Csr)> = vec![
+        ("rmat-web", rmat(160, 1100, RmatParams::web(), &mut rng)),
+        ("rmat-uniform", rmat(192, 1300, RmatParams::uniform(), &mut rng)),
+        ("circuit", structured::circuit(144, &mut rng)),
+        ("economics", structured::economics(144, &mut rng)),
+        ("protein", structured::protein_contact(112, 6, &mut rng)),
+    ];
+    for (name, base) in mats {
+        let b = base.clone(); // fixed right operand: A_t · B with A drifting
+        let mut a = base;
+        let mut plan = PlannedProduct::plan(&a, &b);
+        let (mut patched, mut reused, mut rebuilt) = (0usize, 0usize, 0usize);
+        for (step, kind) in SEQUENCE.iter().cycle().take(16).enumerate() {
+            a = apply(&a, *kind, &mut rng);
+            let tag = format!("{name} step {step} ({kind:?})");
+            let cold = PlannedProduct::plan(&a, &b);
+            if plan.matches(&a, &b) {
+                // Structure unchanged (reweight / no-op rewrite): the
+                // held plan serves the new values directly.
+                assert_plans_identical(&tag, &plan, &cold);
+                reused += 1;
+            } else {
+                match delta_patch(&plan, &a, &b, &EngineConfig::default()) {
+                    DeltaOutcome::Patched(dp) => {
+                        assert_plans_identical(&tag, &dp.plan, &cold);
+                        let d = dp.plan.delta().expect("patched plan must carry lineage");
+                        assert!(d.chain_len >= 1, "{tag}: chain length");
+                        plan = dp.plan;
+                        patched += 1;
+                    }
+                    DeltaOutcome::Rebuild(_) => {
+                        // e.g. the chain hit MAX_DELTA_CHAIN — the cold
+                        // plan re-anchors it.
+                        plan = cold;
+                        rebuilt += 1;
+                        continue;
+                    }
+                }
+            }
+            assert_eq!(
+                plan.fill(&a, &b),
+                hash::multiply(&a, &b),
+                "{tag}: fill must be bit-identical to a cold multiply"
+            );
+        }
+        assert!(patched >= 5, "{name}: structural steps must mostly patch (patched {patched}, rebuilt {rebuilt})");
+        assert!(reused >= 1, "{name}: non-structural steps must plain-reuse (reused {reused})");
+    }
+}
+
+/// Mutations must be able to change kernel decisions, not just counts:
+/// clearing a heavy row / inserting into an empty one moves rows across
+/// bins, and the patched plan tracks the membership change exactly.
+#[test]
+fn row_clears_move_rows_across_bins_bit_identically() {
+    let mut rng = Pcg32::seeded(77);
+    let a = rmat(200, 2600, RmatParams::web(), &mut rng);
+    let b = a.clone();
+    let base = PlannedProduct::plan(&a, &b);
+    // Clear the heaviest row: its bin loses a member (and possibly its
+    // group changes for feeders in A = same matrix here, b fixed).
+    let heavy = (0..a.n_rows).max_by_key(|&r| a.row_nnz(r)).unwrap();
+    let mut rows = to_rows(&a);
+    rows[heavy].clear();
+    let a2 = from_rows(a.n_cols, rows);
+    let cold = PlannedProduct::plan(&a2, &b);
+    match delta_patch(&base, &a2, &b, &EngineConfig::default()) {
+        DeltaOutcome::Patched(dp) => {
+            assert_plans_identical("heavy-row clear", &dp.plan, &cold);
+            assert_eq!(dp.plan.fill(&a2, &b), hash::multiply(&a2, &b));
+            // The cleared row's symbolic kind / grouping really changed:
+            // the old and new plans must disagree somewhere observable.
+            let (old, new) = (base.symbolic_plan(), dp.plan.symbolic_plan());
+            assert_ne!(old.ip[heavy], new.ip[heavy], "cleared row must drop its IP bound");
+            assert_eq!(new.rpt[heavy + 1] - new.rpt[heavy], 0, "cleared row has no output");
+        }
+        DeltaOutcome::Rebuild(why) => panic!("single-row clear must patch: {why}"),
+    }
+}
+
+/// The acceptance bound end to end: a 1 %-dirty mutation replans ≤ 5 %
+/// of the rows, and the executor / batch layers report that through
+/// `delta_rows` without counting the patch as a hit or a miss.
+#[test]
+fn one_percent_dirty_replans_at_most_five_percent_of_rows() {
+    let mut rng = Pcg32::seeded(17);
+    let a = rmat(1200, 9600, RmatParams::uniform(), &mut rng);
+    let b = rmat(1200, 9600, RmatParams::uniform(), &mut rng);
+    let bound = (0.05 * a.n_rows as f64) as usize;
+    let a2 = mutate_row_fraction(&a, 0.01, 41);
+
+    let base = PlannedProduct::plan(&a, &b);
+    match delta_patch(&base, &a2, &b, &EngineConfig::default()) {
+        DeltaOutcome::Patched(dp) => {
+            assert!(dp.dirty_rows <= bound, "1% dirty replanned {} rows (bound {bound})", dp.dirty_rows);
+            assert_plans_identical("1%-dirty", &dp.plan, &PlannedProduct::plan(&a2, &b));
+            assert_eq!(dp.plan.fill(&a2, &b), hash::multiply(&a2, &b));
+        }
+        DeltaOutcome::Rebuild(why) => panic!("1%-dirty mutation must patch: {why}"),
+    }
+
+    // Application entry point: the displaced slot plan is the baseline.
+    let mut ex = SpgemmExecutor::fast(Variant::Hash);
+    ex.attach_plan_store(TieredStore::mem_only());
+    let mut slot = None;
+    ex.multiply_reusing(&mut slot, &a, &b);
+    let c = ex.multiply_reusing(&mut slot, &a2, &b);
+    assert_eq!(c, hash::multiply(&a2, &b));
+    assert_eq!((ex.plan_deltas, ex.plan_misses), (1, 1), "one cold plan, one delta patch");
+    assert!(ex.delta_rows <= bound, "executor delta_rows {} (bound {bound})", ex.delta_rows);
+    assert!(ex.delta_plan_s > 0.0, "the patch's own seconds are charged");
+    let ss = ex.plan_store_stats().expect("store attached");
+    assert_eq!((ss.delta_patches, ss.hits(), ss.misses), (1, 0, 1), "a patch is neither hit nor miss");
+
+    // Batch entry point: the report carries the same counters for
+    // `repro planreuse` and the bench harness.
+    let mut bx = BatchExecutor::with_store(2, TieredStore::mem_only());
+    bx.execute_batch(&[(&a, &b)]);
+    bx.execute_batch(&[(&a2, &b)]);
+    let r = bx.last_batch.as_ref().expect("batch ran");
+    assert_eq!(r.delta_patches, 1, "the second batch must patch, not replan");
+    assert!(r.delta_rows <= bound, "batch delta_rows {} (bound {bound})", r.delta_rows);
+    assert!(r.symbolic_delta_s >= 0.0 && r.delta_plan_s >= r.symbolic_delta_s);
+    assert_eq!(bx.stats.delta_patches, 1);
+    assert_eq!(bx.stats.plans_built, 1, "only the first batch built a plan from scratch");
+    assert_eq!(bx.store_stats().delta_patches, 1);
+}
+
+/// Chained drift through the executor: repeated small mutations keep
+/// patching until the lineage cap forces one clean re-anchor, and every
+/// output along the way is bit-identical to a cold multiply.
+#[test]
+fn executor_chain_survives_repeated_drift() {
+    let mut rng = Pcg32::seeded(3);
+    let mut a = rmat(256, 1800, RmatParams::uniform(), &mut rng);
+    let b = a.clone();
+    let mut ex = SpgemmExecutor::fast(Variant::Hash);
+    ex.attach_plan_store(TieredStore::mem_only());
+    let mut slot = None;
+    ex.multiply_reusing(&mut slot, &a, &b);
+    for step in 0..12u64 {
+        a = mutate_row_fraction(&a, 0.02, 500 + step);
+        let c = ex.multiply_reusing(&mut slot, &a, &b);
+        assert_eq!(c, hash::multiply(&a, &b), "step {step}: drifted output must stay exact");
+    }
+    assert!(ex.plan_deltas >= 8, "most drift steps must patch (got {})", ex.plan_deltas);
+    assert!(ex.plan_misses >= 2, "the chain cap must force at least one re-anchor");
+    assert_eq!(ex.plan_deltas + ex.plan_misses, 13, "every job is either a patch or a full plan");
+}

@@ -15,7 +15,8 @@ use spgemm_aia::coordinator::executor::{SpgemmExecutor, Variant};
 use spgemm_aia::gen::{rmat, structured, RmatParams};
 use spgemm_aia::sparse::Csr;
 use spgemm_aia::spgemm::hash::planstore::{DiskStore, PlanFingerprint, PlanStore, TieredStore};
-use spgemm_aia::spgemm::hash::{self, PlannedProduct};
+use spgemm_aia::spgemm::hash::{self, DeltaOutcome, PlannedProduct};
+use spgemm_aia::util::serial::fnv1a;
 use spgemm_aia::util::Pcg32;
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -255,6 +256,139 @@ fn batch_pipeline_mixes_disk_hits_and_fresh_plans() {
     let mut ex2 = BatchExecutor::with_store(4, TieredStore::with_disk(&dir));
     ex2.execute_batch(&[(&a, &a), (&b, &b)]);
     assert_eq!((ex2.stats.disk_hits, ex2.stats.plans_built), (2, 0));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A delta-patched plan is a first-class store citizen: persisted by
+/// the batch path, served bit-identically to a cold process, and
+/// counted as neither hit nor miss where it was patched.
+#[test]
+fn delta_patched_plan_roundtrips_across_processes() {
+    let dir = scratch("delta-roundtrip");
+    let a = rmat_square(21, 256, 5);
+    let a2 = hash::mutate_row_fraction(&a, 0.01, 5);
+    let cold2 = hash::multiply(&a2, &a2);
+    // "Process" 1: cold plan for a, then the mutation delta-patches.
+    let mut w = BatchExecutor::with_store(2, TieredStore::with_disk(&dir));
+    w.multiply_cached(&a, &a);
+    assert_eq!(w.multiply_cached(&a2, &a2), cold2);
+    assert_eq!(w.stats.delta_patches, 1, "the 1% mutation must patch, not replan");
+    assert_eq!(w.stats.plans_built, 1, "only a's plan was built from scratch");
+    assert_eq!(w.store_stats().delta_patches, 1, "the store reclassifies the probe miss");
+    // "Process" 2: cold memory tier — the *patched* plan is served from
+    // disk, lineage intact, fill bit-identical.
+    let mut r = BatchExecutor::with_store(2, TieredStore::with_disk(&dir));
+    assert_eq!(r.multiply_cached(&a2, &a2), cold2);
+    assert_eq!((r.stats.disk_hits, r.stats.plans_built, r.stats.delta_patches), (1, 0, 0));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Persist a patched plan, then forge its lineage digest in place
+/// (re-sealing the body checksum so the file stays well-formed): the
+/// chain no longer re-verifies, so the load degrades to a *stale*
+/// silent miss — not corruption — and the replan heals the entry.
+#[test]
+fn forged_delta_digest_degrades_to_clean_replan() {
+    let dir = scratch("delta-forged");
+    let a = rmat_square(22, 256, 5);
+    let a2 = hash::mutate_row_fraction(&a, 0.01, 9);
+    let cold2 = hash::multiply(&a2, &a2);
+    let base = PlannedProduct::plan(&a, &a);
+    let patched = match hash::delta_patch(&base, &a2, &a2, &spgemm_aia::spgemm::hash::EngineConfig::default()) {
+        DeltaOutcome::Patched(p) => p.plan,
+        DeltaOutcome::Rebuild(why) => panic!("1% mutation must patch: {why}"),
+    };
+    let mut ds = DiskStore::new(&dir);
+    ds.put(Arc::new(patched));
+    let fp = PlanFingerprint::of(&a2, &a2);
+    let path = ds.path_for(fp.key());
+    let mut bytes = std::fs::read(&path).expect("patched plan persisted");
+    let body = bytes.len() - 8; // trailing FNV checksum
+    bytes[body - 8] ^= 0x01; // the digest is the last lineage field
+    let sum = fnv1a(&bytes[..body]).to_le_bytes();
+    bytes[body..].copy_from_slice(&sum);
+    std::fs::write(&path, &bytes).unwrap();
+    let mut ex = BatchExecutor::with_store(2, TieredStore::with_disk(&dir));
+    assert_eq!(ex.multiply_cached(&a2, &a2), cold2, "a forged chain must never leak into the output");
+    assert_eq!((ex.stats.disk_hits, ex.stats.plans_built), (0, 1), "stale chain is a silent miss + replan");
+    assert_eq!((ex.store_stats().stale, ex.store_stats().corrupt), (1, 0), "stale, not corrupt");
+    // The replan rewrote a lineage-free plan: the next process hits.
+    let mut ex2 = BatchExecutor::with_store(2, TieredStore::with_disk(&dir));
+    assert_eq!(ex2.multiply_cached(&a2, &a2), cold2);
+    assert_eq!((ex2.stats.disk_hits, ex2.stats.plans_built), (1, 0), "replan heals the cache");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A chain length past the rebuild threshold (forged on disk — the
+/// planner itself re-anchors before ever writing one) fails lineage
+/// validation the same way: stale, replan, heal.
+#[test]
+fn overlong_delta_chain_degrades_to_clean_replan() {
+    let dir = scratch("delta-overlong");
+    let a = rmat_square(23, 256, 5);
+    let a2 = hash::mutate_row_fraction(&a, 0.01, 11);
+    let cold2 = hash::multiply(&a2, &a2);
+    let base = PlannedProduct::plan(&a, &a);
+    let patched = match hash::delta_patch(&base, &a2, &a2, &spgemm_aia::spgemm::hash::EngineConfig::default()) {
+        DeltaOutcome::Patched(p) => p.plan,
+        DeltaOutcome::Rebuild(why) => panic!("1% mutation must patch: {why}"),
+    };
+    let mut ds = DiskStore::new(&dir);
+    ds.put(Arc::new(patched));
+    let fp = PlanFingerprint::of(&a2, &a2);
+    let path = ds.path_for(fp.key());
+    let mut bytes = std::fs::read(&path).unwrap();
+    let body = bytes.len() - 8;
+    // Lineage tail layout: … chain_len(4) prev_digest(8) digest(8).
+    let cl = body - 20;
+    bytes[cl..cl + 4].copy_from_slice(&(hash::MAX_DELTA_CHAIN + 7).to_le_bytes());
+    let sum = fnv1a(&bytes[..body]).to_le_bytes();
+    bytes[body..].copy_from_slice(&sum);
+    std::fs::write(&path, &bytes).unwrap();
+    let mut ex = BatchExecutor::with_store(2, TieredStore::with_disk(&dir));
+    assert_eq!(ex.multiply_cached(&a2, &a2), cold2);
+    assert_eq!((ex.stats.disk_hits, ex.stats.plans_built), (0, 1));
+    assert_eq!(ex.store_stats().stale, 1, "an over-long chain reads as stale");
+    let mut ex2 = BatchExecutor::with_store(2, TieredStore::with_disk(&dir));
+    assert_eq!((ex2.multiply_cached(&a2, &a2), ex2.stats.disk_hits), (cold2, 1), "healed");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A bit flip or truncation *inside the delta record itself* (without
+/// re-sealing) lands on the checksum rung below the lineage rung:
+/// corrupt, silent miss, clean replan.
+#[test]
+fn damaged_delta_record_degrades_to_clean_replan() {
+    let dir = scratch("delta-damaged");
+    let a = rmat_square(24, 256, 5);
+    let a2 = hash::mutate_row_fraction(&a, 0.01, 13);
+    let cold2 = hash::multiply(&a2, &a2);
+    let base = PlannedProduct::plan(&a, &a);
+    let patched = match hash::delta_patch(&base, &a2, &a2, &spgemm_aia::spgemm::hash::EngineConfig::default()) {
+        DeltaOutcome::Patched(p) => p.plan,
+        DeltaOutcome::Rebuild(why) => panic!("1% mutation must patch: {why}"),
+    };
+    let mut ds = DiskStore::new(&dir);
+    ds.put(Arc::new(patched));
+    let fp = PlanFingerprint::of(&a2, &a2);
+    let path = ds.path_for(fp.key());
+    let orig = std::fs::read(&path).unwrap();
+    // Bit flip mid-lineage, checksum left stale.
+    let mut flipped = orig.clone();
+    let body = flipped.len() - 8;
+    flipped[body - 12] ^= 0x40; // inside prev_digest
+    std::fs::write(&path, &flipped).unwrap();
+    let mut ex = BatchExecutor::with_store(2, TieredStore::with_disk(&dir));
+    assert_eq!(ex.multiply_cached(&a2, &a2), cold2);
+    assert_eq!((ex.stats.disk_corrupt, ex.stats.plans_built), (1, 1), "flip lands on the checksum rung");
+    // Truncation mid-lineage record.
+    std::fs::write(&path, &orig[..orig.len() - 13]).unwrap();
+    let mut ex2 = BatchExecutor::with_store(2, TieredStore::with_disk(&dir));
+    assert_eq!(ex2.multiply_cached(&a2, &a2), cold2);
+    assert_eq!((ex2.stats.disk_corrupt, ex2.stats.plans_built), (1, 1), "truncated record is corrupt");
+    // Both replans healed the entry.
+    let mut ex3 = BatchExecutor::with_store(2, TieredStore::with_disk(&dir));
+    assert_eq!((ex3.multiply_cached(&a2, &a2), ex3.stats.disk_hits), (cold2, 1));
     let _ = std::fs::remove_dir_all(&dir);
 }
 

@@ -238,6 +238,58 @@ fn stats_reconcile_with_requests_and_export_to_metrics() {
     server.shutdown();
 }
 
+/// Dynamic-graph path through the daemon: a client re-registers a
+/// mutated matrix and multiplies; the response reports the delta
+/// planner (`plan: "delta"`), the checksum matches a cold-process
+/// oracle, and the serve/client/store stats all reconcile the patch as
+/// neither hit nor miss.
+#[test]
+fn reregistered_mutated_matrix_is_served_by_delta_patch() {
+    let server = Server::start_with_store(&mem_cfg(8), TieredStore::mem_only());
+    let handle = server.handle();
+    let client = handle.new_client();
+    let a = rmat_square(8, 256, 5);
+    let a2 = hash::mutate_row_fraction(&a, 0.01, 21);
+    let oracle = hash::multiply(&a2, &a2); // cold-process oracle
+
+    let ha = handle.register(a).expect("register A").raw();
+    let warm = handle.multiply_by_handle(client, ha, ha).expect("warm multiply");
+    assert_eq!(warm.source, PlanSource::Fresh);
+
+    // Re-register the drifted structure and multiply: the worker's
+    // executor patches the displaced plan instead of replanning cold.
+    let ha2 = handle.register(a2).expect("register mutated A").raw();
+    let out = handle.multiply_by_handle(client, ha2, ha2).expect("mutated multiply");
+    assert_eq!(out.source, PlanSource::Delta, "a small structural drift must be delta-patched");
+    assert_eq!(out.source.label(), "delta", "the wire `plan` field reports the delta path");
+    assert!(!out.source.is_hit(), "a patch is not reuse — symbolic work ran for the dirty rows");
+    assert_eq!(out.c, oracle, "delta-served fill must be bit-identical to a cold multiply");
+    assert_eq!(out.checksum, csr_checksum(&oracle), "checksum must match the cold-process oracle");
+
+    let stats = handle.stats();
+    assert_eq!(stats.plan_deltas, 1);
+    assert_eq!((stats.plan_hits, stats.plan_misses, stats.disk_hits), (0, 1, 0), "neither hit nor miss");
+    assert_eq!(
+        stats.requests,
+        stats.plan_hits + stats.plan_misses + stats.disk_hits + stats.plan_deltas,
+        "every request reconciles to exactly one plan source"
+    );
+    let cs = stats.per_client.get(&client).expect("per-client stats");
+    assert_eq!((cs.requests, cs.hits, cs.misses, cs.deltas), (2, 0, 1, 1));
+    let ss = handle.store_stats();
+    assert_eq!(ss.delta_patches, 1, "the store reclassifies the probe miss as a patch");
+    assert_eq!((ss.hits(), ss.misses), (0, 1), "only the warm request was a true miss");
+
+    let mut m = spgemm_aia::coordinator::metrics::Metrics::default();
+    handle.export_metrics(&mut m);
+    assert_eq!(m.counter("serve.plan_deltas"), 1);
+    assert_eq!(m.counter("serve.store.delta_patches"), 1);
+    assert_eq!(m.counter(&format!("serve.client.{client}.deltas")), 1);
+    let js = handle.stats_json().render();
+    assert!(js.contains("\"plan_deltas\":1"), "stats_json carries the delta count: {js}");
+    server.shutdown();
+}
+
 /// Regression (the `OnceLock` bug): the daemon's store must come from
 /// its *own* flag/env resolution, never the process-wide default. A
 /// latched default pointing elsewhere must not receive the daemon's
