@@ -19,7 +19,7 @@
 
 use spgemm_aia::gen::structured;
 use spgemm_aia::spgemm::hash::{
-    multiply_cfg, numeric_timed, symbolic_cfg, AccumKind, EngineConfig, DEFAULT_SPA_THRESHOLD,
+    multiply_cfg, numeric_timed, symbolic_cfg, AccumKind, EngineConfig, PlannerPolicy, DEFAULT_SPA_THRESHOLD,
 };
 use spgemm_aia::sparse::Csr;
 use spgemm_aia::util::bench::{bb, Bencher};
@@ -40,8 +40,9 @@ fn main() {
         ("economics", structured::economics(4000 * scale, &mut Pcg32::seeded(3))),
     ];
 
-    let hash_only = EngineConfig { spa_threshold: 2.0, symbolic_threshold: None };
-    let guided = EngineConfig { spa_threshold: DEFAULT_SPA_THRESHOLD, symbolic_threshold: None };
+    let planner = PlannerPolicy::Exact;
+    let hash_only = EngineConfig { spa_threshold: 2.0, symbolic_threshold: None, planner };
+    let guided = EngineConfig { spa_threshold: DEFAULT_SPA_THRESHOLD, symbolic_threshold: None, planner };
 
     for (name, a) in &datasets {
         b.group(&format!("accumulator/{name}"));

@@ -1,0 +1,69 @@
+//! Bench: estimated-plan speculation vs the exact pipeline on the
+//! one-shot product shape (DESIGN.md §2g).
+//!
+//! Three planner policies on the Protein / WindTunnel (FEM) /
+//! Economics analogues: `exact` (full grouping + symbolic + numeric),
+//! `estimated` (sampled plan + fallback-guarded numeric), and `auto`
+//! through a cold cached executor (store-first probe, then
+//! speculation). Fallback-rate counters, the estimate-vs-actual nnz
+//! gap, and the exact-vs-estimated crossover land in the JSON meta; CI
+//! archives `BENCH_estimated.json` as part of the perf trajectory
+//! (picked up by `tools/bench_trend.py`).
+
+use spgemm_aia::coordinator::batch::BatchExecutor;
+use spgemm_aia::gen;
+use spgemm_aia::spgemm::hash::{self, PlannerPolicy, TieredStore};
+use spgemm_aia::util::bench::{bb, Bencher};
+use spgemm_aia::util::json::Json;
+
+fn main() {
+    let mut b = Bencher::new();
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let names: &[&str] = if quick { &["Economics"] } else { &["Protein", "WindTunnel", "Economics"] };
+
+    for name in names {
+        let ds = gen::table2_by_name(name).unwrap();
+        let a = (ds.gen)(1);
+        b.group(&format!("estimated/{name}"));
+
+        let exact = b.bench("one-shot/exact", || bb(hash::multiply(&a, &a).nnz()));
+        let est = b.bench("one-shot/estimated", || bb(hash::multiply_estimated(&a, &a).0.nnz()));
+        // The cached entry point under `auto`, rebuilt cold each
+        // iteration: fingerprint + store probe overhead included, the
+        // configuration a one-shot service request actually runs.
+        let auto = b.bench("one-shot/auto-cold", || {
+            let mut ex = BatchExecutor::with_store(2, TieredStore::mem_only());
+            ex.planner = PlannerPolicy::Auto;
+            bb(ex.multiply_cached(&a, &a).nnz())
+        });
+
+        // Counters measured once, outside the timed loops — and the
+        // bench doubles as a full-size bit-identity check.
+        let c_exact = hash::multiply(&a, &a);
+        let (c_est, rep) = hash::multiply_estimated(&a, &a);
+        assert_eq!(c_est, c_exact, "{name}: estimated product must be bit-identical to exact");
+        let fallback_rate = rep.fallback_rows as f64 / a.n_rows.max(1) as f64;
+        println!(
+            "  -> estimated vs exact: {:.2}x | sampled {} rows | fallback rows {} ({:.2}%)",
+            exact.median / est.median,
+            rep.sampled_rows,
+            rep.fallback_rows,
+            100.0 * fallback_rate
+        );
+        let mut o = Json::obj();
+        o.set("exact_s", Json::Num(exact.median));
+        o.set("estimated_s", Json::Num(est.median));
+        o.set("auto_cold_s", Json::Num(auto.median));
+        o.set("speedup", Json::Num(exact.median / est.median));
+        o.set("estimate_s", Json::Num(rep.estimate_s));
+        o.set("sampled_rows", rep.sampled_rows.into());
+        o.set("total_rows", a.n_rows.into());
+        o.set("fallback_rows", rep.fallback_rows.into());
+        o.set("fallback_rate", Json::Num(fallback_rate));
+        o.set("estimated_nnz", rep.estimated_nnz.into());
+        o.set("nnz", rep.nnz.into());
+        b.meta(&format!("crossover/{name}"), o);
+    }
+
+    b.finish("estimated");
+}

@@ -18,7 +18,9 @@
 //! its medians against the previous main run.
 
 use spgemm_aia::gen::structured;
-use spgemm_aia::spgemm::hash::{default_spa_threshold, symbolic_cfg, EngineConfig, PlannedProduct, SymbolicKind};
+use spgemm_aia::spgemm::hash::{
+    default_spa_threshold, symbolic_cfg, EngineConfig, PlannedProduct, PlannerPolicy, SymbolicKind,
+};
 use spgemm_aia::sparse::Csr;
 use spgemm_aia::util::bench::{bb, Bencher};
 use spgemm_aia::util::json::Json;
@@ -39,9 +41,10 @@ fn main() {
     ];
 
     let base = default_spa_threshold();
-    let hash_only = EngineConfig { spa_threshold: base, symbolic_threshold: Some(8.0) };
-    let bitmap = EngineConfig { spa_threshold: base, symbolic_threshold: Some(0.0) };
-    let guided = EngineConfig { spa_threshold: base, symbolic_threshold: None };
+    let planner = PlannerPolicy::Exact;
+    let hash_only = EngineConfig { spa_threshold: base, symbolic_threshold: Some(8.0), planner };
+    let bitmap = EngineConfig { spa_threshold: base, symbolic_threshold: Some(0.0), planner };
+    let guided = EngineConfig { spa_threshold: base, symbolic_threshold: None, planner };
 
     for (name, a) in &datasets {
         b.group(&format!("symbolic/{name}"));

@@ -48,6 +48,7 @@
 use super::metrics::Metrics;
 use super::scheduler::{schedule_lpt, Job, Schedule};
 use crate::spgemm::hash::planstore::{GetOutcome, StoreStats};
+use crate::spgemm::hash::{multiply_estimated_cfg, EstimateParams, PlannerPolicy};
 use crate::spgemm::hash::{numeric_bin_into, EngineConfig, PlanFingerprint, PlanStore, PlannedProduct, TieredStore};
 use crate::sparse::Csr;
 use std::collections::HashMap;
@@ -108,6 +109,20 @@ pub struct BatchStats {
     /// Wall seconds spent building delta patches (subset of
     /// [`BatchStats::plan_s`]).
     pub delta_plan_s: f64,
+    /// Cold one-shot products served by the speculative estimated
+    /// planner ([`PlannerPolicy::Estimated`]/`Auto` through
+    /// [`BatchExecutor::multiply_cached_policy`]). Speculative plans
+    /// are used once and never persisted, so these are neither hits
+    /// nor misses — excluded from [`BatchStats::hit_rate`] on both
+    /// sides, like delta patches.
+    pub estimated_plans: usize,
+    /// Rows the speculative numeric phase grew-and-retried after
+    /// detecting an underestimate (summed
+    /// [`crate::spgemm::hash::EstimateReport::fallback_rows`]).
+    pub fallback_rows: usize,
+    /// Wall seconds spent sampling + building speculative plans
+    /// (subset of [`BatchStats::plan_s`]).
+    pub estimate_s: f64,
     /// Wall seconds spent resolving plans: grouping + symbolic for
     /// fresh structures, disk load + validation for disk hits, plus the
     /// fingerprint validation (an O(nnz) structure scan on first touch,
@@ -156,6 +171,11 @@ pub enum PlanSource {
     /// symbolic phase re-ran over the dirty rows only
     /// ([`crate::spgemm::hash::delta_patch`]).
     Delta,
+    /// Fully-cold one-shot product planned speculatively from sampled
+    /// estimates ([`crate::spgemm::hash::multiply_estimated`]): no
+    /// exact symbolic phase ran, underestimated rows grew-and-retried,
+    /// and the plan was never admitted to the store.
+    Estimated,
 }
 
 impl PlanSource {
@@ -167,14 +187,16 @@ impl PlanSource {
             PlanSource::Mem => "mem",
             PlanSource::Disk => "disk",
             PlanSource::Delta => "delta",
+            PlanSource::Estimated => "estimated",
         }
     }
 
     /// True when the symbolic phase was skipped entirely (verbatim
     /// reuse). A delta patch is *not* a hit: it re-ran the symbolic
-    /// phase, just only over its dirty rows.
+    /// phase, just only over its dirty rows. An estimated plan is not
+    /// a hit either: nothing was reused — the plan was guessed.
     pub fn is_hit(self) -> bool {
-        !matches!(self, PlanSource::Fresh | PlanSource::Delta)
+        !matches!(self, PlanSource::Fresh | PlanSource::Delta | PlanSource::Estimated)
     }
 }
 
@@ -299,6 +321,12 @@ pub struct BatchExecutor {
     pub stats: BatchStats,
     /// Report for the most recent [`BatchExecutor::execute_batch`] call.
     pub last_batch: Option<BatchReport>,
+    /// Planner policy [`BatchExecutor::multiply_cached`]-style one-shot
+    /// calls run under (batched and iterative products always plan
+    /// exactly — their plans are reused, so speculation has nothing to
+    /// win). Defaults to the process-wide policy (`--planner` /
+    /// `SPGEMM_AIA_PLANNER`, see [`EngineConfig::default`]).
+    pub planner: PlannerPolicy,
     store: TieredStore,
     /// Most recently resolved plan key per operand-shape quadruple —
     /// the delta planner's predecessor index: on a store miss, the
@@ -324,6 +352,7 @@ impl BatchExecutor {
             n_streams,
             stats: BatchStats::default(),
             last_batch: None,
+            planner: EngineConfig::default().planner,
             store,
             recent_by_shape: HashMap::new(),
         }
@@ -635,7 +664,26 @@ impl BatchExecutor {
     /// [`BatchExecutor::multiply_cached`] plus a per-call
     /// [`CachedMultiply`] trace: plan source, resolve/fill seconds, and
     /// the symbolic seconds this call actually paid (0 on any hit).
+    /// Runs under this executor's [`BatchExecutor::planner`] policy.
     pub fn multiply_cached_traced(&mut self, a: &Csr, b: &Csr) -> (Csr, CachedMultiply) {
+        self.multiply_cached_policy(a, b, self.planner)
+    }
+
+    /// [`BatchExecutor::multiply_cached_traced`] under an explicit
+    /// [`PlannerPolicy`] (the serve daemon threads each request's
+    /// policy through here).
+    ///
+    /// Speculation is *store-first*: under `Estimated`/`Auto` the
+    /// tiered store and the dirty-row delta baseline are probed exactly
+    /// as in exact mode — a hit fills from the stored exact plan, a
+    /// same-shape drift delta-patches — and only a *fully-cold*
+    /// structure runs the sampled estimator
+    /// ([`crate::spgemm::hash::multiply_estimated`]). The speculative
+    /// plan is used once and thrown away: it is never admitted to the
+    /// store ([`StoreStats::stores`] does not move), so no later
+    /// process can mistake its guessed row sizes for exact symbolic
+    /// output.
+    pub fn multiply_cached_policy(&mut self, a: &Csr, b: &Csr, policy: PlannerPolicy) -> (Csr, CachedMultiply) {
         let t_resolve = Instant::now();
         let fp = PlanFingerprint::of(a, b);
         let shape = [a.n_rows, a.n_cols, b.n_rows, b.n_cols];
@@ -678,6 +726,28 @@ impl BatchExecutor {
                 crate::spgemm::hash::DeltaOutcome::Patched(dp) => Some(dp),
                 crate::spgemm::hash::DeltaOutcome::Rebuild(_) => None,
             });
+        if patched.is_none() && policy.speculates() {
+            // Fully cold and one-shot: speculate. Sampling + the
+            // fallback-guarded numeric fill happen in one call; the
+            // plan never reaches the store, and `recent_by_shape` is
+            // left alone — a guessed plan is no delta baseline.
+            let (c, rep) = multiply_estimated_cfg(a, b, &cfg, &EstimateParams::default());
+            let plan_s = t_resolve.elapsed().as_secs_f64() - rep.numeric_s;
+            self.stats.estimated_plans += 1;
+            self.stats.estimate_s += rep.estimate_s;
+            self.stats.fallback_rows += rep.fallback_rows;
+            self.stats.plan_s += plan_s;
+            self.stats.fills += 1;
+            self.stats.fill_s += rep.numeric_s;
+            let trace = CachedMultiply {
+                source: PlanSource::Estimated,
+                plan_s,
+                fill_s: rep.numeric_s,
+                symbolic_s: 0.0,
+                nnz: c.nnz(),
+            };
+            return (c, trace);
+        }
         let (p, source, symbolic_s) = match patched {
             Some(dp) => {
                 let p = Arc::new(dp.plan);
@@ -777,6 +847,9 @@ impl BatchExecutor {
         m.inc("batch.delta_patches", self.stats.delta_patches as u64);
         m.inc("batch.delta_rows", self.stats.delta_rows as u64);
         m.gauge("batch.delta_plan_s", self.stats.delta_plan_s);
+        m.inc("batch.estimated_plans", self.stats.estimated_plans as u64);
+        m.inc("batch.fallback_rows", self.stats.fallback_rows as u64);
+        m.gauge("batch.estimate_s", self.stats.estimate_s);
         m.inc("batch.bins_filled", self.stats.bins_filled as u64);
         m.observe_store_stats("batch.store", &self.store.stats());
         m.add_time("batch.plan", self.stats.plan_s);
@@ -1013,6 +1086,71 @@ mod tests {
         ex.export_metrics(&mut m);
         assert_eq!(m.counter("batch.delta_patches"), 2);
         assert_eq!(m.counter("batch.delta_rows"), ex.stats.delta_rows as u64);
+    }
+
+    /// Policy boundaries: `Estimated` speculates only on a fully-cold
+    /// structure — a stored exact plan still wins — and the speculative
+    /// plan is never admitted to the store (neither tier, zero
+    /// `stores`), with output bit-identical to the exact engine.
+    #[test]
+    fn estimated_policy_is_store_first_and_never_persists() {
+        let a = random_square(17, 128, 4);
+        let mut ex = mem_executor(2);
+        let (c1, t1) = ex.multiply_cached_policy(&a, &a, PlannerPolicy::Estimated);
+        assert_eq!(t1.source, PlanSource::Estimated);
+        assert_eq!(t1.source.label(), "estimated");
+        assert!(!t1.source.is_hit(), "a guessed plan reused nothing — not a hit");
+        assert_eq!(t1.symbolic_s, 0.0, "no exact symbolic phase ran");
+        assert_eq!(c1, hash::multiply(&a, &a), "speculative output must be bit-identical");
+        assert_eq!(ex.cached_plans(), 0, "speculative plans must never reach the store");
+        assert_eq!(ex.store_stats().stores, 0, "no store write from a speculative plan");
+        assert_eq!(ex.stats.estimated_plans, 1);
+        assert_eq!((ex.stats.plan_hits, ex.stats.plan_misses), (0, 0), "neither a hit nor a miss");
+        assert_eq!(ex.stats.hit_rate(), 0.0);
+        // Warm the store with the exact plan: the same policy now rides
+        // the hit instead of re-estimating (store-first).
+        ex.multiply_cached(&a, &a);
+        let stores_after_exact = ex.store_stats().stores;
+        let (c3, t3) = ex.multiply_cached_policy(&a, &a, PlannerPolicy::Estimated);
+        assert_eq!(t3.source, PlanSource::Mem, "a store hit must beat speculation");
+        assert_eq!(c3, c1);
+        assert_eq!(ex.stats.estimated_plans, 1, "no second estimate once the plan is cached");
+        assert_eq!(ex.store_stats().stores, stores_after_exact);
+        // Batched products always plan exactly, whatever the executor's
+        // default policy says.
+        ex.invalidate();
+        ex.planner = PlannerPolicy::Estimated;
+        let b = random_square(18, 128, 4);
+        let out = ex.execute_batch(&[(&b, &b)]);
+        assert_eq!(out[0], hash::multiply(&b, &b));
+        assert_eq!(ex.stats.estimated_plans, 1, "execute_batch must stay exact");
+        assert_eq!(ex.cached_plans(), 1, "the batch's exact plan is stored as usual");
+    }
+
+    /// `Auto` behaves like `Estimated` on cold one-shot calls and like
+    /// `Exact` wherever an exact plan is reusable (store hit, delta
+    /// baseline).
+    #[test]
+    fn auto_policy_speculates_only_on_cold_one_shot_calls() {
+        let a = random_square(19, 160, 5);
+        let mut ex = mem_executor(2);
+        let (_, t1) = ex.multiply_cached_policy(&a, &a, PlannerPolicy::Auto);
+        assert_eq!(t1.source, PlanSource::Estimated, "cold one-shot under auto speculates");
+        // Seed an exact plan, then drift the structure: the delta
+        // baseline must win over re-estimating.
+        ex.multiply_cached(&a, &a);
+        let a2 = hash::mutate_row_fraction(&a, 0.02, 43);
+        let (c2, t2) = ex.multiply_cached_policy(&a2, &a2, PlannerPolicy::Auto);
+        assert_eq!(t2.source, PlanSource::Delta, "a delta baseline must beat speculation");
+        assert_eq!(c2, hash::multiply(&a2, &a2));
+        // Exact policy never speculates, cold or not.
+        let b = random_square(20, 160, 5);
+        let (_, t3) = ex.multiply_cached_policy(&b, &b, PlannerPolicy::Exact);
+        assert_eq!(t3.source, PlanSource::Fresh);
+        assert_eq!(ex.stats.estimated_plans, 1);
+        let mut m = Metrics::new();
+        ex.export_metrics(&mut m);
+        assert_eq!(m.counter("batch.estimated_plans"), 1);
     }
 
     #[test]

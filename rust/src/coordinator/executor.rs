@@ -20,7 +20,7 @@ use super::metrics::Metrics;
 use crate::sim::probe::PhaseTimes;
 use crate::sim::{simulate_spgemm, AiaMode, SimConfig, SimReport};
 use crate::spgemm::hash::planstore::GetOutcome;
-use crate::spgemm::hash::{EngineConfig, PlanFingerprint, PlanStore, PlannedProduct, TieredStore};
+use crate::spgemm::hash::{EngineConfig, PlanFingerprint, PlanStore, PlannedProduct, PlannerPolicy, TieredStore};
 use crate::spgemm::{hash, ip, spgemm, Algo};
 use crate::sparse::Csr;
 use std::sync::Arc;
@@ -110,6 +110,21 @@ pub struct SpgemmExecutor {
     /// Wall seconds spent building delta patches (the incremental
     /// counterpart of the full plans' `plan_times`).
     pub delta_plan_s: f64,
+    /// One-shot [`SpgemmExecutor::multiply`] jobs served by the
+    /// speculative estimated planner instead of the exact symbolic
+    /// phase ([`crate::spgemm::hash::multiply_estimated`]).
+    pub estimated_jobs: usize,
+    /// Rows the speculative jobs grew-and-retried after detecting an
+    /// underestimate.
+    pub fallback_rows: usize,
+    /// Wall seconds spent sampling + building speculative plans.
+    pub estimate_s: f64,
+    /// Planner policy for one-shot [`SpgemmExecutor::multiply`] jobs on
+    /// the functional hash path. [`SpgemmExecutor::multiply_reusing`]
+    /// always plans exactly — its plans persist in the slot and the
+    /// store, so speculation has nothing to win there. Defaults to the
+    /// process-wide policy (`--planner` / `SPGEMM_AIA_PLANNER`).
+    pub planner: PlannerPolicy,
     /// Tiered plan store consulted on slot misses (and seeded on
     /// replans). `None` = slot-only reuse, the pre-persistence behavior.
     plan_store: Option<TieredStore>,
@@ -157,6 +172,10 @@ impl SpgemmExecutor {
             plan_deltas: 0,
             delta_rows: 0,
             delta_plan_s: 0.0,
+            estimated_jobs: 0,
+            fallback_rows: 0,
+            estimate_s: 0.0,
+            planner: EngineConfig::default().planner,
             plan_store,
         }
     }
@@ -188,6 +207,17 @@ impl SpgemmExecutor {
         self.jobs += 1;
         match &self.sim {
             None => match self.variant.algo() {
+                // A `multiply` call is exactly the cold one-shot shape
+                // speculation targets: no slot, no store, the plan is
+                // used once. Output is bit-identical either way.
+                Algo::Hash if self.planner.speculates() => {
+                    let (c, rep) = hash::multiply_estimated(a, b);
+                    self.estimated_jobs += 1;
+                    self.estimate_s += rep.estimate_s;
+                    self.fallback_rows += rep.fallback_rows;
+                    self.phase_times.numeric_s += rep.numeric_s;
+                    c
+                }
                 Algo::Hash => {
                     let (c, pt) = hash::engine::multiply_timed(a, b);
                     self.phase_times.accumulate(&pt);
@@ -342,6 +372,9 @@ impl SpgemmExecutor {
         m.inc(&format!("{prefix}.plan_deltas"), self.plan_deltas as u64);
         m.inc(&format!("{prefix}.delta_rows"), self.delta_rows as u64);
         m.gauge(&format!("{prefix}.delta_plan_s"), self.delta_plan_s);
+        m.inc(&format!("{prefix}.estimated_jobs"), self.estimated_jobs as u64);
+        m.inc(&format!("{prefix}.fallback_rows"), self.fallback_rows as u64);
+        m.gauge(&format!("{prefix}.estimate_s"), self.estimate_s);
         if let Some(ss) = self.plan_store_stats() {
             m.observe_store_stats(&format!("{prefix}.store"), &ss);
         }
@@ -514,6 +547,30 @@ mod tests {
         ex.export_metrics(&mut m);
         assert_eq!(m.counter("spgemm.hash.plan_deltas"), 1);
         assert_eq!(m.counter("spgemm.hash.delta_rows"), ex.delta_rows as u64);
+    }
+
+    /// The estimated policy reroutes one-shot `multiply` jobs through
+    /// the speculative planner — bit-identically — while
+    /// `multiply_reusing` keeps planning exactly (its plans are reused,
+    /// so speculation has nothing to win).
+    #[test]
+    fn estimated_policy_covers_one_shot_jobs_only() {
+        let a = crate::gen::rmat(256, 2000, crate::gen::RmatParams::uniform(), &mut Pcg32::seeded(33));
+        let mut ex = mem_pinned(Variant::Hash);
+        ex.planner = PlannerPolicy::Estimated;
+        let c = ex.multiply(&a, &a);
+        assert_eq!(c, crate::spgemm::hash::multiply(&a, &a), "speculative one-shot must be bit-identical");
+        assert_eq!(ex.estimated_jobs, 1);
+        assert!(ex.estimate_s > 0.0, "sampling time is charged, honestly");
+        let mut slot = None;
+        ex.multiply_reusing(&mut slot, &a, &a);
+        ex.multiply_reusing(&mut slot, &a, &a);
+        assert_eq!(ex.estimated_jobs, 1, "multiply_reusing must not speculate");
+        assert_eq!((ex.plan_hits, ex.plan_misses), (1, 1));
+        let mut m = Metrics::new();
+        ex.export_metrics(&mut m);
+        assert_eq!(m.counter("spgemm.hash.estimated_jobs"), 1);
+        assert_eq!(m.counter("spgemm.hash.jobs"), 3);
     }
 
     #[test]

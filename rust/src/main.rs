@@ -8,7 +8,7 @@
 //! spgemm-aia mcl --dataset <name> [--variant ...]
 //! spgemm-aia contract --dataset <name> [--variant ...]
 //! spgemm-aia gnn --dataset <name> --arch gcn|gin|sage [--epochs N]
-//! spgemm-aia serve --socket <path> [--queue N] [--streams N] [--plan-cache DIR]
+//! spgemm-aia serve --socket <path> [--queue N] [--streams N] [--plan-cache DIR] [--planner P]
 //! spgemm-aia plan-cache ls|verify|prune [--dir DIR] [--max-bytes N]
 //! spgemm-aia info
 //! ```
@@ -72,6 +72,19 @@ fn run(args: &[String]) -> Result<()> {
             eprintln!("warning: plan-cache dir was already initialized; --plan-cache ignored");
         }
     }
+    // Global knob, honored by every subcommand: symbolic planner policy
+    // (DESIGN.md §2g). `estimated` sizes hash tables from a sampled
+    // nnz(C) estimate and recovers per row with a grow-and-retry ladder
+    // on underestimates; `auto` speculates only on fully-cold one-shot
+    // products. Output stays bit-identical to `exact` in every mode —
+    // only plan sizing and kernel choice are speculative.
+    if let Some(name) = opt(args, "--planner") {
+        let policy = spgemm_aia::spgemm::hash::PlannerPolicy::parse(name)
+            .ok_or_else(|| anyhow!("unknown planner {name} (expected exact, estimated, or auto)"))?;
+        if !spgemm_aia::spgemm::hash::set_default_planner_policy(policy) {
+            eprintln!("warning: planner policy was already initialized; --planner ignored");
+        }
+    }
     match args.first().map(|s| s.as_str()) {
         Some("repro") => cmd_repro(args),
         Some("spgemm") => cmd_spgemm(args),
@@ -121,6 +134,14 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         }
         let env = std::env::var("SPGEMM_AIA_PLAN_CACHE").ok();
         cfg.plan_cache = spgemm_aia::serve::resolve_plan_cache(opt(args, "--plan-cache"), env.as_deref());
+        // Same flag-over-env ladder as the plan cache, resolved into the
+        // daemon's own config rather than the process-wide `OnceLock`:
+        // per-request `"planner"` overrides still win over this default.
+        let penv = std::env::var("SPGEMM_AIA_PLANNER").ok();
+        if let Some(name) = opt(args, "--planner").or_else(|| penv.as_deref()) {
+            cfg.planner = spgemm_aia::spgemm::hash::PlannerPolicy::parse(name)
+                .ok_or_else(|| anyhow!("unknown planner {name} (expected exact, estimated, or auto)"))?;
+        }
         spgemm_aia::serve::session::run_daemon(std::path::Path::new(socket), &cfg)
     }
 }
@@ -207,7 +228,7 @@ fn print_help() {
          spgemm-aia mcl --dataset Economics [--variant aia]\n  \
          spgemm-aia contract --dataset RoadTX [--variant aia]\n  \
          spgemm-aia gnn --dataset Flickr --arch gcn [--epochs 5]\n  \
-         spgemm-aia serve --socket PATH [--queue 64] [--streams 4] [--plan-cache DIR]\n  \
+         spgemm-aia serve --socket PATH [--queue 64] [--streams 4] [--plan-cache DIR] [--planner P]\n  \
          spgemm-aia plan-cache ls|verify|prune [--dir DIR] [--max-bytes N]\n  \
          spgemm-aia info\n\nSERVE:\n  \
          newline-delimited JSON over a unix socket; ops register, multiply,\n  \
@@ -222,10 +243,17 @@ fn print_help() {
          --plan-cache DIR   persist symbolic plans to DIR (versioned, fingerprint-keyed\n                     \
          binary files) and load validated ones back, so repeated runs\n                     \
          on the same generated dataset skip the symbolic phase across\n                     \
-         processes. Stale/corrupt/old-version files replan silently\n\nENV:\n  \
+         processes. Stale/corrupt/old-version files replan silently\n  \
+         --planner P        symbolic planner policy: exact (default), estimated (sample rows\n                     \
+         of A, size hash tables from the estimated nnz(C), grow-and-retry\n                     \
+         per row on underestimates), or auto (speculate only on fully-cold\n                     \
+         one-shot products; store hits and batch slots stay exact).\n                     \
+         Output is bit-identical to exact in every mode; speculative\n                     \
+         plans are never persisted to the plan cache\n\nENV:\n  \
          REPRO_QUICK=1 small subsets; SPGEMM_AIA_ARTIFACTS=dir; SPGEMM_AIA_THREADS=n;\n  \
          SPGEMM_AIA_SPA_THRESHOLD=T (same as --spa-threshold);\n  \
-         SPGEMM_AIA_PLAN_CACHE=DIR (same as --plan-cache)"
+         SPGEMM_AIA_PLAN_CACHE=DIR (same as --plan-cache);\n  \
+         SPGEMM_AIA_PLANNER=P (same as --planner)"
     );
 }
 
@@ -241,6 +269,7 @@ fn cmd_info() -> Result<()> {
     );
     println!("threads: {}", spgemm_aia::util::num_threads());
     println!("spa-threshold: {}", spgemm_aia::spgemm::hash::default_spa_threshold());
+    println!("planner: {}", spgemm_aia::spgemm::hash::default_planner_policy().name());
     match spgemm_aia::spgemm::hash::default_plan_cache_dir() {
         Some(d) => println!("plan-cache: {}", d.display()),
         None => println!("plan-cache: (none — plans live and die with the process)"),

@@ -311,6 +311,52 @@ pub fn plan_reuse() -> Json {
     out.set("mcl_plan_deltas", r.plan_deltas.into());
     out.set("mcl_delta_rows", r.delta_rows.into());
     out.set("mcl_plan_hit_rate", hit_rate.into());
+    // Estimated-plan crossover (the one-shot product path, DESIGN.md
+    // §2g): the exact pipeline counts every row before sizing, the
+    // estimated planner samples ~2% of rows, extrapolates the
+    // IP-weighted bound, and lets the numeric phase grow-and-retry the
+    // rows it undersized. Speculation pays exactly when the plan is
+    // used once — sampling saves per product, fallback costs only on
+    // underestimated rows — and output is bit-identical either way, so
+    // the crossover variable is time alone.
+    println!("\nEstimated planner crossover (one-shot A^2): exact plan+fill vs sampled plan + fallback ladder");
+    let te = Table::new(&[15, 11, 11, 9, 12, 14, 7]);
+    te.header(&["name", "exact ms", "est ms", "speedup", "estimate ms", "fallback rows", "ident"]);
+    let mut est_rows = Json::Arr(vec![]);
+    for ds in active_datasets() {
+        let a = (ds.gen)(SEED);
+        let t0 = std::time::Instant::now();
+        let c_exact = hash::multiply(&a, &a);
+        let exact_s = t0.elapsed().as_secs_f64();
+        let (c_est, rep) = hash::multiply_estimated(&a, &a);
+        let est_s = rep.estimate_s + rep.numeric_s;
+        let bit_identical = c_est == c_exact;
+        let fallback_rate = rep.fallback_rows as f64 / a.n_rows.max(1) as f64;
+        te.row(&[
+            ds.paper.name.to_string(),
+            format!("{:.2}", exact_s * 1e3),
+            format!("{:.2}", est_s * 1e3),
+            format!("{:.2}x", exact_s / est_s.max(1e-12)),
+            format!("{:.2}", rep.estimate_s * 1e3),
+            format!("{} ({:.1}%)", rep.fallback_rows, 100.0 * fallback_rate),
+            bit_identical.to_string(),
+        ]);
+        let mut o = Json::obj();
+        o.set("name", ds.paper.name.into());
+        o.set("exact_ms", (exact_s * 1e3).into());
+        o.set("estimated_ms", (est_s * 1e3).into());
+        o.set("speedup", (exact_s / est_s.max(1e-12)).into());
+        o.set("estimate_ms", (rep.estimate_s * 1e3).into());
+        o.set("numeric_ms", (rep.numeric_s * 1e3).into());
+        o.set("sampled_rows", rep.sampled_rows.into());
+        o.set("estimated_nnz", rep.estimated_nnz.into());
+        o.set("nnz", rep.nnz.into());
+        o.set("fallback_rows", rep.fallback_rows.into());
+        o.set("fallback_rate", fallback_rate.into());
+        o.set("bit_identical", bit_identical.into());
+        est_rows.push(o);
+    }
+    out.set("estimated", est_rows);
     save_json("plan_reuse", &out);
     out
 }

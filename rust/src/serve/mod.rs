@@ -43,7 +43,7 @@ pub use registry::{HandleId, MatrixRegistry};
 use crate::coordinator::batch::{BatchExecutor, PlanSource};
 use crate::coordinator::metrics::Metrics;
 use crate::sparse::Csr;
-use crate::spgemm::hash::{StoreStats, TieredStore};
+use crate::spgemm::hash::{PlannerPolicy, StoreStats, TieredStore};
 use crate::util::json::Json;
 use crate::util::serial::{fnv1a_seeded, FNV_OFFSET};
 use queue::{QueueReceiver, RequestQueue, SubmitError};
@@ -64,11 +64,17 @@ pub struct ServeConfig {
     pub n_streams: usize,
     /// Disk tier of the daemon's plan store; `None` = memory only.
     pub plan_cache: Option<PathBuf>,
+    /// Default planner policy for multiply requests; a request may
+    /// override it with an explicit `planner` field. Whatever the
+    /// policy, store-backed requests stay exact — speculation only
+    /// applies to fully-cold one-shot products, and speculative plans
+    /// never enter the shared store.
+    pub planner: PlannerPolicy,
 }
 
 impl Default for ServeConfig {
     fn default() -> ServeConfig {
-        ServeConfig { queue_capacity: 64, n_streams: 4, plan_cache: None }
+        ServeConfig { queue_capacity: 64, n_streams: 4, plan_cache: None, planner: PlannerPolicy::Exact }
     }
 }
 
@@ -111,9 +117,10 @@ pub struct MultiplyOutcome {
     pub nnz: usize,
     /// [`csr_checksum`] of `c`.
     pub checksum: u64,
-    /// Where the plan came from (`fresh`/`mem`/`disk`/`delta` — the
-    /// last when a re-registered, mutated matrix routed through the
-    /// dirty-row delta planner).
+    /// Where the plan came from (`fresh`/`mem`/`disk`/`delta`/
+    /// `estimated` — `delta` when a re-registered, mutated matrix
+    /// routed through the dirty-row delta planner, `estimated` when a
+    /// fully-cold one-shot request ran the speculative planner).
     pub source: PlanSource,
     /// Seconds resolving the plan (lookup + validation; plus
     /// grouping/symbolic when fresh, or the dirty-row patch when
@@ -177,8 +184,12 @@ pub struct ClientStats {
     pub hits: u64,
     pub misses: u64,
     /// Requests served by dirty-row delta patching (neither hit nor
-    /// miss — `requests = hits + misses + deltas`).
+    /// miss — `requests = hits + misses + deltas + estimated`).
     pub deltas: u64,
+    /// Requests served by the speculative estimated planner (fully-cold
+    /// one-shot products under an estimated policy; neither hit nor
+    /// miss).
+    pub estimated: u64,
 }
 
 /// Daemon-lifetime counters.
@@ -199,6 +210,12 @@ pub struct ServeStats {
     /// a mutated matrix. Neither a hit nor a miss in
     /// [`ServeStats::hit_rate`].
     pub plan_deltas: u64,
+    /// Requests served by the speculative estimated planner
+    /// ([`PlanSource::Estimated`]): fully-cold one-shot products under
+    /// an estimated policy. The plan was guessed, not reused or built
+    /// exactly — neither a hit nor a miss in [`ServeStats::hit_rate`],
+    /// and never written to the shared store.
+    pub plan_estimated: u64,
     /// Matrices registered over the daemon's lifetime.
     pub registered: u64,
     /// Handles released.
@@ -208,8 +225,9 @@ pub struct ServeStats {
 
 impl ServeStats {
     /// Fraction of executed multiplies that skipped the symbolic phase.
-    /// Delta-patched requests re-ran it (over dirty rows only), so they
-    /// are excluded from both sides of the fraction.
+    /// Delta-patched requests re-ran it (over dirty rows only) and
+    /// estimated requests never built an exact plan at all, so both are
+    /// excluded from both sides of the fraction.
     pub fn hit_rate(&self) -> f64 {
         let hits = self.plan_hits + self.disk_hits;
         let total = hits + self.plan_misses;
@@ -223,7 +241,7 @@ impl ServeStats {
 
 /// Jobs the worker thread consumes.
 enum Job {
-    Multiply { a: Arc<Csr>, b: Arc<Csr>, client: u64, reply: mpsc::Sender<MultiplyOutcome> },
+    Multiply { a: Arc<Csr>, b: Arc<Csr>, client: u64, planner: PlannerPolicy, reply: mpsc::Sender<MultiplyOutcome> },
     /// Park the worker until the guard drops (tests use this to pin
     /// the queue at a known depth and exercise backpressure
     /// deterministically).
@@ -239,6 +257,7 @@ pub struct ServeHandle {
     registry: Arc<Mutex<MatrixRegistry>>,
     stats: Arc<Mutex<ServeStats>>,
     store: TieredStore,
+    planner: PlannerPolicy,
     shutting_down: Arc<AtomicBool>,
     next_client: Arc<AtomicU64>,
 }
@@ -292,6 +311,21 @@ impl ServeHandle {
     /// explicit: a full queue fails *now* with [`ServeError::Busy`]
     /// instead of blocking the caller behind unbounded work.
     pub fn multiply(&self, client: u64, a: Arc<Csr>, b: Arc<Csr>) -> Result<MultiplyOutcome, ServeError> {
+        self.multiply_policy(client, a, b, None)
+    }
+
+    /// [`ServeHandle::multiply`] with an explicit per-request planner
+    /// policy; `None` runs the daemon's configured default
+    /// ([`ServeConfig::planner`]). Store-backed requests resolve
+    /// exactly under every policy — only a fully-cold one-shot product
+    /// speculates.
+    pub fn multiply_policy(
+        &self,
+        client: u64,
+        a: Arc<Csr>,
+        b: Arc<Csr>,
+        policy: Option<PlannerPolicy>,
+    ) -> Result<MultiplyOutcome, ServeError> {
         if self.shutting_down.load(Ordering::SeqCst) {
             return Err(ServeError::ShuttingDown);
         }
@@ -301,8 +335,9 @@ impl ServeHandle {
                 a.n_rows, a.n_cols, b.n_rows, b.n_cols
             )));
         }
+        let planner = policy.unwrap_or(self.planner);
         let (reply, result) = mpsc::channel();
-        match self.queue.submit(Job::Multiply { a, b, client, reply }) {
+        match self.queue.submit(Job::Multiply { a, b, client, planner, reply }) {
             Ok(_) => {}
             Err(SubmitError::Busy(_)) => {
                 self.stats_lock().busy_rejections += 1;
@@ -315,9 +350,21 @@ impl ServeHandle {
 
     /// [`ServeHandle::multiply`] with both operands named by handle.
     pub fn multiply_by_handle(&self, client: u64, a_raw: u64, b_raw: u64) -> Result<MultiplyOutcome, ServeError> {
+        self.multiply_by_handle_policy(client, a_raw, b_raw, None)
+    }
+
+    /// [`ServeHandle::multiply_policy`] with both operands named by
+    /// handle (the line protocol's `multiply` op lands here).
+    pub fn multiply_by_handle_policy(
+        &self,
+        client: u64,
+        a_raw: u64,
+        b_raw: u64,
+        policy: Option<PlannerPolicy>,
+    ) -> Result<MultiplyOutcome, ServeError> {
         let a = self.resolve(a_raw)?;
         let b = self.resolve(b_raw)?;
-        self.multiply(client, a, b)
+        self.multiply_policy(client, a, b, policy)
     }
 
     /// Park the worker until the returned guard drops. Submitted
@@ -376,6 +423,7 @@ impl ServeHandle {
         m.inc("serve.disk_hits", st.disk_hits);
         m.inc("serve.plan_misses", st.plan_misses);
         m.inc("serve.plan_deltas", st.plan_deltas);
+        m.inc("serve.plan_estimated", st.plan_estimated);
         m.inc("serve.registered", st.registered);
         m.inc("serve.released", st.released);
         m.gauge("serve.plan_hit_rate", st.hit_rate());
@@ -384,6 +432,7 @@ impl ServeHandle {
             m.inc(&format!("serve.client.{client}.hits"), cs.hits);
             m.inc(&format!("serve.client.{client}.misses"), cs.misses);
             m.inc(&format!("serve.client.{client}.deltas"), cs.deltas);
+            m.inc(&format!("serve.client.{client}.estimated"), cs.estimated);
         }
         m.observe_store_stats("serve.store", &self.store.stats());
     }
@@ -399,6 +448,7 @@ impl ServeHandle {
         o.set("disk_hits", (st.disk_hits as i64).into());
         o.set("plan_misses", (st.plan_misses as i64).into());
         o.set("plan_deltas", (st.plan_deltas as i64).into());
+        o.set("plan_estimated", (st.plan_estimated as i64).into());
         o.set("plan_hit_rate", st.hit_rate().into());
         o.set("registered", (st.registered as i64).into());
         o.set("released", (st.released as i64).into());
@@ -422,6 +472,7 @@ impl ServeHandle {
             c.set("hits", (cs.hits as i64).into());
             c.set("misses", (cs.misses as i64).into());
             c.set("deltas", (cs.deltas as i64).into());
+            c.set("estimated", (cs.estimated as i64).into());
             clients.set(&client.to_string(), c);
         }
         o.set("clients", clients);
@@ -466,6 +517,7 @@ impl Server {
             registry: Arc::new(Mutex::new(MatrixRegistry::new())),
             stats: Arc::new(Mutex::new(ServeStats::default())),
             store: store.clone(),
+            planner: cfg.planner,
             shutting_down: Arc::new(AtomicBool::new(false)),
             next_client: Arc::new(AtomicU64::new(1)),
         };
@@ -511,8 +563,8 @@ impl Drop for Server {
 fn worker_loop(jobs: QueueReceiver<Job>, mut executor: BatchExecutor, stats: Arc<Mutex<ServeStats>>) {
     while let Some(job) = jobs.recv() {
         match job {
-            Job::Multiply { a, b, client, reply } => {
-                let (c, trace) = executor.multiply_cached_traced(&a, &b);
+            Job::Multiply { a, b, client, planner, reply } => {
+                let (c, trace) = executor.multiply_cached_policy(&a, &b, planner);
                 let checksum = csr_checksum(&c);
                 {
                     let mut st = stats.lock().unwrap_or_else(|e| e.into_inner());
@@ -522,11 +574,13 @@ fn worker_loop(jobs: QueueReceiver<Job>, mut executor: BatchExecutor, stats: Arc
                         PlanSource::Disk => st.disk_hits += 1,
                         PlanSource::Mem | PlanSource::Shared => st.plan_hits += 1,
                         PlanSource::Delta => st.plan_deltas += 1,
+                        PlanSource::Estimated => st.plan_estimated += 1,
                     }
                     let cs = st.per_client.entry(client).or_default();
                     cs.requests += 1;
                     match trace.source {
                         PlanSource::Delta => cs.deltas += 1,
+                        PlanSource::Estimated => cs.estimated += 1,
                         s if s.is_hit() => cs.hits += 1,
                         _ => cs.misses += 1,
                     }
@@ -568,7 +622,7 @@ mod tests {
 
     fn mem_server(capacity: usize) -> Server {
         Server::start_with_store(
-            &ServeConfig { queue_capacity: capacity, n_streams: 2, plan_cache: None },
+            &ServeConfig { queue_capacity: capacity, n_streams: 2, ..ServeConfig::default() },
             TieredStore::mem_only(),
         )
     }
@@ -637,6 +691,37 @@ mod tests {
             Err(ServeError::ShuttingDown | ServeError::WorkerGone)
         ));
         assert!(matches!(h.register(Csr::identity(4)), Err(ServeError::ShuttingDown)));
+    }
+
+    /// Per-request estimated policy: a fully-cold one-shot request
+    /// speculates (bit-identically), nothing reaches the shared store,
+    /// and once an exact plan is cached the same policy rides the hit.
+    #[test]
+    fn estimated_requests_speculate_cold_and_never_store() {
+        let server = mem_server(8);
+        let h = server.handle();
+        let client = h.new_client();
+        let a = Arc::new(random_square(5, 96));
+        let out = h.multiply_policy(client, Arc::clone(&a), Arc::clone(&a), Some(PlannerPolicy::Estimated)).unwrap();
+        assert_eq!(out.source, PlanSource::Estimated);
+        assert_eq!(out.symbolic_s, 0.0, "no exact symbolic phase ran");
+        assert_eq!(out.c, hash::multiply(&a, &a), "speculative serve output must be bit-identical");
+        assert_eq!(h.store_stats().stores, 0, "speculative plans never enter the shared store");
+        // A default-policy request is exact and warms the store...
+        let out2 = h.multiply(client, Arc::clone(&a), Arc::clone(&a)).unwrap();
+        assert_eq!(out2.source, PlanSource::Fresh);
+        assert_eq!(out2.checksum, out.checksum);
+        // ...and an estimated request now rides the exact hit.
+        let out3 = h.multiply_policy(client, Arc::clone(&a), a, Some(PlannerPolicy::Estimated)).unwrap();
+        assert_eq!(out3.source, PlanSource::Mem);
+        assert_eq!(out3.checksum, out.checksum);
+        let st = h.stats();
+        assert_eq!((st.plan_estimated, st.plan_misses, st.plan_hits), (1, 1, 1));
+        assert_eq!(st.per_client.get(&client).unwrap().estimated, 1);
+        assert_eq!(st.hit_rate(), 0.5, "estimated requests are excluded from the hit rate");
+        let js = h.stats_json().render();
+        assert!(js.contains("\"plan_estimated\":1"), "{js}");
+        server.shutdown();
     }
 
     #[test]

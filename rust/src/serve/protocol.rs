@@ -12,6 +12,8 @@
 //! < {"ok":true,"nnz":2,"checksum":"…","plan":"fresh","plan_s":…,"fill_s":…,"symbolic_s":…}
 //! > {"op":"multiply","a":0,"b":0,"values":true}
 //! < {"ok":true,...,"plan":"mem","symbolic_s":0.0,"rpt":[…],"col":[…],"val":[…]}
+//! > {"op":"multiply","a":0,"b":0,"planner":"estimated"}
+//! < {"ok":true,...,"plan":"estimated",...}   (cold one-shot: speculative plan, never stored)
 //! > {"op":"stats"}            < {"ok":true,"stats":{…}}
 //! > {"op":"release","handle":0}  < {"ok":true,"released":0}
 //! > {"op":"ping"}             < {"ok":true,"pong":true}
@@ -32,6 +34,7 @@
 
 use super::{MultiplyOutcome, ServeError, ServeHandle};
 use crate::sparse::Csr;
+use crate::spgemm::hash::PlannerPolicy;
 use crate::util::error::{anyhow, bail, Result};
 use crate::util::json::Json;
 
@@ -41,8 +44,10 @@ pub enum Request {
     /// Upload an operand (inline CSR or a named generated dataset).
     Register { matrix: Csr },
     /// Multiply two registered operands; `values` asks for the full
-    /// result arrays instead of just `nnz` + checksum.
-    Multiply { a: u64, b: u64, values: bool },
+    /// result arrays instead of just `nnz` + checksum; `planner`
+    /// overrides the daemon's default policy for this request
+    /// (`"exact"` / `"estimated"` / `"auto"`).
+    Multiply { a: u64, b: u64, values: bool, planner: Option<PlannerPolicy> },
     Release { handle: u64 },
     Stats,
     Ping,
@@ -64,12 +69,27 @@ pub fn parse_request(line: &str) -> Result<Request> {
             a: field_u64(&doc, "a")?,
             b: field_u64(&doc, "b")?,
             values: doc.get("values").and_then(Json::as_bool).unwrap_or(false),
+            planner: parse_planner(&doc)?,
         }),
         "release" => Ok(Request::Release { handle: field_u64(&doc, "handle")? }),
         "stats" => Ok(Request::Stats),
         "ping" => Ok(Request::Ping),
         "shutdown" => Ok(Request::Shutdown),
         other => bail!("unknown op {other:?}"),
+    }
+}
+
+/// Optional per-request planner override; an unknown value is a
+/// `bad_request`, never a silent fallback to the daemon default.
+fn parse_planner(doc: &Json) -> Result<Option<PlannerPolicy>> {
+    match doc.get("planner") {
+        None => Ok(None),
+        Some(v) => {
+            let s = v.as_str().ok_or_else(|| anyhow!("field 'planner' must be a string"))?;
+            PlannerPolicy::parse(s)
+                .map(Some)
+                .ok_or_else(|| anyhow!("unknown planner {s:?} (expected exact, estimated, or auto)"))
+        }
     }
 }
 
@@ -200,7 +220,7 @@ pub fn handle_line(h: &ServeHandle, client: u64, line: &str) -> (String, bool) {
                 Err(e) => serve_error_response(&e),
             }
         }
-        Request::Multiply { a, b, values } => match h.multiply_by_handle(client, a, b) {
+        Request::Multiply { a, b, values, planner } => match h.multiply_by_handle_policy(client, a, b, planner) {
             Ok(out) => multiply_response(&out, values),
             Err(e) => serve_error_response(&e),
         },
@@ -234,7 +254,7 @@ mod tests {
 
     fn mem_server() -> Server {
         Server::start_with_store(
-            &ServeConfig { queue_capacity: 8, n_streams: 2, plan_cache: None },
+            &ServeConfig { queue_capacity: 8, n_streams: 2, ..ServeConfig::default() },
             TieredStore::mem_only(),
         )
     }
@@ -256,8 +276,12 @@ mod tests {
             Request::Release { handle: 7 }
         ));
         match parse_request(r#"{"op":"multiply","a":1,"b":2,"values":true}"#).unwrap() {
-            Request::Multiply { a: 1, b: 2, values: true } => {}
+            Request::Multiply { a: 1, b: 2, values: true, planner: None } => {}
             other => panic!("bad multiply parse: {other:?}"),
+        }
+        match parse_request(r#"{"op":"multiply","a":1,"b":2,"planner":"estimated"}"#).unwrap() {
+            Request::Multiply { planner: Some(PlannerPolicy::Estimated), values: false, .. } => {}
+            other => panic!("bad planner parse: {other:?}"),
         }
         match parse_request(&inline_register_line()).unwrap() {
             Request::Register { matrix } => {
@@ -275,6 +299,8 @@ mod tests {
             r#"{"op":"frobnicate"}"#,
             r#"{"op":"multiply","a":1}"#,
             r#"{"op":"multiply","a":"x","b":2}"#,
+            r#"{"op":"multiply","a":1,"b":2,"planner":"frobnicate"}"#,
+            r#"{"op":"multiply","a":1,"b":2,"planner":7}"#,
             r#"{"op":"release"}"#,
             r#"{"op":"register"}"#,
             r#"{"op":"register","dataset":"no-such-dataset"}"#,
@@ -327,6 +353,39 @@ mod tests {
         let err = Json::parse(&resp).unwrap();
         assert_eq!(err.get("ok").and_then(Json::as_bool), Some(false));
         assert_eq!(err.get("error").and_then(Json::as_str), Some("unknown_handle"), "{resp}");
+        server.shutdown();
+    }
+
+    /// A cold one-shot multiply with `"planner":"estimated"` answers
+    /// `plan:"estimated"` with the same checksum as the exact path, and
+    /// the store's `stores` counter never moves for it.
+    #[test]
+    fn estimated_multiply_request_round_trips() {
+        let server = mem_server();
+        let h = server.handle();
+        let client = h.new_client();
+        let (resp, _) = handle_line(&h, client, &inline_register_line());
+        let handle = Json::parse(&resp).unwrap().get("handle").and_then(Json::as_u64).unwrap();
+        let est_line = format!(r#"{{"op":"multiply","a":{handle},"b":{handle},"planner":"estimated"}}"#);
+        let (resp1, _) = handle_line(&h, client, &est_line);
+        let m1 = Json::parse(&resp1).unwrap();
+        assert_eq!(m1.get("plan").and_then(Json::as_str), Some("estimated"), "{resp1}");
+        assert_eq!(m1.get("symbolic_s").and_then(Json::as_f64), Some(0.0));
+        // The exact path agrees bit-for-bit.
+        let (resp2, _) = handle_line(&h, client, &format!(r#"{{"op":"multiply","a":{handle},"b":{handle}}}"#));
+        let m2 = Json::parse(&resp2).unwrap();
+        assert_eq!(m2.get("plan").and_then(Json::as_str), Some("fresh"), "{resp2}");
+        assert_eq!(
+            m1.get("checksum").and_then(Json::as_str),
+            m2.get("checksum").and_then(Json::as_str),
+            "estimated and exact must be bit-identical"
+        );
+        // Stats: the estimated request is its own bucket.
+        let (resp, _) = handle_line(&h, client, r#"{"op":"stats"}"#);
+        let stats = Json::parse(&resp).unwrap();
+        let s = stats.get("stats").unwrap();
+        assert_eq!(s.get("plan_estimated").and_then(Json::as_i64), Some(1), "{resp}");
+        assert_eq!(s.get("plan_misses").and_then(Json::as_i64), Some(1));
         server.shutdown();
     }
 

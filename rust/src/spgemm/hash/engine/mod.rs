@@ -83,10 +83,12 @@ mod symbolic;
 mod traced;
 
 pub use numeric::{numeric, numeric_bin_into, numeric_timed};
+pub(crate) use numeric::accum_row_spa;
 pub use symbolic::{symbolic, symbolic_cfg};
 pub(crate) use symbolic::{build_bins, symbolic_row_nnz_bitmap, symbolic_row_nnz_hash, symbolic_timed};
 pub use traced::{multiply_single_pass, multiply_traced, multiply_traced_cfg, multiply_traced_stats};
 
+use super::estimate::{default_planner_policy, PlannerPolicy};
 use super::grouping::{AccumKind, GroupSpec, Grouping, RowKernel, Strategy, SymbolicKind, GROUP_SPECS};
 use super::table::{HashTable, TableLoc};
 use crate::sim::gpu::DeviceConfig;
@@ -117,6 +119,14 @@ pub struct EngineConfig {
     /// benches pin the counting kernel with `Some(0.0)` (bitmap
     /// everywhere) / `Some(8.0)` (hash everywhere).
     pub symbolic_threshold: Option<f64>,
+    /// Which symbolic planner policy-aware call sites run
+    /// ([`PlannerPolicy`]): exact (default), estimated (speculate on
+    /// cold one-shot products), or auto. The engine's own entry points
+    /// ([`multiply`], [`symbolic()`]) are always exact — the policy is
+    /// consulted by the coordinator/serve layers, which route cold
+    /// one-shot products through
+    /// [`super::estimate::multiply_estimated`] when it speculates.
+    pub planner: PlannerPolicy,
 }
 
 impl Default for EngineConfig {
@@ -125,8 +135,14 @@ impl Default for EngineConfig {
     /// the `SPGEMM_AIA_SPA_THRESHOLD` env var, else the cache-geometry
     /// derivation for the simulated device
     /// ([`super::grouping::DEFAULT_SPA_THRESHOLD`] is its H200 value).
+    /// The planner policy defaults analogously (`--planner`, else
+    /// `SPGEMM_AIA_PLANNER`, else exact).
     fn default() -> EngineConfig {
-        EngineConfig { spa_threshold: default_spa_threshold(), symbolic_threshold: None }
+        EngineConfig {
+            spa_threshold: default_spa_threshold(),
+            symbolic_threshold: None,
+            planner: default_planner_policy(),
+        }
     }
 }
 
@@ -461,17 +477,17 @@ mod tests {
         // Narrow outputs keep the configured knob as-is; a symbolic
         // override replaces only the symbolic half. The boundary
         // invariants survive scaling: 0.0 stays 0.0, ≥ 1.0 stays ≥ 1.0.
-        let cfg = EngineConfig { spa_threshold: 0.25, symbolic_threshold: None };
+        let cfg = EngineConfig { spa_threshold: 0.25, symbolic_threshold: None, planner: PlannerPolicy::Exact };
         assert_eq!(effective_thresholds(&cfg, 1_000), (0.25, 0.25));
-        let cfg = EngineConfig { spa_threshold: 0.25, symbolic_threshold: Some(0.0) };
+        let cfg = EngineConfig { spa_threshold: 0.25, symbolic_threshold: Some(0.0), planner: PlannerPolicy::Exact };
         assert_eq!(effective_thresholds(&cfg, 1_000), (0.0, 0.25));
         // Past the per-block L2 share (512 KiB / 4 B = 131072 columns)
         // both halves scale up together.
-        let cfg = EngineConfig { spa_threshold: 0.25, symbolic_threshold: None };
+        let cfg = EngineConfig { spa_threshold: 0.25, symbolic_threshold: None, planner: PlannerPolicy::Exact };
         let (sym, num) = effective_thresholds(&cfg, 4 * 131_072);
         assert!((num - 1.0).abs() < 1e-12, "numeric threshold must scale with L2 overflow");
         assert_eq!(sym, num);
-        let cfg = EngineConfig { spa_threshold: 0.0, symbolic_threshold: None };
+        let cfg = EngineConfig { spa_threshold: 0.0, symbolic_threshold: None, planner: PlannerPolicy::Exact };
         assert_eq!(effective_thresholds(&cfg, 4 * 131_072), (0.0, 0.0));
     }
 

@@ -203,8 +203,15 @@ pub(crate) fn accum_row_fast(a: &Csr, b: &Csr, i: usize, table: &mut HashTable, 
 /// Dense-SPA accumulation row processor (plan-guided dense rows): same
 /// intermediate products, same per-column accumulation order as the
 /// hash path, but into `vals[col]` directly — no probing. Caller clears
-/// the SPA and sorts `scratch`.
-fn accum_row_spa(a: &Csr, b: &Csr, i: usize, spa: &mut DenseAccumulator, scratch: &mut Vec<(u32, f64)>) {
+/// the SPA and sorts `scratch`. `pub(crate)` so the speculative driver
+/// ([`super::super::estimate`]) runs the byte-identical float sequence.
+pub(crate) fn accum_row_spa(
+    a: &Csr,
+    b: &Csr,
+    i: usize,
+    spa: &mut DenseAccumulator,
+    scratch: &mut Vec<(u32, f64)>,
+) {
     for j in a.row_range(i) {
         let colk = a.col[j] as usize;
         let av = a.val[j];
@@ -252,15 +259,16 @@ pub(crate) fn accum_row_spa_traced<P: Probe>(
 #[cfg(test)]
 mod tests {
     use super::super::testutil::dense_pair;
-    use super::super::{multiply, multiply_cfg, multiply_timed, symbolic, EngineConfig};
+    use super::super::{multiply, multiply_cfg, multiply_timed, symbolic, EngineConfig, PlannerPolicy};
     use super::*;
     use crate::spgemm::reference::spgemm_reference;
 
     #[test]
     fn spa_and_hash_paths_are_bit_identical() {
         let (a, b) = dense_pair(101, 96);
-        let forced_spa = multiply_cfg(&a, &b, &EngineConfig { spa_threshold: 0.0, symbolic_threshold: None });
-        let no_spa = multiply_cfg(&a, &b, &EngineConfig { spa_threshold: 2.0, symbolic_threshold: None });
+        let spa_cfg = EngineConfig { spa_threshold: 0.0, symbolic_threshold: None, planner: PlannerPolicy::Exact };
+        let forced_spa = multiply_cfg(&a, &b, &spa_cfg);
+        let no_spa = multiply_cfg(&a, &b, &EngineConfig { spa_threshold: 2.0, ..spa_cfg });
         let default = multiply(&a, &b);
         // bit-for-bit across all accumulator selections
         assert_eq!(forced_spa, no_spa);

@@ -36,7 +36,7 @@ pub fn symbolic(a: &Csr, b: &Csr) -> SymbolicPlan {
 ///
 /// ```
 /// use spgemm_aia::sparse::Csr;
-/// use spgemm_aia::spgemm::hash::{symbolic_cfg, AccumKind, EngineConfig};
+/// use spgemm_aia::spgemm::hash::{symbolic_cfg, AccumKind, EngineConfig, PlannerPolicy};
 ///
 /// // Row 0 of C = A·B is fully dense (4/4 columns), row 1 comes from a
 /// // single A entry.
@@ -45,11 +45,11 @@ pub fn symbolic(a: &Csr, b: &Csr) -> SymbolicPlan {
 ///     vec![1.0, 1.0, 0.0, 0.0],
 ///     vec![0.0, 0.0, 1.0, 1.0],
 /// ]);
-/// let plan = symbolic_cfg(&a, &b, &EngineConfig { spa_threshold: 0.5, symbolic_threshold: None });
+/// let plan = symbolic_cfg(&a, &b, &EngineConfig { spa_threshold: 0.5, symbolic_threshold: None, planner: PlannerPolicy::Exact });
 /// assert_eq!(plan.accumulator_kind(0), Some(AccumKind::Spa));
 /// assert_eq!(plan.accumulator_kind(1), Some(AccumKind::ScaledCopy));
 /// // Raising the threshold past 1.0 disables the SPA entirely.
-/// let plan = symbolic_cfg(&a, &b, &EngineConfig { spa_threshold: 2.0, symbolic_threshold: None });
+/// let plan = symbolic_cfg(&a, &b, &EngineConfig { spa_threshold: 2.0, symbolic_threshold: None, planner: PlannerPolicy::Exact });
 /// assert_eq!(plan.accumulator_kind(0), Some(AccumKind::Hash));
 /// ```
 pub fn symbolic_cfg(a: &Csr, b: &Csr, cfg: &EngineConfig) -> SymbolicPlan {
@@ -306,7 +306,7 @@ pub(crate) fn alloc_row_bitmap_traced<P: Probe>(
 #[cfg(test)]
 mod tests {
     use super::super::testutil::{dense_pair, random_csr};
-    use super::super::numeric;
+    use super::super::{numeric, PlannerPolicy};
     use super::*;
     use crate::spgemm::reference::spgemm_reference;
     use crate::util::Pcg32;
@@ -328,12 +328,14 @@ mod tests {
     fn threshold_boundaries_select_kinds() {
         let (a, b) = dense_pair(7, 64);
         // 0.0 forces SPA on every multi-entry row: no hash bins remain.
-        let plan = symbolic_cfg(&a, &b, &EngineConfig { spa_threshold: 0.0, symbolic_threshold: None });
+        let cfg = EngineConfig { spa_threshold: 0.0, symbolic_threshold: None, planner: PlannerPolicy::Exact };
+        let plan = symbolic_cfg(&a, &b, &cfg);
         assert!(plan.bins.iter().all(|bin| bin.kind != AccumKind::Hash), "0.0 must force SPA");
         assert!(plan.kind_rows()[AccumKind::Spa.index()] > 0);
         // ≥ 1.0 disables SPA entirely.
         for thr in [1.0, 1.5] {
-            let plan = symbolic_cfg(&a, &b, &EngineConfig { spa_threshold: thr, symbolic_threshold: None });
+            let cfg = EngineConfig { spa_threshold: thr, ..cfg };
+            let plan = symbolic_cfg(&a, &b, &cfg);
             assert!(plan.bins.iter().all(|bin| bin.kind != AccumKind::Spa), "{thr} must disable SPA");
         }
     }
@@ -343,7 +345,7 @@ mod tests {
         let mut rng = Pcg32::seeded(41);
         let a = random_csr(&mut rng, 200, 180, 0.04);
         let b = random_csr(&mut rng, 180, 150, 0.04);
-        let cfg = EngineConfig { spa_threshold: 0.25, symbolic_threshold: None };
+        let cfg = EngineConfig { spa_threshold: 0.25, symbolic_threshold: None, planner: PlannerPolicy::Exact };
         let plan = symbolic_cfg(&a, &b, &cfg);
         for r in 0..a.n_rows {
             let expect = select_symbolic(a.row_nnz(r), plan.ip[r], b.n_cols, 0.25);
@@ -352,7 +354,7 @@ mod tests {
         assert_eq!(plan.symbolic_kind_rows().iter().sum::<usize>(), a.n_rows);
         // A symbolic override rewires only the counting kernel, never
         // the sizes or the numeric kinds.
-        let forced = symbolic_cfg(&a, &b, &EngineConfig { spa_threshold: 0.25, symbolic_threshold: Some(0.0) });
+        let forced = symbolic_cfg(&a, &b, &EngineConfig { symbolic_threshold: Some(0.0), ..cfg });
         assert_eq!(forced.rpt, plan.rpt);
         assert_eq!(forced.accum, plan.accum);
         assert!(
@@ -394,7 +396,7 @@ mod tests {
         // Dense product at a forced-bitmap threshold: the bitmap kernel
         // must be the one accumulating symbolic seconds.
         let (a, b) = dense_pair(14, 96);
-        let cfg = EngineConfig { spa_threshold: 0.25, symbolic_threshold: Some(0.0) };
+        let cfg = EngineConfig { spa_threshold: 0.25, symbolic_threshold: Some(0.0), planner: PlannerPolicy::Exact };
         let (plan, t) = symbolic_timed(&a, &b, &cfg);
         assert!(plan.symbolic_kind_rows()[SymbolicKind::Bitmap.index()] > 0);
         assert!(t.symbolic_kind_s[SymbolicKind::Bitmap.index()] > 0.0, "bitmap seconds must be recorded");

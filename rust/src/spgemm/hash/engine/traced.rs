@@ -440,7 +440,7 @@ pub fn multiply_traced_stats<P: Probe>(a: &Csr, b: &Csr, probe: &mut P, every: u
 #[cfg(test)]
 mod tests {
     use super::super::testutil::{dense_pair, random_csr};
-    use super::super::{multiply, symbolic, symbolic_cfg};
+    use super::super::{multiply, symbolic, symbolic_cfg, PlannerPolicy};
     use super::*;
     use crate::sim::probe::CountingProbe;
     use crate::spgemm::reference::spgemm_reference;
@@ -531,8 +531,9 @@ mod tests {
         // must drop the allocation phase's indirect ranges (it reads B
         // as plain streamed loads — AIA-ineligible).
         let (a, b) = dense_pair(19, 90);
-        let bitmap = EngineConfig { spa_threshold: 0.25, symbolic_threshold: Some(0.0) };
-        let hash = EngineConfig { spa_threshold: 0.25, symbolic_threshold: Some(8.0) };
+        let planner = PlannerPolicy::Exact;
+        let bitmap = EngineConfig { spa_threshold: 0.25, symbolic_threshold: Some(0.0), planner };
+        let hash = EngineConfig { spa_threshold: 0.25, symbolic_threshold: Some(8.0), planner };
         let mut probe_b = CountingProbe::default();
         let mut probe_h = CountingProbe::default();
         let c_b = multiply_traced_cfg(&a, &b, &mut probe_b, &bitmap);

@@ -1,0 +1,550 @@
+//! Estimation-based speculative planning for cold one-shot products
+//! (ROADMAP "Estimation-based planning for one-shot products", after
+//! OCEAN — PAPERS.md, arxiv 2604.19004).
+//!
+//! The exact symbolic phase is worth amortising across repeated
+//! products (the plan store and delta replanner do exactly that), but
+//! for a *cold, single-shot* multiply its cost is pure overhead: the
+//! plan is built, used once, and thrown away. This module replaces it
+//! with a sampled estimate:
+//!
+//! 1. **Sample** a deterministic subset of A's rows (Pcg32, fixed
+//!    seed) and count their output sizes *exactly* with the same
+//!    group-3 counting kernel a cold plan would run.
+//! 2. **Extrapolate** one compression ratio `Σ exact / Σ IP` over the
+//!    sample and estimate every unsampled row as `clamp(IP · ratio)`;
+//!    sampled rows keep their exact counts for free.
+//! 3. **Plan speculatively**: the estimates flow through the *same*
+//!    kernel-selection and bin-construction code as an exact plan
+//!    ([`select_symbolic`] + [`build_bins`]), producing a
+//!    [`SymbolicPlan`]-shaped plan whose `rpt` is a guess and whose
+//!    hash tables are sized `estimate × slack`.
+//! 4. **Execute with a fallback ladder**: the speculative numeric
+//!    driver ([`multiply_estimated`]) detects an underestimate *per
+//!    row* — a hash table crossing 50 % load — and retries that row
+//!    from scratch at double the capacity until it fits, counting it
+//!    in [`EstimateReport::fallback_rows`]. Scaled-copy rows are
+//!    estimate-independent (the output *is* the scaled B row) and SPA
+//!    rows are dense and cannot overflow, so only hash rows ever
+//!    fall back.
+//!
+//! **Only sizing and kernel choice are speculative — never values.**
+//! Per-column accumulation order is the B-stream encounter order at
+//! any table capacity (each unique column owns one slot; capacity only
+//! permutes *slot positions*, which the final sort over unique keys
+//! canonicalises), so a grown retry is bit-identical to a right-sized
+//! first attempt, and the whole estimated pipeline is bit-identical to
+//! the exact engine. `tests/estimated_plan.rs` pins this with
+//! adversarial estimator injection (forced 0.1×/10×/0× estimates)
+//! through [`multiply_estimated_injected`].
+//!
+//! Speculative plans are **never persisted**: their `rpt` is a guess,
+//! and the [`super::planstore`] disk format round-trips plans other
+//! processes will trust as exact. The policy layer
+//! ([`PlannerPolicy`]) therefore only speculates on fully-cold
+//! one-shot calls — store hits, batch/iterative products, and delta
+//! patches stay exact end to end.
+
+use super::engine::{accum_row_spa, symbolic_row_nnz_hash};
+use super::engine::{build_bins, effective_thresholds, EngineConfig, SymbolicPlan};
+use super::grouping::{global_table_size, select_symbolic, AccumKind, Grouping, GROUP_SPECS};
+use super::table::{DenseAccumulator, HashTable, TableLoc};
+use crate::sim::probe::NullProbe;
+use crate::spgemm::ip::intermediate_products;
+use crate::sparse::Csr;
+use crate::util::Pcg32;
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Which symbolic planner a call site runs (`--planner`, threaded
+/// through [`EngineConfig::planner`] and the coordinator/serve
+/// layers).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PlannerPolicy {
+    /// Always run the exact symbolic phase (the pre-PR-8 behaviour).
+    #[default]
+    Exact,
+    /// Speculate on cold one-shot products: sampled estimates size the
+    /// plan, the numeric phase grows-and-retries underestimated rows.
+    /// Store hits, batch products, and delta patches stay exact.
+    Estimated,
+    /// Let each call site decide: identical to `Estimated` today —
+    /// speculation is already restricted to cold one-shot calls — but
+    /// reserved for measurement-driven crossover selection.
+    Auto,
+}
+
+impl PlannerPolicy {
+    /// Parse a `--planner` / `SPGEMM_AIA_PLANNER` value.
+    pub fn parse(s: &str) -> Option<PlannerPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "exact" => Some(PlannerPolicy::Exact),
+            "estimated" | "estimate" | "est" => Some(PlannerPolicy::Estimated),
+            "auto" => Some(PlannerPolicy::Auto),
+            _ => None,
+        }
+    }
+
+    /// Stable lowercase name (CLI/JSON vocabulary).
+    pub fn name(self) -> &'static str {
+        match self {
+            PlannerPolicy::Exact => "exact",
+            PlannerPolicy::Estimated => "estimated",
+            PlannerPolicy::Auto => "auto",
+        }
+    }
+
+    /// Whether a *cold one-shot* product should use the estimated
+    /// planner under this policy. Store-backed, batch, and delta paths
+    /// ignore this — they are exact under every policy.
+    pub fn speculates(self) -> bool {
+        matches!(self, PlannerPolicy::Estimated | PlannerPolicy::Auto)
+    }
+}
+
+/// Process-default planner policy, set once (same latching knob shape
+/// as `set_default_spa_threshold`): first writer wins, first *reader*
+/// freezes the `SPGEMM_AIA_PLANNER` fallback.
+static PLANNER_CELL: OnceLock<PlannerPolicy> = OnceLock::new();
+
+/// Install the process-default [`PlannerPolicy`] (the CLI's
+/// `--planner` flag). Returns `false` if the default was already
+/// latched by an earlier set or read.
+pub fn set_default_planner_policy(p: PlannerPolicy) -> bool {
+    PLANNER_CELL.set(p).is_ok()
+}
+
+/// The process-default [`PlannerPolicy`]: whatever
+/// [`set_default_planner_policy`] installed, else `SPGEMM_AIA_PLANNER`
+/// (unparsable values are ignored), else [`PlannerPolicy::Exact`].
+pub fn default_planner_policy() -> PlannerPolicy {
+    *PLANNER_CELL.get_or_init(|| {
+        std::env::var("SPGEMM_AIA_PLANNER")
+            .ok()
+            .and_then(|s| PlannerPolicy::parse(&s))
+            .unwrap_or(PlannerPolicy::Exact)
+    })
+}
+
+/// Knobs of the sampled estimator. The defaults keep the estimate
+/// cheap (a few % of rows counted exactly) with enough slack that
+/// honest estimates rarely fall back; the adversarial harness
+/// overrides the estimates themselves, not these knobs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EstimateParams {
+    /// Fraction of A's rows counted exactly (clamped to `min_samples`
+    /// from below and the row count from above).
+    pub sample_fraction: f64,
+    /// Sample at least this many rows (small matrices are effectively
+    /// counted exactly — the estimate degenerates gracefully).
+    pub min_samples: usize,
+    /// Hash tables are sized `estimate × slack` (then rounded to the
+    /// usual ≤ 50 %-load power of two): headroom against per-row
+    /// variance around the global compression ratio.
+    pub slack: f64,
+    /// Seed of the deterministic sampling PRNG — same inputs, same
+    /// sample, same plan.
+    pub seed: u64,
+}
+
+impl Default for EstimateParams {
+    fn default() -> Self {
+        EstimateParams { sample_fraction: 0.02, min_samples: 64, slack: 1.5, seed: 0x0CEA }
+    }
+}
+
+/// What the estimated pipeline did — the speculative counterpart of
+/// the exact engine's `PhaseTimes`, surfaced through executor/serve
+/// metrics (`estimate_s`, `fallback_rows`) and `repro planreuse`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EstimateReport {
+    /// Seconds spent sampling + extrapolating + building the
+    /// speculative plan (replaces the exact `grouping_s +
+    /// symbolic_s`).
+    pub estimate_s: f64,
+    /// Seconds spent in the speculative numeric driver, retries
+    /// included.
+    pub numeric_s: f64,
+    /// Rows whose hash table crossed 50 % load and re-ran at a grown
+    /// capacity (0 when every estimate was sufficient).
+    pub fallback_rows: usize,
+    /// Rows counted exactly by the sampler.
+    pub sampled_rows: usize,
+    /// The speculative plan's total size guess (`plan.nnz()`), kept
+    /// for over/under-shoot reporting against `nnz`.
+    pub estimated_nnz: usize,
+    /// Exact nnz of the output actually produced.
+    pub nnz: usize,
+}
+
+/// Test-only estimator override: `(row, default_estimate) → estimate`,
+/// applied after sampling/extrapolation with the raw return value
+/// trusted verbatim (0 allowed). This is the adversarial-injection
+/// hook — production call sites never pass one.
+pub type EstimateInjector<'a> = &'a dyn Fn(usize, u64) -> u64;
+
+/// Build a speculative [`SymbolicPlan`] from sampled estimates at the
+/// default config/params. The plan is shaped exactly like an exact
+/// one — same grouping, same kernel-selection rules, same bin
+/// construction — but `rpt` holds estimates, so it must only ever be
+/// executed by [`multiply_estimated`]'s fallback-aware driver (the
+/// exact `numeric()` hard-asserts `rpt` against the buffers it sizes)
+/// and must never reach the plan store.
+pub fn estimate_plan(a: &Csr, b: &Csr) -> SymbolicPlan {
+    estimate_plan_with(a, b, &EngineConfig::default(), &EstimateParams::default(), None).0
+}
+
+/// [`estimate_plan`] with explicit config/params; returns the sampled
+/// row count alongside the plan.
+pub fn estimate_plan_cfg(
+    a: &Csr,
+    b: &Csr,
+    cfg: &EngineConfig,
+    params: &EstimateParams,
+) -> (SymbolicPlan, usize) {
+    estimate_plan_with(a, b, cfg, params, None)
+}
+
+/// Core estimator: deterministic sample → exact counts → one global
+/// compression ratio → per-row clamped estimates → the exact engine's
+/// own kernel-selection + bin-construction path.
+fn estimate_plan_with(
+    a: &Csr,
+    b: &Csr,
+    cfg: &EngineConfig,
+    params: &EstimateParams,
+    inject: Option<EstimateInjector>,
+) -> (SymbolicPlan, usize) {
+    assert_eq!(a.n_cols, b.n_rows, "dimension mismatch");
+    let ip = intermediate_products(a, b);
+    let grouping = Grouping::build(&ip);
+    let (sym_threshold, num_threshold) = effective_thresholds(cfg, b.n_cols);
+
+    // --- deterministic row sample, counted exactly ---
+    let n = a.n_rows;
+    let want = ((n as f64 * params.sample_fraction).ceil() as usize).max(params.min_samples).min(n);
+    let sampled: Vec<u32> = if want == n {
+        (0..n as u32).collect()
+    } else {
+        // Partial Fisher–Yates over the row ids: the first `want`
+        // positions of a seeded shuffle — uniform without replacement,
+        // reproducible.
+        let mut ids: Vec<u32> = (0..n as u32).collect();
+        let mut rng = Pcg32::seeded(params.seed);
+        for i in 0..want {
+            let j = i + rng.below_usize(n - i);
+            ids.swap(i, j);
+        }
+        ids.truncate(want);
+        ids
+    };
+    // Exact counts through the group-3 growable-table kernel (handles
+    // trivial rows internally; capacity is bounded by min(IP, n_cols)).
+    let mut exact = vec![0u32; sampled.len()];
+    {
+        let mut table = HashTable::new(1024, TableLoc::Global);
+        for (s, &row) in sampled.iter().enumerate() {
+            let r = row as usize;
+            exact[s] = symbolic_row_nnz_hash(a, b, r, ip[r], &GROUP_SPECS[3], &mut table);
+        }
+    }
+
+    // --- one global compression ratio, applied per row ---
+    let sum_ip: u64 = sampled.iter().map(|&r| ip[r as usize]).sum();
+    let sum_exact: u64 = exact.iter().map(|&u| u as u64).sum();
+    let ratio = if sum_ip == 0 { 1.0 } else { sum_exact as f64 / sum_ip as f64 };
+    let mut est = vec![0u64; n];
+    for r in 0..n {
+        if ip[r] == 0 {
+            continue; // provably empty — IP is an upper bound
+        }
+        let cap = ip[r].min(b.n_cols as u64);
+        est[r] = (((ip[r] as f64 * ratio).round() as u64).max(1)).min(cap);
+    }
+    // Sampled rows keep their exact counts (free, and tightens the
+    // common small-matrix case to a fully exact plan).
+    for (s, &row) in sampled.iter().enumerate() {
+        est[row as usize] = exact[s] as u64;
+    }
+    // Adversarial override — raw values pass through, 0 included.
+    if let Some(f) = inject {
+        for (r, e) in est.iter_mut().enumerate() {
+            *e = f(r, *e);
+        }
+    }
+
+    // --- the exact planner's own selection + binning, fed estimates ---
+    let mut sym = Vec::with_capacity(n);
+    for r in 0..n {
+        sym.push(select_symbolic(a.row_nnz(r), ip[r], b.n_cols, sym_threshold));
+    }
+    let mut rpt = vec![0usize; n + 1];
+    for r in 0..n {
+        rpt[r + 1] = rpt[r] + est[r] as usize;
+    }
+    let (accum, bins) = build_bins(a, b.n_cols, &ip, &grouping, &rpt, &sym, num_threshold);
+    let plan =
+        SymbolicPlan { ip, grouping, rpt, accum, symbolic: sym, bins, spa_threshold: cfg.spa_threshold };
+    (plan, sampled.len())
+}
+
+/// Estimated-plan multiply at the default config/params: speculative
+/// plan + fallback-aware numeric driver. Bit-identical to
+/// [`super::engine::multiply`] — see the module docs for why.
+pub fn multiply_estimated(a: &Csr, b: &Csr) -> (Csr, EstimateReport) {
+    multiply_estimated_cfg(a, b, &EngineConfig::default(), &EstimateParams::default())
+}
+
+/// [`multiply_estimated`] with explicit config/params.
+pub fn multiply_estimated_cfg(
+    a: &Csr,
+    b: &Csr,
+    cfg: &EngineConfig,
+    params: &EstimateParams,
+) -> (Csr, EstimateReport) {
+    multiply_estimated_with(a, b, cfg, params, None)
+}
+
+/// [`multiply_estimated_cfg`] with a test-only estimator override —
+/// the adversarial-injection entry point (`tests/estimated_plan.rs`).
+/// Whatever the injector returns, the output is bit-identical to the
+/// exact engine; only `fallback_rows` and the timings move.
+pub fn multiply_estimated_injected(
+    a: &Csr,
+    b: &Csr,
+    cfg: &EngineConfig,
+    params: &EstimateParams,
+    inject: EstimateInjector,
+) -> (Csr, EstimateReport) {
+    multiply_estimated_with(a, b, cfg, params, Some(inject))
+}
+
+fn multiply_estimated_with(
+    a: &Csr,
+    b: &Csr,
+    cfg: &EngineConfig,
+    params: &EstimateParams,
+    inject: Option<EstimateInjector>,
+) -> (Csr, EstimateReport) {
+    let t0 = Instant::now();
+    let (plan, sampled_rows) = estimate_plan_with(a, b, cfg, params, inject);
+    let estimate_s = t0.elapsed().as_secs_f64();
+
+    let t1 = Instant::now();
+    let (c, fallback_rows) = numeric_estimated(a, b, &plan, params.slack);
+    let numeric_s = t1.elapsed().as_secs_f64();
+
+    let report = EstimateReport {
+        estimate_s,
+        numeric_s,
+        fallback_rows,
+        sampled_rows,
+        estimated_nnz: plan.nnz(),
+        nnz: c.nnz(),
+    };
+    (c, report)
+}
+
+/// The speculative numeric driver. The exact `numeric()` cannot run a
+/// speculative plan — it hard-asserts its buffers against `rpt` and
+/// writes into pre-sized disjoint slices — so this driver assembles
+/// the output row by row from *actual* gathered sizes, with the
+/// per-row grow-and-retry ladder on hash rows:
+///
+/// - **scaled-copy** (single A entry): the output is the scaled B row
+///   verbatim — estimate-independent, never falls back;
+/// - **SPA** (planned dense): one slot per output column — cannot
+///   overflow whatever the estimate was, never falls back;
+/// - **hash**: table sized `max(2, pow2(2 · estimate × slack))`; a row
+///   crossing 50 % load aborts, doubles, and re-runs from scratch
+///   until it fits (counted once in `fallback_rows`). Zero-estimated
+///   rows with live IP start the ladder at minimum capacity.
+///
+/// Returns the exact output CSR plus the fallback-row count.
+fn numeric_estimated(a: &Csr, b: &Csr, plan: &SymbolicPlan, slack: f64) -> (Csr, usize) {
+    assert_eq!(plan.rpt.len(), a.n_rows + 1, "plan does not match inputs");
+    let mut rpt = vec![0usize; a.n_rows + 1];
+    let mut col: Vec<u32> = Vec::with_capacity(plan.nnz());
+    let mut val: Vec<f64> = Vec::with_capacity(plan.nnz());
+    let mut table = HashTable::new(2, TableLoc::Global);
+    let mut spa: Option<DenseAccumulator> = None;
+    let mut scratch: Vec<(u32, f64)> = Vec::new();
+    let mut fallback_rows = 0usize;
+
+    for r in 0..a.n_rows {
+        if plan.ip[r] == 0 {
+            rpt[r + 1] = col.len();
+            continue; // provably empty output row
+        }
+        let est = plan.rpt[r + 1] - plan.rpt[r];
+        // Kernel choice follows the speculative plan, with two
+        // estimate-proof overrides: single-entry rows are always
+        // scaled copies (the plan agrees whenever est > 0), and
+        // zero-estimated live rows — which `build_bins` skipped —
+        // run the hash ladder from minimum capacity.
+        let kind = if a.row_nnz(r) == 1 {
+            AccumKind::ScaledCopy
+        } else if est == 0 {
+            AccumKind::Hash
+        } else {
+            plan.accum[r]
+        };
+        match kind {
+            AccumKind::ScaledCopy => {
+                // Same expression order as the exact engine's
+                // scaled-copy arm: av * b_val, B-row (sorted) order.
+                let j = a.rpt[r];
+                let av = a.val[j];
+                let (bc, bv) = b.row(a.col[j] as usize);
+                col.extend_from_slice(bc);
+                val.extend(bv.iter().map(|&v| av * v));
+            }
+            AccumKind::Spa => {
+                let spa = spa.get_or_insert_with(|| DenseAccumulator::new(b.n_cols));
+                spa.clear();
+                accum_row_spa(a, b, r, spa, &mut scratch);
+                scratch.sort_unstable_by_key(|e| e.0);
+                col.extend(scratch.iter().map(|e| e.0));
+                val.extend(scratch.iter().map(|e| e.1));
+            }
+            AccumKind::Hash => {
+                // Start at estimate × slack (≤ 50 % load if the
+                // estimate holds), never below the minimum table and
+                // never above what min(IP, n_cols) justifies.
+                let bound = plan.ip[r].min(b.n_cols as u64).max(1);
+                let want = (((est as f64) * slack).ceil() as u64).clamp(1, bound);
+                let mut capacity = global_table_size(want);
+                let mut grew = false;
+                loop {
+                    table.reset_with_capacity(capacity);
+                    let mut overflow = false;
+                    'row: for j in a.row_range(r) {
+                        let av = a.val[j];
+                        let colk = a.col[j] as usize;
+                        for k in b.rpt[colk]..b.rpt[colk + 1] {
+                            // The underestimate detector: crossing
+                            // 50 % load means the sizing premise is
+                            // gone — abort before the probe chains
+                            // (or the table itself) degrade.
+                            if table.unique * 2 > table.capacity() {
+                                overflow = true;
+                                break 'row;
+                            }
+                            table.insert_numeric(b.col[k], av * b.val[k], &mut NullProbe);
+                        }
+                    }
+                    if overflow {
+                        capacity = table.capacity() * 2;
+                        grew = true;
+                        continue;
+                    }
+                    table.gather_list(&mut scratch);
+                    break;
+                }
+                if grew {
+                    fallback_rows += 1;
+                }
+                scratch.sort_unstable_by_key(|e| e.0);
+                col.extend(scratch.iter().map(|e| e.0));
+                val.extend(scratch.iter().map(|e| e.1));
+            }
+        }
+        rpt[r + 1] = col.len();
+    }
+    (Csr::new_unchecked(a.n_rows, b.n_cols, rpt, col, val), fallback_rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::engine::{multiply, testutil::random_csr};
+    use super::*;
+
+    fn assert_bit_identical(c: &Csr, r: &Csr) {
+        assert_eq!(c.rpt, r.rpt, "row pointers differ");
+        assert_eq!(c.col, r.col, "column indices differ");
+        assert_eq!(
+            c.val.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            r.val.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "values are not bit-identical"
+        );
+    }
+
+    #[test]
+    fn policy_parse_and_name_round_trip() {
+        for p in [PlannerPolicy::Exact, PlannerPolicy::Estimated, PlannerPolicy::Auto] {
+            assert_eq!(PlannerPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(PlannerPolicy::parse("EXACT"), Some(PlannerPolicy::Exact));
+        assert_eq!(PlannerPolicy::parse("bogus"), None);
+        assert_eq!(PlannerPolicy::default(), PlannerPolicy::Exact);
+        assert!(!PlannerPolicy::Exact.speculates());
+        assert!(PlannerPolicy::Estimated.speculates());
+        assert!(PlannerPolicy::Auto.speculates());
+    }
+
+    #[test]
+    fn estimated_multiply_is_bit_identical_to_exact() {
+        let mut rng = Pcg32::seeded(99);
+        let a = random_csr(&mut rng, 150, 120, 0.04);
+        let b = random_csr(&mut rng, 120, 110, 0.04);
+        let exact = multiply(&a, &b);
+        let (c, report) = multiply_estimated(&a, &b);
+        assert_bit_identical(&c, &exact);
+        assert_eq!(report.nnz, exact.nnz());
+        assert!(report.sampled_rows > 0);
+    }
+
+    #[test]
+    fn estimate_plan_is_deterministic() {
+        let mut rng = Pcg32::seeded(5);
+        let a = random_csr(&mut rng, 300, 200, 0.03);
+        let b = random_csr(&mut rng, 200, 180, 0.03);
+        let cfg = EngineConfig::default();
+        let params = EstimateParams { sample_fraction: 0.1, min_samples: 8, ..Default::default() };
+        let (p1, s1) = estimate_plan_cfg(&a, &b, &cfg, &params);
+        let (p2, s2) = estimate_plan_cfg(&a, &b, &cfg, &params);
+        assert_eq!(s1, s2);
+        assert_eq!(p1.rpt, p2.rpt, "same seed must sample the same rows");
+    }
+
+    #[test]
+    fn forced_underestimate_falls_back_and_stays_identical() {
+        let mut rng = Pcg32::seeded(7);
+        let a = random_csr(&mut rng, 120, 100, 0.08);
+        let b = random_csr(&mut rng, 100, 100, 0.08);
+        let exact = multiply(&a, &b);
+        let cfg = EngineConfig::default();
+        let params = EstimateParams::default();
+        let (c, report) =
+            multiply_estimated_injected(&a, &b, &cfg, &params, &|_r, e| (e / 10).max(1));
+        assert_bit_identical(&c, &exact);
+        assert!(report.fallback_rows > 0, "forced 0.1x underestimates must trigger the ladder");
+    }
+
+    #[test]
+    fn zero_estimates_still_produce_exact_output() {
+        let mut rng = Pcg32::seeded(11);
+        let a = random_csr(&mut rng, 80, 60, 0.1);
+        let b = random_csr(&mut rng, 60, 50, 0.1);
+        let exact = multiply(&a, &b);
+        let (c, _) = multiply_estimated_injected(
+            &a,
+            &b,
+            &EngineConfig::default(),
+            &EstimateParams::default(),
+            &|_r, _e| 0,
+        );
+        assert_bit_identical(&c, &exact);
+    }
+
+    #[test]
+    fn empty_and_degenerate_shapes() {
+        let (c, report) = multiply_estimated(&Csr::zeros(0, 5), &Csr::zeros(5, 3));
+        assert_eq!((c.n_rows, c.n_cols, c.nnz()), (0, 3, 0));
+        assert_eq!(report.fallback_rows, 0);
+        let (c, _) = multiply_estimated(&Csr::zeros(4, 0), &Csr::zeros(0, 3));
+        assert_eq!((c.n_rows, c.n_cols, c.nnz()), (4, 3, 0));
+        let (c, _) = multiply_estimated(&Csr::zeros(4, 6), &Csr::zeros(6, 0));
+        assert_eq!((c.n_rows, c.n_cols, c.nnz()), (4, 0, 0));
+    }
+}

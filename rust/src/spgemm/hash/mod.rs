@@ -13,6 +13,7 @@
 //! §"Symbolic kernel selection", and §"Plan persistence".
 
 pub mod engine;
+pub mod estimate;
 pub mod grouping;
 pub mod incremental;
 pub mod plan;
@@ -24,6 +25,11 @@ pub use engine::{
     default_spa_threshold, multiply, multiply_cfg, multiply_single_pass, multiply_timed, multiply_timed_cfg,
     multiply_traced, multiply_traced_cfg, numeric, numeric_bin_into, numeric_timed, set_default_spa_threshold,
     symbolic, symbolic_cfg, EngineConfig, NumericBin, SymbolicPlan,
+};
+pub use estimate::{
+    default_planner_policy, estimate_plan, estimate_plan_cfg, multiply_estimated, multiply_estimated_cfg,
+    multiply_estimated_injected, set_default_planner_policy, EstimateInjector, EstimateParams,
+    EstimateReport, PlannerPolicy,
 };
 pub use grouping::{
     select_accumulator, select_symbolic, AccumKind, Grouping, RowKernel, Strategy, SymbolicKind,

@@ -571,7 +571,11 @@ mod tests {
         let a = crate::gen::rmat(96, 96 * 5, crate::gen::RmatParams::uniform(), &mut rng);
         // A knob guaranteed to differ from whatever this process runs at.
         let foreign = crate::spgemm::hash::default_spa_threshold() + 1.0;
-        let cfg = crate::spgemm::hash::engine::EngineConfig { spa_threshold: foreign, symbolic_threshold: None };
+        let cfg = crate::spgemm::hash::engine::EngineConfig {
+            spa_threshold: foreign,
+            symbolic_threshold: None,
+            planner: crate::spgemm::hash::PlannerPolicy::Exact,
+        };
         let mut s = DiskStore::new(&dir);
         s.put(Arc::new(PlannedProduct::plan_cfg(&a, &a, &cfg)));
         let fp = PlanFingerprint::of(&a, &a);

@@ -9,11 +9,17 @@
 use spgemm_aia::coordinator::batch::BatchExecutor;
 use spgemm_aia::gen::{rmat, structured, RmatParams};
 use spgemm_aia::sparse::{Coo, Csr};
-use spgemm_aia::spgemm::hash::{self, AccumKind, EngineConfig, PlannedProduct, TieredStore};
+use spgemm_aia::spgemm::hash::{self, AccumKind, EngineConfig, PlannedProduct, PlannerPolicy, TieredStore};
 use spgemm_aia::spgemm::reference::spgemm_reference;
 use spgemm_aia::util::{qc, Pcg32};
 
 const THRESHOLDS: [f64; 5] = [0.0, 0.1, 0.25, 0.5, 1.0];
+
+/// Exact-planner config at `spa_threshold` (the literal would blow past
+/// `max_width` at every call site).
+fn cfg_at(spa_threshold: f64) -> EngineConfig {
+    EngineConfig { spa_threshold, symbolic_threshold: None, planner: PlannerPolicy::Exact }
+}
 
 fn dense_random(rng: &mut Pcg32, n: usize, density: f64) -> Csr {
     let mut coo = Coo::new(n, n);
@@ -36,11 +42,11 @@ fn property_accumulator_paths_bit_identical_rmat() {
         let mut rng = Pcg32::seeded(g.rng.next_u64());
         let a = rmat(n, nnz, params, &mut rng);
         let oracle = spgemm_reference(&a, &a);
-        let baseline = hash::multiply_cfg(&a, &a, &EngineConfig { spa_threshold: 2.0, symbolic_threshold: None });
+        let baseline = hash::multiply_cfg(&a, &a, &cfg_at(2.0));
         assert_eq!(baseline.rpt, oracle.rpt, "hash-only structure vs oracle");
         assert!(baseline.approx_eq(&oracle, 1e-10), "hash-only values vs oracle");
         for thr in THRESHOLDS {
-            let c = hash::multiply_cfg(&a, &a, &EngineConfig { spa_threshold: thr, symbolic_threshold: None });
+            let c = hash::multiply_cfg(&a, &a, &cfg_at(thr));
             assert_eq!(c, baseline, "threshold {thr}: all accumulator paths must agree bit-for-bit");
         }
     });
@@ -57,9 +63,9 @@ fn property_accumulator_paths_bit_identical_structured() {
             2 => ("circuit", structured::circuit(n, &mut rng)),
             _ => ("economics", structured::economics(n, &mut rng)),
         };
-        let baseline = hash::multiply_cfg(&a, &a, &EngineConfig { spa_threshold: 2.0, symbolic_threshold: None });
+        let baseline = hash::multiply_cfg(&a, &a, &cfg_at(2.0));
         for thr in THRESHOLDS {
-            let c = hash::multiply_cfg(&a, &a, &EngineConfig { spa_threshold: thr, symbolic_threshold: None });
+            let c = hash::multiply_cfg(&a, &a, &cfg_at(thr));
             assert_eq!(c, baseline, "{name} at threshold {thr}: paths must agree bit-for-bit");
         }
     });
@@ -70,12 +76,12 @@ fn threshold_zero_forces_spa_threshold_one_disables() {
     let mut rng = Pcg32::seeded(77);
     let a = dense_random(&mut rng, 96, 0.4);
     // 0.0: every multi-entry row with output goes SPA; hash bins vanish.
-    let plan = hash::symbolic_cfg(&a, &a, &EngineConfig { spa_threshold: 0.0, symbolic_threshold: None });
+    let plan = hash::symbolic_cfg(&a, &a, &cfg_at(0.0));
     assert!(plan.bins.iter().all(|b| b.kind != AccumKind::Hash), "0.0 must force SPA");
     assert!(plan.kind_rows()[AccumKind::Spa.index()] > 0, "0.0 must produce SPA bins");
     // 1.0 and above: SPA disabled even on fully dense rows (strict >).
     for thr in [1.0, 4.0] {
-        let plan = hash::symbolic_cfg(&a, &a, &EngineConfig { spa_threshold: thr, symbolic_threshold: None });
+        let plan = hash::symbolic_cfg(&a, &a, &cfg_at(thr));
         assert!(
             plan.bins.iter().all(|b| b.kind != AccumKind::Spa),
             "threshold {thr} must disable SPA"
@@ -84,7 +90,7 @@ fn threshold_zero_forces_spa_threshold_one_disables() {
     // Scaled-copy rows stay scaled-copy regardless of the threshold.
     let d = Csr::from_diag(&[1.5; 96]);
     for thr in [0.0, 0.25, 2.0] {
-        let plan = hash::symbolic_cfg(&d, &a, &EngineConfig { spa_threshold: thr, symbolic_threshold: None });
+        let plan = hash::symbolic_cfg(&d, &a, &cfg_at(thr));
         assert!(
             plan.bins.iter().all(|b| b.kind == AccumKind::ScaledCopy),
             "diagonal A must stay on the copy path at threshold {thr}"
@@ -97,7 +103,7 @@ fn planned_fills_reuse_the_accumulator_decision() {
     let mut rng = Pcg32::seeded(5);
     let a = dense_random(&mut rng, 80, 0.35);
     for thr in THRESHOLDS {
-        let cfg = EngineConfig { spa_threshold: thr, symbolic_threshold: None };
+        let cfg = EngineConfig { spa_threshold: thr, symbolic_threshold: None, planner: PlannerPolicy::Exact };
         let p = PlannedProduct::plan_cfg(&a, &a, &cfg);
         assert_eq!(p.symbolic_plan().spa_threshold, thr, "plan must record its threshold");
         let cold = hash::multiply_cfg(&a, &a, &cfg);
@@ -164,9 +170,9 @@ fn empty_and_degenerate_rows_never_select_spa_wrongly() {
     let mut rng = Pcg32::seeded(13);
     let m = dense_random(&mut rng, 16, 0.3);
     for thr in [0.0, 0.25, 2.0] {
-        let cfg = EngineConfig { spa_threshold: thr, symbolic_threshold: None };
+        let cfg = EngineConfig { spa_threshold: thr, symbolic_threshold: None, planner: PlannerPolicy::Exact };
         assert_eq!(hash::multiply_cfg(&z, &z, &cfg).nnz(), 0);
-        let half = EngineConfig { spa_threshold: 0.5, symbolic_threshold: None };
+        let half = EngineConfig { spa_threshold: 0.5, symbolic_threshold: None, planner: PlannerPolicy::Exact };
         assert_eq!(hash::multiply_cfg(&i, &m, &cfg), hash::multiply_cfg(&i, &m, &half));
         let plan = hash::symbolic_cfg(&z, &z, &cfg);
         assert!(plan.bins.is_empty(), "zero output must produce no numeric bins");

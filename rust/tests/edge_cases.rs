@@ -127,3 +127,67 @@ fn cancellation_is_structural_in_all_engines() {
         assert_eq!(c.val[0], 0.0);
     }
 }
+
+/// Degenerate shapes through the estimated planner (DESIGN.md §2g):
+/// the sampler and the speculative numeric driver must agree bit-for-
+/// bit with the exact engine on empty operands, all-zero rows, a
+/// single-row matrix, and an `n_cols = 0` product — the shapes where
+/// "sample 2% of rows" rounds to nothing or everything.
+#[test]
+fn estimated_path_degenerate_shapes() {
+    let cases: Vec<(&str, Csr, Csr)> = vec![
+        ("empty 0x5 * 5x3", Csr::zeros(0, 5), Csr::zeros(5, 3)),
+        ("inner-empty 4x0 * 0x3", Csr::zeros(4, 0), Csr::zeros(0, 3)),
+        ("all-zero rows 6x6", Csr::zeros(6, 6), Csr::zeros(6, 6)),
+        ("n_cols=0 3x2 * 2x0", Csr::from_dense(&[vec![1.0, 2.0], vec![0.0, 1.0], vec![3.0, 0.0]]), Csr::zeros(2, 0)),
+        (
+            "single row 1x3",
+            Csr::from_dense(&[vec![1.0, 0.0, 2.0]]),
+            Csr::from_dense(&[vec![1.0, 1.0, 0.0], vec![0.0, 0.0, 0.0], vec![0.5, 0.0, 4.0]]),
+        ),
+        (
+            "sparse rows interleaved with zero rows",
+            Csr::from_dense(&[vec![1.0, 0.0], vec![0.0, 0.0], vec![2.0, 3.0], vec![0.0, 0.0]]),
+            Csr::from_dense(&[vec![1.0, 2.0], vec![3.0, 0.0]]),
+        ),
+    ];
+    for (name, a, b) in &cases {
+        let exact = hash::multiply(a, b);
+        let (c, rep) = hash::multiply_estimated(a, b);
+        assert_eq!((c.n_rows, c.n_cols), (exact.n_rows, exact.n_cols), "{name}: shape");
+        assert_eq!(c.rpt, exact.rpt, "{name}: row pointers");
+        assert_eq!(c.col, exact.col, "{name}: column indices");
+        let (eb, gb): (Vec<u64>, Vec<u64>) =
+            (exact.val.iter().map(|v| v.to_bits()).collect(), c.val.iter().map(|v| v.to_bits()).collect());
+        assert_eq!(eb, gb, "{name}: values bitwise");
+        assert_eq!(rep.nnz, exact.nnz(), "{name}: reported nnz");
+    }
+}
+
+/// The same degenerate shapes through the *forced-fallback* grow path:
+/// a zero-estimate injector sends every non-trivial row down the
+/// grow-and-retry ladder from the smallest table, which must recover
+/// bit-identically even when there is nothing (or only one row) to
+/// grow.
+#[test]
+fn estimated_path_degenerate_shapes_forced_fallback() {
+    use spgemm_aia::spgemm::hash::{EngineConfig, EstimateParams};
+    let dense_row: Vec<f64> = (0..32).map(|j| 1.0 + j as f64).collect();
+    let eye: Vec<Vec<f64>> = (0..32).map(|i| (0..32).map(|j| if i == j { 2.0 } else { 0.0 }).collect()).collect();
+    let cases: Vec<(&str, Csr, Csr)> = vec![
+        ("empty 0x5 * 5x3", Csr::zeros(0, 5), Csr::zeros(5, 3)),
+        ("inner-empty 4x0 * 0x3", Csr::zeros(4, 0), Csr::zeros(0, 3)),
+        ("n_cols=0 2x2 * 2x0", Csr::from_dense(&[vec![1.0, 2.0], vec![3.0, 4.0]]), Csr::zeros(2, 0)),
+        ("single dense row 1x32", Csr::from_dense(&[dense_row]), Csr::from_dense(&eye)),
+    ];
+    let (cfg, params) = (EngineConfig::default(), EstimateParams::default());
+    for (name, a, b) in &cases {
+        let exact = hash::multiply(a, b);
+        let (c, _) = hash::multiply_estimated_injected(a, b, &cfg, &params, &|_r, _e| 0);
+        assert_eq!(c.rpt, exact.rpt, "{name}: row pointers under forced zero estimates");
+        assert_eq!(c.col, exact.col, "{name}: column indices under forced zero estimates");
+        let (eb, gb): (Vec<u64>, Vec<u64>) =
+            (exact.val.iter().map(|v| v.to_bits()).collect(), c.val.iter().map(|v| v.to_bits()).collect());
+        assert_eq!(eb, gb, "{name}: values bitwise under forced zero estimates");
+    }
+}

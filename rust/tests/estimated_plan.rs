@@ -1,0 +1,250 @@
+//! Estimated-plan acceptance tests (`DESIGN.md` §2g): the speculative
+//! planner may be arbitrarily wrong and the product must not move.
+//!
+//! - An adversarial estimator-injection harness forces systematic
+//!   under-estimates (0.1×), over-estimates (10×), zero estimates, and
+//!   per-row mixed error through the test-only injector hook, and
+//!   asserts the estimated path stays **bit-identical** (`rpt`, `col`,
+//!   `val` compared bitwise) to the exact `multiply` across the RMAT
+//!   and structured generators — with the grow-and-retry fallback
+//!   (`fallback_rows > 0`) actually observed on the underestimate
+//!   cases, so the recovery path is exercised, not just reachable.
+//! - Policy-boundary properties: `auto` rides the store hit / batch /
+//!   delta paths exactly and speculates only on fully-cold one-shot
+//!   calls, and no speculative plan is ever admitted to the store —
+//!   [`StoreStats::stores`] (disk write-throughs) stays 0 and the
+//!   cache directory stays empty until an *exact* plan is built.
+
+use spgemm_aia::coordinator::batch::{BatchExecutor, PlanSource};
+use spgemm_aia::gen::{rmat, structured, RmatParams};
+use spgemm_aia::sparse::Csr;
+use spgemm_aia::spgemm::hash::planstore::{DiskStore, TieredStore};
+use spgemm_aia::spgemm::hash::{self, EngineConfig, EstimateParams, PlannerPolicy};
+use spgemm_aia::util::{qc, Pcg32};
+use std::path::PathBuf;
+
+/// Per-test scratch directory (tests run in parallel in one process —
+/// the tag keeps them disjoint), cleaned on entry so every run is cold.
+fn scratch(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("spgemm-aia-estplan-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Bitwise output identity: same row pointers, same column indices,
+/// and values equal as raw f64 bit patterns (no epsilon — speculation
+/// must not even reorder an accumulation).
+fn assert_bit_identical(exact: &Csr, got: &Csr, ctx: &str) {
+    assert_eq!((exact.n_rows, exact.n_cols), (got.n_rows, got.n_cols), "{ctx}: shape diverged");
+    assert_eq!(exact.rpt, got.rpt, "{ctx}: row pointers diverged");
+    assert_eq!(exact.col, got.col, "{ctx}: column indices diverged");
+    let eb: Vec<u64> = exact.val.iter().map(|v| v.to_bits()).collect();
+    let gb: Vec<u64> = got.val.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(eb, gb, "{ctx}: values diverged bitwise");
+}
+
+/// The adversarial estimator ladder. Each entry receives
+/// `(row, honest_estimate)` and returns the estimate the planner is
+/// forced to believe; the engine owns recovering from every one of
+/// them.
+const INJECTORS: [(&str, fn(usize, u64) -> u64); 4] = [
+    // Systematic 0.1× underestimate: every hash table starts ~10× too
+    // small, so the pre-insert load guard must trip and grow.
+    ("under-0.1x", |_r, e| (e / 10).max(1)),
+    // Systematic 10× overestimate: tables are oversized (clamped to
+    // the IP bound); wasteful but never wrong.
+    ("over-10x", |_r, e| e.saturating_mul(10)),
+    // Zero for every row: the planner believes the product is empty
+    // and every non-trivial row climbs the grow ladder from the
+    // smallest table.
+    ("zero", |_r, _e| 0),
+    // Per-row mixed error — under, over, zero, and honest interleaved,
+    // so adjacent rows of one bin disagree about their sizing.
+    ("mixed", |r, e| match r % 4 {
+        0 => (e / 10).max(1),
+        1 => e.saturating_mul(10),
+        2 => 0,
+        _ => e,
+    }),
+];
+
+/// One operand pair through the whole ladder: honest estimates first,
+/// then every injected estimator, all bit-identical to the exact
+/// engine.
+fn assert_injection_immune(a: &Csr, b: &Csr, name: &str) {
+    let exact = hash::multiply(a, b);
+    let cfg = EngineConfig::default();
+    let params = EstimateParams::default();
+    let (c, rep) = hash::multiply_estimated_cfg(a, b, &cfg, &params);
+    assert_bit_identical(&exact, &c, &format!("{name} honest"));
+    assert_eq!(rep.nnz, exact.nnz(), "{name}: report must carry the exact output nnz");
+    for (tag, inj) in INJECTORS {
+        let (c, _) = hash::multiply_estimated_injected(a, b, &cfg, &params, &inj);
+        assert_bit_identical(&exact, &c, &format!("{name} {tag}"));
+    }
+}
+
+#[test]
+fn property_injected_estimates_stay_bit_identical_rmat() {
+    qc::check(8, 4242, |g| {
+        let n = 16 + g.dim() * 8;
+        let nnz = n * (2 + g.rng.below_usize(8));
+        let params = match g.rng.below_usize(3) {
+            0 => RmatParams::web(),
+            1 => RmatParams::citation(),
+            _ => RmatParams::uniform(),
+        };
+        let mut rng = Pcg32::seeded(g.rng.next_u64());
+        let a = rmat(n, nnz, params, &mut rng);
+        assert_injection_immune(&a, &a, "rmat");
+        // A distinct right operand as well — the estimator samples A
+        // but sizes tables from B's rows, so a ≠ b must hold too.
+        let b = rmat(n, nnz, RmatParams::uniform(), &mut rng);
+        assert_injection_immune(&a, &b, "rmat-pair");
+    });
+}
+
+#[test]
+fn property_injected_estimates_stay_bit_identical_structured() {
+    qc::check(8, 8484, |g| {
+        let mut rng = Pcg32::seeded(g.rng.next_u64());
+        let n = 32 + g.dim() * 4;
+        let (name, a) = match g.rng.below_usize(4) {
+            0 => ("protein", structured::protein_contact(n, 24, &mut rng)),
+            1 => ("fem_banded", structured::fem_banded(n, 12, &mut rng)),
+            2 => ("circuit", structured::circuit(n, &mut rng)),
+            _ => ("economics", structured::economics(n, &mut rng)),
+        };
+        assert_injection_immune(&a, &a, name);
+    });
+}
+
+/// The underestimate cases must actually take the recovery path, not
+/// merely be survivable: on a product dense enough that rows exceed
+/// the deliberately shrunken tables, `fallback_rows` is observed > 0
+/// for the 0.1×, zero, and mixed injectors (and the honest/over paths
+/// still agree bit-for-bit).
+#[test]
+fn forced_underestimates_are_observed_falling_back() {
+    let mut rng = Pcg32::seeded(11);
+    let a = rmat(512, 512 * 8, RmatParams::web(), &mut rng);
+    let exact = hash::multiply(&a, &a);
+    let cfg = EngineConfig::default();
+    let params = EstimateParams::default();
+    for (tag, inj) in INJECTORS {
+        let (c, rep) = hash::multiply_estimated_injected(&a, &a, &cfg, &params, &inj);
+        assert_bit_identical(&exact, &c, &format!("dense {tag}"));
+        if matches!(tag, "under-0.1x" | "zero" | "mixed") {
+            assert!(rep.fallback_rows > 0, "{tag}: the grow-and-retry ladder must actually fire (report: {rep:?})");
+        }
+    }
+}
+
+/// Policy boundaries under `auto`, disk-backed, across random RMAT
+/// inputs: a fully-cold one-shot call speculates and leaves the store
+/// untouched (no disk write-through, no memory-tier entry, no plan
+/// file); the batch path stays exact and persists; once the store is
+/// warm the same call rides the memory hit instead of re-estimating.
+#[test]
+fn property_auto_speculates_cold_only_and_never_persists() {
+    qc::check(6, 5151, |g| {
+        let n = 48 + g.dim() * 4;
+        let mut rng = Pcg32::seeded(g.rng.next_u64());
+        let a = rmat(n, n * 6, RmatParams::uniform(), &mut rng);
+        let exact = hash::multiply(&a, &a);
+        let dir = scratch(&format!("auto-{n}-{}", g.rng.next_u64()));
+
+        let mut ex = BatchExecutor::with_store(2, TieredStore::with_disk(&dir));
+        ex.planner = PlannerPolicy::Auto;
+        let (c, t) = ex.multiply_cached_traced(&a, &a);
+        assert_eq!(t.source, PlanSource::Estimated, "cold one-shot under auto must speculate");
+        assert_bit_identical(&exact, &c, "auto cold");
+        assert_eq!(ex.store_stats().stores, 0, "a speculative plan must never be written through to disk");
+        assert_eq!(ex.cached_plans(), 0, "a speculative plan must not populate the memory tier either");
+        assert!(DiskStore::new(&dir).entries().is_empty(), "no plan file may exist after a speculative call");
+
+        // Batch slots are reused across fills — always planned exactly,
+        // and the exact plan is store-eligible.
+        let c2 = ex.execute_batch(&[(&a, &a)]).remove(0);
+        assert_bit_identical(&exact, &c2, "auto batch");
+        assert_eq!(ex.stats.estimated_plans, 1, "execute_batch must not speculate");
+        assert_eq!(ex.store_stats().stores, 1, "the exact batch plan is persisted");
+        assert_eq!(DiskStore::new(&dir).entries().len(), 1);
+
+        // Warm store: auto rides the hit, estimate counters stay put.
+        let (c3, t3) = ex.multiply_cached_traced(&a, &a);
+        assert_eq!(t3.source, PlanSource::Mem, "auto must prefer the stored exact plan over re-estimating");
+        assert_bit_identical(&exact, &c3, "auto warm");
+        assert_eq!(ex.stats.estimated_plans, 1);
+        assert_eq!(t3.symbolic_s, 0.0, "the hit path pays no symbolic seconds");
+        let _ = std::fs::remove_dir_all(&dir);
+    });
+}
+
+/// The delta boundary under `auto`, pinned deterministically: a
+/// same-shape drift on a warm baseline delta-patches (exact symbolic
+/// re-run over the dirty rows) instead of speculating, and the patched
+/// plan — unlike the speculative one — is admitted to the store.
+#[test]
+fn auto_prefers_delta_patch_over_speculation_on_drift() {
+    let dir = scratch("auto-delta");
+    let mut rng = Pcg32::seeded(23);
+    let a = rmat(400, 400 * 6, RmatParams::uniform(), &mut rng);
+    let b = rmat(400, 400 * 6, RmatParams::web(), &mut rng);
+
+    let mut ex = BatchExecutor::with_store(2, TieredStore::with_disk(&dir));
+    ex.planner = PlannerPolicy::Auto;
+    // Seed the baseline exactly (explicit policy override beats the
+    // executor default — the serve daemon leans on this).
+    let (_, t0) = ex.multiply_cached_policy(&a, &b, PlannerPolicy::Exact);
+    assert_eq!(t0.source, PlanSource::Fresh);
+    assert_eq!(ex.store_stats().stores, 1);
+
+    // 2% of A's rows drift: the store misses on the new fingerprint,
+    // but the same-shape baseline patches — no speculation.
+    let a2 = hash::mutate_row_fraction(&a, 0.02, 77);
+    let exact2 = hash::multiply(&a2, &b);
+    let (c2, t2) = ex.multiply_cached_traced(&a2, &b);
+    assert_eq!(t2.source, PlanSource::Delta, "warm same-shape drift under auto must delta-patch");
+    assert_bit_identical(&exact2, &c2, "auto delta");
+    assert_eq!(ex.stats.estimated_plans, 0, "the estimator must not have run at all");
+    assert_eq!(ex.stats.fallback_rows, 0);
+    assert_eq!(ex.store_stats().stores, 2, "a delta-patched plan is exact and store-eligible");
+
+    // A genuinely new shape is still cold → speculation, still no
+    // third store write.
+    let d = rmat(256, 256 * 5, RmatParams::citation(), &mut rng);
+    let (c3, t3) = ex.multiply_cached_traced(&d, &d);
+    assert_eq!(t3.source, PlanSource::Estimated);
+    assert_bit_identical(&hash::multiply(&d, &d), &c3, "auto cold new shape");
+    assert_eq!(ex.store_stats().stores, 2, "the speculative plan for the new shape must not be stored");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `estimated` (unconditional) vs `exact` on the same executor: the
+/// explicit per-call policy decides, and repeated estimated calls on
+/// an unwarmed store keep speculating — nothing leaks into the store
+/// that would turn the second call into a hit.
+#[test]
+fn estimated_policy_never_warms_the_store_by_itself() {
+    let dir = scratch("est-no-warm");
+    let mut rng = Pcg32::seeded(31);
+    let a = rmat(300, 300 * 5, RmatParams::uniform(), &mut rng);
+    let exact = hash::multiply(&a, &a);
+    let mut ex = BatchExecutor::with_store(2, TieredStore::with_disk(&dir));
+    for round in 0..3 {
+        let (c, t) = ex.multiply_cached_policy(&a, &a, PlannerPolicy::Estimated);
+        assert_eq!(t.source, PlanSource::Estimated, "round {round}: nothing may have been cached");
+        assert_bit_identical(&exact, &c, "estimated round");
+    }
+    assert_eq!(ex.stats.estimated_plans, 3);
+    assert_eq!((ex.stats.plan_hits, ex.stats.plan_misses, ex.stats.plans_built), (0, 0, 0));
+    assert_eq!(ex.store_stats().stores, 0);
+    assert!(DiskStore::new(&dir).entries().is_empty());
+    // The exact policy on the very same executor plans and persists.
+    let (c, t) = ex.multiply_cached_policy(&a, &a, PlannerPolicy::Exact);
+    assert_eq!(t.source, PlanSource::Fresh);
+    assert_bit_identical(&exact, &c, "exact after estimated");
+    assert_eq!(ex.store_stats().stores, 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}

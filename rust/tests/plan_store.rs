@@ -218,7 +218,11 @@ fn foreign_threshold_plan_degrades_to_clean_replan() {
     // Simulate a previous run with a different knob by persisting a plan
     // selected under it directly.
     let foreign = hash::default_spa_threshold() + 1.0;
-    let cfg = spgemm_aia::spgemm::hash::EngineConfig { spa_threshold: foreign, symbolic_threshold: None };
+    let cfg = spgemm_aia::spgemm::hash::EngineConfig {
+        spa_threshold: foreign,
+        symbolic_threshold: None,
+        planner: spgemm_aia::spgemm::hash::PlannerPolicy::Exact,
+    };
     let mut seed_store = DiskStore::new(&dir);
     seed_store.put(Arc::new(PlannedProduct::plan_cfg(&a, &a, &cfg)));
     // This process (default threshold): the file must read as stale.

@@ -41,7 +41,7 @@ fn rmat_square(seed: u64, n: usize, per_row: usize) -> Csr {
 }
 
 fn mem_cfg(queue_capacity: usize) -> ServeConfig {
-    ServeConfig { queue_capacity, n_streams: 2, plan_cache: None }
+    ServeConfig { queue_capacity, n_streams: 2, ..ServeConfig::default() }
 }
 
 /// Four clients on their own threads, every one multiplying the shared

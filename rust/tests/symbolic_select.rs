@@ -9,7 +9,7 @@
 
 use spgemm_aia::gen::{rmat, structured, RmatParams};
 use spgemm_aia::sparse::{Coo, Csr};
-use spgemm_aia::spgemm::hash::{self, select_symbolic, EngineConfig, SymbolicKind, SymbolicPlan};
+use spgemm_aia::spgemm::hash::{self, select_symbolic, EngineConfig, PlannerPolicy, SymbolicKind, SymbolicPlan};
 use spgemm_aia::util::{qc, Pcg32};
 use std::collections::BTreeMap;
 
@@ -22,7 +22,12 @@ fn forced(spa_threshold: f64, kernel: SymbolicKind) -> EngineConfig {
         SymbolicKind::Bitmap => 0.0, // every non-trivial row counts via bitmap
         _ => 8.0,                    // bitmap disabled: every non-trivial row hashes
     };
-    EngineConfig { spa_threshold, symbolic_threshold: Some(t) }
+    EngineConfig { spa_threshold, symbolic_threshold: Some(t), planner: PlannerPolicy::Exact }
+}
+
+/// Plan-guided (no forced kernel) config at `spa_threshold`.
+fn guided(spa_threshold: f64) -> EngineConfig {
+    EngineConfig { spa_threshold, symbolic_threshold: None, planner: PlannerPolicy::Exact }
 }
 
 /// Flatten a plan's bins to a `(group, numeric kind) -> (rows, weight)`
@@ -57,7 +62,7 @@ fn check_kernel_independence(a: &Csr, name: &str) {
     for thr in THRESHOLDS {
         let bitmap = hash::symbolic_cfg(a, a, &forced(thr, SymbolicKind::Bitmap));
         let hashed = hash::symbolic_cfg(a, a, &forced(thr, SymbolicKind::Hash));
-        let guided = hash::symbolic_cfg(a, a, &EngineConfig { spa_threshold: thr, symbolic_threshold: None });
+        let guided = hash::symbolic_cfg(a, a, &guided(thr));
         assert_plans_identical(&hashed, &bitmap, &format!("{name} thr={thr} bitmap-vs-hash"));
         assert_plans_identical(&hashed, &guided, &format!("{name} thr={thr} guided-vs-hash"));
         // Boundary semantics of the forcing override.
@@ -121,12 +126,12 @@ fn shared_threshold_boundaries_drive_the_symbolic_kernel() {
         coo.push(rng.below_usize(96), rng.below_usize(96), rng.f64_range(-1.0, 1.0));
     }
     let a = coo.to_csr();
-    let plan = hash::symbolic_cfg(&a, &a, &EngineConfig { spa_threshold: 0.0, symbolic_threshold: None });
+    let plan = hash::symbolic_cfg(&a, &a, &guided(0.0));
     let rows = plan.symbolic_kind_rows();
     assert_eq!(rows[SymbolicKind::Hash.index()], 0, "0.0 must force the bitmap");
     assert!(rows[SymbolicKind::Bitmap.index()] > 0, "0.0 must actually produce bitmap rows");
     for thr in [1.0, 4.0] {
-        let plan = hash::symbolic_cfg(&a, &a, &EngineConfig { spa_threshold: thr, symbolic_threshold: None });
+        let plan = hash::symbolic_cfg(&a, &a, &guided(thr));
         assert_eq!(
             plan.symbolic_kind_rows()[SymbolicKind::Bitmap.index()],
             0,
@@ -139,7 +144,7 @@ fn shared_threshold_boundaries_drive_the_symbolic_kernel() {
 fn recorded_kinds_follow_the_ip_bound_rule() {
     let mut rng = Pcg32::seeded(7);
     let a = rmat(256, 2048, RmatParams::web(), &mut rng);
-    let cfg = EngineConfig { spa_threshold: 0.25, symbolic_threshold: None };
+    let cfg = guided(0.25);
     let plan = hash::symbolic_cfg(&a, &a, &cfg);
     for r in 0..a.n_rows {
         let expect = select_symbolic(a.row_nnz(r), plan.ip[r], a.n_cols, 0.25);

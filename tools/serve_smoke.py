@@ -160,6 +160,20 @@ def phase1(binary: Path, sock: Path, cache: Path) -> str:
     expect(stats["registered"] == 2 and stats["registered_live"] == 2, f"registration counters: {stats}")
     expect(stats["store"]["stores"] == 1, f"the fresh plan must be persisted: {stats}")
 
+    # A cold one-shot under the per-request estimated policy: a structure
+    # the store has never seen speculates (plan "estimated"), pays zero
+    # symbolic seconds, and must not write a second plan file through to
+    # disk — speculative plans are store-ineligible.
+    hc = c.ok({"op": "register", "matrix": make_csr(44, 256, 6)})["handle"]
+    spec = c.ok({"op": "multiply", "a": hc, "b": hc, "planner": "estimated"})
+    expect(spec["plan"] == "estimated", f"cold one-shot with planner=estimated must speculate: {spec}")
+    expect(spec["symbolic_s"] == 0.0, f"speculative plans never run the exact symbolic phase: {spec}")
+    stats = c.ok({"op": "stats"})["stats"]
+    expect(stats["plan_estimated"] == 1, f"estimated-plan counter: {stats}")
+    expect(stats["store"]["stores"] == 1, f"speculative plans must never be persisted: {stats}")
+    c.err({"op": "multiply", "a": hc, "b": hc, "planner": "frobnicate"}, "bad_request")
+    log("estimated one-shot speculated; store untouched by the speculative plan")
+
     c.ok({"op": "release", "handle": ha})
     c.err({"op": "release", "handle": ha}, "unknown_handle")
     c.err({"op": "multiply", "a": ha, "b": hb}, "unknown_handle")
