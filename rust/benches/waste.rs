@@ -1,0 +1,49 @@
+//! Bench: byte-accurate line-utilization accounting — the tracing cost
+//! of the per-line interval tracker on the traced A^2 runs, with the
+//! measured used/fetched/waste figures emitted as meta so the bench
+//! trend keeps the paper's central quantity (cache-line waste, ±AIA)
+//! under regression watch.
+
+use spgemm_aia::gen::table2_by_name;
+use spgemm_aia::sim::{simulate_stats, AiaMode, SimConfig, SimReport};
+use spgemm_aia::spgemm::Algo;
+use spgemm_aia::util::bench::{bb, Bencher};
+use spgemm_aia::util::json::Json;
+
+fn waste_meta(rep: &SimReport) -> Json {
+    let mut o = Json::obj();
+    o.set("used_bytes", (rep.used_bytes() as i64).into());
+    o.set("fetched_bytes", (rep.fetched_bytes() as i64).into());
+    o.set("waste_ratio", rep.waste_ratio().into());
+    let mut regions = Json::obj();
+    for r in rep.region_waste() {
+        let mut ro = Json::obj();
+        ro.set("used_bytes", (r.used_bytes as i64).into());
+        ro.set("fetched_bytes", (r.fetched_bytes as i64).into());
+        regions.set(r.region.name(), ro);
+    }
+    o.set("regions", regions);
+    o
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    for name in ["scircuit", "p2p-Gnutella04"] {
+        let ds = table2_by_name(name).expect("registered dataset");
+        let a = (ds.gen)(spgemm_aia::repro::SEED);
+        b.group(&format!("waste/{name}"));
+        for (label, aia) in [("aia", AiaMode::On), ("noaia", AiaMode::Off)] {
+            let cfg = SimConfig::for_scale(aia, ds.scale);
+            b.bench(label, || bb(simulate_stats(Algo::Hash, &a, &a, &cfg).total_ms));
+            let rep = simulate_stats(Algo::Hash, &a, &a, &cfg);
+            assert!(
+                rep.used_bytes() <= rep.fetched_bytes(),
+                "{name}/{label}: used {} > fetched {}",
+                rep.used_bytes(),
+                rep.fetched_bytes()
+            );
+            b.meta(&format!("waste/{name}/{label}"), waste_meta(&rep));
+        }
+    }
+    b.finish("waste");
+}

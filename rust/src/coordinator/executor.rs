@@ -379,6 +379,12 @@ impl SpgemmExecutor {
             m.observe_store_stats(&format!("{prefix}.store"), &ss);
         }
         m.gauge(&format!("{prefix}.sim_ms"), self.sim_ms);
+        // Simulated executors also export the byte-accurate line
+        // utilization of every job's report (used/fetched HBM bytes and
+        // the cumulative waste-ratio gauge).
+        for rep in &self.reports {
+            m.observe_sim_waste(&format!("{prefix}.waste"), rep);
+        }
         m.observe_phase_times(&prefix, &self.phase_times);
     }
 }
@@ -599,5 +605,12 @@ mod tests {
         assert!(ex.sim_ms > 0.0);
         assert!(ex.total_ip > 0);
         assert!(ex.gflops() > 0.0);
+        // Waste accounting of both jobs' reports lands in the registry.
+        let mut m = Metrics::new();
+        ex.export_metrics(&mut m);
+        let used = m.counter("spgemm.hash+aia.waste.used_bytes");
+        let fetched = m.counter("spgemm.hash+aia.waste.fetched_bytes");
+        assert!(fetched > 0, "simulated jobs must export fetched bytes");
+        assert!(used > 0 && used <= fetched);
     }
 }

@@ -60,6 +60,30 @@ impl Metrics {
         self.add_time(&format!("{prefix}.numeric_spa"), pt.numeric_kind_s[2]);
     }
 
+    /// Record a simulated report's byte-accurate line-utilization
+    /// accounting: total touched vs fetched HBM bytes under
+    /// `<prefix>.{used_bytes,fetched_bytes}`, the per-phase split under
+    /// `<prefix>.{used_bytes,fetched_bytes}.<phase>`, and the
+    /// `<prefix>.waste_ratio` gauge refreshed from the *cumulative*
+    /// counters — so across repeated observations the gauge stays a
+    /// byte-weighted aggregate, not a last-report snapshot.
+    pub fn observe_sim_waste(&mut self, prefix: &str, rep: &crate::sim::SimReport) {
+        self.inc(&format!("{prefix}.used_bytes"), rep.used_bytes());
+        self.inc(&format!("{prefix}.fetched_bytes"), rep.fetched_bytes());
+        for p in &rep.phases {
+            if p.fetched_bytes == 0 {
+                continue;
+            }
+            self.inc(&format!("{prefix}.used_bytes.{}", p.phase.name()), p.used_bytes);
+            self.inc(&format!("{prefix}.fetched_bytes.{}", p.phase.name()), p.fetched_bytes);
+        }
+        let used = self.counter(&format!("{prefix}.used_bytes"));
+        let fetched = self.counter(&format!("{prefix}.fetched_bytes"));
+        if fetched > 0 {
+            self.gauge(&format!("{prefix}.waste_ratio"), 1.0 - used as f64 / fetched as f64);
+        }
+    }
+
     /// Record a plan-store counter snapshot under
     /// `<prefix>.{mem_hits,disk_hits,misses,delta_patches,stores,evictions,corrupt,stale}`.
     /// Counters are *set* (not incremented): the stats are cumulative
@@ -169,6 +193,55 @@ mod tests {
         assert_eq!(m.counter("s.store.misses"), 2);
         assert_eq!(m.counter("s.store.delta_patches"), 4);
         assert_eq!(m.counter("s.store.stale"), 1);
+    }
+
+    #[test]
+    fn sim_waste_counters_accumulate_and_gauge_stays_aggregate() {
+        use crate::sim::probe::{Phase, Region};
+        use crate::sim::{AiaMode, PhaseReport, RegionWaste, SimReport};
+        fn phase(p: Phase, used: u64, fetched: u64) -> PhaseReport {
+            PhaseReport {
+                phase: p,
+                time_ms: 1.0,
+                l1_hit_ratio: 0.0,
+                l2_hit_ratio: 0.0,
+                accesses: 0,
+                hbm_bytes: fetched,
+                atomics: 0,
+                shared: 0,
+                ops: 0,
+                aia_requests: 0,
+                aia_elems: 0,
+                aia_bound: false,
+                used_bytes: used,
+                fetched_bytes: fetched,
+                regions: vec![RegionWaste { region: Region::ColB, used_bytes: used, fetched_bytes: fetched }],
+            }
+        }
+        let rep = SimReport {
+            aia: AiaMode::Off,
+            sample: 1,
+            phases: vec![
+                phase(Phase::Allocation, 32, 128),
+                phase(Phase::Accumulation, 96, 128),
+                phase(Phase::Grouping, 0, 0),
+            ],
+            total_ms: 2.0,
+        };
+        let mut m = Metrics::new();
+        m.observe_sim_waste("sim", &rep);
+        assert_eq!(m.counter("sim.used_bytes"), 128);
+        assert_eq!(m.counter("sim.fetched_bytes"), 256);
+        assert_eq!(m.counter("sim.used_bytes.symbolic"), 32);
+        assert_eq!(m.counter("sim.used_bytes.numeric"), 96);
+        // A phase that fetched nothing adds no per-phase counters.
+        assert_eq!(m.counter("sim.fetched_bytes.grouping"), 0);
+        // Observing again doubles the counters but the gauge remains the
+        // byte-weighted aggregate, not a last-report snapshot.
+        m.observe_sim_waste("sim", &rep);
+        assert_eq!(m.counter("sim.fetched_bytes"), 512);
+        let s = m.to_json().render();
+        assert!(s.contains("\"sim.waste_ratio\":0.5"), "gauge missing or wrong in {s}");
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //! spgemm-aia gnn --dataset <name> --arch gcn|gin|sage [--epochs N]
 //! spgemm-aia serve --socket <path> [--queue N] [--streams N] [--plan-cache DIR] [--planner P]
 //! spgemm-aia plan-cache ls|verify|prune [--dir DIR] [--max-bytes N]
+//! spgemm-aia calibrate [--datasets a,b,c] [--grid t1,t2,...] [--out DIR]
 //! spgemm-aia info
 //! ```
 
@@ -93,6 +94,7 @@ fn run(args: &[String]) -> Result<()> {
         Some("gnn") => cmd_gnn(args),
         Some("serve") => cmd_serve(args),
         Some("plan-cache") => cmd_plan_cache(args),
+        Some("calibrate") => cmd_calibrate(args),
         Some("info") => cmd_info(),
         Some("help") | None => {
             print_help();
@@ -220,6 +222,82 @@ fn cmd_plan_cache(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// `calibrate` — sweep the SPA/bitmap density threshold across
+/// registered datasets under the traced engine (AIA on), fit the
+/// crossover from the measured time/waste curves, and persist it as a
+/// versioned `calibration.json` next to the plan cache. Later
+/// processes pick it up as their threshold default (`--spa-threshold`
+/// still wins; a corrupt file degrades to the geometry fallback).
+fn cmd_calibrate(args: &[String]) -> Result<()> {
+    use spgemm_aia::spgemm::hash::{calibrate_sweep, default_threshold_grid, CalibrateInput};
+    let out = opt(args, "--out")
+        .map(std::path::PathBuf::from)
+        .or_else(spgemm_aia::spgemm::hash::default_plan_cache_dir)
+        .ok_or_else(|| anyhow!("no output directory (use --out, --plan-cache, or SPGEMM_AIA_PLAN_CACHE)"))?;
+    let names: Vec<&str> = match opt(args, "--datasets") {
+        Some(csv) => csv.split(',').map(str::trim).filter(|s| !s.is_empty()).collect(),
+        None => vec!["scircuit", "Economics", "p2p-Gnutella04"],
+    };
+    if names.is_empty() {
+        bail!("--datasets needs at least one dataset name");
+    }
+    let thresholds: Vec<f64> = match opt(args, "--grid") {
+        Some(csv) => {
+            let mut grid = Vec::new();
+            for s in csv.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+                let t: f64 = s.parse().map_err(|_| anyhow!("--grid: {s} is not a number"))?;
+                if !(0.0..=8.0).contains(&t) {
+                    bail!("--grid threshold out of range [0, 8]: {t}");
+                }
+                grid.push(t);
+            }
+            grid
+        }
+        None => default_threshold_grid(),
+    };
+    if thresholds.is_empty() {
+        bail!("--grid needs at least one threshold");
+    }
+    let s = seed(args);
+    let mut inputs = Vec::new();
+    for name in &names {
+        if let Some(ds) = spgemm_aia::gen::table2_by_name(name) {
+            inputs.push(CalibrateInput { name: ds.paper.name.to_string(), a: (ds.gen)(s), scale: ds.scale });
+        } else if let Some(ds) = spgemm_aia::gen::table3_by_name(name) {
+            inputs.push(CalibrateInput { name: ds.paper.name.to_string(), a: (ds.gen)(s), scale: ds.scale });
+        } else {
+            bail!("unknown dataset {name} (see `info`)");
+        }
+    }
+    println!(
+        "calibrating SPA/bitmap threshold: {} dataset(s) x {} grid point(s), traced engine, AIA on",
+        inputs.len(),
+        thresholds.len()
+    );
+    let cal = calibrate_sweep(&inputs, &thresholds, |name, t, ms, waste| {
+        println!("  {name:<16} t={t:<5} {ms:>10.3} ms  waste {:>5.1}%", 100.0 * waste);
+    });
+    println!("\n  {:>9} {:>12} {:>10} {:>7}", "threshold", "mean ms", "norm time", "waste");
+    for p in &cal.sweep {
+        let mark = if (p.threshold - cal.spa_threshold).abs() < 1e-12 { "  <- chosen" } else { "" };
+        println!(
+            "  {:>9} {:>12.3} {:>10.4} {:>6.1}%{mark}",
+            p.threshold,
+            p.mean_time_ms,
+            p.mean_norm_time,
+            100.0 * p.mean_waste
+        );
+    }
+    let path = cal.save(&out)?;
+    println!(
+        "\ncalibrated spa-threshold = {} (geometry fallback {}) -> {}",
+        cal.spa_threshold,
+        cal.geometry_threshold,
+        path.display()
+    );
+    Ok(())
+}
+
 fn print_help() {
     println!(
         "spgemm-aia — hash-based multi-phase SpGEMM with near-HBM AIA (paper reproduction)\n\n\
@@ -230,16 +308,25 @@ fn print_help() {
          spgemm-aia gnn --dataset Flickr --arch gcn [--epochs 5]\n  \
          spgemm-aia serve --socket PATH [--queue 64] [--streams 4] [--plan-cache DIR] [--planner P]\n  \
          spgemm-aia plan-cache ls|verify|prune [--dir DIR] [--max-bytes N]\n  \
+         spgemm-aia calibrate [--datasets a,b,c] [--grid t1,t2,...] [--out DIR] [--seed N]\n  \
          spgemm-aia info\n\nSERVE:\n  \
          newline-delimited JSON over a unix socket; ops register, multiply,\n  \
          release, stats, ping, shutdown (see README \"Running as a service\").\n  \
-         A full queue answers busy — retry, the daemon never buffers unboundedly.\n\nOPTIONS (all subcommands):\n  \
+         A full queue answers busy — retry, the daemon never buffers unboundedly.\n\nCALIBRATE:\n  \
+         sweeps the SPA/bitmap threshold across registered datasets under the\n  \
+         traced simulator (AIA on), fits the crossover from the measured\n  \
+         time and line-waste curves, and writes a versioned calibration.json\n  \
+         next to the plan cache (--out overrides the directory). Later\n  \
+         processes load it as their threshold default; --spa-threshold and\n  \
+         the env var still win, and a corrupt file degrades to the geometry\n  \
+         fallback (see README \"Calibrated thresholds\").\n\nOPTIONS (all subcommands):\n  \
          --spa-threshold T  dense-kernel density threshold, driving both the numeric SPA\n                     \
          (row switches from hash accumulation when nnz(C_i)/n_cols exceeds T)\n                     \
          and the symbolic bitmap counter (decided from the IP bound).\n                     \
-         Default derives from the simulated device's cache geometry\n                     \
-         (0.25 for the H200's 32-byte sectors); 0 forces the dense\n                     \
-         kernels on every non-trivial row, >=1 disables them\n  \
+         Default resolves flag > SPGEMM_AIA_SPA_THRESHOLD > persisted\n                     \
+         calibration.json (see `calibrate`) > cache geometry (0.25 for\n                     \
+         the H200's 32-byte sectors); 0 forces the dense kernels on\n                     \
+         every non-trivial row, >=1 disables them\n  \
          --plan-cache DIR   persist symbolic plans to DIR (versioned, fingerprint-keyed\n                     \
          binary files) and load validated ones back, so repeated runs\n                     \
          on the same generated dataset skip the symbolic phase across\n                     \
@@ -271,7 +358,13 @@ fn cmd_info() -> Result<()> {
     println!("spa-threshold: {}", spgemm_aia::spgemm::hash::default_spa_threshold());
     println!("planner: {}", spgemm_aia::spgemm::hash::default_planner_policy().name());
     match spgemm_aia::spgemm::hash::default_plan_cache_dir() {
-        Some(d) => println!("plan-cache: {}", d.display()),
+        Some(d) => {
+            println!("plan-cache: {}", d.display());
+            match spgemm_aia::spgemm::hash::Calibration::load(&d) {
+                Some(c) => println!("calibration: spa-threshold {} from {}", c.spa_threshold, d.display()),
+                None => println!("calibration: (none — run `calibrate` to fit thresholds)"),
+            }
+        }
         None => println!("plan-cache: (none — plans live and die with the process)"),
     }
     match Runtime::new(&Runtime::artifacts_dir()) {
@@ -388,13 +481,37 @@ fn cmd_spgemm(args: &[String]) -> Result<()> {
     );
     for p in &ex.reports[0].phases {
         println!(
-            "  {}: {:.3} ms, L1 hit {:.1}%, HBM {:.1} MB{}",
+            "  {}: {:.3} ms, L1 hit {:.1}%, HBM {:.1} MB, line waste {:.1}%{}",
             p.phase.name(),
             p.time_ms,
             100.0 * p.l1_hit_ratio,
             p.hbm_bytes as f64 / 1e6,
+            100.0 * p.waste_ratio(),
             if p.aia_bound { " [AIA-bound]" } else { "" }
         );
+    }
+    // Byte-accurate line utilization (the paper's central quantity):
+    // how much of every HBM line fetched was actually consumed before
+    // eviction, overall and for the heaviest regions.
+    let rep = &ex.reports[0];
+    if rep.fetched_bytes() > 0 {
+        println!(
+            "  line utilization: used {:.2} MB of {:.2} MB fetched ({:.1}% waste)",
+            rep.used_bytes() as f64 / 1e6,
+            rep.fetched_bytes() as f64 / 1e6,
+            100.0 * rep.waste_ratio()
+        );
+        let mut regions = rep.region_waste();
+        regions.sort_by(|x, y| y.fetched_bytes.cmp(&x.fetched_bytes));
+        for r in regions.iter().take(4) {
+            println!(
+                "    {:<10} used {:>9.3} MB / fetched {:>9.3} MB ({:.1}% waste)",
+                r.region.name(),
+                r.used_bytes as f64 / 1e6,
+                r.fetched_bytes as f64 / 1e6,
+                100.0 * r.waste_ratio()
+            );
+        }
     }
     // Row-kernel split of the hash engine's plan: the symbolic per-kind
     // counts next to the numeric ones (ESC has no plan to report).

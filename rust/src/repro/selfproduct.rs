@@ -117,7 +117,9 @@ pub fn fig5() -> Json {
 /// a batch of fills through [`BatchExecutor`] (bins dispatched as
 /// completion events, fill seconds split per accumulator kind); then
 /// the plan-hit rate of a real MCL run, where the flow structure
-/// stabilises as clustering converges.
+/// stabilises as clustering converges; the estimated-planner crossover
+/// on one-shot products; and the byte-accurate line-utilization table
+/// of the traced runs ±AIA.
 pub fn plan_reuse() -> Json {
     println!("\n=== Plan reuse: amortizing symbolic analysis across numeric fills (A^2) ===");
     let t = Table::new(&[15, 11, 11, 11, 9, 10, 6, 15, 15, 12]);
@@ -357,6 +359,51 @@ pub fn plan_reuse() -> Json {
         est_rows.push(o);
     }
     out.set("estimated", est_rows);
+    // Byte-accurate line utilization of the traced A^2 runs, ±AIA: of
+    // every HBM line fetched, how many bytes were actually consumed
+    // before eviction. The paper's central claim in one table — AIA
+    // turns the gather's wasted line fills into consumed stream bytes.
+    println!("\nLine utilization (traced A^2, hash engine): bytes touched vs bytes fetched from HBM");
+    let tw = Table::new(&[15, 12, 11, 11, 11, 20]);
+    tw.header(&["name", "fetched MB", "used MB", "waste off", "waste on", "top waster (off)"]);
+    let mut waste_rows = Json::Arr(vec![]);
+    for ds in active_datasets() {
+        let a = (ds.gen)(SEED);
+        let off = simulate_stats(Algo::Hash, &a, &a, &SimConfig::for_scale(AiaMode::Off, ds.scale));
+        let on = simulate_stats(Algo::Hash, &a, &a, &SimConfig::for_scale(AiaMode::On, ds.scale));
+        let top = off.region_waste().into_iter().max_by_key(|r| r.fetched_bytes - r.used_bytes);
+        let top_label = top
+            .as_ref()
+            .map(|r| format!("{} ({:.0}% waste)", r.region.name(), 100.0 * r.waste_ratio()))
+            .unwrap_or_else(|| "-".into());
+        tw.row(&[
+            ds.paper.name.to_string(),
+            format!("{:.2}", off.fetched_bytes() as f64 / 1e6),
+            format!("{:.2}", off.used_bytes() as f64 / 1e6),
+            format!("{:.1}%", 100.0 * off.waste_ratio()),
+            format!("{:.1}%", 100.0 * on.waste_ratio()),
+            top_label,
+        ]);
+        let mut o = Json::obj();
+        o.set("name", ds.paper.name.into());
+        o.set("used_bytes_off", (off.used_bytes() as i64).into());
+        o.set("fetched_bytes_off", (off.fetched_bytes() as i64).into());
+        o.set("waste_off", off.waste_ratio().into());
+        o.set("used_bytes_on", (on.used_bytes() as i64).into());
+        o.set("fetched_bytes_on", (on.fetched_bytes() as i64).into());
+        o.set("waste_on", on.waste_ratio().into());
+        let mut regions = Json::Arr(vec![]);
+        for r in off.region_waste() {
+            let mut ro = Json::obj();
+            ro.set("region", r.region.name().into());
+            ro.set("used_bytes", (r.used_bytes as i64).into());
+            ro.set("fetched_bytes", (r.fetched_bytes as i64).into());
+            regions.push(ro);
+        }
+        o.set("regions_off", regions);
+        waste_rows.push(o);
+    }
+    out.set("waste", waste_rows);
     save_json("plan_reuse", &out);
     out
 }

@@ -45,6 +45,15 @@ impl Cache {
     /// write-allocate, which matches GPU L1/L2 sector behaviour closely
     /// enough for ratio accounting).
     pub fn access(&mut self, addr: u64) -> CacheResult {
+        self.access_evicting(addr).0
+    }
+
+    /// Like [`Cache::access`], but also reports the *line number* a miss
+    /// evicted (`None` on hits and on cold fills into an invalid way).
+    /// The byte-utilization tracker flushes the victim's touched spans
+    /// into its aggregates at this point (see `sim::ranges`), which is
+    /// what keeps its live-line map bounded by the cache footprint.
+    pub fn access_evicting(&mut self, addr: u64) -> (CacheResult, Option<u64>) {
         self.clock += 1;
         let line = addr >> self.line_shift;
         let set = (line as usize) % self.sets;
@@ -54,7 +63,7 @@ impl Cache {
             if self.tags[base + w] == line {
                 self.stamps[base + w] = self.clock;
                 self.hits += 1;
-                return CacheResult::Hit;
+                return (CacheResult::Hit, None);
             }
         }
         // miss: evict LRU way
@@ -71,9 +80,10 @@ impl Cache {
                 victim = w;
             }
         }
+        let evicted = if self.tags[base + victim] == u64::MAX { None } else { Some(self.tags[base + victim]) };
         self.tags[base + victim] = line;
         self.stamps[base + victim] = self.clock;
-        CacheResult::Miss
+        (CacheResult::Miss, evicted)
     }
 
     pub fn hit_ratio(&self) -> f64 {
@@ -129,6 +139,17 @@ mod tests {
             assert_eq!(c.access(addr), CacheResult::Hit);
         }
         assert_eq!(c.misses, 0);
+    }
+
+    #[test]
+    fn access_evicting_reports_victim_line() {
+        // 2-way, line 64, 2 sets => set-0 tags 0, 2, 4
+        let mut c = Cache::new(256, 2, 64);
+        assert_eq!(c.access_evicting(0), (CacheResult::Miss, None)); // cold fill
+        assert_eq!(c.access_evicting(128), (CacheResult::Miss, None)); // cold fill
+        assert_eq!(c.access_evicting(0), (CacheResult::Hit, None));
+        // set full: line 128 (tag 2) is LRU, its eviction is surfaced
+        assert_eq!(c.access_evicting(256), (CacheResult::Miss, Some(2)));
     }
 
     #[test]

@@ -7,14 +7,21 @@
 //! - `gpu` — the H200-class `DeviceConfig` and `AiaMode`;
 //! - `machine` — the recording probe: cache hierarchy + HBM bandwidth +
 //!   per-stack AIA engines + the analytic SM timing model;
+//! - `ranges` — byte-accurate line-utilization accounting (coalescing
+//!   interval sets per live line, flushed at eviction into per-region ×
+//!   per-phase used/fetched aggregates);
 //! - `run` — one-call `simulate_spgemm` producing a `SimReport`.
 
 pub mod cache;
 pub mod gpu;
 pub mod machine;
 pub mod probe;
+pub mod ranges;
 pub mod run;
 
 pub use gpu::{AiaMode, DeviceConfig};
-pub use machine::{Machine, PhaseReport, SimReport};
-pub use run::{auto_sample, gflops, simulate_spgemm, simulate_spgemm_full, simulate_stats, SimConfig};
+pub use machine::{Machine, PhaseReport, RegionWaste, SimReport};
+pub use ranges::{LineUseTracker, RangeSet};
+pub use run::{
+    auto_sample, gflops, simulate_spgemm, simulate_spgemm_full, simulate_stats, simulate_stats_engine_cfg, SimConfig,
+};

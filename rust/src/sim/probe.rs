@@ -49,6 +49,56 @@ pub enum Region {
     SpaFlags,
 }
 
+impl Region {
+    /// Every region, in the simulator's ordinal order (the order
+    /// `sim::machine` assigns base addresses in). Waste reports index
+    /// into this array.
+    pub const ALL: [Region; 18] = [
+        Region::RptA,
+        Region::ColA,
+        Region::ValA,
+        Region::RptB,
+        Region::ColB,
+        Region::ValB,
+        Region::RptC,
+        Region::ColC,
+        Region::ValC,
+        Region::HashKeys,
+        Region::HashVals,
+        Region::Map,
+        Region::IpCount,
+        Region::GroupCtr,
+        Region::AiaStream,
+        Region::EscExpand,
+        Region::SpaVals,
+        Region::SpaFlags,
+    ];
+
+    /// Stable lowercase name for waste tables, metrics keys, and JSON.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Region::RptA => "rpt_a",
+            Region::ColA => "col_a",
+            Region::ValA => "val_a",
+            Region::RptB => "rpt_b",
+            Region::ColB => "col_b",
+            Region::ValB => "val_b",
+            Region::RptC => "rpt_c",
+            Region::ColC => "col_c",
+            Region::ValC => "val_c",
+            Region::HashKeys => "hash_keys",
+            Region::HashVals => "hash_vals",
+            Region::Map => "map",
+            Region::IpCount => "ip_count",
+            Region::GroupCtr => "group_ctr",
+            Region::AiaStream => "aia_stream",
+            Region::EscExpand => "esc_expand",
+            Region::SpaVals => "spa_vals",
+            Region::SpaFlags => "spa_flags",
+        }
+    }
+}
+
 /// Kernel phases, for per-phase accounting (Fig. 5 reports per-phase L1
 /// hit ratios).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]

@@ -1,0 +1,290 @@
+//! Byte-accurate line-utilization accounting (DESIGN.md §2h).
+//!
+//! The paper's central quantity is *cache-line waste*: the two-level
+//! indirection of SpGEMM fetches full HBM lines but touches only a few
+//! bytes of each. The simulator previously priced a miss as a full
+//! `line_bytes` charge and threw the access width away, so it could not
+//! report the quantity it exists to study. This module closes that gap
+//! with a cachegrind-style structure: a compact coalescing interval set
+//! of touched `[lo, hi)` byte spans per *live* cache line, flushed into
+//! aggregate used/fetched counters (per region × phase) when the line
+//! leaves the L2 — so memory stays bounded by the cache footprint, not
+//! by the trace length.
+
+use std::collections::HashMap;
+
+/// Sorted, disjoint, coalescing set of `[lo, hi)` byte intervals within
+/// one cache line. Adjacent and overlapping inserts merge, so the span
+/// count is bounded by the number of *gaps* ever observed (tiny for a
+/// ≤256-byte line).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RangeSet {
+    /// Sorted by `lo`, pairwise disjoint and non-adjacent.
+    spans: Vec<(u32, u32)>,
+}
+
+impl RangeSet {
+    pub fn new() -> RangeSet {
+        RangeSet { spans: Vec::new() }
+    }
+
+    /// Insert `[lo, hi)`, merging with any overlapping or adjacent spans.
+    pub fn insert(&mut self, lo: u32, hi: u32) {
+        if lo >= hi {
+            return;
+        }
+        // First span that could merge: ends at or after `lo` (an end
+        // exactly at `lo` is adjacent, which also merges).
+        let i = self.spans.partition_point(|&(_, h)| h < lo);
+        let mut new_lo = lo;
+        let mut new_hi = hi;
+        let mut j = i;
+        while j < self.spans.len() && self.spans[j].0 <= hi {
+            new_lo = new_lo.min(self.spans[j].0);
+            new_hi = new_hi.max(self.spans[j].1);
+            j += 1;
+        }
+        if i == j {
+            self.spans.insert(i, (new_lo, new_hi));
+        } else {
+            self.spans[i] = (new_lo, new_hi);
+            self.spans.drain(i + 1..j);
+        }
+    }
+
+    /// Total bytes covered by the set.
+    pub fn covered(&self) -> u64 {
+        self.spans.iter().map(|&(l, h)| (h - l) as u64).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// The disjoint spans, sorted by `lo`.
+    pub fn spans(&self) -> &[(u32, u32)] {
+        &self.spans
+    }
+}
+
+/// One line currently resident in the (modelled) L2: which region/phase
+/// fetched it and which of its bytes have been touched since the fetch.
+struct LiveLine {
+    region: u16,
+    phase: u16,
+    touched: RangeSet,
+}
+
+/// Aggregate used-vs-fetched byte accounting, keyed by
+/// `region × phase` slot ordinals. `fetch` opens a live entry (charging
+/// `line_bytes` fetched), `touch` records byte spans against it, and
+/// `evict`/`flush` fold the covered bytes into the `used` aggregates —
+/// the eviction-time flush is what bounds the live map by the cache
+/// footprint.
+///
+/// Invariant (pinned by tests): `used ≤ fetched` in every cell, because
+/// each live entry corresponds to exactly one `line_bytes` fetch charge
+/// and a [`RangeSet`] over one line covers at most `line_bytes`.
+pub struct LineUseTracker {
+    line_bytes: u32,
+    phases: usize,
+    live: HashMap<u64, LiveLine>,
+    /// `[region * phases + phase]` aggregates, in bytes.
+    used: Vec<u64>,
+    fetched: Vec<u64>,
+}
+
+impl LineUseTracker {
+    pub fn new(line_bytes: usize, regions: usize, phases: usize) -> LineUseTracker {
+        LineUseTracker {
+            line_bytes: line_bytes as u32,
+            phases,
+            live: HashMap::new(),
+            used: vec![0; regions * phases],
+            fetched: vec![0; regions * phases],
+        }
+    }
+
+    #[inline]
+    fn cell(&self, region: usize, phase: usize) -> usize {
+        region * self.phases + phase
+    }
+
+    /// The line was fetched from HBM on behalf of `(region, phase)`:
+    /// charge `line_bytes` fetched and open a live entry seeded with the
+    /// triggering access's `[lo, hi)` span (line-relative offsets). A
+    /// stale entry for the same line (evicted without notice) is flushed
+    /// first, so the one-fetch-per-entry invariant holds.
+    pub fn fetch(&mut self, line: u64, region: usize, phase: usize, lo: u32, hi: u32) {
+        self.evict(line);
+        let cell = self.cell(region, phase);
+        self.fetched[cell] += self.line_bytes as u64;
+        let mut touched = RangeSet::new();
+        touched.insert(lo.min(self.line_bytes), hi.min(self.line_bytes));
+        self.live.insert(line, LiveLine { region: region as u16, phase: phase as u16, touched });
+    }
+
+    /// Bytes `[lo, hi)` of `line` were read or written while resident.
+    /// A no-op when the line is not live (its fetch predates tracking or
+    /// it was already flushed) — dropping touches can only *under*count
+    /// used bytes, which keeps `used ≤ fetched` safe.
+    pub fn touch(&mut self, line: u64, lo: u32, hi: u32) {
+        if let Some(l) = self.live.get_mut(&line) {
+            let lb = self.line_bytes;
+            l.touched.insert(lo.min(lb), hi.min(lb));
+        }
+    }
+
+    /// The line left the cache: fold its covered bytes into `used` and
+    /// drop the live entry.
+    pub fn evict(&mut self, line: u64) {
+        if let Some(l) = self.live.remove(&line) {
+            let cell = l.region as usize * self.phases + l.phase as usize;
+            self.used[cell] += l.touched.covered();
+        }
+    }
+
+    /// Flush every still-live line (end of simulation).
+    pub fn flush(&mut self) {
+        let lines: Vec<u64> = self.live.keys().copied().collect();
+        for line in lines {
+            self.evict(line);
+        }
+    }
+
+    /// Bytes of fetched lines actually touched, attributed to the
+    /// fetching `(region, phase)`. Only complete after [`flush`].
+    ///
+    /// [`flush`]: LineUseTracker::flush
+    pub fn used(&self, region: usize, phase: usize) -> u64 {
+        self.used[self.cell(region, phase)]
+    }
+
+    /// Bytes fetched from HBM on behalf of `(region, phase)` — always a
+    /// whole number of lines.
+    pub fn fetched(&self, region: usize, phase: usize) -> u64 {
+        self.fetched[self.cell(region, phase)]
+    }
+
+    /// Number of live (not yet flushed) line entries — bounded by the
+    /// modelled cache footprint, pinned by a test.
+    pub fn live_lines(&self) -> usize {
+        self.live.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn set(pairs: &[(u32, u32)]) -> RangeSet {
+        let mut s = RangeSet::new();
+        for &(l, h) in pairs {
+            s.insert(l, h);
+        }
+        s
+    }
+
+    #[test]
+    fn insert_disjoint_sorted() {
+        let s = set(&[(8, 12), (0, 4), (20, 24)]);
+        assert_eq!(s.spans(), &[(0, 4), (8, 12), (20, 24)]);
+        assert_eq!(s.covered(), 12);
+    }
+
+    #[test]
+    fn insert_adjacent_coalesces() {
+        let s = set(&[(0, 4), (4, 8)]);
+        assert_eq!(s.spans(), &[(0, 8)]);
+        let s = set(&[(4, 8), (0, 4), (8, 12)]);
+        assert_eq!(s.spans(), &[(0, 12)]);
+    }
+
+    #[test]
+    fn insert_overlapping_merges_many() {
+        let s = set(&[(0, 4), (8, 12), (16, 20), (2, 18)]);
+        assert_eq!(s.spans(), &[(0, 20)]);
+        assert_eq!(s.covered(), 20);
+    }
+
+    #[test]
+    fn insert_contained_is_noop() {
+        let mut s = set(&[(0, 32)]);
+        s.insert(4, 8);
+        assert_eq!(s.spans(), &[(0, 32)]);
+    }
+
+    #[test]
+    fn empty_span_ignored() {
+        let s = set(&[(4, 4), (8, 4)]);
+        assert!(s.is_empty());
+        assert_eq!(s.covered(), 0);
+    }
+
+    #[test]
+    fn covered_matches_bitmap_oracle() {
+        // Pseudo-random spans within a 256-byte line, cross-checked
+        // against a plain byte bitmap.
+        let mut s = RangeSet::new();
+        let mut bitmap = [false; 256];
+        let mut x = 7u64;
+        for _ in 0..500 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(11);
+            let lo = (x % 256) as u32;
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(11);
+            let hi = (lo + 1 + (x % 32) as u32).min(256);
+            s.insert(lo, hi);
+            for b in bitmap.iter_mut().take(hi as usize).skip(lo as usize) {
+                *b = true;
+            }
+            let want = bitmap.iter().filter(|&&b| b).count() as u64;
+            assert_eq!(s.covered(), want);
+            // Structural invariants: sorted, disjoint, non-adjacent.
+            for w in s.spans().windows(2) {
+                assert!(w[0].1 < w[1].0, "spans {:?}", s.spans());
+            }
+        }
+    }
+
+    #[test]
+    fn tracker_used_bounded_by_fetched() {
+        let mut t = LineUseTracker::new(32, 2, 3);
+        t.fetch(100, 1, 2, 0, 4);
+        t.touch(100, 4, 8);
+        t.touch(100, 28, 40); // clamped to line
+        t.touch(999, 0, 32); // not live: dropped
+        t.flush();
+        assert_eq!(t.fetched(1, 2), 32);
+        assert_eq!(t.used(1, 2), 12);
+        assert_eq!(t.used(0, 0), 0);
+    }
+
+    #[test]
+    fn tracker_refetch_flushes_stale_entry() {
+        let mut t = LineUseTracker::new(32, 1, 1);
+        t.fetch(5, 0, 0, 0, 4);
+        // Same line fetched again (evicted without notice in between):
+        // the stale entry's 4 bytes flush, a second line charge lands.
+        t.fetch(5, 0, 0, 8, 16);
+        t.flush();
+        assert_eq!(t.fetched(0, 0), 64);
+        assert_eq!(t.used(0, 0), 12);
+        assert!(t.used(0, 0) <= t.fetched(0, 0));
+    }
+
+    #[test]
+    fn tracker_eviction_folds_into_aggregates() {
+        let mut t = LineUseTracker::new(64, 1, 2);
+        t.fetch(1, 0, 0, 0, 64);
+        t.fetch(2, 0, 1, 0, 8);
+        assert_eq!(t.live_lines(), 2);
+        t.evict(1);
+        assert_eq!(t.live_lines(), 1);
+        assert_eq!(t.used(0, 0), 64);
+        // evicting a non-live line is a no-op
+        t.evict(77);
+        t.flush();
+        assert_eq!(t.used(0, 1), 8);
+        assert_eq!(t.live_lines(), 0);
+    }
+}

@@ -48,6 +48,26 @@ pub fn simulate_spgemm(algo: Algo, a: &Csr, b: &Csr, cfg: &SimConfig) -> (Csr, S
     (c, simulate_stats(algo, a, b, cfg))
 }
 
+/// Stats-only simulation of the hash engine at an explicit
+/// [`EngineConfig`] — the threshold-calibration sweep's entry point:
+/// it traces the same workload under a grid of SPA/bitmap thresholds,
+/// which the default entry points cannot do (they run at the latched
+/// process-wide config).
+///
+/// [`EngineConfig`]: crate::spgemm::hash::EngineConfig
+pub fn simulate_stats_engine_cfg(
+    a: &Csr,
+    b: &Csr,
+    cfg: &SimConfig,
+    engine: &crate::spgemm::hash::EngineConfig,
+) -> SimReport {
+    let total_ip = ip::total_ip(a, b);
+    let sample = cfg.sample.unwrap_or_else(|| auto_sample(total_ip));
+    let mut machine = Machine::new(cfg.device.clone(), cfg.aia, sample);
+    crate::spgemm::hash::engine::multiply_traced_stats_cfg(a, b, &mut machine, sample, engine);
+    machine.finish()
+}
+
 /// Stats-only simulation (no product).
 pub fn simulate_stats(algo: Algo, a: &Csr, b: &Csr, cfg: &SimConfig) -> SimReport {
     let aia = if algo == Algo::Esc { AiaMode::Off } else { cfg.aia };

@@ -1,0 +1,309 @@
+//! Measurement-calibrated kernel thresholds (ROADMAP item: derive the
+//! SPA/bitmap crossovers from measured curves, not geometry).
+//!
+//! The dense-row threshold that decides which rows run the SPA/bitmap
+//! kernels defaults to a static cache-geometry formula
+//! ([`crate::sim::DeviceConfig::dense_row_threshold_base`]). This
+//! module closes the loop from *measurement*: [`calibrate_sweep`] runs
+//! the traced engine over the registered datasets at a grid of
+//! thresholds, records the simulated wall time and the byte-accurate
+//! waste ratio of each run (see `sim::ranges`), and picks the threshold
+//! minimising the mean min-normalised time (waste breaks ties). The
+//! result persists as a versioned `calibration.json` **next to the plan
+//! cache**, where the threshold ladder
+//! ([`super::engine::default_spa_threshold`]) picks it up in later
+//! processes: flag > env > calibration > geometry.
+//!
+//! Thresholds only steer kernel *choice*, never results — outputs stay
+//! bit-identical under any calibration (pinned by
+//! `tests/accumulator_select.rs`, `tests/symbolic_select.rs`, and the
+//! calibration acceptance suite) — so a stale or corrupt file can cost
+//! speed, not correctness. Corruption, schema/version mismatches, and
+//! out-of-range values all degrade to the geometry fallback silently.
+
+use super::engine::EngineConfig;
+use super::estimate::PlannerPolicy;
+use super::planstore::peek_plan_cache_dir;
+use crate::sim::{simulate_stats_engine_cfg, AiaMode, DeviceConfig, SimConfig};
+use crate::sparse::Csr;
+use crate::util::error::{anyhow, Result};
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// File name of the persisted calibration, inside the plan-cache
+/// directory. The plan store's lifecycle tooling (`ls`/`verify`/
+/// `prune`) operates on `.plan` files only and leaves it alone.
+pub const CALIBRATION_FILE: &str = "calibration.json";
+
+/// Schema tag every calibration file carries.
+pub const CALIBRATION_SCHEMA: &str = "spgemm-aia-calibration-v1";
+
+/// Current calibration format version; files from other versions are
+/// ignored (→ geometry fallback), never reinterpreted.
+pub const CALIBRATION_VERSION: i64 = 1;
+
+/// One dataset the sweep measures: the matrix is squared (`A·A`, the
+/// registered datasets' canonical workload) on a device scaled for the
+/// dataset's down-scaling factor.
+pub struct CalibrateInput {
+    pub name: String,
+    pub a: Csr,
+    pub scale: usize,
+}
+
+/// One grid point of the sweep, aggregated across datasets.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CalibrationPoint {
+    pub threshold: f64,
+    /// Mean simulated wall time across datasets, in ms.
+    pub mean_time_ms: f64,
+    /// Mean of per-dataset time normalised by that dataset's best
+    /// threshold (1.0 = this threshold is every dataset's optimum) —
+    /// the fit minimises this, so big datasets don't drown small ones.
+    pub mean_norm_time: f64,
+    /// Mean overall waste ratio (unused fetched bytes / fetched bytes).
+    pub mean_waste: f64,
+}
+
+/// A fitted, persistable threshold calibration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Calibration {
+    pub version: i64,
+    /// The winning SPA/bitmap threshold — what the ladder loads.
+    pub spa_threshold: f64,
+    /// The geometry fallback at fit time, kept for context in reports.
+    pub geometry_threshold: f64,
+    /// Dataset names the sweep measured.
+    pub datasets: Vec<String>,
+    /// The measured curve, one point per grid threshold.
+    pub sweep: Vec<CalibrationPoint>,
+}
+
+impl Calibration {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("schema", CALIBRATION_SCHEMA.into());
+        o.set("version", Json::Int(self.version));
+        o.set("spa_threshold", self.spa_threshold.into());
+        o.set("geometry_threshold", self.geometry_threshold.into());
+        o.set("datasets", Json::Arr(self.datasets.iter().map(|d| Json::Str(d.clone())).collect()));
+        let mut sweep = Vec::new();
+        for p in &self.sweep {
+            let mut po = Json::obj();
+            po.set("threshold", p.threshold.into());
+            po.set("mean_time_ms", p.mean_time_ms.into());
+            po.set("mean_norm_time", p.mean_norm_time.into());
+            po.set("mean_waste", p.mean_waste.into());
+            sweep.push(po);
+        }
+        o.set("sweep", Json::Arr(sweep));
+        o
+    }
+
+    /// Strict on what matters (schema, version, a sane threshold),
+    /// lenient on context fields — any disqualifying anomaly returns
+    /// `None` and the ladder falls back to geometry.
+    pub fn from_json(j: &Json) -> Option<Calibration> {
+        if j.get("schema")?.as_str()? != CALIBRATION_SCHEMA {
+            return None;
+        }
+        let version = j.get("version")?.as_i64()?;
+        if version != CALIBRATION_VERSION {
+            return None;
+        }
+        let spa_threshold = j.get("spa_threshold")?.as_f64()?;
+        if !spa_threshold.is_finite() || !(0.0..=8.0).contains(&spa_threshold) {
+            return None;
+        }
+        let geometry_threshold = j.get("geometry_threshold").and_then(Json::as_f64).unwrap_or(0.0);
+        let datasets = j
+            .get("datasets")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(|d| d.as_str().map(str::to_string)).collect())
+            .unwrap_or_default();
+        let sweep = j
+            .get("sweep")
+            .and_then(Json::as_arr)
+            .map(|arr| {
+                arr.iter()
+                    .filter_map(|p| {
+                        Some(CalibrationPoint {
+                            threshold: p.get("threshold")?.as_f64()?,
+                            mean_time_ms: p.get("mean_time_ms")?.as_f64()?,
+                            mean_norm_time: p.get("mean_norm_time")?.as_f64()?,
+                            mean_waste: p.get("mean_waste")?.as_f64()?,
+                        })
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        Some(Calibration { version, spa_threshold, geometry_threshold, datasets, sweep })
+    }
+
+    /// Write atomically (temp file + rename) as `calibration.json`
+    /// inside `dir`, creating the directory if needed. Returns the
+    /// final path.
+    pub fn save(&self, dir: &Path) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir).map_err(|e| anyhow!("create {}: {e}", dir.display()))?;
+        let path = dir.join(CALIBRATION_FILE);
+        let tmp = dir.join(format!("{CALIBRATION_FILE}.tmp.{}", std::process::id()));
+        std::fs::write(&tmp, self.to_json().render_pretty()).map_err(|e| anyhow!("write {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, &path).map_err(|e| anyhow!("rename {}: {e}", path.display()))?;
+        Ok(path)
+    }
+
+    /// Load `calibration.json` from `dir`. Missing, unreadable,
+    /// unparsable, or invalid files all yield `None` — calibration is
+    /// an optimisation, never an error source.
+    pub fn load(dir: &Path) -> Option<Calibration> {
+        let text = std::fs::read_to_string(dir.join(CALIBRATION_FILE)).ok()?;
+        Calibration::from_json(&Json::parse(&text).ok()?)
+    }
+}
+
+/// The threshold a persisted calibration next to the plan cache
+/// recommends, if one exists and validates. Reads the plan-cache
+/// location *without* latching it (see
+/// `planstore::peek_plan_cache_dir`) so threshold resolution can't
+/// steal a later `--plan-cache` flag's slot.
+pub fn calibrated_spa_threshold() -> Option<f64> {
+    Calibration::load(&peek_plan_cache_dir()?).map(|c| c.spa_threshold)
+}
+
+/// The default sweep grid: dense around the geometric base (0.25 at
+/// 32-byte sectors), sparse toward the disable end.
+pub fn default_threshold_grid() -> Vec<f64> {
+    vec![0.05, 0.1, 0.15, 0.2, 0.25, 0.3, 0.4, 0.5, 0.75, 1.0]
+}
+
+/// Sweep `thresholds` across `inputs` under the traced engine (AIA on —
+/// the device being calibrated) and fit the crossover: the winner
+/// minimises the mean min-normalised simulated time, with the measured
+/// waste ratio breaking ties (lower grid value breaks exact ties, for
+/// determinism). `on_point` fires after each `(dataset, threshold)` run
+/// with `(name, threshold, time_ms, waste_ratio)` — the CLI prints
+/// progress through it; pass `|_, _, _, _| {}` to stay silent.
+pub fn calibrate_sweep<F>(inputs: &[CalibrateInput], thresholds: &[f64], mut on_point: F) -> Calibration
+where
+    F: FnMut(&str, f64, f64, f64),
+{
+    assert!(!inputs.is_empty(), "calibrate_sweep: no datasets");
+    assert!(!thresholds.is_empty(), "calibrate_sweep: empty threshold grid");
+    let mut times = vec![vec![0.0f64; thresholds.len()]; inputs.len()];
+    let mut wastes = vec![vec![0.0f64; thresholds.len()]; inputs.len()];
+    for (d, input) in inputs.iter().enumerate() {
+        let sim = SimConfig::for_scale(AiaMode::On, input.scale);
+        for (k, &t) in thresholds.iter().enumerate() {
+            let engine = EngineConfig { spa_threshold: t, symbolic_threshold: None, planner: PlannerPolicy::Exact };
+            let r = simulate_stats_engine_cfg(&input.a, &input.a, &sim, &engine);
+            times[d][k] = r.total_ms;
+            wastes[d][k] = r.waste_ratio();
+            on_point(&input.name, t, r.total_ms, r.waste_ratio());
+        }
+    }
+    let n = inputs.len() as f64;
+    let mut sweep = Vec::with_capacity(thresholds.len());
+    for (k, &t) in thresholds.iter().enumerate() {
+        let mut ms = 0.0;
+        let mut norm = 0.0;
+        let mut waste = 0.0;
+        for d in 0..inputs.len() {
+            let best = times[d].iter().copied().fold(f64::INFINITY, f64::min).max(1e-12);
+            ms += times[d][k];
+            norm += times[d][k] / best;
+            waste += wastes[d][k];
+        }
+        sweep.push(CalibrationPoint {
+            threshold: t,
+            mean_time_ms: ms / n,
+            mean_norm_time: norm / n,
+            mean_waste: waste / n,
+        });
+    }
+    let mut best = 0;
+    for k in 1..sweep.len() {
+        let (cand, cur) = (&sweep[k], &sweep[best]);
+        let faster = cand.mean_norm_time < cur.mean_norm_time - 1e-9;
+        let tied = (cand.mean_norm_time - cur.mean_norm_time).abs() <= 1e-9;
+        if faster || (tied && cand.mean_waste < cur.mean_waste - 1e-9) {
+            best = k;
+        }
+    }
+    Calibration {
+        version: CALIBRATION_VERSION,
+        spa_threshold: sweep[best].threshold,
+        geometry_threshold: DeviceConfig::h200_scaled().dense_row_threshold_base(),
+        datasets: inputs.iter().map(|i| i.name.clone()).collect(),
+        sweep,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Calibration {
+        Calibration {
+            version: CALIBRATION_VERSION,
+            spa_threshold: 0.15,
+            geometry_threshold: 0.25,
+            datasets: vec!["scircuit".into()],
+            sweep: vec![CalibrationPoint {
+                threshold: 0.15,
+                mean_time_ms: 1.5,
+                mean_norm_time: 1.0,
+                mean_waste: 0.4,
+            }],
+        }
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let c = sample();
+        let j = c.to_json();
+        assert_eq!(Calibration::from_json(&j), Some(c));
+    }
+
+    #[test]
+    fn from_json_rejects_anomalies() {
+        let ok = sample().to_json();
+        assert!(Calibration::from_json(&ok).is_some());
+        let mut wrong_schema = ok.clone();
+        wrong_schema.set("schema", "other-v9".into());
+        assert_eq!(Calibration::from_json(&wrong_schema), None);
+        let mut future = ok.clone();
+        future.set("version", Json::Int(CALIBRATION_VERSION + 1));
+        assert_eq!(Calibration::from_json(&future), None);
+        let mut oob = ok.clone();
+        oob.set("spa_threshold", 9.5.into());
+        assert_eq!(Calibration::from_json(&oob), None);
+        let mut nan = ok.clone();
+        nan.set("spa_threshold", f64::NAN.into());
+        assert_eq!(Calibration::from_json(&nan), None);
+        let mut missing = ok;
+        missing.set("spa_threshold", Json::Null);
+        assert_eq!(Calibration::from_json(&missing), None);
+    }
+
+    #[test]
+    fn load_missing_or_corrupt_is_none() {
+        let dir = std::env::temp_dir().join(format!("spgemm-aia-cal-none-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        assert_eq!(Calibration::load(&dir), None);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join(CALIBRATION_FILE), b"{ not json").unwrap();
+        assert_eq!(Calibration::load(&dir), None);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let dir = std::env::temp_dir().join(format!("spgemm-aia-cal-rt-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let c = sample();
+        let path = c.save(&dir).unwrap();
+        assert_eq!(path.file_name().unwrap(), CALIBRATION_FILE);
+        assert_eq!(Calibration::load(&dir), Some(c));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

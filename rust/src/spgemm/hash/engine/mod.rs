@@ -86,7 +86,9 @@ pub use numeric::{numeric, numeric_bin_into, numeric_timed};
 pub(crate) use numeric::accum_row_spa;
 pub use symbolic::{symbolic, symbolic_cfg};
 pub(crate) use symbolic::{build_bins, symbolic_row_nnz_bitmap, symbolic_row_nnz_hash, symbolic_timed};
-pub use traced::{multiply_single_pass, multiply_traced, multiply_traced_cfg, multiply_traced_stats};
+pub use traced::{
+    multiply_single_pass, multiply_traced, multiply_traced_cfg, multiply_traced_stats, multiply_traced_stats_cfg,
+};
 
 use super::estimate::{default_planner_policy, PlannerPolicy};
 use super::grouping::{AccumKind, GroupSpec, Grouping, RowKernel, Strategy, SymbolicKind, GROUP_SPECS};
@@ -156,22 +158,38 @@ pub fn set_default_spa_threshold(t: f64) -> bool {
 }
 
 /// The process-wide default SPA threshold (see
-/// [`EngineConfig::default`]). Env values outside the CLI's accepted
-/// `[0, 8]` range (or unparsable ones) are ignored, not latched — a
-/// stray `SPGEMM_AIA_SPA_THRESHOLD=-1` must not force the SPA onto
-/// every row of every multiply in the process. With neither the knob
-/// nor the env set, the default is **derived from the simulated
-/// device's cache geometry**
-/// ([`crate::sim::DeviceConfig::dense_row_threshold_base`]), not a
-/// magic constant.
+/// [`EngineConfig::default`]), resolved through the **threshold
+/// ladder**: the CLI's `--spa-threshold` flag (latched into the cell
+/// directly), else a valid `SPGEMM_AIA_SPA_THRESHOLD` env value, else a
+/// persisted `calibration.json` next to the plan cache (written by
+/// `spgemm-aia calibrate` — see [`super::calibrate`]), else the
+/// cache-geometry derivation
+/// ([`crate::sim::DeviceConfig::dense_row_threshold_base`]). Env values
+/// outside the CLI's accepted `[0, 8]` range (or unparsable ones) are
+/// ignored, not latched — a stray `SPGEMM_AIA_SPA_THRESHOLD=-1` must
+/// not force the SPA onto every row of every multiply in the process;
+/// corrupt or mismatched calibration files degrade to the geometry
+/// fallback the same way.
 pub fn default_spa_threshold() -> f64 {
     *SPA_THRESHOLD_CELL.get_or_init(|| {
-        std::env::var("SPGEMM_AIA_SPA_THRESHOLD")
-            .ok()
-            .and_then(|s| s.parse().ok())
-            .filter(|t: &f64| (0.0..=8.0).contains(t))
-            .unwrap_or_else(|| DeviceConfig::h200_scaled().dense_row_threshold_base())
+        resolve_default_spa_threshold(
+            std::env::var("SPGEMM_AIA_SPA_THRESHOLD").ok().as_deref(),
+            super::calibrate::calibrated_spa_threshold(),
+            DeviceConfig::h200_scaled().dense_row_threshold_base(),
+        )
     })
+}
+
+/// The flag-less tiers of the threshold ladder, as a pure function so
+/// the precedence is testable without touching the process-wide cell: a
+/// valid env value wins, else the persisted calibration, else the
+/// cache-geometry derivation. (The CLI flag sits above all three — it
+/// latches the cell directly via [`set_default_spa_threshold`].)
+pub fn resolve_default_spa_threshold(env: Option<&str>, calibrated: Option<f64>, geometry: f64) -> f64 {
+    env.and_then(|s| s.parse().ok())
+        .filter(|t: &f64| (0.0..=8.0).contains(t))
+        .or(calibrated)
+        .unwrap_or(geometry)
 }
 
 /// The thresholds a multiply actually runs at for outputs of width

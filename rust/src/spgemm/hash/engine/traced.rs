@@ -277,9 +277,16 @@ pub fn multiply_traced_cfg<P: Probe>(a: &Csr, b: &Csr, probe: &mut P, cfg: &Engi
 /// every block (identical trace to [`multiply_traced`]). Runs at the
 /// process-default [`EngineConfig`], like the fast path it samples.
 pub fn multiply_traced_stats<P: Probe>(a: &Csr, b: &Csr, probe: &mut P, every: usize) {
-    let cfg = EngineConfig::default();
+    multiply_traced_stats_cfg(a, b, probe, every, &EngineConfig::default());
+}
+
+/// [`multiply_traced_stats`] at an explicit [`EngineConfig`] — the
+/// calibration sweep uses this to trace the same workload under a grid
+/// of SPA/bitmap thresholds without touching the latched process
+/// default.
+pub fn multiply_traced_stats_cfg<P: Probe>(a: &Csr, b: &Csr, probe: &mut P, every: usize, cfg: &EngineConfig) {
     assert_eq!(a.n_cols, b.n_rows, "dimension mismatch");
-    let (sym_threshold, num_threshold) = effective_thresholds(&cfg, b.n_cols);
+    let (sym_threshold, num_threshold) = effective_thresholds(cfg, b.n_cols);
     let every = every.max(1);
     // IP for *all* rows (cheap, parallel) — grouping must be exact.
     let ip = intermediate_products(a, b);

@@ -12,6 +12,7 @@
 //! §"Two-phase hash engine", §"Plan reuse", §"Accumulator selection",
 //! §"Symbolic kernel selection", and §"Plan persistence".
 
+pub mod calibrate;
 pub mod engine;
 pub mod estimate;
 pub mod grouping;
@@ -21,10 +22,14 @@ pub mod planstore;
 pub mod sort;
 pub mod table;
 
+pub use calibrate::{
+    calibrate_sweep, calibrated_spa_threshold, default_threshold_grid, CalibrateInput, Calibration,
+    CalibrationPoint, CALIBRATION_FILE, CALIBRATION_SCHEMA, CALIBRATION_VERSION,
+};
 pub use engine::{
     default_spa_threshold, multiply, multiply_cfg, multiply_single_pass, multiply_timed, multiply_timed_cfg,
-    multiply_traced, multiply_traced_cfg, numeric, numeric_bin_into, numeric_timed, set_default_spa_threshold,
-    symbolic, symbolic_cfg, EngineConfig, NumericBin, SymbolicPlan,
+    multiply_traced, multiply_traced_cfg, numeric, numeric_bin_into, numeric_timed, resolve_default_spa_threshold,
+    set_default_spa_threshold, symbolic, symbolic_cfg, EngineConfig, NumericBin, SymbolicPlan,
 };
 pub use estimate::{
     default_planner_policy, estimate_plan, estimate_plan_cfg, multiply_estimated, multiply_estimated_cfg,

@@ -416,6 +416,21 @@ pub fn default_plan_cache_dir() -> Option<PathBuf> {
         .clone()
 }
 
+/// Like [`default_plan_cache_dir`] but *without* latching the cell: if
+/// the flag was set, that wins; otherwise the env var is read fresh and
+/// the cell stays writable. The threshold ladder uses this to look for
+/// `calibration.json` next to the plan cache — resolving a threshold
+/// must not steal the one-shot `--plan-cache` slot from a later
+/// [`set_default_plan_cache_dir`] call.
+pub(crate) fn peek_plan_cache_dir() -> Option<PathBuf> {
+    match PLAN_CACHE_DIR_CELL.get() {
+        Some(v) => v.clone(),
+        None => std::env::var_os("SPGEMM_AIA_PLAN_CACHE")
+            .filter(|v| !v.is_empty())
+            .map(PathBuf::from),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

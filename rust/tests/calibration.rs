@@ -1,0 +1,150 @@
+//! Acceptance tests for measurement-calibrated kernel thresholds: the
+//! resolution ladder (explicit flag > `SPGEMM_AIA_SPA_THRESHOLD` >
+//! persisted `calibration.json` next to the plan cache > cache
+//! geometry), the cross-process `calibrate` → load flow through the
+//! real binary, corruption fallback, plan-cache tooling tolerance of
+//! the calibration file, and bit-identical outputs under any
+//! threshold. Cross-process behavior is exercised with fresh
+//! `spgemm-aia` processes — the in-process defaults latch on first
+//! read (`OnceLock`), so a library test could never observe more than
+//! one rung of the ladder.
+
+use spgemm_aia::gen::table2_by_name;
+use spgemm_aia::sim::DeviceConfig;
+use spgemm_aia::spgemm::hash::{
+    multiply_cfg, resolve_default_spa_threshold, Calibration, DiskStore, EngineConfig, PlannerPolicy,
+    CALIBRATION_FILE, CALIBRATION_VERSION,
+};
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("spgemm-aia-calib-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// The binary under test, with the developer shell's threshold/cache
+/// configuration scrubbed so every rung of the ladder is ours to set.
+fn bin() -> Command {
+    let mut c = Command::new(env!("CARGO_BIN_EXE_spgemm-aia"));
+    c.env_remove("SPGEMM_AIA_PLAN_CACHE");
+    c.env_remove("SPGEMM_AIA_SPA_THRESHOLD");
+    c
+}
+
+/// Run `spgemm-aia info [extra_args]` in a fresh process and parse the
+/// threshold it resolved as its default.
+fn info_threshold(extra_args: &[&str], cache_dir: Option<&Path>) -> f64 {
+    let mut c = bin();
+    if let Some(d) = cache_dir {
+        c.env("SPGEMM_AIA_PLAN_CACHE", d);
+    }
+    let out = c.arg("info").args(extra_args).output().expect("spawn spgemm-aia info");
+    assert!(out.status.success(), "info failed: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout).to_string();
+    let line = stdout
+        .lines()
+        .find_map(|l| l.strip_prefix("spa-threshold: "))
+        .unwrap_or_else(|| panic!("no spa-threshold line in:\n{stdout}"));
+    line.trim().parse().unwrap_or_else(|_| panic!("unparsable threshold {line:?}"))
+}
+
+fn geometry() -> f64 {
+    DeviceConfig::h200_scaled().dense_row_threshold_base()
+}
+
+#[test]
+fn resolver_implements_the_ladder() {
+    let g = geometry();
+    // Geometry is the floor...
+    assert_eq!(resolve_default_spa_threshold(None, None, g), g);
+    // ...a persisted calibration beats it...
+    assert_eq!(resolve_default_spa_threshold(None, Some(0.4), g), 0.4);
+    // ...and an explicit env value beats both.
+    assert_eq!(resolve_default_spa_threshold(Some("0.1"), Some(0.4), g), 0.1);
+    // Unparsable or out-of-range env values drop to the next rung, they
+    // never poison the resolution.
+    assert_eq!(resolve_default_spa_threshold(Some("junk"), Some(0.4), g), 0.4);
+    assert_eq!(resolve_default_spa_threshold(Some("-1"), None, g), g);
+    assert_eq!(resolve_default_spa_threshold(Some("9"), None, g), g);
+}
+
+#[test]
+fn calibrate_writes_a_file_a_fresh_process_loads_as_its_default() {
+    let dir = tmp_dir("flow");
+    let out = bin()
+        .args(["calibrate", "--datasets", "p2p-Gnutella04", "--grid", "0.1,0.5", "--out"])
+        .arg(&dir)
+        .output()
+        .expect("spawn spgemm-aia calibrate");
+    assert!(out.status.success(), "calibrate failed: {}", String::from_utf8_lossy(&out.stderr));
+    let cal = Calibration::load(&dir).expect("calibrate must write a valid calibration.json");
+    assert_eq!(cal.version, CALIBRATION_VERSION);
+    assert!([0.1, 0.5].contains(&cal.spa_threshold), "winner must come from the grid, got {}", cal.spa_threshold);
+    assert_eq!(cal.sweep.len(), 2, "one point per grid threshold");
+    assert_eq!(cal.datasets, vec!["p2p-Gnutella04".to_string()]);
+    // A fresh process pointed at the directory resolves the calibrated
+    // value as its default...
+    assert_eq!(info_threshold(&[], Some(&dir)), cal.spa_threshold);
+    // ...an explicit flag still wins...
+    assert_eq!(info_threshold(&["--spa-threshold", "0.33"], Some(&dir)), 0.33);
+    // ...and without the cache dir the geometry fallback stands.
+    assert_eq!(info_threshold(&[], None), geometry());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_or_foreign_calibration_degrades_to_geometry() {
+    let dir = tmp_dir("corrupt");
+    std::fs::write(dir.join(CALIBRATION_FILE), b"{ definitely not json").unwrap();
+    assert_eq!(info_threshold(&[], Some(&dir)), geometry());
+    // A structurally valid file from a *future* format version is
+    // ignored the same way, never reinterpreted.
+    let future = Calibration {
+        version: CALIBRATION_VERSION + 1,
+        spa_threshold: 0.4,
+        geometry_threshold: geometry(),
+        datasets: vec![],
+        sweep: vec![],
+    };
+    future.save(&dir).unwrap();
+    assert_eq!(info_threshold(&[], Some(&dir)), geometry());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn plan_cache_tooling_tolerates_the_calibration_file() {
+    let dir = tmp_dir("tooling");
+    let cal = Calibration {
+        version: CALIBRATION_VERSION,
+        spa_threshold: 0.2,
+        geometry_threshold: geometry(),
+        datasets: vec!["x".into()],
+        sweep: vec![],
+    };
+    cal.save(&dir).unwrap();
+    // The disk store's listing is .plan-scoped: the calibration file
+    // must not surface as a (necessarily corrupt) plan entry.
+    let store = DiskStore::new(&dir);
+    assert!(store.entries().is_empty(), "calibration.json must not appear as a plan entry");
+    // And the CLI lifecycle tooling over the same directory stays green.
+    let out = bin().args(["plan-cache", "verify", "--dir"]).arg(&dir).output().expect("spawn verify");
+    assert!(out.status.success(), "verify failed: {}", String::from_utf8_lossy(&out.stderr));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn outputs_are_bit_identical_under_any_threshold() {
+    let ds = table2_by_name("p2p-Gnutella04").unwrap();
+    let a = (ds.gen)(spgemm_aia::repro::SEED);
+    let cfg = |t: f64| EngineConfig { spa_threshold: t, symbolic_threshold: None, planner: PlannerPolicy::Exact };
+    // 0.1 routes dense rows through SPA/bitmap, 8.0 disables both — the
+    // threshold steers kernel choice only, never the result.
+    let c_lo = multiply_cfg(&a, &a, &cfg(0.1));
+    let c_mid = multiply_cfg(&a, &a, &cfg(geometry()));
+    let c_hi = multiply_cfg(&a, &a, &cfg(8.0));
+    assert_eq!(c_lo, c_hi);
+    assert_eq!(c_lo, c_mid);
+}

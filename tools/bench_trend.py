@@ -120,8 +120,23 @@ def self_test() -> int:
         (d / "NOTBENCH_skipped.json").write_text(json.dumps({
             "schema": "spgemm-aia-bench-v1", "results": [{"name": "x", "median_s": 1.0}],
         }))
+        # The waste bench's shape: timing results plus used/fetched meta
+        # (see rust/benches/waste.rs). The meta must ride along without
+        # confusing the loader — only `results` medians join the trend.
+        (d / "BENCH_waste.json").write_text(json.dumps({
+            "schema": "spgemm-aia-bench-v1",
+            "bench": "waste",
+            "results": [{"name": "waste/scircuit/aia", "median_s": 0.125}],
+            "meta": {"waste/scircuit/aia": {
+                "used_bytes": 96, "fetched_bytes": 128, "waste_ratio": 0.25,
+                "regions": {"col_b": {"used_bytes": 96, "fetched_bytes": 128}},
+            }},
+        }))
         loaded = load_results(d)
-        assert loaded == {"good::a": 0.25, "good::b": 2.0}, loaded
+        assert loaded == {"good::a": 0.25, "good::b": 2.0,
+                          "waste::waste/scircuit/aia": 0.125}, loaded
+        waste_meta = json.loads((d / "BENCH_waste.json").read_text())["meta"]["waste/scircuit/aia"]
+        assert waste_meta["used_bytes"] <= waste_meta["fetched_bytes"], waste_meta
 
     assert fmt(2.5) == "2.500 s" and fmt(0.0025) == "2.500 ms" and fmt(2.5e-6) == "2.5 us"
     print("bench-trend: self-test ok")
