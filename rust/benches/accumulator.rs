@@ -41,8 +41,9 @@ fn main() {
     ];
 
     let planner = PlannerPolicy::Exact;
-    let hash_only = EngineConfig { spa_threshold: 2.0, symbolic_threshold: None, planner };
-    let guided = EngineConfig { spa_threshold: DEFAULT_SPA_THRESHOLD, symbolic_threshold: None, planner };
+    let hash_only = EngineConfig { spa_threshold: 2.0, symbolic_threshold: None, planner, mask: None };
+    let guided =
+        EngineConfig { spa_threshold: DEFAULT_SPA_THRESHOLD, symbolic_threshold: None, planner, mask: None };
 
     for (name, a) in &datasets {
         b.group(&format!("accumulator/{name}"));

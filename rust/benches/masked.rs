@@ -1,0 +1,98 @@
+//! Bench: masked SpGEMM `C = M ⊙ (A·B)` (DESIGN.md §2i) against the
+//! multiply-then-filter oracle it replaces.
+//!
+//! Two legs: (1) a band-mask sparse-attention scenario on the Protein
+//! and Economics analogues — the masked engine prunes both phases, so
+//! it must come in at or under the oracle that builds the whole A² and
+//! throws most of it away (the JSON meta records both medians and the
+//! speedup, which `tools/bench_trend.py` tracks); (2) triangle counting
+//! on an RMAT graph via masked A·A with the adjacency as its own mask,
+//! against the same count through the oracle. CI archives
+//! `BENCH_masked.json` as part of the perf trajectory.
+
+use spgemm_aia::gen::{self, rmat, structured, RmatParams};
+use spgemm_aia::sparse::{Coo, Csr};
+use spgemm_aia::spgemm::hash::{self, Mask};
+use spgemm_aia::util::bench::{bb, Bencher};
+use spgemm_aia::util::json::Json;
+use spgemm_aia::util::Pcg32;
+
+/// Symmetrized, unit-valued, loop-free adjacency (what `triangles` on
+/// the CLI builds before counting).
+fn adjacency(m: &Csr) -> Csr {
+    let mut coo = Coo::new(m.n_rows, m.n_cols);
+    for i in 0..m.n_rows {
+        let (cols, _) = m.row(i);
+        for &j in cols {
+            if j as usize != i {
+                coo.push(i, j as usize, 1.0);
+                coo.push(j as usize, i, 1.0);
+            }
+        }
+    }
+    let mut adj = coo.to_csr();
+    adj.map_values(|_| 1.0);
+    adj
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let names: &[&str] = if quick { &["Economics"] } else { &["Protein", "Economics"] };
+
+    for name in names {
+        let ds = gen::table2_by_name(name).unwrap();
+        let a = (ds.gen)(1);
+        let band = (a.n_rows / 64).max(8);
+        let mask = Mask::from_structure(&structured::band_mask(a.n_rows, band));
+        b.group(&format!("masked/{name}"));
+
+        let masked =
+            b.bench("band/masked multiply", || bb(hash::multiply_masked(&a, &a, &mask).nnz()));
+        let oracle = b.bench("band/multiply-then-filter", || {
+            bb(mask.filter(&hash::multiply(&a, &a)).nnz())
+        });
+        let speedup = oracle.median / masked.median;
+        println!("  -> masked speedup over multiply-then-filter: {speedup:.2}x");
+
+        let c = hash::multiply_masked(&a, &a, &mask);
+        assert_eq!(c, mask.filter(&hash::multiply(&a, &a)), "{name}: bench outputs diverged");
+        let mut o = Json::obj();
+        o.set("band", band.into());
+        o.set("mask_nnz", mask.nnz().into());
+        o.set("out_nnz", c.nnz().into());
+        o.set("masked_s", Json::Num(masked.median));
+        o.set("oracle_s", Json::Num(oracle.median));
+        o.set("speedup", Json::Num(speedup));
+        b.meta(&format!("band/{name}"), o);
+    }
+
+    // Triangle counting: adjacency as its own mask. The masked product
+    // only ever touches wedge endpoints that are already edges.
+    b.group("masked/triangles");
+    let (n, nnz) = if quick { (2_000, 16_000) } else { (8_000, 64_000) };
+    let adj = adjacency(&rmat(n, nnz, RmatParams::web(), &mut Pcg32::seeded(3)));
+    let amask = Mask::from_structure(&adj);
+    let masked = b.bench("rmat/masked A.A", || {
+        let c = hash::multiply_masked(&adj, &adj, &amask);
+        bb((c.val.iter().sum::<f64>() / 6.0).round() as u64)
+    });
+    let oracle = b.bench("rmat/multiply-then-filter", || {
+        let c = amask.filter(&hash::multiply(&adj, &adj));
+        bb((c.val.iter().sum::<f64>() / 6.0).round() as u64)
+    });
+    let c = hash::multiply_masked(&adj, &adj, &amask);
+    let triangles = (c.val.iter().sum::<f64>() / 6.0).round() as u64;
+    let speedup = oracle.median / masked.median;
+    println!("  -> {triangles} triangles; masked speedup {speedup:.2}x");
+    let mut o = Json::obj();
+    o.set("nodes", adj.n_rows.into());
+    o.set("edges", (adj.nnz() / 2).into());
+    o.set("triangles", (triangles as i64).into());
+    o.set("masked_s", Json::Num(masked.median));
+    o.set("oracle_s", Json::Num(oracle.median));
+    o.set("speedup", Json::Num(speedup));
+    b.meta("triangles/rmat", o);
+
+    b.finish("masked");
+}

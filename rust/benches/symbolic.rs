@@ -42,9 +42,11 @@ fn main() {
 
     let base = default_spa_threshold();
     let planner = PlannerPolicy::Exact;
-    let hash_only = EngineConfig { spa_threshold: base, symbolic_threshold: Some(8.0), planner };
-    let bitmap = EngineConfig { spa_threshold: base, symbolic_threshold: Some(0.0), planner };
-    let guided = EngineConfig { spa_threshold: base, symbolic_threshold: None, planner };
+    let hash_only =
+        EngineConfig { spa_threshold: base, symbolic_threshold: Some(8.0), planner, mask: None };
+    let bitmap =
+        EngineConfig { spa_threshold: base, symbolic_threshold: Some(0.0), planner, mask: None };
+    let guided = EngineConfig { spa_threshold: base, symbolic_threshold: None, planner, mask: None };
 
     for (name, a) in &datasets {
         b.group(&format!("symbolic/{name}"));

@@ -48,7 +48,7 @@
 use super::metrics::Metrics;
 use super::scheduler::{schedule_lpt, Job, Schedule};
 use crate::spgemm::hash::planstore::{GetOutcome, StoreStats};
-use crate::spgemm::hash::{multiply_estimated_cfg, EstimateParams, PlannerPolicy};
+use crate::spgemm::hash::{multiply_estimated_cfg, EstimateParams, Mask, PlannerPolicy};
 use crate::spgemm::hash::{numeric_bin_into, EngineConfig, PlanFingerprint, PlanStore, PlannedProduct, TieredStore};
 use crate::sparse::Csr;
 use std::collections::HashMap;
@@ -684,8 +684,47 @@ impl BatchExecutor {
     /// process can mistake its guessed row sizes for exact symbolic
     /// output.
     pub fn multiply_cached_policy(&mut self, a: &Csr, b: &Csr, policy: PlannerPolicy) -> (Csr, CachedMultiply) {
+        self.multiply_cached_inner(a, b, None, policy)
+    }
+
+    /// Masked multiply through the tiered plan store: `C = mask ⊙
+    /// (A·B)`, planned with the masked symbolic kernels so the plan's
+    /// exact sizes (and the numeric fill) never materialize a
+    /// mask-rejected entry. The mask's structure hash joins the
+    /// [`PlanFingerprint`], so masked plans cache, persist, and
+    /// delta-patch like any other — distinct from the unmasked plan of
+    /// the same operands. Masked products never speculate: a guessed
+    /// global compression ratio says nothing about an arbitrary mask,
+    /// so `Estimated`/`Auto` degrade to the exact planner here.
+    pub fn multiply_cached_masked(&mut self, a: &Csr, b: &Csr, mask: &Mask) -> Csr {
+        self.multiply_cached_masked_policy(a, b, mask, self.planner).0
+    }
+
+    /// [`BatchExecutor::multiply_cached_masked`] under an explicit
+    /// policy, with the per-call [`CachedMultiply`] trace.
+    pub fn multiply_cached_masked_policy(
+        &mut self,
+        a: &Csr,
+        b: &Csr,
+        mask: &Mask,
+        policy: PlannerPolicy,
+    ) -> (Csr, CachedMultiply) {
+        assert_eq!(mask.shape(), (a.n_rows, b.n_cols), "mask shape must equal the output shape");
+        self.multiply_cached_inner(a, b, Some(mask), policy)
+    }
+
+    fn multiply_cached_inner(
+        &mut self,
+        a: &Csr,
+        b: &Csr,
+        mask: Option<&Mask>,
+        policy: PlannerPolicy,
+    ) -> (Csr, CachedMultiply) {
         let t_resolve = Instant::now();
-        let fp = PlanFingerprint::of(a, b);
+        let fp = match mask {
+            None => PlanFingerprint::of(a, b),
+            Some(m) => PlanFingerprint::of_masked(a, b, m),
+        };
         let shape = [a.n_rows, a.n_cols, b.n_rows, b.n_cols];
         let (found, outcome) = self.store.get_traced(&fp);
         if let Some(p) = found {
@@ -714,7 +753,7 @@ impl BatchExecutor {
         if let GetOutcome::Miss { corrupt: true, .. } = outcome {
             self.stats.disk_corrupt += 1;
         }
-        let cfg = EngineConfig::default();
+        let cfg = EngineConfig { mask: mask.cloned(), ..EngineConfig::default() };
         // Store miss: before a full replan, try patching the previous
         // same-shape plan's dirty rows (dynamic-graph drift — e.g. a
         // re-registered handle with a mutated matrix).
@@ -726,7 +765,7 @@ impl BatchExecutor {
                 crate::spgemm::hash::DeltaOutcome::Patched(dp) => Some(dp),
                 crate::spgemm::hash::DeltaOutcome::Rebuild(_) => None,
             });
-        if patched.is_none() && policy.speculates() {
+        if patched.is_none() && policy.speculates() && mask.is_none() {
             // Fully cold and one-shot: speculate. Sampling + the
             // fallback-guarded numeric fill happen in one call; the
             // plan never reaches the store, and `recent_by_shape` is
@@ -997,6 +1036,37 @@ mod tests {
         let before = ex.stats.plan_s;
         ex.multiply_cached(&a, &a);
         assert!(ex.stats.plan_s > before);
+    }
+
+    #[test]
+    fn masked_cached_multiply_caches_separately_and_never_speculates() {
+        let a = random_square(51, 128, 4);
+        let mask = Mask::from_structure(&a);
+        let oracle = mask.filter(&hash::multiply(&a, &a));
+        let mut ex = mem_executor(2);
+        ex.multiply_cached(&a, &a);
+        // The masked product is a distinct store identity: a miss that
+        // plans fresh, then a memory hit — alongside the unmasked plan.
+        let (c1, t1) = ex.multiply_cached_masked_policy(&a, &a, &mask, PlannerPolicy::Exact);
+        assert_eq!(c1, oracle, "masked cached multiply must equal the filtered oracle");
+        assert_eq!(t1.source, PlanSource::Fresh);
+        let (c2, t2) = ex.multiply_cached_masked_policy(&a, &a, &mask, PlannerPolicy::Exact);
+        assert_eq!(c2, oracle);
+        assert_eq!(t2.source, PlanSource::Mem);
+        assert_eq!(ex.cached_plans(), 2, "masked and unmasked plans coexist under distinct keys");
+        // Same-mask structural drift rides the dirty-row delta path.
+        let a2 = hash::mutate_row_fraction(&a, 0.02, 9);
+        let (c3, t3) = ex.multiply_cached_masked_policy(&a2, &a, &mask, PlannerPolicy::Exact);
+        assert_eq!(c3, mask.filter(&hash::multiply(&a2, &a)));
+        assert_eq!(t3.source, PlanSource::Delta, "masked drift must delta-patch under the same mask");
+        // An estimating policy degrades to the exact planner under a
+        // mask — a fresh masked structure must never speculate.
+        let b = random_square(52, 128, 4);
+        let bmask = Mask::from_structure(&b);
+        let (c4, t4) = ex.multiply_cached_masked_policy(&b, &b, &bmask, PlannerPolicy::Estimated);
+        assert_eq!(c4, bmask.filter(&hash::multiply(&b, &b)));
+        assert_eq!(t4.source, PlanSource::Fresh, "masked products never speculate");
+        assert_eq!(ex.stats.estimated_plans, 0);
     }
 
     #[test]

@@ -20,7 +20,9 @@ use super::metrics::Metrics;
 use crate::sim::probe::PhaseTimes;
 use crate::sim::{simulate_spgemm, AiaMode, SimConfig, SimReport};
 use crate::spgemm::hash::planstore::GetOutcome;
-use crate::spgemm::hash::{EngineConfig, PlanFingerprint, PlanStore, PlannedProduct, PlannerPolicy, TieredStore};
+use crate::spgemm::hash::{
+    EngineConfig, Mask, PlanFingerprint, PlanStore, PlannedProduct, PlannerPolicy, TieredStore,
+};
 use crate::spgemm::{hash, ip, spgemm, Algo};
 use crate::sparse::Csr;
 use std::sync::Arc;
@@ -249,12 +251,45 @@ impl SpgemmExecutor {
     /// (the machine model prices the full kernel regardless, and ESC has
     /// no symbolic plan), leaving the hit/miss counters untouched.
     pub fn multiply_reusing(&mut self, slot: &mut Option<Arc<PlannedProduct>>, a: &Csr, b: &Csr) -> Csr {
+        self.multiply_reusing_inner(slot, a, b, None)
+    }
+
+    /// Masked plan reuse: `C = mask ⊙ (A·B)` with the slot/store
+    /// machinery of [`SpgemmExecutor::multiply_reusing`]. The mask's
+    /// structure hash is part of the plan's identity, so a slot or
+    /// store plan is only reused when operands *and* mask are
+    /// unchanged; an unmasked plan never serves a masked job (or vice
+    /// versa — the plain path refuses masked slot plans too). Only the
+    /// functional hash path supports masks; other variants compute the
+    /// full product and filter, which is the definitional oracle.
+    pub fn multiply_reusing_masked(
+        &mut self,
+        slot: &mut Option<Arc<PlannedProduct>>,
+        a: &Csr,
+        b: &Csr,
+        mask: &Mask,
+    ) -> Csr {
+        assert_eq!(mask.shape(), (a.n_rows, b.n_cols), "mask shape must equal the output shape");
+        if self.sim.is_some() || self.variant.algo() != Algo::Hash {
+            return mask.filter(&self.multiply(a, b));
+        }
+        self.multiply_reusing_inner(slot, a, b, Some(mask))
+    }
+
+    fn multiply_reusing_inner(
+        &mut self,
+        slot: &mut Option<Arc<PlannedProduct>>,
+        a: &Csr,
+        b: &Csr,
+        mask: Option<&Mask>,
+    ) -> Csr {
         if self.sim.is_some() || self.variant.algo() != Algo::Hash {
             return self.multiply(a, b);
         }
         self.jobs += 1;
+        let mask_hash = mask.map(|m| m.structure_hash());
         let t_validate = std::time::Instant::now();
-        let reuse = slot.as_ref().is_some_and(|p| p.matches(a, b));
+        let reuse = slot.as_ref().is_some_and(|p| p.matches(a, b) && p.mask_hash() == mask_hash);
         // Plan validation reads both operands' (memoized) structure
         // hashes — the O(nnz) scan is charged exactly once, on the call
         // that first computes it; later validations are cell reads.
@@ -274,7 +309,10 @@ impl SpgemmExecutor {
             // baseline — if the store misses too, a same-shape mutation
             // of the previous structure replans only its dirty rows.
             let prior = slot.clone();
-            let fp = PlanFingerprint::of(a, b);
+            let fp = match mask {
+                None => PlanFingerprint::of(a, b),
+                Some(m) => PlanFingerprint::of_masked(a, b, m),
+            };
             let mut from_store = None;
             if let Some(store) = self.plan_store.as_mut() {
                 let (found, outcome) = store.get_traced(&fp);
@@ -296,7 +334,7 @@ impl SpgemmExecutor {
                 }
                 None => {
                     self.phase_times.grouping_s += t_validate.elapsed().as_secs_f64();
-                    let cfg = EngineConfig::default();
+                    let cfg = EngineConfig { mask: mask.cloned(), ..EngineConfig::default() };
                     // Dirty-row replanning: patch the displaced plan in
                     // place when the new operands are a small structural
                     // drift of its baseline; fall through to a full
@@ -577,6 +615,41 @@ mod tests {
         ex.export_metrics(&mut m);
         assert_eq!(m.counter("spgemm.hash.estimated_jobs"), 1);
         assert_eq!(m.counter("spgemm.hash.jobs"), 3);
+    }
+
+    #[test]
+    fn masked_reuse_is_keyed_by_the_mask_too() {
+        let a = crate::gen::rmat(192, 1200, crate::gen::RmatParams::uniform(), &mut Pcg32::seeded(47));
+        let mask = Mask::from_structure(&a);
+        let oracle = mask.filter(&crate::spgemm::hash::multiply(&a, &a));
+        let mut ex = mem_pinned(Variant::Hash);
+        let mut slot = None;
+        let c1 = ex.multiply_reusing_masked(&mut slot, &a, &a, &mask);
+        assert_eq!(c1, oracle, "masked reuse path must equal the filtered oracle");
+        assert_eq!((ex.plan_hits, ex.plan_misses), (0, 1));
+        assert_eq!(slot.as_ref().unwrap().mask_hash(), Some(mask.structure_hash()));
+        // Identical operands + identical mask: a slot hit.
+        let c2 = ex.multiply_reusing_masked(&mut slot, &a, &a, &mask);
+        assert_eq!(c2, oracle);
+        assert_eq!((ex.plan_hits, ex.plan_misses), (1, 1));
+        // The *unmasked* job must refuse the masked slot plan — same
+        // operands, different identity — and serve the full product.
+        let c3 = ex.multiply_reusing(&mut slot, &a, &a);
+        assert_eq!(c3, crate::spgemm::hash::multiply(&a, &a));
+        assert_eq!((ex.plan_hits, ex.plan_misses), (1, 2));
+        assert!(slot.as_ref().unwrap().mask_hash().is_none(), "slot now holds the unmasked plan");
+        // Masked again: the slot mismatches but the store still holds
+        // the masked plan under its own key — a store hit, not a replan.
+        let c4 = ex.multiply_reusing_masked(&mut slot, &a, &a, &mask);
+        assert_eq!(c4, oracle);
+        assert_eq!((ex.plan_hits, ex.plan_misses), (2, 2));
+        // ESC executors have no masked kernels: they filter the full
+        // product, which is the oracle by definition.
+        let mut esc = SpgemmExecutor::fast(Variant::Cusparse);
+        let mut esc_slot = None;
+        let ce = esc.multiply_reusing_masked(&mut esc_slot, &a, &a, &mask);
+        assert!(ce.approx_eq(&oracle, 1e-10));
+        assert!(esc_slot.is_none());
     }
 
     #[test]

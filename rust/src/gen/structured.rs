@@ -172,6 +172,46 @@ pub fn p2p(n: usize, rng: &mut Pcg32) -> Csr {
     coo.to_csr()
 }
 
+/// Band mask for sparse attention (DESIGN.md §2i): structure-only
+/// `n × n` Csr admitting `|i - j| <= bandwidth` — the sliding-window
+/// pattern of Longformer-style local attention. Values are unit
+/// (masks ignore them); `bandwidth = 0` is the diagonal.
+pub fn band_mask(n: usize, bandwidth: usize) -> Csr {
+    let mut rpt = Vec::with_capacity(n + 1);
+    let mut col = Vec::new();
+    rpt.push(0usize);
+    for i in 0..n {
+        let lo = i.saturating_sub(bandwidth);
+        let hi = (i + bandwidth).min(n.saturating_sub(1));
+        for j in lo..=hi {
+            col.push(j as u32);
+        }
+        rpt.push(col.len());
+    }
+    let val = vec![1.0; col.len()];
+    Csr::new_unchecked(n, n, rpt, col, val)
+}
+
+/// Block-diagonal mask for sparse attention (DESIGN.md §2i):
+/// structure-only `n × n` Csr admitting `i/block == j/block` — the
+/// chunked pattern of blockwise attention. The last block is ragged
+/// when `block` does not divide `n`. Panics if `block == 0`.
+pub fn block_mask(n: usize, block: usize) -> Csr {
+    assert!(block > 0, "block_mask needs a positive block size");
+    let mut rpt = Vec::with_capacity(n + 1);
+    let mut col = Vec::new();
+    rpt.push(0usize);
+    for i in 0..n {
+        let b0 = (i / block) * block;
+        for j in b0..(b0 + block).min(n) {
+            col.push(j as u32);
+        }
+        rpt.push(col.len());
+    }
+    let val = vec![1.0; col.len()];
+    Csr::new_unchecked(n, n, rpt, col, val)
+}
+
 /// Symmetric random permutation `P·A·Pᵀ`: destroys the artificial
 /// near-diagonal locality of synthetic constructions. SuiteSparse
 /// exports use arbitrary node ids, which is what makes SpGEMM's
@@ -296,6 +336,39 @@ mod tests {
         assert!(m.approx_eq(&m.transpose(), 1e-12));
         let s = MatrixStats::of(&m);
         assert!(s.avg_nnz_row > 10.0, "avg={}", s.avg_nnz_row);
+    }
+
+    #[test]
+    fn band_mask_admits_exactly_the_band() {
+        let m = band_mask(7, 2);
+        assert_eq!(m.n_rows, 7);
+        for i in 0..7usize {
+            let (cols, _) = m.row(i);
+            let expect: Vec<u32> =
+                (i.saturating_sub(2)..=(i + 2).min(6)).map(|j| j as u32).collect();
+            assert_eq!(cols, expect.as_slice(), "row {i}");
+        }
+        // bandwidth 0 is the identity structure
+        let d = band_mask(5, 0);
+        assert_eq!(d.nnz(), 5);
+        assert!(d.approx_eq(&Csr::identity(5), 1e-12));
+        // bandwidth >= n-1 is full
+        assert_eq!(band_mask(6, 5).nnz(), 36);
+    }
+
+    #[test]
+    fn block_mask_admits_exactly_the_blocks() {
+        let m = block_mask(10, 4); // blocks of 4, 4, ragged 2
+        assert_eq!(m.nnz(), 16 + 16 + 4);
+        for i in 0..10usize {
+            let b0 = (i / 4) * 4;
+            let (cols, _) = m.row(i);
+            let expect: Vec<u32> = (b0..(b0 + 4).min(10)).map(|j| j as u32).collect();
+            assert_eq!(cols, expect.as_slice(), "row {i}");
+        }
+        // block >= n is full; block 1 is the diagonal
+        assert_eq!(block_mask(5, 8).nnz(), 25);
+        assert!(block_mask(5, 1).approx_eq(&Csr::identity(5), 1e-12));
     }
 
     #[test]

@@ -2,12 +2,14 @@
 //! §4 experiment index). Each prints the paper-style series and returns
 //! JSON rows for `EXPERIMENTS.md` and the bench artifacts.
 
+pub mod attention;
 pub mod gnn_experiments;
 pub mod graph_apps;
 pub mod selfproduct;
 
 use crate::util::json::Json;
 
+pub use attention::attention;
 pub use gnn_experiments::{fig10_fig11, fig9, table3};
 pub use graph_apps::{fig7_fig8, GRAPH_APP_DATASETS};
 pub use selfproduct::{fig5, fig6, plan_reuse, table2};

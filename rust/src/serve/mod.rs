@@ -43,7 +43,7 @@ pub use registry::{HandleId, MatrixRegistry};
 use crate::coordinator::batch::{BatchExecutor, PlanSource};
 use crate::coordinator::metrics::Metrics;
 use crate::sparse::Csr;
-use crate::spgemm::hash::{PlannerPolicy, StoreStats, TieredStore};
+use crate::spgemm::hash::{Mask, PlannerPolicy, StoreStats, TieredStore};
 use crate::util::json::Json;
 use crate::util::serial::{fnv1a_seeded, FNV_OFFSET};
 use queue::{QueueReceiver, RequestQueue, SubmitError};
@@ -241,7 +241,16 @@ impl ServeStats {
 
 /// Jobs the worker thread consumes.
 enum Job {
-    Multiply { a: Arc<Csr>, b: Arc<Csr>, client: u64, planner: PlannerPolicy, reply: mpsc::Sender<MultiplyOutcome> },
+    Multiply {
+        a: Arc<Csr>,
+        b: Arc<Csr>,
+        /// Output mask for `C = mask ⊙ (A·B)` — the wire's `"mask"`
+        /// handle, resolved to the named matrix's structure.
+        mask: Option<Mask>,
+        client: u64,
+        planner: PlannerPolicy,
+        reply: mpsc::Sender<MultiplyOutcome>,
+    },
     /// Park the worker until the guard drops (tests use this to pin
     /// the queue at a known depth and exercise backpressure
     /// deterministically).
@@ -326,6 +335,23 @@ impl ServeHandle {
         b: Arc<Csr>,
         policy: Option<PlannerPolicy>,
     ) -> Result<MultiplyOutcome, ServeError> {
+        self.multiply_masked_policy(client, a, b, None, policy)
+    }
+
+    /// [`ServeHandle::multiply_policy`] with an optional output mask:
+    /// `C = mask ⊙ (A·B)`, planned and filled by the masked kernels so
+    /// rejected entries are never materialized. The mask joins the
+    /// plan fingerprint, so masked plans pool in the shared store like
+    /// any other. A mask whose shape is not the output shape is a
+    /// [`ServeError::BadRequest`].
+    pub fn multiply_masked_policy(
+        &self,
+        client: u64,
+        a: Arc<Csr>,
+        b: Arc<Csr>,
+        mask: Option<Mask>,
+        policy: Option<PlannerPolicy>,
+    ) -> Result<MultiplyOutcome, ServeError> {
         if self.shutting_down.load(Ordering::SeqCst) {
             return Err(ServeError::ShuttingDown);
         }
@@ -335,9 +361,20 @@ impl ServeHandle {
                 a.n_rows, a.n_cols, b.n_rows, b.n_cols
             )));
         }
+        if let Some(m) = &mask {
+            if m.shape() != (a.n_rows, b.n_cols) {
+                return Err(ServeError::BadRequest(format!(
+                    "mask shape mismatch: mask is {}x{}, output is {}x{}",
+                    m.n_rows(),
+                    m.n_cols(),
+                    a.n_rows,
+                    b.n_cols
+                )));
+            }
+        }
         let planner = policy.unwrap_or(self.planner);
         let (reply, result) = mpsc::channel();
-        match self.queue.submit(Job::Multiply { a, b, client, planner, reply }) {
+        match self.queue.submit(Job::Multiply { a, b, mask, client, planner, reply }) {
             Ok(_) => {}
             Err(SubmitError::Busy(_)) => {
                 self.stats_lock().busy_rejections += 1;
@@ -362,9 +399,29 @@ impl ServeHandle {
         b_raw: u64,
         policy: Option<PlannerPolicy>,
     ) -> Result<MultiplyOutcome, ServeError> {
+        self.multiply_by_handle_masked_policy(client, a_raw, b_raw, None, policy)
+    }
+
+    /// [`ServeHandle::multiply_masked_policy`] with everything named by
+    /// handle — the wire's optional `"mask"` field lands here. The mask
+    /// handle names any registered matrix; only its *structure* is
+    /// used (values are ignored), so `mask == a` is the triangle-
+    /// counting idiom `A ⊙ (A·A)` with zero extra uploads.
+    pub fn multiply_by_handle_masked_policy(
+        &self,
+        client: u64,
+        a_raw: u64,
+        b_raw: u64,
+        mask_raw: Option<u64>,
+        policy: Option<PlannerPolicy>,
+    ) -> Result<MultiplyOutcome, ServeError> {
         let a = self.resolve(a_raw)?;
         let b = self.resolve(b_raw)?;
-        self.multiply_policy(client, a, b, policy)
+        let mask = match mask_raw {
+            None => None,
+            Some(raw) => Some(Mask::from_structure(&self.resolve(raw)?)),
+        };
+        self.multiply_masked_policy(client, a, b, mask, policy)
     }
 
     /// Park the worker until the returned guard drops. Submitted
@@ -563,8 +620,11 @@ impl Drop for Server {
 fn worker_loop(jobs: QueueReceiver<Job>, mut executor: BatchExecutor, stats: Arc<Mutex<ServeStats>>) {
     while let Some(job) = jobs.recv() {
         match job {
-            Job::Multiply { a, b, client, planner, reply } => {
-                let (c, trace) = executor.multiply_cached_policy(&a, &b, planner);
+            Job::Multiply { a, b, mask, client, planner, reply } => {
+                let (c, trace) = match &mask {
+                    None => executor.multiply_cached_policy(&a, &b, planner),
+                    Some(m) => executor.multiply_cached_masked_policy(&a, &b, m, planner),
+                };
                 let checksum = csr_checksum(&c);
                 {
                     let mut st = stats.lock().unwrap_or_else(|e| e.into_inner());
@@ -721,6 +781,45 @@ mod tests {
         assert_eq!(st.hit_rate(), 0.5, "estimated requests are excluded from the hit rate");
         let js = h.stats_json().render();
         assert!(js.contains("\"plan_estimated\":1"), "{js}");
+        server.shutdown();
+    }
+
+    /// The wire's `"mask"` handle: a masked request equals the
+    /// multiply-then-filter oracle checksum-for-checksum, caches under
+    /// its own (masked) plan identity, and a wrong-shape mask is a
+    /// `bad_request`, not a worker panic.
+    #[test]
+    fn masked_requests_serve_filtered_products_under_their_own_plan() {
+        let server = mem_server(8);
+        let h = server.handle();
+        let client = h.new_client();
+        let a = random_square(7, 96);
+        let oracle = Mask::from_structure(&a).filter(&hash::multiply(&a, &a));
+        let ha = h.register(a).unwrap();
+        // Warm the unmasked plan first — the masked request below must
+        // not be served from it.
+        let full = h.multiply_by_handle(client, ha.raw(), ha.raw()).unwrap();
+        let out = h
+            .multiply_by_handle_masked_policy(client, ha.raw(), ha.raw(), Some(ha.raw()), None)
+            .unwrap();
+        assert_eq!(out.source, PlanSource::Fresh, "masked identity is distinct from the unmasked plan");
+        assert_eq!(out.c, oracle, "masked serve must equal the multiply-then-filter oracle");
+        assert_eq!(out.checksum, csr_checksum(&oracle));
+        assert_ne!(out.checksum, full.checksum, "this mask strictly shrinks the product");
+        // Repeat: the masked plan pooled in the shared store.
+        let out2 = h
+            .multiply_by_handle_masked_policy(client, ha.raw(), ha.raw(), Some(ha.raw()), None)
+            .unwrap();
+        assert_eq!(out2.source, PlanSource::Mem);
+        assert_eq!(out2.symbolic_s, 0.0);
+        assert_eq!(out2.checksum, out.checksum);
+        // A wrong-shape mask bounces before the queue.
+        let wrong = h.register(Csr::identity(5)).unwrap();
+        let e = h
+            .multiply_by_handle_masked_policy(client, ha.raw(), ha.raw(), Some(wrong.raw()), None)
+            .unwrap_err();
+        assert_eq!(e.code(), "bad_request");
+        assert!(e.to_string().contains("mask shape mismatch"), "{e}");
         server.shutdown();
     }
 

@@ -14,6 +14,8 @@
 //! < {"ok":true,...,"plan":"mem","symbolic_s":0.0,"rpt":[…],"col":[…],"val":[…]}
 //! > {"op":"multiply","a":0,"b":0,"planner":"estimated"}
 //! < {"ok":true,...,"plan":"estimated",...}   (cold one-shot: speculative plan, never stored)
+//! > {"op":"multiply","a":0,"b":0,"mask":0}
+//! < {"ok":true,...}   (C = M ⊙ (A·B); mask = a registered handle's structure)
 //! > {"op":"stats"}            < {"ok":true,"stats":{…}}
 //! > {"op":"release","handle":0}  < {"ok":true,"released":0}
 //! > {"op":"ping"}             < {"ok":true,"pong":true}
@@ -46,8 +48,11 @@ pub enum Request {
     /// Multiply two registered operands; `values` asks for the full
     /// result arrays instead of just `nnz` + checksum; `planner`
     /// overrides the daemon's default policy for this request
-    /// (`"exact"` / `"estimated"` / `"auto"`).
-    Multiply { a: u64, b: u64, values: bool, planner: Option<PlannerPolicy> },
+    /// (`"exact"` / `"estimated"` / `"auto"`); `mask` names a third
+    /// registered handle whose *structure* masks the output
+    /// (`C = M ⊙ (A·B)` — `"mask"` equal to `a` is the triangle-
+    /// counting idiom).
+    Multiply { a: u64, b: u64, values: bool, planner: Option<PlannerPolicy>, mask: Option<u64> },
     Release { handle: u64 },
     Stats,
     Ping,
@@ -70,6 +75,12 @@ pub fn parse_request(line: &str) -> Result<Request> {
             b: field_u64(&doc, "b")?,
             values: doc.get("values").and_then(Json::as_bool).unwrap_or(false),
             planner: parse_planner(&doc)?,
+            mask: match doc.get("mask") {
+                None => None,
+                Some(v) => Some(
+                    v.as_u64().ok_or_else(|| anyhow!("field 'mask' must be a matrix handle (integer)"))?,
+                ),
+            },
         }),
         "release" => Ok(Request::Release { handle: field_u64(&doc, "handle")? }),
         "stats" => Ok(Request::Stats),
@@ -220,10 +231,12 @@ pub fn handle_line(h: &ServeHandle, client: u64, line: &str) -> (String, bool) {
                 Err(e) => serve_error_response(&e),
             }
         }
-        Request::Multiply { a, b, values, planner } => match h.multiply_by_handle_policy(client, a, b, planner) {
-            Ok(out) => multiply_response(&out, values),
-            Err(e) => serve_error_response(&e),
-        },
+        Request::Multiply { a, b, values, planner, mask } => {
+            match h.multiply_by_handle_masked_policy(client, a, b, mask, planner) {
+                Ok(out) => multiply_response(&out, values),
+                Err(e) => serve_error_response(&e),
+            }
+        }
         Request::Release { handle } => match h.release(handle) {
             Ok(()) => {
                 let mut o = ok_response();
@@ -276,12 +289,16 @@ mod tests {
             Request::Release { handle: 7 }
         ));
         match parse_request(r#"{"op":"multiply","a":1,"b":2,"values":true}"#).unwrap() {
-            Request::Multiply { a: 1, b: 2, values: true, planner: None } => {}
+            Request::Multiply { a: 1, b: 2, values: true, planner: None, mask: None } => {}
             other => panic!("bad multiply parse: {other:?}"),
         }
         match parse_request(r#"{"op":"multiply","a":1,"b":2,"planner":"estimated"}"#).unwrap() {
             Request::Multiply { planner: Some(PlannerPolicy::Estimated), values: false, .. } => {}
             other => panic!("bad planner parse: {other:?}"),
+        }
+        match parse_request(r#"{"op":"multiply","a":1,"b":2,"mask":3}"#).unwrap() {
+            Request::Multiply { a: 1, b: 2, mask: Some(3), .. } => {}
+            other => panic!("bad mask parse: {other:?}"),
         }
         match parse_request(&inline_register_line()).unwrap() {
             Request::Register { matrix } => {
@@ -301,6 +318,7 @@ mod tests {
             r#"{"op":"multiply","a":"x","b":2}"#,
             r#"{"op":"multiply","a":1,"b":2,"planner":"frobnicate"}"#,
             r#"{"op":"multiply","a":1,"b":2,"planner":7}"#,
+            r#"{"op":"multiply","a":1,"b":2,"mask":"x"}"#,
             r#"{"op":"release"}"#,
             r#"{"op":"register"}"#,
             r#"{"op":"register","dataset":"no-such-dataset"}"#,

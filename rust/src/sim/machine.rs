@@ -69,6 +69,8 @@ fn region_ordinal(r: Region) -> u64 {
         Region::EscExpand => 15,
         Region::SpaVals => 16,
         Region::SpaFlags => 17,
+        Region::MaskRpt => 18,
+        Region::MaskCol => 19,
     }
 }
 
@@ -81,7 +83,7 @@ fn region_base(r: Region) -> u64 {
 fn data_elem_bytes(r: Region) -> u64 {
     match r {
         Region::ColB | Region::ColA | Region::ColC | Region::RptA | Region::RptB | Region::RptC | Region::Map => 4,
-        Region::GroupCtr | Region::HashKeys | Region::SpaFlags => 4,
+        Region::GroupCtr | Region::HashKeys | Region::SpaFlags | Region::MaskRpt | Region::MaskCol => 4,
         Region::ValA | Region::ValB | Region::ValC | Region::IpCount | Region::HashVals | Region::SpaVals => 8,
         Region::AiaStream | Region::EscExpand => 16,
     }

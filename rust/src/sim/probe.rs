@@ -47,13 +47,18 @@ pub enum Region {
     SpaVals,
     /// Dense-SPA occupancy flags (one word per output column).
     SpaFlags,
+    /// Output-mask row pointers (masked SpGEMM: C = M ⊙ (A·B)).
+    MaskRpt,
+    /// Output-mask column indices, streamed once per masked row into
+    /// the per-row membership probe — sequential, AIA-ineligible.
+    MaskCol,
 }
 
 impl Region {
     /// Every region, in the simulator's ordinal order (the order
     /// `sim::machine` assigns base addresses in). Waste reports index
     /// into this array.
-    pub const ALL: [Region; 18] = [
+    pub const ALL: [Region; 20] = [
         Region::RptA,
         Region::ColA,
         Region::ValA,
@@ -72,6 +77,8 @@ impl Region {
         Region::EscExpand,
         Region::SpaVals,
         Region::SpaFlags,
+        Region::MaskRpt,
+        Region::MaskCol,
     ];
 
     /// Stable lowercase name for waste tables, metrics keys, and JSON.
@@ -95,6 +102,8 @@ impl Region {
             Region::EscExpand => "esc_expand",
             Region::SpaVals => "spa_vals",
             Region::SpaFlags => "spa_flags",
+            Region::MaskRpt => "mask_rpt",
+            Region::MaskCol => "mask_col",
         }
     }
 }

@@ -194,7 +194,12 @@ where
     for (d, input) in inputs.iter().enumerate() {
         let sim = SimConfig::for_scale(AiaMode::On, input.scale);
         for (k, &t) in thresholds.iter().enumerate() {
-            let engine = EngineConfig { spa_threshold: t, symbolic_threshold: None, planner: PlannerPolicy::Exact };
+            let engine = EngineConfig {
+                spa_threshold: t,
+                symbolic_threshold: None,
+                planner: PlannerPolicy::Exact,
+                mask: None,
+            };
             let r = simulate_stats_engine_cfg(&input.a, &input.a, &sim, &engine);
             times[d][k] = r.total_ms;
             wastes[d][k] = r.waste_ratio();

@@ -85,21 +85,26 @@ mod traced;
 pub use numeric::{numeric, numeric_bin_into, numeric_timed};
 pub(crate) use numeric::accum_row_spa;
 pub use symbolic::{symbolic, symbolic_cfg};
-pub(crate) use symbolic::{build_bins, symbolic_row_nnz_bitmap, symbolic_row_nnz_hash, symbolic_timed};
+pub(crate) use symbolic::{
+    build_bins, symbolic_row_nnz_bitmap, symbolic_row_nnz_bitmap_masked, symbolic_row_nnz_hash,
+    symbolic_row_nnz_hash_masked, symbolic_row_nnz_trivial_masked, symbolic_timed,
+};
 pub use traced::{
     multiply_single_pass, multiply_traced, multiply_traced_cfg, multiply_traced_stats, multiply_traced_stats_cfg,
 };
 
 use super::estimate::{default_planner_policy, PlannerPolicy};
 use super::grouping::{AccumKind, GroupSpec, Grouping, RowKernel, Strategy, SymbolicKind, GROUP_SPECS};
+use super::mask::Mask;
 use super::table::{HashTable, TableLoc};
 use crate::sim::gpu::DeviceConfig;
 use crate::sim::probe::PhaseTimes;
 use crate::sparse::Csr;
 use std::sync::OnceLock;
 
-/// Tunables of the plan-guided row kernels.
-#[derive(Clone, Copy, Debug, PartialEq)]
+/// Tunables of the plan-guided row kernels. (`Clone` but not `Copy`:
+/// the optional mask holds an `Arc`d structure view.)
+#[derive(Clone, Debug, PartialEq)]
 pub struct EngineConfig {
     /// Density threshold of the dense row kernels: a row switches from
     /// hash to dense-SPA accumulation when `nnz(C_i) / n_cols`
@@ -129,6 +134,16 @@ pub struct EngineConfig {
     /// one-shot products through
     /// [`super::estimate::multiply_estimated`] when it speculates.
     pub planner: PlannerPolicy,
+    /// Output mask for masked SpGEMM `C = M ⊙ (A·B)` (DESIGN.md §2i).
+    /// When present, the symbolic phase counts only mask-admitted
+    /// columns (so `rpt` is the *masked* exact size — never the
+    /// unmasked one), the numeric phase never materializes a rejected
+    /// entry, and the mask's structure hash joins the plan key. The
+    /// mask's shape must equal the output shape
+    /// (`a.n_rows × b.n_cols`). Masked products never speculate —
+    /// policy-aware call sites route them through the exact planner
+    /// regardless of [`EngineConfig::planner`].
+    pub mask: Option<Mask>,
 }
 
 impl Default for EngineConfig {
@@ -144,6 +159,7 @@ impl Default for EngineConfig {
             spa_threshold: default_spa_threshold(),
             symbolic_threshold: None,
             planner: default_planner_policy(),
+            mask: None,
         }
     }
 }
@@ -263,6 +279,12 @@ pub struct SymbolicPlan {
     /// Density threshold knob the kinds were selected with (the base
     /// value, before the cache-adaptive width scaling).
     pub spa_threshold: f64,
+    /// The output mask this plan was built under (`None` = unmasked).
+    /// `rpt`, `accum`, and `bins` are all *masked* quantities when
+    /// present; the numeric phase re-applies the same mask so the fill
+    /// stays consistent with the counted sizes. Rides into the plan
+    /// fingerprint and SAPL v3 persistence.
+    pub mask: Option<Mask>,
 }
 
 impl SymbolicPlan {
@@ -362,6 +384,26 @@ pub fn multiply_timed_cfg(a: &Csr, b: &Csr, cfg: &EngineConfig) -> (Csr, PhaseTi
     times.numeric_s = numeric_times.numeric_s;
     times.numeric_kind_s = numeric_times.numeric_kind_s;
     (c, times)
+}
+
+/// Masked SpGEMM `C = M ⊙ (A·B)` at the process-default config: both
+/// phases prune through the mask, so mask-rejected entries are never
+/// counted, sized, or filled. Bit-identical to
+/// `mask.filter(&multiply(a, b))` (pinned by `tests/masked.rs`).
+pub fn multiply_masked(a: &Csr, b: &Csr, mask: &Mask) -> Csr {
+    multiply_masked_cfg(a, b, mask, &EngineConfig::default())
+}
+
+/// [`multiply_masked`] with an explicit [`EngineConfig`] (whose own
+/// `mask` field is replaced by `mask`). Panics if the mask's shape is
+/// not the output shape `a.n_rows × b.n_cols`.
+pub fn multiply_masked_cfg(a: &Csr, b: &Csr, mask: &Mask, cfg: &EngineConfig) -> Csr {
+    assert_eq!(
+        mask.shape(),
+        (a.n_rows, b.n_cols),
+        "mask shape must equal the output shape a.n_rows x b.n_cols"
+    );
+    multiply_cfg(a, b, &EngineConfig { mask: Some(mask.clone()), ..cfg.clone() })
 }
 
 /// Strategy assigned to a row with the given IP (for tests/diagnostics).
@@ -495,17 +537,25 @@ mod tests {
         // Narrow outputs keep the configured knob as-is; a symbolic
         // override replaces only the symbolic half. The boundary
         // invariants survive scaling: 0.0 stays 0.0, ≥ 1.0 stays ≥ 1.0.
-        let cfg = EngineConfig { spa_threshold: 0.25, symbolic_threshold: None, planner: PlannerPolicy::Exact };
+        let cfg =
+            EngineConfig { spa_threshold: 0.25, symbolic_threshold: None, planner: PlannerPolicy::Exact, mask: None };
         assert_eq!(effective_thresholds(&cfg, 1_000), (0.25, 0.25));
-        let cfg = EngineConfig { spa_threshold: 0.25, symbolic_threshold: Some(0.0), planner: PlannerPolicy::Exact };
+        let cfg = EngineConfig {
+            spa_threshold: 0.25,
+            symbolic_threshold: Some(0.0),
+            planner: PlannerPolicy::Exact,
+            mask: None,
+        };
         assert_eq!(effective_thresholds(&cfg, 1_000), (0.0, 0.25));
         // Past the per-block L2 share (512 KiB / 4 B = 131072 columns)
         // both halves scale up together.
-        let cfg = EngineConfig { spa_threshold: 0.25, symbolic_threshold: None, planner: PlannerPolicy::Exact };
+        let cfg =
+            EngineConfig { spa_threshold: 0.25, symbolic_threshold: None, planner: PlannerPolicy::Exact, mask: None };
         let (sym, num) = effective_thresholds(&cfg, 4 * 131_072);
         assert!((num - 1.0).abs() < 1e-12, "numeric threshold must scale with L2 overflow");
         assert_eq!(sym, num);
-        let cfg = EngineConfig { spa_threshold: 0.0, symbolic_threshold: None, planner: PlannerPolicy::Exact };
+        let cfg =
+            EngineConfig { spa_threshold: 0.0, symbolic_threshold: None, planner: PlannerPolicy::Exact, mask: None };
         assert_eq!(effective_thresholds(&cfg, 4 * 131_072), (0.0, 0.0));
     }
 

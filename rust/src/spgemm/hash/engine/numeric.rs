@@ -8,6 +8,7 @@
 //! are bit-identical — see the module docs of [`super`].
 
 use super::super::grouping::{global_table_size, AccumKind, GROUP_SPECS};
+use super::super::mask::{Mask, MaskRowProbe};
 use super::super::table::{DenseAccumulator, HashTable};
 use super::{bin_batch, bin_table, SymbolicPlan};
 use crate::sim::probe::{Kind, NullProbe, PhaseTimes, Probe, Region};
@@ -61,12 +62,13 @@ pub fn numeric_bin_into(a: &Csr, b: &Csr, plan: &SymbolicPlan, bin_idx: usize, c
     let bin = &plan.bins[bin_idx];
     let spec = &GROUP_SPECS[bin.group as usize];
     let rows = &bin.rows[..];
+    let mask = plan.mask.as_ref();
     let col_ptr = col.as_mut_ptr() as usize;
     let val_ptr = val.as_mut_ptr() as usize;
-    match bin.kind {
+    match (bin.kind, mask) {
         // Single-A-entry rows are scaled copies of one B row: already
         // sorted, collision-free — no accumulator, no sort.
-        AccumKind::ScaledCopy => par_dynamic_with(
+        (AccumKind::ScaledCopy, None) => par_dynamic_with(
             rows.len(),
             bin_batch(spec),
             || (),
@@ -92,7 +94,49 @@ pub fn numeric_bin_into(a: &Csr, b: &Csr, plan: &SymbolicPlan, bin_idx: usize, c
                 }
             },
         ),
-        AccumKind::Hash => par_dynamic_with(
+        // Masked scaled copy: merge the (sorted) B row with the
+        // (sorted) mask row, copying only admitted entries — output
+        // order is still the B row's order, so the row is bit-identical
+        // to filtering the unmasked copy.
+        (AccumKind::ScaledCopy, Some(m)) => par_dynamic_with(
+            rows.len(),
+            bin_batch(spec),
+            || (),
+            |_, ri| {
+                let row = rows[ri] as usize;
+                let start = plan.rpt[row];
+                let n_out = plan.rpt[row + 1] - start;
+                let j = a.rpt[row];
+                let av = a.val[j];
+                let (bc, bv) = b.row(a.col[j] as usize);
+                let mrow = m.row(row);
+                let cp = col_ptr as *mut u32;
+                let vp = val_ptr as *mut f64;
+                let (mut x, mut y, mut o) = (0usize, 0usize, 0usize);
+                while x < bc.len() && y < mrow.len() {
+                    match bc[x].cmp(&mrow[y]) {
+                        std::cmp::Ordering::Less => x += 1,
+                        std::cmp::Ordering::Greater => y += 1,
+                        std::cmp::Ordering::Equal => {
+                            // Real assert: bounds the unsafe writes, so a
+                            // plan/input mismatch panics, never scribbles.
+                            assert!(o < n_out, "plan does not match inputs at row {row}");
+                            // SAFETY: rows write disjoint [rpt[i], rpt[i+1])
+                            // slices, and o < n_out above.
+                            unsafe {
+                                *cp.add(start + o) = bc[x];
+                                *vp.add(start + o) = av * bv[x];
+                            }
+                            o += 1;
+                            x += 1;
+                            y += 1;
+                        }
+                    }
+                }
+                assert_eq!(o, n_out, "plan does not match inputs at row {row}");
+            },
+        ),
+        (AccumKind::Hash, None) => par_dynamic_with(
             rows.len(),
             bin_batch(spec),
             || (bin_table(spec), Vec::<(u32, f64)>::new()),
@@ -112,10 +156,26 @@ pub fn numeric_bin_into(a: &Csr, b: &Csr, plan: &SymbolicPlan, bin_idx: usize, c
                 write_sorted_row(scratch, row, start, n_out, col_ptr, val_ptr);
             },
         ),
+        (AccumKind::Hash, Some(m)) => par_dynamic_with(
+            rows.len(),
+            bin_batch(spec),
+            || (bin_table(spec), Vec::<(u32, f64)>::new(), MaskRowProbe::new(b.n_cols)),
+            |(table, scratch, admit), ri| {
+                let row = rows[ri] as usize;
+                let start = plan.rpt[row];
+                let n_out = plan.rpt[row + 1] - start;
+                match spec.table_size {
+                    Some(_) => table.clear(),
+                    None => table.reset_with_capacity(global_table_size(n_out as u64)),
+                }
+                accum_row_fast_masked(a, b, row, table, scratch, admit, m);
+                write_sorted_row(scratch, row, start, n_out, col_ptr, val_ptr);
+            },
+        ),
         // Dense rows stream into a per-worker SPA: no probe chains, and
         // the accumulation order per column is identical to the hash
         // path's, so the sorted output is bit-identical.
-        AccumKind::Spa => par_dynamic_with(
+        (AccumKind::Spa, None) => par_dynamic_with(
             rows.len(),
             bin_batch(spec),
             || (DenseAccumulator::new(b.n_cols), Vec::<(u32, f64)>::new()),
@@ -125,6 +185,19 @@ pub fn numeric_bin_into(a: &Csr, b: &Csr, plan: &SymbolicPlan, bin_idx: usize, c
                 let n_out = plan.rpt[row + 1] - start;
                 spa.clear();
                 accum_row_spa(a, b, row, spa, scratch);
+                write_sorted_row(scratch, row, start, n_out, col_ptr, val_ptr);
+            },
+        ),
+        (AccumKind::Spa, Some(m)) => par_dynamic_with(
+            rows.len(),
+            bin_batch(spec),
+            || (DenseAccumulator::new(b.n_cols), Vec::<(u32, f64)>::new(), MaskRowProbe::new(b.n_cols)),
+            |(spa, scratch, admit), ri| {
+                let row = rows[ri] as usize;
+                let start = plan.rpt[row];
+                let n_out = plan.rpt[row + 1] - start;
+                spa.clear();
+                accum_row_spa_masked(a, b, row, spa, scratch, admit, m);
                 write_sorted_row(scratch, row, start, n_out, col_ptr, val_ptr);
             },
         ),
@@ -222,6 +295,63 @@ pub(crate) fn accum_row_spa(
     spa.gather_list(scratch);
 }
 
+/// Masked sibling of [`accum_row_fast`]: identical intermediate-product
+/// stream, but each insert is gated on mask admission, so rejected
+/// columns never touch the table. Admitted columns accumulate in the
+/// same B-stream encounter order as the unmasked path — the surviving
+/// float sums are bit-identical to filtering the unmasked row.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn accum_row_fast_masked(
+    a: &Csr,
+    b: &Csr,
+    i: usize,
+    table: &mut HashTable,
+    scratch: &mut Vec<(u32, f64)>,
+    admit: &mut MaskRowProbe,
+    mask: &Mask,
+) {
+    admit.seed(mask.row(i));
+    for j in a.row_range(i) {
+        let colk = a.col[j] as usize;
+        let av = a.val[j];
+        for k in b.rpt[colk]..b.rpt[colk + 1] {
+            let c = b.col[k];
+            if admit.admits(c) {
+                table.insert_numeric(c, av * b.val[k], &mut NullProbe);
+            }
+        }
+    }
+    table.gather_list(scratch);
+}
+
+/// Masked sibling of [`accum_row_spa`]: gate each SPA add on mask
+/// admission. Per-column accumulation order matches the masked hash
+/// path (B-stream encounter order), keeping all masked paths
+/// bit-identical.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn accum_row_spa_masked(
+    a: &Csr,
+    b: &Csr,
+    i: usize,
+    spa: &mut DenseAccumulator,
+    scratch: &mut Vec<(u32, f64)>,
+    admit: &mut MaskRowProbe,
+    mask: &Mask,
+) {
+    admit.seed(mask.row(i));
+    for j in a.row_range(i) {
+        let colk = a.col[j] as usize;
+        let av = a.val[j];
+        for k in b.rpt[colk]..b.rpt[colk + 1] {
+            let c = b.col[k];
+            if admit.admits(c) {
+                spa.add(c, av * b.val[k]);
+            }
+        }
+    }
+    spa.gather_list(scratch);
+}
+
 /// Traced dense-SPA row processor: the B rows are read as **plain
 /// streamed loads** (never `indirect_range` — SPA rows are
 /// AIA-ineligible by design, the gather/scatter engine buys nothing for
@@ -266,15 +396,52 @@ mod tests {
     #[test]
     fn spa_and_hash_paths_are_bit_identical() {
         let (a, b) = dense_pair(101, 96);
-        let spa_cfg = EngineConfig { spa_threshold: 0.0, symbolic_threshold: None, planner: PlannerPolicy::Exact };
+        let spa_cfg = EngineConfig {
+            spa_threshold: 0.0,
+            symbolic_threshold: None,
+            planner: PlannerPolicy::Exact,
+            mask: None,
+        };
         let forced_spa = multiply_cfg(&a, &b, &spa_cfg);
-        let no_spa = multiply_cfg(&a, &b, &EngineConfig { spa_threshold: 2.0, ..spa_cfg });
+        let no_spa = multiply_cfg(&a, &b, &EngineConfig { spa_threshold: 2.0, ..spa_cfg.clone() });
         let default = multiply(&a, &b);
         // bit-for-bit across all accumulator selections
         assert_eq!(forced_spa, no_spa);
         assert_eq!(forced_spa, default);
         let r = spgemm_reference(&a, &b);
         assert!(forced_spa.approx_eq(&r, 1e-10));
+    }
+
+    #[test]
+    fn masked_numeric_matches_filtered_oracle_across_accumulators() {
+        use super::super::super::mask::Mask;
+        use super::super::multiply_masked_cfg;
+        use crate::util::Pcg32;
+
+        // RMAT mixes 1-nnz rows (ScaledCopy) with hub rows, so all
+        // three accumulator arms run; the threshold sweep flips the
+        // dense rows between the hash and SPA arms.
+        let mut rng = Pcg32::seeded(41);
+        let a = crate::gen::rmat(96, 700, crate::gen::RmatParams::uniform(), &mut rng);
+        let b = crate::gen::rmat(96, 700, crate::gen::RmatParams::uniform(), &mut rng);
+        let mut mc = crate::sparse::Coo::new(a.n_rows, b.n_cols);
+        for i in 0..a.n_rows {
+            for jj in i.saturating_sub(7)..(i + 8).min(b.n_cols) {
+                mc.push(i, jj, 1.0);
+            }
+        }
+        let mask = Mask::from_structure(&mc.to_csr());
+        let oracle = mask.filter(&multiply(&a, &b));
+        for thr in [0.0, 2.0] {
+            let cfg = EngineConfig {
+                spa_threshold: thr,
+                symbolic_threshold: None,
+                planner: PlannerPolicy::Exact,
+                mask: None,
+            };
+            let c = multiply_masked_cfg(&a, &b, &mask, &cfg);
+            assert_eq!(c, oracle, "masked numeric must be bit-identical at spa_threshold {thr}");
+        }
     }
 
     #[test]

@@ -12,9 +12,10 @@
 //! [`PhaseTimes::symbolic_kind_s`] comes from.
 
 use super::super::grouping::{
-    global_table_size, select_accumulator, select_symbolic, AccumKind, GroupSpec, Grouping, SymbolicKind,
-    GROUP_SPECS,
+    global_table_size, select_accumulator, select_symbolic, select_symbolic_masked, AccumKind, GroupSpec,
+    Grouping, SymbolicKind, GROUP_SPECS,
 };
+use super::super::mask::{Mask, MaskRowProbe};
 use super::super::table::{HashTable, RowCounter};
 use super::{bin_batch, bin_table, effective_thresholds, EngineConfig, NumericBin, SymbolicPlan};
 use crate::sim::probe::{Kind, NullProbe, PhaseTimes, Probe, Region};
@@ -45,11 +46,11 @@ pub fn symbolic(a: &Csr, b: &Csr) -> SymbolicPlan {
 ///     vec![1.0, 1.0, 0.0, 0.0],
 ///     vec![0.0, 0.0, 1.0, 1.0],
 /// ]);
-/// let plan = symbolic_cfg(&a, &b, &EngineConfig { spa_threshold: 0.5, symbolic_threshold: None, planner: PlannerPolicy::Exact });
+/// let plan = symbolic_cfg(&a, &b, &EngineConfig { spa_threshold: 0.5, symbolic_threshold: None, planner: PlannerPolicy::Exact, mask: None });
 /// assert_eq!(plan.accumulator_kind(0), Some(AccumKind::Spa));
 /// assert_eq!(plan.accumulator_kind(1), Some(AccumKind::ScaledCopy));
 /// // Raising the threshold past 1.0 disables the SPA entirely.
-/// let plan = symbolic_cfg(&a, &b, &EngineConfig { spa_threshold: 2.0, symbolic_threshold: None, planner: PlannerPolicy::Exact });
+/// let plan = symbolic_cfg(&a, &b, &EngineConfig { spa_threshold: 2.0, symbolic_threshold: None, planner: PlannerPolicy::Exact, mask: None });
 /// assert_eq!(plan.accumulator_kind(0), Some(AccumKind::Hash));
 /// ```
 pub fn symbolic_cfg(a: &Csr, b: &Csr, cfg: &EngineConfig) -> SymbolicPlan {
@@ -90,10 +91,23 @@ fn symbolic_with(
     cfg: &EngineConfig,
 ) -> (SymbolicPlan, [f64; 3]) {
     let (sym_threshold, num_threshold) = effective_thresholds(cfg, b.n_cols);
-    // --- symbolic kernel selection: per row, from the IP bound ---
+    let mask = cfg.mask.as_ref();
+    if let Some(m) = mask {
+        assert_eq!(
+            m.shape(),
+            (a.n_rows, b.n_cols),
+            "mask shape must equal the output shape a.n_rows x b.n_cols"
+        );
+    }
+    // --- symbolic kernel selection: per row, from the IP bound (the
+    // masked rule additionally caps the bound by the mask row's size
+    // and routes empty-mask rows through the trivial kernel) ---
     let mut sym = vec![SymbolicKind::Trivial; a.n_rows];
     for (r, k) in sym.iter_mut().enumerate() {
-        *k = select_symbolic(a.row_nnz(r), ip[r], b.n_cols, sym_threshold);
+        *k = match mask {
+            None => select_symbolic(a.row_nnz(r), ip[r], b.n_cols, sym_threshold),
+            Some(m) => select_symbolic_masked(a.row_nnz(r), ip[r], m.row_nnz(r), b.n_cols, sym_threshold),
+        };
     }
     // --- counting, one (group × kernel) sub-bin at a time ---
     let mut row_nnz = vec![0u32; a.n_rows];
@@ -115,12 +129,12 @@ fn symbolic_with(
                     continue;
                 }
                 let t0 = Instant::now();
-                match SymbolicKind::from_index(ki) {
+                match (SymbolicKind::from_index(ki), mask) {
                     // Collisions impossible: a single A entry reaches one
                     // B row (whose columns are unique by CSR invariant),
                     // and IP ≤ 1 yields at most one product — the count
                     // *is* the IP bound.
-                    SymbolicKind::Trivial => {
+                    (SymbolicKind::Trivial, None) => {
                         for &row in part {
                             let row = row as usize;
                             // SAFETY: each row index occurs once across
@@ -130,7 +144,21 @@ fn symbolic_with(
                             unsafe { *(nnz_ptr as *mut u32).add(row) = ip[row] as u32 };
                         }
                     }
-                    SymbolicKind::Hash => par_dynamic_with(
+                    // The masked-trivial count is the sorted intersection
+                    // of the (collision-free) candidate stream with the
+                    // mask row — the IP shortcut would overcount.
+                    (SymbolicKind::Trivial, Some(m)) => par_dynamic_with(
+                        part.len(),
+                        bin_batch(spec),
+                        || (),
+                        |_, ri| {
+                            let row = part[ri] as usize;
+                            let u = symbolic_row_nnz_trivial_masked(a, b, row, m);
+                            // SAFETY: see above — disjoint slots.
+                            unsafe { *(nnz_ptr as *mut u32).add(row) = u };
+                        },
+                    ),
+                    (SymbolicKind::Hash, None) => par_dynamic_with(
                         part.len(),
                         bin_batch(spec),
                         || bin_table(spec),
@@ -141,13 +169,35 @@ fn symbolic_with(
                             unsafe { *(nnz_ptr as *mut u32).add(row) = u };
                         },
                     ),
-                    SymbolicKind::Bitmap => par_dynamic_with(
+                    (SymbolicKind::Hash, Some(m)) => par_dynamic_with(
+                        part.len(),
+                        bin_batch(spec),
+                        || (bin_table(spec), MaskRowProbe::new(b.n_cols)),
+                        |(table, admit), ri| {
+                            let row = part[ri] as usize;
+                            let u = symbolic_row_nnz_hash_masked(a, b, row, ip[row], spec, table, admit, m);
+                            // SAFETY: see above — disjoint slots.
+                            unsafe { *(nnz_ptr as *mut u32).add(row) = u };
+                        },
+                    ),
+                    (SymbolicKind::Bitmap, None) => par_dynamic_with(
                         part.len(),
                         bin_batch(spec),
                         || RowCounter::new(b.n_cols),
                         |counter, ri| {
                             let row = part[ri] as usize;
                             let u = symbolic_row_nnz_bitmap(a, b, row, counter);
+                            // SAFETY: see above — disjoint slots.
+                            unsafe { *(nnz_ptr as *mut u32).add(row) = u };
+                        },
+                    ),
+                    (SymbolicKind::Bitmap, Some(m)) => par_dynamic_with(
+                        part.len(),
+                        bin_batch(spec),
+                        || (RowCounter::new(b.n_cols), MaskRowProbe::new(b.n_cols)),
+                        |(counter, admit), ri| {
+                            let row = part[ri] as usize;
+                            let u = symbolic_row_nnz_bitmap_masked(a, b, row, counter, admit, m);
                             // SAFETY: see above — disjoint slots.
                             unsafe { *(nnz_ptr as *mut u32).add(row) = u };
                         },
@@ -162,7 +212,16 @@ fn symbolic_with(
         rpt[i + 1] = rpt[i] + row_nnz[i] as usize;
     }
     let (accum, bins) = build_bins(a, b.n_cols, &ip, &grouping, &rpt, &sym, num_threshold);
-    let plan = SymbolicPlan { ip, grouping, rpt, accum, symbolic: sym, bins, spa_threshold: cfg.spa_threshold };
+    let plan = SymbolicPlan {
+        ip,
+        grouping,
+        rpt,
+        accum,
+        symbolic: sym,
+        bins,
+        spa_threshold: cfg.spa_threshold,
+        mask: cfg.mask.clone(),
+    };
     (plan, symbolic_kind_s)
 }
 
@@ -256,6 +315,117 @@ pub(crate) fn symbolic_row_nnz_bitmap(a: &Csr, b: &Csr, row: usize, counter: &mu
     counter.unique() as u32
 }
 
+/// Entries shared by two strictly sorted column lists (two-pointer
+/// merge). Only valid for counting when the caller guarantees the
+/// candidate stream is collision-free — which the trivial domain does.
+fn sorted_intersection_count(x: &[u32], y: &[u32]) -> u32 {
+    let (mut i, mut k, mut n) = (0usize, 0usize, 0u32);
+    while i < x.len() && k < y.len() {
+        match x[i].cmp(&y[k]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => k += 1,
+            std::cmp::Ordering::Equal => {
+                n += 1;
+                i += 1;
+                k += 1;
+            }
+        }
+    }
+    n
+}
+
+/// Masked-trivial counting kernel: exact masked nnz of a row in the
+/// trivial domain (`IP ≤ 1` or a single A entry — candidates are
+/// collision-free, so the count is the sorted intersection of each
+/// reached B row with the mask row). The unmasked IP shortcut is
+/// **invalid** under a mask: it would count rejected columns. Empty
+/// mask rows (the third trivial case
+/// [`select_symbolic_masked`] adds) return 0 without touching B.
+pub(crate) fn symbolic_row_nnz_trivial_masked(a: &Csr, b: &Csr, row: usize, mask: &Mask) -> u32 {
+    let mrow = mask.row(row);
+    if mrow.is_empty() {
+        return 0;
+    }
+    let mut n = 0u32;
+    for j in a.row_range(row) {
+        let colk = a.col[j] as usize;
+        n += sorted_intersection_count(&b.col[b.rpt[colk]..b.rpt[colk + 1]], mrow);
+    }
+    n
+}
+
+/// Masked hash counting kernel: [`symbolic_row_nnz_hash`] probing the
+/// mask before every insert, so rejected columns never enter the table
+/// — the count is the *masked* exact size and the table is bounded by
+/// the mask row, not the IP bound. `admit` is the per-worker stamped
+/// membership probe, seeded once per row.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn symbolic_row_nnz_hash_masked(
+    a: &Csr,
+    b: &Csr,
+    row: usize,
+    ip_row: u64,
+    spec: &GroupSpec,
+    table: &mut HashTable,
+    admit: &mut MaskRowProbe,
+    mask: &Mask,
+) -> u32 {
+    let mrow = mask.row(row);
+    if mrow.is_empty() {
+        return 0;
+    }
+    if ip_row <= 1 || a.row_nnz(row) <= 1 {
+        return symbolic_row_nnz_trivial_masked(a, b, row, mask);
+    }
+    match spec.table_size {
+        Some(_) => table.clear(),
+        // Unique count is bounded by IP, the output width, *and* the
+        // mask row — hub rows with narrow masks stay small.
+        None => {
+            table.reset_with_capacity(global_table_size(ip_row.min(b.n_cols as u64).min(mrow.len() as u64)))
+        }
+    }
+    admit.seed(mrow);
+    for j in a.row_range(row) {
+        let colk = a.col[j] as usize;
+        for k in b.rpt[colk]..b.rpt[colk + 1] {
+            let c = b.col[k];
+            if admit.admits(c) {
+                table.insert_symbolic(c, &mut NullProbe);
+            }
+        }
+    }
+    table.unique as u32
+}
+
+/// Masked bitmap counting kernel: [`symbolic_row_nnz_bitmap`] probing
+/// the mask before every first-touch count.
+pub(crate) fn symbolic_row_nnz_bitmap_masked(
+    a: &Csr,
+    b: &Csr,
+    row: usize,
+    counter: &mut RowCounter,
+    admit: &mut MaskRowProbe,
+    mask: &Mask,
+) -> u32 {
+    let mrow = mask.row(row);
+    if mrow.is_empty() {
+        return 0;
+    }
+    counter.clear();
+    admit.seed(mrow);
+    for j in a.row_range(row) {
+        let colk = a.col[j] as usize;
+        for k in b.rpt[colk]..b.rpt[colk + 1] {
+            let c = b.col[k];
+            if admit.admits(c) {
+                counter.count(c);
+            }
+        }
+    }
+    counter.unique() as u32
+}
+
 /// Allocation-phase row processor (Algorithms 2–3 minus the thread
 /// bookkeeping): symbolic hash inserts of every B-column reachable from
 /// row `i` of A. Returns the unique count (= nnz of output row).
@@ -328,13 +498,14 @@ mod tests {
     fn threshold_boundaries_select_kinds() {
         let (a, b) = dense_pair(7, 64);
         // 0.0 forces SPA on every multi-entry row: no hash bins remain.
-        let cfg = EngineConfig { spa_threshold: 0.0, symbolic_threshold: None, planner: PlannerPolicy::Exact };
+        let cfg =
+            EngineConfig { spa_threshold: 0.0, symbolic_threshold: None, planner: PlannerPolicy::Exact, mask: None };
         let plan = symbolic_cfg(&a, &b, &cfg);
         assert!(plan.bins.iter().all(|bin| bin.kind != AccumKind::Hash), "0.0 must force SPA");
         assert!(plan.kind_rows()[AccumKind::Spa.index()] > 0);
         // ≥ 1.0 disables SPA entirely.
         for thr in [1.0, 1.5] {
-            let cfg = EngineConfig { spa_threshold: thr, ..cfg };
+            let cfg = EngineConfig { spa_threshold: thr, ..cfg.clone() };
             let plan = symbolic_cfg(&a, &b, &cfg);
             assert!(plan.bins.iter().all(|bin| bin.kind != AccumKind::Spa), "{thr} must disable SPA");
         }
@@ -345,7 +516,8 @@ mod tests {
         let mut rng = Pcg32::seeded(41);
         let a = random_csr(&mut rng, 200, 180, 0.04);
         let b = random_csr(&mut rng, 180, 150, 0.04);
-        let cfg = EngineConfig { spa_threshold: 0.25, symbolic_threshold: None, planner: PlannerPolicy::Exact };
+        let cfg =
+            EngineConfig { spa_threshold: 0.25, symbolic_threshold: None, planner: PlannerPolicy::Exact, mask: None };
         let plan = symbolic_cfg(&a, &b, &cfg);
         for r in 0..a.n_rows {
             let expect = select_symbolic(a.row_nnz(r), plan.ip[r], b.n_cols, 0.25);
@@ -354,7 +526,7 @@ mod tests {
         assert_eq!(plan.symbolic_kind_rows().iter().sum::<usize>(), a.n_rows);
         // A symbolic override rewires only the counting kernel, never
         // the sizes or the numeric kinds.
-        let forced = symbolic_cfg(&a, &b, &EngineConfig { symbolic_threshold: Some(0.0), ..cfg });
+        let forced = symbolic_cfg(&a, &b, &EngineConfig { symbolic_threshold: Some(0.0), ..cfg.clone() });
         assert_eq!(forced.rpt, plan.rpt);
         assert_eq!(forced.accum, plan.accum);
         assert!(
@@ -396,11 +568,50 @@ mod tests {
         // Dense product at a forced-bitmap threshold: the bitmap kernel
         // must be the one accumulating symbolic seconds.
         let (a, b) = dense_pair(14, 96);
-        let cfg = EngineConfig { spa_threshold: 0.25, symbolic_threshold: Some(0.0), planner: PlannerPolicy::Exact };
+        let cfg = EngineConfig {
+            spa_threshold: 0.25,
+            symbolic_threshold: Some(0.0),
+            planner: PlannerPolicy::Exact,
+            mask: None,
+        };
         let (plan, t) = symbolic_timed(&a, &b, &cfg);
         assert!(plan.symbolic_kind_rows()[SymbolicKind::Bitmap.index()] > 0);
         assert!(t.symbolic_kind_s[SymbolicKind::Bitmap.index()] > 0.0, "bitmap seconds must be recorded");
         assert_eq!(t.symbolic_kind_s[SymbolicKind::Hash.index()], 0.0, "no hash sub-bin ran");
         assert!(t.symbolic_kind_s.iter().sum::<f64>() <= t.symbolic_s + 1e-9);
+    }
+
+    #[test]
+    fn masked_symbolic_counts_are_exact_and_never_exceed_unmasked() {
+        use super::super::super::mask::Mask;
+        let mut rng = Pcg32::seeded(61);
+        let a = random_csr(&mut rng, 150, 130, 0.05);
+        let b = random_csr(&mut rng, 130, 110, 0.05);
+        let unmasked = symbolic(&a, &b);
+        let oracle = spgemm_reference(&a, &b);
+        // Mask = a band over the (rectangular) output shape; exercise
+        // every kernel by sweeping the threshold from forced-bitmap to
+        // forced-hash.
+        let mut coo = crate::sparse::Coo::new(a.n_rows, b.n_cols);
+        for i in 0..a.n_rows {
+            for j in i.saturating_sub(9)..(i + 10).min(b.n_cols) {
+                coo.push(i, j, 1.0);
+            }
+        }
+        let mask = Mask::from_structure(&coo.to_csr());
+        for sym_thr in [Some(0.0), Some(8.0), None] {
+            let cfg = EngineConfig {
+                spa_threshold: 0.25,
+                symbolic_threshold: sym_thr,
+                planner: PlannerPolicy::Exact,
+                mask: Some(mask.clone()),
+            };
+            let plan = symbolic_cfg(&a, &b, &cfg);
+            let expect = mask.filter(&oracle);
+            assert_eq!(plan.rpt, expect.rpt, "masked symbolic sizes must be exact (thr {sym_thr:?})");
+            for r in 0..a.n_rows {
+                assert!(plan.row_nnz(r) <= unmasked.row_nnz(r), "masked count exceeds unmasked on row {r}");
+            }
+        }
     }
 }

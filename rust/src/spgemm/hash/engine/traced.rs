@@ -9,9 +9,10 @@
 //! the AIA engine model rewrites.
 
 use super::super::grouping::{
-    global_table_size, select_accumulator, select_symbolic, AccumKind, Grouping, Strategy, SymbolicKind,
-    GROUP_SPECS,
+    global_table_size, select_accumulator, select_symbolic, select_symbolic_masked, AccumKind, Grouping,
+    Strategy, SymbolicKind, GROUP_SPECS,
 };
+use super::super::mask::{Mask, MaskRowProbe};
 use super::super::sort::bitonic_sort_by_key;
 use super::super::table::{DenseAccumulator, HashTable, RowCounter, TableLoc};
 use super::numeric::{accum_row, accum_row_fast, accum_row_spa_traced};
@@ -157,6 +158,11 @@ pub fn multiply_traced<P: Probe>(a: &Csr, b: &Csr, probe: &mut P) -> Csr {
 pub fn multiply_traced_cfg<P: Probe>(a: &Csr, b: &Csr, probe: &mut P, cfg: &EngineConfig) -> Csr {
     assert_eq!(a.n_cols, b.n_rows, "dimension mismatch");
     let (sym_threshold, num_threshold) = effective_thresholds(cfg, b.n_cols);
+    let mask = cfg.mask.as_ref();
+    if let Some(m) = mask {
+        assert_eq!(m.shape(), (a.n_rows, b.n_cols), "mask shape must equal the output shape");
+    }
+    let mut admit = mask.map(|_| MaskRowProbe::new(b.n_cols));
     // ---- grouping phase ----
     let ip = intermediate_products_traced(a, b, probe);
     let grouping = Grouping::build(&ip);
@@ -175,12 +181,23 @@ pub fn multiply_traced_cfg<P: Probe>(a: &Csr, b: &Csr, probe: &mut P, cfg: &Engi
             for &row in chunk {
                 let row = row as usize;
                 probe.access(Region::Map, row, 4, Kind::Read);
+                let kind = match mask {
+                    None => select_symbolic(a.row_nnz(row), ip[row], b.n_cols, sym_threshold),
+                    Some(m) => {
+                        select_symbolic_masked(a.row_nnz(row), ip[row], m.row_nnz(row), b.n_cols, sym_threshold)
+                    }
+                };
                 // Plan-guided bitmap rows: streaming first-touch counts,
                 // no hash table, no indirection (AIA-ineligible).
-                if select_symbolic(a.row_nnz(row), ip[row], b.n_cols, sym_threshold) == SymbolicKind::Bitmap {
+                if kind == SymbolicKind::Bitmap {
                     let counter = bitmap_holder.get_or_insert_with(|| RowCounter::new(b.n_cols));
                     counter.clear();
-                    row_nnz[row] = alloc_row_bitmap_traced(a, b, row, counter, probe);
+                    row_nnz[row] = match mask {
+                        None => alloc_row_bitmap_traced(a, b, row, counter, probe),
+                        Some(m) => {
+                            alloc_row_bitmap_masked_traced(a, b, row, counter, admit.as_mut().unwrap(), m, probe)
+                        }
+                    };
                     probe.access(Region::RptC, row + 1, 4, Kind::Write);
                     continue;
                 }
@@ -194,7 +211,13 @@ pub fn multiply_traced_cfg<P: Probe>(a: &Csr, b: &Csr, probe: &mut P, cfg: &Engi
                         table_holder.as_mut().unwrap()
                     }
                 };
-                row_nnz[row] = alloc_row(a, b, row, table, probe);
+                // The traced path has no separate trivial arm: trivial
+                // rows (masked or not) count correctly through the hash
+                // table, they just never collide.
+                row_nnz[row] = match mask {
+                    None => alloc_row(a, b, row, table, probe),
+                    Some(m) => alloc_row_masked_traced(a, b, row, table, admit.as_mut().unwrap(), m, probe),
+                };
                 if spec.table_size.is_none() {
                     table_holder = None; // fresh global table per huge row
                 }
@@ -229,7 +252,12 @@ pub fn multiply_traced_cfg<P: Probe>(a: &Csr, b: &Csr, probe: &mut P, cfg: &Engi
                 if traced_row_uses_spa(a, b, row, row_nnz[row] as usize, num_threshold) {
                     let spa = spa_holder.get_or_insert_with(|| DenseAccumulator::new(b.n_cols));
                     spa.clear();
-                    accum_row_spa_traced(a, b, row, spa, &mut scratch, probe);
+                    match mask {
+                        None => accum_row_spa_traced(a, b, row, spa, &mut scratch, probe),
+                        Some(m) => {
+                            accum_row_spa_masked_traced(a, b, row, spa, &mut scratch, admit.as_mut().unwrap(), m, probe)
+                        }
+                    }
                     probe.access(Region::RptC, row, 4, Kind::Read);
                     for (o, &(c, v)) in scratch.iter().enumerate() {
                         probe.access(Region::ColC, start + o, 4, Kind::Write);
@@ -249,7 +277,10 @@ pub fn multiply_traced_cfg<P: Probe>(a: &Csr, b: &Csr, probe: &mut P, cfg: &Engi
                         table_holder.as_mut().unwrap()
                     }
                 };
-                accum_row(a, b, row, table, &mut scratch, probe);
+                match mask {
+                    None => accum_row(a, b, row, table, &mut scratch, probe),
+                    Some(m) => accum_row_masked_traced(a, b, row, table, &mut scratch, admit.as_mut().unwrap(), m, probe),
+                }
                 // Column-index sorting: the paper's in-block bitonic network.
                 bitonic_sort_by_key(&mut scratch, probe);
                 probe.access(Region::RptC, row, 4, Kind::Read);
@@ -287,6 +318,11 @@ pub fn multiply_traced_stats<P: Probe>(a: &Csr, b: &Csr, probe: &mut P, every: u
 pub fn multiply_traced_stats_cfg<P: Probe>(a: &Csr, b: &Csr, probe: &mut P, every: usize, cfg: &EngineConfig) {
     assert_eq!(a.n_cols, b.n_rows, "dimension mismatch");
     let (sym_threshold, num_threshold) = effective_thresholds(cfg, b.n_cols);
+    let mask = cfg.mask.as_ref();
+    if let Some(m) = mask {
+        assert_eq!(m.shape(), (a.n_rows, b.n_cols), "mask shape must equal the output shape");
+    }
+    let mut admit = mask.map(|_| MaskRowProbe::new(b.n_cols));
     let every = every.max(1);
     // IP for *all* rows (cheap, parallel) — grouping must be exact.
     let ip = intermediate_products(a, b);
@@ -335,15 +371,33 @@ pub fn multiply_traced_stats_cfg<P: Probe>(a: &Csr, b: &Csr, probe: &mut P, ever
             for &row in chunk {
                 let row = row as usize;
                 if !sampled {
-                    row_nnz[row] = ip[row].min(b.n_cols as u64) as u32;
+                    // The approximate size of an unsampled row: IP and
+                    // output width, capped by the mask row (the masked
+                    // exact size can never exceed it).
+                    let mut bound = ip[row].min(b.n_cols as u64);
+                    if let Some(m) = mask {
+                        bound = bound.min(m.row_nnz(row) as u64);
+                    }
+                    row_nnz[row] = bound as u32;
                     continue;
                 }
                 exact[row] = true;
                 probe.access(Region::Map, row, 4, Kind::Read);
-                if select_symbolic(a.row_nnz(row), ip[row], b.n_cols, sym_threshold) == SymbolicKind::Bitmap {
+                let kind = match mask {
+                    None => select_symbolic(a.row_nnz(row), ip[row], b.n_cols, sym_threshold),
+                    Some(m) => {
+                        select_symbolic_masked(a.row_nnz(row), ip[row], m.row_nnz(row), b.n_cols, sym_threshold)
+                    }
+                };
+                if kind == SymbolicKind::Bitmap {
                     let counter = bitmap_holder.get_or_insert_with(|| RowCounter::new(b.n_cols));
                     counter.clear();
-                    row_nnz[row] = alloc_row_bitmap_traced(a, b, row, counter, probe);
+                    row_nnz[row] = match mask {
+                        None => alloc_row_bitmap_traced(a, b, row, counter, probe),
+                        Some(m) => {
+                            alloc_row_bitmap_masked_traced(a, b, row, counter, admit.as_mut().unwrap(), m, probe)
+                        }
+                    };
                     probe.access(Region::RptC, row + 1, 4, Kind::Write);
                     continue;
                 }
@@ -357,7 +411,10 @@ pub fn multiply_traced_stats_cfg<P: Probe>(a: &Csr, b: &Csr, probe: &mut P, ever
                         table_holder.as_mut().unwrap()
                     }
                 };
-                row_nnz[row] = alloc_row(a, b, row, table, probe);
+                row_nnz[row] = match mask {
+                    None => alloc_row(a, b, row, table, probe),
+                    Some(m) => alloc_row_masked_traced(a, b, row, table, admit.as_mut().unwrap(), m, probe),
+                };
                 if spec.table_size.is_none() {
                     table_holder = None;
                 }
@@ -395,23 +452,37 @@ pub fn multiply_traced_stats_cfg<P: Probe>(a: &Csr, b: &Csr, probe: &mut P, ever
                 let row = row as usize;
                 probe.access(Region::Map, row, 4, Kind::Read);
                 let start = rpt[row];
-                let bound = ip[row].min(b.n_cols as u64) as usize;
+                let mut bound = ip[row].min(b.n_cols as u64) as usize;
+                if let Some(m) = mask {
+                    bound = bound.min(m.row_nnz(row));
+                }
                 let n_out = if exact[row] {
                     row_nnz[row] as usize
                 } else if bound as f64 <= num_threshold * b.n_cols as f64 {
-                    // The IP bound already rules SPA out (n_out ≤ bound):
-                    // no need for the exact recount on sparse rows.
+                    // The (masked) bound already rules SPA out
+                    // (n_out ≤ bound): no need for the exact recount on
+                    // sparse rows.
                     bound
                 } else {
                     count_table.reset_with_capacity(global_table_size(bound as u64));
-                    alloc_row(a, b, row, &mut count_table, &mut NullProbe) as usize
+                    match mask {
+                        None => alloc_row(a, b, row, &mut count_table, &mut NullProbe) as usize,
+                        Some(m) => {
+                            count_row_masked(a, b, row, &mut count_table, admit.as_mut().unwrap(), m) as usize
+                        }
+                    }
                 };
                 // SPA rows: streamed accumulation, sequential sorted
                 // gather — same decision as the fast path's plan.
                 if traced_row_uses_spa(a, b, row, n_out, num_threshold) {
                     let spa = spa_holder.get_or_insert_with(|| DenseAccumulator::new(b.n_cols));
                     spa.clear();
-                    accum_row_spa_traced(a, b, row, spa, &mut scratch, probe);
+                    match mask {
+                        None => accum_row_spa_traced(a, b, row, spa, &mut scratch, probe),
+                        Some(m) => {
+                            accum_row_spa_masked_traced(a, b, row, spa, &mut scratch, admit.as_mut().unwrap(), m, probe)
+                        }
+                    }
                     probe.access(Region::RptC, row, 4, Kind::Read);
                     for (o, &(_c, _v)) in scratch.iter().enumerate() {
                         probe.access(Region::ColC, start + o, 4, Kind::Write);
@@ -429,7 +500,10 @@ pub fn multiply_traced_stats_cfg<P: Probe>(a: &Csr, b: &Csr, probe: &mut P, ever
                         table_holder.as_mut().unwrap()
                     }
                 };
-                accum_row(a, b, row, table, &mut scratch, probe);
+                match mask {
+                    None => accum_row(a, b, row, table, &mut scratch, probe),
+                    Some(m) => accum_row_masked_traced(a, b, row, table, &mut scratch, admit.as_mut().unwrap(), m, probe),
+                }
                 bitonic_sort_by_key(&mut scratch, probe);
                 probe.access(Region::RptC, row, 4, Kind::Read);
                 for (o, &(_c, _v)) in scratch.iter().enumerate() {
@@ -442,6 +516,185 @@ pub fn multiply_traced_stats_cfg<P: Probe>(a: &Csr, b: &Csr, probe: &mut P, ever
             }
         }
     }
+}
+
+/// Price one mask-row load: two `MaskRpt` pointer reads bracket the
+/// row, then its column indices stream as sequential 4-byte `MaskCol`
+/// reads into the per-block membership probe. Plain streamed loads,
+/// never `indirect_range` — the mask row is consumed once, in order,
+/// so the AIA engine buys nothing.
+fn mask_row_traced<'m, P: Probe>(mask: &'m Mask, row: usize, probe: &mut P) -> &'m [u32] {
+    probe.access(Region::MaskRpt, row, 4, Kind::Read);
+    probe.access(Region::MaskRpt, row + 1, 4, Kind::Read);
+    let lo = mask.rpt()[row];
+    let mrow = mask.row(row);
+    for o in 0..mrow.len() {
+        probe.access(Region::MaskCol, lo + o, 4, Kind::Read);
+    }
+    mrow
+}
+
+/// Masked traced allocation row processor: [`alloc_row`] plus the
+/// mask-row load and a one-op membership check per candidate — rejected
+/// columns never touch the table, which is exactly the traffic
+/// reduction the simulator should see.
+fn alloc_row_masked_traced<P: Probe>(
+    a: &Csr,
+    b: &Csr,
+    i: usize,
+    table: &mut HashTable,
+    admit: &mut MaskRowProbe,
+    mask: &Mask,
+    probe: &mut P,
+) -> u32 {
+    admit.seed(mask_row_traced(mask, i, probe));
+    probe.access(Region::RptA, i, 4, Kind::Read);
+    probe.access(Region::RptA, i + 1, 4, Kind::Read);
+    for j in a.row_range(i) {
+        probe.access(Region::ColA, j, 4, Kind::Read);
+        let colk = a.col[j] as usize;
+        let (lo, hi) = (b.rpt[colk], b.rpt[colk + 1]);
+        probe.indirect_range(Region::RptB, colk, &[Region::ColB], lo, hi);
+        for k in lo..hi {
+            let c = b.col[k];
+            probe.compute(1); // mask membership check
+            if admit.admits(c) {
+                table.insert_symbolic(c, probe);
+            }
+        }
+    }
+    table.unique as u32
+}
+
+/// Masked traced bitmap counting row processor:
+/// [`alloc_row_bitmap_traced`] gated on mask admission (same streaming
+/// pricing — bitmap rows stay AIA-ineligible under a mask).
+fn alloc_row_bitmap_masked_traced<P: Probe>(
+    a: &Csr,
+    b: &Csr,
+    i: usize,
+    counter: &mut RowCounter,
+    admit: &mut MaskRowProbe,
+    mask: &Mask,
+    probe: &mut P,
+) -> u32 {
+    admit.seed(mask_row_traced(mask, i, probe));
+    probe.access(Region::RptA, i, 4, Kind::Read);
+    probe.access(Region::RptA, i + 1, 4, Kind::Read);
+    for j in a.row_range(i) {
+        probe.access(Region::ColA, j, 4, Kind::Read);
+        let colk = a.col[j] as usize;
+        probe.access(Region::RptB, colk, 4, Kind::Read);
+        probe.access(Region::RptB, colk + 1, 4, Kind::Read);
+        for k in b.rpt[colk]..b.rpt[colk + 1] {
+            probe.access(Region::ColB, k, 4, Kind::Read);
+            let c = b.col[k];
+            probe.compute(1); // mask membership check
+            if admit.admits(c) {
+                counter.count_traced(c, probe);
+            }
+        }
+    }
+    counter.unique() as u32
+}
+
+/// Masked traced accumulation row processor: [`accum_row`] with the
+/// mask-row load priced and every insert gated — admitted columns keep
+/// the B-stream accumulation order, so the output stays bit-identical
+/// to the fast masked path.
+#[allow(clippy::too_many_arguments)]
+fn accum_row_masked_traced<P: Probe>(
+    a: &Csr,
+    b: &Csr,
+    i: usize,
+    table: &mut HashTable,
+    scratch: &mut Vec<(u32, f64)>,
+    admit: &mut MaskRowProbe,
+    mask: &Mask,
+    probe: &mut P,
+) {
+    admit.seed(mask_row_traced(mask, i, probe));
+    probe.access(Region::RptA, i, 4, Kind::Read);
+    probe.access(Region::RptA, i + 1, 4, Kind::Read);
+    for j in a.row_range(i) {
+        probe.access(Region::ColA, j, 4, Kind::Read);
+        probe.access(Region::ValA, j, 8, Kind::Read);
+        let colk = a.col[j] as usize;
+        let av = a.val[j];
+        let (lo, hi) = (b.rpt[colk], b.rpt[colk + 1]);
+        probe.indirect_range(Region::RptB, colk, &[Region::ColB, Region::ValB], lo, hi);
+        for k in lo..hi {
+            let c = b.col[k];
+            probe.compute(1); // mask membership check
+            if admit.admits(c) {
+                table.insert_numeric(c, av * b.val[k], probe);
+                probe.compute(1); // the multiply
+            }
+        }
+    }
+    table.gather(scratch, probe);
+}
+
+/// Masked traced dense-SPA row processor:
+/// [`accum_row_spa_traced`] gated on mask admission, same streaming
+/// pricing.
+#[allow(clippy::too_many_arguments)]
+fn accum_row_spa_masked_traced<P: Probe>(
+    a: &Csr,
+    b: &Csr,
+    i: usize,
+    spa: &mut DenseAccumulator,
+    scratch: &mut Vec<(u32, f64)>,
+    admit: &mut MaskRowProbe,
+    mask: &Mask,
+    probe: &mut P,
+) {
+    admit.seed(mask_row_traced(mask, i, probe));
+    probe.access(Region::RptA, i, 4, Kind::Read);
+    probe.access(Region::RptA, i + 1, 4, Kind::Read);
+    for j in a.row_range(i) {
+        probe.access(Region::ColA, j, 4, Kind::Read);
+        probe.access(Region::ValA, j, 8, Kind::Read);
+        let colk = a.col[j] as usize;
+        let av = a.val[j];
+        probe.access(Region::RptB, colk, 4, Kind::Read);
+        probe.access(Region::RptB, colk + 1, 4, Kind::Read);
+        for k in b.rpt[colk]..b.rpt[colk + 1] {
+            probe.access(Region::ColB, k, 4, Kind::Read);
+            probe.access(Region::ValB, k, 8, Kind::Read);
+            let c = b.col[k];
+            probe.compute(1); // mask membership check
+            if admit.admits(c) {
+                spa.add_traced(c, av * b.val[k], probe);
+                probe.compute(1); // the multiply
+            }
+        }
+    }
+    spa.gather(scratch, probe);
+}
+
+/// Untraced gated recount for the stats path's unsampled-allocation
+/// rows: the masked exact size the sampled accumulation block needs for
+/// its accumulator decision.
+fn count_row_masked(
+    a: &Csr,
+    b: &Csr,
+    i: usize,
+    table: &mut HashTable,
+    admit: &mut MaskRowProbe,
+    mask: &Mask,
+) -> u32 {
+    admit.seed(mask.row(i));
+    for j in a.row_range(i) {
+        let colk = a.col[j] as usize;
+        for k in b.rpt[colk]..b.rpt[colk + 1] {
+            let c = b.col[k];
+            if admit.admits(c) {
+                table.insert_symbolic(c, &mut NullProbe);
+            }
+        }
+    }
+    table.unique as u32
 }
 
 #[cfg(test)]
@@ -539,8 +792,8 @@ mod tests {
         // as plain streamed loads — AIA-ineligible).
         let (a, b) = dense_pair(19, 90);
         let planner = PlannerPolicy::Exact;
-        let bitmap = EngineConfig { spa_threshold: 0.25, symbolic_threshold: Some(0.0), planner };
-        let hash = EngineConfig { spa_threshold: 0.25, symbolic_threshold: Some(8.0), planner };
+        let bitmap = EngineConfig { spa_threshold: 0.25, symbolic_threshold: Some(0.0), planner, mask: None };
+        let hash = EngineConfig { spa_threshold: 0.25, symbolic_threshold: Some(8.0), planner, mask: None };
         let mut probe_b = CountingProbe::default();
         let mut probe_h = CountingProbe::default();
         let c_b = multiply_traced_cfg(&a, &b, &mut probe_b, &bitmap);
@@ -556,5 +809,44 @@ mod tests {
         // The forced-bitmap plan actually had bitmap rows to trace.
         let plan = symbolic_cfg(&a, &b, &bitmap);
         assert!(plan.symbolic_kind_rows()[SymbolicKind::Bitmap.index()] > 0);
+    }
+
+    #[test]
+    fn masked_traced_equals_fast_masked_path_and_prices_the_mask() {
+        use super::super::super::mask::Mask;
+        use super::super::{multiply_masked, multiply_masked_cfg};
+        let mut rng = Pcg32::seeded(99);
+        let a = random_csr(&mut rng, 160, 140, 0.04);
+        let b = random_csr(&mut rng, 140, 120, 0.05);
+        let mut coo = crate::sparse::Coo::new(a.n_rows, b.n_cols);
+        for i in 0..a.n_rows {
+            for j in i.saturating_sub(11)..(i + 12).min(b.n_cols) {
+                coo.push(i, j, 1.0);
+            }
+        }
+        let mask = Mask::from_structure(&coo.to_csr());
+        let fast = multiply_masked(&a, &b, &mask);
+        // The traced path must replay the masked kernel decisions
+        // bit-identically at every threshold corner.
+        for (spa_thr, sym_thr) in [(0.25, None), (0.0, Some(0.0)), (2.0, Some(8.0))] {
+            let cfg = EngineConfig {
+                spa_threshold: spa_thr,
+                symbolic_threshold: sym_thr,
+                planner: PlannerPolicy::Exact,
+                mask: Some(mask.clone()),
+            };
+            let mut probe = CountingProbe::default();
+            let traced = multiply_traced_cfg(&a, &b, &mut probe, &cfg);
+            let fast_cfg = multiply_masked_cfg(
+                &a,
+                &b,
+                &mask,
+                &EngineConfig { spa_threshold: spa_thr, symbolic_threshold: sym_thr, planner: PlannerPolicy::Exact, mask: None },
+            );
+            assert_eq!(traced, fast_cfg, "traced masked output must match the fast path");
+            assert!(probe.accesses > 0);
+        }
+        assert_eq!(fast, mask.filter(&multiply(&a, &b)), "fast masked path must equal the filtered oracle");
+        assert!(fast.nnz() <= multiply(&a, &b).nnz(), "a mask can only shrink the product");
     }
 }

@@ -216,6 +216,10 @@ fn estimate_plan_with(
     inject: Option<EstimateInjector>,
 ) -> (SymbolicPlan, usize) {
     assert_eq!(a.n_cols, b.n_rows, "dimension mismatch");
+    // Masked products never speculate: a mask shrinks rows far below
+    // the global compression ratio's reach, so every caller routes
+    // masked work to the exact planner (`batch`/`executor` enforce it).
+    assert!(cfg.mask.is_none(), "estimated plans do not support masks");
     let ip = intermediate_products(a, b);
     let grouping = Grouping::build(&ip);
     let (sym_threshold, num_threshold) = effective_thresholds(cfg, b.n_cols);
@@ -283,8 +287,16 @@ fn estimate_plan_with(
         rpt[r + 1] = rpt[r] + est[r] as usize;
     }
     let (accum, bins) = build_bins(a, b.n_cols, &ip, &grouping, &rpt, &sym, num_threshold);
-    let plan =
-        SymbolicPlan { ip, grouping, rpt, accum, symbolic: sym, bins, spa_threshold: cfg.spa_threshold };
+    let plan = SymbolicPlan {
+        ip,
+        grouping,
+        rpt,
+        accum,
+        symbolic: sym,
+        bins,
+        spa_threshold: cfg.spa_threshold,
+        mask: None,
+    };
     (plan, sampled.len())
 }
 

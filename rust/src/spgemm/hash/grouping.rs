@@ -213,6 +213,33 @@ pub fn select_symbolic(a_row_nnz: usize, ip: u64, n_cols: usize, threshold: f64)
     }
 }
 
+/// [`select_symbolic`] under an output mask (DESIGN.md §2i): the
+/// unique-count bound tightens to `min(ip, mask_row_nnz, n_cols)` —
+/// a masked row can never produce more entries than its mask row
+/// admits — so dense-bound rows whose mask is narrow fall back to the
+/// cheaper hash kernel. The trivial domain is the *unmasked* rule
+/// (`ip ≤ 1` or a single A entry: candidates are collision-free, so
+/// the masked-trivial kernel counts by sorted intersection) plus
+/// `mask_row_nnz == 0`, where the count is 0 without touching B at
+/// all.
+pub fn select_symbolic_masked(
+    a_row_nnz: usize,
+    ip: u64,
+    mask_row_nnz: usize,
+    n_cols: usize,
+    threshold: f64,
+) -> SymbolicKind {
+    if ip <= 1 || a_row_nnz <= 1 || mask_row_nnz == 0 {
+        return SymbolicKind::Trivial;
+    }
+    let bound = ip.min(mask_row_nnz as u64).min(n_cols as u64);
+    if bound as f64 > threshold * n_cols as f64 {
+        SymbolicKind::Bitmap
+    } else {
+        SymbolicKind::Hash
+    }
+}
+
 /// Thread-assignment strategy (paper §III-C).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Strategy {
@@ -440,6 +467,24 @@ mod tests {
         // Exactly at the threshold stays on the hash path (strict >).
         assert_eq!(select_symbolic(2, 250, 1000, 0.25), SymbolicKind::Hash);
         assert_eq!(select_symbolic(2, 251, 1000, 0.25), SymbolicKind::Bitmap);
+    }
+
+    #[test]
+    fn masked_symbolic_decision_table() {
+        // The trivial domain is the unmasked rule plus empty mask rows.
+        assert_eq!(select_symbolic_masked(1, 1000, 500, 1000, 0.25), SymbolicKind::Trivial);
+        assert_eq!(select_symbolic_masked(8, 1, 500, 1000, 0.25), SymbolicKind::Trivial);
+        assert_eq!(select_symbolic_masked(8, 600, 0, 1000, 0.25), SymbolicKind::Trivial);
+        // A wide mask changes nothing relative to the unmasked rule...
+        assert_eq!(select_symbolic_masked(8, 600, 1000, 1000, 0.25), SymbolicKind::Bitmap);
+        assert_eq!(select_symbolic_masked(8, 100, 1000, 1000, 0.25), SymbolicKind::Hash);
+        // ...but a narrow mask caps the bound below the density cut, so
+        // the same dense-bound row hashes instead of running the bitmap.
+        assert_eq!(select_symbolic_masked(8, 600, 100, 1000, 0.25), SymbolicKind::Hash);
+        // A narrow mask never flips a multi-source row to Trivial — the
+        // trivial kernel's no-collision argument needs ip ≤ 1 or a
+        // single A entry, not a small admitted set.
+        assert_eq!(select_symbolic_masked(8, 600, 1, 1000, 0.25), SymbolicKind::Hash);
     }
 
     #[test]

@@ -35,9 +35,12 @@
 //! replanning").
 
 use super::engine::{
-    build_bins, effective_thresholds, symbolic_row_nnz_bitmap, symbolic_row_nnz_hash, EngineConfig, SymbolicPlan,
+    build_bins, effective_thresholds, symbolic_row_nnz_bitmap, symbolic_row_nnz_bitmap_masked,
+    symbolic_row_nnz_hash, symbolic_row_nnz_hash_masked, symbolic_row_nnz_trivial_masked, EngineConfig,
+    SymbolicPlan,
 };
-use super::grouping::{select_symbolic, Grouping, SymbolicKind, GROUP_SPECS};
+use super::grouping::{select_symbolic, select_symbolic_masked, Grouping, SymbolicKind, GROUP_SPECS};
+use super::mask::{mask_hash_of, MaskRowProbe};
 use super::plan::{pair_key_from_hashes, DeltaLineage, PlannedProduct};
 use super::table::{HashTable, RowCounter};
 use crate::sim::probe::PhaseTimes;
@@ -96,6 +99,12 @@ pub fn delta_patch(base: &PlannedProduct, a: &Csr, b: &Csr, cfg: &EngineConfig) 
     if base.a_shape() != (a.n_rows, a.n_cols) || base.b_shape() != (b.n_rows, b.n_cols) {
         return DeltaOutcome::Rebuild("operand shape changed");
     }
+    // A plan's retained counts are only valid under the mask they were
+    // counted with — a different mask (or adding/dropping one) changes
+    // every row's exact size, so the clean-row retention premise fails.
+    if mask_hash_of(&cfg.mask) != base.mask_hash() {
+        return DeltaOutcome::Rebuild("mask changed");
+    }
     let chain_len = base.delta().map_or(0, |d| d.chain_len);
     if chain_len >= MAX_DELTA_CHAIN {
         return DeltaOutcome::Rebuild("delta chain at rebuild threshold");
@@ -141,9 +150,13 @@ pub fn delta_patch(base: &PlannedProduct, a: &Csr, b: &Csr, cfg: &EngineConfig) 
         ip[r] = a.row(r).0.iter().map(|&c| (b.rpt[c as usize + 1] - b.rpt[c as usize]) as u64).sum();
     }
     let grouping = Grouping::build(&ip);
+    let mask = cfg.mask.as_ref();
     let mut sym = vec![SymbolicKind::Trivial; a.n_rows];
     for (r, k) in sym.iter_mut().enumerate() {
-        *k = select_symbolic(a.row_nnz(r), ip[r], b.n_cols, sym_threshold);
+        *k = match mask {
+            None => select_symbolic(a.row_nnz(r), ip[r], b.n_cols, sym_threshold),
+            Some(m) => select_symbolic_masked(a.row_nnz(r), ip[r], m.row_nnz(r), b.n_cols, sym_threshold),
+        };
     }
     let grouping_s = t0.elapsed().as_secs_f64();
 
@@ -152,23 +165,40 @@ pub fn delta_patch(base: &PlannedProduct, a: &Csr, b: &Csr, cfg: &EngineConfig) 
     let mut counts: Vec<usize> = (0..a.n_rows).map(|r| old.rpt[r + 1] - old.rpt[r]).collect();
     let mut tables: [Option<HashTable>; GROUP_SPECS.len()] = Default::default();
     let mut counter: Option<RowCounter> = None;
+    let mut admit: Option<MaskRowProbe> = None;
     let mut symbolic_kind_s = [0f64; 3];
     for &r in &dirty {
         let r = r as usize;
         let tk = Instant::now();
-        let n = match sym[r] {
+        let n = match (sym[r], mask) {
             // Same short-circuit as the cold trivial sub-bin: the IP
-            // bound *is* the exact count.
-            SymbolicKind::Trivial => ip[r] as u32,
-            SymbolicKind::Hash => {
+            // bound *is* the exact count. Under a mask the shortcut is
+            // invalid (it would count rejected columns) — the masked
+            // trivial kernel intersects instead, exactly like the cold
+            // masked symbolic phase.
+            (SymbolicKind::Trivial, None) => ip[r] as u32,
+            (SymbolicKind::Trivial, Some(m)) => symbolic_row_nnz_trivial_masked(a, b, r, m),
+            (SymbolicKind::Hash, None) => {
                 let g = grouping.group_of[r] as usize;
                 let spec = &GROUP_SPECS[g];
                 let table = tables[g].get_or_insert_with(|| super::engine::bin_table(spec));
                 symbolic_row_nnz_hash(a, b, r, ip[r], spec, table)
             }
-            SymbolicKind::Bitmap => {
+            (SymbolicKind::Hash, Some(m)) => {
+                let g = grouping.group_of[r] as usize;
+                let spec = &GROUP_SPECS[g];
+                let table = tables[g].get_or_insert_with(|| super::engine::bin_table(spec));
+                let probe = admit.get_or_insert_with(|| MaskRowProbe::new(b.n_cols));
+                symbolic_row_nnz_hash_masked(a, b, r, ip[r], spec, table, probe, m)
+            }
+            (SymbolicKind::Bitmap, None) => {
                 let c = counter.get_or_insert_with(|| RowCounter::new(b.n_cols));
                 symbolic_row_nnz_bitmap(a, b, r, c)
+            }
+            (SymbolicKind::Bitmap, Some(m)) => {
+                let c = counter.get_or_insert_with(|| RowCounter::new(b.n_cols));
+                let probe = admit.get_or_insert_with(|| MaskRowProbe::new(b.n_cols));
+                symbolic_row_nnz_bitmap_masked(a, b, r, c, probe, m)
             }
         };
         symbolic_kind_s[sym[r].index()] += tk.elapsed().as_secs_f64();
@@ -179,7 +209,16 @@ pub fn delta_patch(base: &PlannedProduct, a: &Csr, b: &Csr, cfg: &EngineConfig) 
         rpt[i + 1] = rpt[i] + counts[i];
     }
     let (accum, bins) = build_bins(a, b.n_cols, &ip, &grouping, &rpt, &sym, num_threshold);
-    let plan = SymbolicPlan { ip, grouping, rpt, accum, symbolic: sym, bins, spa_threshold: cfg.spa_threshold };
+    let plan = SymbolicPlan {
+        ip,
+        grouping,
+        rpt,
+        accum,
+        symbolic: sym,
+        bins,
+        spa_threshold: cfg.spa_threshold,
+        mask: cfg.mask.clone(),
+    };
     let symbolic_s = t1.elapsed().as_secs_f64();
 
     // --- extend the lineage ---
@@ -395,6 +434,49 @@ mod tests {
                 a2.row_structure_hashes(),
             ),
             d.digest
+        );
+    }
+
+    #[test]
+    fn masked_patch_matches_cold_and_mask_change_rebuilds() {
+        use super::super::mask::Mask;
+        use super::super::multiply;
+        let mut rng = Pcg32::seeded(77);
+        let a = random_csr(&mut rng, 200, 200, 0.03);
+        let b = random_csr(&mut rng, 200, 180, 0.03);
+        let mut mc = crate::sparse::Coo::new(a.n_rows, b.n_cols);
+        for i in 0..a.n_rows {
+            for jj in i.saturating_sub(9)..(i + 10).min(b.n_cols) {
+                mc.push(i, jj, 1.0);
+            }
+        }
+        let mask = Mask::from_structure(&mc.to_csr());
+        let cfg = EngineConfig { mask: Some(mask.clone()), ..EngineConfig::default() };
+        let base = PlannedProduct::plan_cfg(&a, &b, &cfg);
+        let a2 = mutate_row_fraction(&a, 0.02, 31);
+        match delta_patch(&base, &a2, &b, &cfg) {
+            DeltaOutcome::Patched(p) => {
+                let cold = PlannedProduct::plan_cfg(&a2, &b, &cfg);
+                assert_plans_identical(&p.plan, &cold);
+                assert_eq!(p.plan.mask_hash(), Some(mask.structure_hash()));
+                assert_eq!(
+                    p.plan.fill(&a2, &b),
+                    mask.filter(&multiply(&a2, &b)),
+                    "masked patch must fill to the multiply-then-filter oracle"
+                );
+            }
+            DeltaOutcome::Rebuild(why) => panic!("masked small mutation must patch: {why}"),
+        }
+        // Adding, dropping, or swapping the mask invalidates every
+        // retained count — only a rebuild is safe.
+        assert!(
+            matches!(delta_patch(&base, &a2, &b, &EngineConfig::default()), DeltaOutcome::Rebuild("mask changed")),
+            "unmasked cfg against a masked base must rebuild"
+        );
+        let unmasked_base = PlannedProduct::plan(&a, &b);
+        assert!(
+            matches!(delta_patch(&unmasked_base, &a2, &b, &cfg), DeltaOutcome::Rebuild("mask changed")),
+            "masked cfg against an unmasked base must rebuild"
         );
     }
 

@@ -1,0 +1,283 @@
+//! First-class mask support for masked SpGEMM: `C = M ⊙ (A·B)`.
+//!
+//! [`Mask`] is a cheap, shareable *structure-only* view over a
+//! [`Csr`]: per-row sorted column sets plus the matrix's memoized
+//! structure hash. The engine threads it through
+//! [`EngineConfig`](super::EngineConfig) so the symbolic phase counts
+//! only mask-admitted columns and the numeric phase never materializes
+//! a rejected entry (DESIGN.md §2i). Because admitted columns keep the
+//! exact B-stream encounter order the unmasked kernels use, the masked
+//! product is bit-identical to the multiply-then-filter oracle
+//! ([`Mask::filter`]) — pinned by `tests/masked.rs`.
+//!
+//! The mask's structure hash joins the plan fingerprint
+//! ([`PlanFingerprint`](super::PlanFingerprint)), so masked plans
+//! cache, persist (SAPL v3), delta-patch, and serve like any other
+//! plan; an unmasked product's key is untouched, which is what keeps
+//! v2 plan files loadable.
+//!
+//! Two probing idioms, chosen per row kernel:
+//!
+//! - [`Mask::admits`] — binary search on the sorted mask row; right
+//!   for trivial/scaled-copy rows with a handful of candidates.
+//! - [`MaskRowProbe`] — a stamped dense bitmap seeded once per output
+//!   row (O(mask-row nnz)), then O(1) membership per candidate; right
+//!   for hash/bitmap/SPA rows that stream many candidates. The stamp
+//!   generation makes `clear` free, exactly like the symbolic
+//!   `RowCounter`.
+
+use crate::sparse::Csr;
+use std::sync::Arc;
+
+/// Shared immutable mask payload ([`Mask`] is a cheap `Arc` clone so a
+/// mask can ride inside configs, plans, and serve jobs without copying
+/// its column sets).
+#[derive(Debug)]
+struct MaskData {
+    n_rows: usize,
+    n_cols: usize,
+    rpt: Vec<usize>,
+    col: Vec<u32>,
+    structure_hash: u64,
+}
+
+/// Structure-only view of a [`Csr`] used as the `M` in
+/// `C = M ⊙ (A·B)`. Rows are sorted column sets; equality and the
+/// plan-key contribution are by shape + structure hash.
+#[derive(Clone, Debug)]
+pub struct Mask(Arc<MaskData>);
+
+impl Mask {
+    /// Snapshot a matrix's *structure* as a mask (values ignored).
+    /// The hash is the matrix's own memoized [`Csr::structure_hash`],
+    /// so `Mask::from_structure(&a)` and a plan fingerprinted against
+    /// `a`'s structure agree by construction.
+    pub fn from_structure(m: &Csr) -> Mask {
+        debug_assert!(
+            (0..m.n_rows).all(|i| m.row(i).0.windows(2).all(|w| w[0] < w[1])),
+            "mask rows must be strictly sorted column sets"
+        );
+        Mask(Arc::new(MaskData {
+            n_rows: m.n_rows,
+            n_cols: m.n_cols,
+            rpt: m.rpt.clone(),
+            col: m.col.clone(),
+            structure_hash: m.structure_hash(),
+        }))
+    }
+
+    /// Rebuild a mask from raw structure parts (the SAPL v3 decode
+    /// path). The structure hash is *recomputed* through the same
+    /// [`Csr::structure_hash`] the live path uses, so a decoded mask
+    /// can never disagree with a freshly built one.
+    pub fn from_parts(n_rows: usize, n_cols: usize, rpt: Vec<usize>, col: Vec<u32>) -> Mask {
+        let vals = vec![1.0; col.len()];
+        let csr = Csr::new_unchecked(n_rows, n_cols, rpt, col, vals);
+        Mask::from_structure(&csr)
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.0.n_rows
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.0.n_cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.0.n_rows, self.0.n_cols)
+    }
+
+    /// Admitted entries across the whole mask.
+    pub fn nnz(&self) -> usize {
+        self.0.col.len()
+    }
+
+    /// The sorted admitted-column set of one output row.
+    pub fn row(&self, i: usize) -> &[u32] {
+        &self.0.col[self.0.rpt[i]..self.0.rpt[i + 1]]
+    }
+
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.0.rpt[i + 1] - self.0.rpt[i]
+    }
+
+    /// Row-pointer array (SAPL v3 encode).
+    pub fn rpt(&self) -> &[usize] {
+        &self.0.rpt
+    }
+
+    /// Concatenated column array (SAPL v3 encode).
+    pub fn col(&self) -> &[u32] {
+        &self.0.col
+    }
+
+    /// Structure hash — the mask's contribution to the plan key.
+    pub fn structure_hash(&self) -> u64 {
+        self.0.structure_hash
+    }
+
+    /// O(log row-nnz) membership test on one row's sorted column set.
+    pub fn admits(&self, row: usize, col: u32) -> bool {
+        self.row(row).binary_search(&col).is_ok()
+    }
+
+    /// Multiply-then-filter oracle: keep exactly the entries of `c`
+    /// the mask admits (order preserved, values untouched). The masked
+    /// engine must be bit-identical to `mask.filter(&multiply(a, b))`.
+    pub fn filter(&self, c: &Csr) -> Csr {
+        assert_eq!(
+            (c.n_rows, c.n_cols),
+            self.shape(),
+            "mask shape must match the matrix it filters"
+        );
+        let mut rpt = Vec::with_capacity(c.n_rows + 1);
+        let mut col = Vec::new();
+        let mut val = Vec::new();
+        rpt.push(0);
+        for i in 0..c.n_rows {
+            let (cols, vals) = c.row(i);
+            for (&cc, &vv) in cols.iter().zip(vals) {
+                if self.admits(i, cc) {
+                    col.push(cc);
+                    val.push(vv);
+                }
+            }
+            rpt.push(col.len());
+        }
+        Csr::new_unchecked(c.n_rows, c.n_cols, rpt, col, val)
+    }
+}
+
+impl PartialEq for Mask {
+    /// Structural equality by shape + structure hash — the same notion
+    /// the plan fingerprint uses, so two equal masks always share plan
+    /// cache entries.
+    fn eq(&self, other: &Mask) -> bool {
+        self.shape() == other.shape() && self.structure_hash() == other.structure_hash()
+    }
+}
+
+/// Config/plan-level mask identity: `None` vs `Some(hash)`, mixed into
+/// plan keys only when present so unmasked keys (and their on-disk
+/// file names) are byte-for-byte what v2 produced.
+pub fn mask_hash_of(mask: &Option<Mask>) -> Option<u64> {
+    mask.as_ref().map(Mask::structure_hash)
+}
+
+/// Stamped dense membership bitmap over one mask row: seed once per
+/// output row, then O(1) [`MaskRowProbe::admits`] per streamed
+/// candidate. `width` is the output column count; reseeding bumps a
+/// generation instead of clearing, so per-row setup is O(mask-row
+/// nnz), never O(n_cols).
+pub struct MaskRowProbe {
+    stamp: Vec<u32>,
+    generation: u32,
+}
+
+impl MaskRowProbe {
+    pub fn new(width: usize) -> MaskRowProbe {
+        MaskRowProbe { stamp: vec![0; width], generation: 0 }
+    }
+
+    pub fn width(&self) -> usize {
+        self.stamp.len()
+    }
+
+    /// Load one mask row's column set (O(row nnz); previous rows'
+    /// stamps are invalidated by the generation bump).
+    pub fn seed(&mut self, row: &[u32]) {
+        if self.generation == u32::MAX {
+            self.stamp.fill(0);
+            self.generation = 0;
+        }
+        self.generation += 1;
+        for &c in row {
+            self.stamp[c as usize] = self.generation;
+        }
+    }
+
+    /// Membership in the most recently seeded row.
+    pub fn admits(&self, col: u32) -> bool {
+        self.stamp[col as usize] == self.generation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::util::Pcg32;
+
+    fn small() -> Csr {
+        let mut rng = Pcg32::seeded(7);
+        gen::rmat(64, 256, gen::RmatParams::uniform(), &mut rng)
+    }
+
+    #[test]
+    fn mask_views_structure_and_admits() {
+        let m = small();
+        let mask = Mask::from_structure(&m);
+        assert_eq!(mask.shape(), (m.n_rows, m.n_cols));
+        assert_eq!(mask.nnz(), m.nnz());
+        assert_eq!(mask.structure_hash(), m.structure_hash());
+        for i in 0..m.n_rows {
+            assert_eq!(mask.row(i), m.row(i).0);
+            for &c in m.row(i).0 {
+                assert!(mask.admits(i, c));
+            }
+        }
+        // A column absent from row 0 must be rejected.
+        let absent = (0..m.n_cols as u32).find(|c| !m.row(0).0.contains(c)).unwrap();
+        assert!(!mask.admits(0, absent));
+    }
+
+    #[test]
+    fn from_parts_agrees_with_from_structure() {
+        let m = small();
+        let a = Mask::from_structure(&m);
+        let b = Mask::from_parts(m.n_rows, m.n_cols, m.rpt.clone(), m.col.clone());
+        assert_eq!(a, b);
+        assert_eq!(a.structure_hash(), b.structure_hash());
+    }
+
+    #[test]
+    fn equality_is_structural_not_pointer() {
+        let m = small();
+        let a = Mask::from_structure(&m);
+        let mut m2 = m.clone();
+        m2.map_values(|v| v * 3.0);
+        // Same structure, different values: equal masks.
+        assert_eq!(a, Mask::from_structure(&m2));
+        assert_ne!(a, Mask::from_structure(&Csr::identity(m.n_rows)));
+        assert_eq!(mask_hash_of(&Some(a.clone())), Some(a.structure_hash()));
+        assert_eq!(mask_hash_of(&None), None);
+    }
+
+    #[test]
+    fn filter_keeps_exactly_admitted_entries() {
+        let m = small();
+        let self_mask = Mask::from_structure(&m);
+        assert_eq!(self_mask.filter(&m), m, "a matrix filtered by its own structure is unchanged");
+        let none = Mask::from_structure(&Csr::zeros(m.n_rows, m.n_cols));
+        assert_eq!(none.filter(&m).nnz(), 0);
+        let diag = Mask::from_structure(&Csr::identity(m.n_rows));
+        let kept = diag.filter(&m);
+        for i in 0..m.n_rows {
+            let (cols, _) = kept.row(i);
+            assert!(cols.iter().all(|&c| c as usize == i), "identity mask keeps only the diagonal");
+        }
+    }
+
+    #[test]
+    fn probe_tracks_generations() {
+        let mut p = MaskRowProbe::new(16);
+        p.seed(&[1, 5, 9]);
+        assert!(p.admits(1) && p.admits(5) && p.admits(9));
+        assert!(!p.admits(0) && !p.admits(15));
+        p.seed(&[2]);
+        assert!(p.admits(2), "new row admitted");
+        assert!(!p.admits(5), "old row invalidated without clearing");
+        assert_eq!(p.width(), 16);
+    }
+}

@@ -17,6 +17,7 @@ pub mod engine;
 pub mod estimate;
 pub mod grouping;
 pub mod incremental;
+pub mod mask;
 pub mod plan;
 pub mod planstore;
 pub mod sort;
@@ -27,9 +28,10 @@ pub use calibrate::{
     CalibrationPoint, CALIBRATION_FILE, CALIBRATION_SCHEMA, CALIBRATION_VERSION,
 };
 pub use engine::{
-    default_spa_threshold, multiply, multiply_cfg, multiply_single_pass, multiply_timed, multiply_timed_cfg,
-    multiply_traced, multiply_traced_cfg, numeric, numeric_bin_into, numeric_timed, resolve_default_spa_threshold,
-    set_default_spa_threshold, symbolic, symbolic_cfg, EngineConfig, NumericBin, SymbolicPlan,
+    default_spa_threshold, multiply, multiply_cfg, multiply_masked, multiply_masked_cfg, multiply_single_pass,
+    multiply_timed, multiply_timed_cfg, multiply_traced, multiply_traced_cfg, numeric, numeric_bin_into,
+    numeric_timed, resolve_default_spa_threshold, set_default_spa_threshold, symbolic, symbolic_cfg, EngineConfig,
+    NumericBin, SymbolicPlan,
 };
 pub use estimate::{
     default_planner_policy, estimate_plan, estimate_plan_cfg, multiply_estimated, multiply_estimated_cfg,
@@ -37,12 +39,13 @@ pub use estimate::{
     EstimateReport, PlannerPolicy,
 };
 pub use grouping::{
-    select_accumulator, select_symbolic, AccumKind, Grouping, RowKernel, Strategy, SymbolicKind,
-    DEFAULT_SPA_THRESHOLD, GROUP_SPECS,
+    select_accumulator, select_symbolic, select_symbolic_masked, AccumKind, Grouping, RowKernel, Strategy,
+    SymbolicKind, DEFAULT_SPA_THRESHOLD, GROUP_SPECS,
 };
 pub use incremental::{
     delta_patch, mutate_row_fraction, DeltaOutcome, DeltaPatch, MAX_DELTA_CHAIN, REBUILD_DIRTY_FRACTION,
 };
+pub use mask::{mask_hash_of, Mask, MaskRowProbe};
 pub use plan::{pair_key, pair_key_from_hashes, DeltaLineage, PlannedProduct};
 pub use planstore::{
     default_plan_cache_dir, set_default_plan_cache_dir, DiskStore, GetOutcome, MemStore, PlanFileInfo,

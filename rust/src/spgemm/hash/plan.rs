@@ -277,7 +277,9 @@ impl PlannedProduct {
     }
 
     /// [`PlannedProduct::matches`] against precomputed shapes and
-    /// structure hashes — no operand scan.
+    /// structure hashes — no operand scan. Structure-only: masked
+    /// callers must additionally check [`PlannedProduct::mask_hash`]
+    /// (the store tiers do, via `PlanFingerprint`).
     pub fn matches_fingerprint(
         &self,
         a_shape: (usize, usize),
@@ -286,6 +288,14 @@ impl PlannedProduct {
         b_hash: u64,
     ) -> bool {
         self.a_shape == a_shape && self.b_shape == b_shape && self.a_hash == a_hash && self.b_hash == b_hash
+    }
+
+    /// Structure hash of the output mask this plan was built under
+    /// (`None` for unmasked plans). A plan only serves requests with
+    /// the same mask identity — the sizes in `rpt` are masked exact
+    /// counts, meaningless under any other mask.
+    pub fn mask_hash(&self) -> Option<u64> {
+        self.plan.mask.as_ref().map(|m| m.structure_hash())
     }
 
     /// Numeric fill under this plan: identical output to a cold
@@ -355,9 +365,16 @@ impl PlannedProduct {
     }
 
     /// Combined fingerprint of the operand pair this plan was built for
-    /// (cache key for plan caches).
+    /// (cache key for plan caches). Masked plans fold the mask's
+    /// structure hash in exactly as
+    /// [`super::planstore::PlanFingerprint::key`] does, so the two key
+    /// derivations can never disagree on the same plan.
     pub fn key(&self) -> u64 {
-        pair_key_from_hashes(self.a_hash, self.b_hash)
+        let k = pair_key_from_hashes(self.a_hash, self.b_hash);
+        match self.mask_hash() {
+            None => k,
+            Some(mh) => pair_key_from_hashes(k, mh),
+        }
     }
 }
 

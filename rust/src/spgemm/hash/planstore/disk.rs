@@ -2,7 +2,7 @@
 //! keyed by the operand pair's structure fingerprint, so a plan built
 //! by one process serves the numeric-only fill path of the next.
 //!
-//! # Format (`SAPL` v2, little-endian, see `util/serial.rs`)
+//! # Format (`SAPL` v3, little-endian, see `util/serial.rs`)
 //!
 //! | field | type | notes |
 //! |-------|------|-------|
@@ -17,12 +17,17 @@
 //! | symbolic | u8-slice | per-row [`SymbolicKind`] ordinals |
 //! | bins | u64 count, then per bin: group u8, kind u8, symbolic u8, weight u64, rows u32-slice | the numeric work list |
 //! | a_row_hashes, b_row_hashes | 2 × u64-slice | per-row structure hashes (v2: the incremental replanner's diff baseline) |
+//! | mask flag | u8 | v3 only: 0 = unmasked plan, 1 = a mask record follows |
+//! | mask | n_rows u64, n_cols u64, structure_hash u64, rpt u64-slice, col u32-slice | present iff flag = 1; the output mask a masked plan's exact sizes were counted under ([`crate::spgemm::hash::Mask`]) |
 //! | delta flag | u8 | 0 = cold plan, 1 = a lineage record follows |
 //! | lineage | base_a_hash u64, base_b_hash u64, chain_len u32, prev_digest u64, digest u64 | present iff flag = 1 ([`crate::spgemm::hash::DeltaLineage`]) |
 //! | checksum | u64 | FNV-1a of every preceding byte |
 //!
+//! v2 files (no mask record) still decode — as unmasked plans, which is
+//! exactly what every v2 writer produced; their file names are
+//! unchanged too (the mask hash joins the key only when present).
 //! v1 files (no row hashes, no lineage) read as a version mismatch —
-//! a clean miss that replans and rewrites the entry in v2.
+//! a clean miss that replans and rewrites the entry in v3.
 //!
 //! # Validation ladder (any failure ⇒ silent miss + replan, never a panic)
 //!
@@ -56,6 +61,7 @@
 use super::{PlanFingerprint, PlanStore, StoreStats};
 use crate::spgemm::hash::engine::{NumericBin, SymbolicPlan};
 use crate::spgemm::hash::grouping::{AccumKind, Grouping, SymbolicKind};
+use crate::spgemm::hash::mask::Mask;
 use crate::spgemm::hash::plan::{DeltaLineage, PlannedProduct};
 use crate::util::error::{anyhow, bail, ensure, Result};
 use crate::util::serial::{fnv1a, Reader, Writer};
@@ -67,8 +73,13 @@ pub const MAGIC: [u8; 4] = *b"SAPL";
 /// Current revision of the on-disk layout. Bump on any layout change;
 /// old files then read as a clean miss and are rewritten on the next
 /// replan. v2 added the per-row structure hashes and the optional
-/// delta lineage record.
-pub const FORMAT_VERSION: u32 = 2;
+/// delta lineage record; v3 added the optional output-mask record
+/// (v2 files stay loadable, as unmasked plans).
+pub const FORMAT_VERSION: u32 = 3;
+
+/// Oldest revision [`decode_plan`] still accepts (v2 bodies are a
+/// strict prefix-compatible subset of v3: no mask record).
+pub(crate) const MIN_FORMAT_VERSION: u32 = 2;
 
 /// Outcome of probing the disk tier for one fingerprint.
 pub enum DiskLoad {
@@ -384,6 +395,21 @@ pub(crate) fn encode_plan_with_version(plan: &PlannedProduct, version: u32) -> V
     }
     w.put_u64_slice(plan.a_row_hashes());
     w.put_u64_slice(plan.b_row_hashes());
+    if version >= 3 {
+        // Mask record before the delta record so the lineage digest
+        // stays the last 8 body bytes (forged-digest test relies on it).
+        match sp.mask.as_ref() {
+            None => w.put_u8(0),
+            Some(m) => {
+                w.put_u8(1);
+                w.put_usize(m.n_rows());
+                w.put_usize(m.n_cols());
+                w.put_u64(m.structure_hash());
+                w.put_usize_slice(m.rpt());
+                w.put_u32_slice(m.col());
+            }
+        }
+    }
     match plan.delta() {
         None => w.put_u8(0),
         Some(d) => {
@@ -411,7 +437,10 @@ pub(crate) fn decode_plan(bytes: &[u8]) -> Result<PlannedProduct> {
     let mut r = Reader::new(body);
     ensure!(r.take(4)? == &MAGIC[..], "bad magic");
     let version = r.get_u32()?;
-    ensure!(version == FORMAT_VERSION, "format version {version} != {FORMAT_VERSION}");
+    ensure!(
+        (MIN_FORMAT_VERSION..=FORMAT_VERSION).contains(&version),
+        "format version {version} outside {MIN_FORMAT_VERSION}..={FORMAT_VERSION}"
+    );
     let a_shape = (r.get_usize()?, r.get_usize()?);
     let b_shape = (r.get_usize()?, r.get_usize()?);
     let a_hash = r.get_u64()?;
@@ -454,6 +483,43 @@ pub(crate) fn decode_plan(bytes: &[u8]) -> Result<PlannedProduct> {
     ensure!(a_row_hashes.len() == a_shape.0, "A row-hash len {} != A rows {}", a_row_hashes.len(), a_shape.0);
     let b_row_hashes = r.get_u64_vec()?;
     ensure!(b_row_hashes.len() == b_shape.0, "B row-hash len {} != B rows {}", b_row_hashes.len(), b_shape.0);
+    let mask = if version >= 3 {
+        match r.get_u8()? {
+            0 => None,
+            1 => {
+                let m_rows = r.get_usize()?;
+                let m_cols = r.get_usize()?;
+                ensure!(m_rows == a_shape.0, "mask rows {m_rows} != A rows {}", a_shape.0);
+                ensure!(m_cols == b_shape.1, "mask cols {m_cols} != B cols {}", b_shape.1);
+                let declared_hash = r.get_u64()?;
+                let m_rpt = r.get_usize_vec()?;
+                ensure!(m_rpt.len() == m_rows + 1, "mask rpt len {} != rows+1 {}", m_rpt.len(), m_rows + 1);
+                ensure!(m_rpt.first() == Some(&0), "mask rpt[0] must be 0");
+                for w in m_rpt.windows(2) {
+                    ensure!(w[0] <= w[1], "mask rpt not monotonic");
+                }
+                let m_col = r.get_u32_vec()?;
+                ensure!(m_rpt.last() == Some(&m_col.len()), "mask rpt end {} != col len {}", m_rpt.last().copied().unwrap_or(0), m_col.len());
+                for row in 0..m_rows {
+                    let slice = &m_col[m_rpt[row]..m_rpt[row + 1]];
+                    for w in slice.windows(2) {
+                        ensure!(w[0] < w[1], "mask row {row} columns not strictly sorted");
+                    }
+                    for &c in slice {
+                        ensure!((c as usize) < m_cols, "mask col {c} out of range {m_cols}");
+                    }
+                }
+                let m = Mask::from_parts(m_rows, m_cols, m_rpt, m_col);
+                // `from_parts` recomputes the structure hash, so the
+                // stored one is a pure integrity check on the record.
+                ensure!(m.structure_hash() == declared_hash, "mask structure hash mismatch");
+                Some(m)
+            }
+            flag => bail!("mask flag {flag} out of range"),
+        }
+    } else {
+        None // v2 writers never had masks; their plans are unmasked.
+    };
     let delta = match r.get_u8()? {
         0 => None,
         1 => Some(DeltaLineage {
@@ -469,7 +535,7 @@ pub(crate) fn decode_plan(bytes: &[u8]) -> Result<PlannedProduct> {
     // The Table-I grouping is a pure function of the IP bounds — rebuilt
     // rather than stored (smaller files, one representation to corrupt).
     let grouping = Grouping::build(&ip);
-    let plan = SymbolicPlan { ip, grouping, rpt, accum, symbolic, bins, spa_threshold };
+    let plan = SymbolicPlan { ip, grouping, rpt, accum, symbolic, bins, spa_threshold, mask };
     Ok(PlannedProduct::from_parts(plan, a_shape, b_shape, a_hash, b_hash, a_row_hashes, b_row_hashes, delta))
 }
 
@@ -575,6 +641,7 @@ mod tests {
             spa_threshold: foreign,
             symbolic_threshold: None,
             planner: crate::spgemm::hash::PlannerPolicy::Exact,
+            mask: None,
         };
         let mut s = DiskStore::new(&dir);
         s.put(Arc::new(PlannedProduct::plan_cfg(&a, &a, &cfg)));
@@ -672,5 +739,44 @@ mod tests {
         let (_, p) = random_plan(11, 64);
         let bytes = encode_plan_with_version(&p, FORMAT_VERSION + 1);
         assert!(decode_plan(&bytes).is_err(), "unknown format revision must not parse");
+    }
+
+    #[test]
+    fn v2_bytes_still_load_as_an_unmasked_plan() {
+        let (a, p) = random_plan(23, 64);
+        assert!(p.symbolic_plan().mask.is_none());
+        // Fabricate a true v2 file: the encoder gates the mask record
+        // on the requested version, so these bytes match what every
+        // pre-mask writer produced.
+        let bytes = encode_plan_with_version(&p, 2);
+        let q = decode_plan(&bytes).expect("v2 layout must stay readable");
+        assert!(q.symbolic_plan().mask.is_none());
+        assert_eq!(q.mask_hash(), None);
+        assert!(q.matches(&a, &a));
+        assert_eq!(q.fill(&a, &a), crate::spgemm::hash::multiply(&a, &a));
+    }
+
+    #[test]
+    fn masked_plan_roundtrips_and_serves_only_the_masked_fingerprint() {
+        use crate::spgemm::hash::engine::EngineConfig;
+        use crate::spgemm::hash::Mask;
+        let dir = unique_dir("masked");
+        let mut s = DiskStore::new(&dir);
+        let (a, _) = random_plan(21, 96);
+        let mask = Mask::from_structure(&a);
+        let cfg = EngineConfig { mask: Some(mask.clone()), ..EngineConfig::default() };
+        let masked_fp = PlanFingerprint::of_masked(&a, &a, &mask);
+        let plain_fp = PlanFingerprint::of(&a, &a);
+        assert_ne!(masked_fp.key(), plain_fp.key(), "mask hash must join the file name");
+        s.put(Arc::new(PlannedProduct::plan_cfg(&a, &a, &cfg)));
+        assert!(s.get(&plain_fp).is_none(), "a masked plan must not serve the unmasked fingerprint");
+        let q = s.get(&masked_fp).expect("masked plan must round-trip through disk");
+        assert_eq!(q.mask_hash(), Some(mask.structure_hash()));
+        assert_eq!(
+            q.fill(&a, &a),
+            mask.filter(&crate::spgemm::hash::multiply(&a, &a)),
+            "decoded masked plan must fill to the multiply-then-filter oracle"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

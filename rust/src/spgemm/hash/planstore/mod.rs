@@ -41,6 +41,7 @@ mod mem;
 pub use disk::{DiskLoad, DiskStore, PlanFileInfo, PlanSummary, PruneReport, FORMAT_VERSION};
 pub use mem::{MemStore, DEFAULT_MEM_CAP};
 
+use super::mask::Mask;
 use super::plan::{pair_key_from_hashes, PlannedProduct};
 use crate::sparse::Csr;
 use std::collections::HashMap;
@@ -58,6 +59,11 @@ pub struct PlanFingerprint {
     pub b_shape: (usize, usize),
     pub a_hash: u64,
     pub b_hash: u64,
+    /// Structure hash of the output mask, for masked products
+    /// (`C = M ⊙ (A·B)`); `None` for plain products. Part of the
+    /// identity: a masked plan's sizes are masked exact counts, so it
+    /// must never be served for a different (or no) mask.
+    pub mask_hash: Option<u64>,
 }
 
 impl PlanFingerprint {
@@ -70,18 +76,33 @@ impl PlanFingerprint {
             b_shape: (b.n_rows, b.n_cols),
             a_hash: a.structure_hash(),
             b_hash: b.structure_hash(),
+            mask_hash: None,
         }
+    }
+
+    /// Fingerprint of a masked product `M ⊙ (a·b)`.
+    pub fn of_masked(a: &Csr, b: &Csr, mask: &Mask) -> PlanFingerprint {
+        PlanFingerprint { mask_hash: Some(mask.structure_hash()), ..PlanFingerprint::of(a, b) }
     }
 
     /// 64-bit store key (order-sensitive combination of both hashes —
     /// the same key [`PlannedProduct::key`] reports for its plan).
+    /// Masked fingerprints fold the mask hash in as a second round, so
+    /// unmasked keys — and with them every v2 plan-file name on disk —
+    /// are unchanged.
     pub fn key(&self) -> u64 {
-        pair_key_from_hashes(self.a_hash, self.b_hash)
+        let k = pair_key_from_hashes(self.a_hash, self.b_hash);
+        match self.mask_hash {
+            None => k,
+            Some(mh) => pair_key_from_hashes(k, mh),
+        }
     }
 
-    /// Full-fingerprint validation against a candidate plan.
+    /// Full-fingerprint validation against a candidate plan, mask
+    /// identity included.
     pub fn matches(&self, p: &PlannedProduct) -> bool {
         p.matches_fingerprint(self.a_shape, self.b_shape, self.a_hash, self.b_hash)
+            && p.mask_hash() == self.mask_hash
     }
 }
 
@@ -459,6 +480,30 @@ mod tests {
     }
 
     #[test]
+    fn masked_fingerprint_is_a_distinct_identity() {
+        use crate::spgemm::hash::engine::EngineConfig;
+        use crate::spgemm::hash::mask::Mask;
+        let a = random_square(11, 64);
+        let mask = Mask::from_structure(&a);
+        let plain = PlanFingerprint::of(&a, &a);
+        let masked = PlanFingerprint::of_masked(&a, &a, &mask);
+        assert_ne!(plain.key(), masked.key(), "mask hash must join the store key");
+        assert_eq!(masked.mask_hash, Some(a.structure_hash()));
+        // A masked plan matches only the masked fingerprint, and both
+        // key derivations agree on it.
+        let cfg = EngineConfig { mask: Some(mask), ..EngineConfig::default() };
+        let p = PlannedProduct::plan_cfg(&a, &a, &cfg);
+        assert!(masked.matches(&p));
+        assert!(!plain.matches(&p), "an unmasked lookup must never serve a masked plan");
+        assert_eq!(p.key(), masked.key());
+        // And the store keeps the two identities apart.
+        let s = TieredStore::mem_only();
+        s.admit(Arc::new(p), false);
+        assert!(s.get_traced(&masked).0.is_some());
+        assert!(s.get_traced(&plain).0.is_none());
+    }
+
+    #[test]
     fn tiered_promotes_disk_hits_to_mem() {
         let dir = unique_dir("promote");
         let a = random_square(3, 96);
@@ -579,6 +624,7 @@ mod tests {
             symbolic: sp.symbolic.clone(),
             bins: sp.bins.clone(),
             spa_threshold: sp.spa_threshold,
+            mask: sp.mask.clone(),
         };
         let mut lineage = *patched.delta().expect("patched plan carries lineage");
         lineage.digest ^= 1;

@@ -18,7 +18,7 @@ const THRESHOLDS: [f64; 5] = [0.0, 0.1, 0.25, 0.5, 1.0];
 /// Exact-planner config at `spa_threshold` (the literal would blow past
 /// `max_width` at every call site).
 fn cfg_at(spa_threshold: f64) -> EngineConfig {
-    EngineConfig { spa_threshold, symbolic_threshold: None, planner: PlannerPolicy::Exact }
+    EngineConfig { spa_threshold, symbolic_threshold: None, planner: PlannerPolicy::Exact, mask: None }
 }
 
 fn dense_random(rng: &mut Pcg32, n: usize, density: f64) -> Csr {
@@ -103,7 +103,12 @@ fn planned_fills_reuse_the_accumulator_decision() {
     let mut rng = Pcg32::seeded(5);
     let a = dense_random(&mut rng, 80, 0.35);
     for thr in THRESHOLDS {
-        let cfg = EngineConfig { spa_threshold: thr, symbolic_threshold: None, planner: PlannerPolicy::Exact };
+        let cfg = EngineConfig {
+            spa_threshold: thr,
+            symbolic_threshold: None,
+            planner: PlannerPolicy::Exact,
+            mask: None,
+        };
         let p = PlannedProduct::plan_cfg(&a, &a, &cfg);
         assert_eq!(p.symbolic_plan().spa_threshold, thr, "plan must record its threshold");
         let cold = hash::multiply_cfg(&a, &a, &cfg);
@@ -170,9 +175,19 @@ fn empty_and_degenerate_rows_never_select_spa_wrongly() {
     let mut rng = Pcg32::seeded(13);
     let m = dense_random(&mut rng, 16, 0.3);
     for thr in [0.0, 0.25, 2.0] {
-        let cfg = EngineConfig { spa_threshold: thr, symbolic_threshold: None, planner: PlannerPolicy::Exact };
+        let cfg = EngineConfig {
+            spa_threshold: thr,
+            symbolic_threshold: None,
+            planner: PlannerPolicy::Exact,
+            mask: None,
+        };
         assert_eq!(hash::multiply_cfg(&z, &z, &cfg).nnz(), 0);
-        let half = EngineConfig { spa_threshold: 0.5, symbolic_threshold: None, planner: PlannerPolicy::Exact };
+        let half = EngineConfig {
+            spa_threshold: 0.5,
+            symbolic_threshold: None,
+            planner: PlannerPolicy::Exact,
+            mask: None,
+        };
         assert_eq!(hash::multiply_cfg(&i, &m, &cfg), hash::multiply_cfg(&i, &m, &half));
         let plan = hash::symbolic_cfg(&z, &z, &cfg);
         assert!(plan.bins.is_empty(), "zero output must produce no numeric bins");

@@ -139,7 +139,12 @@ fn plan_cache_tooling_tolerates_the_calibration_file() {
 fn outputs_are_bit_identical_under_any_threshold() {
     let ds = table2_by_name("p2p-Gnutella04").unwrap();
     let a = (ds.gen)(spgemm_aia::repro::SEED);
-    let cfg = |t: f64| EngineConfig { spa_threshold: t, symbolic_threshold: None, planner: PlannerPolicy::Exact };
+    let cfg = |t: f64| EngineConfig {
+        spa_threshold: t,
+        symbolic_threshold: None,
+        planner: PlannerPolicy::Exact,
+        mask: None,
+    };
     // 0.1 routes dense rows through SPA/bitmap, 8.0 disables both — the
     // threshold steers kernel choice only, never the result.
     let c_lo = multiply_cfg(&a, &a, &cfg(0.1));

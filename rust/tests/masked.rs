@@ -1,0 +1,210 @@
+//! Acceptance harness for masked SpGEMM (`C = M ⊙ (A·B)`, DESIGN.md
+//! §2i):
+//!
+//! - the masked engine must be **bit-identical** to the
+//!   multiply-then-filter oracle `M.filter(A·B)` across RMAT and
+//!   structured generators × {empty, full, band, block, A-as-mask,
+//!   random-rectangular} masks × planner policies;
+//! - the masked symbolic phase must never count a mask-rejected entry:
+//!   per-row masked counts ≤ unmasked counts, with strict shrinkage on
+//!   a sparse mask (the perf claim's structural precondition);
+//! - masked plans round-trip through the tiered store's disk tier
+//!   (SAPL v3) under their own fingerprint, invisible to unmasked
+//!   lookups, and delta-patch like any other plan — a mask change
+//!   rebuilds.
+
+use spgemm_aia::coordinator::batch::{BatchExecutor, PlanSource};
+use spgemm_aia::gen::{rmat, structured, RmatParams};
+use spgemm_aia::sparse::{Coo, Csr};
+use spgemm_aia::spgemm::hash::{
+    self, delta_patch, mutate_row_fraction, DeltaOutcome, EngineConfig, Mask, PlannedProduct,
+    PlannerPolicy, TieredStore,
+};
+use spgemm_aia::util::Pcg32;
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("spgemm-aia-masked-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn empty_mask(n_rows: usize, n_cols: usize) -> Csr {
+    Csr::new_unchecked(n_rows, n_cols, vec![0; n_rows + 1], Vec::new(), Vec::new())
+}
+
+fn random_mask(n_rows: usize, n_cols: usize, nnz: usize, seed: u64) -> Csr {
+    let mut rng = Pcg32::seeded(seed);
+    let mut coo = Coo::new(n_rows, n_cols);
+    for _ in 0..nnz {
+        coo.push(rng.below_usize(n_rows), rng.below_usize(n_cols), 1.0);
+    }
+    coo.to_csr()
+}
+
+fn generators() -> Vec<(&'static str, Csr)> {
+    let mut rng = Pcg32::seeded(77);
+    vec![
+        ("rmat-web", rmat(180, 1400, RmatParams::web(), &mut rng)),
+        ("rmat-uniform", rmat(160, 1100, RmatParams::uniform(), &mut rng)),
+        ("circuit", structured::circuit(220, &mut rng)),
+        ("economics", structured::economics(200, &mut rng)),
+        ("community", structured::community_powerlaw(150, 8, 6, &mut rng)),
+    ]
+}
+
+/// Every mask class the feature claims to support, for a square
+/// self-product of side `n`.
+fn mask_suite(a: &Csr) -> Vec<(&'static str, Mask)> {
+    let n = a.n_rows;
+    vec![
+        ("empty", Mask::from_structure(&empty_mask(n, n))),
+        ("full", Mask::from_structure(&structured::band_mask(n, n))),
+        ("band", Mask::from_structure(&structured::band_mask(n, n / 16 + 1))),
+        ("block", Mask::from_structure(&structured::block_mask(n, n / 8 + 1))),
+        ("a-as-mask", Mask::from_structure(a)),
+        ("random", Mask::from_structure(&random_mask(n, n, n * 4, 99))),
+    ]
+}
+
+#[test]
+fn masked_multiply_is_bit_identical_to_the_filter_oracle() {
+    for (gname, a) in generators() {
+        let full = hash::multiply(&a, &a);
+        for (mname, mask) in mask_suite(&a) {
+            let c = hash::multiply_masked(&a, &a, &mask);
+            let oracle = mask.filter(&full);
+            assert_eq!(c, oracle, "{gname} x {mname}: masked product != filtered oracle");
+        }
+    }
+}
+
+#[test]
+fn masked_rectangular_product_matches_the_oracle() {
+    let mut rng = Pcg32::seeded(31);
+    let a = rmat(128, 900, RmatParams::web(), &mut rng); // 128x128
+    let mut coo = Coo::new(128, 96);
+    for _ in 0..700 {
+        coo.push(rng.below_usize(128), rng.below_usize(96), rng.f64_range(-1.0, 1.0));
+    }
+    let b = coo.to_csr();
+    let mask = Mask::from_structure(&random_mask(128, 96, 640, 13));
+    let c = hash::multiply_masked(&a, &b, &mask);
+    assert_eq!(c, mask.filter(&hash::multiply(&a, &b)), "rectangular masked product diverged");
+}
+
+/// Acceptance criterion: the masked path never materializes (or even
+/// counts) a mask-rejected entry — per-row symbolic counts under a mask
+/// are bounded by the unmasked ones, and a sparse mask strictly shrinks
+/// the total on these workloads.
+#[test]
+fn masked_symbolic_counts_never_exceed_unmasked() {
+    for (gname, a) in generators() {
+        let plain = hash::symbolic(&a, &a);
+        for (mname, mask) in mask_suite(&a) {
+            let cfg = EngineConfig { mask: Some(mask.clone()), ..EngineConfig::default() };
+            let masked = hash::symbolic_cfg(&a, &a, &cfg);
+            for r in 0..a.n_rows {
+                let (m, p) = (masked.rpt[r + 1] - masked.rpt[r], plain.rpt[r + 1] - plain.rpt[r]);
+                assert!(m <= p, "{gname} x {mname} row {r}: masked count {m} > unmasked {p}");
+            }
+            if mname == "empty" {
+                assert_eq!(*masked.rpt.last().unwrap(), 0, "{gname}: empty mask must count 0");
+            }
+            if mname == "band" {
+                assert!(
+                    *masked.rpt.last().unwrap() < *plain.rpt.last().unwrap(),
+                    "{gname}: a narrow band mask must strictly shrink the symbolic total"
+                );
+            }
+        }
+    }
+}
+
+/// The oracle holds under every planner policy: masked products never
+/// speculate (`Estimated`/`Auto` degrade to exact planning), so the
+/// result stays bit-identical and the estimate counter stays at zero.
+#[test]
+fn masked_output_is_policy_invariant_and_never_speculates() {
+    let mut rng = Pcg32::seeded(41);
+    let a = rmat(170, 1200, RmatParams::web(), &mut rng);
+    let mask = Mask::from_structure(&structured::band_mask(170, 11));
+    let oracle = mask.filter(&hash::multiply(&a, &a));
+    for policy in [PlannerPolicy::Exact, PlannerPolicy::Estimated, PlannerPolicy::Auto] {
+        let mut ex = BatchExecutor::new(2);
+        let (c, _info) = ex.multiply_cached_masked_policy(&a, &a, &mask, policy);
+        assert_eq!(c, oracle, "{policy:?}: masked product diverged");
+        assert_eq!(ex.stats.estimated_plans, 0, "{policy:?}: masked products must not speculate");
+    }
+}
+
+/// Masked plans persist to disk (SAPL v3) under a mask-extended
+/// fingerprint: a fresh process reloads them, unmasked lookups of the
+/// same operands never see them, and the reloaded plan fills to the
+/// oracle.
+#[test]
+fn masked_plan_roundtrips_through_the_disk_tier() {
+    let dir = tmp_dir("roundtrip");
+    let mut rng = Pcg32::seeded(59);
+    let a = rmat(140, 1000, RmatParams::uniform(), &mut rng);
+    let mask = Mask::from_structure(&structured::block_mask(140, 20));
+    let oracle = mask.filter(&hash::multiply(&a, &a));
+
+    let mut writer = BatchExecutor::with_store(2, TieredStore::with_disk(&dir));
+    let (c, info) = writer.multiply_cached_masked_policy(&a, &a, &mask, PlannerPolicy::Exact);
+    assert_eq!(info.source, PlanSource::Fresh);
+    assert_eq!(c, oracle);
+
+    // Fresh process analogue: new executor, same disk tier.
+    let mut reader = BatchExecutor::with_store(2, TieredStore::with_disk(&dir));
+    let (c2, info2) = reader.multiply_cached_masked_policy(&a, &a, &mask, PlannerPolicy::Exact);
+    assert_eq!(info2.source, PlanSource::Disk, "masked plan must reload from disk");
+    assert_eq!(c2, oracle);
+
+    // The unmasked product of the same operands is a different plan:
+    // the masked file must be invisible to it.
+    let (full, info3) = reader.multiply_cached_policy(&a, &a, PlannerPolicy::Exact);
+    assert_eq!(info3.source, PlanSource::Fresh, "unmasked lookup must not see the masked plan");
+    assert_eq!(full, hash::multiply(&a, &a));
+    assert_eq!(reader.cached_plans(), 2, "masked and unmasked plans coexist in the store");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Delta patching under a mask: a small structural mutation patches the
+/// masked plan to exactly the cold masked plan, and any mask change —
+/// adding, dropping, or swapping — is a rebuild.
+#[test]
+fn masked_delta_patch_matches_cold_and_mask_changes_rebuild() {
+    let mut rng = Pcg32::seeded(67);
+    let a = rmat(210, 1600, RmatParams::web(), &mut rng);
+    let mask = Mask::from_structure(&structured::band_mask(210, 13));
+    let cfg = EngineConfig { mask: Some(mask.clone()), ..EngineConfig::default() };
+    let base = PlannedProduct::plan_cfg(&a, &a, &cfg);
+
+    let a2 = mutate_row_fraction(&a, 0.02, 23);
+    match delta_patch(&base, &a2, &a, &cfg) {
+        DeltaOutcome::Patched(p) => {
+            let cold = PlannedProduct::plan_cfg(&a2, &a, &cfg);
+            assert_eq!(p.plan.symbolic_plan().rpt, cold.symbolic_plan().rpt, "patched row sizes");
+            assert_eq!(p.plan.mask_hash(), cold.mask_hash(), "patched mask lineage");
+            assert_eq!(
+                p.plan.fill(&a2, &a),
+                mask.filter(&hash::multiply(&a2, &a)),
+                "patched masked fill"
+            );
+        }
+        DeltaOutcome::Rebuild(why) => panic!("2%-dirty masked patch refused: {why}"),
+    }
+
+    // Mask changes always rebuild: dropped, added, or swapped.
+    let unmasked = EngineConfig::default();
+    assert!(matches!(delta_patch(&base, &a2, &a, &unmasked), DeltaOutcome::Rebuild("mask changed")));
+    let plain_base = PlannedProduct::plan(&a, &a);
+    assert!(matches!(delta_patch(&plain_base, &a2, &a, &cfg), DeltaOutcome::Rebuild("mask changed")));
+    let other = EngineConfig {
+        mask: Some(Mask::from_structure(&structured::band_mask(210, 5))),
+        ..EngineConfig::default()
+    };
+    assert!(matches!(delta_patch(&base, &a2, &a, &other), DeltaOutcome::Rebuild("mask changed")));
+}

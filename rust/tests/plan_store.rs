@@ -222,6 +222,7 @@ fn foreign_threshold_plan_degrades_to_clean_replan() {
         spa_threshold: foreign,
         symbolic_threshold: None,
         planner: spgemm_aia::spgemm::hash::PlannerPolicy::Exact,
+        mask: None,
     };
     let mut seed_store = DiskStore::new(&dir);
     seed_store.put(Arc::new(PlannedProduct::plan_cfg(&a, &a, &cfg)));

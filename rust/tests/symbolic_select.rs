@@ -22,12 +22,12 @@ fn forced(spa_threshold: f64, kernel: SymbolicKind) -> EngineConfig {
         SymbolicKind::Bitmap => 0.0, // every non-trivial row counts via bitmap
         _ => 8.0,                    // bitmap disabled: every non-trivial row hashes
     };
-    EngineConfig { spa_threshold, symbolic_threshold: Some(t), planner: PlannerPolicy::Exact }
+    EngineConfig { spa_threshold, symbolic_threshold: Some(t), planner: PlannerPolicy::Exact, mask: None }
 }
 
 /// Plan-guided (no forced kernel) config at `spa_threshold`.
 fn guided(spa_threshold: f64) -> EngineConfig {
-    EngineConfig { spa_threshold, symbolic_threshold: None, planner: PlannerPolicy::Exact }
+    EngineConfig { spa_threshold, symbolic_threshold: None, planner: PlannerPolicy::Exact, mask: None }
 }
 
 /// Flatten a plan's bins to a `(group, numeric kind) -> (rows, weight)`

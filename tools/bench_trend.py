@@ -8,17 +8,31 @@ median regressions/improvements beyond the threshold. Std-lib only (the
 repo's offline policy), schema `spgemm-aia-bench-v1` (see
 rust/src/util/bench.rs).
 
-Exit code is always 0 unless --strict is passed (then regressions fail
-the job). `--self-test` runs the comparison logic against synthetic
-BENCH JSON instead of real directories (the python-tests CI job runs
-it) and exits non-zero on any assertion failure.
+Exit code is always 0 unless strict mode is on — via the --strict flag
+or the BENCH_TREND_STRICT=1 environment variable (any other value of
+the variable is ignored, so CI can carry the knob without flipping it)
+— in which case regressions fail the job. `--self-test` runs the
+comparison logic against synthetic BENCH JSON instead of real
+directories (the python-tests CI job runs it) and exits non-zero on
+any assertion failure.
 """
 
 import argparse
 import json
+import os
 import sys
 import tempfile
 from pathlib import Path
+
+
+def strict_mode(args) -> bool:
+    """Strict when --strict is passed or BENCH_TREND_STRICT=1 is set.
+
+    The env var lets CI flip the advisory bench-trend job to gating
+    without editing the workflow's command line (e.g. on a dedicated
+    runner with stable numbers). Only the exact value "1" activates it.
+    """
+    return args.strict or os.environ.get("BENCH_TREND_STRICT") == "1"
 
 
 def load_results(directory: Path):
@@ -139,6 +153,30 @@ def self_test() -> int:
         assert waste_meta["used_bytes"] <= waste_meta["fetched_bytes"], waste_meta
 
     assert fmt(2.5) == "2.500 s" and fmt(0.0025) == "2.500 ms" and fmt(2.5e-6) == "2.5 us"
+
+    # Strict-mode activation ladder: the flag, the env var (exact value
+    # "1" only), either alone, or neither.
+    class Args:
+        def __init__(self, strict):
+            self.strict = strict
+
+    saved = os.environ.pop("BENCH_TREND_STRICT", None)
+    try:
+        assert not strict_mode(Args(strict=False))
+        assert strict_mode(Args(strict=True))
+        os.environ["BENCH_TREND_STRICT"] = "1"
+        assert strict_mode(Args(strict=False))
+        os.environ["BENCH_TREND_STRICT"] = "0"
+        assert not strict_mode(Args(strict=False)), "only the exact value '1' activates strict"
+        os.environ["BENCH_TREND_STRICT"] = "true"
+        assert not strict_mode(Args(strict=False)), "only the exact value '1' activates strict"
+        assert strict_mode(Args(strict=True)), "the flag wins regardless of the env var"
+    finally:
+        if saved is None:
+            os.environ.pop("BENCH_TREND_STRICT", None)
+        else:
+            os.environ["BENCH_TREND_STRICT"] = saved
+
     print("bench-trend: self-test ok")
     return 0
 
@@ -190,7 +228,7 @@ def main() -> int:
     for name in gone:
         print(f"::notice::bench-trend: benchmark {name} disappeared from this run")
 
-    if regressions and args.strict:
+    if regressions and strict_mode(args):
         print(f"bench-trend: {len(regressions)} regression(s) beyond "
               f"{args.threshold_pct:.0f}% (strict mode)", file=sys.stderr)
         return 1

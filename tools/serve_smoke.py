@@ -7,9 +7,13 @@ offline policy). Two phases against one plan-cache directory:
 Phase 1 — boot a daemon on a temp socket, run a scripted session:
 register two inline CSR operands, multiply twice (first response must
 be a `fresh` plan, the second a `mem` hit with zero symbolic seconds
-and bit-identical nnz/checksum), reconcile the stats counters, check
-released handles error, then SIGTERM and require a clean exit within
-the deadline with the socket file removed.
+and bit-identical nnz/checksum), run a masked multiply leg (a full
+mask's checksum must equal the unmasked product's — the filtered
+oracle bit-identity over the wire — a sparse mask must shrink nnz and
+ride its own cached plan, and a wrong-shape mask must answer
+bad_request), reconcile the stats counters, check released handles
+error, then SIGTERM and require a clean exit within the deadline with
+the socket file removed.
 
 Phase 2 — boot a *second* daemon on the same cache directory,
 re-register the same operands, and require the first multiply to be
@@ -57,6 +61,17 @@ def make_csr(seed: int, n: int, per_row: int) -> dict:
             val.append(round(rng.uniform(-4.0, 4.0), 6))
         rpt.append(len(col))
     return {"rows": n, "cols": n, "rpt": rpt, "col": col, "val": val}
+
+
+def make_full_ones(n: int) -> dict:
+    """Dense all-ones CSR: as a mask it admits everything."""
+    return {
+        "rows": n,
+        "cols": n,
+        "rpt": [i * n for i in range(n + 1)],
+        "col": list(range(n)) * n,
+        "val": [1.0] * (n * n),
+    }
 
 
 class Client:
@@ -173,6 +188,36 @@ def phase1(binary: Path, sock: Path, cache: Path) -> str:
     expect(stats["store"]["stores"] == 1, f"speculative plans must never be persisted: {stats}")
     c.err({"op": "multiply", "a": hc, "b": hc, "planner": "frobnicate"}, "bad_request")
     log("estimated one-shot speculated; store untouched by the speculative plan")
+
+    # Masked multiply leg (C = M . (A*B), the "mask" wire field): a full
+    # mask admits every entry, so its checksum must be bit-identical to
+    # the unmasked product — the multiply-then-filter oracle asserted
+    # over the wire. A sparse mask (the operand's own structure, the
+    # triangle-counting idiom) must shrink nnz, plan under its own
+    # fingerprint, and hit the memory tier on repeat. A mask of the
+    # wrong shape is a bad_request before any work is queued.
+    hm = c.ok({"op": "register", "matrix": make_csr(46, 64, 5)})["handle"]
+    hfull = c.ok({"op": "register", "matrix": make_full_ones(64)})["handle"]
+    plain = c.ok({"op": "multiply", "a": hm, "b": hm})
+    full_masked = c.ok({"op": "multiply", "a": hm, "b": hm, "mask": hfull})
+    expect(
+        (full_masked["nnz"], full_masked["checksum"]) == (plain["nnz"], plain["checksum"]),
+        f"full mask must be bit-identical to the filtered oracle: {plain} vs {full_masked}",
+    )
+    sparse_masked = c.ok({"op": "multiply", "a": hm, "b": hm, "mask": hm})
+    expect(sparse_masked["plan"] == "fresh", f"masked plan is its own fingerprint: {sparse_masked}")
+    expect(sparse_masked["nnz"] <= plain["nnz"], f"mask must never add entries: {sparse_masked}")
+    again = c.ok({"op": "multiply", "a": hm, "b": hm, "mask": hm})
+    expect(again["plan"] == "mem", f"repeated masked product must hit memory: {again}")
+    expect(again["symbolic_s"] == 0.0, f"masked plan hits pay no symbolic seconds: {again}")
+    expect(again["checksum"] == sparse_masked["checksum"], f"masked hit must be bit-identical: {again}")
+    tiny = c.ok({"op": "register", "matrix": {
+        "rows": 8, "cols": 8, "rpt": list(range(9)), "col": list(range(8)), "val": [1.0] * 8,
+    }})["handle"]
+    c.err({"op": "multiply", "a": hm, "b": hm, "mask": tiny}, "bad_request")
+    c.err({"op": "multiply", "a": hm, "b": hm, "mask": "x"}, "bad_request")
+    log(f"masked leg: full-mask checksum matches oracle; sparse mask nnz {sparse_masked['nnz']}"
+        f" <= {plain['nnz']}, fresh -> mem")
 
     c.ok({"op": "release", "handle": ha})
     c.err({"op": "release", "handle": ha}, "unknown_handle")
